@@ -1,0 +1,8 @@
+"""Root conftest: make `pytest python/tests/` work from the repo root by
+putting the `python/` package directory on sys.path (the tests import the
+`compile` package relative to that directory)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,129 @@
+//! End-to-end system validation: all three layers composing on a real
+//! (synthetic-data) workload.  `cargo run --release --example end_to_end`
+//!
+//! 1. **Train** the serving CNN in the rust simulator (loss curve logged).
+//! 2. **Fold + encode** its weights into PSB planes (bijective, no
+//!    retraining) — the exact input signature of the AOT artifacts.
+//! 3. **Cross-check L3 vs L2/L1**: run the same images through (a) the
+//!    pure-rust simulator and (b) the JAX/Pallas-lowered PJRT artifacts;
+//!    float paths must agree to Q16 tolerance, PSB paths statistically.
+//! 4. **Reproduce the headline**: accuracy vs sample size + the two-stage
+//!    attention saving, printed as Table-1-style rows.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use psb::attention::adaptive_forward;
+use psb::data::{Dataset, SynthConfig};
+use psb::rng::Xorshift128Plus;
+use psb::runtime::{FloatBundle, PsbBundle, Runtime};
+use psb::sim::layers::argmax_rows;
+use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::sim::train::{evaluate_psb, train, TrainConfig};
+
+const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+
+fn main() -> anyhow::Result<()> {
+    // ---------- 1. train ------------------------------------------------------
+    let data = Dataset::synth(&SynthConfig {
+        train: 2048,
+        test: 512,
+        size: 32,
+        seed: 42,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(42);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    println!("=== 1. training serving CNN ({} params) ===", net.num_params());
+    let stats = train(&mut net, &data, &TrainConfig { epochs: 6, verbose: true, ..Default::default() });
+    let float_acc = stats.last().unwrap().test_acc;
+    println!("loss curve: {:?}", stats.iter().map(|s| (s.epoch, s.loss)).collect::<Vec<_>>());
+    println!("float32 test accuracy: {float_acc:.3}");
+
+    // ---------- 2. fold + encode ----------------------------------------------
+    println!("\n=== 2. BN folding + bijective PSB encoding ===");
+    let float_bundle = FloatBundle::from_network(&net, &SERVING_SHAPES)?;
+    let psb_bundle = PsbBundle::from_float(&float_bundle, None);
+    for (i, l) in psb_bundle.layers.iter().enumerate() {
+        let dec = psb_bundle.decode_layer(i);
+        let max_err = dec
+            .iter()
+            .zip(&float_bundle.layers[i].w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("  layer {i} {:?}: round-trip max err {max_err:.2e}", l.shape);
+    }
+
+    // ---------- 3. cross-check sim vs PJRT artifacts ---------------------------
+    println!("\n=== 3. L3 sim vs L2/L1 artifacts (PJRT) ===");
+    let artifact_dir = std::path::Path::new("artifacts");
+    if artifact_dir.join("meta.txt").exists() {
+        let mut rt = Runtime::new(artifact_dir)?;
+        let (x, labels) = data.gather_test(&(0..8).collect::<Vec<_>>());
+        // float path: must agree to numerical tolerance
+        let exec = rt.run_float(8, &x.data, &float_bundle)?;
+        let sim = net.forward::<Xorshift128Plus>(&x, false, None);
+        let sim_logits = &sim.logits().data;
+        let max_err = exec
+            .logits
+            .iter()
+            .zip(sim_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("  float32: max |PJRT − sim| over logits = {max_err:.2e}");
+        anyhow::ensure!(max_err < 1e-2, "float paths disagree");
+        // psb path: same argmax on most rows at n=64
+        let psb_exec = rt.run_psb(64, 8, &x.data, 7, &psb_bundle)?;
+        let a1 = argmax_rows(&psb_exec.logits, 10);
+        let a2 = argmax_rows(sim_logits, 10);
+        let agree = a1.iter().zip(&a2).filter(|(p, q)| p == q).count();
+        println!("  psb64 (PJRT) vs float (sim): argmax agreement {agree}/8 (labels {labels:?})");
+        println!("  compiled modules: {:?}", rt.loaded_modules());
+    } else {
+        println!("  [skipped: run `make artifacts` first]");
+    }
+
+    // ---------- 4. headline table ----------------------------------------------
+    println!("\n=== 4. accuracy vs sample size + attention (paper headline) ===");
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    println!("{:>14} {:>10} {:>10} {:>16}", "system", "top-1", "rel.", "gated adds");
+    println!("{:>14} {:>10.3} {:>9.1}% {:>16}", "float32", float_acc, 100.0, "-");
+    let mut psb16_adds = 0u64;
+    for n in [4u32, 8, 16, 32, 64] {
+        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), 11);
+        if n == 16 {
+            psb16_adds = costs.gated_adds;
+        }
+        println!(
+            "{:>14} {acc:>10.3} {:>9.1}% {:>16}",
+            format!("psb{n}"),
+            100.0 * acc / float_acc,
+            costs.gated_adds
+        );
+    }
+    // attention psb8/16 over the test set
+    let n_imgs = data.test_images.shape[0];
+    let mut correct = 0usize;
+    let mut adds = 0u64;
+    let mut frac = 0.0f64;
+    let mut batches = 0;
+    for start in (0..n_imgs).step_by(64) {
+        let idx: Vec<usize> = (start..(start + 64).min(n_imgs)).collect();
+        let (x, labels) = data.gather_test(&idx);
+        let out = adaptive_forward(&psb, &x, 8, 16, 13 + start as u64);
+        let preds = argmax_rows(&out.logits.data, 10);
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        adds += out.costs.gated_adds;
+        frac += out.interesting_fraction as f64;
+        batches += 1;
+    }
+    let acc = correct as f32 / n_imgs as f32;
+    let saving = 100.0 * (1.0 - adds as f64 / psb16_adds as f64);
+    println!(
+        "{:>14} {acc:>10.3} {:>9.1}% {adds:>16}   <- {saving:.0}% below flat psb16 (interesting {:.0}%)",
+        "psb8/16 attn",
+        100.0 * acc / float_acc,
+        100.0 * frac / batches as f64
+    );
+    println!("\nend_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Hardware cost explorer: the supplementary Table-2 model applied to a
+//! single capacitor unit and to full networks, plus the break-even
+//! analysis that motivates PSB's "progressive" knob.
+//!
+//! `cargo run --release --example hardware_costs`
+
+use psb::costs::{break_even_n, table2, CostCounter};
+
+fn main() {
+    println!("45nm unit costs (paper supplementary Table 2):");
+    println!("{:>10} {:>12} {:>10}", "op", "area[um2]", "energy[pJ]");
+    for (name, c) in table2::ROWS {
+        println!("{name:>10} {:>12.0} {:>10.2}", c.area_um2, c.energy_pj);
+    }
+
+    let fp32_mac = table2::FP32_MUL.energy_pj + table2::FP32_ADD.energy_pj;
+    let int8_mac = table2::INT8_MUL.energy_pj + table2::INT32_ADD.energy_pj;
+    let psb_sample = table2::INT16_ADD.energy_pj + table2::INT8_ADD.energy_pj;
+    println!("\nper-MAC energy:");
+    println!("  fp32 MAC             : {fp32_mac:.2} pJ");
+    println!("  int8 MAC (JACOB [31]): {int8_mac:.2} pJ");
+    println!("  PSB sample (int16 add + comparator bit): {psb_sample:.2} pJ");
+    println!("\nbreak-even sample sizes (PSB cheaper below):");
+    println!("  vs fp32 MAC: n <= {}", break_even_n(fp32_mac));
+    println!("  vs int8 MAC: n <= {}", break_even_n(int8_mac));
+
+    println!("\nenergy for one 2.2M-MAC serving-CNN inference by sample size:");
+    println!("{:>8} {:>14} {:>12}", "n", "energy [uJ]", "vs fp32");
+    let macs = 2_211_160u64;
+    let mut base = CostCounter::default();
+    base.charge_capacitor(macs, 1);
+    let fp32 = base.fp32_energy_pj();
+    for n in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+        let mut c = CostCounter::default();
+        c.charge_capacitor(macs, n);
+        println!(
+            "{n:>8} {:>14.2} {:>11.2}x",
+            c.psb_energy_pj() / 1e6,
+            fp32 / c.psb_energy_pj()
+        );
+    }
+    println!(
+        "\nthe progressive knob: the same weights serve any row of this table at\nrun time — the paper's attention mechanism picks the row per region."
+    );
+}

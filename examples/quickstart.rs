@@ -1,0 +1,51 @@
+//! Quickstart: the PSB number system and in-place binarization in ~60
+//! lines.  Run with `cargo run --release --example quickstart`.
+//!
+//! 1. encode a weight into (sign, exponent, probability);
+//! 2. train a tiny CNN on the synthetic dataset (float32);
+//! 3. binarize it *in place* (no retraining) and watch accuracy converge
+//!    to the float baseline as the sample size n grows — the paper's
+//!    core claim.
+
+use psb::data::{Dataset, SynthConfig};
+use psb::num::PsbWeight;
+use psb::rng::Xorshift128Plus;
+use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::sim::train::{evaluate, evaluate_psb, train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the number system -------------------------------------------------
+    let w = 0.37f32;
+    let enc = PsbWeight::encode(w);
+    println!("PSB encoding of w = {w}:");
+    println!("  sign = {}, e = {} (2^e = {}), p = {:.4}", enc.sign, enc.exp, (enc.exp as f32).exp2(), enc.prob);
+    println!("  E[wbar] = {} (bijective: decodes back exactly)", enc.decode());
+    let mut rng = Xorshift128Plus::seed_from(1);
+    let draws: Vec<f32> = (0..8).map(|_| enc.sample_single(&mut rng)).collect();
+    println!("  single-sample draws (one random bit -> one of two shifts): {draws:?}");
+
+    // --- 2. train a small float model -----------------------------------------
+    let data = Dataset::synth(&SynthConfig { train: 1024, test: 512, size: 32, seed: 7, ..Default::default() });
+    let mut rng = Xorshift128Plus::seed_from(2);
+    let mut net = psb::models::cnn8(32, &mut rng);
+    println!("\ntraining cnn8 ({} params) on SynthImages...", net.num_params());
+    let cfg = TrainConfig { epochs: 3, verbose: true, ..Default::default() };
+    train(&mut net, &data, &cfg);
+    let float_acc = evaluate(&mut net, &data);
+    println!("float32 test accuracy: {float_acc:.3}");
+
+    // --- 3. in-place binarization: accuracy vs sample size --------------------
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    println!("\nPSB inference (no retraining — weights re-encoded bijectively):");
+    println!("{:>6} {:>10} {:>12} {:>14}", "n", "accuracy", "rel. acc", "gated adds");
+    for n in [1u32, 2, 4, 8, 16, 32, 64] {
+        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), 3);
+        println!(
+            "{n:>6} {acc:>10.3} {:>11.1}% {:>14}",
+            100.0 * acc / float_acc,
+            costs.gated_adds
+        );
+    }
+    println!("\naccuracy converges to the float line as n grows — paper Fig. 3.");
+    Ok(())
+}

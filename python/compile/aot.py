@@ -1,0 +1,165 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Emits, under artifacts/:
+
+    psb_n{N}_b{B}.hlo.txt    PSB forward at sample size N, batch B
+    float_b{B}.hlo.txt       float32 baseline, batch B
+    meta.json                input/output signature for the rust loader
+    .stamp                   make freshness marker
+
+Input order of every PSB module (all float32 unless noted):
+
+    x[B,32,32,3], seed uint32[1],
+    then per layer (conv1, conv2, conv3, dense):
+        sign[K,N], exp[K,N], prob[K,N], bias[N]
+
+The float module takes x then per layer (w[K,N], bias[N]).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+SAMPLE_SIZES = [1, 2, 4, 8, 16, 32, 64]
+BATCHES = [1, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def psb_input_specs(batch: int):
+    specs = [
+        jax.ShapeDtypeStruct((batch, M.IMG, M.IMG, 3), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.uint32),
+    ]
+    for (kn, bias_n) in M.layer_shapes():
+        specs += [
+            jax.ShapeDtypeStruct(kn, jnp.float32),  # sign
+            jax.ShapeDtypeStruct(kn, jnp.float32),  # exp
+            jax.ShapeDtypeStruct(kn, jnp.float32),  # prob
+            jax.ShapeDtypeStruct((bias_n,), jnp.float32),
+        ]
+    return specs
+
+
+def float_input_specs(batch: int):
+    specs = [jax.ShapeDtypeStruct((batch, M.IMG, M.IMG, 3), jnp.float32)]
+    for (kn, bias_n) in M.layer_shapes():
+        specs += [
+            jax.ShapeDtypeStruct(kn, jnp.float32),
+            jax.ShapeDtypeStruct((bias_n,), jnp.float32),
+        ]
+    return specs
+
+
+def make_psb_fn(n: int):
+    nlayers = len(M.layer_shapes())
+
+    def fn(x, seed, *flat):
+        layers = [
+            M.LayerPsb(*flat[4 * i : 4 * i + 4]) for i in range(nlayers)
+        ]
+        key = jax.random.PRNGKey(seed[0])
+        logits, feat = M.forward_psb(layers, x, key, n)
+        return (logits, feat)
+
+    return fn
+
+
+def float_fn(x, *flat):
+    nlayers = len(M.layer_shapes())
+    params = [M.LayerParams(*flat[2 * i : 2 * i + 2]) for i in range(nlayers)]
+    logits, feat = M.forward_float(params, x)
+    return (logits, feat)
+
+
+def emit(out_dir: str, sample_sizes=None, batches=None, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    sample_sizes = sample_sizes or SAMPLE_SIZES
+    batches = batches or BATCHES
+    meta = {
+        "image": M.IMG,
+        "num_classes": M.NUM_CLASSES,
+        "conv_layers": M.CONV_LAYERS,
+        "dense": M.DENSE,
+        "layer_shapes": [
+            {"weight": list(kn), "bias": bias_n} for kn, bias_n in M.layer_shapes()
+        ],
+        "q16_scale": 1024,
+        "sample_sizes": sample_sizes,
+        "batches": batches,
+        "psb_inputs": "x, seed(u32[1]), then per layer: sign, exp, prob, bias",
+        "float_inputs": "x, then per layer: w, bias",
+        "outputs": "(logits[B,10], feat[B,8,8,32])",
+        "modules": {},
+    }
+    for b in batches:
+        name = f"float_b{b}"
+        lowered = jax.jit(float_fn).lower(*float_input_specs(b))
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, name + ".hlo.txt"), "w") as f:
+            f.write(text)
+        meta["modules"][name] = {"batch": b, "kind": "float"}
+        if verbose:
+            print(f"  wrote {name}.hlo.txt ({len(text)} chars)")
+        for n in sample_sizes:
+            name = f"psb_n{n}_b{b}"
+            lowered = jax.jit(make_psb_fn(n)).lower(*psb_input_specs(b))
+            text = to_hlo_text(lowered)
+            with open(os.path.join(out_dir, name + ".hlo.txt"), "w") as f:
+                f.write(text)
+            meta["modules"][name] = {"batch": b, "kind": "psb", "n": n}
+            if verbose:
+                print(f"  wrote {name}.hlo.txt ({len(text)} chars)")
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    # meta.txt: flat whitespace format for the rust loader (the offline
+    # rust build has no JSON dependency available).
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write(f"image {M.IMG}\n")
+        f.write(f"num_classes {M.NUM_CLASSES}\n")
+        f.write("q16_scale 1024\n")
+        f.write(f"layers {len(M.layer_shapes())}\n")
+        for i, (kn, bias_n) in enumerate(M.layer_shapes()):
+            f.write(f"layer {i} {kn[0]} {kn[1]} {bias_n}\n")
+        f.write("sample_sizes " + " ".join(str(n) for n in sample_sizes) + "\n")
+        f.write("batches " + " ".join(str(b) for b in batches) + "\n")
+        for name, info in meta["modules"].items():
+            n = info.get("n", "-")
+            f.write(f"module {name} {info['kind']} {info['batch']} {n}\n")
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sample-sizes", type=int, nargs="*", default=SAMPLE_SIZES)
+    ap.add_argument("--batches", type=int, nargs="*", default=BATCHES)
+    args = ap.parse_args()
+    emit(args.out_dir, args.sample_sizes, args.batches)
+    print(f"artifacts written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: tiled capacitor-unit matmul with in-tile PSB dequant.
+
+The paper's hot spot is the capacitor unit (Sec. 3.1): every weight is a
+stochastic choice between two shifts, accumulated n times and averaged
+before the non-linearity.  After folding the n Bernoulli draws into a
+Binomial count k (Eq. 8 == rolled-out Eq. 9 after the final ``>> log2 n``),
+one inference matmul is
+
+    y[M,N] = quantize_q16( x[M,K] @ (s * 2^e * (1 + k/n))[K,N] )
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (s, e, k) triple lives in
+VMEM at 2 bytes/weight and is dequantized *inside the tile* right before
+the MXU contraction — the HBM->VMEM schedule the paper's ASIC expressed as
+its accumulation loop is expressed here with BlockSpec over a (M/bm, N/bn,
+K/bk) grid, K innermost, accumulating into the output tile.
+
+Runs under interpret=True on CPU (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..psb import Q16_MAX, Q16_MIN, Q16_SCALE
+
+# TPU deployment tile shapes: MXU-shaped (128 lanes), VMEM-bounded (see
+# ``vmem_bytes``).  These are what a real-TPU lowering would use.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+# CPU-interpret simulation tiles: interpret mode pays a large per-grid-step
+# overhead (~0.35 ms/step measured — EXPERIMENTS.md §Perf L1), so the
+# simulation default covers each layer in as few tiles as possible.  This
+# changes nothing semantically (block-shape invariance is property-tested);
+# on TPU the 128³ spec above applies and its VMEM footprint is reported by
+# ``vmem_bytes``.
+SIM_BLOCK_M = 4096
+SIM_BLOCK_N = 256
+SIM_BLOCK_K = 512
+
+
+def _capacitor_kernel(x_ref, s_ref, e_ref, k_ref, o_ref, *, inv_n, nsteps, quantize):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks (innermost)."""
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # In-tile dequantization: wbar = s * 2^e * (1 + k/n). exp2 of the small
+    # integer exponent is exact in f32; on TPU this is the VPU prologue that
+    # feeds dense bf16 tiles to the MXU.
+    wbar = s_ref[...] * jnp.exp2(e_ref[...]) * (1.0 + k_ref[...] * inv_n)
+    o_ref[...] += jnp.dot(x_ref[...], wbar, preferred_element_type=jnp.float32)
+
+    if quantize:
+
+        @pl.when(kstep == nsteps - 1)
+        def _finalize():
+            # Q16 saturation: the capacitor's 16-bit accumulator semantics.
+            # Ties round away from zero, bit-compatible with rust f32::round
+            # and psb.quantize_q16.
+            scaled = o_ref[...] * Q16_SCALE
+            q = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+            o_ref[...] = jnp.clip(q, Q16_MIN, Q16_MAX) / Q16_SCALE
+
+
+def _pad2(a: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    return jnp.pad(a, ((0, m - a.shape[0]), (0, n - a.shape[1])))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "quantize", "block_m", "block_n", "block_k")
+)
+def capacitor_matmul(
+    x: jnp.ndarray,
+    sign: jnp.ndarray,
+    exp: jnp.ndarray,
+    counts: jnp.ndarray,
+    n: int,
+    quantize: bool = True,
+    block_m: int = SIM_BLOCK_M,
+    block_n: int = SIM_BLOCK_N,
+    block_k: int = SIM_BLOCK_K,
+) -> jnp.ndarray:
+    """Capacitor matmul y = q16(x @ wbar) via the tiled Pallas kernel.
+
+    x: [M, K] float32 (Q16-valued activations)
+    sign/exp/counts: [K, N] float32 PSB weight planes (k ~ Binomial(n, p))
+    n: static sample count (the progressive-precision knob)
+    """
+    m, k = x.shape
+    k2, nn = sign.shape
+    assert k == k2, f"contraction mismatch {x.shape} vs {sign.shape}"
+    assert exp.shape == (k2, nn) and counts.shape == (k2, nn)
+
+    bm, bn, bk = (min(block_m, m), min(block_n, nn), min(block_k, k))
+    mp, np_, kp = (-m % bm + m, -nn % bn + nn, -k % bk + k)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    sp = _pad2(sign.astype(jnp.float32), kp, np_)
+    ep = _pad2(exp.astype(jnp.float32), kp, np_)
+    cp = _pad2(counts.astype(jnp.float32), kp, np_)
+
+    nsteps = kp // bk
+    grid = (mp // bm, np_ // bn, nsteps)
+    out = pl.pallas_call(
+        functools.partial(
+            _capacitor_kernel, inv_n=1.0 / float(n), nsteps=nsteps, quantize=quantize
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, sp, ep, cp)
+    return out[:m, :nn]
+
+
+def vmem_bytes(block_m: int = BLOCK_M, block_n: int = BLOCK_N, block_k: int = BLOCK_K) -> int:
+    """Estimated VMEM footprint of one tile residency (f32 carrier).
+
+    x tile + 3 weight planes + output accumulator. Used by the DESIGN.md
+    §Perf roofline estimate (real TPU would hold (e,p) as int8 pairs —
+    report both in experiments::table2).
+    """
+    return 4 * (block_m * block_k + 3 * block_k * block_n + block_m * block_n)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the capacitor-unit matmul (L1 correctness reference).
+
+The capacitor unit (paper Sec. 3.1, Eq. 8/9) multiplies a Q16 fixed-point
+activation matrix by stochastically binarized weights and averages the
+samples *before* the following non-linearity:
+
+    y = quantize_q16( x @ (s * 2^e * (1 + k/n)) )
+
+with k ~ Binomial(n, p) drawn once per weight.  The Pallas kernel in
+``capacitor.py`` must match this reference on the float32 carrier
+(same dequantization, same rounding, same saturation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..psb import quantize_q16
+
+
+def capacitor_matmul_ref(
+    x: jnp.ndarray,
+    sign: jnp.ndarray,
+    exp: jnp.ndarray,
+    counts: jnp.ndarray,
+    n: int,
+    quantize: bool = True,
+) -> jnp.ndarray:
+    """Reference capacitor matmul: x[M,K] @ wbar[K,N] with Q16 output.
+
+    ``counts`` are Binomial(n, p) draws, one per weight (Eq. 8); the
+    dequantized stochastic weight is wbar = s * 2^e * (1 + k/n).
+    """
+    wbar = sign * jnp.exp2(exp) * (1.0 + counts / float(n))
+    y = x.astype(jnp.float32) @ wbar.astype(jnp.float32)
+    return quantize_q16(y) if quantize else y
+
+
+def capacitor_matmul_mean_ref(
+    x: jnp.ndarray,
+    sign: jnp.ndarray,
+    exp: jnp.ndarray,
+    prob: jnp.ndarray,
+    quantize: bool = True,
+) -> jnp.ndarray:
+    """Expectation oracle: uses E[wbar] = s*2^e*(1+p) = w (unbiasedness)."""
+    w = sign * jnp.exp2(exp) * (1.0 + prob)
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return quantize_q16(y) if quantize else y

@@ -1,0 +1,163 @@
+"""L2: the serving CNN, written in JAX, calling the L1 capacitor kernel.
+
+This is the compute graph the rust coordinator executes at request time.
+It is deliberately the same *shape family* as the rust `models::` zoo
+(conv -> relu stacks with Q16 intermediates) so that artifact outputs can
+be cross-checked against the pure-rust simulator.
+
+Architecture (SAME padding, NHWC):
+
+    q16(x[B,32,32,3])
+    conv 3x3 s1  3->16  + bias + relu   (im2col K=27)
+    conv 3x3 s2 16->32  + bias + relu   (K=144)
+    conv 3x3 s2 32->32  + bias + relu   (K=288)  -> feat [B,8,8,32]
+    global mean pool -> dense 32->10 -> logits
+
+Every matmul goes through ``kernels.capacitor.capacitor_matmul`` with the
+per-layer PSB planes (sign, exp, prob); Binomial counts are drawn once per
+forward with the Gumbel-max sampler (supplementary Eq. 13-15) and shared
+across the batch — exactly the paper's "sample the filter directly" setup
+(Sec. 4.1).  Weights arrive already BN-folded (folding happens on the rust
+side / in `psb`-encoded planes), so the graph itself is BN-free.
+
+Outputs: (logits[B,10], feat[B,8,8,32]).  The feature map feeds the
+coordinator's entropy-based precision escalation (paper Sec. 4.5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.capacitor import capacitor_matmul
+from .kernels.ref import capacitor_matmul_ref
+from .psb import encode, quantize_q16, sample_binomial_bitsum, sample_binomial_gumbel
+
+# (ksize, stride, cin, cout) per conv layer, then the dense layer.
+CONV_LAYERS = [(3, 1, 3, 16), (3, 2, 16, 32), (3, 2, 32, 32)]
+DENSE = (32, 10)
+IMG = 32
+NUM_CLASSES = 10
+
+
+class LayerParams(NamedTuple):
+    w: jnp.ndarray  # [K, N] im2col weight matrix (conv) or [in, out] (dense)
+    b: jnp.ndarray  # [N]
+
+
+class LayerPsb(NamedTuple):
+    sign: jnp.ndarray
+    exp: jnp.ndarray
+    prob: jnp.ndarray
+    b: jnp.ndarray
+
+
+def layer_shapes() -> list[tuple[tuple[int, int], int]]:
+    """[(weight [K,N] shape, bias N)] for the 3 convs + dense, in order."""
+    shapes = []
+    for ks, _s, cin, cout in CONV_LAYERS:
+        shapes.append(((ks * ks * cin, cout), cout))
+    shapes.append(((DENSE[0], DENSE[1]), DENSE[1]))
+    return shapes
+
+
+def init_params(key: jax.Array) -> list[LayerParams]:
+    """LeCun-normal init (the paper's Cifar init), deterministic from key."""
+    params = []
+    for (kn, bias_n) in layer_shapes():
+        key, sub = jax.random.split(key)
+        fan_in = kn[0]
+        w = jax.random.normal(sub, kn, jnp.float32) / jnp.sqrt(float(fan_in))
+        params.append(LayerParams(w=w, b=jnp.zeros((bias_n,), jnp.float32)))
+    return params
+
+
+def encode_params(params: list[LayerParams]) -> list[LayerPsb]:
+    """Bijective PSB re-encoding of every layer (no retraining — Sec. 1.1)."""
+    out = []
+    for p in params:
+        enc = encode(p.w)
+        out.append(LayerPsb(sign=enc.sign, exp=enc.exp, prob=enc.prob, b=p.b))
+    return out
+
+
+def im2col(x: jnp.ndarray, ksize: int, stride: int) -> jnp.ndarray:
+    """SAME-padded patch extraction: [B,H,W,C] -> [B,Ho,Wo,ksize*ksize*C].
+
+    Implemented as ksize^2 shifted strided slices so it lowers to plain
+    HLO slices/concats (no gather), which XLA fuses with the following
+    reshape+matmul.
+    """
+    b, h, w, c = x.shape
+    pad = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho, wo = (h + stride - 1) // stride, (w + stride - 1) // stride
+    cols = []
+    for di in range(ksize):
+        for dj in range(ksize):
+            patch = xp[:, di : di + h : stride, dj : dj + w : stride, :]
+            cols.append(patch[:, :ho, :wo, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _conv_psb(x, layer: LayerPsb, counts, ks, stride, n, use_pallas=True):
+    b, h, w, _c = x.shape
+    cols = im2col(x, ks, stride)
+    ho, wo = cols.shape[1], cols.shape[2]
+    flat = cols.reshape(b * ho * wo, cols.shape[3])
+    mm = capacitor_matmul if use_pallas else (
+        lambda xx, s, e, k, n, quantize=False: capacitor_matmul_ref(xx, s, e, k, n, quantize)
+    )
+    y = mm(flat, layer.sign, layer.exp, counts, n, quantize=False)
+    y = quantize_q16(y + layer.b[None, :])
+    return y.reshape(b, ho, wo, -1)
+
+
+def forward_psb(
+    layers: list[LayerPsb],
+    x: jnp.ndarray,
+    key: jax.Array,
+    n: int,
+    use_pallas: bool = True,
+    sampler: str = "bitsum",
+):
+    """PSB forward pass at sample size ``n``; returns (logits, feat).
+
+    ``sampler`` picks the Binomial(n, p) draw: "bitsum" (n Bernoulli bits,
+    Eq. 9 semantics, fastest on CPU) or "gumbel" (the supplementary's
+    Gumbel-max trick).  Both are exact.
+    """
+    sample = sample_binomial_bitsum if sampler == "bitsum" else sample_binomial_gumbel
+    x = quantize_q16(x)
+    keys = jax.random.split(key, len(layers))
+    feat = None
+    for i, (ks, stride, _cin, _cout) in enumerate(CONV_LAYERS):
+        counts = sample(keys[i], layers[i].prob, n)
+        x = _conv_psb(x, layers[i], counts, ks, stride, n, use_pallas)
+        x = jax.nn.relu(x)
+        feat = x
+    pooled = quantize_q16(jnp.mean(x, axis=(1, 2)))  # [B, 32]
+    dlayer = layers[-1]
+    counts = sample(keys[-1], dlayer.prob, n)
+    mm = capacitor_matmul if use_pallas else (
+        lambda xx, s, e, k, nn, quantize=False: capacitor_matmul_ref(xx, s, e, k, nn, quantize)
+    )
+    logits = mm(pooled, dlayer.sign, dlayer.exp, counts, n, quantize=False)
+    logits = quantize_q16(logits + dlayer.b[None, :])
+    return logits, feat
+
+
+def forward_float(params: list[LayerParams], x: jnp.ndarray):
+    """float32 baseline of the identical graph (no quantization)."""
+    feat = None
+    for i, (ks, stride, _cin, _cout) in enumerate(CONV_LAYERS):
+        cols = im2col(x, ks, stride)
+        b, ho, wo, kdim = cols.shape
+        y = cols.reshape(b * ho * wo, kdim) @ params[i].w + params[i].b[None, :]
+        x = jax.nn.relu(y).reshape(b, ho, wo, -1)
+        feat = x
+    pooled = jnp.mean(x, axis=(1, 2))
+    logits = pooled @ params[-1].w + params[-1].b[None, :]
+    return logits, feat

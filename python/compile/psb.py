@@ -1,0 +1,160 @@
+"""Progressive stochastic binarization (PSB) number system — build-time python side.
+
+Implements the paper's weight re-encoding (Sec. 3.1):
+
+    w  ->  (s, e, p)   with   s = sign(w), e = floor(log2|w|),
+                              p = |w| / 2^e - 1  in [0, 1)
+
+    wbar_n = s * 2^e * (B_{n,p} / n + 1)        (Eq. 8)  E[wbar_n] = w
+
+plus the Gumbel-max binomial sampler from the supplementary (Eq. 13-15)
+and the 16-bit fixed-point quantizer used for all intermediate results
+(range [-32, 32], i.e. Q5.10 with a sign bit).
+
+Everything here is float32-carried simulation, exactly like the paper's
+own TensorFlow implementation; the bit-exact integer shift-add semantics
+live in the rust `sim::capacitor` module and are cross-checked against
+this code by the artifact round-trip tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Q16 fixed point: 16-bit two's complement covering [-32, 32)  (Q5.10)
+# ---------------------------------------------------------------------------
+
+Q16_SCALE = 1024.0  # 2^10 fractional bits
+Q16_MIN = -32768.0
+Q16_MAX = 32767.0
+
+
+def quantize_q16(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize to the paper's 16-bit fixed-point grid in [-32, 32).
+
+    Values are *carried* as float32 (like the paper's TF simulation) but
+    restricted to the representable grid: round-to-nearest with ties away
+    from zero (matching rust `f32::round`, so the L3 simulator and the
+    artifacts agree bit-for-bit — jnp.round would tie-to-even), saturating.
+    """
+    scaled = x * Q16_SCALE
+    q = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    q = jnp.clip(q, Q16_MIN, Q16_MAX)
+    return q / Q16_SCALE
+
+
+# ---------------------------------------------------------------------------
+# PSB weight encoding
+# ---------------------------------------------------------------------------
+
+
+class PsbEncoding(NamedTuple):
+    """Bijective (sign, exponent, probability) encoding of a weight tensor.
+
+    ``sign`` is -1/0/+1 (0 encodes an exactly-zero weight, e.g. pruned),
+    ``exp`` is the integer exponent e = floor(log2 |w|) carried as float32,
+    ``prob`` is the mantissa probability p = |w|/2^e - 1 in [0, 1).
+    """
+
+    sign: jnp.ndarray
+    exp: jnp.ndarray
+    prob: jnp.ndarray
+
+
+def encode(w: jnp.ndarray) -> PsbEncoding:
+    """Encode weights into the PSB (s, e, p) representation (Eq. 4-7)."""
+    sign = jnp.sign(w)
+    aw = jnp.abs(w)
+    # Avoid log2(0); sign==0 masks these lanes out entirely.
+    safe = jnp.where(aw > 0, aw, 1.0)
+    e = jnp.floor(jnp.log2(safe))
+    p = safe / jnp.exp2(e) - 1.0
+    # Guard numerical round-off: p must live in [0, 1).
+    p = jnp.clip(p, 0.0, 1.0 - 1e-7)
+    e = jnp.where(sign == 0, 0.0, e)
+    p = jnp.where(sign == 0, 0.0, p)
+    return PsbEncoding(sign=sign, exp=e, prob=p)
+
+
+def decode_mean(enc: PsbEncoding) -> jnp.ndarray:
+    """Exact expectation of the encoding: E[wbar] = s * 2^e * (1 + p) = w."""
+    return enc.sign * jnp.exp2(enc.exp) * (1.0 + enc.prob)
+
+
+def wbar_from_counts(enc: PsbEncoding, k: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Realize the stochastic weight wbar_n = s * 2^e * (1 + k/n)  (Eq. 8).
+
+    ``k`` are Binomial(n, p) counts, carried as float32.
+    """
+    return enc.sign * jnp.exp2(enc.exp) * (1.0 + k / float(n))
+
+
+def discretize_prob(p: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize probabilities to ``bits`` bits (Sec. 4.4).
+
+    Regular grid including p=0, excluding p=1 (the right boundary would be
+    the next exponent): levels i/2^bits for i in 0..2^bits-1, nearest.
+    """
+    levels = float(1 << bits)
+    return jnp.clip(jnp.round(p * levels), 0.0, levels - 1.0) / levels
+
+
+# ---------------------------------------------------------------------------
+# Binomial sampling via the Gumbel-max trick (supplementary Eq. 13-15)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sample_binomial_gumbel(key: jax.Array, p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Sample k ~ Binomial(n, p) elementwise with the Gumbel-max trick.
+
+    k = argmax_k [ log C(n,k) + k log p + (n-k) log(1-p) - log(-log U_k) ]
+
+    numerically stabilized with log-rules exactly as the supplementary
+    (Eq. 15).  Returns float32 counts with the same shape as ``p``.
+    """
+    ks = jnp.arange(n + 1, dtype=jnp.float32)
+    # log C(n, k) via lgamma — stable for all n we use (n <= 256).
+    log_comb = (
+        jax.lax.lgamma(jnp.float32(n + 1))
+        - jax.lax.lgamma(ks + 1.0)
+        - jax.lax.lgamma(jnp.float32(n) - ks + 1.0)
+    )
+    pf = p.astype(jnp.float32)[..., None]
+    eps = 1e-12
+    logits = (
+        log_comb
+        + ks * jnp.log(jnp.maximum(pf, eps))
+        + (float(n) - ks) * jnp.log(jnp.maximum(1.0 - pf, eps))
+    )
+    # p == 0 / p == 1 exact corners: force the degenerate outcome.
+    logits = jnp.where(pf == 0.0, jnp.where(ks == 0.0, 0.0, -jnp.inf), logits)
+    u = jax.random.uniform(key, logits.shape, minval=eps, maxval=1.0)
+    gumbel = -jnp.log(-jnp.log(u))
+    return jnp.argmax(logits + gumbel, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sample_binomial_bitsum(key: jax.Array, p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Sample k ~ Binomial(n, p) as the sum of n Bernoulli bits.
+
+    This is *literally* Eq. 9's accumulation semantics (one comparator bit
+    per gated add) and, being free of transcendentals, is 3-6x faster than
+    the Gumbel-max formulation on CPU (EXPERIMENTS.md §Perf L2). Both
+    samplers draw from the identical Binomial(n, p) distribution; the
+    Gumbel-max variant is kept as the supplementary-faithful reference.
+    """
+    u = jax.random.uniform(key, (*p.shape, n))
+    return jnp.sum(u < p[..., None], axis=-1).astype(jnp.float32)
+
+
+def sample_wbar(key: jax.Array, w: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Convenience: encode ``w`` and draw one stochastic realization wbar_n."""
+    enc = encode(w)
+    k = sample_binomial_gumbel(key, enc.prob, n)
+    return wbar_from_counts(enc, k, n)

@@ -1,0 +1,54 @@
+"""AOT emission: HLO text artifacts parse-ably produced with correct meta."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    meta = aot.emit(out, sample_sizes=[4], batches=[2], verbose=False)
+    return out, meta
+
+
+def test_emits_hlo_text_not_proto(emitted):
+    out, _ = emitted
+    for name in ["float_b2.hlo.txt", "psb_n4_b2.hlo.txt"]:
+        text = open(os.path.join(out, name)).read()
+        # HLO *text* module: readable, with an ENTRY computation.
+        assert text.lstrip().startswith("HloModule")
+        assert "ENTRY" in text
+
+
+def test_meta_signature(emitted):
+    out, meta = emitted
+    disk = json.load(open(os.path.join(out, "meta.json")))
+    assert disk["modules"] == {
+        "float_b2": {"batch": 2, "kind": "float"},
+        "psb_n4_b2": {"batch": 2, "kind": "psb", "n": 4},
+    }
+    assert disk["layer_shapes"] == [
+        {"weight": [27, 16], "bias": 16},
+        {"weight": [144, 32], "bias": 32},
+        {"weight": [288, 32], "bias": 32},
+        {"weight": [32, 10], "bias": 10},
+    ]
+    assert meta["q16_scale"] == 1024
+
+
+def test_psb_module_parameter_count(emitted):
+    out, _ = emitted
+    text = open(os.path.join(out, "psb_n4_b2.hlo.txt")).read()
+    header = text.splitlines()[0]
+    header = header[header.index("{(") : header.index("->")]
+    # x + seed + 4 layers x (sign, exp, prob, bias) = 18 parameters
+    assert header.count("f32[") + header.count("u32[") == 18, header
+
+
+def test_stamp_written(emitted):
+    out, _ = emitted
+    assert os.path.exists(os.path.join(out, ".stamp"))

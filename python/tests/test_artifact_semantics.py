@@ -1,0 +1,78 @@
+"""Artifact semantics: the lowered HLO is self-contained CPU-executable
+(no Mosaic custom-calls from the Pallas kernel), deterministic per seed,
+and the PSB module's output converges to the float module's with n."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.psb import quantize_q16
+
+
+def test_psb_hlo_has_no_mosaic_custom_call(tmp_path):
+    """interpret=True must lower the Pallas kernel to plain HLO ops —
+    a Mosaic custom-call would be unloadable on the CPU PJRT client."""
+    out = str(tmp_path)
+    aot.emit(out, sample_sizes=[2], batches=[1], verbose=False)
+    text = open(f"{out}/psb_n2_b1.hlo.txt").read()
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(jax.random.PRNGKey(3))
+    layers = M.encode_params(params)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (4, M.IMG, M.IMG, 3))
+    return params, layers, x
+
+
+def test_forward_deterministic_per_key(setup):
+    _, layers, x = setup
+    a, _ = M.forward_psb(layers, x, jax.random.PRNGKey(9), 8)
+    b, _ = M.forward_psb(layers, x, jax.random.PRNGKey(9), 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c, _ = M.forward_psb(layers, x, jax.random.PRNGKey(10), 8)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_psb_error_decreases_with_n(setup):
+    params, layers, x = setup
+    ref, _ = M.forward_float(params, x)
+    errs = []
+    for n in [1, 16, 256]:
+        tot = 0.0
+        for seed in range(3):
+            got, _ = M.forward_psb(layers, x, jax.random.PRNGKey(seed), n)
+            tot += float(jnp.abs(got - ref).mean())
+        errs.append(tot / 3)
+    assert errs[2] < errs[1] < errs[0], errs
+
+
+def test_intermediates_respect_q16_range(setup):
+    """Q16 saturates at ±32: the feature map must stay in range."""
+    _, layers, x = setup
+    _, feat = M.forward_psb(layers, x, jax.random.PRNGKey(1), 4)
+    f = np.asarray(feat)
+    assert f.min() >= -32.0 and f.max() <= 32.0
+    # and on the Q16 grid (ReLU of Q16 values stays on-grid)
+    g = f * 1024.0
+    np.testing.assert_allclose(g, np.round(g), atol=1e-2)
+
+
+def test_quantizer_matches_rust_grid():
+    """Spot values shared with rust num::fixed unit tests — the two
+    implementations must agree bit-for-bit on the carrier."""
+    cases = {
+        -35.0: -32.0,
+        31.999: 32767.0 / 1024.0,
+        0.3333: np.round(0.3333 * 1024.0) / 1024.0,
+        -0.00049: -1.0 / 1024.0,  # -0.50176 rounds away from zero
+        0.5 / 1024.0: 1.0 / 1024.0,  # exact tie: away from zero (rust f32::round)
+    }
+    for v, want in cases.items():
+        got = float(quantize_q16(jnp.float32(v)))
+        assert got == pytest.approx(want, abs=1e-7), (v, got, want)

@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas capacitor kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts: the tiled
+kernel (with padding, K-innermost accumulation and in-tile dequant) must
+match ref.py on the float32 carrier, across shapes, sample sizes and block
+configurations.  Hypothesis sweeps the shape/parameter space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.capacitor import capacitor_matmul, vmem_bytes
+from compile.kernels.ref import capacitor_matmul_mean_ref, capacitor_matmul_ref
+from compile.psb import encode, quantize_q16
+
+
+def make_case(key, m, k, n_out, n):
+    k1, k2 = jax.random.split(key)
+    x = quantize_q16(jax.random.uniform(k1, (m, k), minval=-2.0, maxval=2.0))
+    w = jax.random.normal(k2, (k, n_out)) * 0.5
+    enc = encode(w)
+    counts = jnp.round(enc.prob * n)  # deterministic counts: exactness check
+    return x, enc, counts
+
+
+@pytest.mark.parametrize("m,k,n_out", [(4, 8, 4), (16, 27, 16), (64, 144, 32), (130, 288, 32)])
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_kernel_matches_ref(m, k, n_out, n):
+    x, enc, counts = make_case(jax.random.PRNGKey(m * 1000 + k + n), m, k, n_out, n)
+    got = capacitor_matmul(x, enc.sign, enc.exp, counts, n)
+    want = capacitor_matmul_ref(x, enc.sign, enc.exp, counts, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1.0 / 1024.0 + 1e-6)
+
+
+@pytest.mark.parametrize("quantize", [True, False])
+def test_kernel_quantize_flag(quantize):
+    x, enc, counts = make_case(jax.random.PRNGKey(7), 8, 16, 8, 8)
+    got = capacitor_matmul(x, enc.sign, enc.exp, counts, 8, quantize=quantize)
+    want = capacitor_matmul_ref(x, enc.sign, enc.exp, counts, 8, quantize=quantize)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+    if quantize:
+        # every output value sits on the Q16 grid
+        g = np.asarray(got) * 1024.0
+        np.testing.assert_allclose(g, np.round(g), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n_out=st.integers(1, 40),
+    n=st.sampled_from([1, 2, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(m, k, n_out, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = quantize_q16(jax.random.uniform(k1, (m, k), minval=-4.0, maxval=4.0))
+    w = jax.random.normal(k2, (k, n_out))
+    enc = encode(w)
+    counts = jnp.floor(jax.random.uniform(k3, (k, n_out)) * (n + 1)).clip(0, n)
+    got = capacitor_matmul(x, enc.sign, enc.exp, counts, n)
+    want = capacitor_matmul_ref(x, enc.sign, enc.exp, counts, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1.0 / 1024.0 + 1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_kernel_block_shape_invariance(bm, bn, bk):
+    """Tiling is an implementation detail: result is block-shape independent."""
+    x, enc, counts = make_case(jax.random.PRNGKey(11), 33, 50, 17, 16)
+    base = capacitor_matmul(x, enc.sign, enc.exp, counts, 16)
+    got = capacitor_matmul(x, enc.sign, enc.exp, counts, 16, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), atol=1e-6)
+
+
+def test_mean_counts_recover_float_matmul():
+    """With k = p*n exactly, the capacitor equals the folded float matmul."""
+    key = jax.random.PRNGKey(3)
+    x = quantize_q16(jax.random.uniform(key, (32, 64), minval=-1, maxval=1))
+    w = jax.random.normal(jax.random.PRNGKey(4), (64, 16)) * 0.3
+    enc = encode(w)
+    n = 1 << 20  # huge n: k = round(p*n) makes k/n ~ p to 1e-6
+    counts = jnp.round(enc.prob * n)
+    got = capacitor_matmul(x, enc.sign, enc.exp, counts, n, quantize=False)
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mean_ref_is_unbiased_reconstruction():
+    w = jnp.array([[0.37, -1.9], [3.0, 0.0]])
+    enc = encode(w)
+    x = jnp.eye(2)
+    got = capacitor_matmul_mean_ref(x, enc.sign, enc.exp, enc.prob, quantize=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w), rtol=1e-6)
+
+
+def test_vmem_budget():
+    """DESIGN §Perf: default tile residency stays under 2 MiB."""
+    assert vmem_bytes() <= 2 * 1024 * 1024

@@ -1,0 +1,100 @@
+"""L2 model tests: shapes, float-vs-PSB convergence, pallas-vs-ref paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.psb import encode
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x8():
+    return jax.random.uniform(jax.random.PRNGKey(1), (8, M.IMG, M.IMG, 3))
+
+
+def test_layer_shapes():
+    shapes = M.layer_shapes()
+    assert shapes[0] == ((27, 16), 16)
+    assert shapes[1] == ((144, 32), 32)
+    assert shapes[2] == ((288, 32), 32)
+    assert shapes[3] == ((32, 10), 10)
+
+
+def test_im2col_shapes():
+    x = jnp.zeros((2, 32, 32, 3))
+    assert M.im2col(x, 3, 1).shape == (2, 32, 32, 27)
+    assert M.im2col(x, 3, 2).shape == (2, 16, 16, 27)
+
+
+def test_im2col_matches_conv():
+    """im2col + matmul == lax.conv with SAME padding."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 3, 4))
+    cols = M.im2col(x, 3, 1)
+    # im2col channel order is (di, dj, c) blocks -> matches HWIO reshape
+    got = cols.reshape(-1, 27) @ w.reshape(27, 4)
+    got = got.reshape(2, 8, 8, 4)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_forward_float_shapes(params, x8):
+    logits, feat = M.forward_float(params, x8)
+    assert logits.shape == (8, 10)
+    assert feat.shape == (8, 8, 8, 32)
+
+
+@pytest.mark.parametrize("n", [1, 16])
+def test_forward_psb_shapes(params, x8, n):
+    layers = M.encode_params(params)
+    logits, feat = M.forward_psb(layers, x8, jax.random.PRNGKey(2), n)
+    assert logits.shape == (8, 10)
+    assert feat.shape == (8, 8, 8, 32)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_psb_converges_to_float(params, x8):
+    """Paper Fig. 3 in miniature: error decreases with n, small at n=64."""
+    layers = M.encode_params(params)
+    ref, _ = M.forward_float(params, x8)
+    errs = {}
+    for n in [1, 8, 64]:
+        logits, _ = M.forward_psb(layers, x8, jax.random.PRNGKey(3), n)
+        errs[n] = float(jnp.abs(logits - ref).mean())
+    assert errs[64] < errs[1]
+    assert errs[64] < 0.1, errs
+
+
+def test_psb_pallas_matches_jnp_path(params, x8):
+    """use_pallas=True and the ref path produce identical numbers (same key)."""
+    layers = M.encode_params(params)
+    a, fa = M.forward_psb(layers, x8, jax.random.PRNGKey(4), 8, use_pallas=True)
+    b, fb = M.forward_psb(layers, x8, jax.random.PRNGKey(4), 8, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), atol=2e-3)
+
+
+def test_encode_params_roundtrip(params):
+    layers = M.encode_params(params)
+    for lp, l in zip(params, layers):
+        w = l.sign * jnp.exp2(l.exp) * (1.0 + l.prob)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(lp.w), rtol=2e-6, atol=1e-7)
+
+
+def test_psb_batch_invariance(params):
+    """Same image at different batch positions gets the same logits (shared filter sample)."""
+    layers = M.encode_params(params)
+    x1 = jax.random.uniform(jax.random.PRNGKey(9), (1, M.IMG, M.IMG, 3))
+    x4 = jnp.tile(x1, (4, 1, 1, 1))
+    l1, _ = M.forward_psb(layers, x4, jax.random.PRNGKey(10), 8)
+    np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l1[3]), atol=1e-5)

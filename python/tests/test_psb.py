@@ -1,0 +1,116 @@
+"""Properties of the PSB number system (paper Sec. 3.1/3.2) and samplers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.psb import (
+    Q16_SCALE,
+    decode_mean,
+    discretize_prob,
+    encode,
+    quantize_q16,
+    sample_binomial_gumbel,
+    sample_wbar,
+)
+
+finite_weights = st.floats(
+    min_value=-30.0, max_value=30.0, allow_nan=False, allow_infinity=False
+).filter(lambda w: w == 0.0 or abs(w) > 1e-6)
+
+
+@settings(max_examples=200, deadline=None)
+@given(w=finite_weights)
+def test_encoding_is_bijective(w):
+    """decode(encode(w)) == w: the representation is exact, not lossy (Sec. 1.1)."""
+    enc = encode(jnp.float32(w))
+    back = float(decode_mean(enc))
+    assert abs(back - np.float32(w)) <= 4e-6 * max(1.0, abs(w))
+
+
+@settings(max_examples=50, deadline=None)
+@given(w=finite_weights.filter(lambda w: w != 0.0))
+def test_encoding_ranges(w):
+    enc = encode(jnp.float32(w))
+    assert float(enc.sign) in (-1.0, 1.0)
+    assert 0.0 <= float(enc.prob) < 1.0
+    # 2^e <= |w| < 2^(e+1)
+    assert float(jnp.exp2(enc.exp)) <= abs(np.float32(w)) * (1 + 1e-6)
+    assert abs(np.float32(w)) < float(jnp.exp2(enc.exp + 1)) * (1 + 1e-6)
+
+
+def test_zero_weight_encodes_to_zero():
+    enc = encode(jnp.zeros((3,)))
+    np.testing.assert_array_equal(np.asarray(decode_mean(enc)), np.zeros(3))
+
+
+def test_unbiasedness_empirical():
+    """E[wbar_n] = w (Eq. 8): empirical mean over many draws converges."""
+    w = jnp.array([0.75, -3.0, 0.001, 12.5, -0.2])
+    draws = jax.vmap(lambda k: sample_wbar(k, w, 4))(
+        jax.random.split(jax.random.PRNGKey(0), 4000)
+    )
+    mean = np.asarray(draws).mean(axis=0)
+    se = np.asarray(draws).std(axis=0) / np.sqrt(4000)
+    assert (np.abs(mean - np.asarray(w)) <= 5 * se + 1e-6).all(), (mean, w)
+
+
+def test_variance_bound():
+    """Var(wbar_n) <= w^2 / (8 n)  (Eq. 10)."""
+    for n in [1, 2, 8, 32]:
+        w = jnp.array([0.9, -1.5, 3.0, 0.3, -0.07])
+        draws = jax.vmap(lambda k: sample_wbar(k, w, n))(
+            jax.random.split(jax.random.PRNGKey(n), 6000)
+        )
+        var = np.asarray(draws).var(axis=0)
+        bound = np.asarray(w) ** 2 / (8.0 * n)
+        assert (var <= bound * 1.15 + 1e-9).all(), (n, var, bound)
+
+
+def test_binomial_gumbel_moments():
+    """Gumbel-max sampler (supp. Eq. 15) has Binomial(n, p) moments."""
+    n = 16
+    p = jnp.array([0.0, 0.1, 0.5, 0.9, 0.999])
+    ks = jax.vmap(lambda k: sample_binomial_gumbel(k, p, n))(
+        jax.random.split(jax.random.PRNGKey(1), 8000)
+    )
+    ks = np.asarray(ks)
+    np.testing.assert_allclose(ks.mean(0), n * np.asarray(p), atol=0.15)
+    np.testing.assert_allclose(
+        ks.var(0), n * np.asarray(p) * (1 - np.asarray(p)), atol=0.4
+    )
+    assert ks.min() >= 0 and ks.max() <= n
+    assert (ks[:, 0] == 0).all()  # p=0 corner is exact
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    p=st.floats(0.0, 0.999999),
+    bits=st.sampled_from([1, 2, 3, 4, 6]),
+)
+def test_discretize_prob_grid(p, bits):
+    q = float(discretize_prob(jnp.float32(p), bits))
+    levels = 1 << bits
+    assert 0.0 <= q < 1.0
+    assert abs(q * levels - round(q * levels)) < 1e-5  # on-grid
+    # nearest level, except near p->1 where the top level is clipped away
+    # (the right boundary would belong to the next exponent)
+    assert abs(q - p) <= 1.0 / levels + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.floats(-100.0, 100.0, allow_nan=False))
+def test_quantize_q16(v):
+    q = float(quantize_q16(jnp.float32(v)))
+    assert -32.0 <= q <= 32.0
+    assert abs(q * Q16_SCALE - round(q * Q16_SCALE)) < 1e-3
+    if -31.9 < v < 31.9:
+        assert abs(q - v) <= 0.5 / Q16_SCALE + 1e-6
+
+
+def test_quantize_idempotent():
+    x = jax.random.uniform(jax.random.PRNGKey(2), (128,), minval=-40, maxval=40)
+    q1 = quantize_q16(x)
+    q2 = quantize_q16(q1)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))

@@ -1,0 +1,96 @@
+//! Micro-benchmarks of the L3 hot path: the capacitor contraction in its
+//! three flavours (float-sim, rowwise/spatial, bit-exact integer), the
+//! binomial samplers behind it, and PSB encoding throughput.
+//!
+//! This is the profile target for EXPERIMENTS.md §Perf (L3).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::costs::CostCounter;
+use psb::num::{PsbPlanes, Q16};
+use psb::rng::{binomial, Rng, Xorshift128Plus};
+use psb::sim::capacitor::{capacitor_matmul, capacitor_matmul_exact, capacitor_matmul_rowwise};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut rng = Xorshift128Plus::seed_from(1);
+
+    // the serving CNN's three conv contractions (batch 8)
+    for (name, m, k, n) in [
+        ("conv1 8x32x32 K27->16", 8 * 1024usize, 27usize, 16usize),
+        ("conv2 8x16x16 K144->32", 8 * 256, 144, 32),
+        ("conv3 8x8x8  K288->32", 8 * 64, 288, 32),
+    ] {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.uniform() - 0.5).collect();
+        let planes = PsbPlanes::encode(&w, &[k, n]);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.uniform()).collect();
+        let mut costs = CostCounter::default();
+        let mut local = Xorshift128Plus::seed_from(2);
+        let mean = harness::bench(&format!("capacitor_matmul {name} n=16"), budget, || {
+            let y = capacitor_matmul(&x, &planes, None, m, 16, &mut local, &mut costs);
+            std::hint::black_box(y);
+        });
+        harness::report_rate("  -> MACs", (m * k * n) as f64, mean);
+    }
+
+    // rowwise (spatial attention) vs uniform on the same problem
+    {
+        let (m, k, n) = (2048usize, 144usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.uniform() - 0.5).collect();
+        let planes = PsbPlanes::encode(&w, &[k, n]);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.uniform()).collect();
+        let rows: Vec<u32> = (0..m).map(|r| if r % 3 == 0 { 16 } else { 8 }).collect();
+        let mut costs = CostCounter::default();
+        let mut local = Xorshift128Plus::seed_from(3);
+        harness::bench("capacitor_rowwise 2048x144x32 8/16", budget, || {
+            let y = capacitor_matmul_rowwise(&x, &planes, None, m, &rows, &mut local, &mut costs);
+            std::hint::black_box(y);
+        });
+    }
+
+    // bit-exact integer path (cross-validation cost)
+    {
+        let (m, k, n) = (64usize, 144usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.uniform() - 0.5).collect();
+        let planes = PsbPlanes::encode(&w, &[k, n]);
+        let xq: Vec<Q16> = (0..m * k).map(|_| Q16::from_f32(rng.uniform())).collect();
+        let mut costs = CostCounter::default();
+        harness::bench("capacitor_exact(int) 64x144x32 n=16", budget, || {
+            let y = capacitor_matmul_exact(&xq, &planes, None, m, 16, 9, &mut costs);
+            std::hint::black_box(y);
+        });
+    }
+
+    // samplers
+    {
+        let mut local = Xorshift128Plus::seed_from(4);
+        let mean = harness::bench("binomial_inversion n=16 p=0.37 x10000", budget, || {
+            let mut acc = 0u32;
+            for _ in 0..10_000 {
+                acc += binomial::binomial_inversion(&mut local, 16, 0.37);
+            }
+            std::hint::black_box(acc);
+        });
+        harness::report_rate("  -> samples", 10_000.0, mean);
+        let mean = harness::bench("binomial_bitsum   n=8  p=0.37 x10000", budget, || {
+            let mut acc = 0u32;
+            for _ in 0..10_000 {
+                acc += binomial::binomial_bitsum(&mut local, 8, 0.37);
+            }
+            std::hint::black_box(acc);
+        });
+        harness::report_rate("  -> samples", 10_000.0, mean);
+    }
+
+    // encode throughput (network preparation cost)
+    {
+        let w: Vec<f32> = (0..100_000).map(|_| rng.uniform() - 0.5).collect();
+        let mean = harness::bench("PsbPlanes::encode 100k weights", budget, || {
+            std::hint::black_box(PsbPlanes::encode(&w, &[w.len()]));
+        });
+        harness::report_rate("  -> weights", 100_000.0, mean);
+    }
+}

@@ -1,0 +1,76 @@
+//! End-to-end serving bench: the coordinator over real PJRT artifacts —
+//! flat psb8, flat psb16 and adaptive psb8/16, reporting req/s, latency
+//! quantiles and gated-adds per request (the paper's attn33 headline at
+//! the request level).  Skips when artifacts are missing.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use psb::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, EscalationPolicy};
+use psb::data::{Dataset, SynthConfig};
+use psb::rng::Xorshift128Plus;
+use psb::runtime::{FloatBundle, PsbBundle};
+use psb::sim::train::{train, TrainConfig};
+
+const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+const REQUESTS: usize = 64;
+
+fn main() {
+    if !std::path::Path::new("artifacts/meta.txt").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let data = Dataset::synth(&SynthConfig {
+        train: 256,
+        test: 64,
+        size: 32,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(5);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    train(&mut net, &data, &TrainConfig { epochs: 1, ..Default::default() });
+    let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
+    let psb = PsbBundle::from_float(&float, Some(4));
+
+    println!("{:>12} {:>10} {:>12} {:>12} {:>10} {:>12}", "mode", "req/s", "p50", "p99", "escal.", "adds/req");
+    for (name, policy) in [
+        ("flat_psb8", EscalationPolicy { n_low: 8, n_high: 16, disabled: true, ..Default::default() }),
+        ("flat_psb16", EscalationPolicy { n_low: 16, n_high: 16, disabled: true, ..Default::default() }),
+        ("adaptive", EscalationPolicy { n_low: 8, n_high: 16, ..Default::default() }),
+    ] {
+        let cfg = CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
+            policy,
+            seed: 3,
+        };
+        let coord = Coordinator::start(cfg, psb.clone(), float.clone()).unwrap();
+        // warm the compile cache before timing
+        let (x0, _) = data.gather_test(&[0]);
+        coord.classify(x0.data).unwrap();
+        let start = Instant::now();
+        let mut inflight = Vec::with_capacity(REQUESTS);
+        for i in 0..REQUESTS {
+            let (x, _) = data.gather_test(&[i % 64]);
+            inflight.push(coord.submit(x.data).unwrap());
+        }
+        for rx in inflight {
+            rx.recv().unwrap();
+        }
+        let elapsed = start.elapsed();
+        let m = &coord.metrics;
+        println!(
+            "{:>12} {:>10.1} {:>12.2?} {:>12.2?} {:>9.1}% {:>12.3e}",
+            name,
+            REQUESTS as f64 / elapsed.as_secs_f64(),
+            m.latency.quantile(0.5),
+            m.latency.quantile(0.99),
+            100.0 * m.escalation_rate(),
+            m.gated_adds.load(Ordering::Relaxed) as f64 / (REQUESTS + 1) as f64,
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Fig. 1 bench: number-system sampling throughput per RNG backend and
+//! per sample size — the cost of "one random bit chooses one of two
+//! shifts" across the generator ablation (supp. §1.1).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::num::PsbWeight;
+use psb::rng::{AnyRng, RngKind};
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let enc = PsbWeight::encode(3.0); // e=1, p=0.5: worst-variance point
+    for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
+        let mut rng = AnyRng::new(kind, 7);
+        for n in [1u32, 16, 64] {
+            let mean = harness::bench(&format!("sample_n {kind:?} n={n} x10000"), budget, || {
+                let mut acc = 0.0f32;
+                for _ in 0..10_000 {
+                    acc += enc.sample_n(n, &mut rng);
+                }
+                std::hint::black_box(acc);
+            });
+            harness::report_rate("  -> weight draws", 10_000.0, mean);
+        }
+    }
+    // single-bit path (the literal hardware op)
+    let mut rng = AnyRng::new(RngKind::Lfsr, 9);
+    let mean = harness::bench("sample_single LFSR x10000", budget, || {
+        let mut acc = 0.0f32;
+        for _ in 0..10_000 {
+            acc += enc.sample_single(&mut rng);
+        }
+        std::hint::black_box(acc);
+    });
+    harness::report_rate("  -> shift choices", 10_000.0, mean);
+}

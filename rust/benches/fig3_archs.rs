@@ -1,0 +1,39 @@
+//! Fig. 3 bench: one PSB inference through each zoo architecture
+//! (batch 8, 32×32) at n = 8 and n = 16 — the per-model inference cost
+//! behind the accuracy-vs-n sweep, plus the float simulator baseline.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::models::MODEL_NAMES;
+use psb::rng::{Rng, Xorshift128Plus};
+use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+fn main() {
+    let budget = Duration::from_millis(500);
+    let mut rng = Xorshift128Plus::seed_from(11);
+    let x = Tensor::from_vec((0..8 * 32 * 32 * 3).map(|_| rng.uniform()).collect(), &[8, 32, 32, 3]);
+    for name in MODEL_NAMES {
+        let mut net = psb::models::by_name(name, 32, &mut rng);
+        // settle BN running stats so folding is well-defined
+        for _ in 0..3 {
+            net.forward::<Xorshift128Plus>(&x, true, None);
+        }
+        let mean = harness::bench(&format!("{name} float sim fwd b8"), budget, || {
+            std::hint::black_box(net.forward::<Xorshift128Plus>(&x, false, None).logits().len());
+        });
+        harness::report_rate("  -> images", 8.0, mean);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        for n in [8u32, 16] {
+            let mut seed = 0u64;
+            let mean = harness::bench(&format!("{name} psb{n} fwd b8"), budget, || {
+                seed += 1;
+                std::hint::black_box(psb.forward(&x, &Precision::Uniform(n), seed).logits.len());
+            });
+            harness::report_rate("  -> images", 8.0, mean);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Minimal benchmark harness (the offline build has no criterion):
+//! warmup + timed repetitions, reporting mean / min / p50 per iteration.
+//!
+//! Used by every `[[bench]]` target via `#[path = "harness.rs"] mod harness;`.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for ~`budget` (after 3 warmup calls) and report.
+/// Returns mean iteration time.
+#[allow(dead_code)]
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> Duration {
+    for _ in 0..3 {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || times.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    times.sort();
+    let mean: Duration = times.iter().sum::<Duration>() / times.len() as u32;
+    let min = times[0];
+    let p50 = times[times.len() / 2];
+    println!(
+        "{name:<44} {:>12} iters  mean {:>12?}  p50 {:>12?}  min {:>12?}",
+        times.len(),
+        mean,
+        p50,
+        min
+    );
+    mean
+}
+
+/// Report a throughput-style metric alongside a bench result.
+#[allow(dead_code)]
+pub fn report_rate(name: &str, items: f64, per_iter: Duration) {
+    let rate = items / per_iter.as_secs_f64();
+    println!("{name:<44} {rate:>12.3e} items/s");
+}

@@ -1,0 +1,62 @@
+//! Table 1 bench: per-modification inference cost on the ResNet stand-in
+//! — pruning (sparsity should *speed up* the contraction via the
+//! zero-weight skip), probability discretization (free at run time), and
+//! the two-stage attention pass vs flat sampling.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::attention::adaptive_forward;
+use psb::prune::prune_global;
+use psb::rng::{Rng, Xorshift128Plus};
+use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    let mut rng = Xorshift128Plus::seed_from(21);
+    let mut net = psb::models::by_name("resnet_mini", 32, &mut rng);
+    let x = Tensor::from_vec((0..8 * 32 * 32 * 3).map(|_| rng.uniform()).collect(), &[8, 32, 32, 3]);
+    for _ in 0..3 {
+        net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+
+    // no modification, flat n
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    for n in [8u32, 16, 32] {
+        let mut seed = 0u64;
+        harness::bench(&format!("resnet_mini psb{n} b8"), budget, || {
+            seed += 1;
+            std::hint::black_box(psb.forward(&x, &Precision::Uniform(n), seed).logits.len());
+        });
+    }
+
+    // pruning: zero weights short-circuit the inner loop
+    for frac in [0.90f32, 0.99] {
+        let mut pruned = net.clone();
+        prune_global(&mut pruned, frac);
+        let psb_p = PsbNetwork::prepare(&pruned, PsbOptions::default());
+        let mut seed = 0u64;
+        harness::bench(&format!("pruned {:.0}% psb16 b8", frac * 100.0), budget, || {
+            seed += 1;
+            std::hint::black_box(psb_p.forward(&x, &Precision::Uniform(16), seed).logits.len());
+        });
+    }
+
+    // probability discretization: same run-time cost by construction
+    let psb_d = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(4), ..Default::default() });
+    let mut seed = 0u64;
+    harness::bench("4-bit probs psb16 b8", budget, || {
+        seed += 1;
+        std::hint::black_box(psb_d.forward(&x, &Precision::Uniform(16), seed).logits.len());
+    });
+
+    // two-stage attention vs its flat bounds
+    let mut seed = 0u64;
+    harness::bench("attention psb8/16 (two-stage) b8", budget, || {
+        seed += 1;
+        std::hint::black_box(adaptive_forward(&psb, &x, 8, 16, seed).logits.len());
+    });
+}

@@ -1,0 +1,40 @@
+//! Table 2 bench: cost-model integration speed (it runs inside the
+//! serving hot loop for metrics) and the energy-model arithmetic itself.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::costs::{break_even_n, CostCounter};
+
+fn main() {
+    let budget = Duration::from_millis(200);
+
+    let mean = harness::bench("charge_capacitor x100000", budget, || {
+        let mut c = CostCounter::default();
+        for i in 0..100_000u64 {
+            c.charge_capacitor(i % 512, 16);
+        }
+        std::hint::black_box(c.gated_adds);
+    });
+    harness::report_rate("  -> charges", 100_000.0, mean);
+
+    harness::bench("energy model (psb/fp32/int8) x10000", budget, || {
+        let mut acc = 0.0f64;
+        for i in 1..10_000u64 {
+            let mut c = CostCounter::default();
+            c.charge_capacitor(i, (i % 64 + 1) as u32);
+            acc += c.psb_energy_pj() + c.fp32_energy_pj() + c.int8_energy_pj();
+        }
+        std::hint::black_box(acc);
+    });
+
+    harness::bench("break_even_n sweep x10000", budget, || {
+        let mut acc = 0u32;
+        for i in 1..10_000 {
+            acc += break_even_n(i as f64 * 0.001);
+        }
+        std::hint::black_box(acc);
+    });
+}

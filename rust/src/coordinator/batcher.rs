@@ -1,0 +1,156 @@
+//! Dynamic batching: collect single-image requests into fixed-size
+//! artifact batches with a linger timeout, zero-padding stragglers.
+//!
+//! Each AOT artifact is compiled for a fixed batch dimension (vLLM-style
+//! bucket batching, with one bucket here).  The batcher trades latency
+//! for occupancy: a batch departs when full or when the oldest request
+//! has waited `linger`.  Runs as a plain thread loop on std channels
+//! (the offline build has no async runtime).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// One queued request: the image plus its enqueue time and an opaque tag
+/// the caller uses to route the response.
+pub struct Pending<T> {
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub tag: T,
+}
+
+/// Configuration for one batching stage.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Artifact batch size (images per executable invocation).
+    pub batch_size: usize,
+    /// Maximum time the oldest request may wait before a partial batch
+    /// departs.
+    pub linger: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch_size: 8, linger: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch: padded input plus the tags of the live rows.
+pub struct FormedBatch<T> {
+    /// `[batch_size, image_len]` row-major, zero-padded beyond `tags.len()`.
+    pub x: Vec<f32>,
+    pub tags: Vec<T>,
+    /// Age of the oldest member when the batch departed.
+    pub oldest_wait: Duration,
+}
+
+/// Pull requests off `rx` and form batches, invoking `dispatch` for each.
+/// Runs until the channel closes and all pending work is flushed.
+/// `dispatch` may block (e.g. waiting on the engine); requests keep
+/// queueing in the channel meanwhile.
+pub fn run_batcher<T>(
+    rx: Receiver<Pending<T>>,
+    cfg: BatcherConfig,
+    image_len: usize,
+    mut dispatch: impl FnMut(FormedBatch<T>),
+) {
+    let mut hold: Vec<Pending<T>> = Vec::with_capacity(cfg.batch_size);
+    loop {
+        if hold.is_empty() {
+            match rx.recv() {
+                Ok(p) => hold.push(p),
+                Err(_) => break, // closed and drained
+            }
+        } else {
+            let deadline = hold[0].enqueued + cfg.linger;
+            let now = Instant::now();
+            if hold.len() >= cfg.batch_size || now >= deadline {
+                dispatch(form(&mut hold, cfg.batch_size, image_len));
+                continue;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => hold.push(p),
+                Err(RecvTimeoutError::Timeout) => {
+                    dispatch(form(&mut hold, cfg.batch_size, image_len));
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    while !hold.is_empty() {
+        dispatch(form(&mut hold, cfg.batch_size, image_len));
+    }
+}
+
+fn form<T>(hold: &mut Vec<Pending<T>>, batch_size: usize, image_len: usize) -> FormedBatch<T> {
+    let take = hold.len().min(batch_size);
+    let drained: Vec<Pending<T>> = hold.drain(..take).collect();
+    let oldest_wait = drained.iter().map(|p| p.enqueued.elapsed()).max().unwrap_or_default();
+    let mut x = vec![0.0f32; batch_size * image_len];
+    let mut tags = Vec::with_capacity(take);
+    for (i, p) in drained.into_iter().enumerate() {
+        debug_assert_eq!(p.image.len(), image_len);
+        x[i * image_len..(i + 1) * image_len].copy_from_slice(&p.image);
+        tags.push(p.tag);
+    }
+    FormedBatch { x, tags, oldest_wait }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn collect_batches<T: Send + 'static>(
+        cfg: BatcherConfig,
+        image_len: usize,
+        feed: impl FnOnce(mpsc::Sender<Pending<T>>) + Send + 'static,
+    ) -> Vec<FormedBatch<T>> {
+        let (tx, rx) = mpsc::channel();
+        let feeder = std::thread::spawn(move || feed(tx));
+        let mut batches = Vec::new();
+        run_batcher(rx, cfg, image_len, |b| batches.push(b));
+        feeder.join().unwrap();
+        batches
+    }
+
+    #[test]
+    fn full_batches_depart_immediately() {
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
+        let batches = collect_batches(cfg, 2, |tx| {
+            for i in 0..8usize {
+                tx.send(Pending { image: vec![i as f32; 2], enqueued: Instant::now(), tag: i })
+                    .unwrap();
+            }
+        });
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].tags, vec![0, 1, 2, 3]);
+        assert_eq!(batches[1].tags, vec![4, 5, 6, 7]);
+        assert_eq!(&batches[1].x[0..2], &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch_with_padding() {
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) };
+        let batches = collect_batches(cfg, 3, |tx| {
+            tx.send(Pending { image: vec![1.0; 3], enqueued: Instant::now(), tag: 7u8 }).unwrap();
+            // keep the channel open past the linger deadline
+            std::thread::sleep(Duration::from_millis(40));
+        });
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].tags, vec![7]);
+        assert_eq!(batches[0].x.len(), 12);
+        assert_eq!(&batches[0].x[3..], &[0.0; 9]); // zero padding
+    }
+
+    #[test]
+    fn close_flushes_everything() {
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
+        let batches = collect_batches(cfg, 1, |tx| {
+            for i in 0..6u8 {
+                tx.send(Pending { image: vec![0.0], enqueued: Instant::now(), tag: i }).unwrap();
+            }
+        });
+        let total: usize = batches.iter().map(|b| b.tags.len()).sum();
+        assert_eq!(total, 6);
+    }
+}

@@ -1,0 +1,105 @@
+//! The PJRT engine thread.
+//!
+//! PJRT client/executable handles are raw pointers without `Send`, so all
+//! execution happens on one dedicated OS thread that owns the
+//! [`Runtime`](crate::runtime::Runtime) plus the weight bundles.  Other
+//! threads talk to it through an unbounded std channel; replies travel
+//! back over rendezvous channels.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::runtime::{Execution, FloatBundle, PsbBundle, Runtime};
+
+/// A unit of engine work: one padded batch at one precision.
+pub struct EngineJob {
+    /// Sample size; `None` runs the float32 baseline module.
+    pub n: Option<u32>,
+    /// Row-major `[batch, img, img, 3]` input.
+    pub x: Vec<f32>,
+    pub batch: usize,
+    pub seed: u32,
+    pub reply: mpsc::SyncSender<Result<Execution>>,
+}
+
+/// Handle to the engine thread.
+pub struct Engine {
+    tx: mpsc::Sender<EngineJob>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread.  Compiles nothing eagerly; executables are
+    /// compiled on first use and cached (pass `warm` to precompile).
+    pub fn spawn(
+        artifact_dir: std::path::PathBuf,
+        psb: PsbBundle,
+        float: FloatBundle,
+        warm: Vec<(Option<u32>, usize)>,
+    ) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<EngineJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("psb-engine".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&artifact_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut warm_result = Ok(());
+                for (n, b) in warm {
+                    let name = match n {
+                        Some(n) => rt.meta.psb_module(n, b),
+                        None => rt.meta.float_module(b),
+                    };
+                    if let Err(e) = rt.ensure_loaded(&name) {
+                        warm_result = Err(e);
+                        break;
+                    }
+                }
+                let failed = warm_result.is_err();
+                let _ = ready_tx.send(warm_result);
+                if failed {
+                    return;
+                }
+                while let Ok(job) = rx.recv() {
+                    let result = match job.n {
+                        Some(n) => rt.run_psb(n, job.batch, &job.x, job.seed, &psb),
+                        None => rt.run_float(job.batch, &job.x, &float),
+                    };
+                    // receiver may have given up; dropping the reply is fine
+                    let _ = job.reply.send(result);
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Engine { tx, handle: Some(handle) })
+    }
+
+    /// Enqueue a job (non-blocking).
+    pub fn submit(&self, job: EngineJob) -> Result<()> {
+        self.tx.send(job).map_err(|_| anyhow::anyhow!("engine thread has shut down"))
+    }
+
+    /// Convenience: run one batch and wait for the result.
+    pub fn run(&self, n: Option<u32>, x: Vec<f32>, batch: usize, seed: u32) -> Result<Execution> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob { n, x, batch, seed, reply })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped the job"))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Closing the channel ends the engine loop.
+        let (tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

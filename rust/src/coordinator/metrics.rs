@@ -1,0 +1,130 @@
+//! Serving metrics: lock-free counters + a coarse latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two microsecond buckets: [..1us, ..2us, ..4us, ...], 32 of them.
+const BUCKETS: usize = 32;
+
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(u64::MAX >> 20)
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub escalated: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub engine_calls: AtomicU64,
+    pub latency: Histogram,
+    pub stage1_latency: Histogram,
+    pub gated_adds: AtomicU64,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Mean rows per dispatched batch (occupancy diagnostics).
+    pub fn batch_occupancy(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        self.batched_rows.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    pub fn escalation_rate(&self) -> f64 {
+        let c = self.completed.load(Ordering::Relaxed).max(1);
+        self.escalated.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} escalated={:.1}% occupancy={:.2} p50={:?} p99={:?} mean={:?}",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            100.0 * self.escalation_rate(),
+            self.batch_occupancy(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.latency.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for us in [10u64, 20, 40, 80, 1000, 2000, 50_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) >= Duration::from_micros(32_768));
+    }
+
+    #[test]
+    fn mean_is_sane() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn occupancy() {
+        let m = Metrics::default();
+        Metrics::add(&m.batches, 2);
+        Metrics::add(&m.batched_rows, 12);
+        assert!((m.batch_occupancy() - 6.0).abs() < 1e-9);
+    }
+}

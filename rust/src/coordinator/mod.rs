@@ -1,0 +1,36 @@
+//! L3 coordinator: an adaptive-precision inference server built on PSB's
+//! progressive sampling.
+//!
+//! The paper's run-time contribution is that precision is a *runtime
+//! knob*: the same weights serve any sample size.  The coordinator turns
+//! that into a serving policy (Sec. 4.5 lifted to the request level):
+//!
+//! ```text
+//! client ── submit ──► [dynamic batcher] ──► engine(psb @ n_low)
+//!                                               │ entropy of last conv
+//!                            confident ◄────────┤
+//!                                               ▼ uncertain
+//!                      [escalation batcher] ──► engine(psb @ n_high)
+//! ```
+//!
+//! * the **engine** owns the PJRT runtime on a dedicated thread (PJRT
+//!   handles are not `Send`) and executes one compiled artifact per
+//!   `(n, batch)`;
+//! * the **batcher** collects requests up to the artifact batch size with
+//!   a linger timeout and zero-pads partial batches;
+//! * the **scheduler** computes the mean last-conv entropy per request
+//!   and escalates the high-entropy fraction to `n_high` — batch-level
+//!   computational attention with the network itself as the proposal
+//!   mechanism.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::BatcherConfig;
+pub use engine::{Engine, EngineJob};
+pub use metrics::Metrics;
+pub use scheduler::{EscalationPolicy, SchedulerStats};
+pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig};

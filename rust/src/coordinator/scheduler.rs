@@ -1,0 +1,162 @@
+//! Precision scheduling: decide, per request, whether the cheap pass is
+//! enough — the request-level analog of the paper's spatial attention
+//! (Sec. 4.5).
+//!
+//! The signal is the mean pixelwise entropy of the last conv layer (the
+//! quantity the paper thresholds spatially).  Requests whose entropy
+//! exceeds an adaptive threshold escalate to `n_high`.  The threshold is
+//! an exponentially-weighted running mean of observed entropies scaled by
+//! `threshold_scale`, so the escalated fraction self-calibrates to the
+//! traffic (the paper's ImageNet ratio was ≈35% interesting).
+
+/// Policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EscalationPolicy {
+    pub n_low: u32,
+    pub n_high: u32,
+    /// Escalate when `entropy > ewma * threshold_scale`.
+    pub threshold_scale: f32,
+    /// EWMA smoothing factor for the entropy running mean.
+    pub ewma_alpha: f32,
+    /// If set, disable escalation entirely (flat serving baseline).
+    pub disabled: bool,
+}
+
+impl Default for EscalationPolicy {
+    fn default() -> Self {
+        EscalationPolicy {
+            n_low: 8,
+            n_high: 16,
+            threshold_scale: 1.0,
+            ewma_alpha: 0.05,
+            disabled: false,
+        }
+    }
+}
+
+/// Mutable scheduler state (owned by the server task).
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: EscalationPolicy,
+    ewma: Option<f32>,
+    pub stats: SchedulerStats,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SchedulerStats {
+    pub decided: u64,
+    pub escalated: u64,
+}
+
+impl SchedulerStats {
+    pub fn escalation_rate(&self) -> f64 {
+        self.escalated as f64 / self.decided.max(1) as f64
+    }
+}
+
+impl Scheduler {
+    pub fn new(policy: EscalationPolicy) -> Scheduler {
+        Scheduler { policy, ewma: None, stats: SchedulerStats::default() }
+    }
+
+    pub fn policy(&self) -> EscalationPolicy {
+        self.policy
+    }
+
+    /// Mean channel entropy of one request's `[fh, fw, fc]` feature map.
+    pub fn request_entropy(feat: &[f32], fc: usize) -> f32 {
+        let mut total = 0.0f32;
+        let pixels = feat.len() / fc;
+        for row in feat.chunks(fc) {
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &v in row {
+                z += (v - max).exp();
+            }
+            let logz = z.ln() + max;
+            for &v in row {
+                let logp = v - logz;
+                total -= logp.exp() * logp;
+            }
+        }
+        total / pixels as f32
+    }
+
+    /// Decide whether to escalate; updates the adaptive threshold.
+    pub fn decide(&mut self, entropy: f32) -> bool {
+        self.stats.decided += 1;
+        let ewma = match self.ewma {
+            None => {
+                self.ewma = Some(entropy);
+                entropy
+            }
+            Some(prev) => {
+                let next = prev + self.policy.ewma_alpha * (entropy - prev);
+                self.ewma = Some(next);
+                next
+            }
+        };
+        if self.policy.disabled {
+            return false;
+        }
+        let escalate = entropy > ewma * self.policy.threshold_scale;
+        if escalate {
+            self.stats.escalated += 1;
+        }
+        escalate
+    }
+
+    /// Current adaptive threshold (diagnostics).
+    pub fn threshold(&self) -> Option<f32> {
+        self.ewma.map(|e| e * self.policy.threshold_scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform_vs_peaked() {
+        let flat = vec![0.0f32; 8]; // 2 pixels × 4 channels
+        let h = Scheduler::request_entropy(&flat, 4);
+        assert!((h - (4.0f32).ln()).abs() < 1e-4);
+        let peaked = vec![50.0, 0.0, 0.0, 0.0, 50.0, 0.0, 0.0, 0.0];
+        assert!(Scheduler::request_entropy(&peaked, 4) < 0.01);
+    }
+
+    #[test]
+    fn adaptive_threshold_splits_stream() {
+        let mut s = Scheduler::new(EscalationPolicy {
+            threshold_scale: 1.0,
+            ewma_alpha: 0.2,
+            ..Default::default()
+        });
+        // alternating low/high entropies: the high ones should escalate
+        let mut high_escalations = 0;
+        let mut low_escalations = 0;
+        for i in 0..200 {
+            let (e, high) = if i % 2 == 0 { (0.5f32, false) } else { (2.0, true) };
+            let esc = s.decide(e);
+            if high && esc {
+                high_escalations += 1;
+            }
+            if !high && esc {
+                low_escalations += 1;
+            }
+        }
+        assert!(high_escalations > 90, "{high_escalations}");
+        assert_eq!(low_escalations, 0);
+        let rate = s.stats.escalation_rate();
+        assert!(rate > 0.4 && rate < 0.6, "{rate}");
+    }
+
+    #[test]
+    fn disabled_policy_never_escalates() {
+        let mut s = Scheduler::new(EscalationPolicy { disabled: true, ..Default::default() });
+        for _ in 0..50 {
+            assert!(!s.decide(100.0));
+        }
+        assert_eq!(s.stats.escalated, 0);
+    }
+}

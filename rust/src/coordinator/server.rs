@@ -1,0 +1,316 @@
+//! The coordinator server: wires batcher → engine → scheduler → (maybe)
+//! escalation batcher → reply.  Plain threads + channels (the offline
+//! build has no async runtime); the engine thread serializes PJRT work,
+//! stage-1 and stage-2 batchers each run on their own thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{run_batcher, BatcherConfig, FormedBatch, Pending};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
+use crate::runtime::{ArtifactMeta, FloatBundle, PsbBundle};
+use crate::sim::layers::softmax_rows;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub batcher: BatcherConfig,
+    pub policy: EscalationPolicy,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig::default(),
+            policy: EscalationPolicy::default(),
+            seed: 7,
+        }
+    }
+}
+
+/// Final answer for one request.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub class: usize,
+    /// softmax probability of the argmax class
+    pub confidence: f32,
+    pub escalated: bool,
+    /// sample size that produced the final answer
+    pub n_used: u32,
+    pub latency: Duration,
+    /// mean last-conv entropy observed at stage 1
+    pub entropy: f32,
+}
+
+struct RequestCtx {
+    reply: SyncSender<ClassifyResponse>,
+    start: Instant,
+}
+
+/// Handle to a running coordinator.  Threads shut down when the handle
+/// drops (channels close, batchers flush, engine drains).
+pub struct Coordinator {
+    stage1_tx: Sender<Pending<RequestCtx>>,
+    pub metrics: Arc<Metrics>,
+    scheduler: Arc<Mutex<Scheduler>>,
+    pub image_len: usize,
+    pub num_classes: usize,
+    /// MACs per image (from the artifact layer geometry)
+    pub macs_per_image: u64,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the engine thread + the two batcher threads.
+    pub fn start(cfg: CoordinatorConfig, psb: PsbBundle, float: FloatBundle) -> Result<Coordinator> {
+        let meta = ArtifactMeta::load(&cfg.artifact_dir)?;
+        let image_len = meta.image * meta.image * 3;
+        let macs_per_image = macs_per_image(&meta);
+        let batch = cfg.batcher.batch_size;
+        let engine = Arc::new(Engine::spawn(
+            cfg.artifact_dir.clone(),
+            psb,
+            float,
+            vec![(Some(cfg.policy.n_low), batch), (Some(cfg.policy.n_high), batch)],
+        )?);
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Arc::new(Mutex::new(Scheduler::new(cfg.policy)));
+        let seed_ctr = Arc::new(AtomicU64::new(cfg.seed));
+
+        let (stage1_tx, stage1_rx) = mpsc::channel::<Pending<RequestCtx>>();
+        let (stage2_tx, stage2_rx) = mpsc::channel::<Pending<(RequestCtx, f32)>>();
+
+        let mut threads = Vec::new();
+
+        // Stage 2 thread: escalated requests at n_high.
+        {
+            let ctx = StageCtx {
+                engine: engine.clone(),
+                metrics: metrics.clone(),
+                policy: cfg.policy,
+                seed_ctr: seed_ctr.clone(),
+                nc: meta.num_classes,
+                macs: macs_per_image,
+                image_len,
+            };
+            let bcfg = cfg.batcher;
+            threads.push(
+                std::thread::Builder::new().name("psb-stage2".into()).spawn(move || {
+                    run_batcher(stage2_rx, bcfg, ctx.image_len, |batch| {
+                        handle_stage2(&ctx, batch);
+                    });
+                })?,
+            );
+        }
+
+        // Stage 1 thread: every request at n_low, then decide.
+        {
+            let ctx = StageCtx {
+                engine,
+                metrics: metrics.clone(),
+                policy: cfg.policy,
+                seed_ctr,
+                nc: meta.num_classes,
+                macs: macs_per_image,
+                image_len,
+            };
+            let scheduler = scheduler.clone();
+            let bcfg = cfg.batcher;
+            threads.push(
+                std::thread::Builder::new().name("psb-stage1".into()).spawn(move || {
+                    run_batcher(stage1_rx, bcfg, ctx.image_len, |batch| {
+                        handle_stage1(&ctx, &scheduler, &stage2_tx, batch);
+                    });
+                })?,
+            );
+        }
+
+        Ok(Coordinator {
+            stage1_tx,
+            metrics,
+            scheduler,
+            image_len,
+            num_classes: meta.num_classes,
+            macs_per_image,
+            threads,
+        })
+    }
+
+    /// Submit one image and block until its classification arrives.
+    pub fn classify(&self, image: Vec<f32>) -> Result<ClassifyResponse> {
+        self.submit(image)?.recv().map_err(|_| anyhow::anyhow!("request dropped"))
+    }
+
+    /// Submit one image; returns the channel the response will land on
+    /// (lets callers pipeline many in-flight requests).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<ClassifyResponse>> {
+        anyhow::ensure!(image.len() == self.image_len, "image must be {} floats", self.image_len);
+        Metrics::inc(&self.metrics.requests);
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.stage1_tx
+            .send(Pending {
+                image,
+                enqueued: Instant::now(),
+                tag: RequestCtx { reply, start: Instant::now() },
+            })
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
+        Ok(rx)
+    }
+
+    pub fn scheduler_stats(&self) -> SchedulerStats {
+        self.scheduler.lock().unwrap().stats
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Close stage-1; its thread flushes into stage-2 and exits,
+        // dropping the stage-2 sender, which unwinds stage-2 in turn.
+        let (tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.stage1_tx, tx));
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// MACs of one serving-CNN inference, derived from the artifact geometry
+/// (conv pyramid strides 1,2,2 + the dense head): the cost currency the
+/// attention experiment reports (`gated_adds = macs × n`).
+fn macs_per_image(meta: &ArtifactMeta) -> u64 {
+    let mut pixels = meta.image * meta.image;
+    let mut total = 0u64;
+    for (i, ls) in meta.layer_shapes.iter().enumerate() {
+        let is_dense = i + 1 == meta.layer_shapes.len();
+        if is_dense {
+            total += (ls.weight[0] * ls.weight[1]) as u64;
+        } else {
+            if i > 0 {
+                pixels /= 4; // stride-2 conv halves each spatial dim
+            }
+            total += (pixels * ls.weight[0] * ls.weight[1]) as u64;
+        }
+    }
+    total
+}
+
+/// Everything a stage handler needs (shared across batches).
+struct StageCtx {
+    engine: Arc<Engine>,
+    metrics: Arc<Metrics>,
+    policy: EscalationPolicy,
+    seed_ctr: Arc<AtomicU64>,
+    nc: usize,
+    macs: u64,
+    image_len: usize,
+}
+
+fn handle_stage1(
+    ctx: &StageCtx,
+    scheduler: &Mutex<Scheduler>,
+    stage2: &Sender<Pending<(RequestCtx, f32)>>,
+    batch: FormedBatch<RequestCtx>,
+) {
+    let rows = batch.tags.len();
+    let total_rows = batch.x.len() / ctx.image_len;
+    Metrics::inc(&ctx.metrics.batches);
+    Metrics::add(&ctx.metrics.batched_rows, rows as u64);
+    Metrics::inc(&ctx.metrics.engine_calls);
+    Metrics::add(&ctx.metrics.gated_adds, ctx.macs * ctx.policy.n_low as u64 * rows as u64);
+    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32;
+    let exec = match ctx.engine.run(Some(ctx.policy.n_low), batch.x.clone(), total_rows, seed) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("stage1 engine error: {err:#}");
+            return; // replies drop; callers observe closed channels
+        }
+    };
+    let [_, fh, fw, fc] = exec.feat_shape;
+    let feat_len = fh * fw * fc;
+    let probs = softmax_rows(&exec.logits, ctx.nc);
+    for (row, req) in batch.tags.into_iter().enumerate() {
+        let feat = &exec.feat[row * feat_len..(row + 1) * feat_len];
+        let entropy = Scheduler::request_entropy(feat, fc);
+        let escalate = scheduler.lock().unwrap().decide(entropy);
+        if escalate {
+            let image = batch.x[row * ctx.image_len..(row + 1) * ctx.image_len].to_vec();
+            Metrics::inc(&ctx.metrics.escalated);
+            ctx.metrics.stage1_latency.record(req.start.elapsed());
+            let _ = stage2.send(Pending {
+                image,
+                enqueued: Instant::now(),
+                tag: (req, entropy),
+            });
+        } else {
+            let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
+            let (class, conf) = argmax_conf(p);
+            let latency = req.start.elapsed();
+            ctx.metrics.latency.record(latency);
+            Metrics::inc(&ctx.metrics.completed);
+            let _ = req.reply.send(ClassifyResponse {
+                class,
+                confidence: conf,
+                escalated: false,
+                n_used: ctx.policy.n_low,
+                latency,
+                entropy,
+            });
+        }
+    }
+}
+
+fn handle_stage2(ctx: &StageCtx, batch: FormedBatch<(RequestCtx, f32)>) {
+    let total_rows = batch.x.len() / ctx.image_len;
+    Metrics::inc(&ctx.metrics.batches);
+    Metrics::add(&ctx.metrics.batched_rows, batch.tags.len() as u64);
+    Metrics::inc(&ctx.metrics.engine_calls);
+    // progressive accounting: the n_low samples from stage 1 are reusable,
+    // so escalation only costs the incremental (n_high − n_low) samples.
+    Metrics::add(
+        &ctx.metrics.gated_adds,
+        ctx.macs * (ctx.policy.n_high - ctx.policy.n_low) as u64 * batch.tags.len() as u64,
+    );
+    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32;
+    let exec = match ctx.engine.run(Some(ctx.policy.n_high), batch.x, total_rows, seed) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("stage2 engine error: {err:#}");
+            return;
+        }
+    };
+    let probs = softmax_rows(&exec.logits, ctx.nc);
+    for (row, (req, entropy)) in batch.tags.into_iter().enumerate() {
+        let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
+        let (class, conf) = argmax_conf(p);
+        let latency = req.start.elapsed();
+        ctx.metrics.latency.record(latency);
+        Metrics::inc(&ctx.metrics.completed);
+        let _ = req.reply.send(ClassifyResponse {
+            class,
+            confidence: conf,
+            escalated: true,
+            n_used: ctx.policy.n_high,
+            latency,
+            entropy,
+        });
+    }
+}
+
+fn argmax_conf(p: &[f32]) -> (usize, f32) {
+    let mut best = 0usize;
+    for (i, v) in p.iter().enumerate() {
+        if *v > p[best] {
+            best = i;
+        }
+    }
+    (best, p[best])
+}

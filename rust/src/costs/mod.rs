@@ -1,0 +1,168 @@
+//! Hardware cost model — supplementary Table 2 (45 nm process, Horowitz /
+//! Dally numbers) plus per-network accounting.
+//!
+//! PSB replaces each fp32 multiply by `n` gated int16 additions, one
+//! `k_p`-bit comparator draw per weight sample, and a barrel shift; the
+//! experiment `table2` integrates these unit costs over a whole network
+//! inference and compares against the fp32 and int8 baselines.
+
+/// One arithmetic unit's 45 nm silicon cost (supp. Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Chip area in µm².
+    pub area_um2: f64,
+    /// Energy per operation in pJ.
+    pub energy_pj: f64,
+}
+
+/// The full unit-cost table (verbatim from the paper's supplementary).
+pub mod table2 {
+    use super::OpCost;
+
+    pub const INT8_ADD: OpCost = OpCost { area_um2: 36.0, energy_pj: 0.03 };
+    pub const INT16_ADD: OpCost = OpCost { area_um2: 67.0, energy_pj: 0.06 };
+    pub const INT32_ADD: OpCost = OpCost { area_um2: 137.0, energy_pj: 0.10 };
+    pub const INT8_MUL: OpCost = OpCost { area_um2: 282.0, energy_pj: 0.20 };
+    pub const INT32_MUL: OpCost = OpCost { area_um2: 3495.0, energy_pj: 1.10 };
+    pub const FP16_ADD: OpCost = OpCost { area_um2: 1360.0, energy_pj: 0.40 };
+    pub const FP16_MUL: OpCost = OpCost { area_um2: 1640.0, energy_pj: 1.10 };
+    pub const FP32_ADD: OpCost = OpCost { area_um2: 4184.0, energy_pj: 0.90 };
+    pub const FP32_MUL: OpCost = OpCost { area_um2: 7700.0, energy_pj: 3.70 };
+
+    /// All rows with names, in the paper's order (for the table printer).
+    pub const ROWS: [(&str, OpCost); 9] = [
+        ("int8 add", INT8_ADD),
+        ("int16 add", INT16_ADD),
+        ("int32 add", INT32_ADD),
+        ("int8 mul", INT8_MUL),
+        ("int32 mul", INT32_MUL),
+        ("fp16 add", FP16_ADD),
+        ("fp16 mul", FP16_MUL),
+        ("fp32 add", FP32_ADD),
+        ("fp32 mul", FP32_MUL),
+    ];
+}
+
+/// Running tally of hardware operations charged by the simulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostCounter {
+    /// Gated int16 shift-adds inside capacitor accumulators
+    /// (`macs × n_samples` — the PSB currency, Sec. 4.5's "33%" is
+    /// measured in these).
+    pub gated_adds: u64,
+    /// Random bits drawn (one comparator evaluation each).
+    pub random_bits: u64,
+    /// Weight-level MACs covered (for baseline comparison: each would be
+    /// one fp32 mul + fp32 add in the float network).
+    pub macs: u64,
+    /// fp32 operations executed on un-binarized paths (e.g. softmax).
+    pub float_ops: u64,
+}
+
+impl CostCounter {
+    /// Charge a capacitor contraction of `macs` weight applications at
+    /// sample size `n`.
+    #[inline]
+    pub fn charge_capacitor(&mut self, macs: u64, n: u32) {
+        self.macs += macs;
+        self.gated_adds += macs * n as u64;
+        self.random_bits += macs * n as u64;
+    }
+
+    #[inline]
+    pub fn charge_float(&mut self, ops: u64) {
+        self.float_ops += ops;
+    }
+
+    pub fn merge(&mut self, other: &CostCounter) {
+        self.gated_adds += other.gated_adds;
+        self.random_bits += other.random_bits;
+        self.macs += other.macs;
+        self.float_ops += other.float_ops;
+    }
+
+    /// PSB inference energy (pJ): gated adds are int16 additions; random
+    /// bits cost one int8-add-equivalent comparator each (supp. §1.1 —
+    /// a `k_p`-bit comparator "corresponds to an accordingly sized integer
+    /// subtraction unit").
+    pub fn psb_energy_pj(&self) -> f64 {
+        self.gated_adds as f64 * table2::INT16_ADD.energy_pj
+            + self.random_bits as f64 * table2::INT8_ADD.energy_pj
+            + self.float_ops as f64 * table2::FP32_MUL.energy_pj
+    }
+
+    /// The float32 baseline for the same computation: one fp32 mul + one
+    /// fp32 add per MAC.
+    pub fn fp32_energy_pj(&self) -> f64 {
+        self.macs as f64 * (table2::FP32_MUL.energy_pj + table2::FP32_ADD.energy_pj)
+            + self.float_ops as f64 * table2::FP32_MUL.energy_pj
+    }
+
+    /// int8-quantized baseline: int8 mul + int32 add per MAC (the [31]
+    /// integer-arithmetic-only scheme the paper compares against).
+    pub fn int8_energy_pj(&self) -> f64 {
+        self.macs as f64 * (table2::INT8_MUL.energy_pj + table2::INT32_ADD.energy_pj)
+            + self.float_ops as f64 * table2::FP32_MUL.energy_pj
+    }
+
+    /// Energy advantage of PSB over fp32 for the charged workload.
+    pub fn speedup_vs_fp32(&self) -> f64 {
+        self.fp32_energy_pj() / self.psb_energy_pj().max(1e-12)
+    }
+}
+
+/// Break-even sample size: largest n for which a PSB MAC is cheaper than
+/// the given per-MAC baseline.
+pub fn break_even_n(baseline_per_mac_pj: f64) -> u32 {
+    let per_sample = table2::INT16_ADD.energy_pj + table2::INT8_ADD.energy_pj;
+    (baseline_per_mac_pj / per_sample).floor() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_paper_ratios() {
+        // "chip area, relative to fp32 mul" column spot checks
+        let rel = |c: OpCost| c.area_um2 / table2::FP32_MUL.area_um2;
+        assert!((rel(table2::INT8_ADD) - 0.005).abs() < 0.001);
+        assert!((rel(table2::INT32_MUL) - 0.45).abs() < 0.01);
+        assert!((rel(table2::FP32_ADD) - 0.54).abs() < 0.01);
+    }
+
+    #[test]
+    fn capacitor_charge_accounting() {
+        let mut c = CostCounter::default();
+        c.charge_capacitor(100, 16);
+        assert_eq!(c.macs, 100);
+        assert_eq!(c.gated_adds, 1600);
+        assert_eq!(c.random_bits, 1600);
+    }
+
+    #[test]
+    fn psb_beats_fp32_at_moderate_n() {
+        // fp32 MAC = 3.7 + 0.9 = 4.6 pJ; PSB sample = 0.06 + 0.03 = 0.09 pJ
+        // -> PSB wins for n <= 51
+        assert_eq!(break_even_n(4.6), 51);
+        let mut c = CostCounter::default();
+        c.charge_capacitor(1_000, 16);
+        assert!(c.speedup_vs_fp32() > 3.0, "speedup {}", c.speedup_vs_fp32());
+        let mut c64 = CostCounter::default();
+        c64.charge_capacitor(1_000, 64);
+        assert!(c64.speedup_vs_fp32() < c.speedup_vs_fp32());
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = CostCounter::default();
+        a.charge_capacitor(10, 8);
+        let mut b = CostCounter::default();
+        b.charge_capacitor(5, 4);
+        b.charge_float(3);
+        a.merge(&b);
+        assert_eq!(a.macs, 15);
+        assert_eq!(a.gated_adds, 100);
+        assert_eq!(a.float_ops, 3);
+    }
+}

@@ -1,0 +1,246 @@
+//! SynthImages — the procedural image-classification dataset standing in
+//! for Cifar-10 / ImageNet (DESIGN.md §3, §5).
+//!
+//! Ten geometric/texture classes rendered at random position, scale and
+//! orientation over textured backgrounds, with color jitter and Gaussian
+//! noise.  Deterministic from a seed and procedurally infinite.  The
+//! classes are mutually confusable enough that small CNNs land well below
+//! 100% — leaving the head-room quantization-degradation plots need.
+
+use crate::rng::{Rng, Xorshift128Plus};
+use crate::sim::tensor::Tensor;
+
+pub const NUM_CLASSES: usize = 10;
+
+/// Class names (index = label).
+pub const CLASS_NAMES: [&str; NUM_CLASSES] = [
+    "circle", "square", "triangle", "cross", "ring", "stripes-h", "stripes-v", "checker",
+    "dots", "blob",
+];
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub train: usize,
+    pub test: usize,
+    /// Image side length (images are size × size × 3).
+    pub size: usize,
+    pub seed: u64,
+    /// Gaussian pixel-noise sigma.
+    pub noise: f32,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig { train: 4096, test: 1024, size: 32, seed: 1234, noise: 0.06 }
+    }
+}
+
+/// An in-memory train/test split.
+pub struct Dataset {
+    pub train_images: Tensor,
+    pub train_labels: Vec<usize>,
+    pub test_images: Tensor,
+    pub test_labels: Vec<usize>,
+    pub size: usize,
+}
+
+impl Dataset {
+    /// Generate the dataset deterministically from the config seed.
+    pub fn synth(cfg: &SynthConfig) -> Dataset {
+        let mut rng = Xorshift128Plus::seed_from(cfg.seed);
+        let (train_images, train_labels) = render_set(cfg.train, cfg, &mut rng);
+        let (test_images, test_labels) = render_set(cfg.test, cfg, &mut rng);
+        Dataset { train_images, train_labels, test_images, test_labels, size: cfg.size }
+    }
+
+    pub fn gather_train(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        gather(&self.train_images, &self.train_labels, idx, self.size)
+    }
+
+    pub fn gather_test(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        gather(&self.test_images, &self.test_labels, idx, self.size)
+    }
+}
+
+fn gather(images: &Tensor, labels: &[usize], idx: &[usize], size: usize) -> (Tensor, Vec<usize>) {
+    let px = size * size * 3;
+    let mut data = Vec::with_capacity(idx.len() * px);
+    let mut ls = Vec::with_capacity(idx.len());
+    for &i in idx {
+        data.extend_from_slice(&images.data[i * px..(i + 1) * px]);
+        ls.push(labels[i]);
+    }
+    (Tensor::from_vec(data, &[idx.len(), size, size, 3]), ls)
+}
+
+fn render_set(n: usize, cfg: &SynthConfig, rng: &mut impl Rng) -> (Tensor, Vec<usize>) {
+    let s = cfg.size;
+    let mut images = Vec::with_capacity(n * s * s * 3);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = i % NUM_CLASSES; // balanced classes
+        let img = render_image(label, s, cfg.noise, rng);
+        images.extend_from_slice(&img);
+        labels.push(label);
+    }
+    (Tensor::from_vec(images, &[n, s, s, 3]), labels)
+}
+
+/// Render one image of `label` into an `s*s*3` buffer in [0, 1].
+pub fn render_image(label: usize, s: usize, noise: f32, rng: &mut impl Rng) -> Vec<f32> {
+    let sf = s as f32;
+    // textured background: directional gradient in a random dark color
+    let bg: [f32; 3] = [0.15 + 0.25 * rng.uniform(), 0.15 + 0.25 * rng.uniform(), 0.15 + 0.25 * rng.uniform()];
+    let gdir = rng.uniform() * std::f32::consts::TAU;
+    let (gx, gy) = (gdir.cos(), gdir.sin());
+    // foreground color: bright-ish, jittered
+    let fg: [f32; 3] = [0.55 + 0.45 * rng.uniform(), 0.55 + 0.45 * rng.uniform(), 0.55 + 0.45 * rng.uniform()];
+    // shape placement
+    let cx = sf * (0.35 + 0.3 * rng.uniform());
+    let cy = sf * (0.35 + 0.3 * rng.uniform());
+    let radius = sf * (0.18 + 0.14 * rng.uniform());
+    let angle = rng.uniform() * std::f32::consts::TAU;
+    let (ca, sa) = (angle.cos(), angle.sin());
+    let freq = 2.0 + (rng.below(3)) as f32; // stripe/checker frequency
+    // pre-drawn dot cluster
+    let dots: Vec<(f32, f32)> = (0..6)
+        .map(|_| {
+            (cx + radius * 1.4 * (rng.uniform() - 0.5) * 2.0, cy + radius * 1.4 * (rng.uniform() - 0.5) * 2.0)
+        })
+        .collect();
+    let mut img = vec![0.0f32; s * s * 3];
+    for y in 0..s {
+        for x in 0..s {
+            let xf = x as f32 + 0.5;
+            let yf = y as f32 + 0.5;
+            // rotated local coords
+            let dx = xf - cx;
+            let dy = yf - cy;
+            let rx = ca * dx + sa * dy;
+            let ry = -sa * dx + ca * dy;
+            let inside = match label {
+                0 => (dx * dx + dy * dy).sqrt() < radius, // circle
+                1 => rx.abs() < radius && ry.abs() < radius, // square
+                2 => {
+                    // triangle (upward in rotated frame)
+                    let yy = ry / radius;
+                    let xx = rx / radius;
+                    yy > -0.8 && yy < 0.8 && xx.abs() < (0.8 - yy) * 0.62
+                }
+                3 => {
+                    // cross
+                    (rx.abs() < radius * 0.33 && ry.abs() < radius)
+                        || (ry.abs() < radius * 0.33 && rx.abs() < radius)
+                }
+                4 => {
+                    // ring
+                    let d = (dx * dx + dy * dy).sqrt();
+                    d < radius && d > radius * 0.55
+                }
+                5 => ((yf * freq / sf) * std::f32::consts::TAU).sin() > 0.25, // stripes-h
+                6 => ((xf * freq / sf) * std::f32::consts::TAU).sin() > 0.25, // stripes-v
+                7 => {
+                    // checker
+                    let q = ((xf * freq / sf).floor() + (yf * freq / sf).floor()) as i32;
+                    q % 2 == 0
+                }
+                8 => dots.iter().any(|&(px, py)| {
+                    let d2 = (xf - px).powi(2) + (yf - py).powi(2);
+                    d2 < (radius * 0.3).powi(2)
+                }),
+                9 => {
+                    // soft blob: smooth radial falloff with lobes
+                    let d = (dx * dx + dy * dy).sqrt() / radius;
+                    let lobe = 1.0 + 0.35 * (3.0 * (dy.atan2(dx) + angle)).sin();
+                    d < lobe * 0.9
+                }
+                _ => unreachable!(),
+            };
+            let g = 0.5 + 0.5 * ((xf * gx + yf * gy) / sf);
+            let base = (y * s + x) * 3;
+            for c in 0..3 {
+                let v = if inside { fg[c] } else { bg[c] * g };
+                img[base + c] = (v + noise * gaussian(rng)).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+fn gaussian(rng: &mut impl Rng) -> f32 {
+    let u1 = rng.uniform().max(1e-7);
+    let u2 = rng.uniform();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let cfg = SynthConfig { train: 20, test: 10, ..Default::default() };
+        let a = Dataset::synth(&cfg);
+        let b = Dataset::synth(&cfg);
+        assert_eq!(a.train_images.data, b.train_images.data);
+        assert_eq!(a.test_labels, b.test_labels);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let cfg = SynthConfig { train: 30, test: 20, size: 16, ..Default::default() };
+        let d = Dataset::synth(&cfg);
+        assert_eq!(d.train_images.shape, vec![30, 16, 16, 3]);
+        assert_eq!(d.test_images.shape, vec![20, 16, 16, 3]);
+        assert!(d.train_images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let cfg = SynthConfig { train: 100, test: 50, ..Default::default() };
+        let d = Dataset::synth(&cfg);
+        for class in 0..NUM_CLASSES {
+            let count = d.train_labels.iter().filter(|&&l| l == class).count();
+            assert_eq!(count, 10);
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean-image distance between two classes exceeds within-class
+        // distance — a sanity floor for learnability
+        let cfg = SynthConfig { train: 200, test: 10, noise: 0.02, ..Default::default() };
+        let d = Dataset::synth(&cfg);
+        let px = 32 * 32 * 3;
+        let mean_of = |class: usize| -> Vec<f32> {
+            let mut m = vec![0.0f32; px];
+            let mut cnt = 0;
+            for (i, &l) in d.train_labels.iter().enumerate() {
+                if l == class {
+                    for (mm, v) in m.iter_mut().zip(&d.train_images.data[i * px..(i + 1) * px]) {
+                        *mm += v;
+                    }
+                    cnt += 1;
+                }
+            }
+            m.iter_mut().for_each(|v| *v /= cnt as f32);
+            m
+        };
+        let m5 = mean_of(5); // stripes-h
+        let m6 = mean_of(6); // stripes-v
+        let dist: f32 = m5.iter().zip(&m6).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(dist > 1.0, "stripes-h vs stripes-v too similar: {dist}");
+    }
+
+    #[test]
+    fn gather_roundtrip() {
+        let cfg = SynthConfig { train: 20, test: 10, size: 8, ..Default::default() };
+        let d = Dataset::synth(&cfg);
+        let (x, l) = d.gather_train(&[3, 7]);
+        assert_eq!(x.shape, vec![2, 8, 8, 3]);
+        assert_eq!(l, vec![d.train_labels[3], d.train_labels[7]]);
+        let px = 8 * 8 * 3;
+        assert_eq!(&x.data[0..px], &d.train_images.data[3 * px..4 * px]);
+    }
+}

@@ -1,0 +1,107 @@
+//! The headline attention claim (Sec. 4.5): two-stage psb8/16 inference
+//! costs ~33% less than flat psb16 at comparable accuracy, and psb16/32
+//! reaches near-psb32 accuracy at ~33% *more* than psb16 (i.e. far below
+//! flat psb32).
+//!
+//! Also sweeps the layer-wise precision alternative the paper examined
+//! (and found less promising than spatial adaption).
+
+use anyhow::Result;
+
+use crate::attention::{adaptive_forward_with, Threshold};
+use crate::experiments::table1::evaluate_attention;
+use crate::sim::layers::argmax_rows;
+use crate::experiments::{train_model, ExpConfig};
+use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::sim::train::evaluate_psb;
+
+pub fn run(cfg: &ExpConfig) -> Result<()> {
+    let data = cfg.dataset();
+    let (net, _) = train_model("resnet_mini", &data, cfg);
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+
+    println!("Attention headline: spatial two-stage vs flat sampling");
+    let mut rows = Vec::new();
+    let mut flat = std::collections::HashMap::new();
+    for n in [8u32, 16, 32] {
+        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), cfg.seed);
+        println!("  flat psb{n:<2}: acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
+        flat.insert(n, (acc, costs.gated_adds));
+        rows.push(format!("flat,psb{n},{acc:.4},{}", costs.gated_adds));
+    }
+    for (lo, hi) in [(8u32, 16u32), (16, 32)] {
+        let (acc, costs) = evaluate_attention(&psb, &data, lo, hi, cfg.seed);
+        let base = flat[&hi].1 as f64;
+        let vs_low_flat = costs.gated_adds as f64 / flat[&lo].1 as f64;
+        let saving = 1.0 - costs.gated_adds as f64 / base;
+        println!(
+            "  attention psb{lo}/{hi}: acc {:.2}%  gated adds {}  ({:.0}% below flat psb{hi}, {:.2}x flat psb{lo})",
+            acc * 100.0,
+            costs.gated_adds,
+            saving * 100.0,
+            vs_low_flat
+        );
+        rows.push(format!("attention,psb{lo}/{hi},{acc:.4},{}", costs.gated_adds));
+    }
+
+    // quantile threshold: dial the interesting fraction to the paper's ~35%
+    {
+        let (lo, hi) = (8u32, 16u32);
+        let n_imgs = data.test_images.shape[0];
+        let (mut correct, mut adds, mut frac, mut batches) = (0usize, 0u64, 0.0f64, 0usize);
+        for start in (0..n_imgs).step_by(64) {
+            let idx: Vec<usize> = (start..(start + 64).min(n_imgs)).collect();
+            let (x, labels) = data.gather_test(&idx);
+            let out = adaptive_forward_with(
+                &psb, &x, lo, hi, cfg.seed.wrapping_add(start as u64), Threshold::Quantile(0.65),
+            );
+            let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
+            correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+            adds += out.costs.gated_adds;
+            frac += out.interesting_fraction as f64;
+            batches += 1;
+        }
+        let acc = correct as f32 / n_imgs as f32;
+        let saving = 1.0 - adds as f64 / flat[&hi].1 as f64;
+        println!(
+            "  attention psb{lo}/{hi} @q65: acc {:.2}%  gated adds {adds}  ({:.0}% below flat psb{hi}; interesting {:.2} — the paper's 35% / -33% operating point)",
+            acc * 100.0,
+            saving * 100.0,
+            frac / batches as f64
+        );
+        rows.push(format!("attention_q65,psb{lo}/{hi},{acc:.4},{adds}"));
+    }
+
+    // layer-wise adaption: front-loaded vs back-loaded sample budgets
+    println!("\nLayer-wise adaption (same mean budget as flat psb16):");
+    let caps = psb.num_capacitors;
+    let schedules: Vec<(&str, Vec<u32>)> = vec![
+        ("uniform16", vec![16; caps]),
+        ("front-heavy", ramp(caps, 32, 8)),
+        ("back-heavy", ramp(caps, 8, 32)),
+    ];
+    for (name, sched) in schedules {
+        let (acc, costs) =
+            evaluate_psb(&psb, &data, &Precision::PerLayer(sched.clone()), cfg.seed);
+        println!("  {name:<12} acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
+        rows.push(format!("layerwise,{name},{acc:.4},{}", costs.gated_adds));
+    }
+    cfg.write_csv("attn_headline.csv", "mode,system,top1,gated_adds", &rows)?;
+    println!(
+        "\nexpected shape: psb8/16 lands within a few points of flat psb16 at ~2/3 the cost\n\
+         (the paper's 33% saving); psb16/32 approaches flat psb32 well below its cost."
+    );
+    Ok(())
+}
+
+/// Geometric ramp from `a` to `b` over `k` layers (rounded to powers of 2).
+fn ramp(k: usize, a: u32, b: u32) -> Vec<u32> {
+    (0..k)
+        .map(|i| {
+            let t = i as f32 / (k.max(2) - 1) as f32;
+            let v = (a as f32).ln() * (1.0 - t) + (b as f32).ln() * t;
+            let n = v.exp().round() as u32;
+            n.next_power_of_two().max(1)
+        })
+        .collect()
+}

@@ -1,0 +1,79 @@
+//! Figure 1 (b–d): the PSB number system's exponent staircase, variance
+//! and relative error, empirically vs. the analytic bounds
+//! `Var(w̄_n) ≤ w²/(8n)` (Eq. 10) and `σ/|E| ≤ 1/√(8n)` (Eq. 11),
+//! plus the RNG ablation (xorshift / LFSR / Philox — supp. §1.1 claims
+//! the generator does not matter).
+
+use anyhow::Result;
+
+use crate::experiments::ExpConfig;
+use crate::num::PsbWeight;
+use crate::rng::{AnyRng, RngKind};
+
+pub fn run(cfg: &ExpConfig) -> Result<()> {
+    let trials: usize = if cfg.quick { 20_000 } else { 100_000 };
+    let ws: Vec<f32> = (0..=80)
+        .map(|i| 2.0f32.powf(-4.0 + 8.0 * i as f32 / 80.0))
+        .collect();
+    let ns = [1u32, 4, 16, 64];
+
+    println!("Figure 1: PSB number-system statistics ({trials} trials/point)");
+    println!("{:>10} {:>4} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "w", "e", "p", "emp_var", "bound", "rel_sigma", "rel_bound");
+    let mut rows = Vec::new();
+    let mut worst_ratio = 0.0f64;
+    for &n in &ns {
+        for &w in &ws {
+            let enc = PsbWeight::encode(w);
+            let mut rng = AnyRng::new(RngKind::Xorshift, cfg.seed ^ n as u64);
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for _ in 0..trials {
+                let v = enc.sample_n(n, &mut rng) as f64;
+                s += v;
+                s2 += v * v;
+            }
+            let mean = s / trials as f64;
+            let var = (s2 / trials as f64 - mean * mean).max(0.0);
+            let bound = (w as f64).powi(2) / (8.0 * n as f64);
+            let rel_sigma = var.sqrt() / mean.abs().max(1e-12);
+            let rel_bound = 1.0 / (8.0 * n as f64).sqrt();
+            worst_ratio = worst_ratio.max(var / bound.max(1e-18));
+            if (w - 3.0).abs() < 0.06 || (w.log2() - w.log2().round()).abs() < 1e-3 {
+                println!(
+                    "{:>10.4} {:>4} {:>10.4} {:>12.3e} {:>12.3e} {:>10.4} {:>10.4}",
+                    w, enc.exp, enc.prob, var, bound, rel_sigma, rel_bound
+                );
+            }
+            rows.push(format!(
+                "{n},{w},{},{},{var},{bound},{rel_sigma},{rel_bound},{mean}",
+                enc.exp, enc.prob
+            ));
+        }
+    }
+    println!("worst empirical Var / analytic bound = {worst_ratio:.3} (must be <= ~1)");
+    cfg.write_csv(
+        "fig1_numsys.csv",
+        "n,w,exp,prob,emp_var,var_bound,rel_sigma,rel_sigma_bound,emp_mean",
+        &rows,
+    )?;
+
+    // RNG ablation: identical statistics from all three generators.
+    println!("\nRNG ablation at w=3 (e=1, p=0.5 — the worst-variance point), n=16:");
+    let enc = PsbWeight::encode(3.0);
+    let mut ab_rows = Vec::new();
+    for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
+        let mut rng = AnyRng::new(kind, cfg.seed);
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let v = enc.sample_n(16, &mut rng) as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / trials as f64;
+        let var = s2 / trials as f64 - mean * mean;
+        println!("  {kind:?}: mean={mean:.4} var={var:.5}");
+        ab_rows.push(format!("{kind:?},{mean},{var}"));
+    }
+    cfg.write_csv("fig1_rng_ablation.csv", "rng,mean,var", &ab_rows)?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figure 2: training *with* progressive stochastic binarization on the
+//! Cifar-10 stand-in (Sec. 4.2).
+//!
+//! Trains the paper's 8-layer conv net (i) in float32 and (ii) with
+//! PSB-stochastified forward passes at sample sizes 2^0..2^6, then
+//! cross-evaluates every trained model under PSB inference at every
+//! sample size — the train-n × eval-n accuracy matrix behind the figure.
+//! Expected shape: training at the evaluation sample size beats plugging
+//! float-trained weights into low-n inference; all curves approach the
+//! float line as eval-n grows.
+
+use anyhow::Result;
+
+use crate::experiments::{train_model, ExpConfig};
+use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::sim::train::{evaluate, evaluate_psb, train, TrainConfig};
+
+pub fn run(cfg: &ExpConfig) -> Result<()> {
+    let data = cfg.dataset();
+    let train_ns: Vec<Option<u32>> = if cfg.quick {
+        vec![None, Some(2), Some(16)]
+    } else {
+        vec![None, Some(1), Some(2), Some(4), Some(8), Some(16), Some(32), Some(64)]
+    };
+    let eval_ns = cfg.eval_sample_sizes();
+
+    println!("Figure 2: Cifar-10-style training with stochastic binarization");
+    let mut rows = Vec::new();
+    for &tn in &train_ns {
+        let label = match tn {
+            None => "float32".to_string(),
+            Some(n) => format!("psb{n}"),
+        };
+        eprintln!("-- training {label}");
+        let (mut net, float_acc) = if tn.is_none() {
+            train_model("cnn8", &data, cfg)
+        } else {
+            let mut rng = crate::rng::Xorshift128Plus::seed_from(cfg.seed ^ tn.unwrap() as u64);
+            let mut net = crate::models::cnn8(data.size, &mut rng);
+            let tc = TrainConfig { stochastic_n: tn, ..cfg.train_cfg() };
+            let stats = train(&mut net, &data, &tc);
+            let acc = stats.last().unwrap().test_acc;
+            (net, acc)
+        };
+        let float_eval = evaluate(&mut net, &data);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        print!("{label:>10}  float={float_eval:.3}  psb:");
+        let mut cells = vec![format!("{label}"), format!("{float_acc:.4}")];
+        for &en in &eval_ns {
+            let (acc, _) = evaluate_psb(&psb, &data, &Precision::Uniform(en), cfg.seed);
+            print!(" n{en}={acc:.3}");
+            cells.push(format!("{acc:.4}"));
+        }
+        println!();
+        rows.push(cells.join(","));
+    }
+    let header = format!(
+        "train_mode,float_acc,{}",
+        eval_ns.iter().map(|n| format!("psb{n}")).collect::<Vec<_>>().join(",")
+    );
+    cfg.write_csv("fig2_train_psb.csv", &header, &rows)?;
+    Ok(())
+}

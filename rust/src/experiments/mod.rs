@@ -1,0 +1,140 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (see DESIGN.md §4 for the index).
+//!
+//! Each experiment prints the paper's rows/series to stdout and writes a
+//! CSV under `results/` for plotting.  Absolute numbers differ from the
+//! paper (synthetic data, miniature models — DESIGN.md §3); the *shape*
+//! (who wins, by what factor, where crossovers fall) is the reproduction
+//! target.
+
+pub mod attn;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{Dataset, SynthConfig};
+use crate::rng::Xorshift128Plus;
+use crate::sim::network::Network;
+use crate::sim::train::{train, TrainConfig};
+
+/// Shared experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Smaller datasets / fewer epochs / fewer sweep points.
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig { quick: false, out_dir: "results".into(), seed: 1234 }
+    }
+}
+
+impl ExpConfig {
+    pub fn dataset(&self) -> Dataset {
+        let (train, test) = if self.quick { (1024, 256) } else { (4096, 1024) };
+        Dataset::synth(&SynthConfig { train, test, size: 32, seed: self.seed, ..Default::default() })
+    }
+
+    pub fn train_cfg(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: if self.quick { 3 } else { 10 },
+            batch_size: 32,
+            seed: self.seed,
+            verbose: true,
+            ..Default::default()
+        }
+    }
+
+    pub fn eval_sample_sizes(&self) -> Vec<u32> {
+        if self.quick {
+            vec![1, 4, 16, 64]
+        } else {
+            vec![1, 2, 4, 8, 16, 32, 64, 128, 256]
+        }
+    }
+
+    /// Write a CSV file under `out_dir`, creating it if needed.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for row in rows {
+            writeln!(f, "{row}")?;
+        }
+        eprintln!("  -> wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Train a model by zoo name on the shared dataset; returns the trained
+/// float network and its float test accuracy.
+pub fn train_model(name: &str, data: &Dataset, cfg: &ExpConfig) -> (Network, f32) {
+    let mut rng = Xorshift128Plus::seed_from(cfg.seed ^ fxhash(name));
+    let mut net = crate::models::by_name(name, data.size, &mut rng);
+    let stats = train(&mut net, data, &cfg.train_cfg());
+    let acc = stats.last().map(|s| s.test_acc).unwrap_or(0.0);
+    (net, acc)
+}
+
+/// Tiny deterministic string hash (seed derivation per model name).
+pub fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
+}
+
+/// Run an experiment by id.
+pub fn run(id: &str, cfg: &ExpConfig) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(cfg),
+        "fig2" => fig2::run(cfg),
+        "fig3" => fig3::run(cfg),
+        "fig4" => fig4::run(cfg),
+        "table1" => table1::run(cfg),
+        "table2" => table2::run(cfg),
+        "attn" => attn::run(cfg),
+        "all" => {
+            for id in ["fig1", "table2", "fig3", "table1", "fig4", "attn", "fig2"] {
+                eprintln!("=== experiment {id} ===");
+                run(id, cfg)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown experiment '{other}' (fig1|fig2|fig3|fig4|table1|table2|attn|all)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fxhash_distinct() {
+        let names = ["cnn8", "resnet_mini", "mobilenet_like"];
+        let hashes: Vec<u64> = names.iter().map(|n| fxhash(n)).collect();
+        assert_ne!(hashes[0], hashes[1]);
+        assert_ne!(hashes[1], hashes[2]);
+    }
+
+    #[test]
+    fn quick_config_is_smaller() {
+        let q = ExpConfig { quick: true, ..Default::default() };
+        let f = ExpConfig::default();
+        assert!(q.eval_sample_sizes().len() < f.eval_sample_sizes().len());
+        assert!(q.train_cfg().epochs < f.train_cfg().epochs);
+    }
+}

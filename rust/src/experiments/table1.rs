@@ -1,0 +1,169 @@
+//! Table 1: the full modification grid on the ResNet stand-in —
+//! plain PSB inference, magnitude pruning (90%/99%), probability
+//! discretization (1/2/3/4/6 bits), the two-stage attention mechanism
+//! (psb8/16, psb16/32), and the combination of all techniques.
+//!
+//! Expected shape (paper's Table 1): psb accuracy climbs with n toward
+//! float; 90% pruning costs a few points under psb16 while 99% collapses;
+//! ≥3-bit probabilities are nearly free while 1-bit collapses; attention
+//! at psb8/16 ≈ psb16 accuracy at ~2/3 of its gated-add cost.
+
+use anyhow::Result;
+
+use crate::attention::adaptive_forward;
+use crate::costs::CostCounter;
+use crate::data::Dataset;
+use crate::experiments::{train_model, ExpConfig};
+use crate::prune::prune_global;
+use crate::sim::layers::argmax_rows;
+use crate::sim::network::Network;
+use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::sim::train::{evaluate, evaluate_psb};
+
+struct Row {
+    experiment: String,
+    system: String,
+    acc: f32,
+    gated_adds: u64,
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<()> {
+    let data = cfg.dataset();
+    let (mut net, _) = train_model("resnet_mini", &data, cfg);
+    let float_acc = evaluate(&mut net, &data);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // -- no modification ----------------------------------------------------
+    rows.push(Row {
+        experiment: "no modification".into(),
+        system: "float32".into(),
+        acc: float_acc,
+        gated_adds: 0,
+    });
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let base_ns: &[u32] = if cfg.quick { &[8, 16] } else { &[8, 16, 32, 64] };
+    let mut psb16_cost = 0u64;
+    for &n in base_ns {
+        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), cfg.seed);
+        if n == 16 {
+            psb16_cost = costs.gated_adds;
+        }
+        rows.push(Row {
+            experiment: "no modification".into(),
+            system: format!("psb{n}"),
+            acc,
+            gated_adds: costs.gated_adds,
+        });
+    }
+
+    // -- pruning -------------------------------------------------------------
+    // Capacity scaling (DESIGN.md §3): the paper prunes a 25M-param
+    // ResNet50, which tolerates 90%; our ~200k-param mini reaches the
+    // same regimes at lower fractions.  50% plays the paper's "90%"
+    // (tolerable) role and 90%/99% the over-pruning role.
+    for frac in [0.50f32, 0.90, 0.99] {
+        let mut pruned = net.clone();
+        let report = prune_global(&mut pruned, frac);
+        let pf_acc = evaluate(&mut pruned, &data);
+        let psb_p = PsbNetwork::prepare(&pruned, PsbOptions::default());
+        let (acc, costs) = evaluate_psb(&psb_p, &data, &Precision::Uniform(16), cfg.seed);
+        let tag = format!("pruning {:.0}%", frac * 100.0);
+        rows.push(Row { experiment: tag.clone(), system: "float32".into(), acc: pf_acc, gated_adds: 0 });
+        rows.push(Row { experiment: tag, system: "psb16".into(), acc, gated_adds: costs.gated_adds });
+        eprintln!("  pruned {:.1}% (threshold {:.2e})", report.sparsity() * 100.0, report.threshold);
+    }
+
+    // -- probability discretization -------------------------------------------
+    for bits in [1u32, 2, 3, 4, 6] {
+        let psb_d = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(bits), ..Default::default() });
+        let (acc, costs) = evaluate_psb(&psb_d, &data, &Precision::Uniform(16), cfg.seed);
+        rows.push(Row {
+            experiment: format!("{bits}-bit probs"),
+            system: "psb16".into(),
+            acc,
+            gated_adds: costs.gated_adds,
+        });
+    }
+
+    // -- attention -------------------------------------------------------------
+    for (n_low, n_high) in [(8u32, 16u32), (16, 32)] {
+        let (acc, costs) = evaluate_attention(&psb, &data, n_low, n_high, cfg.seed);
+        rows.push(Row {
+            experiment: "attention".into(),
+            system: format!("psb{n_low}/{n_high}"),
+            acc,
+            gated_adds: costs.gated_adds,
+        });
+    }
+
+    // -- combined: moderate pruning + 4-bit probs + attention -------------------
+    {
+        let mut pruned = net.clone();
+        prune_global(&mut pruned, 0.50); // capacity-scaled (see above)
+        let psb_c =
+            PsbNetwork::prepare(&pruned, PsbOptions { prob_bits: Some(4), ..Default::default() });
+        for (n_low, n_high) in [(8u32, 16u32), (16, 32)] {
+            let (acc, costs) = evaluate_attention(&psb_c, &data, n_low, n_high, cfg.seed);
+            rows.push(Row {
+                experiment: "combined".into(),
+                system: format!("psb{n_low}/{n_high}"),
+                acc,
+                gated_adds: costs.gated_adds,
+            });
+        }
+    }
+
+    // -- print + persist ----------------------------------------------------------
+    println!("\nTable 1: ResNet-mini modification grid (float acc {:.2}%)", float_acc * 100.0);
+    println!("{:>18} {:>12} {:>10} {:>16} {:>10}", "experiment", "system", "top-1 [%]", "gated adds", "vs psb16");
+    let mut csv = Vec::new();
+    for r in &rows {
+        let rel = if psb16_cost > 0 && r.gated_adds > 0 {
+            format!("{:.2}x", r.gated_adds as f64 / psb16_cost as f64)
+        } else {
+            "-".into()
+        };
+        println!(
+            "{:>18} {:>12} {:>10.2} {:>16} {:>10}",
+            r.experiment,
+            r.system,
+            r.acc * 100.0,
+            r.gated_adds,
+            rel
+        );
+        csv.push(format!("{},{},{:.4},{}", r.experiment, r.system, r.acc, r.gated_adds));
+    }
+    cfg.write_csv("table1_modifications.csv", "experiment,system,top1,gated_adds", &csv)?;
+    Ok(())
+}
+
+/// Accuracy + total two-stage cost of the attention mechanism over the
+/// test set (Table 1 "attention" rows).
+pub fn evaluate_attention(
+    psb: &PsbNetwork,
+    data: &Dataset,
+    n_low: u32,
+    n_high: u32,
+    seed: u64,
+) -> (f32, CostCounter) {
+    let n = data.test_images.shape[0];
+    let mut correct = 0usize;
+    let mut costs = CostCounter::default();
+    let mut frac = 0.0f64;
+    let mut batches = 0usize;
+    for start in (0..n).step_by(64) {
+        let idx: Vec<usize> = (start..(start + 64).min(n)).collect();
+        let (x, labels) = data.gather_test(&idx);
+        let out = adaptive_forward(psb, &x, n_low, n_high, seed.wrapping_add(start as u64));
+        let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        costs.merge(&out.costs);
+        frac += out.interesting_fraction as f64;
+        batches += 1;
+    }
+    eprintln!("  attention psb{n_low}/{n_high}: interesting fraction {:.2}", frac / batches as f64);
+    (correct as f32 / n as f32, costs)
+}
+
+#[allow(unused)]
+fn unused(_: &Network) {}

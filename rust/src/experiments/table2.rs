@@ -1,0 +1,106 @@
+//! Supplementary Table 2: 45 nm hardware unit costs, plus the derived
+//! whole-network energy/area comparison (fp32 vs int8 vs PSB at various
+//! sample sizes) and the TPU-mapping VMEM estimate from DESIGN.md
+//! §Hardware-Adaptation.
+
+use anyhow::Result;
+
+use crate::costs::{break_even_n, table2, CostCounter};
+use crate::data::SynthConfig;
+use crate::experiments::ExpConfig;
+use crate::models::MODEL_NAMES;
+use crate::rng::Xorshift128Plus;
+use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::sim::tensor::Tensor;
+
+pub fn run(cfg: &ExpConfig) -> Result<()> {
+    println!("Table 2 (supplementary): hardware costs, 45nm process");
+    println!("{:>10} {:>12} {:>22} {:>10}", "operation", "area [um2]", "area rel. to fp32 mul", "energy [pJ]");
+    let mut rows = Vec::new();
+    for (name, c) in table2::ROWS {
+        let rel = c.area_um2 / table2::FP32_MUL.area_um2;
+        println!("{name:>10} {:>12.0} {rel:>22.3} {:>10.2}", c.area_um2, c.energy_pj);
+        rows.push(format!("{name},{},{rel},{}", c.area_um2, c.energy_pj));
+    }
+    cfg.write_csv("table2_unit_costs.csv", "op,area_um2,area_rel_fp32mul,energy_pj", &rows)?;
+
+    println!(
+        "\nPSB MAC = n x (int16 add + 1-bit comparator); break-even vs fp32 MAC at n <= {}",
+        break_even_n(table2::FP32_MUL.energy_pj + table2::FP32_ADD.energy_pj)
+    );
+
+    // derived per-network energy: one inference through each zoo model
+    println!("\nPer-inference energy by model and number system (pJ, one 32x32 image):");
+    println!(
+        "{:>22} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "model", "fp32", "int8", "psb8", "psb16", "psb64", "psb16/fp32"
+    );
+    let mut energy_rows = Vec::new();
+    let x = {
+        let d = crate::data::Dataset::synth(&SynthConfig {
+            train: 1,
+            test: 1,
+            size: 32,
+            seed: cfg.seed,
+            ..Default::default()
+        });
+        let (x, _) = d.gather_test(&[0]);
+        x
+    };
+    for name in MODEL_NAMES {
+        let mut rng = Xorshift128Plus::seed_from(cfg.seed);
+        let mut net = crate::models::by_name(name, 32, &mut rng);
+        settle(&mut net, &x);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let cost_at = |n: u32| -> CostCounter { psb.forward(&x, &Precision::Uniform(n), 1).costs };
+        let c8 = cost_at(8);
+        let c16 = cost_at(16);
+        let c64 = cost_at(64);
+        let fp32 = c16.fp32_energy_pj();
+        let int8 = c16.int8_energy_pj();
+        println!(
+            "{:>22} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3}",
+            name,
+            fp32,
+            int8,
+            c8.psb_energy_pj(),
+            c16.psb_energy_pj(),
+            c64.psb_energy_pj(),
+            c16.psb_energy_pj() / fp32
+        );
+        energy_rows.push(format!(
+            "{name},{fp32},{int8},{},{},{}",
+            c8.psb_energy_pj(),
+            c16.psb_energy_pj(),
+            c64.psb_energy_pj()
+        ));
+    }
+    cfg.write_csv(
+        "table2_network_energy.csv",
+        "model,fp32_pj,int8_pj,psb8_pj,psb16_pj,psb64_pj",
+        &energy_rows,
+    )?;
+
+    // weight-storage comparison (supp. §1.1: k_e-bit exponents + k_p-bit probs)
+    println!("\nWeight storage (serving formats), resnet_mini:");
+    let mut rng = Xorshift128Plus::seed_from(cfg.seed);
+    let mut net = crate::models::by_name("resnet_mini", 32, &mut rng);
+    settle(&mut net, &x);
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let params: u64 = psb.storage_bits(0, 0); // 1 bit per weight = count
+    for (ke, kp) in [(8u32, 23u32), (4, 4), (4, 6), (4, 2)] {
+        let bits = psb.storage_bits(ke, kp);
+        println!(
+            "  s1/e{ke}/p{kp}: {:>10} bits  ({:.2}x vs fp32)",
+            bits,
+            bits as f64 / (params as f64 * 32.0)
+        );
+    }
+    Ok(())
+}
+
+fn settle(net: &mut crate::sim::network::Network, x: &Tensor) {
+    for _ in 0..3 {
+        net.forward::<Xorshift128Plus>(x, true, None);
+    }
+}

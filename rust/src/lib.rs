@@ -1,0 +1,31 @@
+//! # psb — Progressive Stochastic Binarization of Deep Networks
+//!
+//! A full-system reproduction of Hartmann & Wand, *Progressive Stochastic
+//! Binarization of Deep Networks* (cs.LG 2019), as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — the capacitor-unit matmul as a
+//!   Pallas kernel with in-tile PSB dequantization.
+//! * **L2** (`python/compile/model.py`) — the serving CNN in JAX, lowered
+//!   once (AOT) to HLO-text artifacts.
+//! * **L3** (this crate) — everything at run time: the PSB number system,
+//!   a pure-rust simulator substrate (training + bit-exact integer
+//!   inference), the model zoo and experiment harness reproducing every
+//!   table/figure of the paper, and an adaptive-precision inference
+//!   coordinator that loads the AOT artifacts via PJRT and exploits PSB's
+//!   progressive precision (cheap pass → entropy → escalate).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod attention;
+pub mod coordinator;
+pub mod costs;
+pub mod data;
+pub mod experiments;
+pub mod models;
+pub mod num;
+pub mod prune;
+pub mod rng;
+pub mod runtime;
+pub mod sim;

@@ -1,0 +1,222 @@
+//! `psb` — CLI for the Progressive Stochastic Binarization reproduction.
+//!
+//! Subcommands (hand-rolled parsing — the offline build has no clap):
+//! * `experiment <id> [--quick] [--out-dir D] [--seed S]`
+//! * `train-serving [--out F] [--epochs N] [--seed S]`
+//! * `serve [--artifacts D] [--weights F] [--requests N] [--n-low N]
+//!   [--n-high N] [--flat]`
+//! * `encode <w>`
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use psb::coordinator::{Coordinator, CoordinatorConfig, EscalationPolicy};
+use psb::data::{Dataset, SynthConfig};
+use psb::experiments::{self, ExpConfig};
+use psb::num::PsbWeight;
+use psb::rng::Xorshift128Plus;
+use psb::runtime::{FloatBundle, PsbBundle};
+use psb::sim::train::{train, TrainConfig};
+
+const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+
+const USAGE: &str = "\
+psb — Progressive Stochastic Binarization, full-system reproduction
+
+USAGE:
+  psb experiment <fig1|fig2|fig3|fig4|table1|table2|attn|all> [--quick] [--out-dir D] [--seed S]
+  psb train-serving [--out F] [--epochs N] [--seed S]
+  psb serve [--artifacts D] [--weights F] [--requests N] [--n-low N] [--n-high N] [--flat]
+  psb encode <w>
+";
+
+/// Minimal flag parser: positional args + `--key value` + `--switch`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(raw: &[String], switches: &[&str]) -> Result<Args> {
+        let mut a = Args {
+            positional: Vec::new(),
+            flags: Default::default(),
+            switches: Default::default(),
+        };
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if switches.contains(&name) {
+                    a.switches.insert(name.to_string());
+                } else {
+                    let val = it.next().with_context(|| format!("--{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), val.clone());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        bail!("missing subcommand");
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "experiment" => {
+            let a = Args::parse(rest, &["quick"])?;
+            let Some(id) = a.positional.first() else { bail!("experiment needs an id") };
+            experiments::run(
+                id,
+                &ExpConfig {
+                    quick: a.switches.contains("quick"),
+                    out_dir: PathBuf::from(a.get("out-dir", "results".to_string())?),
+                    seed: a.get("seed", 1234u64)?,
+                },
+            )
+        }
+        "train-serving" => {
+            let a = Args::parse(rest, &[])?;
+            let out = PathBuf::from(a.get("out", "results/serving_weights.txt".to_string())?);
+            let bundle = train_serving(a.get("epochs", 8usize)?, a.get("seed", 42u64)?, true)?;
+            if let Some(parent) = out.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            bundle.save(&out)?;
+            println!("saved serving bundle to {}", out.display());
+            Ok(())
+        }
+        "serve" => {
+            let a = Args::parse(rest, &["flat"])?;
+            let float = match a.flags.get("weights") {
+                Some(p) => FloatBundle::load(std::path::Path::new(p))?,
+                None => {
+                    eprintln!("no --weights given; training serving CNN ad hoc (quick)");
+                    train_serving(3, 42, false)?
+                }
+            };
+            serve(
+                PathBuf::from(a.get("artifacts", "artifacts".to_string())?),
+                float,
+                a.get("requests", 512usize)?,
+                a.get("n-low", 8u32)?,
+                a.get("n-high", 16u32)?,
+                a.switches.contains("flat"),
+            )
+        }
+        "encode" => {
+            let a = Args::parse(rest, &[])?;
+            let w: f32 = a
+                .positional
+                .first()
+                .with_context(|| "encode needs a weight value")?
+                .parse()?;
+            let e = PsbWeight::encode(w);
+            println!("w = {w}");
+            println!(
+                "  sign = {}, exp = {} (2^e = {}), prob = {}",
+                e.sign,
+                e.exp,
+                (e.exp as f32).exp2(),
+                e.prob
+            );
+            println!("  decode(E[wbar]) = {}", e.decode());
+            for n in [1u32, 8, 64] {
+                println!(
+                    "  Var(wbar_{n}) = {:.3e}  (bound w^2/8n = {:.3e})",
+                    e.variance(n),
+                    w * w / (8.0 * n as f32)
+                );
+            }
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown subcommand '{other}'");
+        }
+    }
+}
+
+fn train_serving(epochs: usize, seed: u64, verbose: bool) -> Result<FloatBundle> {
+    let data = Dataset::synth(&SynthConfig {
+        train: if epochs >= 6 { 4096 } else { 1536 },
+        test: 512,
+        size: 32,
+        seed,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(seed);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    let cfg = TrainConfig { epochs, seed, verbose, ..Default::default() };
+    let stats = train(&mut net, &data, &cfg);
+    if verbose {
+        println!("serving CNN float test acc: {:.3}", stats.last().unwrap().test_acc);
+    }
+    FloatBundle::from_network(&net, &SERVING_SHAPES)
+}
+
+fn serve(
+    artifacts: PathBuf,
+    float: FloatBundle,
+    requests: usize,
+    n_low: u32,
+    n_high: u32,
+    flat: bool,
+) -> Result<()> {
+    let psb_bundle = PsbBundle::from_float(&float, Some(4));
+    let cfg = CoordinatorConfig {
+        artifact_dir: artifacts,
+        policy: EscalationPolicy { n_low, n_high, disabled: flat, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, psb_bundle, float)?;
+    let data = Dataset::synth(&SynthConfig {
+        train: 1,
+        test: requests.max(64).min(2048),
+        size: 32,
+        seed: 99,
+        ..Default::default()
+    });
+    let start = std::time::Instant::now();
+    // pipeline all requests, then collect
+    let mut inflight = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let (x, labels) = data.gather_test(&[i % data.test_images.shape[0]]);
+        inflight.push((labels[0], coord.submit(x.data)?));
+    }
+    let mut correct = 0usize;
+    for (label, rx) in inflight {
+        let resp = rx.recv()?;
+        correct += (resp.class == label) as usize;
+    }
+    let elapsed = start.elapsed();
+    println!(
+        "served {requests} requests in {elapsed:?} ({:.0} req/s)",
+        requests as f64 / elapsed.as_secs_f64()
+    );
+    println!("accuracy: {:.3}", correct as f64 / requests as f64);
+    println!("metrics: {}", coord.metrics.summary());
+    let adds = coord.metrics.gated_adds.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "gated adds: {adds} ({:.3e} per request, progressive accounting)",
+        adds as f64 / requests as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Model zoo — miniature counterparts of the paper's evaluation
+//! architectures (DESIGN.md §3), sharing the *structural* properties that
+//! drive the paper's findings:
+//!
+//! * [`cnn8`] — the paper's Cifar-10 net: eight 3×3 conv + BN + ReLU
+//!   blocks (Sec. 4.2).
+//! * [`resnet_mini`] — foldable residual network (conv→BN→ReLU→conv→BN,
+//!   shortcut add, ReLU): every BN folds into a preceding conv, the
+//!   paper's favourable case (ResNet50 v2 stand-in).
+//! * [`resnet_mini_modified`] — "BN after addition": post-add BNs cannot
+//!   fold and become stochastic multiplications on the PSB path,
+//!   reproducing Sec. 4.3's *Resnet50 modified* degradation.
+//! * [`mobilenet_like`] — depthwise-separable conv with a ReLU **between**
+//!   depthwise and pointwise: the clipping of stochastic intermediates
+//!   that makes MobileNet the known failure case (Sec. 4.3, [60]).
+//! * [`xception_like`] — separable conv **without** the intermediate ReLU
+//!   plus residual accumulation, the benign separable variant.
+//!
+//! All take `size`×`size`×3 inputs and emit `NUM_CLASSES` logits; the
+//! builders set `feat_node` to the last conv activation for the attention
+//! mechanism.
+
+use crate::data::NUM_CLASSES;
+use crate::rng::Rng;
+use crate::sim::network::{Network, Op};
+
+/// All architectures by name (CLI / experiment surface).
+pub const MODEL_NAMES: [&str; 5] =
+    ["cnn8", "resnet_mini", "resnet_mini_modified", "mobilenet_like", "xception_like"];
+
+/// Build a model by name. Panics on unknown names (CLI validates first).
+pub fn by_name(name: &str, size: usize, rng: &mut impl Rng) -> Network {
+    match name {
+        "cnn8" => cnn8(size, rng),
+        "resnet_mini" => resnet_mini(size, rng, false),
+        "resnet_mini_modified" => resnet_mini(size, rng, true),
+        "mobilenet_like" => separable(size, rng, true),
+        "xception_like" => separable(size, rng, false),
+        other => panic!("unknown model '{other}' (known: {MODEL_NAMES:?})"),
+    }
+}
+
+fn conv_bn_relu(
+    net: &mut Network,
+    input: usize,
+    k: usize,
+    stride: usize,
+    cin: usize,
+    cout: usize,
+    tag: &str,
+) -> usize {
+    let c = net.add(Op::Conv { k, stride, cin, cout }, vec![input], &format!("{tag}.conv"));
+    let b = net.add(Op::BatchNorm, vec![c], &format!("{tag}.bn"));
+    net.add(Op::ReLU, vec![b], &format!("{tag}.relu"))
+}
+
+/// The paper's Cifar-10 network: a stack of eight 3×3 convolutions, each
+/// followed by batch-normalization and ReLU (Sec. 4.2), then GAP + dense.
+pub fn cnn8(size: usize, rng: &mut impl Rng) -> Network {
+    let mut net = Network::new((size, size, 3), "cnn8");
+    let chans = [16usize, 16, 32, 32, 48, 48, 64, 64];
+    let strides = [1usize, 1, 2, 1, 1, 2, 1, 1];
+    let mut prev = 0usize;
+    let mut cin = 3usize;
+    for (i, (&cout, &s)) in chans.iter().zip(&strides).enumerate() {
+        prev = conv_bn_relu(&mut net, prev, 3, s, cin, cout, &format!("b{i}"));
+        cin = cout;
+    }
+    net.feat_node = Some(prev);
+    let g = net.add(Op::GlobalAvgPool, vec![prev], "gap");
+    net.add(Op::Dense { cin, cout: NUM_CLASSES }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+/// Residual network with foldable BNs; `bn_after_add` switches to the
+/// paper's "modified" (BN-after-addition) variant.
+pub fn resnet_mini(size: usize, rng: &mut impl Rng, bn_after_add: bool) -> Network {
+    let name = if bn_after_add { "resnet_mini_modified" } else { "resnet_mini" };
+    let mut net = Network::new((size, size, 3), name);
+    // stem
+    let mut trunk = conv_bn_relu(&mut net, 0, 3, 1, 3, 16, "stem");
+    let mut cin = 16usize;
+    // 3 stages × 2 blocks; stage transitions stride 2 + 1x1 projection
+    for (stage, &cout) in [16usize, 32, 64].iter().enumerate() {
+        for block in 0..2usize {
+            let stride = if block == 0 && stage > 0 { 2 } else { 1 };
+            let tag = format!("s{stage}b{block}");
+            // main branch: conv-BN-ReLU-conv(-BN unless modified)
+            let c1 = net.add(
+                Op::Conv { k: 3, stride, cin, cout },
+                vec![trunk],
+                &format!("{tag}.conv1"),
+            );
+            let b1 = net.add(Op::BatchNorm, vec![c1], &format!("{tag}.bn1"));
+            let r1 = net.add(Op::ReLU, vec![b1], &format!("{tag}.relu1"));
+            let c2 =
+                net.add(Op::Conv { k: 3, stride: 1, cin: cout, cout }, vec![r1], &format!("{tag}.conv2"));
+            // shortcut (1x1 projection when shape changes)
+            let shortcut = if stride != 1 || cin != cout {
+                let sc = net.add(
+                    Op::Conv { k: 1, stride, cin, cout },
+                    vec![trunk],
+                    &format!("{tag}.proj"),
+                );
+                if bn_after_add {
+                    sc
+                } else {
+                    net.add(Op::BatchNorm, vec![sc], &format!("{tag}.projbn"))
+                }
+            } else {
+                trunk
+            };
+            trunk = if bn_after_add {
+                // "BN after addition": the BN sees the Add output and can
+                // never fold — Sec. 4.3's stochastic-multiplication chain
+                let a = net.add(Op::Add, vec![c2, shortcut], &format!("{tag}.add"));
+                let b = net.add(Op::BatchNorm, vec![a], &format!("{tag}.bn2"));
+                net.add(Op::ReLU, vec![b], &format!("{tag}.relu2"))
+            } else {
+                let b2 = net.add(Op::BatchNorm, vec![c2], &format!("{tag}.bn2"));
+                let a = net.add(Op::Add, vec![b2, shortcut], &format!("{tag}.add"));
+                net.add(Op::ReLU, vec![a], &format!("{tag}.relu2"))
+            };
+            cin = cout;
+        }
+    }
+    net.feat_node = Some(trunk);
+    let g = net.add(Op::GlobalAvgPool, vec![trunk], "gap");
+    net.add(Op::Dense { cin, cout: NUM_CLASSES }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+/// Depthwise-separable network; `relu_between` inserts the MobileNet-style
+/// ReLU between depthwise and pointwise convolutions (the PSB failure
+/// mode); without it (+ residual adds) this is the Xception-like benign
+/// variant.
+pub fn separable(size: usize, rng: &mut impl Rng, relu_between: bool) -> Network {
+    let name = if relu_between { "mobilenet_like" } else { "xception_like" };
+    let mut net = Network::new((size, size, 3), name);
+    let mut trunk = conv_bn_relu(&mut net, 0, 3, 1, 3, 16, "stem");
+    let mut cin = 16usize;
+    let blocks = [(16usize, 1usize), (32, 2), (32, 1), (64, 2)];
+    for (i, &(cout, stride)) in blocks.iter().enumerate() {
+        let tag = format!("sep{i}");
+        // depthwise 3x3
+        let dw =
+            net.add(Op::Depthwise { k: 3, stride, c: cin }, vec![trunk], &format!("{tag}.dw"));
+        let dwbn = net.add(Op::BatchNorm, vec![dw], &format!("{tag}.dwbn"));
+        let dw_out = if relu_between {
+            // MobileNet: ReLU clips the stochastic intermediate between the
+            // two multiplications — the known quantization hazard [60]
+            net.add(Op::ReLU, vec![dwbn], &format!("{tag}.dwrelu"))
+        } else {
+            dwbn
+        };
+        // pointwise 1x1
+        let pw = net.add(
+            Op::Conv { k: 1, stride: 1, cin, cout },
+            vec![dw_out],
+            &format!("{tag}.pw"),
+        );
+        let pwbn = net.add(Op::BatchNorm, vec![pw], &format!("{tag}.pwbn"));
+        let merged = if !relu_between && stride == 1 && cin == cout {
+            // Xception-like residual accumulation of intermediate layers
+            net.add(Op::Add, vec![pwbn, trunk], &format!("{tag}.add"))
+        } else {
+            pwbn
+        };
+        trunk = net.add(Op::ReLU, vec![merged], &format!("{tag}.relu"));
+        cin = cout;
+    }
+    net.feat_node = Some(trunk);
+    let g = net.add(Op::GlobalAvgPool, vec![trunk], "gap");
+    net.add(Op::Dense { cin, cout: NUM_CLASSES }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+/// The serving CNN — structurally identical to the JAX artifact graph
+/// (`python/compile/model.py`): conv3×3 s1 3→16, conv3×3 s2 16→32,
+/// conv3×3 s2 32→32 (each + BN + ReLU; BNs fold away before export),
+/// GAP, dense 32→10.  Trained here, exported to the artifacts' weight
+/// signature via `runtime::bundle`.
+pub fn serving_cnn(rng: &mut impl Rng) -> Network {
+    let mut net = Network::new((32, 32, 3), "serving_cnn");
+    let b0 = conv_bn_relu(&mut net, 0, 3, 1, 3, 16, "l0");
+    let b1 = conv_bn_relu(&mut net, b0, 3, 2, 16, 32, "l1");
+    let b2 = conv_bn_relu(&mut net, b1, 3, 2, 32, 32, "l2");
+    net.feat_node = Some(b2);
+    let g = net.add(Op::GlobalAvgPool, vec![b2], "gap");
+    net.add(Op::Dense { cin: 32, cout: NUM_CLASSES }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xorshift128Plus;
+    use crate::sim::tensor::Tensor;
+
+    fn smoke(name: &str) -> Network {
+        let mut rng = Xorshift128Plus::seed_from(1);
+        let mut net = by_name(name, 32, &mut rng);
+        let x = Tensor::zeros(&[2, 32, 32, 3]);
+        let caches = net.forward::<Xorshift128Plus>(&x, true, None);
+        assert_eq!(caches.logits().shape, vec![2, NUM_CLASSES], "{name}");
+        assert!(net.feat_node.is_some(), "{name} missing feat node");
+        net
+    }
+
+    #[test]
+    fn all_models_forward() {
+        for name in MODEL_NAMES {
+            smoke(name);
+        }
+    }
+
+    #[test]
+    fn cnn8_has_eight_convs() {
+        let net = smoke("cnn8");
+        let convs =
+            net.nodes.iter().filter(|n| matches!(n.op, Op::Conv { .. })).count();
+        assert_eq!(convs, 8);
+        let bns = net.nodes.iter().filter(|n| n.op == Op::BatchNorm).count();
+        assert_eq!(bns, 8);
+    }
+
+    #[test]
+    fn resnet_folds_fully_but_modified_does_not() {
+        let mut clean = smoke("resnet_mini");
+        let rep = crate::sim::fold_batchnorms(&mut clean);
+        assert_eq!(rep.residual, 0, "clean resnet must fold fully");
+        assert!(rep.folded > 10);
+
+        let mut modified = smoke("resnet_mini_modified");
+        let rep = crate::sim::fold_batchnorms(&mut modified);
+        assert!(rep.residual >= 6, "modified resnet must keep post-add BNs: {rep:?}");
+    }
+
+    #[test]
+    fn mobilenet_has_relu_between_and_xception_does_not() {
+        let mobile = smoke("mobilenet_like");
+        assert!(mobile.nodes.iter().any(|n| n.name.ends_with(".dwrelu")));
+        let xcep = smoke("xception_like");
+        assert!(!xcep.nodes.iter().any(|n| n.name.ends_with(".dwrelu")));
+        assert!(xcep.nodes.iter().any(|n| n.name.ends_with(".add")));
+    }
+
+    #[test]
+    fn param_counts_are_miniature() {
+        for name in MODEL_NAMES {
+            let net = smoke(name);
+            let p = net.num_params();
+            assert!(p > 1_000 && p < 300_000, "{name}: {p} params");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Probability discretization (paper §4.4) and exponent clamping.
+//!
+//! PSB weights store a probability `p` only to *generate one random bit*,
+//! so its precision costs memory, not compute. §4.4 quantizes `p` to
+//! `k_p ∈ {1, 2, 3, 4, 6}` bits on a regular grid that includes `p = 0`
+//! and excludes `p = 1` (the right boundary belongs to the next exponent)
+//! and finds 4-bit probabilities + 4-bit exponents sufficient on typical
+//! image-recognition tasks.
+
+use crate::num::encoding::{PsbPlanes, PsbWeight};
+
+/// Quantize a probability to `bits` bits: levels `i / 2^bits`,
+/// `i ∈ 0..2^bits`, round to nearest, top level clipped.
+#[inline]
+pub fn discretize_prob(p: f32, bits: u32) -> f32 {
+    let levels = (1u32 << bits) as f32;
+    ((p * levels).round().clamp(0.0, levels - 1.0)) / levels
+}
+
+/// Clamp an exponent to a signed `bits`-bit window centred per the
+/// supplementary's barrel-shifter design (`k_e`-bit exponents).
+#[inline]
+pub fn clamp_exp(e: i32, bits: u32) -> i32 {
+    let half = 1i32 << (bits - 1);
+    e.clamp(-half, half - 1)
+}
+
+/// Apply probability discretization to a whole weight.
+pub fn discretize_weight(w: PsbWeight, prob_bits: u32) -> PsbWeight {
+    PsbWeight { prob: discretize_prob(w.prob, prob_bits), ..w }
+}
+
+/// Discretize every probability in a plane set (in place), returning the
+/// worst-case absolute representation error introduced.
+pub fn discretize_planes(planes: &mut PsbPlanes, prob_bits: u32) -> f32 {
+    let mut max_err = 0.0f32;
+    for i in 0..planes.prob.len() {
+        let before = planes.get(i).decode();
+        planes.prob[i] = discretize_prob(planes.prob[i], prob_bits);
+        let after = planes.get(i).decode();
+        max_err = max_err.max((before - after).abs());
+    }
+    max_err
+}
+
+/// The *deterministic* variant from §4.4: with `k_p`-bit probabilities and
+/// `n = 2^k_p` samples, instead of sampling `p = j/n` one can use the
+/// larger shift in exactly `j` of `n` accumulations. Returns the exact
+/// count `j` of `e+1`-shifts out of `n`.
+#[inline]
+pub fn deterministic_counts(p: f32, bits: u32) -> (u32, u32) {
+    let n = 1u32 << bits;
+    let j = (discretize_prob(p, bits) * n as f32).round() as u32;
+    (j, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_includes_zero_excludes_one() {
+        for bits in [1u32, 2, 3, 4, 6] {
+            assert_eq!(discretize_prob(0.0, bits), 0.0);
+            let top = discretize_prob(0.9999, bits);
+            assert!(top < 1.0);
+            let levels = (1u32 << bits) as f32;
+            assert_eq!(top, (levels - 1.0) / levels);
+        }
+    }
+
+    #[test]
+    fn one_bit_is_binary() {
+        // 1-bit probs: p ∈ {0, 0.5} — the "discrete case" whose accuracy
+        // collapses in Table 1.
+        for p in [0.0f32, 0.2, 0.3, 0.6, 0.9] {
+            let q = discretize_prob(p, 1);
+            assert!(q == 0.0 || q == 0.5, "p={p} q={q}");
+        }
+    }
+
+    #[test]
+    fn nearest_level() {
+        assert_eq!(discretize_prob(3.0 / 16.0 + 0.01, 4), 3.0 / 16.0);
+        assert_eq!(discretize_prob(0.5, 4), 0.5);
+    }
+
+    #[test]
+    fn exp_clamp_window() {
+        assert_eq!(clamp_exp(-20, 4), -8);
+        assert_eq!(clamp_exp(20, 4), 7);
+        assert_eq!(clamp_exp(-3, 4), -3);
+    }
+
+    #[test]
+    fn deterministic_counts_match_paper_example() {
+        // "instead of sampling p = 3/16, use the smaller shift in 3 of 16"
+        // (larger shift in 3 of 16 accumulations)
+        assert_eq!(deterministic_counts(3.0 / 16.0, 4), (3, 16));
+    }
+
+    #[test]
+    fn discretize_planes_error_bound() {
+        let w: Vec<f32> = (1..100).map(|i| i as f32 * 0.013 - 0.7).collect();
+        let mut planes = PsbPlanes::encode(&w, &[99]);
+        let err = discretize_planes(&mut planes, 4);
+        // worst case: p moves by <= 1/16, value by <= 2^e / 16 <= |w|/16
+        let max_w = w.iter().fold(0.0f32, |a, b| a.max(b.abs()));
+        assert!(err <= max_w / 16.0 + 1e-6, "err={err}");
+    }
+}

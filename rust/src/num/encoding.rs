@@ -1,0 +1,237 @@
+//! The PSB weight encoding (paper Eq. 4–7): `w -> (s, e, p)`.
+//!
+//! Every float weight is re-encoded *bijectively* — no retraining — as a
+//! sign `s ∈ {-1, 0, +1}` (0 encodes exactly-zero / pruned weights), an
+//! integer exponent `e = ⌊log2 |w|⌋` and a mantissa probability
+//! `p = |w| / 2^e − 1 ∈ [0, 1)`.  The stochastic realization is
+//!
+//! ```text
+//! w̄   = s · 2^e · (B_p + 1)                 (Eq. 4, single sample)
+//! w̄_n = s · 2^e · (B_{n,p}/n + 1)           (Eq. 8, capacitor)
+//! ```
+//!
+//! with `E[w̄_n] = w` and `Var(w̄_n) ≤ w² / (8n)` (Eq. 10).
+
+use crate::rng::Rng;
+
+/// One PSB-encoded weight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PsbWeight {
+    /// −1, 0 or +1. Zero means "exactly zero" (e.g. a pruned weight).
+    pub sign: i8,
+    /// Exponent `e = ⌊log2 |w|⌋`. For Q16 activations only a small window
+    /// of exponents is ever useful; 8 bits hold every case with margin
+    /// (the experiments measure how many bits are actually exercised).
+    pub exp: i8,
+    /// Mantissa probability `p ∈ [0, 1)`.
+    pub prob: f32,
+}
+
+impl PsbWeight {
+    pub const ZERO: PsbWeight = PsbWeight { sign: 0, exp: 0, prob: 0.0 };
+
+    /// Encode a float weight (Eq. 5–7). Bijective: `decode(encode(w)) == w`
+    /// up to f32 rounding.
+    pub fn encode(w: f32) -> PsbWeight {
+        if w == 0.0 || !w.is_finite() {
+            return PsbWeight::ZERO;
+        }
+        let sign = if w < 0.0 { -1i8 } else { 1i8 };
+        let aw = w.abs();
+        let mut e = aw.log2().floor();
+        let mut p = aw / e.exp2() - 1.0;
+        // f32 round-off can push p marginally out of [0, 1); renormalize.
+        if p < 0.0 {
+            e -= 1.0;
+            p = aw / e.exp2() - 1.0;
+        }
+        if p >= 1.0 {
+            e += 1.0;
+            p = (aw / e.exp2() - 1.0).max(0.0);
+        }
+        PsbWeight { sign, exp: e.clamp(-128.0, 127.0) as i8, prob: p.clamp(0.0, 1.0 - f32::EPSILON) }
+    }
+
+    /// Exact expectation: `E[w̄] = s · 2^e · (1 + p) = w`.
+    #[inline]
+    pub fn decode(self) -> f32 {
+        self.sign as f32 * (self.exp as f32).exp2() * (1.0 + self.prob)
+    }
+
+    /// Draw one single-sample realization `w̄` (Eq. 4): a 1-bit random
+    /// choice between the shifts `e` and `e+1`.
+    #[inline]
+    pub fn sample_single(self, rng: &mut impl Rng) -> f32 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        let bump = rng.bernoulli(self.prob) as i32;
+        self.sign as f32 * ((self.exp as i32 + bump) as f32).exp2()
+    }
+
+    /// Draw the n-sample capacitor realization `w̄_n` (Eq. 8) using a
+    /// Binomial(n, p) count.
+    #[inline]
+    pub fn sample_n(self, n: u32, rng: &mut impl Rng) -> f32 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        let k = rng.binomial(n, self.prob);
+        self.realize(k, n)
+    }
+
+    /// Realize `w̄_n` from a given Binomial count `k`.
+    #[inline]
+    pub fn realize(self, k: u32, n: u32) -> f32 {
+        self.sign as f32 * (self.exp as f32).exp2() * (1.0 + k as f32 / n as f32)
+    }
+
+    /// Theoretical variance of `w̄_n`: `2^{2e} · p(1−p) / n` — always within
+    /// the paper's bound `w²/(8n)` (Eq. 10).
+    pub fn variance(self, n: u32) -> f32 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        let scale = (2.0 * self.exp as f32).exp2();
+        scale * self.prob * (1.0 - self.prob) / n as f32
+    }
+}
+
+/// A weight tensor in PSB planar layout — the format the artifacts take:
+/// separate `sign`/`exp`/`prob` planes plus the logical shape.
+#[derive(Debug, Clone)]
+pub struct PsbPlanes {
+    pub sign: Vec<f32>,
+    pub exp: Vec<f32>,
+    pub prob: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl PsbPlanes {
+    /// Encode a dense float tensor into planes.
+    pub fn encode(w: &[f32], shape: &[usize]) -> PsbPlanes {
+        assert_eq!(w.len(), shape.iter().product::<usize>());
+        let mut sign = Vec::with_capacity(w.len());
+        let mut exp = Vec::with_capacity(w.len());
+        let mut prob = Vec::with_capacity(w.len());
+        for &v in w {
+            let e = PsbWeight::encode(v);
+            sign.push(e.sign as f32);
+            exp.push(e.exp as f32);
+            prob.push(e.prob);
+        }
+        PsbPlanes { sign, exp, prob, shape: shape.to_vec() }
+    }
+
+    /// Decode back to floats (expectation — exact inverse of `encode`).
+    pub fn decode(&self) -> Vec<f32> {
+        self.sign
+            .iter()
+            .zip(&self.exp)
+            .zip(&self.prob)
+            .map(|((s, e), p)| s * e.exp2() * (1.0 + p))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sign.is_empty()
+    }
+
+    /// View element `i` as a `PsbWeight`.
+    #[inline]
+    pub fn get(&self, i: usize) -> PsbWeight {
+        PsbWeight { sign: self.sign[i] as i8, exp: self.exp[i] as i8, prob: self.prob[i] }
+    }
+
+    /// Memory footprint in bits under a `(k_e, k_p)`-bit hardware layout
+    /// (sign + exponent + probability), per supplementary §1.1.
+    pub fn storage_bits(&self, exp_bits: u32, prob_bits: u32) -> u64 {
+        self.len() as u64 * (1 + exp_bits + prob_bits) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xorshift128Plus;
+
+    #[test]
+    fn encode_bijective() {
+        for w in [0.37f32, -1.9, 3.0, 0.001, -12.5, 1.0, -1.0, 0.5, 2.0_f32.powi(-20)] {
+            let e = PsbWeight::encode(w);
+            let back = e.decode();
+            assert!((back - w).abs() <= 1e-6 * w.abs().max(1.0), "w={w} back={back}");
+        }
+    }
+
+    #[test]
+    fn encode_zero_and_nonfinite() {
+        assert_eq!(PsbWeight::encode(0.0), PsbWeight::ZERO);
+        assert_eq!(PsbWeight::encode(f32::NAN), PsbWeight::ZERO);
+        assert_eq!(PsbWeight::encode(f32::INFINITY), PsbWeight::ZERO);
+    }
+
+    #[test]
+    fn exponent_window() {
+        // 2^e <= |w| < 2^{e+1}
+        for w in [0.3f32, 0.9, 1.5, 3.999, 4.0, 7.3] {
+            let e = PsbWeight::encode(w);
+            let lo = (e.exp as f32).exp2();
+            assert!(lo <= w && w < 2.0 * lo, "w={w} e={}", e.exp);
+        }
+    }
+
+    #[test]
+    fn power_of_two_has_zero_prob() {
+        for w in [0.25f32, 0.5, 1.0, 2.0, 4.0] {
+            assert!(PsbWeight::encode(w).prob < 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_sample_is_one_of_two_shifts() {
+        let e = PsbWeight::encode(3.0); // e=1, p=0.5 -> samples 2 or 4
+        let mut rng = Xorshift128Plus::seed_from(42);
+        for _ in 0..100 {
+            let s = e.sample_single(&mut rng);
+            assert!(s == 2.0 || s == 4.0, "s={s}");
+        }
+    }
+
+    #[test]
+    fn unbiased_and_variance_bounded() {
+        let mut rng = Xorshift128Plus::seed_from(7);
+        for (w, n) in [(0.75f32, 1u32), (-3.0, 4), (12.5, 16), (-0.2, 64)] {
+            let e = PsbWeight::encode(w);
+            let trials = 20_000;
+            let (mut sum, mut sq) = (0.0f64, 0.0f64);
+            for _ in 0..trials {
+                let v = e.sample_n(n, &mut rng) as f64;
+                sum += v;
+                sq += v * v;
+            }
+            let mean = sum / trials as f64;
+            let var = sq / trials as f64 - mean * mean;
+            let bound = (w as f64).powi(2) / (8.0 * n as f64);
+            assert!((mean - w as f64).abs() < 0.05 * w.abs() as f64 + 1e-3, "w={w} mean={mean}");
+            assert!(var <= bound * 1.2 + 1e-9, "w={w} n={n} var={var} bound={bound}");
+            // analytic variance agrees with the empirical one
+            assert!((var - e.variance(n) as f64).abs() < 0.1 * bound + 1e-6);
+        }
+    }
+
+    #[test]
+    fn planes_roundtrip() {
+        let w = vec![0.1f32, -0.5, 0.0, 2.25, -7.0, 0.003];
+        let planes = PsbPlanes::encode(&w, &[2, 3]);
+        let back = planes.decode();
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(planes.storage_bits(4, 4), 6 * 9);
+    }
+}

@@ -1,0 +1,186 @@
+//! Q16 fixed-point arithmetic: the paper's 16-bit intermediate format.
+//!
+//! All activations and accumulator outputs in PSB inference live on a
+//! 16-bit two's-complement grid covering `[-32, 32)` — i.e. Q5.10: one
+//! sign bit, 5 integer bits, 10 fractional bits (supplementary §1,
+//! "we quantize to 16-bit fixed-point numbers, ranging from -32 to 32").
+//!
+//! Two views are provided:
+//!
+//! * [`Q16`] — the bit-exact integer value (what the hardware would hold);
+//!   saturating arithmetic, shifts, and conversion.
+//! * [`quantize_f32`] — the float32-carried simulation used by the tensor
+//!   path, bit-compatible with the python `psb.quantize_q16` (same
+//!   round-to-nearest + saturation), so rust and JAX artifacts agree.
+
+/// Number of fractional bits in the Q5.10 format.
+pub const FRAC_BITS: u32 = 10;
+/// Scale factor between the real value and the integer representation.
+pub const SCALE: f32 = (1 << FRAC_BITS) as f32; // 1024
+/// Largest representable integer payload.
+pub const MAX_RAW: i32 = i16::MAX as i32; // 32767  ->  31.9990234375
+/// Smallest representable integer payload.
+pub const MIN_RAW: i32 = i16::MIN as i32; // -32768 -> -32.0
+
+/// A 16-bit fixed-point number in Q5.10 (range [-32, 32)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q16(pub i16);
+
+impl Q16 {
+    pub const ZERO: Q16 = Q16(0);
+    pub const ONE: Q16 = Q16(1 << FRAC_BITS);
+
+    /// Quantize a real value: round to nearest, saturate at the range ends.
+    #[inline]
+    pub fn from_f32(v: f32) -> Q16 {
+        let r = (v * SCALE).round();
+        Q16(r.clamp(MIN_RAW as f32, MAX_RAW as f32) as i16)
+    }
+
+    /// The real value this fixed-point number denotes.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE
+    }
+
+    /// Raw integer payload (what the ASIC datapath carries).
+    #[inline]
+    pub fn raw(self) -> i16 {
+        self.0
+    }
+
+    /// Saturating addition — the capacitor accumulator's add unit.
+    #[inline]
+    pub fn sat_add(self, other: Q16) -> Q16 {
+        Q16(self.0.saturating_add(other.0))
+    }
+
+    /// Arithmetic shift left by `k` bits (multiplication by 2^k), saturating.
+    /// This is the paper's barrel-shifter primitive (`x << e`).
+    #[inline]
+    pub fn shl_sat(self, k: u32) -> Q16 {
+        let wide = (self.0 as i32) << k.min(15);
+        Q16(wide.clamp(MIN_RAW, MAX_RAW) as i16)
+    }
+
+    /// Arithmetic shift right by `k` bits (division by 2^k, floor).
+    /// "Too many shifts of integers always result in the number 0" (Fig. 1).
+    #[inline]
+    pub fn shr(self, k: u32) -> Q16 {
+        Q16((self.0 as i32 >> k.min(31)) as i16)
+    }
+
+    /// ReLU: a gate on the sign bit (supplementary §1.1).
+    #[inline]
+    pub fn relu(self) -> Q16 {
+        if self.0 < 0 {
+            Q16::ZERO
+        } else {
+            self
+        }
+    }
+}
+
+/// Float-carried Q16 quantization: round-to-nearest, saturating.
+///
+/// Bit-compatible with python `compile.psb.quantize_q16`; the identity
+/// `quantize_f32(x) == Q16::from_f32(x).to_f32()` is property-tested.
+#[inline]
+pub fn quantize_f32(v: f32) -> f32 {
+    (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) / SCALE
+}
+
+/// Quantize a whole slice in place (hot path: used after every layer).
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_f32(*x);
+    }
+}
+
+/// A signed wide accumulator for capacitor sums (the "int32 add" row of
+/// the hardware table): Q16 inputs are accumulated exactly in i32 and
+/// renormalized (`>> log2 n`) only once at the end (Eq. 9).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accum(pub i64);
+
+impl Accum {
+    #[inline]
+    pub fn add_shifted(&mut self, x: Q16, shift: i32) {
+        // x << (e + b): negative total shifts divide (floor), as hardware
+        // right-shifts would.
+        let v = x.0 as i64;
+        if shift >= 0 {
+            self.0 += v << shift.min(40);
+        } else {
+            self.0 += v >> (-shift).min(40);
+        }
+    }
+
+    /// Final renormalization `>> log2 n` + saturation back to Q16.
+    #[inline]
+    pub fn finish(self, log2_n: u32) -> Q16 {
+        let v = self.0 >> log2_n;
+        Q16(v.clamp(MIN_RAW as i64, MAX_RAW as i64) as i16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_grid() {
+        for raw in [-32768i16, -1024, -1, 0, 1, 512, 32767] {
+            let q = Q16(raw);
+            assert_eq!(Q16::from_f32(q.to_f32()), q);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q16::from_f32(100.0).0, i16::MAX);
+        assert_eq!(Q16::from_f32(-100.0).0, i16::MIN);
+        assert_eq!(Q16::from_f32(31.999).0, i16::MAX);
+    }
+
+    #[test]
+    fn quantize_matches_struct() {
+        for v in [-35.0f32, -31.99951, -0.00049, 0.0, 0.3333, 5.4321, 33.3] {
+            assert_eq!(quantize_f32(v), Q16::from_f32(v).to_f32(), "v={v}");
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let one = Q16::ONE;
+        assert_eq!(one.shl_sat(2).to_f32(), 4.0);
+        assert_eq!(one.shr(1).to_f32(), 0.5);
+        // over-shifting right collapses to 0 (paper Fig. 1 caption)
+        assert_eq!(Q16::from_f32(0.004).shr(12).to_f32(), 0.0);
+        // over-shifting left saturates instead of wrapping
+        assert_eq!(Q16::from_f32(16.0).shl_sat(4).0, i16::MAX);
+    }
+
+    #[test]
+    fn relu_gate() {
+        assert_eq!(Q16::from_f32(-3.0).relu(), Q16::ZERO);
+        assert_eq!(Q16::from_f32(3.0).relu().to_f32(), 3.0);
+    }
+
+    #[test]
+    fn accumulator_shift_add() {
+        // 4 samples of x=1.0 with shift 0 and log2n=2 -> mean 1.0
+        let mut acc = Accum::default();
+        for _ in 0..4 {
+            acc.add_shifted(Q16::ONE, 0);
+        }
+        assert_eq!(acc.finish(2), Q16::ONE);
+    }
+
+    #[test]
+    fn accumulator_negative_shift() {
+        let mut acc = Accum::default();
+        acc.add_shifted(Q16::from_f32(2.0), -1); // 2.0 * 2^-1 = 1.0
+        assert_eq!(acc.finish(0).to_f32(), 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The PSB number system: Q16 fixed point, (s, e, p) weight encoding,
+//! probability discretization.
+
+pub mod discretize;
+pub mod encoding;
+pub mod fixed;
+
+pub use discretize::{clamp_exp, deterministic_counts, discretize_planes, discretize_prob};
+pub use encoding::{PsbPlanes, PsbWeight};
+pub use fixed::{quantize_f32, quantize_slice, Accum, Q16};

@@ -1,0 +1,131 @@
+//! Binomial(n, p) sampling — the rolled-up capacitor accumulator.
+//!
+//! Eq. 9 accumulates `n` Bernoulli-gated shifts; since the shift amounts
+//! take only two values, the sum is fully determined by the Binomial
+//! count `k` of "high" shifts (Eq. 8).  Sampling `k` directly instead of
+//! `n` individual bits is the same trick as the paper's Gumbel-max
+//! simulation (supp. Eq. 12-15) — here we use CDF inversion (exact, O(k)
+//! expected) with a direct bit-sum fallback for tiny `n`, plus a
+//! normal-approximation cut-over for very large `n` used only by the
+//! fig1 variance sweeps.
+
+use super::Rng;
+
+/// Exact Binomial(n, p) by summing `n` Bernoulli bits — the literal
+/// hardware semantics (one comparator bit per accumulation, Eq. 9).
+#[inline]
+pub fn binomial_bitsum(rng: &mut impl Rng, n: u32, p: f32) -> u32 {
+    (0..n).map(|_| rng.bernoulli(p) as u32).sum()
+}
+
+/// Binomial via CDF inversion: walk the pmf from k=0 accumulating
+/// probability until the uniform draw is covered.  Exact and fast for
+/// the small n (≤ 256) PSB uses; expected work O(np + 1).
+pub fn binomial_inversion(rng: &mut impl Rng, n: u32, p: f32) -> u32 {
+    if p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // Work on the smaller tail for numerical robustness and speed.
+    let flip = p > 0.5;
+    let q = if flip { 1.0 - p as f64 } else { p as f64 };
+    let u = rng.uniform() as f64;
+    let ratio = q / (1.0 - q);
+    let mut pmf = (1.0 - q).powi(n as i32); // P[k = 0]
+    if pmf <= 0.0 {
+        // (1-q)^n underflowed (q very close to 1 handled above; this is
+        // n huge) — fall back to the mean, only reachable in sweeps.
+        let k = (n as f64 * q).round() as u32;
+        return if flip { n - k } else { k };
+    }
+    let mut cdf = pmf;
+    let mut k = 0u32;
+    while u > cdf && k < n {
+        k += 1;
+        pmf *= ratio * ((n - k + 1) as f64) / k as f64;
+        cdf += pmf;
+    }
+    if flip {
+        n - k
+    } else {
+        k
+    }
+}
+
+/// Dispatching sampler used by `Rng::binomial`.
+#[inline]
+pub fn sample_binomial(rng: &mut impl Rng, n: u32, p: f32) -> u32 {
+    if n <= 8 {
+        binomial_bitsum(rng, n, p)
+    } else {
+        binomial_inversion(rng, n, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xorshift128Plus;
+
+    fn moments(f: impl Fn(&mut Xorshift128Plus) -> u32, trials: u32) -> (f64, f64) {
+        let mut rng = Xorshift128Plus::seed_from(2024);
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let k = f(&mut rng) as f64;
+            s += k;
+            s2 += k * k;
+        }
+        let mean = s / trials as f64;
+        (mean, s2 / trials as f64 - mean * mean)
+    }
+
+    #[test]
+    fn inversion_moments() {
+        for &(n, p) in &[(16u32, 0.3f32), (64, 0.5), (64, 0.9), (256, 0.05)] {
+            let (mean, var) = moments(|r| binomial_inversion(r, n, p), 40_000);
+            let em = n as f64 * p as f64;
+            let ev = em * (1.0 - p as f64);
+            assert!((mean - em).abs() < 0.05 * em.max(1.0), "n={n} p={p} mean={mean}");
+            assert!((var - ev).abs() < 0.1 * ev.max(1.0), "n={n} p={p} var={var}");
+        }
+    }
+
+    #[test]
+    fn bitsum_matches_inversion_distribution() {
+        let (m1, v1) = moments(|r| binomial_bitsum(r, 8, 0.4), 40_000);
+        let (m2, v2) = moments(|r| binomial_inversion(r, 8, 0.4), 40_000);
+        assert!((m1 - m2).abs() < 0.05, "{m1} vs {m2}");
+        assert!((v1 - v2).abs() < 0.1, "{v1} vs {v2}");
+    }
+
+    #[test]
+    fn corners() {
+        let mut rng = Xorshift128Plus::seed_from(1);
+        for n in [1u32, 7, 64] {
+            assert_eq!(binomial_inversion(&mut rng, n, 0.0), 0);
+            assert_eq!(binomial_inversion(&mut rng, n, 1.0), n);
+            assert_eq!(binomial_bitsum(&mut rng, n, 0.0), 0);
+            assert_eq!(binomial_bitsum(&mut rng, n, 1.0), n);
+        }
+    }
+
+    #[test]
+    fn range_invariant() {
+        let mut rng = Xorshift128Plus::seed_from(3);
+        for _ in 0..10_000 {
+            let n = 1 + (rng.below(256)) as u32;
+            let p = rng.uniform();
+            let k = sample_binomial(&mut rng, n, p);
+            assert!(k <= n, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn p_near_one_is_robust() {
+        // the flip-to-smaller-tail path: p = 0.999, n = 128
+        let (mean, _) = moments(|r| binomial_inversion(r, 128, 0.999), 20_000);
+        assert!((mean - 127.872).abs() < 0.1, "mean={mean}");
+    }
+}

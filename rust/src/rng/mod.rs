@@ -1,0 +1,151 @@
+//! Random-number substrate for stochastic binarization.
+//!
+//! The paper's hardware sketch uses linear-feedback shift registers
+//! (supplementary §1.1, "simple linear feedback shift registers are
+//! sufficient"); its software simulation used XORWOW (GPU) and MT19937
+//! (CPU) and "did not recognize any differences".  We provide three
+//! swappable generators plus Bernoulli/Binomial samplers, and re-verify
+//! the RNG-invariance claim in `experiments::fig1` / the rng ablation
+//! tests.
+
+pub mod binomial;
+pub mod lfsr;
+pub mod philox;
+pub mod xorshift;
+
+pub use binomial::sample_binomial;
+pub use lfsr::{Lfsr16, Lfsr32};
+pub use philox::Philox;
+pub use xorshift::Xorshift128Plus;
+
+/// Minimal RNG interface used across the simulator and coordinator.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f32` in `[0, 1)` (24 mantissa bits).
+    #[inline]
+    fn uniform(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// One Bernoulli(p) bit — the comparator in the stochastic multiplier.
+    #[inline]
+    fn bernoulli(&mut self, p: f32) -> bool {
+        self.uniform() < p
+    }
+
+    /// Binomial(n, p) count — the rolled-up capacitor accumulator (Eq. 8).
+    #[inline]
+    fn binomial(&mut self, n: u32, p: f32) -> u32
+    where
+        Self: Sized,
+    {
+        sample_binomial(self, n, p)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-free simple modulo; bias is
+    /// negligible for the bounds used here).
+    #[inline]
+    fn below(&mut self, bound: u64) -> u64 {
+        self.next_u64() % bound.max(1)
+    }
+}
+
+/// Which generator backs a simulation run (the paper's RNG ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngKind {
+    Xorshift,
+    Lfsr,
+    Philox,
+}
+
+/// A boxed generator selected at run time.
+pub enum AnyRng {
+    Xorshift(Xorshift128Plus),
+    Lfsr(Lfsr32),
+    Philox(Philox),
+}
+
+impl AnyRng {
+    pub fn new(kind: RngKind, seed: u64) -> AnyRng {
+        match kind {
+            RngKind::Xorshift => AnyRng::Xorshift(Xorshift128Plus::seed_from(seed)),
+            RngKind::Lfsr => AnyRng::Lfsr(Lfsr32::seed_from(seed)),
+            RngKind::Philox => AnyRng::Philox(Philox::seed_from(seed)),
+        }
+    }
+}
+
+impl Rng for AnyRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        match self {
+            AnyRng::Xorshift(r) => r.next_u64(),
+            AnyRng::Lfsr(r) => r.next_u64(),
+            AnyRng::Philox(r) => r.next_u64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_uniformity(mut rng: impl Rng, name: &str) {
+        let trials = 100_000;
+        let mut buckets = [0u32; 16];
+        let mut sum = 0.0f64;
+        for _ in 0..trials {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u), "{name}: u={u}");
+            sum += u as f64;
+            buckets[(u * 16.0) as usize] += 1;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{name}: mean={mean}");
+        for (i, b) in buckets.iter().enumerate() {
+            let expect = trials as f64 / 16.0;
+            assert!(
+                ((*b as f64) - expect).abs() < 6.0 * expect.sqrt(),
+                "{name}: bucket {i} = {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_generators_uniform() {
+        check_uniformity(Xorshift128Plus::seed_from(1), "xorshift");
+        check_uniformity(Lfsr32::seed_from(1), "lfsr32");
+        check_uniformity(Philox::seed_from(1), "philox");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Xorshift128Plus::seed_from(9);
+        for p in [0.0f32, 0.1, 0.5, 0.9, 1.0] {
+            let hits: u32 = (0..50_000).map(|_| rng.bernoulli(p) as u32).sum();
+            let rate = hits as f32 / 50_000.0;
+            assert!((rate - p).abs() < 0.01, "p={p} rate={rate}");
+        }
+    }
+
+    #[test]
+    fn any_rng_dispatch() {
+        for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
+            let mut rng = AnyRng::new(kind, 5);
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            assert_ne!(a, b);
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Xorshift128Plus::seed_from(123);
+        let mut b = Xorshift128Plus::seed_from(123);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

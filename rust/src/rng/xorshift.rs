@@ -1,0 +1,80 @@
+//! xorshift128+ — the workhorse generator for the simulator hot path.
+//!
+//! Same family as the XORWOW generator TensorFlow used on GPU in the
+//! paper's experiments (Marsaglia xorshift with an additive twist); three
+//! shifts + one add per 64 bits, trivially vectorizable, and empirically
+//! indistinguishable from MT19937 for PSB purposes (paper supp. §1.1).
+
+use super::Rng;
+
+/// xorshift128+ state (Vigna 2014 parameters 23/17/26).
+#[derive(Debug, Clone)]
+pub struct Xorshift128Plus {
+    s0: u64,
+    s1: u64,
+}
+
+impl Xorshift128Plus {
+    /// Seed via splitmix64 so that small / similar seeds decorrelate.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let s0 = next();
+        let mut s1 = next();
+        if s0 == 0 && s1 == 0 {
+            s1 = 1; // all-zero state is the lone fixed point
+        }
+        Xorshift128Plus { s0, s1 }
+    }
+}
+
+impl Rng for Xorshift128Plus {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonzero_state_from_zero_seed() {
+        let mut rng = Xorshift128Plus::seed_from(0);
+        assert_ne!(rng.next_u64(), 0u64.wrapping_add(0)); // progresses
+        let vals: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        assert!(vals.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Xorshift128Plus::seed_from(1);
+        let mut b = Xorshift128Plus::seed_from(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn bit_balance() {
+        let mut rng = Xorshift128Plus::seed_from(3);
+        let mut ones = 0u64;
+        let n = 10_000;
+        for _ in 0..n {
+            ones += rng.next_u64().count_ones() as u64;
+        }
+        let rate = ones as f64 / (n as f64 * 64.0);
+        assert!((rate - 0.5).abs() < 0.005, "rate={rate}");
+    }
+}

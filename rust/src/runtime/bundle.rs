@@ -1,0 +1,250 @@
+//! Weight bundles: the bridge from a trained rust [`Network`] to the
+//! AOT artifacts' input signature.
+//!
+//! The serving CNN artifact (see `python/compile/model.py`) takes weights
+//! as runtime buffers — per layer either `(w, bias)` (float module) or
+//! `(sign, exp, prob, bias)` PSB planes (psb modules).  Both rust and
+//! python build conv matrices in the identical im2col layout
+//! (`[(di·k+dj)·cin + ci, cout]`), so a network trained by `sim::train`
+//! exports directly.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::num::PsbPlanes;
+use crate::sim::network::{Network, Op};
+
+/// PSB planes + bias for one layer, flattened row-major.
+#[derive(Debug, Clone)]
+pub struct PsbLayer {
+    pub sign: Vec<f32>,
+    pub exp: Vec<f32>,
+    pub prob: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub shape: [usize; 2],
+}
+
+/// All PSB layers in artifact input order.
+#[derive(Debug, Clone)]
+pub struct PsbBundle {
+    pub layers: Vec<PsbLayer>,
+}
+
+/// Float weights + bias per layer.
+#[derive(Debug, Clone)]
+pub struct FloatLayer {
+    pub w: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub shape: [usize; 2],
+}
+
+#[derive(Debug, Clone)]
+pub struct FloatBundle {
+    pub layers: Vec<FloatLayer>,
+}
+
+impl FloatBundle {
+    /// Save to a simple line-oriented text format (offline build: no
+    /// JSON dependency):  one `layer K N` header per layer, then `w` and
+    /// `bias` lines of space-separated floats.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        writeln!(out, "float_bundle {}", self.layers.len())?;
+        for l in &self.layers {
+            writeln!(out, "layer {} {}", l.shape[0], l.shape[1])?;
+            writeln!(out, "w {}", join_floats(&l.w))?;
+            writeln!(out, "bias {}", join_floats(&l.bias))?;
+        }
+        Ok(std::fs::write(path, out)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FloatBundle> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty bundle"))?;
+        let count: usize = header
+            .strip_prefix("float_bundle ")
+            .ok_or_else(|| anyhow!("bad bundle header '{header}'"))?
+            .parse()?;
+        let mut layers = Vec::with_capacity(count);
+        for _ in 0..count {
+            let shape_line = lines.next().ok_or_else(|| anyhow!("truncated bundle"))?;
+            let toks: Vec<&str> = shape_line.split_whitespace().collect();
+            ensure!(toks.len() == 3 && toks[0] == "layer", "bad layer line '{shape_line}'");
+            let shape = [toks[1].parse()?, toks[2].parse()?];
+            let w = parse_floats(lines.next(), "w")?;
+            let bias = parse_floats(lines.next(), "bias")?;
+            ensure!(w.len() == shape[0] * shape[1], "weight length mismatch");
+            layers.push(FloatLayer { w, bias, shape });
+        }
+        Ok(FloatBundle { layers })
+    }
+}
+
+fn join_floats(xs: &[f32]) -> String {
+    let strs: Vec<String> = xs.iter().map(|v| format!("{v}")).collect();
+    strs.join(" ")
+}
+
+fn parse_floats(line: Option<&str>, tag: &str) -> Result<Vec<f32>> {
+    let line = line.ok_or_else(|| anyhow!("truncated bundle at '{tag}'"))?;
+    let rest = line
+        .strip_prefix(tag)
+        .ok_or_else(|| anyhow!("expected '{tag} ...' got '{line}'"))?;
+    rest.split_whitespace().map(|v| Ok(v.parse::<f32>()?)).collect()
+}
+
+/// Extract the linear layers (graph order) of a BN-folded network.
+fn linear_layers(net: &Network) -> Vec<(Vec<f32>, Vec<f32>, [usize; 2])> {
+    net.nodes
+        .iter()
+        .filter_map(|node| match node.op {
+            Op::Conv { k, cin, cout, .. } => {
+                Some((node.w.clone(), node.b.clone(), [k * k * cin, cout]))
+            }
+            Op::Dense { cin, cout } => Some((node.w.clone(), node.b.clone(), [cin, cout])),
+            _ => None,
+        })
+        .collect()
+}
+
+impl FloatBundle {
+    /// Export from a trained network. Folds BNs on a clone first.
+    pub fn from_network(net: &Network, expect_shapes: &[[usize; 2]]) -> Result<FloatBundle> {
+        let mut folded = net.clone();
+        crate::sim::fold::fold_batchnorms(&mut folded);
+        let layers = linear_layers(&folded);
+        check_shapes(&layers, expect_shapes)?;
+        Ok(FloatBundle {
+            layers: layers
+                .into_iter()
+                .map(|(w, mut bias, shape)| {
+                    if bias.is_empty() {
+                        bias = vec![0.0; shape[1]];
+                    }
+                    FloatLayer { w, bias, shape }
+                })
+                .collect(),
+        })
+    }
+}
+
+impl PsbBundle {
+    /// Bijectively PSB-encode a trained network's folded linear layers,
+    /// optionally discretizing probabilities to `prob_bits`.
+    pub fn from_network(
+        net: &Network,
+        expect_shapes: &[[usize; 2]],
+        prob_bits: Option<u32>,
+    ) -> Result<PsbBundle> {
+        let float = FloatBundle::from_network(net, expect_shapes)?;
+        Ok(PsbBundle::from_float(&float, prob_bits))
+    }
+
+    pub fn from_float(float: &FloatBundle, prob_bits: Option<u32>) -> PsbBundle {
+        let layers = float
+            .layers
+            .iter()
+            .map(|l| {
+                let mut planes = PsbPlanes::encode(&l.w, &[l.shape[0], l.shape[1]]);
+                if let Some(bits) = prob_bits {
+                    crate::num::discretize_planes(&mut planes, bits);
+                }
+                PsbLayer {
+                    sign: planes.sign,
+                    exp: planes.exp,
+                    prob: planes.prob,
+                    bias: l.bias.clone(),
+                    shape: l.shape,
+                }
+            })
+            .collect();
+        PsbBundle { layers }
+    }
+
+    /// Decoded float weights (expectation) — round-trip check helper.
+    pub fn decode_layer(&self, i: usize) -> Vec<f32> {
+        let l = &self.layers[i];
+        l.sign
+            .iter()
+            .zip(&l.exp)
+            .zip(&l.prob)
+            .map(|((s, e), p)| s * e.exp2() * (1.0 + p))
+            .collect()
+    }
+}
+
+fn check_shapes(
+    layers: &[(Vec<f32>, Vec<f32>, [usize; 2])],
+    expect: &[[usize; 2]],
+) -> Result<()> {
+    ensure!(
+        layers.len() == expect.len(),
+        "network has {} linear layers, artifact expects {}",
+        layers.len(),
+        expect.len()
+    );
+    for (i, ((w, _, shape), want)) in layers.iter().zip(expect).enumerate() {
+        if shape != want {
+            return Err(anyhow!("layer {i}: shape {shape:?} != artifact {want:?}"));
+        }
+        ensure!(w.len() == shape[0] * shape[1], "layer {i}: weight len");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::serving_cnn;
+    use crate::rng::Xorshift128Plus;
+
+    const SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+
+    #[test]
+    fn serving_cnn_matches_artifact_signature() {
+        let mut rng = Xorshift128Plus::seed_from(5);
+        let net = serving_cnn(&mut rng);
+        let fb = FloatBundle::from_network(&net, &SHAPES).unwrap();
+        assert_eq!(fb.layers.len(), 4);
+        for (l, s) in fb.layers.iter().zip(&SHAPES) {
+            assert_eq!(l.w.len(), s[0] * s[1]);
+            assert_eq!(l.bias.len(), s[1]);
+        }
+    }
+
+    #[test]
+    fn psb_bundle_roundtrips_weights() {
+        let mut rng = Xorshift128Plus::seed_from(6);
+        let net = serving_cnn(&mut rng);
+        let fb = FloatBundle::from_network(&net, &SHAPES).unwrap();
+        let pb = PsbBundle::from_float(&fb, None);
+        for i in 0..4 {
+            let dec = pb.decode_layer(i);
+            for (a, b) in dec.iter().zip(&fb.layers[i].w) {
+                assert!((a - b).abs() <= 2e-6 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut rng = Xorshift128Plus::seed_from(7);
+        let net = serving_cnn(&mut rng);
+        let bad = [[27usize, 16], [144, 32], [288, 32], [32, 11]];
+        assert!(FloatBundle::from_network(&net, &bad).is_err());
+    }
+
+    #[test]
+    fn discretized_probs_on_grid() {
+        let mut rng = Xorshift128Plus::seed_from(8);
+        let net = serving_cnn(&mut rng);
+        let pb = PsbBundle::from_network(&net, &SHAPES, Some(4)).unwrap();
+        for l in &pb.layers {
+            for &p in &l.prob {
+                let lv = p * 16.0;
+                assert!((lv - lv.round()).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), never a
+//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! PJRT handles are not `Send`; the coordinator therefore owns a
+//! [`Runtime`] on a dedicated thread (see `coordinator::engine`) and
+//! communicates over channels.  Compiled executables are cached per
+//! module name, so each `(n, batch)` variant compiles exactly once.
+
+pub mod bundle;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use bundle::{FloatBundle, PsbBundle};
+
+/// One module entry of `artifacts/meta.txt`.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub batch: usize,
+    pub kind: String,
+    pub n: Option<u32>,
+}
+
+/// Parsed `artifacts/meta.txt` (a flat whitespace format emitted by
+/// `aot.py` alongside the human-readable meta.json — the offline rust
+/// build carries no JSON dependency).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub image: usize,
+    pub num_classes: usize,
+    pub layer_shapes: Vec<LayerShape>,
+    pub q16_scale: u32,
+    pub sample_sizes: Vec<u32>,
+    pub batches: Vec<usize>,
+    pub modules: HashMap<String, ModuleInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub weight: [usize; 2],
+    pub bias: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.txt")).with_context(|| {
+            format!("reading {}/meta.txt — run `make artifacts`", dir.display())
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse the flat `meta.txt` format (see `aot.py::emit`).
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let mut meta = ArtifactMeta {
+            image: 0,
+            num_classes: 0,
+            layer_shapes: Vec::new(),
+            q16_scale: 0,
+            sample_sizes: Vec::new(),
+            batches: Vec::new(),
+            modules: HashMap::new(),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = || anyhow!("meta.txt line {}: bad record '{line}'", lineno + 1);
+            match toks.as_slice() {
+                [] => {}
+                ["image", v] => meta.image = v.parse().map_err(|_| err())?,
+                ["num_classes", v] => meta.num_classes = v.parse().map_err(|_| err())?,
+                ["q16_scale", v] => meta.q16_scale = v.parse().map_err(|_| err())?,
+                ["layers", v] => {
+                    let n: usize = v.parse().map_err(|_| err())?;
+                    meta.layer_shapes.reserve(n);
+                }
+                ["layer", _idx, k, n, bias] => meta.layer_shapes.push(LayerShape {
+                    weight: [k.parse().map_err(|_| err())?, n.parse().map_err(|_| err())?],
+                    bias: bias.parse().map_err(|_| err())?,
+                }),
+                ["sample_sizes", rest @ ..] => {
+                    meta.sample_sizes =
+                        rest.iter().map(|v| v.parse()).collect::<Result<_, _>>().map_err(|_| err())?;
+                }
+                ["batches", rest @ ..] => {
+                    meta.batches =
+                        rest.iter().map(|v| v.parse()).collect::<Result<_, _>>().map_err(|_| err())?;
+                }
+                ["module", name, kind, batch, n] => {
+                    meta.modules.insert(
+                        name.to_string(),
+                        ModuleInfo {
+                            kind: kind.to_string(),
+                            batch: batch.parse().map_err(|_| err())?,
+                            n: if *n == "-" { None } else { Some(n.parse().map_err(|_| err())?) },
+                        },
+                    );
+                }
+                _ => bail!("meta.txt line {}: unknown record '{line}'", lineno + 1),
+            }
+        }
+        if meta.image == 0 || meta.layer_shapes.is_empty() || meta.modules.is_empty() {
+            bail!("meta.txt incomplete: image={}, layers={}, modules={}",
+                meta.image, meta.layer_shapes.len(), meta.modules.len());
+        }
+        Ok(meta)
+    }
+
+    /// Name of the PSB module for `(n, batch)`.
+    pub fn psb_module(&self, n: u32, batch: usize) -> String {
+        format!("psb_n{n}_b{batch}")
+    }
+
+    pub fn float_module(&self, batch: usize) -> String {
+        format!("float_b{batch}")
+    }
+}
+
+/// Result of one model execution.
+#[derive(Debug, Clone)]
+pub struct Execution {
+    /// `[batch, num_classes]` logits, row-major.
+    pub logits: Vec<f32>,
+    /// `[batch, fh, fw, fc]` last-conv feature map.
+    pub feat: Vec<f32>,
+    pub feat_shape: [usize; 4],
+}
+
+/// The PJRT-backed model runtime (single-threaded; see module docs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// compile count (diagnostics / tests)
+    pub compiles: usize,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `meta.json` + `*.hlo.txt`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let meta = ArtifactMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, meta, cache: HashMap::new(), compiles: 0 })
+    }
+
+    /// Compile (or fetch from cache) a module by name.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(())
+    }
+
+    pub fn loaded_modules(&self) -> Vec<String> {
+        self.cache.keys().cloned().collect()
+    }
+
+    /// Execute a PSB module: inputs `(x, seed, per-layer sign/exp/prob/bias)`.
+    pub fn run_psb(
+        &mut self,
+        n: u32,
+        batch: usize,
+        x: &[f32],
+        seed: u32,
+        bundle: &PsbBundle,
+    ) -> Result<Execution> {
+        let name = self.meta.psb_module(n, batch);
+        self.ensure_loaded(&name)?;
+        let img = self.meta.image;
+        anyhow::ensure!(
+            x.len() == batch * img * img * 3,
+            "input size {} != batch {batch} × {img}×{img}×3",
+            x.len()
+        );
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 + bundle.layers.len() * 4);
+        inputs.push(
+            xla::Literal::vec1(x)
+                .reshape(&[batch as i64, img as i64, img as i64, 3])
+                .map_err(wrap)?,
+        );
+        inputs.push(xla::Literal::vec1(&[seed]));
+        for (layer, shape) in bundle.layers.iter().zip(&self.meta.layer_shapes) {
+            let dims = [shape.weight[0] as i64, shape.weight[1] as i64];
+            inputs.push(xla::Literal::vec1(&layer.sign).reshape(&dims).map_err(wrap)?);
+            inputs.push(xla::Literal::vec1(&layer.exp).reshape(&dims).map_err(wrap)?);
+            inputs.push(xla::Literal::vec1(&layer.prob).reshape(&dims).map_err(wrap)?);
+            inputs.push(xla::Literal::vec1(&layer.bias));
+        }
+        self.execute(&name, inputs, batch)
+    }
+
+    /// Execute the float baseline module: inputs `(x, per-layer w/bias)`.
+    pub fn run_float(
+        &mut self,
+        batch: usize,
+        x: &[f32],
+        bundle: &FloatBundle,
+    ) -> Result<Execution> {
+        let name = self.meta.float_module(batch);
+        self.ensure_loaded(&name)?;
+        let img = self.meta.image;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(1 + bundle.layers.len() * 2);
+        inputs.push(
+            xla::Literal::vec1(x)
+                .reshape(&[batch as i64, img as i64, img as i64, 3])
+                .map_err(wrap)?,
+        );
+        for (layer, shape) in bundle.layers.iter().zip(&self.meta.layer_shapes) {
+            let dims = [shape.weight[0] as i64, shape.weight[1] as i64];
+            inputs.push(xla::Literal::vec1(&layer.w).reshape(&dims).map_err(wrap)?);
+            inputs.push(xla::Literal::vec1(&layer.bias));
+        }
+        self.execute(&name, inputs, batch)
+    }
+
+    fn execute(
+        &mut self,
+        name: &str,
+        inputs: Vec<xla::Literal>,
+        batch: usize,
+    ) -> Result<Execution> {
+        let exe = self.cache.get(name).expect("ensure_loaded ran");
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let literal = result[0][0].to_literal_sync().map_err(wrap)?;
+        let outs = literal.to_tuple().map_err(wrap)?;
+        anyhow::ensure!(outs.len() == 2, "expected (logits, feat), got {} outputs", outs.len());
+        let logits = outs[0].to_vec::<f32>().map_err(wrap)?;
+        let feat = outs[1].to_vec::<f32>().map_err(wrap)?;
+        let nc = self.meta.num_classes;
+        anyhow::ensure!(logits.len() == batch * nc, "logits size mismatch");
+        let fh = self.meta.image / 4; // two stride-2 convs
+        let fc = feat.len() / (batch * fh * fh);
+        Ok(Execution { logits, feat, feat_shape: [batch, fh, fh, fc] })
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e:?}")
+}

@@ -1,0 +1,318 @@
+//! Capacitor units — the paper's core primitive (Sec. 3.1), in two
+//! faithfulness levels:
+//!
+//! 1. [`capacitor_matmul`] — the float32-carried *simulation* of Eq. 8
+//!    (exactly what the paper's TensorFlow implementation and our JAX/
+//!    Pallas artifacts compute): sample one Binomial count per weight,
+//!    dequantize `w̄_n = s·2^e·(1 + k/n)`, dense matmul, Q16-quantize.
+//! 2. [`capacitor_matmul_exact`] — the bit-exact integer semantics of
+//!    Eq. 9: per sample, a Bernoulli bit gates a barrel shift of the Q16
+//!    activation; everything accumulates in an integer accumulator and is
+//!    renormalized once by `>> log2 n`.  This is what the ASIC would do.
+//!
+//! The equivalence of (1) and (2) in distribution (up to Q16 rounding) is
+//! property-tested in `tests/capacitor_equivalence.rs`.
+
+
+use crate::costs::CostCounter;
+use crate::num::{quantize_f32, Accum, PsbPlanes, PsbWeight, Q16};
+use crate::rng::{Philox, Rng};
+
+/// Count the non-zero (un-pruned) weights of a plane set: pruned weights
+/// (`sign == 0`) never gate an addition, so they cost nothing (Sec. 4.4,
+/// "removes redundant computations").
+pub fn nnz(planes: &PsbPlanes) -> u64 {
+    planes.sign.iter().filter(|&&s| s != 0.0).count() as u64
+}
+
+/// Sample one Binomial count per weight of a plane set — "we sample the
+/// corresponding filter directly" (Sec. 4.1); the filter sample is shared
+/// across the batch dimension.
+pub fn sample_counts(planes: &PsbPlanes, n: u32, rng: &mut impl Rng) -> Vec<u32> {
+    planes.prob.iter().map(|&p| rng.binomial(n, p)).collect()
+}
+
+/// Dequantize sampled weights: `w̄_n[i] = s·2^e·(1 + k/n)`.
+pub fn realize_weights(planes: &PsbPlanes, counts: &[u32], n: u32) -> Vec<f32> {
+    let inv_n = 1.0 / n as f32;
+    planes
+        .sign
+        .iter()
+        .zip(&planes.exp)
+        .zip(counts)
+        .map(|((s, e), &k)| s * e.exp2() * (1.0 + k as f32 * inv_n))
+        .collect()
+}
+
+/// Float-simulated capacitor matmul (Eq. 8):
+/// `y[M,N] = q16( x[M,K] @ w̄_n[K,N] + bias )`.
+///
+/// Matches the L1 Pallas kernel's semantics; also charges the *hardware*
+/// cost (n gated int16 adds per MAC) to `costs`.
+pub fn capacitor_matmul(
+    x: &[f32],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    n_samples: u32,
+    rng: &mut impl Rng,
+    costs: &mut CostCounter,
+) -> Vec<f32> {
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(x.len(), m * k);
+    let counts = sample_counts(planes, n_samples, rng);
+    let wbar = realize_weights(planes, &counts, n_samples);
+    let mut y = crate::sim::tensor::matmul(x, &wbar, m, k, n);
+    if let Some(b) = bias {
+        for row in y.chunks_mut(n) {
+            for (v, bv) in row.iter_mut().zip(b) {
+                *v += bv;
+            }
+        }
+    }
+    for v in y.iter_mut() {
+        *v = quantize_f32(*v);
+    }
+    let _ = k;
+    costs.charge_capacitor(m as u64 * nnz(planes), n_samples);
+    y
+}
+
+/// As [`capacitor_matmul`] but with per-row sample sizes (the spatial
+/// attention path, Sec. 4.5): row `r` of `x` is computed at `n_rows[r]`
+/// samples.  Rows sharing a sample size share one filter draw, mirroring
+/// the paper's two-region split.
+pub fn capacitor_matmul_rowwise(
+    x: &[f32],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    n_rows: &[u32],
+    rng: &mut impl Rng,
+    costs: &mut CostCounter,
+) -> Vec<f32> {
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(n_rows.len(), m);
+    let mut levels: Vec<u32> = n_rows.to_vec();
+    levels.sort_unstable();
+    levels.dedup();
+    let mut y = vec![0.0f32; m * n];
+    for &lvl in &levels {
+        let counts = sample_counts(planes, lvl, rng);
+        let wbar = realize_weights(planes, &counts, lvl);
+        let rows: Vec<usize> = (0..m).filter(|&r| n_rows[r] == lvl).collect();
+        // gather the submatrix, multiply, scatter back
+        let mut sub = Vec::with_capacity(rows.len() * k);
+        for &r in &rows {
+            sub.extend_from_slice(&x[r * k..(r + 1) * k]);
+        }
+        let ysub = crate::sim::tensor::matmul(&sub, &wbar, rows.len(), k, n);
+        for (i, &r) in rows.iter().enumerate() {
+            let dst = &mut y[r * n..(r + 1) * n];
+            let src = &ysub[i * n..(i + 1) * n];
+            for (d, (s, b)) in dst
+                .iter_mut()
+                .zip(src.iter().zip(bias.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; n])))
+            {
+                *d = quantize_f32(s + b);
+            }
+        }
+        costs.charge_capacitor(rows.len() as u64 * nnz(planes), lvl);
+    }
+    let _ = k;
+    y
+}
+
+/// Bit-exact integer capacitor matmul (Eq. 9, the ASIC datapath):
+///
+/// ```text
+/// y_j = ( Σ_i Σ_{t=1..n}  x_i << (e_ij + B_ij^{(t)}) )  >> log2 n
+/// ```
+///
+/// `n` must be a power of two.  Randomness is counter-based (Philox) so
+/// results are reproducible regardless of the rayon schedule.
+pub fn capacitor_matmul_exact(
+    x_q: &[Q16],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    n_samples: u32,
+    seed: u64,
+    costs: &mut CostCounter,
+) -> Vec<Q16> {
+    assert!(n_samples.is_power_of_two(), "exact path needs power-of-two n");
+    let log2n = n_samples.trailing_zeros();
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(x_q.len(), m * k);
+    // One filter draw shared across rows (batch), as in the float path:
+    // counts[i*n+j] = number of high shifts for weight (i, j).
+    let counts: Vec<u32> = (0..k * n)
+        .map(|idx| {
+            let mut rng = Philox::substream(seed, idx as u64);
+            rng.binomial(n_samples, planes.prob[idx])
+        })
+        .collect();
+    let mut y = vec![Q16::ZERO; m * n];
+    y.chunks_mut(n).enumerate().for_each(|(row, yrow)| {
+        let xrow = &x_q[row * k..(row + 1) * k];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            let mut acc = Accum::default();
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wi = planes.get(i * n + j);
+                if wi.sign == 0 || xv.raw() == 0 {
+                    continue;
+                }
+                let kcnt = counts[i * n + j];
+                // k samples at shift e+1, (n-k) at shift e; signs fold
+                // into the accumulation (subtract when s = -1).
+                let e = wi.exp as i32;
+                let (mut hi, mut lo) = (Accum::default(), Accum::default());
+                hi.add_shifted(xv, e + 1);
+                lo.add_shifted(xv, e);
+                let contrib = kcnt as i64 * hi.0 + (n_samples - kcnt) as i64 * lo.0;
+                acc.0 += wi.sign as i64 * contrib;
+            }
+            let mut q = acc.finish(log2n);
+            if let Some(b) = bias {
+                q = q.sat_add(Q16::from_f32(b[j]));
+            }
+            *yv = q;
+        }
+    });
+    costs.charge_capacitor(m as u64 * nnz(planes), n_samples);
+    y
+}
+
+/// Multiply activations by a *stochastic scalar* per channel — the
+/// un-foldable batch-norm of the "ResNet50 modified" experiment (Sec.
+/// 4.3): each scale is PSB-encoded and sampled, so successive stochastic
+/// multiplications compound variance instead of folding away.
+pub fn stochastic_channel_scale(
+    x: &mut [f32],
+    scales: &[PsbWeight],
+    shifts: &[f32],
+    n_samples: u32,
+    rng: &mut impl Rng,
+    costs: &mut CostCounter,
+) {
+    let c = scales.len();
+    assert_eq!(x.len() % c, 0);
+    let sampled: Vec<f32> = scales.iter().map(|w| w.sample_n(n_samples, rng)).collect();
+    for chunk in x.chunks_mut(c) {
+        for ((v, s), b) in chunk.iter_mut().zip(&sampled).zip(shifts) {
+            *v = quantize_f32(*v * s + b);
+        }
+    }
+    costs.charge_capacitor((x.len()) as u64, n_samples);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::PsbPlanes;
+    use crate::rng::Xorshift128Plus;
+
+    fn planes_2x2() -> PsbPlanes {
+        PsbPlanes::encode(&[0.5, -1.5, 3.0, 0.25], &[2, 2])
+    }
+
+    #[test]
+    fn mean_converges_to_float_matmul() {
+        let planes = planes_2x2();
+        let w = planes.decode();
+        let x = [1.0f32, 2.0, -0.5, 0.25];
+        let want = crate::sim::tensor::matmul(&x, &w, 2, 2, 2);
+        let mut rng = Xorshift128Plus::seed_from(3);
+        let mut costs = CostCounter::default();
+        let trials = 3000;
+        let mut mean = vec![0.0f64; 4];
+        for _ in 0..trials {
+            let y = capacitor_matmul(&x, &planes, None, 2, 16, &mut rng, &mut costs);
+            for (m, v) in mean.iter_mut().zip(&y) {
+                *m += *v as f64;
+            }
+        }
+        for (m, w) in mean.iter().zip(&want) {
+            let m = m / trials as f64;
+            assert!((m - *w as f64).abs() < 0.05, "mean {m} want {w}");
+        }
+    }
+
+    #[test]
+    fn exact_path_matches_float_path_statistically() {
+        let planes = planes_2x2();
+        let xf = [1.0f32, 2.0, -0.5, 0.25];
+        let xq: Vec<Q16> = xf.iter().map(|&v| Q16::from_f32(v)).collect();
+        let w = planes.decode();
+        let want = crate::sim::tensor::matmul(&xf, &w, 2, 2, 2);
+        let mut costs = CostCounter::default();
+        let trials = 2000u64;
+        let mut mean = vec![0.0f64; 4];
+        for t in 0..trials {
+            let y = capacitor_matmul_exact(&xq, &planes, None, 2, 16, t, &mut costs);
+            for (m, v) in mean.iter_mut().zip(&y) {
+                *m += v.to_f32() as f64;
+            }
+        }
+        for (m, w) in mean.iter().zip(&want) {
+            let m = m / trials as f64;
+            // integer path floors at 1/1024 grid; generous tolerance
+            assert!((m - *w as f64).abs() < 0.05, "mean {m} want {w}");
+        }
+    }
+
+    #[test]
+    fn rowwise_matches_uniform_when_single_level() {
+        let planes = planes_2x2();
+        let x = [1.0f32, 2.0, -0.5, 0.25];
+        let mut costs = CostCounter::default();
+        let mut r1 = Xorshift128Plus::seed_from(10);
+        let mut r2 = Xorshift128Plus::seed_from(10);
+        let a = capacitor_matmul(&x, &planes, None, 2, 8, &mut r1, &mut costs);
+        let b = capacitor_matmul_rowwise(&x, &planes, None, 2, &[8, 8], &mut r2, &mut costs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rowwise_cost_is_mixed() {
+        let planes = planes_2x2();
+        let x = [1.0f32, 2.0, -0.5, 0.25];
+        let mut rng = Xorshift128Plus::seed_from(1);
+        let mut c_low = CostCounter::default();
+        capacitor_matmul(&x, &planes, None, 2, 8, &mut rng, &mut c_low);
+        let mut c_mix = CostCounter::default();
+        capacitor_matmul_rowwise(&x, &planes, None, 2, &[8, 16], &mut rng, &mut c_mix);
+        let mut c_high = CostCounter::default();
+        capacitor_matmul(&x, &planes, None, 2, 16, &mut rng, &mut c_high);
+        assert!(c_low.gated_adds < c_mix.gated_adds);
+        assert!(c_mix.gated_adds < c_high.gated_adds);
+        assert_eq!(c_mix.gated_adds, (c_low.gated_adds + c_high.gated_adds) / 2);
+    }
+
+    #[test]
+    fn bias_applied_and_quantized() {
+        let planes = PsbPlanes::encode(&[1.0], &[1, 1]);
+        let mut rng = Xorshift128Plus::seed_from(2);
+        let mut costs = CostCounter::default();
+        let y = capacitor_matmul(&[0.0], &planes, Some(&[1.5]), 1, 4, &mut rng, &mut costs);
+        assert_eq!(y, vec![1.5]);
+    }
+
+    #[test]
+    fn stochastic_scale_unbiased() {
+        let scales = vec![PsbWeight::encode(1.2), PsbWeight::encode(0.7)];
+        let shifts = vec![0.0f32, 0.0];
+        let mut rng = Xorshift128Plus::seed_from(8);
+        let mut costs = CostCounter::default();
+        let mut mean = [0.0f64; 2];
+        let trials = 4000;
+        for _ in 0..trials {
+            let mut x = vec![1.0f32, 1.0];
+            stochastic_channel_scale(&mut x, &scales, &shifts, 8, &mut rng, &mut costs);
+            mean[0] += x[0] as f64;
+            mean[1] += x[1] as f64;
+        }
+        assert!((mean[0] / trials as f64 - 1.2).abs() < 0.02);
+        assert!((mean[1] / trials as f64 - 0.7).abs() < 0.02);
+    }
+}

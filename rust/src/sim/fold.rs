@@ -1,0 +1,182 @@
+//! Batch-norm folding (paper Sec. 3, Eq. 2).
+//!
+//! At inference a batch norm is the fixed affine map `bn(y) = a·y + b`.
+//! When its producer is a linear layer consumed *only* by this BN, the map
+//! folds into the weights (`w ↦ a·w`, `bias ↦ a·bias + b`) and the BN node
+//! degenerates to `Identity`.  Folding *before* PSB encoding is crucial
+//! (Sec. 4.3): an unfolded BN becomes a *multiplication of stochastic
+//! numbers* on the PSB path and compounds variance — exactly the paper's
+//! "ResNet50 modified" failure, which `psbnet` reproduces by encoding
+//! leftover BNs as stochastic channel scales.
+
+use crate::sim::network::{Network, Op};
+
+/// Statistics of one folding pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FoldReport {
+    pub folded: usize,
+    /// BNs that could not be folded (producer not linear, or shared).
+    pub residual: usize,
+}
+
+/// Count how many nodes consume each node's output.
+fn consumer_counts(net: &Network) -> Vec<usize> {
+    let mut counts = vec![0usize; net.nodes.len()];
+    for node in &net.nodes {
+        for &i in &node.inputs {
+            counts[i] += 1;
+        }
+    }
+    counts
+}
+
+/// Fold every fold-able BN into its producing linear layer, in place.
+/// Returns what was folded and what remains.
+pub fn fold_batchnorms(net: &mut Network) -> FoldReport {
+    let consumers = consumer_counts(net);
+    let mut report = FoldReport::default();
+    for idx in 0..net.nodes.len() {
+        if net.nodes[idx].op != Op::BatchNorm {
+            continue;
+        }
+        let Some(bn) = net.nodes[idx].bn.as_ref() else {
+            // BN never materialized (no forward ran): nothing to fold.
+            report.residual += 1;
+            continue;
+        };
+        let src = net.nodes[idx].inputs[0];
+        let linear = net.nodes[src].op.has_weights();
+        if !linear || consumers[src] != 1 {
+            report.residual += 1;
+            continue;
+        }
+        let (a, b) = bn.affine();
+        let cout = a.len();
+        // Scale output-channel columns of the producer's weights.
+        match net.nodes[src].op {
+            Op::Conv { .. } | Op::Dense { .. } => {
+                // weights are [K, cout] row-major: column j scales by a[j]
+                let w = &mut net.nodes[src].w;
+                assert_eq!(w.len() % cout, 0, "weight/bn shape mismatch");
+                for row in w.chunks_mut(cout) {
+                    for (v, aj) in row.iter_mut().zip(&a) {
+                        *v *= aj;
+                    }
+                }
+            }
+            Op::Depthwise { .. } => {
+                // weights are [(di·k+dj)·c + ci]: channel ci scales by a[ci]
+                let w = &mut net.nodes[src].w;
+                assert_eq!(w.len() % cout, 0);
+                for tap in w.chunks_mut(cout) {
+                    for (v, aj) in tap.iter_mut().zip(&a) {
+                        *v *= aj;
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        if net.nodes[src].b.is_empty() {
+            net.nodes[src].b = vec![0.0; cout];
+        }
+        for ((bias, aj), bj) in net.nodes[src].b.iter_mut().zip(&a).zip(&b) {
+            *bias = *bias * aj + bj;
+        }
+        net.nodes[idx].op = Op::Identity;
+        net.nodes[idx].bn = None;
+        report.folded += 1;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xorshift128Plus;
+    use crate::sim::network::{Network, Op};
+    use crate::sim::tensor::Tensor;
+
+    fn trained_like_net(bn_after_add: bool) -> Network {
+        let mut net = Network::new((8, 8, 3), "foldtest");
+        let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 3 }, vec![0], "c1");
+        let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+        let r1 = net.add(Op::ReLU, vec![b1], "r1");
+        let c2 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 3 }, vec![r1], "c2");
+        let last = if bn_after_add {
+            // BN sits after the residual Add: NOT foldable
+            let a = net.add(Op::Add, vec![c2, 0], "add");
+            net.add(Op::BatchNorm, vec![a], "bn2")
+        } else {
+            let b2 = net.add(Op::BatchNorm, vec![c2], "bn2");
+            net.add(Op::Add, vec![b2, 0], "add")
+        };
+        let g = net.add(Op::GlobalAvgPool, vec![last], "gap");
+        net.add(Op::Dense { cin: 3, cout: 2 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(11);
+        net.init(&mut rng);
+        net
+    }
+
+    fn run_forward(net: &mut Network, seed: u64, training: bool) -> Tensor {
+        let mut rng = Xorshift128Plus::seed_from(seed);
+        let x = Tensor::from_vec(
+            (0..2 * 8 * 8 * 3).map(|_| {
+                use crate::rng::Rng;
+                rng.uniform()
+            }).collect(),
+            &[2, 8, 8, 3],
+        );
+        net.forward::<Xorshift128Plus>(&x, training, None).logits().clone()
+    }
+
+    #[test]
+    fn folding_preserves_eval_output() {
+        let mut net = trained_like_net(false);
+        // a few training steps' worth of forward to materialize BN stats
+        for s in 0..5 {
+            run_forward(&mut net, s, true);
+        }
+        let before = run_forward(&mut net, 99, false);
+        let report = fold_batchnorms(&mut net);
+        assert_eq!(report, FoldReport { folded: 2, residual: 0 });
+        let after = run_forward(&mut net, 99, false);
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bn_after_add_is_residual() {
+        let mut net = trained_like_net(true);
+        for s in 0..5 {
+            run_forward(&mut net, s, true);
+        }
+        let before = run_forward(&mut net, 99, false);
+        let report = fold_batchnorms(&mut net);
+        // bn1 folds; bn2 (after Add) cannot
+        assert_eq!(report, FoldReport { folded: 1, residual: 1 });
+        let after = run_forward(&mut net, 99, false);
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn shared_producer_not_folded() {
+        // conv output feeds both a BN and a shortcut -> folding would
+        // corrupt the shortcut; must stay residual.
+        let mut net = Network::new((8, 8, 3), "shared");
+        let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 3 }, vec![0], "c1");
+        let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+        let a = net.add(Op::Add, vec![b1, c1], "add"); // c1 consumed twice
+        let g = net.add(Op::GlobalAvgPool, vec![a], "gap");
+        net.add(Op::Dense { cin: 3, cout: 2 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(12);
+        net.init(&mut rng);
+        for s in 0..3 {
+            run_forward(&mut net, s, true);
+        }
+        let report = fold_batchnorms(&mut net);
+        assert_eq!(report, FoldReport { folded: 0, residual: 1 });
+    }
+}

@@ -1,0 +1,345 @@
+//! Float layer primitives (forward + backward) for the trainable
+//! simulator: batch norm, ReLU, pooling, softmax cross-entropy.
+//!
+//! Conv/dense are thin wrappers over `tensor::{im2col, matmul}` and live
+//! in `network.rs`; this module holds the stateful / non-linear pieces.
+
+use crate::sim::tensor::Tensor;
+
+/// Batch-normalization parameters and running statistics for one channel
+/// dimension (NHWC, normalized over N·H·W).
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    pub eps: f32,
+}
+
+/// Per-batch cache needed by the backward pass.
+#[derive(Debug, Clone)]
+pub struct BnCache {
+    pub xhat: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(c: usize) -> BatchNorm {
+        BatchNorm {
+            gamma: vec![1.0; c],
+            beta: vec![0.0; c],
+            running_mean: vec![0.0; c],
+            running_var: vec![1.0; c],
+            momentum: 0.9,
+            eps: 1e-5,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// Training-mode forward: normalize by batch statistics, update
+    /// running stats, return output + cache.
+    pub fn forward_train(&mut self, x: &Tensor) -> (Tensor, BnCache) {
+        let c = self.channels();
+        let rows = x.len() / c;
+        let mut mean = vec![0.0f32; c];
+        let mut var = vec![0.0f32; c];
+        for row in x.data.chunks(c) {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= rows as f32;
+        }
+        for row in x.data.chunks(c) {
+            for ((vv, v), m) in var.iter_mut().zip(row).zip(&mean) {
+                let d = v - m;
+                *vv += d * d;
+            }
+        }
+        for v in var.iter_mut() {
+            *v /= rows as f32;
+        }
+        for i in 0..c {
+            self.running_mean[i] =
+                self.momentum * self.running_mean[i] + (1.0 - self.momentum) * mean[i];
+            self.running_var[i] =
+                self.momentum * self.running_var[i] + (1.0 - self.momentum) * var[i];
+        }
+        let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v + self.eps).sqrt()).collect();
+        let mut out = Tensor::zeros(&x.shape);
+        let mut xhat = vec![0.0f32; x.len()];
+        for (r, (orow, xrow)) in out.data.chunks_mut(c).zip(x.data.chunks(c)).enumerate() {
+            let base = r * c;
+            for i in 0..c {
+                let xh = (xrow[i] - mean[i]) * inv_std[i];
+                xhat[base + i] = xh;
+                orow[i] = self.gamma[i] * xh + self.beta[i];
+            }
+        }
+        (out, BnCache { xhat, inv_std })
+    }
+
+    /// Inference-mode forward: the fixed affine map of Eq. 2
+    /// (`bn(y) = a·y + b` with constants from running stats).
+    pub fn forward_eval(&self, x: &Tensor) -> Tensor {
+        let (a, b) = self.affine();
+        let c = self.channels();
+        let mut out = x.clone();
+        for row in out.data.chunks_mut(c) {
+            for i in 0..c {
+                row[i] = a[i] * row[i] + b[i];
+            }
+        }
+        out
+    }
+
+    /// The folded constants `(a, b)` such that `bn(y) = a·y + b` (Eq. 2).
+    pub fn affine(&self) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = self
+            .gamma
+            .iter()
+            .zip(&self.running_var)
+            .map(|(g, v)| g / (v + self.eps).sqrt())
+            .collect();
+        let b: Vec<f32> = self
+            .beta
+            .iter()
+            .zip(&self.running_mean)
+            .zip(&a)
+            .map(|((bt, m), a)| bt - m * a)
+            .collect();
+        (a, b)
+    }
+
+    /// Backward pass (training statistics): returns (dx, dgamma, dbeta).
+    pub fn backward(&self, dy: &Tensor, cache: &BnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
+        let c = self.channels();
+        let rows = dy.len() / c;
+        let mut dgamma = vec![0.0f32; c];
+        let mut dbeta = vec![0.0f32; c];
+        for (r, dyrow) in dy.data.chunks(c).enumerate() {
+            let base = r * c;
+            for i in 0..c {
+                dgamma[i] += dyrow[i] * cache.xhat[base + i];
+                dbeta[i] += dyrow[i];
+            }
+        }
+        let m = rows as f32;
+        let mut dx = Tensor::zeros(&dy.shape);
+        for (r, (dxrow, dyrow)) in dx.data.chunks_mut(c).zip(dy.data.chunks(c)).enumerate() {
+            let base = r * c;
+            for i in 0..c {
+                // standard BN backward:
+                // dx = (g·inv_std/m) · (m·dy − dbeta − xhat·dgamma)
+                dxrow[i] = self.gamma[i] * cache.inv_std[i] / m
+                    * (m * dyrow[i] - dbeta[i] - cache.xhat[base + i] * dgamma[i]);
+            }
+        }
+        (dx, dgamma, dbeta)
+    }
+}
+
+/// ReLU forward; returns output and the mask for backward.
+pub fn relu_forward(x: &Tensor) -> (Tensor, Vec<bool>) {
+    let mask: Vec<bool> = x.data.iter().map(|&v| v > 0.0).collect();
+    let out = x.clone().map(|v| v.max(0.0));
+    (out, mask)
+}
+
+pub fn relu_backward(dy: &Tensor, mask: &[bool]) -> Tensor {
+    let data = dy.data.iter().zip(mask).map(|(d, &m)| if m { *d } else { 0.0 }).collect();
+    Tensor { data, shape: dy.shape.clone() }
+}
+
+/// Global average pool `[B,H,W,C] -> [B,C]`.
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (b, h, w, c) = crate::sim::tensor::dims4(x);
+    let mut out = Tensor::zeros(&[b, c]);
+    for bi in 0..b {
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ci in 0..c {
+                out.data[bi * c + ci] += x.data[src + ci];
+            }
+        }
+        for ci in 0..c {
+            out.data[bi * c + ci] /= (h * w) as f32;
+        }
+    }
+    out
+}
+
+pub fn global_avg_pool_backward(dy: &Tensor, in_shape: &[usize]) -> Tensor {
+    let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+    let scale = 1.0 / (h * w) as f32;
+    let mut dx = Tensor::zeros(in_shape);
+    for bi in 0..b {
+        for p in 0..h * w {
+            let dst = (bi * h * w + p) * c;
+            for ci in 0..c {
+                dx.data[dst + ci] = dy.data[bi * c + ci] * scale;
+            }
+        }
+    }
+    dx
+}
+
+/// Softmax cross-entropy over logits `[B, C]` with integer labels.
+/// Returns (mean loss, dlogits).
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    let b = logits.shape[0];
+    let c = logits.shape[1];
+    assert_eq!(labels.len(), b);
+    let mut loss = 0.0f32;
+    let mut dl = Tensor::zeros(&logits.shape);
+    for (bi, row) in logits.data.chunks(c).enumerate() {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - max).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let label = labels[bi];
+        loss += z.ln() - (row[label] - max);
+        for ci in 0..c {
+            let p = exps[ci] / z;
+            dl.data[bi * c + ci] = (p - if ci == label { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f32, dl)
+}
+
+/// Softmax probabilities per row (used by the attention entropy).
+pub fn softmax_rows(x: &[f32], c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (orow, row) in out.chunks_mut(c).zip(x.chunks(c)) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (o, v) in orow.iter_mut().zip(row) {
+            *o = (v - max).exp();
+            z += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= z;
+        }
+    }
+    out
+}
+
+/// Argmax per row — the classification decision (softmax itself can be
+/// skipped at inference, supp. §1.1 "Classification Layer").
+pub fn argmax_rows(x: &[f32], c: usize) -> Vec<usize> {
+    x.chunks(c)
+        .map(|row| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xorshift128Plus};
+
+    #[test]
+    fn bn_train_normalizes() {
+        let mut bn = BatchNorm::new(2);
+        let x = Tensor::from_vec(vec![1.0, 10.0, 3.0, 20.0, 5.0, 30.0], &[3, 2]);
+        let (y, _) = bn.forward_train(&x);
+        // per-channel mean ~0, var ~1
+        let mean0 = (y.data[0] + y.data[2] + y.data[4]) / 3.0;
+        assert!(mean0.abs() < 1e-5);
+        let var0 = (y.data[0].powi(2) + y.data[2].powi(2) + y.data[4].powi(2)) / 3.0;
+        assert!((var0 - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bn_eval_is_affine_of_running_stats() {
+        let mut bn = BatchNorm::new(1);
+        bn.running_mean = vec![2.0];
+        bn.running_var = vec![4.0];
+        bn.gamma = vec![3.0];
+        bn.beta = vec![1.0];
+        let x = Tensor::from_vec(vec![4.0], &[1, 1]);
+        let y = bn.forward_eval(&x);
+        // (4-2)/2 * 3 + 1 = 4
+        assert!((y.data[0] - 4.0).abs() < 1e-3);
+        let (a, b) = bn.affine();
+        assert!((a[0] * 4.0 + b[0] - 4.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bn_backward_gradcheck() {
+        let mut bn = BatchNorm::new(2);
+        bn.gamma = vec![1.5, 0.5];
+        let x = Tensor::from_vec(vec![0.5, -1.0, 2.0, 0.3, -0.7, 1.1], &[3, 2]);
+        let (_, cache) = bn.forward_train(&x);
+        let dy = Tensor::from_vec(vec![1.0, 0.5, -0.3, 0.2, 0.8, -1.0], &[3, 2]);
+        let (dx, _, _) = bn.backward(&dy, &cache);
+        // numeric gradient wrt x[0]
+        let eps = 1e-3;
+        let f = |xv: f32| {
+            let mut bn2 = BatchNorm::new(2);
+            bn2.gamma = vec![1.5, 0.5];
+            let mut xd = x.data.clone();
+            xd[0] = xv;
+            let (y, _) = bn2.forward_train(&Tensor::from_vec(xd, &[3, 2]));
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let num = (f(x.data[0] + eps) - f(x.data[0] - eps)) / (2.0 * eps);
+        assert!((num - dx.data[0]).abs() < 1e-2, "num={num} ana={}", dx.data[0]);
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let x = Tensor::from_vec(vec![-1.0, 0.0, 2.0], &[3]);
+        let (y, mask) = relu_forward(&x);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0]);
+        let dx = relu_backward(&Tensor::from_vec(vec![5.0, 5.0, 5.0], &[3]), &mask);
+        assert_eq!(dx.data, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn gap_forward_backward_adjoint() {
+        let mut rng = Xorshift128Plus::seed_from(4);
+        let x = Tensor::from_vec((0..2 * 2 * 2 * 3).map(|_| rng.uniform()).collect(), &[2, 2, 2, 3]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.shape, vec![2, 3]);
+        let dy = Tensor::from_vec((0..6).map(|_| rng.uniform()).collect(), &[2, 3]);
+        let dx = global_avg_pool_backward(&dy, &x.shape);
+        let lhs: f32 = y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.data.iter().zip(&dx.data).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_ce_gradcheck() {
+        let logits = Tensor::from_vec(vec![1.0, 2.0, 0.5, -1.0, 0.0, 3.0], &[2, 3]);
+        let labels = [1usize, 2];
+        let (loss, dl) = softmax_cross_entropy(&logits, &labels);
+        assert!(loss > 0.0);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp.data[i] += eps;
+            let (l1, _) = softmax_cross_entropy(&lp, &labels);
+            let mut lm = logits.clone();
+            lm.data[i] -= eps;
+            let (l2, _) = softmax_cross_entropy(&lm, &labels);
+            let num = (l1 - l2) / (2.0 * eps);
+            assert!((num - dl.data[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn argmax_and_softmax_rows() {
+        let x = vec![1.0, 3.0, 2.0, 0.0, -1.0, -2.0];
+        assert_eq!(argmax_rows(&x, 3), vec![1, 0]);
+        let p = softmax_rows(&x, 3);
+        assert!((p[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+    }
+}

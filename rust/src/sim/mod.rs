@@ -1,0 +1,17 @@
+//! Pure-rust PSB simulator substrate: tensors, layers, capacitor units,
+//! trainable CNN DAGs, batch-norm folding, and prepared PSB inference
+//! networks.
+
+pub mod capacitor;
+pub mod fold;
+pub mod layers;
+pub mod network;
+pub mod psbnet;
+pub mod tensor;
+pub mod train;
+
+pub use fold::fold_batchnorms;
+pub use network::{Network, Op};
+pub use psbnet::{Precision, PsbNetwork, PsbOptions, PsbOutput};
+pub use tensor::Tensor;
+pub use train::{evaluate, evaluate_psb, train, TrainConfig};

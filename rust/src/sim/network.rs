@@ -1,0 +1,628 @@
+//! Trainable CNN graphs (small DAGs) for the PSB experiments.
+//!
+//! A [`Network`] is a topologically-ordered list of nodes; each node names
+//! its input nodes by index, so residual shortcuts (`Add`) and separable
+//! convolutions compose naturally.  The float path supports training
+//! (forward caches + manual backprop); PSB inference runs on the folded /
+//! encoded [`crate::sim::psbnet::PsbNetwork`] built from a trained float
+//! network.
+//!
+//! Training can optionally *stochastify* the linear layers (forward uses a
+//! sampled `w̄_n`, gradients flow to the continuous weights unchanged) —
+//! the paper's training mode (supplementary "Backward pass": "we compute
+//! gradients as if no modification was made to the weights").
+
+
+use crate::num::PsbPlanes;
+use crate::rng::Rng;
+use crate::sim::capacitor::{realize_weights, sample_counts};
+use crate::sim::layers::{
+    global_avg_pool, global_avg_pool_backward, relu_backward, relu_forward, BatchNorm, BnCache,
+};
+use crate::sim::tensor::{col2im, dims4, im2col, matmul, matmul_at_b, matmul_b_t, Tensor};
+
+/// Node operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// The network input placeholder (exactly one, node 0).
+    Input,
+    /// SAME-padded KxK convolution via im2col; weights `[k·k·cin, cout]`.
+    Conv { k: usize, stride: usize, cin: usize, cout: usize },
+    /// Depthwise KxK convolution; weights `[k·k, c]` stored `[(di·k+dj)·c + ci]`.
+    Depthwise { k: usize, stride: usize, c: usize },
+    /// Fully connected; weights `[cin, cout]`.
+    Dense { cin: usize, cout: usize },
+    /// Batch normalization over the channel (last) dimension.
+    BatchNorm,
+    /// Pass-through (left behind when a BatchNorm is folded away).
+    Identity,
+    ReLU,
+    /// Elementwise sum of two inputs (residual shortcut).
+    Add,
+    /// `[B,H,W,C] -> [B,C]`.
+    GlobalAvgPool,
+}
+
+impl Op {
+    pub fn has_weights(&self) -> bool {
+        matches!(self, Op::Conv { .. } | Op::Depthwise { .. } | Op::Dense { .. })
+    }
+}
+
+/// One graph node with its parameters.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub bn: Option<BatchNorm>,
+    pub name: String,
+}
+
+/// A small CNN DAG. `nodes` is in topological order; the last node's
+/// output is the logits.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub nodes: Vec<Node>,
+    /// (H, W, C) of the input image.
+    pub input_hwc: (usize, usize, usize),
+    /// Node whose activation is "the last convolutional layer" for the
+    /// attention mechanism (Sec. 4.5); set by the model builders.
+    pub feat_node: Option<usize>,
+    pub name: String,
+}
+
+/// Per-forward caches needed by backward (and by diagnostics).
+pub struct Caches {
+    /// Activation of every node (last = logits).
+    pub acts: Vec<Tensor>,
+    cols: Vec<Option<Tensor>>,
+    relu_masks: Vec<Option<Vec<bool>>>,
+    bn_caches: Vec<Option<BnCache>>,
+    /// Stochastified weights actually used in the forward (training mode).
+    wbars: Vec<Option<Vec<f32>>>,
+}
+
+impl Caches {
+    pub fn logits(&self) -> &Tensor {
+        self.acts.last().unwrap()
+    }
+}
+
+/// Parameter gradients, parallel to `Network::nodes`.
+pub struct Grads {
+    pub dw: Vec<Vec<f32>>,
+    pub db: Vec<Vec<f32>>,
+    pub dgamma: Vec<Vec<f32>>,
+    pub dbeta: Vec<Vec<f32>>,
+}
+
+/// Stochastic-forward context for PSB-mode training (paper Fig. 2).
+pub struct StochForward<'a, R: Rng> {
+    pub n: u32,
+    pub rng: &'a mut R,
+}
+
+impl Network {
+    pub fn new(input_hwc: (usize, usize, usize), name: &str) -> Network {
+        let input = Node {
+            op: Op::Input,
+            inputs: vec![],
+            w: vec![],
+            b: vec![],
+            bn: None,
+            name: "input".into(),
+        };
+        Network { nodes: vec![input], input_hwc, feat_node: None, name: name.into() }
+    }
+
+    /// Append a node; returns its index.
+    pub fn add(&mut self, op: Op, inputs: Vec<usize>, name: &str) -> usize {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "forward reference in DAG");
+        }
+        let bn = if op == Op::BatchNorm { None } else { None };
+        self.nodes.push(Node { op, inputs, w: vec![], b: vec![], bn, name: name.into() });
+        self.nodes.len() - 1
+    }
+
+    /// Total trainable parameter count.
+    pub fn num_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                n.w.len()
+                    + n.b.len()
+                    + n.bn.as_ref().map(|bn| bn.gamma.len() + bn.beta.len()).unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Initialize all weights (LeCun normal — the paper's Cifar init) and
+    /// BN states. Deterministic from `rng`.
+    pub fn init(&mut self, rng: &mut impl Rng) {
+        for node in self.nodes.iter_mut() {
+            let (wlen, blen, fan_in, bn_c) = match node.op {
+                Op::Conv { k, cin, cout, .. } => (k * k * cin * cout, cout, k * k * cin, 0),
+                Op::Depthwise { k, c, .. } => (k * k * c, c, k * k, 0),
+                Op::Dense { cin, cout } => (cin * cout, cout, cin, 0),
+                Op::BatchNorm => (0, 0, 0, 1),
+                _ => (0, 0, 0, 0),
+            };
+            if wlen > 0 {
+                let std = 1.0 / (fan_in as f32).sqrt();
+                node.w = (0..wlen).map(|_| gaussian(rng) * std).collect();
+                node.b = vec![0.0; blen];
+            }
+            if bn_c == 1 {
+                // channel count resolved lazily at first forward
+                node.bn = None;
+            }
+        }
+    }
+
+    fn ensure_bn(&mut self, idx: usize, c: usize) {
+        if self.nodes[idx].bn.is_none() {
+            self.nodes[idx].bn = Some(BatchNorm::new(c));
+        }
+        assert_eq!(self.nodes[idx].bn.as_ref().unwrap().channels(), c, "BN channel mismatch");
+    }
+
+    /// Forward pass. `training` selects BN batch statistics (+ running
+    /// update); `stoch` replaces linear weights by `w̄_n` samples.
+    pub fn forward<R: Rng>(
+        &mut self,
+        x: &Tensor,
+        training: bool,
+        mut stoch: Option<StochForward<R>>,
+    ) -> Caches {
+        let n_nodes = self.nodes.len();
+        let mut caches = Caches {
+            acts: Vec::with_capacity(n_nodes),
+            cols: vec![None; n_nodes],
+            relu_masks: vec![None; n_nodes],
+            bn_caches: vec![None; n_nodes],
+            wbars: vec![None; n_nodes],
+        };
+        for idx in 0..n_nodes {
+            let op = self.nodes[idx].op.clone();
+            let act: Tensor = match op {
+                Op::Input => x.clone(),
+                Op::Conv { k, stride, cin: _, cout } => {
+                    let inp = &caches.acts[self.nodes[idx].inputs[0]];
+                    let (b, _, _, _) = dims4(inp);
+                    let (cols, ho, wo) = im2col(inp, k, stride);
+                    let kdim = cols.shape[1];
+                    let wbar = self.maybe_stochastify(idx, &mut stoch);
+                    let weff: &[f32] = wbar.as_deref().unwrap_or(&self.nodes[idx].w);
+                    let mut y = matmul(&cols.data, weff, cols.shape[0], kdim, cout);
+                    add_bias(&mut y, &self.nodes[idx].b);
+                    caches.cols[idx] = Some(cols);
+                    caches.wbars[idx] = wbar;
+                    Tensor::from_vec(y, &[b, ho, wo, cout])
+                }
+                Op::Depthwise { k, stride, c } => {
+                    let inp = &caches.acts[self.nodes[idx].inputs[0]];
+                    let wbar = self.maybe_stochastify(idx, &mut stoch);
+                    let weff: Vec<f32> =
+                        wbar.clone().unwrap_or_else(|| self.nodes[idx].w.clone());
+                    caches.wbars[idx] = wbar;
+                    depthwise_forward(inp, &weff, &self.nodes[idx].b, k, stride, c)
+                }
+                Op::Dense { cin, cout } => {
+                    let inp = &caches.acts[self.nodes[idx].inputs[0]];
+                    let m = inp.len() / cin;
+                    let wbar = self.maybe_stochastify(idx, &mut stoch);
+                    let weff: &[f32] = wbar.as_deref().unwrap_or(&self.nodes[idx].w);
+                    let mut y = matmul(&inp.data, weff, m, cin, cout);
+                    add_bias(&mut y, &self.nodes[idx].b);
+                    caches.wbars[idx] = wbar;
+                    Tensor::from_vec(y, &[m, cout])
+                }
+                Op::BatchNorm => {
+                    let inp = caches.acts[self.nodes[idx].inputs[0]].clone();
+                    let c = *inp.shape.last().unwrap();
+                    self.ensure_bn(idx, c);
+                    let bn = self.nodes[idx].bn.as_mut().unwrap();
+                    if training {
+                        let (y, cache) = bn.forward_train(&inp);
+                        caches.bn_caches[idx] = Some(cache);
+                        y
+                    } else {
+                        bn.forward_eval(&inp)
+                    }
+                }
+                Op::Identity => caches.acts[self.nodes[idx].inputs[0]].clone(),
+                Op::ReLU => {
+                    let inp = &caches.acts[self.nodes[idx].inputs[0]];
+                    let (y, mask) = relu_forward(inp);
+                    caches.relu_masks[idx] = Some(mask);
+                    y
+                }
+                Op::Add => {
+                    let a = &caches.acts[self.nodes[idx].inputs[0]];
+                    let b = &caches.acts[self.nodes[idx].inputs[1]];
+                    a.add(b)
+                }
+                Op::GlobalAvgPool => {
+                    global_avg_pool(&caches.acts[self.nodes[idx].inputs[0]])
+                }
+            };
+            caches.acts.push(act);
+        }
+        caches
+    }
+
+    fn maybe_stochastify<R: Rng>(
+        &self,
+        idx: usize,
+        stoch: &mut Option<StochForward<R>>,
+    ) -> Option<Vec<f32>> {
+        let s = stoch.as_mut()?;
+        let planes = PsbPlanes::encode(&self.nodes[idx].w, &[self.nodes[idx].w.len()]);
+        let counts = sample_counts(&planes, s.n, s.rng);
+        Some(realize_weights(&planes, &counts, s.n))
+    }
+
+    /// Backward pass from `dlogits`; returns parameter gradients.
+    /// Stochastified forwards use straight-through gradients (continuous
+    /// weights), per the paper's training recipe.
+    pub fn backward(&self, caches: &Caches, dlogits: Tensor) -> Grads {
+        let n_nodes = self.nodes.len();
+        let mut dacts: Vec<Option<Tensor>> = vec![None; n_nodes];
+        dacts[n_nodes - 1] = Some(dlogits);
+        let mut grads = Grads {
+            dw: self.nodes.iter().map(|n| vec![0.0; n.w.len()]).collect(),
+            db: self.nodes.iter().map(|n| vec![0.0; n.b.len()]).collect(),
+            dgamma: self
+                .nodes
+                .iter()
+                .map(|n| vec![0.0; n.bn.as_ref().map(|b| b.gamma.len()).unwrap_or(0)])
+                .collect(),
+            dbeta: self
+                .nodes
+                .iter()
+                .map(|n| vec![0.0; n.bn.as_ref().map(|b| b.beta.len()).unwrap_or(0)])
+                .collect(),
+        };
+        for idx in (0..n_nodes).rev() {
+            let dy = match dacts[idx].take() {
+                Some(d) => d,
+                None => continue, // unused branch
+            };
+            let node = &self.nodes[idx];
+            match node.op {
+                Op::Input => {}
+                Op::Conv { k, stride, cin: _, cout } => {
+                    let cols = caches.cols[idx].as_ref().expect("conv cache");
+                    let m = cols.shape[0];
+                    let kdim = cols.shape[1];
+                    // straight-through: grads use the continuous weights
+                    grads.dw[idx] = matmul_at_b(&cols.data, &dy.data, m, kdim, cout);
+                    bias_grad(&mut grads.db[idx], &dy.data, cout);
+                    let dcols = matmul_b_t(&dy.data, &node.w, m, kdim, cout);
+                    let in_t = &caches.acts[node.inputs[0]];
+                    let (b, h, w, c) = dims4(in_t);
+                    let dx = col2im(
+                        &Tensor::from_vec(dcols, &[m, kdim]),
+                        (b, h, w, c),
+                        k,
+                        stride,
+                    );
+                    accumulate(&mut dacts[node.inputs[0]], dx);
+                }
+                Op::Depthwise { k, stride, c } => {
+                    let in_t = &caches.acts[node.inputs[0]];
+                    let (dx, dw, db) =
+                        depthwise_backward(in_t, &node.w, &dy, k, stride, c);
+                    grads.dw[idx] = dw;
+                    grads.db[idx] = db;
+                    accumulate(&mut dacts[node.inputs[0]], dx);
+                }
+                Op::Dense { cin, cout } => {
+                    let inp = &caches.acts[node.inputs[0]];
+                    let m = inp.len() / cin;
+                    grads.dw[idx] = matmul_at_b(&inp.data, &dy.data, m, cin, cout);
+                    bias_grad(&mut grads.db[idx], &dy.data, cout);
+                    let dx = matmul_b_t(&dy.data, &node.w, m, cin, cout);
+                    accumulate(
+                        &mut dacts[node.inputs[0]],
+                        Tensor::from_vec(dx, &inp.shape.clone()),
+                    );
+                }
+                Op::BatchNorm => {
+                    let bn = node.bn.as_ref().expect("bn init");
+                    let cache = caches.bn_caches[idx].as_ref().expect("bn cache");
+                    let (dx, dgamma, dbeta) = bn.backward(&dy, cache);
+                    grads.dgamma[idx] = dgamma;
+                    grads.dbeta[idx] = dbeta;
+                    accumulate(&mut dacts[node.inputs[0]], dx);
+                }
+                Op::Identity => accumulate(&mut dacts[node.inputs[0]], dy),
+                Op::ReLU => {
+                    let mask = caches.relu_masks[idx].as_ref().expect("relu mask");
+                    let dx = relu_backward(&dy, mask);
+                    accumulate(&mut dacts[node.inputs[0]], dx);
+                }
+                Op::Add => {
+                    accumulate(&mut dacts[node.inputs[0]], dy.clone());
+                    accumulate(&mut dacts[node.inputs[1]], dy);
+                }
+                Op::GlobalAvgPool => {
+                    let in_shape = caches.acts[node.inputs[0]].shape.clone();
+                    let dx = global_avg_pool_backward(&dy, &in_shape);
+                    accumulate(&mut dacts[node.inputs[0]], dx);
+                }
+            }
+        }
+        grads
+    }
+}
+
+fn gaussian(rng: &mut impl Rng) -> f32 {
+    // Box-Muller from two uniforms
+    let u1 = rng.uniform().max(1e-7);
+    let u2 = rng.uniform();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+}
+
+fn add_bias(y: &mut [f32], b: &[f32]) {
+    if b.is_empty() {
+        return;
+    }
+    let n = b.len();
+    for row in y.chunks_mut(n) {
+        for (v, bv) in row.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+}
+
+fn bias_grad(db: &mut [f32], dy: &[f32], n: usize) {
+    for row in dy.chunks(n) {
+        for (g, d) in db.iter_mut().zip(row) {
+            *g += d;
+        }
+    }
+}
+
+fn accumulate(slot: &mut Option<Tensor>, grad: Tensor) {
+    match slot {
+        Some(t) => *t = t.add(&grad),
+        None => *slot = Some(grad),
+    }
+}
+
+/// Depthwise conv forward, SAME padding.
+pub fn depthwise_forward(
+    x: &Tensor,
+    w: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    c: usize,
+) -> Tensor {
+    let (b, h, wd, cin) = dims4(x);
+    assert_eq!(cin, c);
+    let pad = k / 2;
+    let ho = h.div_ceil(stride);
+    let wo = wd.div_ceil(stride);
+    let mut out = vec![0.0f32; b * ho * wo * c];
+    out.chunks_mut(ho * wo * c).enumerate().for_each(|(bi, ob)| {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = (oy * wo + ox) * c;
+                for di in 0..k {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for dj in 0..k {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if ix < 0 || ix as usize >= wd {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * wd + ix as usize) * c;
+                        let wbase = (di * k + dj) * c;
+                        for ci in 0..c {
+                            ob[dst + ci] += x.data[src + ci] * w[wbase + ci];
+                        }
+                    }
+                }
+                for ci in 0..c {
+                    ob[dst + ci] += bias.get(ci).copied().unwrap_or(0.0);
+                }
+            }
+        }
+    });
+    Tensor::from_vec(out, &[b, ho, wo, c])
+}
+
+/// Depthwise conv backward: returns (dx, dw, db).
+pub fn depthwise_backward(
+    x: &Tensor,
+    w: &[f32],
+    dy: &Tensor,
+    k: usize,
+    stride: usize,
+    c: usize,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (b, h, wd, _) = dims4(x);
+    let (_, ho, wo, _) = dims4(dy);
+    let pad = k / 2;
+    let mut dx = Tensor::zeros(&x.shape);
+    let mut dw = vec![0.0f32; k * k * c];
+    let mut db = vec![0.0f32; c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dsrc = ((bi * ho + oy) * wo + ox) * c;
+                for di in 0..k {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for dj in 0..k {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if ix < 0 || ix as usize >= wd {
+                            continue;
+                        }
+                        let xsrc = ((bi * h + iy as usize) * wd + ix as usize) * c;
+                        let wbase = (di * k + dj) * c;
+                        for ci in 0..c {
+                            let d = dy.data[dsrc + ci];
+                            dw[wbase + ci] += x.data[xsrc + ci] * d;
+                            dx.data[xsrc + ci] += w[wbase + ci] * d;
+                        }
+                    }
+                }
+                for ci in 0..c {
+                    db[ci] += dy.data[dsrc + ci];
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xorshift128Plus;
+    use crate::sim::layers::softmax_cross_entropy;
+
+    fn tiny_net() -> Network {
+        // input -> conv3x3(3->4,s2) -> BN -> relu -> GAP -> dense(4->3)
+        let mut net = Network::new((8, 8, 3), "tiny");
+        let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+        let bn = net.add(Op::BatchNorm, vec![c1], "bn1");
+        let r = net.add(Op::ReLU, vec![bn], "r1");
+        let g = net.add(Op::GlobalAvgPool, vec![r], "gap");
+        net.add(Op::Dense { cin: 4, cout: 3 }, vec![g], "fc");
+        net.feat_node = Some(r);
+        let mut rng = Xorshift128Plus::seed_from(1);
+        net.init(&mut rng);
+        net
+    }
+
+    fn rand_input(rng: &mut impl Rng, shape: &[usize]) -> Tensor {
+        Tensor::from_vec((0..shape.iter().product()).map(|_| rng.uniform()).collect(), shape)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut net = tiny_net();
+        let mut rng = Xorshift128Plus::seed_from(2);
+        let x = rand_input(&mut rng, &[2, 8, 8, 3]);
+        let caches = net.forward::<Xorshift128Plus>(&x, false, None);
+        assert_eq!(caches.logits().shape, vec![2, 3]);
+        assert_eq!(caches.acts[1].shape, vec![2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn residual_add_network() {
+        let mut net = Network::new((8, 8, 3), "res");
+        let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 3 }, vec![0], "c1");
+        let a = net.add(Op::Add, vec![c1, 0], "add");
+        let g = net.add(Op::GlobalAvgPool, vec![a], "gap");
+        net.add(Op::Dense { cin: 3, cout: 2 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(3);
+        net.init(&mut rng);
+        let x = rand_input(&mut rng, &[1, 8, 8, 3]);
+        let caches = net.forward::<Xorshift128Plus>(&x, false, None);
+        assert_eq!(caches.logits().shape, vec![1, 2]);
+    }
+
+    /// End-to-end numeric gradient check through conv+BN+relu+GAP+dense.
+    #[test]
+    fn gradcheck_end_to_end() {
+        let mut net = tiny_net();
+        let mut rng = Xorshift128Plus::seed_from(4);
+        let x = rand_input(&mut rng, &[3, 8, 8, 3]);
+        let labels = [0usize, 1, 2];
+        let caches = net.forward::<Xorshift128Plus>(&x, true, None);
+        let (_, dl) = softmax_cross_entropy(caches.logits(), &labels);
+        let grads = net.backward(&caches, dl);
+
+        // check a few weight coordinates of conv (node 1) and dense (node 5)
+        for &(node, wi) in &[(1usize, 0usize), (1, 17), (5, 3)] {
+            let eps = 5e-3;
+            let orig = net.nodes[node].w[wi];
+            let loss_at = |net: &mut Network, v: f32| {
+                net.nodes[node].w[wi] = v;
+                // fresh BN running stats irrelevant: training-mode forward
+                let c = net.forward::<Xorshift128Plus>(&x, true, None);
+                let (l, _) = softmax_cross_entropy(c.logits(), &labels);
+                l
+            };
+            let lp = loss_at(&mut net, orig + eps);
+            let lm = loss_at(&mut net, orig - eps);
+            net.nodes[node].w[wi] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = grads.dw[node][wi];
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                "node {node} w[{wi}]: num={num} ana={ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradcheck_depthwise() {
+        let mut net = Network::new((6, 6, 2), "dw");
+        let d = net.add(Op::Depthwise { k: 3, stride: 1, c: 2 }, vec![0], "dw");
+        let g = net.add(Op::GlobalAvgPool, vec![d], "gap");
+        net.add(Op::Dense { cin: 2, cout: 2 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(5);
+        net.init(&mut rng);
+        let x = rand_input(&mut rng, &[2, 6, 6, 2]);
+        let labels = [0usize, 1];
+        let caches = net.forward::<Xorshift128Plus>(&x, true, None);
+        let (_, dl) = softmax_cross_entropy(caches.logits(), &labels);
+        let grads = net.backward(&caches, dl);
+        for wi in [0usize, 7, 15] {
+            let eps = 5e-3;
+            let orig = net.nodes[1].w[wi];
+            let mut eval = |v: f32| {
+                net.nodes[1].w[wi] = v;
+                let c = net.forward::<Xorshift128Plus>(&x, true, None);
+                softmax_cross_entropy(c.logits(), &labels).0
+            };
+            let num = (eval(orig + eps) - eval(orig - eps)) / (2.0 * eps);
+            net.nodes[1].w[wi] = orig;
+            let ana = grads.dw[1][wi];
+            assert!((num - ana).abs() < 2e-2 * (1.0 + num.abs()), "w[{wi}] num={num} ana={ana}");
+        }
+    }
+
+    #[test]
+    fn stochastic_forward_is_unbiased() {
+        let mut net = tiny_net();
+        let mut rng = Xorshift128Plus::seed_from(6);
+        let x = rand_input(&mut rng, &[1, 8, 8, 3]);
+        let base = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        let mut mean = vec![0.0f64; base.len()];
+        let trials = 400;
+        for t in 0..trials {
+            let mut r = Xorshift128Plus::seed_from(100 + t);
+            let caches =
+                net.forward(&x, false, Some(StochForward { n: 16, rng: &mut r }));
+            for (m, v) in mean.iter_mut().zip(&caches.logits().data) {
+                *m += *v as f64;
+            }
+        }
+        for (m, b) in mean.iter().zip(&base.data) {
+            let m = m / trials as f64;
+            assert!((m - *b as f64).abs() < 0.15 * (1.0 + b.abs() as f64), "{m} vs {b}");
+        }
+    }
+
+    #[test]
+    fn num_params_counts() {
+        let net = tiny_net();
+        // conv: 3*3*3*4 + 4 = 112; bn: 4+4 = 8 (after first forward); dense: 4*3+3 = 15
+        // BN params materialize lazily; before forward they are absent.
+        assert_eq!(net.num_params(), 112 + 15);
+    }
+}

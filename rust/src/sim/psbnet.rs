@@ -1,0 +1,683 @@
+//! PSB inference networks: a trained float [`Network`], BN-folded and
+//! bijectively re-encoded into capacitor units (the paper's in-place
+//! quantization, Sec. 1.1 — no retraining, no extra hyper-parameters).
+//!
+//! Supports the paper's full modification grid:
+//! * uniform sample size `n` (Fig. 3 / Table 1 "no modification"),
+//! * per-layer sample sizes (Sec. 4.5's layer-wise adaption),
+//! * spatial attention — per-pixel sample sizes from an entropy mask
+//!   (Sec. 4.5, Table 1 "attention"),
+//! * probability discretization (Table 1 "k-bit probs"),
+//! * residual (unfoldable) BNs as *stochastic channel scales* — the
+//!   "ResNet50 modified" variance blow-up of Sec. 4.3,
+//! * the bit-exact integer datapath (Eq. 9) for cross-validation.
+
+use crate::costs::CostCounter;
+use crate::num::{discretize_prob, PsbPlanes, PsbWeight, Q16};
+use crate::rng::{AnyRng, RngKind};
+use crate::sim::capacitor::{
+    capacitor_matmul, capacitor_matmul_exact, capacitor_matmul_rowwise, realize_weights,
+    sample_counts, stochastic_channel_scale,
+};
+use crate::sim::layers::global_avg_pool;
+use crate::sim::network::{depthwise_forward, Network, Op};
+use crate::sim::tensor::{dims4, im2col, Tensor};
+
+/// Precision schedule for one PSB forward pass.
+#[derive(Debug, Clone)]
+pub enum Precision {
+    /// Same sample size everywhere.
+    Uniform(u32),
+    /// One sample size per capacitor layer, in graph order.
+    PerLayer(Vec<u32>),
+    /// Spatial attention: per-pixel mask at input resolution; masked
+    /// pixels run at `n_high`, the rest at `n_low` (Sec. 4.5).
+    Spatial { mask: Vec<bool>, n_low: u32, n_high: u32 },
+}
+
+impl Precision {
+    fn layer_n(&self, layer: usize) -> (u32, u32) {
+        match self {
+            Precision::Uniform(n) => (*n, *n),
+            Precision::PerLayer(ns) => {
+                let n = *ns.get(layer).unwrap_or(ns.last().unwrap_or(&16));
+                (n, n)
+            }
+            Precision::Spatial { n_low, n_high, .. } => (*n_low, *n_high),
+        }
+    }
+}
+
+/// One node of the PSB graph.
+#[derive(Debug, Clone)]
+pub enum PsbOp {
+    Input,
+    /// Conv (via im2col) or dense capacitor contraction.
+    Capacitor {
+        planes: PsbPlanes,
+        bias: Vec<f32>,
+        /// `(ksize, stride)` when convolutional; `None` for dense.
+        conv: Option<(usize, usize)>,
+        cout: usize,
+    },
+    /// Depthwise capacitor convolution.
+    DepthwiseCapacitor { planes: PsbPlanes, bias: Vec<f32>, k: usize, stride: usize, c: usize },
+    /// A residual batch norm that could not be folded: each channel scale
+    /// becomes a stochastic number and is *sampled* per forward.
+    StochasticBn { scales: Vec<PsbWeight>, shifts: Vec<f32> },
+    Relu,
+    Add,
+    GlobalAvgPool,
+    Identity,
+}
+
+#[derive(Debug, Clone)]
+pub struct PsbNode {
+    pub op: PsbOp,
+    pub inputs: Vec<usize>,
+    pub name: String,
+}
+
+/// Options fixed at preparation time.
+#[derive(Debug, Clone, Default)]
+pub struct PsbOptions {
+    /// Quantize probabilities to this many bits (Table 1, Sec. 4.4).
+    pub prob_bits: Option<u32>,
+    /// Run the bit-exact integer shift-add datapath (Eq. 9) instead of
+    /// the float-carried simulation. Slower; used for cross-validation.
+    pub exact_integer: bool,
+    /// The §4.4 *deterministic* variant: with `k_p`-bit probabilities and
+    /// n = 2^k_p samples, use the larger shift in exactly round(p·n) of n
+    /// accumulations instead of sampling. No randomness, no variance —
+    /// but the dynamic-precision control is lost (precision caps at the
+    /// probability grid).
+    pub deterministic: bool,
+}
+
+/// Result of one PSB forward.
+pub struct PsbOutput {
+    pub logits: Tensor,
+    /// Activation of the designated last conv layer (attention input).
+    pub feat: Option<Tensor>,
+    pub costs: CostCounter,
+}
+
+/// A prepared PSB inference network.
+#[derive(Debug, Clone)]
+pub struct PsbNetwork {
+    pub nodes: Vec<PsbNode>,
+    pub input_hwc: (usize, usize, usize),
+    pub feat_node: Option<usize>,
+    pub options: PsbOptions,
+    /// Number of capacitor layers (for `Precision::PerLayer`).
+    pub num_capacitors: usize,
+    pub name: String,
+}
+
+impl PsbNetwork {
+    /// Fold BNs on a clone of the trained float network and encode every
+    /// linear layer into PSB planes.
+    pub fn prepare(net: &Network, options: PsbOptions) -> PsbNetwork {
+        let mut folded = net.clone();
+        crate::sim::fold::fold_batchnorms(&mut folded);
+        let mut nodes = Vec::with_capacity(folded.nodes.len());
+        let mut num_capacitors = 0;
+        for node in &folded.nodes {
+            let op = match node.op {
+                Op::Input => PsbOp::Input,
+                Op::Conv { k, stride, cin, cout } => {
+                    num_capacitors += 1;
+                    PsbOp::Capacitor {
+                        planes: encode_planes(&node.w, &[k * k * cin, cout], &options),
+                        bias: node.b.clone(),
+                        conv: Some((k, stride)),
+                        cout,
+                    }
+                }
+                Op::Dense { cin, cout } => {
+                    num_capacitors += 1;
+                    PsbOp::Capacitor {
+                        planes: encode_planes(&node.w, &[cin, cout], &options),
+                        bias: node.b.clone(),
+                        conv: None,
+                        cout,
+                    }
+                }
+                Op::Depthwise { k, stride, c } => {
+                    num_capacitors += 1;
+                    PsbOp::DepthwiseCapacitor {
+                        planes: encode_planes(&node.w, &[k * k, c], &options),
+                        bias: node.b.clone(),
+                        k,
+                        stride,
+                        c,
+                    }
+                }
+                Op::BatchNorm => {
+                    // Unfoldable residual BN -> stochastic channel scale
+                    let bn = node.bn.as_ref().expect("bn materialized");
+                    let (a, b) = bn.affine();
+                    let mut scales: Vec<PsbWeight> =
+                        a.iter().map(|&v| PsbWeight::encode(v)).collect();
+                    if let Some(bits) = options.prob_bits {
+                        for s in scales.iter_mut() {
+                            s.prob = discretize_prob(s.prob, bits);
+                        }
+                    }
+                    PsbOp::StochasticBn { scales, shifts: b }
+                }
+                Op::Identity => PsbOp::Identity,
+                Op::ReLU => PsbOp::Relu,
+                Op::Add => PsbOp::Add,
+                Op::GlobalAvgPool => PsbOp::GlobalAvgPool,
+            };
+            nodes.push(PsbNode { op, inputs: node.inputs.clone(), name: node.name.clone() });
+        }
+        PsbNetwork {
+            nodes,
+            input_hwc: folded.input_hwc,
+            feat_node: folded.feat_node,
+            options,
+            num_capacitors,
+            name: folded.name.clone(),
+        }
+    }
+
+    /// Total weight storage under a `(k_e, k_p)`-bit layout, in bits.
+    pub fn storage_bits(&self, exp_bits: u32, prob_bits: u32) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                PsbOp::Capacitor { planes, .. } | PsbOp::DepthwiseCapacitor { planes, .. } => {
+                    planes.storage_bits(exp_bits, prob_bits)
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// One stochastic forward pass.
+    pub fn forward(&self, x: &Tensor, precision: &Precision, seed: u64) -> PsbOutput {
+        self.forward_with(x, precision, AnyRng::new(RngKind::Xorshift, seed), seed)
+    }
+
+    /// Forward with an explicit RNG (the rng-ablation entry point).
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        precision: &Precision,
+        mut rng: AnyRng,
+        seed: u64,
+    ) -> PsbOutput {
+        let mut costs = CostCounter::default();
+        let (b, h, w, _c) = dims4(x);
+        // per-node activations and spatial masks (at activation resolution)
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        let mut masks: Vec<Option<Vec<bool>>> = Vec::with_capacity(self.nodes.len());
+        let input_mask: Option<Vec<bool>> = match precision {
+            Precision::Spatial { mask, .. } => {
+                assert_eq!(mask.len(), b * h * w, "mask must be B*H*W at input res");
+                Some(mask.clone())
+            }
+            _ => None,
+        };
+        let mut cap_layer = 0usize;
+        let mut feat = None;
+        for node in &self.nodes {
+            let (act, mask): (Tensor, Option<Vec<bool>>) = match &node.op {
+                PsbOp::Input => {
+                    let mut q = x.clone();
+                    crate::num::quantize_slice(&mut q.data);
+                    (q, input_mask.clone())
+                }
+                PsbOp::Capacitor { planes, bias, conv, cout } => {
+                    let inp = &acts[node.inputs[0]];
+                    let in_mask = &masks[node.inputs[0]];
+                    let (n_low, n_high) = precision.layer_n(cap_layer);
+                    cap_layer += 1;
+                    match conv {
+                        Some((k, stride)) => {
+                            let (bb, hh, ww, _) = dims4(inp);
+                            let (cols, ho, wo) = im2col(inp, *k, *stride);
+                            let m = cols.shape[0];
+                            let out_mask =
+                                in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
+                            let y = match &out_mask {
+                                Some(mk) if n_low != n_high => {
+                                    let rows: Vec<u32> = mk
+                                        .iter()
+                                        .map(|&hi| if hi { n_high } else { n_low })
+                                        .collect();
+                                    capacitor_matmul_rowwise(
+                                        &cols.data, planes, Some(bias), m, &rows, &mut rng,
+                                        &mut costs,
+                                    )
+                                }
+                                _ => self.contract(
+                                    &cols.data, planes, Some(bias), m, n_low, &mut rng, seed,
+                                    &mut costs,
+                                ),
+                            };
+                            (Tensor::from_vec(y, &[bb, ho, wo, *cout]), out_mask)
+                        }
+                        None => {
+                            // dense: rows are images; a row is "interesting"
+                            // if any of its mask pixels is set
+                            let cin = planes.shape[0];
+                            let m = inp.len() / cin;
+                            let row_mask = in_mask.as_ref().map(|mk| {
+                                let per = mk.len() / m;
+                                (0..m)
+                                    .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
+                                    .collect::<Vec<bool>>()
+                            });
+                            let y = match &row_mask {
+                                Some(mk) if n_low != n_high => {
+                                    let rows: Vec<u32> = mk
+                                        .iter()
+                                        .map(|&hi| if hi { n_high } else { n_low })
+                                        .collect();
+                                    capacitor_matmul_rowwise(
+                                        &inp.data, planes, Some(bias), m, &rows, &mut rng,
+                                        &mut costs,
+                                    )
+                                }
+                                _ => self.contract(
+                                    &inp.data, planes, Some(bias), m, n_low, &mut rng, seed,
+                                    &mut costs,
+                                ),
+                            };
+                            (Tensor::from_vec(y, &[m, *cout]), row_mask)
+                        }
+                    }
+                }
+                PsbOp::DepthwiseCapacitor { planes, bias, k, stride, c } => {
+                    let inp = &acts[node.inputs[0]];
+                    let in_mask = &masks[node.inputs[0]];
+                    let (bb, hh, ww, _) = dims4(inp);
+                    let (n_low, n_high) = precision.layer_n(cap_layer);
+                    cap_layer += 1;
+                    let out_mask = in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
+                    // nnz-discounted: pruned taps cost nothing
+                    let live = crate::sim::capacitor::nnz(planes);
+                    let macs = (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64
+                        * live;
+                    let out = match (&out_mask, n_low != n_high) {
+                        (Some(mk), true) => {
+                            // two filter draws, per-pixel select
+                            let lo = sampled_depthwise(
+                                inp, planes, bias, *k, *stride, *c, n_low, &mut rng,
+                            );
+                            let hi = sampled_depthwise(
+                                inp, planes, bias, *k, *stride, *c, n_high, &mut rng,
+                            );
+                            let frac_hi =
+                                mk.iter().filter(|&&v| v).count() as f64 / mk.len() as f64;
+                            costs.charge_capacitor(
+                                (macs as f64 * (1.0 - frac_hi)) as u64,
+                                n_low,
+                            );
+                            costs.charge_capacitor((macs as f64 * frac_hi) as u64, n_high);
+                            select_by_mask(&lo, &hi, mk, *c)
+                        }
+                        _ => {
+                            costs.charge_capacitor(macs, n_low);
+                            sampled_depthwise(inp, planes, bias, *k, *stride, *c, n_low, &mut rng)
+                        }
+                    };
+                    (out, out_mask)
+                }
+                PsbOp::StochasticBn { scales, shifts } => {
+                    let inp = &acts[node.inputs[0]];
+                    let (n_low, _) = precision.layer_n(cap_layer);
+                    let mut out = inp.clone();
+                    stochastic_channel_scale(
+                        &mut out.data, scales, shifts, n_low, &mut rng, &mut costs,
+                    );
+                    (out, masks[node.inputs[0]].clone())
+                }
+                PsbOp::Identity => {
+                    (acts[node.inputs[0]].clone(), masks[node.inputs[0]].clone())
+                }
+                PsbOp::Relu => {
+                    let y = acts[node.inputs[0]].clone().map(|v| v.max(0.0));
+                    (y, masks[node.inputs[0]].clone())
+                }
+                PsbOp::Add => {
+                    let y = acts[node.inputs[0]].add(&acts[node.inputs[1]]);
+                    let m = match (&masks[node.inputs[0]], &masks[node.inputs[1]]) {
+                        (Some(a), Some(b)) => {
+                            Some(a.iter().zip(b).map(|(x, y)| *x || *y).collect())
+                        }
+                        (Some(a), None) | (None, Some(a)) => Some(a.clone()),
+                        _ => None,
+                    };
+                    (y, m)
+                }
+                PsbOp::GlobalAvgPool => {
+                    let inp = &acts[node.inputs[0]];
+                    let (bb, _, _, _) = dims4(inp);
+                    let mut y = global_avg_pool(inp);
+                    crate::num::quantize_slice(&mut y.data);
+                    let m = masks[node.inputs[0]].as_ref().map(|mk| {
+                        let per = mk.len() / bb;
+                        (0..bb)
+                            .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
+                            .collect::<Vec<bool>>()
+                    });
+                    (y, m)
+                }
+            };
+            if Some(acts.len()) == self.feat_node {
+                feat = Some(act.clone());
+            }
+            acts.push(act);
+            masks.push(mask);
+        }
+        PsbOutput { logits: acts.pop().unwrap(), feat, costs }
+    }
+
+    /// Uniform-precision contraction, dispatching float-sim vs bit-exact
+    /// vs the §4.4 deterministic variant.
+    #[allow(clippy::too_many_arguments)]
+    fn contract(
+        &self,
+        x: &[f32],
+        planes: &PsbPlanes,
+        bias: Option<&[f32]>,
+        m: usize,
+        n: u32,
+        rng: &mut AnyRng,
+        seed: u64,
+        costs: &mut CostCounter,
+    ) -> Vec<f32> {
+        if self.options.deterministic {
+            return deterministic_matmul(x, planes, bias, m, n, costs);
+        }
+        if self.options.exact_integer && n.is_power_of_two() {
+            let xq: Vec<Q16> = x.iter().map(|&v| Q16::from_f32(v)).collect();
+            let yq = capacitor_matmul_exact(&xq, planes, bias, m, n, seed, costs);
+            yq.into_iter().map(|q| q.to_f32()).collect()
+        } else {
+            capacitor_matmul(x, planes, bias, m, n, rng, costs)
+        }
+    }
+}
+
+/// §4.4 deterministic contraction: counts are fixed at k = round(p·n),
+/// so `w̄_n` is a deterministic dequantization (the scheme degenerates to
+/// a conventional shift-based quantizer — no variance, no progressive
+/// control beyond the grid).
+fn deterministic_matmul(
+    x: &[f32],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    n: u32,
+    costs: &mut CostCounter,
+) -> Vec<f32> {
+    let counts: Vec<u32> =
+        planes.prob.iter().map(|&p| (p * n as f32).round() as u32).collect();
+    let wbar = realize_weights(planes, &counts, n);
+    let (k, nn) = (planes.shape[0], planes.shape[1]);
+    let mut y = crate::sim::tensor::matmul(x, &wbar, m, k, nn);
+    if let Some(b) = bias {
+        for row in y.chunks_mut(nn) {
+            for (v, bv) in row.iter_mut().zip(b) {
+                *v += bv;
+            }
+        }
+    }
+    crate::num::quantize_slice(&mut y);
+    costs.charge_capacitor(m as u64 * crate::sim::capacitor::nnz(planes), n);
+    y
+}
+
+fn encode_planes(w: &[f32], shape: &[usize], options: &PsbOptions) -> PsbPlanes {
+    let mut planes = PsbPlanes::encode(w, shape);
+    if let Some(bits) = options.prob_bits {
+        crate::num::discretize_planes(&mut planes, bits);
+    }
+    planes
+}
+
+/// Downsample a B×H×W boolean mask by `stride` with OR-pooling (a region
+/// is interesting if any covered pixel is).
+fn pool_mask(mask: &[bool], b: usize, h: usize, w: usize, stride: usize) -> Vec<bool> {
+    if stride == 1 {
+        return mask.to_vec();
+    }
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![false; b * ho * wo];
+    for bi in 0..b {
+        for y in 0..h {
+            for x in 0..w {
+                if mask[(bi * h + y) * w + x] {
+                    let oy = y / stride;
+                    let ox = x / stride;
+                    out[(bi * ho + oy) * wo + ox] = true;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn sampled_depthwise(
+    x: &Tensor,
+    planes: &PsbPlanes,
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    c: usize,
+    n: u32,
+    rng: &mut AnyRng,
+) -> Tensor {
+    let counts = sample_counts(planes, n, rng);
+    let wbar = realize_weights(planes, &counts, n);
+    let mut y = depthwise_forward(x, &wbar, bias, k, stride, c);
+    crate::num::quantize_slice(&mut y.data);
+    y
+}
+
+fn select_by_mask(lo: &Tensor, hi: &Tensor, mask: &[bool], c: usize) -> Tensor {
+    let mut out = lo.clone();
+    for (pix, &m) in mask.iter().enumerate() {
+        if m {
+            out.data[pix * c..(pix + 1) * c].copy_from_slice(&hi.data[pix * c..(pix + 1) * c]);
+        }
+    }
+    out
+}
+
+/// Convenience: mean relative logit error of a PSB network against the
+/// float reference over a batch — `mean(|psb − float| / (|float| + eps))`.
+pub fn relative_logit_error(psb: &Tensor, float_ref: &Tensor) -> f32 {
+    assert_eq!(psb.shape, float_ref.shape);
+    let eps = 1e-3f32;
+    psb.data
+        .iter()
+        .zip(&float_ref.data)
+        .map(|(a, b)| (a - b).abs() / (b.abs() + eps))
+        .sum::<f32>()
+        / psb.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xorshift128Plus};
+    use crate::sim::network::{Network, Op};
+
+    fn make_net(with_residual_bn: bool) -> Network {
+        let mut net = Network::new((8, 8, 3), "psbnet-test");
+        let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 8 }, vec![0], "c1");
+        let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+        let r1 = net.add(Op::ReLU, vec![b1], "r1");
+        let c2 = net.add(Op::Conv { k: 3, stride: 1, cin: 8, cout: 8 }, vec![r1], "c2");
+        let tail = if with_residual_bn {
+            let a = net.add(Op::Add, vec![c2, r1], "add");
+            let b2 = net.add(Op::BatchNorm, vec![a], "bn2");
+            net.add(Op::ReLU, vec![b2], "r2")
+        } else {
+            let b2 = net.add(Op::BatchNorm, vec![c2], "bn2");
+            let a = net.add(Op::Add, vec![b2, r1], "add");
+            net.add(Op::ReLU, vec![a], "r2")
+        };
+        net.feat_node = Some(tail);
+        let g = net.add(Op::GlobalAvgPool, vec![tail], "gap");
+        net.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(21);
+        net.init(&mut rng);
+        net
+    }
+
+    fn batch(seed: u64, b: usize) -> Tensor {
+        let mut rng = Xorshift128Plus::seed_from(seed);
+        Tensor::from_vec((0..b * 8 * 8 * 3).map(|_| rng.uniform()).collect(), &[b, 8, 8, 3])
+    }
+
+    fn settle_bn(net: &mut Network) {
+        for s in 0..8 {
+            let x = batch(s, 4);
+            net.forward::<Xorshift128Plus>(&x, true, None);
+        }
+    }
+
+    #[test]
+    fn psb_converges_to_float_with_n() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let x = batch(100, 4);
+        let float_logits = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let mut errs = vec![];
+        for n in [1u32, 8, 64, 256] {
+            let out = psb.forward(&x, &Precision::Uniform(n), 7);
+            errs.push(relative_logit_error(&out.logits, &float_logits));
+        }
+        assert!(errs[3] < errs[0], "errors should decrease: {errs:?}");
+        assert!(errs[3] < 0.1, "n=256 should be close: {errs:?}");
+    }
+
+    #[test]
+    fn residual_bn_increases_variance() {
+        // the "ResNet50 modified" effect: unfoldable BN -> higher error
+        let mut clean = make_net(false);
+        settle_bn(&mut clean);
+        let mut modified = make_net(true);
+        settle_bn(&mut modified);
+        let x = batch(100, 4);
+        let err_of = |net: &mut Network| {
+            let float_logits =
+                net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+            let psb = PsbNetwork::prepare(net, PsbOptions::default());
+            let mut tot = 0.0;
+            for seed in 0..10 {
+                let out = psb.forward(&x, &Precision::Uniform(4), seed);
+                tot += relative_logit_error(&out.logits, &float_logits);
+            }
+            tot / 10.0
+        };
+        let e_clean = err_of(&mut clean);
+        let e_mod = err_of(&mut modified);
+        assert!(
+            e_mod > e_clean,
+            "residual BN should hurt: clean={e_clean} modified={e_mod}"
+        );
+    }
+
+    #[test]
+    fn spatial_attention_costs_between_low_and_high() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let x = batch(5, 2);
+        let lo = psb.forward(&x, &Precision::Uniform(8), 1).costs;
+        let hi = psb.forward(&x, &Precision::Uniform(16), 1).costs;
+        // top half of each image interesting (block mask survives the
+        // OR-pooling across stride-2 layers; an alternating mask would
+        // pool to all-true)
+        let mask: Vec<bool> = (0..2 * 8 * 8).map(|i| (i % 64) < 32).collect();
+        let att = psb
+            .forward(&x, &Precision::Spatial { mask, n_low: 8, n_high: 16 }, 1)
+            .costs;
+        assert!(att.gated_adds > lo.gated_adds, "{} vs {}", att.gated_adds, lo.gated_adds);
+        assert!(att.gated_adds < hi.gated_adds, "{} vs {}", att.gated_adds, hi.gated_adds);
+    }
+
+    #[test]
+    fn per_layer_precision() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        assert_eq!(psb.num_capacitors, 3);
+        let x = batch(6, 2);
+        let out = psb.forward(&x, &Precision::PerLayer(vec![4, 8, 16]), 2);
+        assert_eq!(out.logits.shape, vec![2, 4]);
+        assert!(out.feat.is_some());
+    }
+
+    #[test]
+    fn prob_discretization_reduces_storage_resolution() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let psb4 = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(4), ..Default::default() });
+        for node in &psb4.nodes {
+            if let PsbOp::Capacitor { planes, .. } = &node.op {
+                for &p in &planes.prob {
+                    let lv = p * 16.0;
+                    assert!((lv - lv.round()).abs() < 1e-5, "p={p} not on 4-bit grid");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_integer_path_runs_and_agrees_roughly() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let x = batch(8, 1);
+        let float_logits = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        let exact = PsbNetwork::prepare(
+            &net,
+            PsbOptions { exact_integer: true, ..Default::default() },
+        );
+        let out = exact.forward(&x, &Precision::Uniform(64), 3);
+        let err = relative_logit_error(&out.logits, &float_logits);
+        assert!(err < 0.5, "exact-path error too large: {err}");
+    }
+
+    #[test]
+    fn deterministic_variant_has_zero_variance() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let x = batch(3, 2);
+        let det = PsbNetwork::prepare(
+            &net,
+            PsbOptions { prob_bits: Some(4), deterministic: true, ..Default::default() },
+        );
+        let a = det.forward(&x, &Precision::Uniform(16), 1);
+        let b = det.forward(&x, &Precision::Uniform(16), 999);
+        assert_eq!(a.logits.data, b.logits.data, "must be seed-independent");
+        // and it should approximate the float output about as well as the
+        // sampled version does on average (it IS the expectation on the
+        // 4-bit grid)
+        let float_logits = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        let err = relative_logit_error(&a.logits, &float_logits);
+        assert!(err < 0.2, "deterministic 4-bit error too large: {err}");
+    }
+
+    #[test]
+    fn mask_pooling() {
+        let mask = vec![
+            true, false, false, false, //
+            false, false, false, false, //
+            false, false, false, false, //
+            false, false, false, true,
+        ];
+        let pooled = pool_mask(&mask, 1, 4, 4, 2);
+        assert_eq!(pooled, vec![true, false, false, true]);
+    }
+}

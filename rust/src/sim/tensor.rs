@@ -1,0 +1,285 @@
+//! Minimal dense-tensor substrate for the pure-rust PSB simulator.
+//!
+//! Row-major `f32` storage with a dynamic shape; just enough surface for
+//! CNN training/inference (matmul, im2col/col2im, elementwise) without
+//! pulling in an external array crate.  The matmul is the simulator's hot
+//! loop and is parallelized with rayon over output rows.
+
+
+/// Dense row-major float tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reinterpret the shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+        self.data.iter_mut().for_each(|v| *v = f(*v));
+        self
+    }
+
+    /// Elementwise a + b (same shape).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    pub fn scale(mut self, s: f32) -> Tensor {
+        self.data.iter_mut().for_each(|v| *v *= s);
+        self
+    }
+
+    /// Frobenius-norm mean absolute value (diagnostics).
+    pub fn mean_abs(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs()).sum::<f32>() / self.len() as f32
+    }
+}
+
+/// `c[M,N] = a[M,K] @ b[K,N]` — rayon-parallel over rows of `a`, with a
+/// k-inner loop ordered for sequential access of `b` (cache-friendly,
+/// auto-vectorizable).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    let mut c = vec![0.0f32; m * n];
+    c.chunks_mut(n).zip(a.chunks(k)).for_each(|(crow, arow)| {
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    });
+    c
+}
+
+/// `c[K,N] += a^T[M,K] @ d[M,N]` — the weight-gradient contraction.
+pub fn matmul_at_b(a: &[f32], d: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    // parallel over k rows of the output
+    c.chunks_mut(n).enumerate().for_each(|(kk, crow)| {
+        for mm in 0..m {
+            let av = a[mm * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let drow = &d[mm * n..(mm + 1) * n];
+            for (cv, &dv) in crow.iter_mut().zip(drow) {
+                *cv += av * dv;
+            }
+        }
+    });
+    c
+}
+
+/// `c[M,K] = d[M,N] @ b^T[N,K]` (b given as [K,N]) — the input-gradient
+/// contraction.
+pub fn matmul_b_t(d: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * k];
+    c.chunks_mut(k).zip(d.chunks(n)).for_each(|(crow, drow)| {
+        for (kk, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (dv, bv) in drow.iter().zip(brow) {
+                acc += dv * bv;
+            }
+            *cv = acc;
+        }
+    });
+    c
+}
+
+/// SAME-padded im2col: `[B,H,W,C] -> [B*Ho*Wo, k*k*C]` with patch channel
+/// order `(di, dj, c)` — identical to the python `model.im2col`, so rust
+/// and JAX weight matrices are interchangeable.
+pub fn im2col(x: &Tensor, ksize: usize, stride: usize) -> (Tensor, usize, usize) {
+    let (b, h, w, c) = dims4(x);
+    let pad = ksize / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let kdim = ksize * ksize * c;
+    let mut out = vec![0.0f32; b * ho * wo * kdim];
+    out.chunks_mut(ho * wo * kdim).enumerate().for_each(|(bi, obatch)| {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = (oy * wo + ox) * kdim;
+                for di in 0..ksize {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    for dj in 0..ksize {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        let dst = base + (di * ksize + dj) * c;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                            obatch[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                        }
+                        // else: zero padding (already zeroed)
+                    }
+                }
+            }
+        }
+    });
+    (Tensor::from_vec(out, &[b * ho * wo, kdim]), ho, wo)
+}
+
+/// Adjoint of `im2col`: scatter column gradients back to `[B,H,W,C]`.
+pub fn col2im(
+    cols: &Tensor,
+    bshape: (usize, usize, usize, usize),
+    ksize: usize,
+    stride: usize,
+) -> Tensor {
+    let (b, h, w, c) = bshape;
+    let pad = ksize / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let kdim = ksize * ksize * c;
+    assert_eq!(cols.shape, vec![b * ho * wo, kdim]);
+    let mut out = Tensor::zeros(&[b, h, w, c]);
+    out.data.chunks_mut(h * w * c).enumerate().for_each(|(bi, obatch)| {
+        let cbatch = &cols.data[bi * ho * wo * kdim..(bi + 1) * ho * wo * kdim];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = (oy * wo + ox) * kdim;
+                for di in 0..ksize {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    for dj in 0..ksize {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = base + (di * ksize + dj) * c;
+                            let dst = ((iy as usize) * w + ix as usize) * c;
+                            for ci in 0..c {
+                                obatch[dst + ci] += cbatch[src + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Unpack a 4-D NHWC shape.
+pub fn dims4(x: &Tensor) -> (usize, usize, usize, usize) {
+    assert_eq!(x.shape.len(), 4, "expected NHWC, got {:?}", x.shape);
+    (x.shape[0], x.shape[1], x.shape[2], x.shape[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let c = matmul(&[1., 2., 3., 4.], &[1., 1., 1., 1.], 2, 2, 2);
+        assert_eq!(c, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_adjoints_consistent() {
+        // numeric check: d(a@b) wrt a and b via the adjoint kernels
+        let (m, k, n) = (3, 4, 2);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.1 - 0.4).collect();
+        let d: Vec<f32> = (0..m * n).map(|i| 1.0 + i as f32).collect();
+        let dw = matmul_at_b(&a, &d, m, k, n);
+        let dx = matmul_b_t(&d, &b, m, k, n);
+        // <d, a@b> = <dw, b> = <dx, a>
+        let y = matmul(&a, &b, m, k, n);
+        let lhs: f32 = d.iter().zip(&y).map(|(p, q)| p * q).sum();
+        let r1: f32 = dw.iter().zip(&b).map(|(p, q)| p * q).sum();
+        let r2: f32 = dx.iter().zip(&a).map(|(p, q)| p * q).sum();
+        assert!((lhs - r1).abs() < 1e-3, "{lhs} vs {r1}");
+        assert!((lhs - r2).abs() < 1e-3, "{lhs} vs {r2}");
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // ksize=1 stride=1: im2col is the identity reshape
+        let x = Tensor::from_vec((0..2 * 3 * 3 * 2).map(|i| i as f32).collect(), &[2, 3, 3, 2]);
+        let (cols, ho, wo) = im2col(&x, 1, 1);
+        assert_eq!((ho, wo), (3, 3));
+        assert_eq!(cols.data, x.data);
+    }
+
+    #[test]
+    fn im2col_3x3_center() {
+        // single pixel 1.0 in the middle of 3x3; kernel window sees it at
+        // all 9 offsets across the image
+        let mut x = Tensor::zeros(&[1, 3, 3, 1]);
+        x.data[4] = 1.0; // (1,1)
+        let (cols, _, _) = im2col(&x, 3, 1);
+        let total: f32 = cols.data.iter().sum();
+        assert_eq!(total, 9.0);
+        // center output pixel has it at patch center (di=1, dj=1)
+        assert_eq!(cols.data[4 * 9 + 4], 1.0);
+    }
+
+    #[test]
+    fn im2col_stride2_shape() {
+        let x = Tensor::zeros(&[2, 8, 8, 3]);
+        let (cols, ho, wo) = im2col(&x, 3, 2);
+        assert_eq!((ho, wo), (4, 4));
+        assert_eq!(cols.shape, vec![2 * 16, 27]);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y
+        use crate::rng::{Rng, Xorshift128Plus};
+        let mut rng = Xorshift128Plus::seed_from(5);
+        let shape = (2usize, 6usize, 6usize, 3usize);
+        let x = Tensor::from_vec(
+            (0..2 * 6 * 6 * 3).map(|_| rng.uniform() - 0.5).collect(),
+            &[2, 6, 6, 3],
+        );
+        let (cols, ho, wo) = im2col(&x, 3, 2);
+        let y = Tensor::from_vec(
+            (0..cols.len()).map(|_| rng.uniform() - 0.5).collect(),
+            &cols.shape.clone(),
+        );
+        let back = col2im(&y, shape, 3, 2);
+        let lhs: f32 = cols.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.data.iter().zip(&back.data).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs} (ho={ho} wo={wo})");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Training loop: Adam + exponential LR decay, float or PSB-stochastic
+//! forward (straight-through gradients), per the paper's Cifar-10 setup
+//! (Sec. 4.2: Adam, lr 5e-3, decay ×0.1 every 10 epochs, weight decay
+//! 5e-4, β₁ 0.9, β₂ 0.999 — we keep the shape of that recipe at our
+//! miniature scale).
+
+use crate::data::Dataset;
+use crate::rng::{Rng, Xorshift128Plus};
+use crate::sim::layers::{argmax_rows, softmax_cross_entropy};
+use crate::sim::network::{Grads, Network, StochForward};
+use crate::sim::tensor::Tensor;
+
+/// Adam hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub batch_size: usize,
+    pub epochs: usize,
+    /// Multiply lr by `lr_decay` every `lr_decay_every` epochs.
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    /// Train with stochastified forward at this sample size (Fig. 2).
+    pub stochastic_n: Option<u32>,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 2e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-7,
+            weight_decay: 5e-4,
+            batch_size: 32,
+            epochs: 8,
+            lr_decay: 0.3,
+            lr_decay_every: 4,
+            stochastic_n: None,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// Adam moment state mirroring the network's parameter layout.
+struct AdamState {
+    mw: Vec<Vec<f32>>,
+    vw: Vec<Vec<f32>>,
+    mb: Vec<Vec<f32>>,
+    vb: Vec<Vec<f32>>,
+    mg: Vec<Vec<f32>>,
+    vg: Vec<Vec<f32>>,
+    mbeta: Vec<Vec<f32>>,
+    vbeta: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl AdamState {
+    fn new(net: &Network) -> AdamState {
+        let zeros_like_w: Vec<Vec<f32>> =
+            net.nodes.iter().map(|n| vec![0.0; n.w.len()]).collect();
+        let zeros_like_b: Vec<Vec<f32>> =
+            net.nodes.iter().map(|n| vec![0.0; n.b.len()]).collect();
+        let zeros_like_g: Vec<Vec<f32>> = net
+            .nodes
+            .iter()
+            .map(|n| vec![0.0; n.bn.as_ref().map(|b| b.gamma.len()).unwrap_or(0)])
+            .collect();
+        AdamState {
+            mw: zeros_like_w.clone(),
+            vw: zeros_like_w,
+            mb: zeros_like_b.clone(),
+            vb: zeros_like_b,
+            mg: zeros_like_g.clone(),
+            vg: zeros_like_g.clone(),
+            mbeta: zeros_like_g.clone(),
+            vbeta: zeros_like_g,
+            t: 0,
+        }
+    }
+
+    fn resize_bn(&mut self, net: &Network) {
+        // BN params materialize lazily on first forward
+        for (i, n) in net.nodes.iter().enumerate() {
+            let glen = n.bn.as_ref().map(|b| b.gamma.len()).unwrap_or(0);
+            if self.mg[i].len() != glen {
+                self.mg[i] = vec![0.0; glen];
+                self.vg[i] = vec![0.0; glen];
+                self.mbeta[i] = vec![0.0; glen];
+                self.vbeta[i] = vec![0.0; glen];
+            }
+        }
+    }
+
+    fn step(&mut self, net: &mut Network, grads: &Grads, cfg: &TrainConfig, lr: f32) {
+        self.t += 1;
+        let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
+        let update = |p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], wd: f32| {
+            for i in 0..p.len() {
+                let gi = g[i] + wd * p[i];
+                m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * gi;
+                v[i] = cfg.beta2 * v[i] + (1.0 - cfg.beta2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + cfg.eps);
+            }
+        };
+        for idx in 0..net.nodes.len() {
+            let node = &mut net.nodes[idx];
+            if !node.w.is_empty() {
+                update(&mut node.w, &grads.dw[idx], &mut self.mw[idx], &mut self.vw[idx], cfg.weight_decay);
+                update(&mut node.b, &grads.db[idx], &mut self.mb[idx], &mut self.vb[idx], 0.0);
+            }
+            if let Some(bn) = node.bn.as_mut() {
+                update(&mut bn.gamma, &grads.dgamma[idx], &mut self.mg[idx], &mut self.vg[idx], 0.0);
+                update(&mut bn.beta, &grads.dbeta[idx], &mut self.mbeta[idx], &mut self.vbeta[idx], 0.0);
+            }
+        }
+    }
+}
+
+/// Per-epoch training record (the Fig. 2 curves).
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f32,
+    pub train_acc: f32,
+    pub test_acc: f32,
+}
+
+/// Train `net` on `data`; returns per-epoch stats.
+pub fn train(net: &mut Network, data: &Dataset, cfg: &TrainConfig) -> Vec<EpochStats> {
+    let mut adam = AdamState::new(net);
+    let mut rng = Xorshift128Plus::seed_from(cfg.seed);
+    let n_train = data.train_images.shape[0];
+    let mut order: Vec<usize> = (0..n_train).collect();
+    let mut stats = Vec::new();
+    let mut lr = cfg.lr;
+    for epoch in 0..cfg.epochs {
+        if epoch > 0 && epoch % cfg.lr_decay_every == 0 {
+            lr *= cfg.lr_decay;
+        }
+        shuffle(&mut order, &mut rng);
+        let mut epoch_loss = 0.0f32;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        for chunk in order.chunks(cfg.batch_size) {
+            let (x, labels) = data.gather_train(chunk);
+            let caches = if let Some(n) = cfg.stochastic_n {
+                let mut srng = Xorshift128Plus::seed_from(rng.next_u64());
+                net.forward(&x, true, Some(StochForward { n, rng: &mut srng }))
+            } else {
+                net.forward::<Xorshift128Plus>(&x, true, None)
+            };
+            adam.resize_bn(net);
+            let (loss, dl) = softmax_cross_entropy(caches.logits(), &labels);
+            let preds = argmax_rows(&caches.logits().data, caches.logits().shape[1]);
+            correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+            seen += labels.len();
+            epoch_loss += loss * labels.len() as f32;
+            let grads = net.backward(&caches, dl);
+            adam.step(net, &grads, cfg, lr);
+        }
+        let test_acc = evaluate(net, data);
+        let rec = EpochStats {
+            epoch,
+            loss: epoch_loss / seen as f32,
+            train_acc: correct as f32 / seen as f32,
+            test_acc,
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[{}] epoch {:2}  loss {:.4}  train {:.3}  test {:.3}  lr {:.1e}",
+                net.name, rec.epoch, rec.loss, rec.train_acc, rec.test_acc, lr
+            );
+        }
+        stats.push(rec);
+    }
+    stats
+}
+
+/// Float test-set accuracy (eval mode).
+pub fn evaluate(net: &mut Network, data: &Dataset) -> f32 {
+    let n = data.test_images.shape[0];
+    let mut correct = 0usize;
+    for start in (0..n).step_by(64) {
+        let idx: Vec<usize> = (start..(start + 64).min(n)).collect();
+        let (x, labels) = data.gather_test(&idx);
+        let caches = net.forward::<Xorshift128Plus>(&x, false, None);
+        let preds = argmax_rows(&caches.logits().data, caches.logits().shape[1]);
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    }
+    correct as f32 / n as f32
+}
+
+/// PSB test-set accuracy for a prepared network at a given precision.
+pub fn evaluate_psb(
+    psb: &crate::sim::psbnet::PsbNetwork,
+    data: &Dataset,
+    precision: &crate::sim::psbnet::Precision,
+    seed: u64,
+) -> (f32, crate::costs::CostCounter) {
+    let n = data.test_images.shape[0];
+    let mut correct = 0usize;
+    let mut costs = crate::costs::CostCounter::default();
+    for start in (0..n).step_by(64) {
+        let idx: Vec<usize> = (start..(start + 64).min(n)).collect();
+        let (x, labels) = data.gather_test(&idx);
+        let out = psb.forward(&x, precision, seed.wrapping_add(start as u64));
+        let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        costs.merge(&out.costs);
+    }
+    (correct as f32 / n as f32, costs)
+}
+
+fn shuffle(xs: &mut [usize], rng: &mut impl Rng) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        xs.swap(i, j);
+    }
+}
+
+#[allow(unused)]
+fn batch_tensor(_x: &Tensor) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, SynthConfig};
+    use crate::sim::network::{Network, Op};
+
+    fn tiny_data() -> Dataset {
+        Dataset::synth(&SynthConfig { train: 128, test: 64, size: 16, seed: 9, ..Default::default() })
+    }
+
+    fn tiny_net() -> Network {
+        let mut net = Network::new((16, 16, 3), "traintest");
+        let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 8 }, vec![0], "c1");
+        let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+        let r1 = net.add(Op::ReLU, vec![b1], "r1");
+        let c2 = net.add(Op::Conv { k: 3, stride: 2, cin: 8, cout: 16 }, vec![r1], "c2");
+        let b2 = net.add(Op::BatchNorm, vec![c2], "bn2");
+        let r2 = net.add(Op::ReLU, vec![b2], "r2");
+        let g = net.add(Op::GlobalAvgPool, vec![r2], "gap");
+        net.add(Op::Dense { cin: 16, cout: 10 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(33);
+        net.init(&mut rng);
+        net
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let data = tiny_data();
+        let mut net = tiny_net();
+        let cfg = TrainConfig { epochs: 4, batch_size: 32, ..Default::default() };
+        let stats = train(&mut net, &data, &cfg);
+        assert!(stats.last().unwrap().loss < stats.first().unwrap().loss, "{stats:?}");
+        // better than chance on 10 classes
+        assert!(stats.last().unwrap().train_acc > 0.15, "{stats:?}");
+    }
+
+    #[test]
+    fn stochastic_training_runs() {
+        let data = tiny_data();
+        let mut net = tiny_net();
+        let cfg = TrainConfig {
+            epochs: 2,
+            batch_size: 32,
+            stochastic_n: Some(4),
+            ..Default::default()
+        };
+        let stats = train(&mut net, &data, &cfg);
+        assert!(stats.last().unwrap().loss.is_finite());
+        assert!(stats.last().unwrap().loss < stats.first().unwrap().loss * 1.5);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut xs: Vec<usize> = (0..100).collect();
+        let mut rng = Xorshift128Plus::seed_from(5);
+        shuffle(&mut xs, &mut rng);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,113 @@
+//! Integration: the adaptive-precision coordinator over real PJRT
+//! artifacts — routing, batching, escalation and metrics invariants.
+
+use psb::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, EscalationPolicy};
+use psb::data::{Dataset, SynthConfig};
+use psb::rng::Xorshift128Plus;
+use psb::runtime::{FloatBundle, PsbBundle};
+use psb::sim::train::{train, TrainConfig};
+use std::sync::atomic::Ordering;
+
+const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+
+fn setup() -> Option<(FloatBundle, PsbBundle, Dataset)> {
+    if !std::path::Path::new("artifacts/meta.txt").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    let data = Dataset::synth(&SynthConfig {
+        train: 512,
+        test: 64,
+        size: 32,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(5);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    train(&mut net, &data, &TrainConfig { epochs: 1, ..Default::default() });
+    let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
+    let psb = PsbBundle::from_float(&float, Some(4));
+    Some((float, psb, data))
+}
+
+fn config(disabled: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: "artifacts".into(),
+        batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
+        policy: EscalationPolicy { n_low: 2, n_high: 4, disabled, ..Default::default() },
+        seed: 3,
+    }
+}
+
+#[test]
+fn every_request_is_answered_exactly_once() {
+    let Some((float, psb, data)) = setup() else { return };
+    let coord = Coordinator::start(config(false), psb, float).unwrap();
+    const N: usize = 40;
+    let mut inflight = Vec::new();
+    for i in 0..N {
+        let (x, _) = data.gather_test(&[i % 64]);
+        inflight.push(coord.submit(x.data).unwrap());
+    }
+    let mut answers = 0;
+    for rx in inflight {
+        let resp = rx.recv().expect("reply must arrive");
+        assert!(resp.class < 10);
+        assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
+        assert!(resp.n_used == 2 || resp.n_used == 4);
+        assert_eq!(resp.escalated, resp.n_used == 4);
+        answers += 1;
+    }
+    assert_eq!(answers, N);
+    assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), N as u64);
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), N as u64);
+}
+
+#[test]
+fn disabled_policy_never_escalates_and_costs_less() {
+    let Some((float, psb, data)) = setup() else { return };
+    let run = |disabled: bool| {
+        let coord = Coordinator::start(config(disabled), psb.clone(), float.clone()).unwrap();
+        let mut inflight = Vec::new();
+        for i in 0..24 {
+            let (x, _) = data.gather_test(&[i % 64]);
+            inflight.push(coord.submit(x.data).unwrap());
+        }
+        let mut escalated = 0u32;
+        for rx in inflight {
+            escalated += rx.recv().unwrap().escalated as u32;
+        }
+        (escalated, coord.metrics.gated_adds.load(Ordering::Relaxed))
+    };
+    let (esc_flat, adds_flat) = run(true);
+    let (esc_adaptive, adds_adaptive) = run(false);
+    assert_eq!(esc_flat, 0);
+    assert!(esc_adaptive > 0, "adaptive mode should escalate something");
+    assert!(adds_adaptive > adds_flat, "{adds_adaptive} vs {adds_flat}");
+}
+
+#[test]
+fn batcher_reports_occupancy_and_latency() {
+    let Some((float, psb, data)) = setup() else { return };
+    let coord = Coordinator::start(config(true), psb, float).unwrap();
+    let mut inflight = Vec::new();
+    for i in 0..16 {
+        let (x, _) = data.gather_test(&[i % 64]);
+        inflight.push(coord.submit(x.data).unwrap());
+    }
+    for rx in inflight {
+        let resp = rx.recv().unwrap();
+        assert!(resp.latency > std::time::Duration::ZERO);
+    }
+    let occ = coord.metrics.batch_occupancy();
+    assert!(occ >= 1.0 && occ <= 8.0, "occupancy {occ}");
+    assert!(coord.metrics.latency.count() == 16);
+    assert!(coord.metrics.latency.quantile(0.5) <= coord.metrics.latency.quantile(0.99));
+}
+
+#[test]
+fn oversized_image_rejected() {
+    let Some((float, psb, _)) = setup() else { return };
+    let coord = Coordinator::start(config(true), psb, float).unwrap();
+    assert!(coord.submit(vec![0.0; 17]).is_err());
+}

@@ -1,0 +1,108 @@
+//! Failure injection: the system must fail loudly and precisely, not
+//! corrupt state — bad artifact dirs, malformed metadata, truncated
+//! bundles, shape mismatches.
+
+use psb::coordinator::Engine;
+use psb::runtime::{ArtifactMeta, FloatBundle, PsbBundle, Runtime};
+
+#[test]
+fn runtime_rejects_missing_artifact_dir() {
+    let err = match Runtime::new("/nonexistent/psb-artifacts") {
+        Ok(_) => panic!("must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("meta.txt"), "should name the missing file: {msg}");
+    assert!(msg.contains("make artifacts"), "should tell the user the fix: {msg}");
+}
+
+#[test]
+fn engine_spawn_propagates_startup_error() {
+    let psb = PsbBundle { layers: vec![] };
+    let float = FloatBundle { layers: vec![] };
+    let err = match Engine::spawn("/nonexistent".into(), psb, float, vec![]) {
+        Ok(_) => panic!("must fail"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("meta.txt"));
+}
+
+#[test]
+fn meta_parse_rejects_garbage() {
+    for (text, what) in [
+        ("", "empty"),
+        ("image 32\nnum_classes 10\n", "incomplete"),
+        ("image 32\nbogus record here\n", "unknown record"),
+        ("image x\n", "bad number"),
+        ("layer 0 27 sixteen 16\n", "bad layer field"),
+    ] {
+        assert!(ArtifactMeta::parse(text).is_err(), "{what} should fail");
+    }
+}
+
+#[test]
+fn meta_parse_accepts_minimal_valid() {
+    let text = "\
+image 32
+num_classes 10
+q16_scale 1024
+layers 1
+layer 0 27 16 16
+sample_sizes 8
+batches 1
+module psb_n8_b1 psb 1 8
+module float_b1 float 1 -
+";
+    let meta = ArtifactMeta::parse(text).unwrap();
+    assert_eq!(meta.image, 32);
+    assert_eq!(meta.modules["float_b1"].n, None);
+    assert_eq!(meta.modules["psb_n8_b1"].n, Some(8));
+}
+
+#[test]
+fn bundle_load_rejects_truncation_and_garbage() {
+    let dir = std::env::temp_dir().join("psb-failure-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let p1 = dir.join("empty.txt");
+    std::fs::write(&p1, "").unwrap();
+    assert!(FloatBundle::load(&p1).is_err());
+
+    let p2 = dir.join("truncated.txt");
+    std::fs::write(&p2, "float_bundle 1\nlayer 2 2\nw 1 2 3 4\n").unwrap();
+    assert!(FloatBundle::load(&p2).is_err(), "missing bias line");
+
+    let p3 = dir.join("badlen.txt");
+    std::fs::write(&p3, "float_bundle 1\nlayer 2 2\nw 1 2 3\nbias 0 0\n").unwrap();
+    assert!(FloatBundle::load(&p3).is_err(), "weight length mismatch");
+}
+
+#[test]
+fn bundle_roundtrip_exact() {
+    use psb::rng::{Rng, Xorshift128Plus};
+    let mut rng = Xorshift128Plus::seed_from(4);
+    let layers = vec![psb::runtime::bundle::FloatLayer {
+        w: (0..12).map(|_| rng.uniform() - 0.5).collect(),
+        bias: (0..4).map(|_| rng.uniform()).collect(),
+        shape: [3, 4],
+    }];
+    let b = FloatBundle { layers };
+    let dir = std::env::temp_dir().join("psb-failure-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("roundtrip.txt");
+    b.save(&p).unwrap();
+    let back = FloatBundle::load(&p).unwrap();
+    assert_eq!(back.layers[0].shape, [3, 4]);
+    for (a, c) in b.layers[0].w.iter().zip(&back.layers[0].w) {
+        assert!((a - c).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn bundle_from_wrong_network_shape_fails() {
+    use psb::rng::Xorshift128Plus;
+    let mut rng = Xorshift128Plus::seed_from(9);
+    let net = psb::models::cnn8(32, &mut rng); // 8 convs — not the serving CNN
+    let serving = [[27usize, 16], [144, 32], [288, 32], [32, 10]];
+    assert!(FloatBundle::from_network(&net, &serving).is_err());
+}

@@ -1,0 +1,229 @@
+//! Hand-rolled property tests (the offline build has no proptest crate;
+//! cases are generated from the in-tree RNG with fixed seeds and shrunk
+//! manually by printing the failing case).
+//!
+//! Invariants covered:
+//! * PSB encoding bijectivity + range invariants across the float range;
+//! * variance bound Var(w̄_n) ≤ w²/(8n) (Eq. 10) across (w, n);
+//! * Q16 quantization idempotence and monotonicity;
+//! * binomial sampler bounds + moments across (n, p);
+//! * BN folding preserves eval-mode outputs on random DAGs;
+//! * bit-exact integer capacitor path is unbiased vs the float weights;
+//! * probability discretization error bound |Δw| ≤ 2^e / 2^bits.
+
+use psb::num::{discretize_prob, quantize_f32, PsbWeight, Q16};
+use psb::rng::{binomial::binomial_inversion, Rng, Xorshift128Plus};
+use psb::sim::fold::fold_batchnorms;
+use psb::sim::network::{Network, Op};
+use psb::sim::tensor::Tensor;
+
+const CASES: usize = 300;
+
+fn random_weight(rng: &mut impl Rng) -> f32 {
+    // log-uniform magnitude over ~12 octaves, random sign, some zeros
+    if rng.below(50) == 0 {
+        return 0.0;
+    }
+    let mag = (-6.0 + 12.0 * rng.uniform()) as f32;
+    let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+    sign * mag.exp2() * (1.0 + rng.uniform())
+}
+
+#[test]
+fn prop_encoding_bijective_and_ranged() {
+    let mut rng = Xorshift128Plus::seed_from(101);
+    for case in 0..CASES {
+        let w = random_weight(&mut rng);
+        let e = PsbWeight::encode(w);
+        let back = e.decode();
+        assert!(
+            (back - w).abs() <= 2e-6 * w.abs().max(1e-9),
+            "case {case}: w={w} back={back}"
+        );
+        if w != 0.0 {
+            assert!((0.0..1.0).contains(&e.prob), "case {case}: p={}", e.prob);
+            let lo = (e.exp as f32).exp2();
+            assert!(lo <= w.abs() * (1.0 + 1e-6), "case {case}: w={w} e={}", e.exp);
+            assert!(w.abs() < 2.0 * lo * (1.0 + 1e-6), "case {case}: w={w} e={}", e.exp);
+        } else {
+            assert_eq!(e.sign, 0);
+        }
+    }
+}
+
+#[test]
+fn prop_variance_bound_eq10() {
+    let mut rng = Xorshift128Plus::seed_from(202);
+    for case in 0..40 {
+        let w = random_weight(&mut rng);
+        if w == 0.0 {
+            continue;
+        }
+        let n = 1 << rng.below(7); // 1..64
+        let e = PsbWeight::encode(w);
+        let trials = 4000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let v = e.sample_n(n as u32, &mut rng) as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / trials as f64;
+        let var = (s2 / trials as f64 - mean * mean).max(0.0);
+        let bound = (w as f64).powi(2) / (8.0 * n as f64);
+        assert!(
+            var <= bound * 1.35 + 1e-12,
+            "case {case}: w={w} n={n} var={var} bound={bound}"
+        );
+    }
+}
+
+#[test]
+fn prop_q16_idempotent_monotone_bounded() {
+    let mut rng = Xorshift128Plus::seed_from(303);
+    let mut prev_in = f32::NEG_INFINITY;
+    let mut prev_out = f32::NEG_INFINITY;
+    let mut vals: Vec<f32> = (0..CASES).map(|_| (rng.uniform() - 0.5) * 80.0).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for v in vals {
+        let q = quantize_f32(v);
+        assert_eq!(q, quantize_f32(q), "idempotence at {v}");
+        assert!((-32.0..=32.0).contains(&q), "range at {v}");
+        assert!(q >= prev_out || v == prev_in, "monotonicity at {v}");
+        assert_eq!(q, Q16::from_f32(v).to_f32(), "struct/f32 agreement at {v}");
+        prev_in = v;
+        prev_out = q;
+    }
+}
+
+#[test]
+fn prop_binomial_bounds_and_mean() {
+    let mut rng = Xorshift128Plus::seed_from(404);
+    for case in 0..60 {
+        let n = 1 + rng.below(256) as u32;
+        let p = rng.uniform();
+        let trials = 2000;
+        let mut sum = 0u64;
+        for _ in 0..trials {
+            let k = binomial_inversion(&mut rng, n, p);
+            assert!(k <= n, "case {case}: k={k} > n={n}");
+            sum += k as u64;
+        }
+        let mean = sum as f64 / trials as f64;
+        let expect = n as f64 * p as f64;
+        let sd = (n as f64 * p as f64 * (1.0 - p as f64)).sqrt();
+        assert!(
+            (mean - expect).abs() < 5.0 * sd / (trials as f64).sqrt() + 0.05,
+            "case {case}: n={n} p={p} mean={mean} expect={expect}"
+        );
+    }
+}
+
+/// Build a random small DAG with conv/bn/relu/add/depthwise structure.
+fn random_net(rng: &mut impl Rng) -> Network {
+    let mut net = Network::new((8, 8, 3), "prop");
+    let mut frontier = 0usize; // current trunk node
+    let mut channels = 3usize;
+    let blocks = 1 + rng.below(3) as usize;
+    for b in 0..blocks {
+        let cout = [4usize, 8][rng.below(2) as usize];
+        let stride = 1 + rng.below(2) as usize;
+        let c = net.add(
+            Op::Conv { k: 3, stride, cin: channels, cout },
+            vec![frontier],
+            &format!("c{b}"),
+        );
+        let with_bn = rng.bernoulli(0.8);
+        let mut tip = c;
+        if with_bn {
+            tip = net.add(Op::BatchNorm, vec![tip], &format!("bn{b}"));
+        }
+        tip = net.add(Op::ReLU, vec![tip], &format!("r{b}"));
+        // optional residual add when shapes allow
+        if stride == 1 && cout == channels && rng.bernoulli(0.5) {
+            tip = net.add(Op::Add, vec![tip, frontier], &format!("a{b}"));
+        }
+        frontier = tip;
+        channels = cout;
+    }
+    let g = net.add(Op::GlobalAvgPool, vec![frontier], "gap");
+    net.add(Op::Dense { cin: channels, cout: 4 }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+#[test]
+fn prop_bn_folding_preserves_eval_output() {
+    let mut rng = Xorshift128Plus::seed_from(505);
+    for case in 0..25 {
+        let mut net = random_net(&mut rng);
+        // materialize BN stats with a few training-mode forwards
+        for s in 0..4 {
+            let x = Tensor::from_vec(
+                (0..2 * 8 * 8 * 3).map(|_| rng.uniform()).collect(),
+                &[2, 8, 8, 3],
+            );
+            let _ = s;
+            net.forward::<Xorshift128Plus>(&x, true, None);
+        }
+        let x = Tensor::from_vec(
+            (0..2 * 8 * 8 * 3).map(|_| rng.uniform()).collect(),
+            &[2, 8, 8, 3],
+        );
+        let before = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        fold_batchnorms(&mut net);
+        let after = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert!((a - b).abs() < 2e-3, "case {case}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn prop_exact_integer_capacitor_unbiased() {
+    use psb::costs::CostCounter;
+    use psb::num::PsbPlanes;
+    use psb::sim::capacitor::capacitor_matmul_exact;
+    let mut rng = Xorshift128Plus::seed_from(606);
+    for case in 0..10 {
+        let k = 1 + rng.below(6) as usize;
+        let n_out = 1 + rng.below(4) as usize;
+        let w: Vec<f32> = (0..k * n_out).map(|_| random_weight(&mut rng).clamp(-4.0, 4.0)).collect();
+        let planes = PsbPlanes::encode(&w, &[k, n_out]);
+        let x: Vec<f32> = (0..k).map(|_| quantize_f32(rng.uniform() * 2.0 - 1.0)).collect();
+        let xq: Vec<Q16> = x.iter().map(|&v| Q16::from_f32(v)).collect();
+        let want = psb::sim::tensor::matmul(&x, &w, 1, k, n_out);
+        let trials = 600u64;
+        let mut mean = vec![0.0f64; n_out];
+        let mut costs = CostCounter::default();
+        for t in 0..trials {
+            let y = capacitor_matmul_exact(&xq, &planes, None, 1, 16, t * 7 + case, &mut costs);
+            for (m, v) in mean.iter_mut().zip(&y) {
+                *m += v.to_f32() as f64;
+            }
+        }
+        for (j, (m, w)) in mean.iter().zip(&want).enumerate() {
+            let m = m / trials as f64;
+            // integer grid + sampling noise tolerance
+            let tol = 0.08 * w.abs().max(0.5) as f64;
+            assert!((m - *w as f64).abs() < tol, "case {case} out {j}: mean {m} want {w}");
+        }
+    }
+}
+
+#[test]
+fn prop_discretization_error_bound() {
+    let mut rng = Xorshift128Plus::seed_from(707);
+    for case in 0..CASES {
+        let w = random_weight(&mut rng);
+        if w == 0.0 {
+            continue;
+        }
+        let bits = 1 + rng.below(6) as u32;
+        let e = PsbWeight::encode(w);
+        let q = PsbWeight { prob: discretize_prob(e.prob, bits), ..e };
+        let err = (q.decode() - w).abs();
+        let bound = (e.exp as f32).exp2() / (1u32 << bits) as f32;
+        assert!(err <= bound + 1e-6, "case {case}: w={w} bits={bits} err={err} bound={bound}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: rust simulator ⇄ AOT artifacts (PJRT) round trips.
+//!
+//! Requires `make artifacts`; every test skips (with a loud message) when
+//! the artifact directory is absent so `cargo test` stays runnable on a
+//! fresh checkout.
+
+use psb::data::{Dataset, SynthConfig};
+use psb::rng::Xorshift128Plus;
+use psb::runtime::{ArtifactMeta, FloatBundle, PsbBundle, Runtime};
+use psb::sim::layers::argmax_rows;
+use psb::sim::train::{train, TrainConfig};
+
+const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("meta.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/meta.txt missing — run `make artifacts`");
+        None
+    }
+}
+
+fn trained() -> (psb::sim::network::Network, Dataset) {
+    let data = Dataset::synth(&SynthConfig {
+        train: 512,
+        test: 128,
+        size: 32,
+        seed: 42,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(42);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    train(&mut net, &data, &TrainConfig { epochs: 2, ..Default::default() });
+    (net, data)
+}
+
+#[test]
+fn meta_parses_and_lists_modules() {
+    let Some(dir) = artifacts() else { return };
+    let meta = ArtifactMeta::load(&dir).unwrap();
+    assert_eq!(meta.image, 32);
+    assert_eq!(meta.num_classes, 10);
+    assert_eq!(meta.layer_shapes.len(), 4);
+    assert_eq!(meta.layer_shapes[2].weight, [288, 32]);
+    for b in &meta.batches {
+        assert!(meta.modules.contains_key(&meta.float_module(*b)));
+        for n in &meta.sample_sizes {
+            let m = &meta.modules[&meta.psb_module(*n, *b)];
+            assert_eq!(m.kind, "psb");
+            assert_eq!(m.n, Some(*n));
+        }
+    }
+}
+
+#[test]
+fn float_module_matches_simulator() {
+    let Some(dir) = artifacts() else { return };
+    let (mut net, data) = trained();
+    let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (x, _) = data.gather_test(&(0..8).collect::<Vec<_>>());
+    let exec = rt.run_float(8, &x.data, &float).unwrap();
+    let sim = net.forward::<Xorshift128Plus>(&x, false, None);
+    let max_err = exec
+        .logits
+        .iter()
+        .zip(&sim.logits().data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // same graph, different op ordering: small fp slack
+    assert!(max_err < 5e-3, "PJRT float vs rust sim: max err {max_err}");
+    assert_eq!(exec.feat_shape, [8, 8, 8, 32]);
+}
+
+#[test]
+fn psb_module_converges_to_float_with_n() {
+    let Some(dir) = artifacts() else { return };
+    let (mut net, data) = trained();
+    let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
+    let psb = PsbBundle::from_float(&float, None);
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (x, _) = data.gather_test(&(0..8).collect::<Vec<_>>());
+    let ref_logits = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
+    let mut errs = Vec::new();
+    for n in [1u32, 8, 64] {
+        let exec = rt.run_psb(n, 8, &x.data, 7, &psb).unwrap();
+        let err: f32 = exec
+            .logits
+            .iter()
+            .zip(&ref_logits.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / exec.logits.len() as f32;
+        errs.push(err);
+    }
+    assert!(errs[2] < errs[0], "PSB error must fall with n: {errs:?}");
+    assert!(errs[2] < 0.25, "psb64 too far from float: {errs:?}");
+}
+
+#[test]
+fn psb_module_is_deterministic_per_seed() {
+    let Some(dir) = artifacts() else { return };
+    let (net, data) = trained();
+    let psb = PsbBundle::from_network(&net, &SERVING_SHAPES, None).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (x, _) = data.gather_test(&[0]);
+    let a = rt.run_psb(8, 1, &x.data, 123, &psb).unwrap();
+    let b = rt.run_psb(8, 1, &x.data, 123, &psb).unwrap();
+    assert_eq!(a.logits, b.logits, "same seed must reproduce exactly");
+    let c = rt.run_psb(8, 1, &x.data, 124, &psb).unwrap();
+    assert_ne!(a.logits, c.logits, "different seed must differ");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts() else { return };
+    let (net, data) = trained();
+    let psb = PsbBundle::from_network(&net, &SERVING_SHAPES, None).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (x, _) = data.gather_test(&[0]);
+    for _ in 0..3 {
+        rt.run_psb(8, 1, &x.data, 1, &psb).unwrap();
+    }
+    assert_eq!(rt.compiles, 1);
+    rt.run_psb(16, 1, &x.data, 1, &psb).unwrap();
+    assert_eq!(rt.compiles, 2);
+}
+
+#[test]
+fn psb_argmax_tracks_float_at_high_n() {
+    let Some(dir) = artifacts() else { return };
+    let (mut net, data) = trained();
+    let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
+    let psb = PsbBundle::from_float(&float, None);
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (x, _) = data.gather_test(&(0..8).collect::<Vec<_>>());
+    let sim = net.forward::<Xorshift128Plus>(&x, false, None);
+    let want = argmax_rows(&sim.logits().data, 10);
+    let exec = rt.run_psb(64, 8, &x.data, 5, &psb).unwrap();
+    let got = argmax_rows(&exec.logits, 10);
+    let agree = got.iter().zip(&want).filter(|(a, b)| a == b).count();
+    assert!(agree >= 6, "psb64 argmax agreement {agree}/8");
+}
