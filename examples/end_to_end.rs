@@ -17,7 +17,8 @@ use psb::data::{Dataset, SynthConfig};
 use psb::rng::Xorshift128Plus;
 use psb::runtime::{FloatBundle, PsbBundle, Runtime};
 use psb::sim::layers::argmax_rows;
-use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::precision::PrecisionPlan;
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::train::{evaluate_psb, train, TrainConfig};
 
 const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // ---------- 3. cross-check sim vs PJRT artifacts ---------------------------
     println!("\n=== 3. L3 sim vs L2/L1 artifacts (PJRT) ===");
     let artifact_dir = std::path::Path::new("artifacts");
-    if artifact_dir.join("meta.txt").exists() {
+    if cfg!(feature = "pjrt") && artifact_dir.join("meta.txt").exists() {
         let mut rt = Runtime::new(artifact_dir)?;
         let (x, labels) = data.gather_test(&(0..8).collect::<Vec<_>>());
         // float path: must agree to numerical tolerance
@@ -89,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     println!("{:>14} {:>10.3} {:>9.1}% {:>16}", "float32", float_acc, 100.0, "-");
     let mut psb16_adds = 0u64;
     for n in [4u32, 8, 16, 32, 64] {
-        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), 11);
+        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), 11);
         if n == 16 {
             psb16_adds = costs.gated_adds;
         }

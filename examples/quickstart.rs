@@ -10,7 +10,8 @@
 use psb::data::{Dataset, SynthConfig};
 use psb::num::PsbWeight;
 use psb::rng::Xorshift128Plus;
-use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::precision::PrecisionPlan;
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::train::{evaluate, evaluate_psb, train, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -39,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nPSB inference (no retraining — weights re-encoded bijectively):");
     println!("{:>6} {:>10} {:>12} {:>14}", "n", "accuracy", "rel. acc", "gated adds");
     for n in [1u32, 2, 4, 8, 16, 32, 64] {
-        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), 3);
+        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), 3);
         println!(
             "{n:>6} {acc:>10.3} {:>11.1}% {:>14}",
             100.0 * acc / float_acc,

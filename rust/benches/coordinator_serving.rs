@@ -19,6 +19,10 @@ const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10
 const REQUESTS: usize = 64;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return;
+    }
     if !std::path::Path::new("artifacts/meta.txt").exists() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return;

@@ -9,7 +9,8 @@ use std::time::Duration;
 
 use psb::models::MODEL_NAMES;
 use psb::rng::{Rng, Xorshift128Plus};
-use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::precision::PrecisionPlan;
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::tensor::Tensor;
 
 fn main() {
@@ -31,7 +32,7 @@ fn main() {
             let mut seed = 0u64;
             let mean = harness::bench(&format!("{name} psb{n} fwd b8"), budget, || {
                 seed += 1;
-                std::hint::black_box(psb.forward(&x, &Precision::Uniform(n), seed).logits.len());
+                std::hint::black_box(psb.forward(&x, &PrecisionPlan::uniform(n), seed).unwrap().logits.len());
             });
             harness::report_rate("  -> images", 8.0, mean);
         }

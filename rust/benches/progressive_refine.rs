@@ -1,0 +1,85 @@
+//! Progressive-refinement bench: escalate-with-reuse vs full recompute
+//! at the Table 1 operating points (psb8→16, psb16→32).
+//!
+//! Measures, per operating point:
+//! * wall time of a fresh `n_high` pass vs the incremental `refine`
+//!   step on an existing `n_low` state (the refine draws only the
+//!   `n_high − n_low` missing samples; both walk the activations once);
+//! * the hardware cost (gated adds) of each — escalation must be
+//!   strictly below a fresh `n_high` pass, which is the acceptance
+//!   criterion of the progressive API.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::precision::PrecisionPlan;
+use psb::rng::{Rng, RngKind, Xorshift128Plus};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    let mut rng = Xorshift128Plus::seed_from(21);
+    let mut net = psb::models::by_name("resnet_mini", 32, &mut rng);
+    let x = Tensor::from_vec((0..8 * 32 * 32 * 3).map(|_| rng.uniform()).collect(), &[8, 32, 32, 3]);
+    for _ in 0..3 {
+        net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+
+    let mut all_ok = true;
+    for (lo, hi) in [(8u32, 16u32), (16, 32)] {
+        // fresh full-precision pass: the non-progressive baseline
+        let mut seed = 0u64;
+        harness::bench(&format!("fresh psb{hi} b8"), budget, || {
+            seed += 1;
+            std::hint::black_box(
+                psb.forward_with_kind(&x, &PrecisionPlan::uniform(hi), RngKind::Philox, seed)
+                    .unwrap()
+                    .logits
+                    .len(),
+            );
+        });
+
+        // escalation only: refine an existing n_low state to n_high.
+        // Pristine stage-1 states are built outside the timed region
+        // (stage 1 is the same work in both serving modes); each
+        // iteration clones one — a flat memcpy of the count vectors,
+        // constant and tiny next to the refine itself — so the timed
+        // work is exactly one lo→hi escalation, every iteration.
+        let templates: Vec<_> = (0..16)
+            .map(|s| {
+                let mut st = psb.begin(RngKind::Philox, s as u64);
+                psb.refine(&x, &mut st, &PrecisionPlan::uniform(lo)).unwrap();
+                st
+            })
+            .collect();
+        let mut i = 0usize;
+        let plan_hi = PrecisionPlan::uniform(hi);
+        harness::bench(&format!("escalate psb{lo}->{hi} b8 (reuse)"), budget, || {
+            let mut st = templates[i % templates.len()].clone();
+            i += 1;
+            std::hint::black_box(psb.refine(&x, &mut st, &plan_hi).unwrap().logits.len());
+        });
+
+        // hardware-cost comparison (the acceptance criterion)
+        let fresh =
+            psb.forward_with_kind(&x, &PrecisionPlan::uniform(hi), RngKind::Philox, 1).unwrap().costs;
+        let mut st = psb.begin(RngKind::Philox, 1);
+        let stage1 = psb.refine(&x, &mut st, &PrecisionPlan::uniform(lo)).unwrap().costs;
+        let escalate = psb.refine(&x, &mut st, &plan_hi).unwrap().costs;
+        let ok = escalate.gated_adds < fresh.gated_adds;
+        all_ok &= ok;
+        println!(
+            "psb{lo}->{hi}: fresh={} stage1={} escalate={} (reuse saves {:.0}% of the fresh pass) {}",
+            fresh.gated_adds,
+            stage1.gated_adds,
+            escalate.gated_adds,
+            100.0 * (1.0 - escalate.gated_adds as f64 / fresh.gated_adds as f64),
+            if ok { "PASS" } else { "FAIL" },
+        );
+    }
+    assert!(all_ok, "escalation must cost strictly less than a fresh high-precision pass");
+}

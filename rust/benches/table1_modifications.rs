@@ -11,7 +11,8 @@ use std::time::Duration;
 use psb::attention::adaptive_forward;
 use psb::prune::prune_global;
 use psb::rng::{Rng, Xorshift128Plus};
-use psb::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use psb::precision::PrecisionPlan;
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::tensor::Tensor;
 
 fn main() {
@@ -29,7 +30,7 @@ fn main() {
         let mut seed = 0u64;
         harness::bench(&format!("resnet_mini psb{n} b8"), budget, || {
             seed += 1;
-            std::hint::black_box(psb.forward(&x, &Precision::Uniform(n), seed).logits.len());
+            std::hint::black_box(psb.forward(&x, &PrecisionPlan::uniform(n), seed).unwrap().logits.len());
         });
     }
 
@@ -41,7 +42,7 @@ fn main() {
         let mut seed = 0u64;
         harness::bench(&format!("pruned {:.0}% psb16 b8", frac * 100.0), budget, || {
             seed += 1;
-            std::hint::black_box(psb_p.forward(&x, &Precision::Uniform(16), seed).logits.len());
+            std::hint::black_box(psb_p.forward(&x, &PrecisionPlan::uniform(16), seed).unwrap().logits.len());
         });
     }
 
@@ -50,7 +51,7 @@ fn main() {
     let mut seed = 0u64;
     harness::bench("4-bit probs psb16 b8", budget, || {
         seed += 1;
-        std::hint::black_box(psb_d.forward(&x, &Precision::Uniform(16), seed).logits.len());
+        std::hint::black_box(psb_d.forward(&x, &PrecisionPlan::uniform(16), seed).unwrap().logits.len());
     });
 
     // two-stage attention vs its flat bounds

@@ -1,18 +1,23 @@
 //! Computational attention (paper Sec. 4.5): use the network itself, in a
 //! cheap low-precision mode, to decide where to spend samples.
 //!
-//! Pipeline:
-//! 1. run the PSB network at `n_low` (8 in the paper) on the full image;
-//! 2. compute the *pixelwise entropy* of the last conv layer's channel
-//!    distribution, `h_xy = Σ_c −softmax(a_xyc)·log softmax(a_xyc)`;
-//! 3. threshold at the per-image mean entropy → binary mask of
-//!    "interesting" (high-entropy) regions (~35% of pixels on the paper's
-//!    data);
-//! 4. re-run with `n_high` samples only inside the mask
-//!    (`Precision::Spatial`).
+//! Pipeline (now genuinely *progressive* — the stage-1 capacitor state
+//! is refined in place instead of recomputed):
+//! 1. `begin` a [`ProgressiveState`] and `refine` it to a uniform
+//!    `n_low` plan (8 in the paper) on the full image;
+//! 2. feed the last conv layer's activations to the
+//!    [`SpatialAttention`] policy: pixelwise channel entropy
+//!    `h_xy = Σ_c −softmax(a_xyc)·log softmax(a_xyc)`, thresholded into
+//!    a binary mask of "interesting" regions (~35% of pixels on the
+//!    paper's data), upsampled to input resolution;
+//! 3. `refine` the *same* state to the resulting spatial plan — masked
+//!    regions add only the `n_high − n_low` missing samples (Eq. 8's
+//!    additivity), which is the paper's −33% headline.
 
 use crate::costs::CostCounter;
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOutput};
+use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy, SpatialAttention};
+use crate::rng::RngKind;
+use crate::sim::psbnet::{PsbNetwork, PsbOutput};
 use crate::sim::tensor::{dims4, Tensor};
 
 /// Pixelwise channel entropy of a feature map `[B,H,W,C] -> [B,H,W]`.
@@ -78,8 +83,8 @@ pub fn threshold_mask(entropy: &Tensor, thr: Threshold) -> Vec<bool> {
 }
 
 /// Upsample a `[B,h,w]` mask to `[B,H,W]` (nearest neighbour) — the last
-/// conv layer runs at reduced resolution but the `Precision::Spatial`
-/// mask lives at input resolution.
+/// conv layer runs at reduced resolution but the spatial plan's mask
+/// lives at input resolution.
 pub fn upsample_mask(mask: &[bool], b: usize, h: usize, w: usize, th: usize, tw: usize) -> Vec<bool> {
     let mut out = vec![false; b * th * tw];
     for bi in 0..b {
@@ -97,12 +102,11 @@ pub fn upsample_mask(mask: &[bool], b: usize, h: usize, w: usize, th: usize, tw:
 /// Result of a two-stage adaptive inference.
 pub struct AttentionOutput {
     pub logits: Tensor,
-    /// Progressive cost: because PSB samples *accumulate*, the stage-1
-    /// pass is fully reused — low regions keep their `n_low` result and
-    /// high regions only add `n_high − n_low` samples.  The total is
-    /// therefore exactly the spatial pass's cost,
-    /// `(1−f)·n_low + f·n_high` per MAC (the paper's −33% at f≈0.35,
-    /// n_low/n_high = 8/16).
+    /// Progressive cost: stage 1 plus the *incremental* refinement —
+    /// because PSB samples accumulate, low regions keep their `n_low`
+    /// result and high regions only add `n_high − n_low` samples.  The
+    /// total is exactly `(1−f)·n_low + f·n_high` per MAC (the paper's
+    /// −33% at f≈0.35, n_low/n_high = 8/16).
     pub costs: CostCounter,
     /// Non-progressive upper bound: stage 1 + stage 2 recomputed from
     /// scratch (what a quantizer without runtime precision control pays).
@@ -114,8 +118,8 @@ pub struct AttentionOutput {
 }
 
 /// The full two-stage mechanism of Sec. 4.5 / Table 1 "attention":
-/// stage 1 at `n_low` everywhere → entropy mask → stage 2 at
-/// `n_low/n_high` spatially split.
+/// stage 1 at `n_low` everywhere → entropy mask → progressive refinement
+/// to the `n_low/n_high` spatial split.
 pub fn adaptive_forward(
     psb: &PsbNetwork,
     x: &Tensor,
@@ -136,24 +140,38 @@ pub fn adaptive_forward_with(
     thr: Threshold,
 ) -> AttentionOutput {
     let (b, h, w, _) = dims4(x);
-    let stage1 = psb.forward(x, &Precision::Uniform(n_low), seed);
+    let mut state = psb.begin(RngKind::Xorshift, seed);
+    let stage1 = psb
+        .refine(x, &mut state, &PrecisionPlan::uniform(n_low))
+        .expect("uniform stage-1 plan is always valid");
     let feat = stage1.feat.as_ref().expect("network must designate a feat node");
-    let (fb, fh, fw, _) = dims4(feat);
-    assert_eq!(fb, b);
-    let entropy = pixel_entropy(feat);
-    let small_mask = threshold_mask(&entropy, thr);
-    let mask = upsample_mask(&small_mask, b, fh, fw, h, w);
-    let interesting = mask.iter().filter(|&&m| m).count() as f32 / mask.len() as f32;
-    let stage2 = psb.forward(
-        x,
-        &Precision::Spatial { mask, n_low, n_high },
-        seed.wrapping_add(1),
-    );
-    let mut costs_two_pass = stage1.costs;
-    costs_two_pass.merge(&stage2.costs);
+    // mask at the *actual* input resolution (the simulator is fully
+    // convolutional, so x need not match the nominal prepare-time size)
+    let mut ctx = PlanContext::for_network(psb, b);
+    ctx.input_hw = (h, w);
+    let plan = SpatialAttention { n_low, n_high, threshold: thr }
+        .plan(&ctx.with_feat(feat))
+        .expect("feature map provided");
+    let interesting = plan.mask_fraction();
+    let stage2 = psb
+        .refine(x, &mut state, &plan)
+        .expect("spatial escalation refines the stage-1 plan");
+    // progressive total: stage 1 + the incremental escalation.  The
+    // gated-add/random-bit fields partition the work exactly; `macs`
+    // counts *weight-application coverage* for fp32-baseline comparison
+    // and must reflect one logical pass, not one per refinement stage.
+    let mut costs = stage1.costs;
+    costs.merge(&stage2.costs);
+    costs.macs = stage1.costs.macs;
+    // non-progressive bound: the fresh spatial pass would re-pay the
+    // stage-1 samples on top of the escalation, so two-pass = 2×stage1
+    // + incremental (exactly the old recompute-from-scratch accounting)
+    let mut costs_two_pass = costs;
+    costs_two_pass.merge(&stage1.costs);
+    costs_two_pass.macs = stage1.costs.macs;
     AttentionOutput {
         logits: stage2.logits,
-        costs: stage2.costs, // progressive reuse: see field docs
+        costs,
         costs_two_pass,
         interesting_fraction: interesting,
         stage1,
@@ -212,8 +230,8 @@ mod tests {
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let (x, _) = d.gather_test(&(0..4).collect::<Vec<_>>());
         let out = adaptive_forward(&psb, &x, 8, 16, 3);
-        let flat8 = psb.forward(&x, &Precision::Uniform(8), 3).costs;
-        let flat16 = psb.forward(&x, &Precision::Uniform(16), 3).costs;
+        let flat8 = psb.forward(&x, &PrecisionPlan::uniform(8), 3).unwrap().costs;
+        let flat16 = psb.forward(&x, &PrecisionPlan::uniform(16), 3).unwrap().costs;
         // progressive accounting: strictly between flat-8 and flat-16
         assert!(out.interesting_fraction > 0.05 && out.interesting_fraction < 0.95);
         assert!(out.costs.gated_adds > flat8.gated_adds);
@@ -226,5 +244,39 @@ mod tests {
         // the non-progressive two-pass bound is larger
         assert!(out.costs_two_pass.gated_adds > out.costs.gated_adds);
         assert_eq!(out.logits.shape, vec![4, 10]);
+    }
+
+    #[test]
+    fn adaptive_logits_match_one_shot_spatial_pass() {
+        // the tentpole invariant at the attention level: refining the
+        // stage-1 state must equal a fresh pass under the same plan
+        let mut rng = Xorshift128Plus::seed_from(5);
+        let mut net = crate::models::cnn8(16, &mut rng);
+        let d = crate::data::Dataset::synth(&crate::data::SynthConfig {
+            train: 64,
+            test: 16,
+            size: 16,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            let (x, _) = d.gather_train(&(0..32).collect::<Vec<_>>());
+            net.forward::<Xorshift128Plus>(&x, true, None);
+        }
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let (x, _) = d.gather_test(&(0..2).collect::<Vec<_>>());
+        let out = adaptive_forward(&psb, &x, 4, 12, 17);
+        // rebuild the same spatial plan from stage-1 features and run it
+        // one-shot with the same seed
+        let plan = crate::precision::SpatialAttention {
+            n_low: 4,
+            n_high: 12,
+            threshold: Threshold::Mean,
+        }
+        .plan(
+            &PlanContext::for_network(&psb, 2).with_feat(out.stage1.feat.as_ref().unwrap()),
+        )
+        .unwrap();
+        let direct = psb.forward(&x, &plan, 17).unwrap();
+        assert_eq!(out.logits.data, direct.logits.data);
     }
 }

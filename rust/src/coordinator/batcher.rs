@@ -6,6 +6,11 @@
 //! for occupancy: a batch departs when full or when the oldest request
 //! has waited `linger`.  Runs as a plain thread loop on std channels
 //! (the offline build has no async runtime).
+//!
+//! Only stage 1 batches through here.  Escalations ride as per-batch
+//! groups instead (see `server::EscalationGroup`): rows of one stage-1
+//! batch share a progressive capacitor state, and re-batching across
+//! stage-1 batches would mix states drawn from different streams.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

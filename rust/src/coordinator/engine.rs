@@ -1,27 +1,60 @@
-//! The PJRT engine thread.
+//! The engine thread: serialized model execution behind a channel.
 //!
-//! PJRT client/executable handles are raw pointers without `Send`, so all
-//! execution happens on one dedicated OS thread that owns the
-//! [`Runtime`](crate::runtime::Runtime) plus the weight bundles.  Other
-//! threads talk to it through an unbounded std channel; replies travel
-//! back over rendezvous channels.
+//! Two backends share one job type:
+//!
+//! * **PJRT** ([`Engine::spawn`]) — owns the [`Runtime`] plus the weight
+//!   bundles on a dedicated OS thread (PJRT client/executable handles
+//!   are raw pointers without `Send`).  Artifacts are compiled per
+//!   `(n, batch)`, so only *uniform* plans execute here and progressive
+//!   state cannot be resumed (the hardware the artifacts model would
+//!   keep its capacitor accumulators; the AOT modules are stateless).
+//! * **Simulator** ([`Engine::spawn_sim`]) — owns a prepared
+//!   [`PsbNetwork`] and executes any [`PrecisionPlan`], returning the
+//!   [`ProgressiveState`] of the pass so an escalation can `refine` it
+//!   and pay only the incremental samples.
+//!
+//! Other threads talk to the engine through an unbounded std channel;
+//! replies travel back over rendezvous channels.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::precision::{PlanError, PrecisionPlan, ProgressiveState};
+use crate::rng::RngKind;
 use crate::runtime::{Execution, FloatBundle, PsbBundle, Runtime};
+use crate::sim::psbnet::PsbNetwork;
+use crate::sim::tensor::{dims4, Tensor};
 
-/// A unit of engine work: one padded batch at one precision.
+/// A unit of engine work: one padded batch under one precision plan.
 pub struct EngineJob {
-    /// Sample size; `None` runs the float32 baseline module.
-    pub n: Option<u32>,
+    /// Precision plan; `None` runs the float32 baseline module (PJRT
+    /// backend only).
+    pub plan: Option<PrecisionPlan>,
+    /// Progressive state from an earlier pass over the same weights:
+    /// the simulator backend refines it in place (charging only the
+    /// incremental samples); the PJRT backend ignores it (see module
+    /// docs) and recomputes.
+    pub resume: Option<ProgressiveState>,
     /// Row-major `[batch, img, img, 3]` input.
     pub x: Vec<f32>,
     pub batch: usize,
     pub seed: u32,
-    pub reply: mpsc::SyncSender<Result<Execution>>,
+    pub reply: mpsc::SyncSender<Result<EngineOutput>>,
+}
+
+/// Result of one engine pass.
+pub struct EngineOutput {
+    pub exec: Execution,
+    /// Progressive state after the pass (simulator backend only) —
+    /// submit it back via [`EngineJob::resume`] to escalate.
+    pub state: Option<ProgressiveState>,
+    /// Gated adds actually charged by the pass over the rows submitted
+    /// (the coordinator submits live rows only to the sim backend).
+    /// The PJRT backend reports 0 and consumers (the coordinator's
+    /// metrics) fall back to a geometric estimate over live rows.
+    pub gated_adds: u64,
 }
 
 /// Handle to the engine thread.
@@ -31,8 +64,9 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn the engine thread.  Compiles nothing eagerly; executables are
-    /// compiled on first use and cached (pass `warm` to precompile).
+    /// Spawn the PJRT engine thread.  Compiles nothing eagerly;
+    /// executables are compiled on first use and cached (pass `warm` to
+    /// precompile).
     pub fn spawn(
         artifact_dir: std::path::PathBuf,
         psb: PsbBundle,
@@ -51,6 +85,17 @@ impl Engine {
                         return;
                     }
                 };
+                // fail at startup, not per job: a stub runtime (built
+                // without the pjrt feature) can load metadata but will
+                // never execute anything
+                if !cfg!(feature = "pjrt") {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!(
+                        "psb was built without the `pjrt` feature — artifacts found but \
+                         cannot execute; rebuild with `--features pjrt`, or serve through \
+                         the simulator engine (`Engine::spawn_sim` / `Coordinator::start_sim`)"
+                    )));
+                    return;
+                }
                 let mut warm_result = Ok(());
                 for (n, b) in warm {
                     let name = match n {
@@ -68,9 +113,17 @@ impl Engine {
                     return;
                 }
                 while let Ok(job) = rx.recv() {
-                    let result = match job.n {
-                        Some(n) => rt.run_psb(n, job.batch, &job.x, job.seed, &psb),
-                        None => rt.run_float(job.batch, &job.x, &float),
+                    let result = match &job.plan {
+                        Some(plan) => match plan.uniform_n() {
+                            Some(n) => rt
+                                .run_psb(n, job.batch, &job.x, job.seed, &psb)
+                                .map(|exec| EngineOutput { exec, state: None, gated_adds: 0 }),
+                            // fixed-n artifacts cannot express mixed plans
+                            None => Err(anyhow::Error::new(PlanError::NotUniform)),
+                        },
+                        None => rt
+                            .run_float(job.batch, &job.x, &float)
+                            .map(|exec| EngineOutput { exec, state: None, gated_adds: 0 }),
                     };
                     // receiver may have given up; dropping the reply is fine
                     let _ = job.reply.send(result);
@@ -80,17 +133,88 @@ impl Engine {
         Ok(Engine { tx, handle: Some(handle) })
     }
 
+    /// Spawn the simulator engine thread: pure-rust capacitor execution
+    /// of `net` with progressive state reuse.  Needs no artifacts, so
+    /// the coordinator can serve (and its tests run) anywhere.
+    pub fn spawn_sim(net: PsbNetwork) -> Result<Engine> {
+        anyhow::ensure!(
+            net.feat_node.is_some(),
+            "sim engine needs a feat node for the escalation signal"
+        );
+        let (tx, rx) = mpsc::channel::<EngineJob>();
+        let handle = std::thread::Builder::new()
+            .name("psb-sim-engine".into())
+            .spawn(move || {
+                let (h, w, c) = net.input_hwc;
+                while let Ok(job) = rx.recv() {
+                    let result = run_sim_job(&net, h, w, c, job.plan, job.resume, job.x, job.batch, job.seed);
+                    let _ = job.reply.send(result);
+                }
+            })?;
+        Ok(Engine { tx, handle: Some(handle) })
+    }
+
     /// Enqueue a job (non-blocking).
     pub fn submit(&self, job: EngineJob) -> Result<()> {
         self.tx.send(job).map_err(|_| anyhow::anyhow!("engine thread has shut down"))
     }
 
     /// Convenience: run one batch and wait for the result.
-    pub fn run(&self, n: Option<u32>, x: Vec<f32>, batch: usize, seed: u32) -> Result<Execution> {
+    pub fn run(
+        &self,
+        plan: Option<PrecisionPlan>,
+        resume: Option<ProgressiveState>,
+        x: Vec<f32>,
+        batch: usize,
+        seed: u32,
+    ) -> Result<EngineOutput> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.submit(EngineJob { n, x, batch, seed, reply })?;
+        self.submit(EngineJob { plan, resume, x, batch, seed, reply })?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped the job"))?
     }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_sim_job(
+    net: &PsbNetwork,
+    h: usize,
+    w: usize,
+    c: usize,
+    plan: Option<PrecisionPlan>,
+    resume: Option<ProgressiveState>,
+    x: Vec<f32>,
+    batch: usize,
+    seed: u32,
+) -> Result<EngineOutput> {
+    let plan = plan
+        .ok_or_else(|| anyhow::anyhow!("sim engine has no float32 module; submit a PSB plan"))?;
+    anyhow::ensure!(
+        x.len() == batch * h * w * c,
+        "input size {} != batch {batch} × {h}×{w}×{c}",
+        x.len()
+    );
+    let xt = Tensor::from_vec(x, &[batch, h, w, c]);
+    let mut state = match resume {
+        Some(s) => s,
+        // Philox: counter-based streams skip their consumed prefix in
+        // O(1), so serving-path escalations pay only the new samples in
+        // RNG work too, not just in gated-add accounting
+        None => net.begin(RngKind::Philox, seed as u64),
+    };
+    let out = net.refine(&xt, &mut state, &plan)?;
+    let feat = out
+        .feat
+        .ok_or_else(|| anyhow::anyhow!("network lacks a feat node"))?;
+    let (fb, fh, fw, fc) = dims4(&feat);
+    Ok(EngineOutput {
+        exec: Execution {
+            logits: out.logits.data,
+            feat: feat.data,
+            feat_shape: [fb, fh, fw, fc],
+        },
+        state: Some(state),
+        gated_adds: out.costs.gated_adds,
+    })
 }
 
 impl Drop for Engine {

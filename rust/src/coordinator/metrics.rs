@@ -61,6 +61,12 @@ pub struct Metrics {
     pub latency: Histogram,
     pub stage1_latency: Histogram,
     pub gated_adds: AtomicU64,
+    /// Per-weight samples actually paid for (stage-1 `n_low` per row
+    /// plus the incremental `n_high − n_low` per escalated row).
+    pub samples_paid: AtomicU64,
+    /// Samples carried over from stage 1 into an escalation instead of
+    /// being recomputed — the progressive-refinement win (Sec. 4.5).
+    pub samples_reused: AtomicU64,
 }
 
 impl Metrics {
@@ -83,13 +89,27 @@ impl Metrics {
         self.escalated.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// Fraction of the naive two-pass sample budget that progressive
+    /// refinement avoided: `reused / (paid + reused)`.  Zero under flat
+    /// serving; approaches `n_low / (n_low + n_high)` when every request
+    /// escalates.
+    pub fn reuse_ratio(&self) -> f64 {
+        let reused = self.samples_reused.load(Ordering::Relaxed) as f64;
+        let paid = self.samples_paid.load(Ordering::Relaxed) as f64;
+        if reused + paid == 0.0 {
+            return 0.0;
+        }
+        reused / (paid + reused)
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} escalated={:.1}% occupancy={:.2} p50={:?} p99={:?} mean={:?}",
+            "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% p50={:?} p99={:?} mean={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             100.0 * self.escalation_rate(),
             self.batch_occupancy(),
+            100.0 * self.reuse_ratio(),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
             self.latency.mean(),
@@ -126,5 +146,15 @@ mod tests {
         Metrics::add(&m.batches, 2);
         Metrics::add(&m.batched_rows, 12);
         assert!((m.batch_occupancy() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reuse_ratio_bounds() {
+        let m = Metrics::default();
+        assert_eq!(m.reuse_ratio(), 0.0, "no traffic -> no reuse");
+        // one request at n_low=8 escalated to 16: paid 8 + 8, reused 8
+        Metrics::add(&m.samples_paid, 16);
+        Metrics::add(&m.samples_reused, 8);
+        assert!((m.reuse_ratio() - 8.0 / 24.0).abs() < 1e-9);
     }
 }

@@ -2,26 +2,30 @@
 //! progressive sampling.
 //!
 //! The paper's run-time contribution is that precision is a *runtime
-//! knob*: the same weights serve any sample size.  The coordinator turns
-//! that into a serving policy (Sec. 4.5 lifted to the request level):
+//! knob*: the same weights serve any sample size, and capacitor sums are
+//! unbiased partial results, so raising the knob only costs the
+//! incremental samples.  The coordinator turns that into a serving
+//! policy (Sec. 4.5 lifted to the request level):
 //!
 //! ```text
-//! client ── submit ──► [dynamic batcher] ──► engine(psb @ n_low)
+//! client ── submit ──► [dynamic batcher] ──► engine(plan: n_low) ──► ProgressiveState
 //!                                               │ entropy of last conv
-//!                            confident ◄────────┤
+//!                            confident ◄────────┤ (Scheduler: a PrecisionPolicy)
 //!                                               ▼ uncertain
-//!                      [escalation batcher] ──► engine(psb @ n_high)
+//!                      [escalation group] ──► engine.refine(state, plan: n_high)
 //! ```
 //!
-//! * the **engine** owns the PJRT runtime on a dedicated thread (PJRT
-//!   handles are not `Send`) and executes one compiled artifact per
-//!   `(n, batch)`;
+//! * the **engine** serializes model execution on a dedicated thread —
+//!   either the PJRT runtime over AOT artifacts ([`Engine::spawn`]) or
+//!   the pure-rust simulator with true progressive-state reuse
+//!   ([`Engine::spawn_sim`]);
 //! * the **batcher** collects requests up to the artifact batch size with
 //!   a linger timeout and zero-pads partial batches;
-//! * the **scheduler** computes the mean last-conv entropy per request
-//!   and escalates the high-entropy fraction to `n_high` — batch-level
-//!   computational attention with the network itself as the proposal
-//!   mechanism.
+//! * the **scheduler** implements [`crate::precision::PrecisionPolicy`]:
+//!   it plans each request's final precision from the mean last-conv
+//!   entropy, and the high-entropy fraction escalates by *refining* the
+//!   stage-1 capacitor state — batch-level computational attention with
+//!   the network itself as the proposal mechanism.
 
 pub mod batcher;
 pub mod engine;
@@ -30,7 +34,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatcherConfig;
-pub use engine::{Engine, EngineJob};
+pub use engine::{Engine, EngineJob, EngineOutput};
 pub use metrics::Metrics;
 pub use scheduler::{EscalationPolicy, SchedulerStats};
 pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig};

@@ -1,6 +1,8 @@
 //! Precision scheduling: decide, per request, whether the cheap pass is
 //! enough — the request-level analog of the paper's spatial attention
-//! (Sec. 4.5).
+//! (Sec. 4.5).  The [`Scheduler`] implements
+//! [`crate::precision::PrecisionPolicy`], so the serving stack chooses
+//! plans through the same trait as the simulator experiments.
 //!
 //! The signal is the mean pixelwise entropy of the last conv layer (the
 //! quantity the paper thresholds spatially).  Requests whose entropy
@@ -8,6 +10,8 @@
 //! an exponentially-weighted running mean of observed entropies scaled by
 //! `threshold_scale`, so the escalated fraction self-calibrates to the
 //! traffic (the paper's ImageNet ratio was ≈35% interesting).
+
+use crate::precision::{PlanContext, PlanError, PrecisionPlan, PrecisionPolicy};
 
 /// Policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -112,6 +116,19 @@ impl Scheduler {
     }
 }
 
+/// The scheduler *is* a precision policy: given a request's cheap-pass
+/// entropy (in [`PlanContext::entropy`]), it emits the plan the request
+/// should finish at — `n_high` for escalations, `n_low` otherwise.  The
+/// server escalates exactly when the planned precision exceeds what the
+/// stage-1 pass already paid, reusing the pass's `ProgressiveState`.
+impl PrecisionPolicy for Scheduler {
+    fn plan(&mut self, ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
+        let entropy = ctx.entropy.ok_or(PlanError::MissingSignal)?;
+        let n = if self.decide(entropy) { self.policy.n_high } else { self.policy.n_low };
+        Ok(PrecisionPlan::uniform(n))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +175,36 @@ mod tests {
             assert!(!s.decide(100.0));
         }
         assert_eq!(s.stats.escalated, 0);
+    }
+
+    #[test]
+    fn scheduler_is_a_precision_policy() {
+        let mut s = Scheduler::new(EscalationPolicy {
+            n_low: 8,
+            n_high: 16,
+            ewma_alpha: 0.2,
+            ..Default::default()
+        });
+        // no entropy signal -> loud error, not a silent default plan
+        assert!(matches!(s.plan(&signal_less_ctx()), Err(PlanError::MissingSignal)));
+        // warm the EWMA on a low-entropy stream, then a spike escalates
+        for _ in 0..20 {
+            let plan = s.plan(&PlanContext::for_request(0.5)).unwrap();
+            assert_eq!(plan.uniform_n(), Some(8));
+        }
+        let plan = s.plan(&PlanContext::for_request(5.0)).unwrap();
+        assert_eq!(plan.uniform_n(), Some(16), "entropy spike must escalate");
+    }
+
+    /// A context with no entropy signal at all.
+    fn signal_less_ctx() -> PlanContext<'static> {
+        PlanContext {
+            num_layers: 1,
+            layer_macs: Vec::new(),
+            batch: 1,
+            input_hw: (0, 0),
+            feat: None,
+            entropy: None,
+        }
     }
 }

@@ -1,7 +1,18 @@
-//! The coordinator server: wires batcher → engine → scheduler → (maybe)
-//! escalation batcher → reply.  Plain threads + channels (the offline
-//! build has no async runtime); the engine thread serializes PJRT work,
-//! stage-1 and stage-2 batchers each run on their own thread.
+//! The coordinator server: wires batcher → engine → scheduler-policy →
+//! (maybe) progressive escalation → reply.  Plain threads + channels
+//! (the offline build has no async runtime); the engine thread
+//! serializes model execution, stage 1 batches on its own thread, and a
+//! stage-2 worker drains escalation groups.
+//!
+//! Escalation is *progressive*: the stage-1 pass returns the batch's
+//! [`ProgressiveState`] (simulator backend), and the escalated rows of
+//! that batch are refined against it in one group — paying only the
+//! `n_high − n_low` incremental samples instead of a fresh high-`n`
+//! job.  Rows of one stage-1 batch share one filter draw (the paper's
+//! batch-shared sampling), so their state is reusable for any subset of
+//! the batch; regrouping escalations *across* stage-1 batches would mix
+//! incompatible states, which is why stage 2 dispatches per source
+//! batch instead of re-batching.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -14,8 +25,10 @@ use crate::coordinator::batcher::{run_batcher, BatcherConfig, FormedBatch, Pendi
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
+use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy, ProgressiveState};
 use crate::runtime::{ArtifactMeta, FloatBundle, PsbBundle};
 use crate::sim::layers::softmax_rows;
+use crate::sim::psbnet::PsbNetwork;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -46,6 +59,10 @@ pub struct ClassifyResponse {
     pub escalated: bool,
     /// sample size that produced the final answer
     pub n_used: u32,
+    /// samples inherited from the stage-1 pass via progressive
+    /// refinement (0 for direct answers): of the `n_used` samples, only
+    /// `n_used − n_reused` were paid after stage 1
+    pub n_reused: u32,
     pub latency: Duration,
     /// mean last-conv entropy observed at stage 1
     pub entropy: f32,
@@ -56,6 +73,16 @@ struct RequestCtx {
     start: Instant,
 }
 
+/// One stage-1 batch's escalations, refined together against the
+/// batch's shared progressive state.
+struct EscalationGroup {
+    /// gathered rows, `tags.len() × image_len`
+    x: Vec<f32>,
+    tags: Vec<(RequestCtx, f32)>,
+    resume: Option<ProgressiveState>,
+    seed: u32,
+}
+
 /// Handle to a running coordinator.  Threads shut down when the handle
 /// drops (channels close, batchers flush, engine drains).
 pub struct Coordinator {
@@ -64,50 +91,137 @@ pub struct Coordinator {
     scheduler: Arc<Mutex<Scheduler>>,
     pub image_len: usize,
     pub num_classes: usize,
-    /// MACs per image (from the artifact layer geometry)
+    /// MACs per image (from the artifact layer geometry / network)
     pub macs_per_image: u64,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the engine thread + the two batcher threads.
+    /// Start against AOT artifacts on the PJRT engine.  Artifacts are
+    /// fixed-`(n, batch)` modules, so escalations re-execute at `n_high`
+    /// (the reuse accounting still reflects what the modeled hardware's
+    /// capacitor accumulators would pay — Sec. 4.5).
     pub fn start(cfg: CoordinatorConfig, psb: PsbBundle, float: FloatBundle) -> Result<Coordinator> {
         let meta = ArtifactMeta::load(&cfg.artifact_dir)?;
         let image_len = meta.image * meta.image * 3;
         let macs_per_image = macs_per_image(&meta);
         let batch = cfg.batcher.batch_size;
-        let engine = Arc::new(Engine::spawn(
+        let engine = Engine::spawn(
             cfg.artifact_dir.clone(),
             psb,
             float,
             vec![(Some(cfg.policy.n_low), batch), (Some(cfg.policy.n_high), batch)],
-        )?);
+        )?;
+        Self::start_inner(
+            cfg,
+            engine,
+            image_len,
+            meta.num_classes,
+            macs_per_image,
+            Some(batch),
+        )
+    }
+
+    /// Start against the pure-rust simulator engine: no artifacts
+    /// needed, and escalations genuinely refine the stage-1
+    /// [`ProgressiveState`] (only the incremental samples are drawn).
+    pub fn start_sim(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
+        let (h, w, c) = net.input_hwc;
+        let image_len = h * w * c;
+        let num_classes = net
+            .nodes
+            .iter()
+            .rev()
+            .find_map(|n| match &n.op {
+                crate::sim::psbnet::PsbOp::Capacitor { cout, .. } => Some(*cout),
+                _ => None,
+            })
+            .ok_or_else(|| anyhow::anyhow!("network has no capacitor layers"))?;
+        let macs_per_image: u64 = net.capacitor_macs(1).iter().sum();
+        let engine = Engine::spawn_sim(net)?;
+        Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, None)
+    }
+
+    fn start_inner(
+        cfg: CoordinatorConfig,
+        engine: Engine,
+        image_len: usize,
+        num_classes: usize,
+        macs_per_image: u64,
+        pad_to: Option<usize>,
+    ) -> Result<Coordinator> {
+        let engine = Arc::new(engine);
         let metrics = Arc::new(Metrics::default());
         let scheduler = Arc::new(Mutex::new(Scheduler::new(cfg.policy)));
         let seed_ctr = Arc::new(AtomicU64::new(cfg.seed));
 
         let (stage1_tx, stage1_rx) = mpsc::channel::<Pending<RequestCtx>>();
-        let (stage2_tx, stage2_rx) = mpsc::channel::<Pending<(RequestCtx, f32)>>();
+        let (stage2_tx, stage2_rx) = mpsc::channel::<EscalationGroup>();
 
         let mut threads = Vec::new();
 
-        // Stage 2 thread: escalated requests at n_high.
+        // Stage 2 worker: escalation groups, one engine job per group.
         {
             let ctx = StageCtx {
                 engine: engine.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr: seed_ctr.clone(),
-                nc: meta.num_classes,
+                nc: num_classes,
                 macs: macs_per_image,
                 image_len,
+                pad_to,
+                linger: cfg.batcher.linger,
             };
-            let bcfg = cfg.batcher;
             threads.push(
                 std::thread::Builder::new().name("psb-stage2".into()).spawn(move || {
-                    run_batcher(stage2_rx, bcfg, ctx.image_len, |batch| {
-                        handle_stage2(&ctx, batch);
-                    });
+                    // Stateless (PJRT) groups carry no progressive state,
+                    // so escalations from different stage-1 batches can
+                    // still coalesce up to the artifact batch size;
+                    // stateful (sim) groups must run against their own
+                    // batch's streams and go solo.
+                    let mut pending: Option<EscalationGroup> = None;
+                    loop {
+                        let mut group = match pending.take() {
+                            Some(g) => g,
+                            None => match stage2_rx.recv() {
+                                Ok(g) => g,
+                                Err(_) => break,
+                            },
+                        };
+                        if group.resume.is_none() {
+                            if let Some(cap) = ctx.pad_to {
+                                // linger briefly like the stage-1 batcher:
+                                // groups arriving moments apart merge into
+                                // one (padded, fixed-batch) artifact run
+                                let deadline = Instant::now() + ctx.linger;
+                                while group.tags.len() < cap {
+                                    let now = Instant::now();
+                                    let next = if now >= deadline {
+                                        stage2_rx.try_recv().ok()
+                                    } else {
+                                        stage2_rx.recv_timeout(deadline - now).ok()
+                                    };
+                                    match next {
+                                        Some(next)
+                                            if next.resume.is_none()
+                                                && group.tags.len() + next.tags.len()
+                                                    <= cap =>
+                                        {
+                                            group.x.extend_from_slice(&next.x);
+                                            group.tags.extend(next.tags);
+                                        }
+                                        Some(next) => {
+                                            pending = Some(next);
+                                            break;
+                                        }
+                                        None => break,
+                                    }
+                                }
+                            }
+                        }
+                        handle_stage2(&ctx, group);
+                    }
                 })?,
             );
         }
@@ -119,9 +233,11 @@ impl Coordinator {
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr,
-                nc: meta.num_classes,
+                nc: num_classes,
                 macs: macs_per_image,
                 image_len,
+                pad_to,
+                linger: cfg.batcher.linger,
             };
             let scheduler = scheduler.clone();
             let bcfg = cfg.batcher;
@@ -139,7 +255,7 @@ impl Coordinator {
             metrics,
             scheduler,
             image_len,
-            num_classes: meta.num_classes,
+            num_classes,
             macs_per_image,
             threads,
         })
@@ -173,8 +289,9 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Close stage-1; its thread flushes into stage-2 and exits,
-        // dropping the stage-2 sender, which unwinds stage-2 in turn.
+        // Close stage-1; its thread flushes remaining escalations into
+        // stage-2 and exits, dropping the stage-2 sender, which unwinds
+        // the stage-2 worker in turn.
         let (tx, _) = mpsc::channel();
         drop(std::mem::replace(&mut self.stage1_tx, tx));
         for t in self.threads.drain(..) {
@@ -212,44 +329,69 @@ struct StageCtx {
     nc: usize,
     macs: u64,
     image_len: usize,
+    /// PJRT artifacts are compiled for a fixed batch: pad stage-2 groups
+    /// up to this many rows.  `None` (simulator) runs exact-size groups.
+    pad_to: Option<usize>,
+    /// How long the stage-2 worker waits for more stateless groups to
+    /// coalesce before dispatching (mirrors the stage-1 batcher linger).
+    linger: Duration,
 }
 
 fn handle_stage1(
     ctx: &StageCtx,
     scheduler: &Mutex<Scheduler>,
-    stage2: &Sender<Pending<(RequestCtx, f32)>>,
+    stage2: &Sender<EscalationGroup>,
     batch: FormedBatch<RequestCtx>,
 ) {
     let rows = batch.tags.len();
-    let total_rows = batch.x.len() / ctx.image_len;
     Metrics::inc(&ctx.metrics.batches);
     Metrics::add(&ctx.metrics.batched_rows, rows as u64);
     Metrics::inc(&ctx.metrics.engine_calls);
-    Metrics::add(&ctx.metrics.gated_adds, ctx.macs * ctx.policy.n_low as u64 * rows as u64);
     let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32;
-    let exec = match ctx.engine.run(Some(ctx.policy.n_low), batch.x.clone(), total_rows, seed) {
-        Ok(e) => e,
+    let plan = PrecisionPlan::uniform(ctx.policy.n_low);
+    // PJRT artifacts are compiled for the padded batch; the simulator
+    // runs (and bills) live rows only
+    let (x1, total_rows) = match ctx.pad_to {
+        Some(_) => (batch.x.clone(), batch.x.len() / ctx.image_len),
+        None => (batch.x[..rows * ctx.image_len].to_vec(), rows),
+    };
+    let out = match ctx.engine.run(Some(plan), None, x1, total_rows, seed) {
+        Ok(o) => o,
         Err(err) => {
             eprintln!("stage1 engine error: {err:#}");
             return; // replies drop; callers observe closed channels
         }
     };
+    // cost/sample accounting only after the pass actually ran; the sim
+    // backend reports measured costs, the PJRT backend reports none and
+    // falls back to the geometric estimate over live rows
+    let estimated = ctx.macs * ctx.policy.n_low as u64 * rows as u64;
+    Metrics::add(
+        &ctx.metrics.gated_adds,
+        if out.gated_adds > 0 { out.gated_adds } else { estimated },
+    );
+    Metrics::add(&ctx.metrics.samples_paid, ctx.policy.n_low as u64 * rows as u64);
+    let exec = out.exec;
     let [_, fh, fw, fc] = exec.feat_shape;
     let feat_len = fh * fw * fc;
     let probs = softmax_rows(&exec.logits, ctx.nc);
+    let mut group_x = Vec::new();
+    let mut group_tags = Vec::new();
     for (row, req) in batch.tags.into_iter().enumerate() {
         let feat = &exec.feat[row * feat_len..(row + 1) * feat_len];
         let entropy = Scheduler::request_entropy(feat, fc);
-        let escalate = scheduler.lock().unwrap().decide(entropy);
-        if escalate {
-            let image = batch.x[row * ctx.image_len..(row + 1) * ctx.image_len].to_vec();
+        // the scheduler is a PrecisionPolicy: it plans the precision the
+        // request should *finish* at; more than stage 1 paid ⇒ escalate
+        let target = scheduler
+            .lock()
+            .unwrap()
+            .plan(&PlanContext::for_request(entropy))
+            .expect("request context carries the entropy signal");
+        if target.max_n() > ctx.policy.n_low {
+            group_x.extend_from_slice(&batch.x[row * ctx.image_len..(row + 1) * ctx.image_len]);
             Metrics::inc(&ctx.metrics.escalated);
             ctx.metrics.stage1_latency.record(req.start.elapsed());
-            let _ = stage2.send(Pending {
-                image,
-                enqueued: Instant::now(),
-                tag: (req, entropy),
-            });
+            group_tags.push((req, entropy));
         } else {
             let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
             let (class, conf) = argmax_conf(p);
@@ -261,34 +403,67 @@ fn handle_stage1(
                 confidence: conf,
                 escalated: false,
                 n_used: ctx.policy.n_low,
+                n_reused: 0,
                 latency,
                 entropy,
             });
         }
     }
+    if !group_tags.is_empty() {
+        // escalations of this batch share the stage-1 state (one filter
+        // draw per batch), so they refine it together in one group
+        let _ = stage2.send(EscalationGroup {
+            x: group_x,
+            tags: group_tags,
+            resume: out.state,
+            seed,
+        });
+    }
 }
 
-fn handle_stage2(ctx: &StageCtx, batch: FormedBatch<(RequestCtx, f32)>) {
-    let total_rows = batch.x.len() / ctx.image_len;
+fn handle_stage2(ctx: &StageCtx, group: EscalationGroup) {
+    let rows = group.tags.len();
+    let n_low = ctx.policy.n_low;
+    let n_high = ctx.policy.n_high;
     Metrics::inc(&ctx.metrics.batches);
-    Metrics::add(&ctx.metrics.batched_rows, batch.tags.len() as u64);
+    Metrics::add(&ctx.metrics.batched_rows, rows as u64);
     Metrics::inc(&ctx.metrics.engine_calls);
-    // progressive accounting: the n_low samples from stage 1 are reusable,
-    // so escalation only costs the incremental (n_high − n_low) samples.
-    Metrics::add(
-        &ctx.metrics.gated_adds,
-        ctx.macs * (ctx.policy.n_high - ctx.policy.n_low) as u64 * batch.tags.len() as u64,
-    );
-    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32;
-    let exec = match ctx.engine.run(Some(ctx.policy.n_high), batch.x, total_rows, seed) {
-        Ok(e) => e,
+    let mut x = group.x;
+    let total_rows = match ctx.pad_to {
+        Some(b) if rows < b => {
+            x.resize(b * ctx.image_len, 0.0);
+            b
+        }
+        _ => rows,
+    };
+    let seed = match &group.resume {
+        // refining a state replays its own streams; seed is embedded
+        Some(_) => group.seed,
+        None => ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32,
+    };
+    let plan = PrecisionPlan::uniform(n_high);
+    let resumed = group.resume.is_some();
+    let out = match ctx.engine.run(Some(plan), group.resume, x, total_rows, seed) {
+        Ok(o) => o,
         Err(err) => {
             eprintln!("stage2 engine error: {err:#}");
             return;
         }
     };
-    let probs = softmax_rows(&exec.logits, ctx.nc);
-    for (row, (req, entropy)) in batch.tags.into_iter().enumerate() {
+    // accounting only after the pass ran.  With a resumed state the sim
+    // engine measured the true incremental cost; otherwise (PJRT,
+    // stateless artifacts) estimate it — still the incremental share,
+    // per the paper's progressive accounting: the n_low samples from
+    // stage 1 are reused, escalation costs only (n_high − n_low).
+    let estimated = ctx.macs * (n_high - n_low) as u64 * rows as u64;
+    Metrics::add(
+        &ctx.metrics.gated_adds,
+        if resumed && out.gated_adds > 0 { out.gated_adds } else { estimated },
+    );
+    Metrics::add(&ctx.metrics.samples_paid, (n_high - n_low) as u64 * rows as u64);
+    Metrics::add(&ctx.metrics.samples_reused, n_low as u64 * rows as u64);
+    let probs = softmax_rows(&out.exec.logits, ctx.nc);
+    for (row, (req, entropy)) in group.tags.into_iter().enumerate() {
         let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
         let (class, conf) = argmax_conf(p);
         let latency = req.start.elapsed();
@@ -298,7 +473,8 @@ fn handle_stage2(ctx: &StageCtx, batch: FormedBatch<(RequestCtx, f32)>) {
             class,
             confidence: conf,
             escalated: true,
-            n_used: ctx.policy.n_high,
+            n_used: n_high,
+            n_reused: n_low,
             latency,
             entropy,
         });

@@ -12,7 +12,8 @@ use crate::attention::{adaptive_forward_with, Threshold};
 use crate::experiments::table1::evaluate_attention;
 use crate::sim::layers::argmax_rows;
 use crate::experiments::{train_model, ExpConfig};
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::train::evaluate_psb;
 
 pub fn run(cfg: &ExpConfig) -> Result<()> {
@@ -24,7 +25,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     let mut rows = Vec::new();
     let mut flat = std::collections::HashMap::new();
     for n in [8u32, 16, 32] {
-        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), cfg.seed);
+        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
         println!("  flat psb{n:<2}: acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
         flat.insert(n, (acc, costs.gated_adds));
         rows.push(format!("flat,psb{n},{acc:.4},{}", costs.gated_adds));
@@ -82,7 +83,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     ];
     for (name, sched) in schedules {
         let (acc, costs) =
-            evaluate_psb(&psb, &data, &Precision::PerLayer(sched.clone()), cfg.seed);
+            evaluate_psb(&psb, &data, &PrecisionPlan::per_layer(&sched)?, cfg.seed);
         println!("  {name:<12} acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
         rows.push(format!("layerwise,{name},{acc:.4},{}", costs.gated_adds));
     }

@@ -12,7 +12,8 @@
 use anyhow::Result;
 
 use crate::experiments::{train_model, ExpConfig};
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::train::{evaluate, evaluate_psb, train, TrainConfig};
 
 pub fn run(cfg: &ExpConfig) -> Result<()> {
@@ -47,7 +48,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         print!("{label:>10}  float={float_eval:.3}  psb:");
         let mut cells = vec![format!("{label}"), format!("{float_acc:.4}")];
         for &en in &eval_ns {
-            let (acc, _) = evaluate_psb(&psb, &data, &Precision::Uniform(en), cfg.seed);
+            let (acc, _) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(en), cfg.seed);
             print!(" n{en}={acc:.3}");
             cells.push(format!("{acc:.4}"));
         }

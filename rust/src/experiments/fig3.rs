@@ -14,7 +14,8 @@ use anyhow::Result;
 
 use crate::experiments::{train_model, ExpConfig};
 use crate::models::MODEL_NAMES;
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::train::{evaluate, evaluate_psb};
 
 pub fn run(cfg: &ExpConfig) -> Result<()> {
@@ -34,7 +35,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let mut accs = Vec::new();
         for &n in &eval_ns {
-            let (acc, _) = evaluate_psb(&psb, &data, &Precision::Uniform(n), cfg.seed);
+            let (acc, _) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
             accs.push(acc);
         }
         println!(

@@ -11,7 +11,8 @@ use anyhow::Result;
 
 use crate::attention::{mean_threshold_mask, pixel_entropy};
 use crate::experiments::{train_model, ExpConfig};
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::tensor::{dims4, Tensor};
 
 pub fn run(cfg: &ExpConfig) -> Result<()> {
@@ -41,16 +42,16 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     psb_first.feat_node = Some(first_idx);
     for run in 0..runs {
         let seed = cfg.seed + run as u64;
-        let out_last = psb.forward(&x, &Precision::Uniform(2), seed);
+        let out_last = psb.forward(&x, &PrecisionPlan::uniform(2), seed)?;
         accumulate_rel_err(&mut last_err, out_last.feat.as_ref().unwrap(), &float_last);
-        let out_first = psb_first.forward(&x, &Precision::Uniform(2), seed);
+        let out_first = psb_first.forward(&x, &PrecisionPlan::uniform(2), seed)?;
         accumulate_rel_err(&mut first_err, out_first.feat.as_ref().unwrap(), &float_first);
     }
     first_err = first_err.scale(1.0 / runs as f32);
     last_err = last_err.scale(1.0 / runs as f32);
 
     // entropy + mask at psb8 (the attention proposal pass)
-    let out8 = psb.forward(&x, &Precision::Uniform(8), cfg.seed ^ 0xabc);
+    let out8 = psb.forward(&x, &PrecisionPlan::uniform(8), cfg.seed ^ 0xabc)?;
     let entropy = pixel_entropy(out8.feat.as_ref().unwrap());
     let mask = mean_threshold_mask(&entropy);
     let interesting = mask.iter().filter(|&&m| m).count() as f32 / mask.len() as f32;

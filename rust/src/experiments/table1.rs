@@ -17,7 +17,8 @@ use crate::experiments::{train_model, ExpConfig};
 use crate::prune::prune_global;
 use crate::sim::layers::argmax_rows;
 use crate::sim::network::Network;
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::train::{evaluate, evaluate_psb};
 
 struct Row {
@@ -44,7 +45,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     let base_ns: &[u32] = if cfg.quick { &[8, 16] } else { &[8, 16, 32, 64] };
     let mut psb16_cost = 0u64;
     for &n in base_ns {
-        let (acc, costs) = evaluate_psb(&psb, &data, &Precision::Uniform(n), cfg.seed);
+        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
         if n == 16 {
             psb16_cost = costs.gated_adds;
         }
@@ -66,7 +67,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         let report = prune_global(&mut pruned, frac);
         let pf_acc = evaluate(&mut pruned, &data);
         let psb_p = PsbNetwork::prepare(&pruned, PsbOptions::default());
-        let (acc, costs) = evaluate_psb(&psb_p, &data, &Precision::Uniform(16), cfg.seed);
+        let (acc, costs) = evaluate_psb(&psb_p, &data, &PrecisionPlan::uniform(16), cfg.seed);
         let tag = format!("pruning {:.0}%", frac * 100.0);
         rows.push(Row { experiment: tag.clone(), system: "float32".into(), acc: pf_acc, gated_adds: 0 });
         rows.push(Row { experiment: tag, system: "psb16".into(), acc, gated_adds: costs.gated_adds });
@@ -76,7 +77,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     // -- probability discretization -------------------------------------------
     for bits in [1u32, 2, 3, 4, 6] {
         let psb_d = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(bits), ..Default::default() });
-        let (acc, costs) = evaluate_psb(&psb_d, &data, &Precision::Uniform(16), cfg.seed);
+        let (acc, costs) = evaluate_psb(&psb_d, &data, &PrecisionPlan::uniform(16), cfg.seed);
         rows.push(Row {
             experiment: format!("{bits}-bit probs"),
             system: "psb16".into(),

@@ -10,7 +10,8 @@ use crate::data::SynthConfig;
 use crate::experiments::ExpConfig;
 use crate::models::MODEL_NAMES;
 use crate::rng::Xorshift128Plus;
-use crate::sim::psbnet::{Precision, PsbNetwork, PsbOptions};
+use crate::precision::PrecisionPlan;
+use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 use crate::sim::tensor::Tensor;
 
 pub fn run(cfg: &ExpConfig) -> Result<()> {
@@ -52,7 +53,9 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         let mut net = crate::models::by_name(name, 32, &mut rng);
         settle(&mut net, &x);
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
-        let cost_at = |n: u32| -> CostCounter { psb.forward(&x, &Precision::Uniform(n), 1).costs };
+        let cost_at = |n: u32| -> CostCounter {
+            psb.forward(&x, &PrecisionPlan::uniform(n), 1).expect("uniform plan").costs
+        };
         let c8 = cost_at(8);
         let c16 = cost_at(16);
         let c64 = cost_at(64);

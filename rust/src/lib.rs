@@ -12,11 +12,30 @@
 //!   a pure-rust simulator substrate (training + bit-exact integer
 //!   inference), the model zoo and experiment harness reproducing every
 //!   table/figure of the paper, and an adaptive-precision inference
-//!   coordinator that loads the AOT artifacts via PJRT and exploits PSB's
-//!   progressive precision (cheap pass → entropy → escalate).
+//!   coordinator.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! measured results.
+//! ## Precision
+//!
+//! Precision is a first-class, *progressive* runtime knob, expressed
+//! through one API ([`precision`]):
+//!
+//! * a [`precision::PrecisionPlan`] schedules per-layer × per-region
+//!   sample counts and knows its gated-add cost;
+//! * a [`precision::PrecisionPolicy`] chooses plans — built-ins cover
+//!   uniform sampling, layer-wise adaption, entropy-masked spatial
+//!   attention (Sec. 4.5) and budget-constrained allocation, and the
+//!   serving scheduler implements the same trait;
+//! * a [`precision::ProgressiveState`] carries the capacitor layers'
+//!   accumulated Binomial counts, so escalating precision *adds*
+//!   `n_high − n_low` samples instead of recomputing
+//!   ([`sim::PsbNetwork::refine`]) — logits are bit-identical to a
+//!   one-shot full-precision pass (Eq. 8–10's additivity), at the cost
+//!   of only the incremental samples.  The coordinator exploits this
+//!   for cheap-pass → entropy → escalate serving.
+//!
+//! See `docs/PRECISION.md` for the design and the migration notes from
+//! the old `Precision` enum, `DESIGN.md` for the experiment index and
+//! `EXPERIMENTS.md` for measured results.
 
 pub mod attention;
 pub mod coordinator;
@@ -25,6 +44,7 @@ pub mod data;
 pub mod experiments;
 pub mod models;
 pub mod num;
+pub mod precision;
 pub mod prune;
 pub mod rng;
 pub mod runtime;

@@ -95,7 +95,7 @@ fn main() -> Result<()> {
         "train-serving" => {
             let a = Args::parse(rest, &[])?;
             let out = PathBuf::from(a.get("out", "results/serving_weights.txt".to_string())?);
-            let bundle = train_serving(a.get("epochs", 8usize)?, a.get("seed", 42u64)?, true)?;
+            let (_, bundle) = train_serving(a.get("epochs", 8usize)?, a.get("seed", 42u64)?, true)?;
             if let Some(parent) = out.parent() {
                 std::fs::create_dir_all(parent)?;
             }
@@ -105,16 +105,18 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let a = Args::parse(rest, &["flat"])?;
-            let float = match a.flags.get("weights") {
-                Some(p) => FloatBundle::load(std::path::Path::new(p))?,
+            let (net, float) = match a.flags.get("weights") {
+                Some(p) => (None, FloatBundle::load(std::path::Path::new(p))?),
                 None => {
                     eprintln!("no --weights given; training serving CNN ad hoc (quick)");
-                    train_serving(3, 42, false)?
+                    let (net, bundle) = train_serving(3, 42, false)?;
+                    (Some(net), bundle)
                 }
             };
             serve(
                 PathBuf::from(a.get("artifacts", "artifacts".to_string())?),
                 float,
+                net,
                 a.get("requests", 512usize)?,
                 a.get("n-low", 8u32)?,
                 a.get("n-high", 16u32)?,
@@ -154,7 +156,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn train_serving(epochs: usize, seed: u64, verbose: bool) -> Result<FloatBundle> {
+fn train_serving(epochs: usize, seed: u64, verbose: bool) -> Result<(psb::sim::Network, FloatBundle)> {
     let data = Dataset::synth(&SynthConfig {
         train: if epochs >= 6 { 4096 } else { 1536 },
         test: 512,
@@ -169,12 +171,15 @@ fn train_serving(epochs: usize, seed: u64, verbose: bool) -> Result<FloatBundle>
     if verbose {
         println!("serving CNN float test acc: {:.3}", stats.last().unwrap().test_acc);
     }
-    FloatBundle::from_network(&net, &SERVING_SHAPES)
+    let bundle = FloatBundle::from_network(&net, &SERVING_SHAPES)?;
+    Ok((net, bundle))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve(
     artifacts: PathBuf,
     float: FloatBundle,
+    net: Option<psb::sim::Network>,
     requests: usize,
     n_low: u32,
     n_high: u32,
@@ -182,11 +187,24 @@ fn serve(
 ) -> Result<()> {
     let psb_bundle = PsbBundle::from_float(&float, Some(4));
     let cfg = CoordinatorConfig {
-        artifact_dir: artifacts,
+        artifact_dir: artifacts.clone(),
         policy: EscalationPolicy { n_low, n_high, disabled: flat, ..Default::default() },
         ..Default::default()
     };
-    let coord = Coordinator::start(cfg, psb_bundle, float)?;
+    // the PJRT engine needs both the compiled artifacts AND the pjrt
+    // cargo feature; a default build always serves through the simulator
+    let coord = if cfg!(feature = "pjrt") && artifacts.join("meta.txt").exists() {
+        Coordinator::start(cfg, psb_bundle, float)?
+    } else {
+        let net = net.ok_or_else(|| anyhow::anyhow!(
+            "PJRT unavailable (artifacts missing or built without `--features pjrt`) and \
+             no trained network in hand — omit --weights to train ad hoc and serve via \
+             the simulator engine"
+        ))?;
+        eprintln!("PJRT unavailable — serving through the simulator engine (progressive refinement)");
+        let psb_net = psb::sim::PsbNetwork::prepare(&net, psb::sim::PsbOptions::default());
+        Coordinator::start_sim(cfg, psb_net)?
+    };
     let data = Dataset::synth(&SynthConfig {
         train: 1,
         test: requests.max(64).min(2048),
@@ -217,6 +235,10 @@ fn serve(
     println!(
         "gated adds: {adds} ({:.3e} per request, progressive accounting)",
         adds as f64 / requests as f64
+    );
+    println!(
+        "sample reuse: {:.1}% of the naive two-pass budget avoided by progressive refinement",
+        100.0 * coord.metrics.reuse_ratio()
     );
     Ok(())
 }

@@ -1,0 +1,31 @@
+//! Unified precision API: plans, policies, and progressive refinement.
+//!
+//! PSB's run-time contribution is that precision is a *progressive*
+//! knob: capacitor sums are unbiased partial results, so escalating
+//! from `n_low` to `n_high` samples adds `n_high − n_low` draws instead
+//! of recomputing (Eq. 8–10, Sec. 4.5).  This module is the one place
+//! that knob lives:
+//!
+//! * [`PrecisionPlan`] — per-layer × per-region sample counts, with
+//!   validation (empty plans error, short plans saturate) and a
+//!   gated-add cost estimate;
+//! * [`PrecisionPolicy`] — how plans get chosen: [`Uniform`],
+//!   [`PerLayer`], [`SpatialAttention`] (entropy-masked, Sec. 4.5) and
+//!   [`Budgeted`] (largest plan under an op budget).  The serving
+//!   scheduler (`coordinator::scheduler`) implements the same trait;
+//! * [`ProgressiveState`] — the per-weight Binomial counts a pass
+//!   accumulates, with partition-independent sampling so
+//!   [`crate::sim::PsbNetwork::refine`] produces logits bit-identical
+//!   to a one-shot full-precision pass while paying only for the new
+//!   samples.
+//!
+//! Migration from the old `sim::psbnet::Precision` enum is documented
+//! in `docs/PRECISION.md`.
+
+pub mod plan;
+pub mod policy;
+pub mod progressive;
+
+pub use plan::{LayerPlan, PlanError, PrecisionPlan};
+pub use policy::{Budgeted, PerLayer, PlanContext, PrecisionPolicy, SpatialAttention, Uniform};
+pub use progressive::{ProgressiveState, UnitState};

@@ -1,0 +1,275 @@
+//! [`PrecisionPlan`] — the value type every precision-touching surface
+//! now speaks: per-capacitor-layer sample sizes with an optional
+//! two-region spatial split, plus a hardware cost estimate.
+//!
+//! Replaces the old closed `Precision` enum of `sim::psbnet` (see
+//! `docs/PRECISION.md` for the migration table).  Unlike the enum, a
+//! plan is validated at construction (empty plans are an error, short
+//! plans *saturate* at their last entry instead of silently defaulting)
+//! and is ordered: plan `B` refines plan `A` iff every per-layer sample
+//! count of `B` is ≥ the corresponding count of `A`, which is exactly
+//! the condition under which [`crate::sim::PsbNetwork::refine`] can
+//! escalate a [`super::ProgressiveState`] by *adding* samples.
+
+use crate::costs::CostCounter;
+
+/// Errors from plan construction, policy evaluation, or refinement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// A plan must schedule at least one capacitor layer.
+    Empty,
+    /// A spatial mask must have one entry per input pixel (`B·H·W`).
+    BadMask { expected: usize, got: usize },
+    /// Refinement can only *add* samples; the target plan asked for
+    /// fewer than the state has already accumulated.
+    NonMonotonic { layer: usize, have: u32, want: u32 },
+    /// A forward pass needs at least one sample per layer.
+    ZeroSamples { layer: usize },
+    /// The progressive state was built for a different network.
+    StateMismatch { expected: usize, got: usize },
+    /// The op-count budget cannot buy even one sample everywhere.
+    BudgetTooTight { budget: u64, floor: u64 },
+    /// The policy needs a feature map / entropy signal that the caller
+    /// did not provide in the [`super::PlanContext`].
+    MissingSignal,
+    /// The execution backend only supports uniform plans (one `n` for
+    /// the whole network), e.g. fixed-`n` AOT artifacts.
+    NotUniform,
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Empty => write!(f, "precision plan is empty"),
+            PlanError::BadMask { expected, got } => {
+                write!(f, "spatial mask has {got} entries, input has {expected} pixels")
+            }
+            PlanError::NonMonotonic { layer, have, want } => write!(
+                f,
+                "refinement is additive: layer {layer} already has {have} samples, target asks for {want}"
+            ),
+            PlanError::ZeroSamples { layer } => {
+                write!(f, "layer {layer} scheduled with zero samples")
+            }
+            PlanError::StateMismatch { expected, got } => write!(
+                f,
+                "progressive state has {got} sampled units, network has {expected}"
+            ),
+            PlanError::BudgetTooTight { budget, floor } => write!(
+                f,
+                "budget of {budget} gated adds cannot buy one sample everywhere (needs {floor})"
+            ),
+            PlanError::MissingSignal => {
+                write!(f, "policy needs a feature map / entropy signal not present in the context")
+            }
+            PlanError::NotUniform => {
+                write!(f, "execution backend only supports uniform (single-n) plans")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Sample schedule for one capacitor layer: `n` everywhere, `n_high`
+/// inside the plan's attended region (only meaningful when the plan
+/// carries a spatial mask; `n_high ≥ n` always holds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub n: u32,
+    pub n_high: u32,
+}
+
+/// Per-layer × per-region sample counts for one PSB inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPlan {
+    /// One entry per capacitor layer in graph order; never empty.
+    /// Networks with more capacitor layers than entries saturate at the
+    /// last entry (the documented replacement for the old enum's silent
+    /// `16` fallback).
+    layers: Vec<LayerPlan>,
+    /// Spatial attention mask at input resolution (`B·H·W`, row-major):
+    /// `true` pixels run at `n_high`, the rest at `n` (Sec. 4.5).
+    mask: Option<Vec<bool>>,
+}
+
+impl PrecisionPlan {
+    /// The same sample size everywhere (the old `Precision::Uniform`).
+    pub fn uniform(n: u32) -> PrecisionPlan {
+        PrecisionPlan { layers: vec![LayerPlan { n, n_high: n }], mask: None }
+    }
+
+    /// One sample size per capacitor layer, in graph order (the old
+    /// `Precision::PerLayer`).  Errors on an empty schedule; shorter
+    /// schedules saturate at the last entry.
+    pub fn per_layer(ns: &[u32]) -> Result<PrecisionPlan, PlanError> {
+        if ns.is_empty() {
+            return Err(PlanError::Empty);
+        }
+        Ok(PrecisionPlan {
+            layers: ns.iter().map(|&n| LayerPlan { n, n_high: n }).collect(),
+            mask: None,
+        })
+    }
+
+    /// Two-region spatial split (the old `Precision::Spatial`): masked
+    /// pixels run at `n_high`, the rest at `n_low`.  `n_high` is clamped
+    /// up to `n_low` so the attended region never gets *fewer* samples.
+    pub fn spatial(mask: Vec<bool>, n_low: u32, n_high: u32) -> PrecisionPlan {
+        PrecisionPlan {
+            layers: vec![LayerPlan { n: n_low, n_high: n_high.max(n_low) }],
+            mask: Some(mask),
+        }
+    }
+
+    /// Attach / replace the spatial mask of an existing schedule.
+    pub fn with_mask(mut self, mask: Vec<bool>) -> PrecisionPlan {
+        self.mask = Some(mask);
+        self
+    }
+
+    /// `(n, n_high)` for capacitor layer `layer`, saturating at the last
+    /// entry for out-of-range indices.
+    pub fn layer_n(&self, layer: usize) -> (u32, u32) {
+        let lp = self.layers.get(layer).unwrap_or_else(|| {
+            self.layers.last().expect("plans are never empty by construction")
+        });
+        (lp.n, lp.n_high)
+    }
+
+    pub fn layers(&self) -> &[LayerPlan] {
+        &self.layers
+    }
+
+    pub fn mask(&self) -> Option<&[bool]> {
+        self.mask.as_deref()
+    }
+
+    /// Fraction of input pixels in the attended (high-`n`) region; 0
+    /// when the plan has no spatial split.
+    pub fn mask_fraction(&self) -> f32 {
+        match &self.mask {
+            Some(m) if !m.is_empty() => {
+                m.iter().filter(|&&v| v).count() as f32 / m.len() as f32
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Largest sample size anywhere in the plan.
+    pub fn max_n(&self) -> u32 {
+        self.layers.iter().map(|l| l.n.max(l.n_high)).max().unwrap_or(0)
+    }
+
+    /// `Some(n)` when the whole network runs at one sample size (what
+    /// fixed-`n` execution backends like the AOT artifacts require).
+    pub fn uniform_n(&self) -> Option<u32> {
+        let n = self.layers[0].n;
+        let all_same = self.layers.iter().all(|l| l.n == n);
+        let split =
+            self.mask_fraction() > 0.0 && self.layers.iter().any(|l| l.n_high != l.n);
+        if all_same && !split {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Estimated hardware cost of executing this plan once, given the
+    /// per-capacitor-layer MAC counts (`rows × live weights`, e.g. from
+    /// [`crate::sim::PsbNetwork::capacitor_macs`]).  The spatial split is
+    /// estimated with the input-resolution mask fraction (OR-pooling
+    /// across strides grows the attended region slightly, so this is a
+    /// mild under-estimate for deep nets — documented in
+    /// `docs/PRECISION.md`).
+    pub fn estimate_cost(&self, layer_macs: &[u64]) -> CostCounter {
+        let f = self.mask_fraction() as f64;
+        let mut costs = CostCounter::default();
+        for (layer, &macs) in layer_macs.iter().enumerate() {
+            let (lo, hi) = self.layer_n(layer);
+            if hi > lo && f > 0.0 {
+                costs.charge_capacitor((macs as f64 * (1.0 - f)) as u64, lo);
+                costs.charge_capacitor((macs as f64 * f) as u64, hi);
+            } else {
+                costs.charge_capacitor(macs, lo);
+            }
+        }
+        costs
+    }
+
+    /// Validate the plan against a network geometry: every scheduled
+    /// layer needs ≥ 1 sample, and a mask (if any) must match the input.
+    pub fn validate(&self, num_layers: usize, input_pixels: Option<usize>) -> Result<(), PlanError> {
+        for layer in 0..num_layers.max(1) {
+            let (lo, _) = self.layer_n(layer);
+            if lo == 0 {
+                return Err(PlanError::ZeroSamples { layer });
+            }
+        }
+        if let (Some(mask), Some(pixels)) = (&self.mask, input_pixels) {
+            if mask.len() != pixels {
+                return Err(PlanError::BadMask { expected: pixels, got: mask.len() });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_an_error() {
+        assert_eq!(PrecisionPlan::per_layer(&[]).unwrap_err(), PlanError::Empty);
+    }
+
+    #[test]
+    fn short_plans_saturate_at_last_entry() {
+        let plan = PrecisionPlan::per_layer(&[4, 8]).unwrap();
+        assert_eq!(plan.layer_n(0), (4, 4));
+        assert_eq!(plan.layer_n(1), (8, 8));
+        assert_eq!(plan.layer_n(2), (8, 8), "must saturate, not default");
+        assert_eq!(plan.layer_n(99), (8, 8));
+    }
+
+    #[test]
+    fn spatial_clamps_high_region() {
+        let plan = PrecisionPlan::spatial(vec![true, false], 16, 8);
+        assert_eq!(plan.layer_n(0), (16, 16), "n_high clamps up to n_low");
+        assert!((plan.mask_fraction() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_n_detection() {
+        assert_eq!(PrecisionPlan::uniform(8).uniform_n(), Some(8));
+        assert_eq!(PrecisionPlan::per_layer(&[8, 8]).unwrap().uniform_n(), Some(8));
+        assert_eq!(PrecisionPlan::per_layer(&[8, 16]).unwrap().uniform_n(), None);
+        assert_eq!(PrecisionPlan::spatial(vec![true], 8, 16).uniform_n(), None);
+    }
+
+    #[test]
+    fn cost_estimate_splits_by_mask_fraction() {
+        let macs = [100u64, 100];
+        let flat8 = PrecisionPlan::uniform(8).estimate_cost(&macs);
+        let flat16 = PrecisionPlan::uniform(16).estimate_cost(&macs);
+        let half = PrecisionPlan::spatial(vec![true, false], 8, 16).estimate_cost(&macs);
+        assert_eq!(flat8.gated_adds, 200 * 8);
+        assert_eq!(flat16.gated_adds, 200 * 16);
+        assert_eq!(half.gated_adds, (flat8.gated_adds + flat16.gated_adds) / 2);
+    }
+
+    #[test]
+    fn validate_rejects_zero_samples_and_bad_masks() {
+        assert_eq!(
+            PrecisionPlan::uniform(0).validate(3, None).unwrap_err(),
+            PlanError::ZeroSamples { layer: 0 }
+        );
+        let plan = PrecisionPlan::spatial(vec![true; 7], 4, 8);
+        assert_eq!(
+            plan.validate(1, Some(16)).unwrap_err(),
+            PlanError::BadMask { expected: 16, got: 7 }
+        );
+        assert!(plan.validate(1, Some(7)).is_ok());
+    }
+}

@@ -1,0 +1,219 @@
+//! [`PrecisionPolicy`] — how a [`PrecisionPlan`] gets chosen.
+//!
+//! A policy maps a [`PlanContext`] (network geometry, optional cheap-pass
+//! feature map or request entropy, batch size) to a plan.  The built-in
+//! policies cover the paper's modification grid — uniform sampling,
+//! layer-wise adaption, spatial attention (Sec. 4.5) — plus a
+//! [`Budgeted`] policy that allocates samples under an explicit
+//! gated-add budget (the serving-time "fit this op envelope" knob).
+//! The request-level scheduler of `coordinator::scheduler` implements
+//! the same trait, so simulator experiments and the serving stack speak
+//! one precision language.
+
+use crate::attention::{pixel_entropy, threshold_mask, upsample_mask, Threshold};
+use crate::sim::psbnet::PsbNetwork;
+use crate::sim::tensor::{dims4, Tensor};
+
+use super::plan::{PlanError, PrecisionPlan};
+
+/// Everything a policy may consult when planning one pass.
+#[derive(Debug, Clone)]
+pub struct PlanContext<'a> {
+    /// Capacitor layers in the target network.
+    pub num_layers: usize,
+    /// Per-capacitor-layer MACs (`rows × live weights`) for this batch;
+    /// the per-sample cost currency (see `PsbNetwork::capacitor_macs`).
+    pub layer_macs: Vec<u64>,
+    pub batch: usize,
+    /// Input spatial resolution `(H, W)` — spatial masks live here.
+    pub input_hw: (usize, usize),
+    /// Last-conv feature map from a cheap pass (attention proposals).
+    pub feat: Option<&'a Tensor>,
+    /// Request-level mean entropy from a cheap pass (serving path).
+    pub entropy: Option<f32>,
+}
+
+impl<'a> PlanContext<'a> {
+    /// Context for a full-network pass over `batch` images.
+    pub fn for_network(net: &PsbNetwork, batch: usize) -> PlanContext<'a> {
+        PlanContext {
+            num_layers: net.num_capacitors,
+            layer_macs: net.capacitor_macs(batch),
+            batch,
+            input_hw: (net.input_hwc.0, net.input_hwc.1),
+            feat: None,
+            entropy: None,
+        }
+    }
+
+    /// Minimal context for a request-level decision (serving): only the
+    /// entropy signal is known.
+    pub fn for_request(entropy: f32) -> PlanContext<'static> {
+        PlanContext {
+            num_layers: 1,
+            layer_macs: Vec::new(),
+            batch: 1,
+            input_hw: (0, 0),
+            feat: None,
+            entropy: Some(entropy),
+        }
+    }
+
+    pub fn with_feat(mut self, feat: &'a Tensor) -> PlanContext<'a> {
+        self.feat = Some(feat);
+        self
+    }
+
+    pub fn with_entropy(mut self, entropy: f32) -> PlanContext<'a> {
+        self.entropy = Some(entropy);
+        self
+    }
+
+    /// Total MACs of one pass at one sample each — multiply by `n` for
+    /// the gated-add cost of a uniform plan.
+    pub fn total_macs_per_sample(&self) -> u64 {
+        self.layer_macs.iter().sum()
+    }
+}
+
+/// A precision-selection strategy.  `&mut self` lets adaptive policies
+/// (EWMA thresholds, budget trackers) carry state across calls.
+pub trait PrecisionPolicy {
+    fn plan(&mut self, ctx: &PlanContext) -> Result<PrecisionPlan, PlanError>;
+}
+
+/// The same sample size everywhere (Fig. 3 / Table 1 "no modification").
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform(pub u32);
+
+impl PrecisionPolicy for Uniform {
+    fn plan(&mut self, _ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
+        Ok(PrecisionPlan::uniform(self.0))
+    }
+}
+
+/// One sample size per capacitor layer (Sec. 4.5 layer-wise adaption).
+#[derive(Debug, Clone)]
+pub struct PerLayer(pub Vec<u32>);
+
+impl PrecisionPolicy for PerLayer {
+    fn plan(&mut self, _ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
+        PrecisionPlan::per_layer(&self.0)
+    }
+}
+
+/// Spatial attention (Sec. 4.5): threshold the pixelwise entropy of the
+/// cheap pass's last-conv features and run the flagged region at
+/// `n_high`.  Needs `ctx.feat`; composes with
+/// [`crate::sim::PsbNetwork::refine`] so the escalation only pays
+/// `n_high − n_low` inside the mask.
+#[derive(Debug, Clone, Copy)]
+pub struct SpatialAttention {
+    pub n_low: u32,
+    pub n_high: u32,
+    pub threshold: Threshold,
+}
+
+impl PrecisionPolicy for SpatialAttention {
+    fn plan(&mut self, ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
+        let feat = ctx.feat.ok_or(PlanError::MissingSignal)?;
+        let (b, fh, fw, _c) = dims4(feat);
+        let entropy = pixel_entropy(feat);
+        let small = threshold_mask(&entropy, self.threshold);
+        let (h, w) = ctx.input_hw;
+        let mask = upsample_mask(&small, b, fh, fw, h, w);
+        Ok(PrecisionPlan::spatial(mask, self.n_low, self.n_high))
+    }
+}
+
+/// Allocate samples under an explicit gated-add budget: the largest
+/// uniform `n ≤ n_max` whose estimated cost fits.  Degrades monotonically
+/// as the budget tightens; errs when even one sample per MAC does not
+/// fit.  (A smarter allocator could water-fill per layer; uniform keeps
+/// the plan's cost estimate exact — see `docs/PRECISION.md`.)
+#[derive(Debug, Clone, Copy)]
+pub struct Budgeted {
+    /// Gated int16-add budget for one pass over the context's batch.
+    pub gated_add_budget: u64,
+    /// Precision ceiling: never schedule more than this many samples.
+    pub n_max: u32,
+}
+
+impl PrecisionPolicy for Budgeted {
+    fn plan(&mut self, ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
+        let per_sample = ctx.total_macs_per_sample().max(1);
+        let n = (self.gated_add_budget / per_sample).min(self.n_max as u64) as u32;
+        if n == 0 {
+            return Err(PlanError::BudgetTooTight {
+                budget: self.gated_add_budget,
+                floor: per_sample,
+            });
+        }
+        Ok(PrecisionPlan::uniform(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> PlanContext<'static> {
+        PlanContext {
+            num_layers: 3,
+            layer_macs: vec![1000, 2000, 500],
+            batch: 2,
+            input_hw: (8, 8),
+            feat: None,
+            entropy: None,
+        }
+    }
+
+    #[test]
+    fn uniform_and_per_layer_policies() {
+        assert_eq!(Uniform(8).plan(&ctx()).unwrap(), PrecisionPlan::uniform(8));
+        let plan = PerLayer(vec![4, 8, 16]).plan(&ctx()).unwrap();
+        assert_eq!(plan.layer_n(2), (16, 16));
+        assert!(PerLayer(vec![]).plan(&ctx()).is_err());
+    }
+
+    #[test]
+    fn budgeted_fits_and_degrades_monotonically() {
+        let c = ctx();
+        let total = c.total_macs_per_sample(); // 3500
+        let mut prev = u32::MAX;
+        for budget in [100 * total, 17 * total, 6 * total, total] {
+            let plan = Budgeted { gated_add_budget: budget, n_max: 64 }.plan(&c).unwrap();
+            let est = plan.estimate_cost(&c.layer_macs);
+            assert!(est.gated_adds <= budget, "{} > {budget}", est.gated_adds);
+            let n = plan.layer_n(0).0;
+            assert!(n <= prev, "tighter budget must not raise n");
+            prev = n;
+        }
+        // ceiling respected
+        let capped = Budgeted { gated_add_budget: u64::MAX, n_max: 32 }.plan(&c).unwrap();
+        assert_eq!(capped.layer_n(0), (32, 32));
+        // below one-sample floor: loud error, not a silent zero plan
+        assert!(matches!(
+            Budgeted { gated_add_budget: total - 1, n_max: 64 }.plan(&c),
+            Err(PlanError::BudgetTooTight { .. })
+        ));
+    }
+
+    #[test]
+    fn spatial_attention_requires_features() {
+        let mut pol = SpatialAttention { n_low: 8, n_high: 16, threshold: Threshold::Mean };
+        assert_eq!(pol.plan(&ctx()).unwrap_err(), PlanError::MissingSignal);
+        // flat-entropy vs peaked-entropy pixels split the mask
+        let feat = Tensor::from_vec(
+            vec![
+                1.0, 1.0, 1.0, 1.0, // flat channels -> high entropy
+                9.0, 0.0, 0.0, 0.0, // peaked -> low entropy
+            ],
+            &[1, 1, 2, 4],
+        );
+        let c = PlanContext { input_hw: (1, 2), ..ctx() }.with_feat(&feat);
+        let plan = pol.plan(&c).unwrap();
+        assert_eq!(plan.mask(), Some(&[true, false][..]));
+        assert_eq!(plan.layer_n(0), (8, 16));
+    }
+}

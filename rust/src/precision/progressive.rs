@@ -1,0 +1,289 @@
+//! [`ProgressiveState`] — the integer capacitor accumulators that make
+//! PSB precision a *progressive* knob (paper Sec. 4.5, Eq. 8–10).
+//!
+//! Each sampled unit (capacitor conv/dense, depthwise capacitor, or
+//! stochastic residual BN) keeps the accumulated Binomial counts `k` of
+//! its weights' "high shift" draws.  Because the capacitor sum is an
+//! unbiased partial result, escalating from `n_low` to `n_high` samples
+//! only has to *add* `n_high − n_low` draws:
+//!
+//! ```text
+//! k[0, n_high) = k[0, n_low) + k[n_low, n_high)
+//! w̄_n = s · 2^e · (1 + k/n)
+//! ```
+//!
+//! For that sum to be exactly the count a one-shot `n_high` pass would
+//! have drawn, the `t`-th Bernoulli bit of a weight must not depend on
+//! how the sample range was partitioned.  We therefore derive one RNG
+//! stream per `(seed, unit, weight)` — for any [`RngKind`] — and define
+//! bit `t` as that stream's `t`-th draw.  Counts over `[t0, t1)` are then
+//! additive by construction, and `refine(n_low → n_high)` is
+//! bit-identical to a direct `n_high` pass (property-tested in
+//! `tests/progressive_precision.rs`).
+
+use crate::rng::{AnyRng, Rng, RngKind};
+
+use super::plan::PlanError;
+
+/// SplitMix64 finalizer — full-avalanche seed derivation.
+#[inline]
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seed of the per-`(unit, weight)` Bernoulli stream.
+#[inline]
+fn stream_seed(seed: u64, unit: u64, widx: u64) -> u64 {
+    splitmix(splitmix(seed ^ unit.wrapping_mul(0xA076_1D64_78BD_642F)) ^ widx)
+}
+
+/// Sum of Bernoulli(`p`) bits for sample indices `[t0, t1)` of one
+/// weight.  Bit `t` is the `t`-th draw of the weight's dedicated stream,
+/// so counts over disjoint ranges add up exactly.
+pub(crate) fn count_range(
+    kind: RngKind,
+    seed: u64,
+    unit: usize,
+    widx: usize,
+    p: f32,
+    t0: u32,
+    t1: u32,
+) -> u32 {
+    if t1 <= t0 || p <= 0.0 {
+        // pruned / zero-probability weights never draw a high shift;
+        // skipping the stream entirely is consistent because bit t is a
+        // pure function of (stream position, p).
+        return 0;
+    }
+    let mut rng = AnyRng::new(kind, stream_seed(seed, unit as u64, widx as u64));
+    // skip the prefix already consumed by earlier passes; Philox is
+    // counter-based and jumps in O(1), the stream ciphers step through
+    match &mut rng {
+        AnyRng::Philox(ph) => ph.skip(t0 as u64),
+        _ => {
+            for _ in 0..t0 {
+                rng.next_u64();
+            }
+        }
+    }
+    (t0..t1).map(|_| rng.bernoulli(p) as u32).sum()
+}
+
+/// Accumulated counts of one sampled unit, tracked at up to two sample
+/// levels: the base region (`n_lo`) and, under a spatial split, the
+/// attended region (`n_hi`).  Both levels are snapshots of the *same*
+/// per-weight streams, so `counts_hi[w] ≥ counts_lo[w]` always.
+#[derive(Debug, Clone)]
+pub struct UnitState {
+    counts_lo: Vec<u32>,
+    n_lo: u32,
+    /// `None` ⇒ the high track coincides with the base track.
+    counts_hi: Option<Vec<u32>>,
+    n_hi: u32,
+}
+
+impl UnitState {
+    pub fn new(num_weights: usize) -> UnitState {
+        UnitState { counts_lo: vec![0; num_weights], n_lo: 0, counts_hi: None, n_hi: 0 }
+    }
+
+    pub fn n_lo(&self) -> u32 {
+        self.n_lo
+    }
+
+    pub fn n_hi(&self) -> u32 {
+        if self.counts_hi.is_some() {
+            self.n_hi
+        } else {
+            self.n_lo
+        }
+    }
+
+    pub fn counts_lo(&self) -> &[u32] {
+        &self.counts_lo
+    }
+
+    /// High-region counts; falls back to the base track when no split
+    /// has been scheduled.
+    pub fn counts_hi(&self) -> &[u32] {
+        self.counts_hi.as_deref().unwrap_or(&self.counts_lo)
+    }
+
+    /// Validate monotonicity and move the sample levels to `(lo, hi)`
+    /// *without* drawing — the deterministic (§4.4) variant's path,
+    /// whose counts are an arithmetic function of `(p, n)` rather than
+    /// samples.  Returns the same `(Δ_lo, Δ_hi)` increments `advance`
+    /// would.
+    pub fn advance_levels_only(
+        &mut self,
+        layer: usize,
+        lo: u32,
+        hi: u32,
+    ) -> Result<(u32, u32), PlanError> {
+        let (prev_lo, prev_hi) = self.check_monotonic(layer, lo, hi)?;
+        let hi = hi.max(lo);
+        self.n_lo = lo;
+        if hi > lo {
+            if self.counts_hi.is_none() {
+                self.counts_hi = Some(self.counts_lo.clone());
+            }
+            self.n_hi = hi;
+        } else {
+            self.counts_hi = None;
+            self.n_hi = lo;
+        }
+        Ok((lo - prev_lo, hi.max(lo) - prev_hi))
+    }
+
+    fn check_monotonic(&self, layer: usize, lo: u32, hi: u32) -> Result<(u32, u32), PlanError> {
+        let hi = hi.max(lo);
+        let prev_lo = self.n_lo;
+        let prev_hi = self.n_hi();
+        if lo < prev_lo {
+            return Err(PlanError::NonMonotonic { layer, have: prev_lo, want: lo });
+        }
+        if hi < prev_hi {
+            return Err(PlanError::NonMonotonic { layer, have: prev_hi, want: hi });
+        }
+        Ok((prev_lo, prev_hi))
+    }
+
+    /// Advance both tracks to `(lo, hi)` samples, drawing only the
+    /// missing range of each weight's stream.  Returns the per-track
+    /// increments `(Δ_lo, Δ_hi)` actually drawn (the amounts a cost
+    /// model should charge).  Errors when the target would *reduce*
+    /// either track — refinement is additive.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance(
+        &mut self,
+        kind: RngKind,
+        seed: u64,
+        unit: usize,
+        probs: &[f32],
+        layer: usize,
+        lo: u32,
+        hi: u32,
+    ) -> Result<(u32, u32), PlanError> {
+        let hi = hi.max(lo);
+        let (prev_lo, prev_hi) = self.check_monotonic(layer, lo, hi)?;
+        debug_assert_eq!(probs.len(), self.counts_lo.len());
+        if hi > lo {
+            // keep (or open) a distinct high track before the base track
+            // moves: its logical position is prev_hi == prev_lo when the
+            // split is first introduced.
+            if self.counts_hi.is_none() {
+                self.counts_hi = Some(self.counts_lo.clone());
+            }
+            let counts_hi = self.counts_hi.as_mut().expect("just ensured");
+            for (w, (c, &p)) in counts_hi.iter_mut().zip(probs).enumerate() {
+                *c += count_range(kind, seed, unit, w, p, prev_hi, hi);
+            }
+            self.n_hi = hi;
+        }
+        for (w, (c, &p)) in self.counts_lo.iter_mut().zip(probs).enumerate() {
+            *c += count_range(kind, seed, unit, w, p, prev_lo, lo);
+        }
+        self.n_lo = lo;
+        if hi == lo {
+            // the split collapsed: both tracks sit at the same stream
+            // position, so their counts are equal — drop the duplicate.
+            self.counts_hi = None;
+            self.n_hi = lo;
+        }
+        Ok((lo - prev_lo, hi - prev_hi))
+    }
+}
+
+/// Progressive capacitor state of one inference: per-sampled-unit counts
+/// plus the RNG identity they were drawn under.  Create with
+/// [`crate::sim::PsbNetwork::begin`], escalate with
+/// [`crate::sim::PsbNetwork::refine`].
+#[derive(Debug, Clone)]
+pub struct ProgressiveState {
+    pub kind: RngKind,
+    pub seed: u64,
+    pub(crate) units: Vec<UnitState>,
+}
+
+impl ProgressiveState {
+    pub fn new(kind: RngKind, seed: u64, unit_sizes: impl IntoIterator<Item = usize>) -> Self {
+        ProgressiveState {
+            kind,
+            seed,
+            units: unit_sizes.into_iter().map(UnitState::new).collect(),
+        }
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Samples accumulated so far in the base track of unit 0 (handy for
+    /// diagnostics; all capacitor units move together under a plan).
+    pub fn samples_so_far(&self) -> u32 {
+        self.units.first().map(|u| u.n_lo()).unwrap_or(0)
+    }
+
+    pub fn units(&self) -> &[UnitState] {
+        &self.units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_ranges_are_additive() {
+        for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
+            for (seed, unit, widx, p) in [(1u64, 0usize, 0usize, 0.3f32), (9, 3, 17, 0.77)] {
+                let whole = count_range(kind, seed, unit, widx, p, 0, 24);
+                let parts = count_range(kind, seed, unit, widx, p, 0, 5)
+                    + count_range(kind, seed, unit, widx, p, 5, 16)
+                    + count_range(kind, seed, unit, widx, p, 16, 24);
+                assert_eq!(whole, parts, "{kind:?} partition-independence");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_probability_never_counts() {
+        assert_eq!(count_range(RngKind::Philox, 3, 0, 0, 0.0, 0, 64), 0);
+    }
+
+    #[test]
+    fn advance_is_monotone_and_tracks_levels() {
+        let probs = vec![0.5f32; 4];
+        let mut u = UnitState::new(4);
+        let (d_lo, d_hi) = u.advance(RngKind::Xorshift, 7, 0, &probs, 0, 8, 8).unwrap();
+        assert_eq!((d_lo, d_hi), (8, 8));
+        assert_eq!((u.n_lo(), u.n_hi()), (8, 8));
+        // open a split: base stays, attended region adds 8
+        let (d_lo, d_hi) = u.advance(RngKind::Xorshift, 7, 0, &probs, 0, 8, 16).unwrap();
+        assert_eq!((d_lo, d_hi), (0, 8));
+        assert_eq!((u.n_lo(), u.n_hi()), (8, 16));
+        for (lo, hi) in u.counts_lo().iter().zip(u.counts_hi()) {
+            assert!(hi >= lo, "high track extends the base track");
+        }
+        // shrinking is refused
+        assert!(matches!(
+            u.advance(RngKind::Xorshift, 7, 0, &probs, 0, 4, 16),
+            Err(PlanError::NonMonotonic { .. })
+        ));
+    }
+
+    #[test]
+    fn split_then_collapse_matches_straight_run() {
+        let probs = vec![0.25f32, 0.5, 0.9];
+        let mut split = UnitState::new(3);
+        split.advance(RngKind::Lfsr, 11, 2, &probs, 0, 4, 12).unwrap();
+        split.advance(RngKind::Lfsr, 11, 2, &probs, 0, 16, 16).unwrap();
+        let mut straight = UnitState::new(3);
+        straight.advance(RngKind::Lfsr, 11, 2, &probs, 0, 16, 16).unwrap();
+        assert_eq!(split.counts_lo(), straight.counts_lo());
+        assert!(split.counts_hi.is_none());
+    }
+}

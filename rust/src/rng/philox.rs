@@ -28,6 +28,16 @@ impl Philox {
         Philox { key: seed ^ lane.wrapping_mul(0xA076_1D64_78BD_642F), ctr: 0 }
     }
 
+    /// Counter-mode skip-ahead: advance the stream by `n` draws in O(1)
+    /// (equivalent to, and bit-identical with, calling `next_u64` `n`
+    /// times and discarding the results).  Lets progressive refinement
+    /// jump straight to the first unconsumed sample of a weight's
+    /// stream instead of replaying the prefix.
+    #[inline]
+    pub fn skip(&mut self, n: u64) {
+        self.ctr = self.ctr.wrapping_add(n);
+    }
+
     /// Stateless block function: same (key, ctr) -> same output, any order.
     #[inline]
     pub fn at(key: u64, ctr: u64) -> u64 {
@@ -70,6 +80,17 @@ mod tests {
         for i in (0..8).rev() {
             assert_eq!(Philox::at(4 ^ 0xCAFE_F00D_D15E_A5E5, i as u64), seq[i]);
         }
+    }
+
+    #[test]
+    fn skip_matches_stepping() {
+        let mut stepped = Philox::seed_from(7);
+        let mut skipped = Philox::seed_from(7);
+        for _ in 0..13 {
+            stepped.next_u64();
+        }
+        skipped.skip(13);
+        assert_eq!(stepped.next_u64(), skipped.next_u64());
     }
 
     #[test]

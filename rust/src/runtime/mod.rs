@@ -9,6 +9,12 @@
 //! [`Runtime`] on a dedicated thread (see `coordinator::engine`) and
 //! communicates over channels.  Compiled executables are cached per
 //! module name, so each `(n, batch)` variant compiles exactly once.
+//!
+//! The PJRT dependency (`xla` crate) is optional: build with
+//! `--features pjrt` to execute artifacts.  Without the feature, a stub
+//! [`Runtime`] still parses artifact metadata (same error surface) but
+//! refuses to execute — serve through the simulator engine
+//! (`coordinator::Engine::spawn_sim`) instead.
 
 pub mod bundle;
 
@@ -131,6 +137,7 @@ pub struct Execution {
 }
 
 /// The PJRT-backed model runtime (single-threaded; see module docs).
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -140,8 +147,9 @@ pub struct Runtime {
     pub compiles: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
-    /// Open an artifact directory (expects `meta.json` + `*.hlo.txt`).
+    /// Open an artifact directory (expects `meta.txt` + `*.hlo.txt`).
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = artifact_dir.as_ref().to_path_buf();
         let meta = ArtifactMeta::load(&dir)?;
@@ -251,6 +259,73 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> anyhow::Error {
     anyhow!("{e:?}")
+}
+
+/// Stub runtime for builds without the `pjrt` feature: artifact metadata
+/// still loads (so configuration errors surface identically) but
+/// execution is refused with a pointer at the simulator engine.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+    cache: std::collections::HashSet<String>,
+    /// compile count (diagnostics / tests)
+    pub compiles: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Open an artifact directory (expects `meta.txt` + `*.hlo.txt`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let meta = ArtifactMeta::load(&dir)?;
+        Ok(Runtime { dir, meta, cache: Default::default(), compiles: 0 })
+    }
+
+    /// Check a module's artifact exists (no compilation without PJRT).
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "artifact {} missing", path.display());
+        self.cache.insert(name.to_string());
+        self.compiles += 1;
+        Ok(())
+    }
+
+    pub fn loaded_modules(&self) -> Vec<String> {
+        self.cache.iter().cloned().collect()
+    }
+
+    pub fn run_psb(
+        &mut self,
+        _n: u32,
+        _batch: usize,
+        _x: &[f32],
+        _seed: u32,
+        _bundle: &PsbBundle,
+    ) -> Result<Execution> {
+        bail!(
+            "psb was built without the `pjrt` feature — rebuild with `--features pjrt` \
+             to execute AOT artifacts, or serve through the simulator engine \
+             (`coordinator::Engine::spawn_sim`)"
+        )
+    }
+
+    pub fn run_float(
+        &mut self,
+        _batch: usize,
+        _x: &[f32],
+        _bundle: &FloatBundle,
+    ) -> Result<Execution> {
+        bail!(
+            "psb was built without the `pjrt` feature — rebuild with `--features pjrt` \
+             to execute AOT artifacts, or serve through the simulator engine \
+             (`coordinator::Engine::spawn_sim`)"
+        )
+    }
 }

@@ -101,26 +101,40 @@ pub fn capacitor_matmul_rowwise(
         let counts = sample_counts(planes, lvl, rng);
         let wbar = realize_weights(planes, &counts, lvl);
         let rows: Vec<usize> = (0..m).filter(|&r| n_rows[r] == lvl).collect();
-        // gather the submatrix, multiply, scatter back
-        let mut sub = Vec::with_capacity(rows.len() * k);
-        for &r in &rows {
-            sub.extend_from_slice(&x[r * k..(r + 1) * k]);
-        }
-        let ysub = crate::sim::tensor::matmul(&sub, &wbar, rows.len(), k, n);
-        for (i, &r) in rows.iter().enumerate() {
-            let dst = &mut y[r * n..(r + 1) * n];
-            let src = &ysub[i * n..(i + 1) * n];
-            for (d, (s, b)) in dst
-                .iter_mut()
-                .zip(src.iter().zip(bias.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; n])))
-            {
-                *d = quantize_f32(s + b);
-            }
-        }
+        scatter_rows_matmul(x, &wbar, bias, k, n, &rows, &mut y);
         costs.charge_capacitor(rows.len() as u64 * nnz(planes), lvl);
     }
-    let _ = k;
     y
+}
+
+/// Gather the listed rows of `x`, multiply by a realized weight matrix,
+/// and scatter the result back into `y` with bias add + Q16 quantization
+/// — the shared core of the rowwise and two-level spatial paths.
+pub(crate) fn scatter_rows_matmul(
+    x: &[f32],
+    wbar: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    rows: &[usize],
+    y: &mut [f32],
+) {
+    if rows.is_empty() {
+        return;
+    }
+    let mut sub = Vec::with_capacity(rows.len() * k);
+    for &r in rows {
+        sub.extend_from_slice(&x[r * k..(r + 1) * k]);
+    }
+    let ysub = crate::sim::tensor::matmul(&sub, wbar, rows.len(), k, n);
+    for (i, &r) in rows.iter().enumerate() {
+        let dst = &mut y[r * n..(r + 1) * n];
+        let src = &ysub[i * n..(i + 1) * n];
+        for (j, (dv, sv)) in dst.iter_mut().zip(src).enumerate() {
+            let bv = bias.map(|b| b[j]).unwrap_or(0.0);
+            *dv = quantize_f32(*sv + bv);
+        }
+    }
 }
 
 /// Bit-exact integer capacitor matmul (Eq. 9, the ASIC datapath):
@@ -140,10 +154,7 @@ pub fn capacitor_matmul_exact(
     seed: u64,
     costs: &mut CostCounter,
 ) -> Vec<Q16> {
-    assert!(n_samples.is_power_of_two(), "exact path needs power-of-two n");
-    let log2n = n_samples.trailing_zeros();
     let (k, n) = (planes.shape[0], planes.shape[1]);
-    assert_eq!(x_q.len(), m * k);
     // One filter draw shared across rows (batch), as in the float path:
     // counts[i*n+j] = number of high shifts for weight (i, j).
     let counts: Vec<u32> = (0..k * n)
@@ -152,6 +163,30 @@ pub fn capacitor_matmul_exact(
             rng.binomial(n_samples, planes.prob[idx])
         })
         .collect();
+    let y = capacitor_matmul_exact_counts(x_q, planes, bias, m, &counts, n_samples);
+    costs.charge_capacitor(m as u64 * nnz(planes), n_samples);
+    y
+}
+
+/// [`capacitor_matmul_exact`] with the Binomial counts supplied by the
+/// caller — the progressive-refinement entry point: a
+/// [`crate::precision::ProgressiveState`] accumulates the counts across
+/// escalations and replays the integer datapath at any level without
+/// redrawing.  Does **not** charge costs (the caller knows how many of
+/// the counts' samples are incremental).
+pub fn capacitor_matmul_exact_counts(
+    x_q: &[Q16],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    counts: &[u32],
+    n_samples: u32,
+) -> Vec<Q16> {
+    assert!(n_samples.is_power_of_two(), "exact path needs power-of-two n");
+    let log2n = n_samples.trailing_zeros();
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(counts.len(), k * n);
     let mut y = vec![Q16::ZERO; m * n];
     y.chunks_mut(n).enumerate().for_each(|(row, yrow)| {
         let xrow = &x_q[row * k..(row + 1) * k];
@@ -179,7 +214,6 @@ pub fn capacitor_matmul_exact(
             *yv = q;
         }
     });
-    costs.charge_capacitor(m as u64 * nnz(planes), n_samples);
     y
 }
 

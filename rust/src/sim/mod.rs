@@ -12,6 +12,6 @@ pub mod train;
 
 pub use fold::fold_batchnorms;
 pub use network::{Network, Op};
-pub use psbnet::{Precision, PsbNetwork, PsbOptions, PsbOutput};
+pub use psbnet::{PsbNetwork, PsbOptions, PsbOutput};
 pub use tensor::Tensor;
 pub use train::{evaluate, evaluate_psb, train, TrainConfig};

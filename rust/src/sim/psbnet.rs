@@ -2,6 +2,16 @@
 //! bijectively re-encoded into capacitor units (the paper's in-place
 //! quantization, Sec. 1.1 — no retraining, no extra hyper-parameters).
 //!
+//! Precision is expressed through the unified API of
+//! [`crate::precision`]: a [`PrecisionPlan`] schedules per-layer ×
+//! per-region sample counts, and every pass runs as *progressive
+//! refinement* over a [`ProgressiveState`] of per-weight Binomial
+//! counts ([`PsbNetwork::begin`] + [`PsbNetwork::refine`]).  Because the
+//! capacitor sum is an unbiased partial result (Eq. 8–10), escalating a
+//! state from `n_low` to `n_high` draws only the `n_high − n_low`
+//! missing samples and produces logits bit-identical to a one-shot
+//! `n_high` pass — [`PsbNetwork::forward`] is just `begin` + `refine`.
+//!
 //! Supports the paper's full modification grid:
 //! * uniform sample size `n` (Fig. 3 / Table 1 "no modification"),
 //! * per-layer sample sizes (Sec. 4.5's layer-wise adaption),
@@ -13,40 +23,13 @@
 //! * the bit-exact integer datapath (Eq. 9) for cross-validation.
 
 use crate::costs::CostCounter;
-use crate::num::{discretize_prob, PsbPlanes, PsbWeight, Q16};
-use crate::rng::{AnyRng, RngKind};
-use crate::sim::capacitor::{
-    capacitor_matmul, capacitor_matmul_exact, capacitor_matmul_rowwise, realize_weights,
-    sample_counts, stochastic_channel_scale,
-};
+use crate::num::{discretize_prob, quantize_f32, quantize_slice, PsbPlanes, PsbWeight, Q16};
+use crate::precision::{PlanError, PrecisionPlan, ProgressiveState};
+use crate::rng::RngKind;
+use crate::sim::capacitor::{capacitor_matmul_exact_counts, nnz, realize_weights};
 use crate::sim::layers::global_avg_pool;
 use crate::sim::network::{depthwise_forward, Network, Op};
-use crate::sim::tensor::{dims4, im2col, Tensor};
-
-/// Precision schedule for one PSB forward pass.
-#[derive(Debug, Clone)]
-pub enum Precision {
-    /// Same sample size everywhere.
-    Uniform(u32),
-    /// One sample size per capacitor layer, in graph order.
-    PerLayer(Vec<u32>),
-    /// Spatial attention: per-pixel mask at input resolution; masked
-    /// pixels run at `n_high`, the rest at `n_low` (Sec. 4.5).
-    Spatial { mask: Vec<bool>, n_low: u32, n_high: u32 },
-}
-
-impl Precision {
-    fn layer_n(&self, layer: usize) -> (u32, u32) {
-        match self {
-            Precision::Uniform(n) => (*n, *n),
-            Precision::PerLayer(ns) => {
-                let n = *ns.get(layer).unwrap_or(ns.last().unwrap_or(&16));
-                (n, n)
-            }
-            Precision::Spatial { n_low, n_high, .. } => (*n_low, *n_high),
-        }
-    }
-}
+use crate::sim::tensor::{dims4, im2col, matmul, Tensor};
 
 /// One node of the PSB graph.
 #[derive(Debug, Clone)]
@@ -94,11 +77,14 @@ pub struct PsbOptions {
     pub deterministic: bool,
 }
 
-/// Result of one PSB forward.
+/// Result of one PSB forward (or refinement) pass.
 pub struct PsbOutput {
     pub logits: Tensor,
     /// Activation of the designated last conv layer (attention input).
     pub feat: Option<Tensor>,
+    /// Hardware cost of *this* pass.  A refinement pass charges only the
+    /// incremental samples it drew (the paper's progressive accounting,
+    /// Sec. 4.5); a fresh forward charges the full plan.
     pub costs: CostCounter,
 }
 
@@ -109,7 +95,7 @@ pub struct PsbNetwork {
     pub input_hwc: (usize, usize, usize),
     pub feat_node: Option<usize>,
     pub options: PsbOptions,
-    /// Number of capacitor layers (for `Precision::PerLayer`).
+    /// Number of capacitor layers (what a [`PrecisionPlan`] indexes).
     pub num_capacitors: usize,
     pub name: String,
 }
@@ -196,45 +182,192 @@ impl PsbNetwork {
             .sum()
     }
 
-    /// One stochastic forward pass.
-    pub fn forward(&self, x: &Tensor, precision: &Precision, seed: u64) -> PsbOutput {
-        self.forward_with(x, precision, AnyRng::new(RngKind::Xorshift, seed), seed)
+    /// Sampled units in graph order (capacitors, depthwise capacitors,
+    /// stochastic BNs) — the shape of a [`ProgressiveState`].
+    pub fn num_sampled_units(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.op,
+                    PsbOp::Capacitor { .. }
+                        | PsbOp::DepthwiseCapacitor { .. }
+                        | PsbOp::StochasticBn { .. }
+                )
+            })
+            .count()
     }
 
-    /// Forward with an explicit RNG (the rng-ablation entry point).
-    pub fn forward_with(
+    /// Per-capacitor-layer sampled MACs (`rows × live weights`) of one
+    /// pass over a `batch`-image input — the per-sample cost currency
+    /// used by [`PrecisionPlan::estimate_cost`] and the `Budgeted`
+    /// policy.  Stochastic-BN units sample too (one element-wise scale
+    /// per activation); their element counts are folded into the
+    /// capacitor layer whose sample size they share, so uniform and
+    /// per-layer estimates match the charged costs exactly even on
+    /// networks with unfoldable BNs.
+    pub fn capacitor_macs(&self, batch: usize) -> Vec<u64> {
+        let (h0, w0, c0) = self.input_hwc;
+        // (rows, h, w, channels) per node; dense layers collapse h/w to 1
+        let mut shapes: Vec<(usize, usize, usize, usize)> = Vec::with_capacity(self.nodes.len());
+        let mut macs = Vec::with_capacity(self.num_capacitors);
+        // (capacitor layer whose n the BN reads, element count)
+        let mut bn_extra: Vec<(usize, u64)> = Vec::new();
+        for node in &self.nodes {
+            let shape = match &node.op {
+                PsbOp::Input => (batch, h0, w0, c0),
+                PsbOp::Capacitor { planes, conv, cout, .. } => {
+                    let (b, h, w, c) = shapes[node.inputs[0]];
+                    match conv {
+                        Some((_k, stride)) => {
+                            let ho = h.div_ceil(*stride);
+                            let wo = w.div_ceil(*stride);
+                            macs.push((b * ho * wo) as u64 * nnz(planes));
+                            (b, ho, wo, *cout)
+                        }
+                        None => {
+                            let cin = planes.shape[0];
+                            let m = (b * h * w * c) / cin;
+                            macs.push(m as u64 * nnz(planes));
+                            (m, 1, 1, *cout)
+                        }
+                    }
+                }
+                PsbOp::DepthwiseCapacitor { planes, stride, c, .. } => {
+                    let (b, h, w, _) = shapes[node.inputs[0]];
+                    let ho = h.div_ceil(*stride);
+                    let wo = w.div_ceil(*stride);
+                    macs.push((b * ho * wo) as u64 * nnz(planes));
+                    (b, ho, wo, *c)
+                }
+                PsbOp::GlobalAvgPool => {
+                    let (b, _, _, c) = shapes[node.inputs[0]];
+                    (b, 1, 1, c)
+                }
+                PsbOp::StochasticBn { .. } => {
+                    let (b, h, w, c) = shapes[node.inputs[0]];
+                    // charged at layer_n(cap_layer) in refine, where
+                    // cap_layer is the count of capacitors seen so far
+                    bn_extra.push((macs.len(), (b * h * w * c) as u64));
+                    shapes[node.inputs[0]]
+                }
+                PsbOp::Relu | PsbOp::Add | PsbOp::Identity => shapes[node.inputs[0]],
+            };
+            shapes.push(shape);
+        }
+        for (idx, elems) in bn_extra {
+            let i = idx.min(macs.len().saturating_sub(1));
+            if let Some(m) = macs.get_mut(i) {
+                *m += elems;
+            }
+        }
+        macs
+    }
+
+    /// Fresh progressive state: zero samples accumulated everywhere.
+    pub fn begin(&self, kind: RngKind, seed: u64) -> ProgressiveState {
+        ProgressiveState::new(
+            kind,
+            seed,
+            self.nodes.iter().filter_map(|n| match &n.op {
+                PsbOp::Capacitor { planes, .. } | PsbOp::DepthwiseCapacitor { planes, .. } => {
+                    Some(planes.len())
+                }
+                PsbOp::StochasticBn { scales, .. } => Some(scales.len()),
+                _ => None,
+            }),
+        )
+    }
+
+    /// One stochastic forward pass — a thin wrapper over
+    /// [`Self::begin`] + [`Self::refine`] with the default generator.
+    pub fn forward(
         &self,
         x: &Tensor,
-        precision: &Precision,
-        mut rng: AnyRng,
+        plan: &PrecisionPlan,
         seed: u64,
-    ) -> PsbOutput {
-        let mut costs = CostCounter::default();
+    ) -> Result<PsbOutput, PlanError> {
+        self.forward_with_kind(x, plan, RngKind::Xorshift, seed)
+    }
+
+    /// Forward with an explicit generator (the rng-ablation entry point).
+    pub fn forward_with_kind(
+        &self,
+        x: &Tensor,
+        plan: &PrecisionPlan,
+        kind: RngKind,
+        seed: u64,
+    ) -> Result<PsbOutput, PlanError> {
+        let mut state = self.begin(kind, seed);
+        self.refine(x, &mut state, plan)
+    }
+
+    /// Escalate `state` to `target` and run the pass.
+    ///
+    /// Each sampled unit tops up its Binomial counts with only the
+    /// samples the target adds over what the state already holds, then
+    /// the activations are recomputed from the refined weights.  The
+    /// returned [`PsbOutput::costs`] charge those incremental samples
+    /// (paper Sec. 4.5's progressive accounting), and the logits are
+    /// bit-identical to a single fresh pass at `target` with the same
+    /// `(kind, seed)` — the additivity invariant of Eq. 8.
+    ///
+    /// Cost exactness: for refinement chains that keep the same region
+    /// structure (uniform → uniform, or uniform → spatial split) the
+    /// stages' costs sum exactly to the direct pass.  Collapsing a
+    /// spatial split back to a uniform plan drops the mask, so the
+    /// attended rows' already-held samples can no longer be attributed
+    /// per row and the pass conservatively re-bills them at the base
+    /// track's increment (an upper bound; logits remain exact).
+    pub fn refine(
+        &self,
+        x: &Tensor,
+        state: &mut ProgressiveState,
+        target: &PrecisionPlan,
+    ) -> Result<PsbOutput, PlanError> {
         let (b, h, w, _c) = dims4(x);
+        target.validate(self.num_capacitors, Some(b * h * w))?;
+        let expected = self.num_sampled_units();
+        if state.num_units() != expected {
+            return Err(PlanError::StateMismatch { expected, got: state.num_units() });
+        }
+        let (kind, seed) = (state.kind, state.seed);
+        let mut costs = CostCounter::default();
         // per-node activations and spatial masks (at activation resolution)
         let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
         let mut masks: Vec<Option<Vec<bool>>> = Vec::with_capacity(self.nodes.len());
-        let input_mask: Option<Vec<bool>> = match precision {
-            Precision::Spatial { mask, .. } => {
-                assert_eq!(mask.len(), b * h * w, "mask must be B*H*W at input res");
-                Some(mask.clone())
-            }
-            _ => None,
-        };
+        let input_mask: Option<Vec<bool>> = target.mask().map(|m| m.to_vec());
         let mut cap_layer = 0usize;
+        let mut unit_idx = 0usize;
         let mut feat = None;
         for node in &self.nodes {
             let (act, mask): (Tensor, Option<Vec<bool>>) = match &node.op {
                 PsbOp::Input => {
                     let mut q = x.clone();
-                    crate::num::quantize_slice(&mut q.data);
+                    quantize_slice(&mut q.data);
                     (q, input_mask.clone())
                 }
                 PsbOp::Capacitor { planes, bias, conv, cout } => {
                     let inp = &acts[node.inputs[0]];
                     let in_mask = &masks[node.inputs[0]];
-                    let (n_low, n_high) = precision.layer_n(cap_layer);
+                    let (n_lo, n_hi) = target.layer_n(cap_layer);
+                    let layer = cap_layer;
                     cap_layer += 1;
+                    let unit = unit_idx;
+                    unit_idx += 1;
+                    let splits = in_mask.is_some() && n_hi > n_lo;
+                    let target_hi = if splits { n_hi } else { n_lo };
+                    // the §4.4 deterministic contraction ignores sampled
+                    // counts (k = round(p·n)), so only track the levels;
+                    // the spatial split still samples (as it always did)
+                    let (d_lo, d_hi) = if self.options.deterministic && !splits {
+                        state.units[unit].advance_levels_only(layer, n_lo, target_hi)?
+                    } else {
+                        state.units[unit].advance(
+                            kind, seed, unit, &planes.prob, layer, n_lo, target_hi,
+                        )?
+                    };
+                    let ust = &state.units[unit];
                     match conv {
                         Some((k, stride)) => {
                             let (bb, hh, ww, _) = dims4(inp);
@@ -243,19 +376,17 @@ impl PsbNetwork {
                             let out_mask =
                                 in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
                             let y = match &out_mask {
-                                Some(mk) if n_low != n_high => {
-                                    let rows: Vec<u32> = mk
-                                        .iter()
-                                        .map(|&hi| if hi { n_high } else { n_low })
-                                        .collect();
-                                    capacitor_matmul_rowwise(
-                                        &cols.data, planes, Some(bias), m, &rows, &mut rng,
-                                        &mut costs,
-                                    )
+                                Some(mk) if splits => {
+                                    let wbar_lo = realize_weights(planes, ust.counts_lo(), n_lo);
+                                    let wbar_hi = realize_weights(planes, ust.counts_hi(), n_hi);
+                                    let y = two_level_matmul(
+                                        &cols.data, planes, Some(bias), m, mk, &wbar_lo, &wbar_hi,
+                                    );
+                                    charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                    y
                                 }
-                                _ => self.contract(
-                                    &cols.data, planes, Some(bias), m, n_low, &mut rng, seed,
-                                    &mut costs,
+                                _ => self.contract_counts(
+                                    &cols.data, planes, Some(bias), m, ust, n_lo, d_lo, &mut costs,
                                 ),
                             };
                             (Tensor::from_vec(y, &[bb, ho, wo, *cout]), out_mask)
@@ -272,19 +403,17 @@ impl PsbNetwork {
                                     .collect::<Vec<bool>>()
                             });
                             let y = match &row_mask {
-                                Some(mk) if n_low != n_high => {
-                                    let rows: Vec<u32> = mk
-                                        .iter()
-                                        .map(|&hi| if hi { n_high } else { n_low })
-                                        .collect();
-                                    capacitor_matmul_rowwise(
-                                        &inp.data, planes, Some(bias), m, &rows, &mut rng,
-                                        &mut costs,
-                                    )
+                                Some(mk) if splits => {
+                                    let wbar_lo = realize_weights(planes, ust.counts_lo(), n_lo);
+                                    let wbar_hi = realize_weights(planes, ust.counts_hi(), n_hi);
+                                    let y = two_level_matmul(
+                                        &inp.data, planes, Some(bias), m, mk, &wbar_lo, &wbar_hi,
+                                    );
+                                    charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                    y
                                 }
-                                _ => self.contract(
-                                    &inp.data, planes, Some(bias), m, n_low, &mut rng, seed,
-                                    &mut costs,
+                                _ => self.contract_counts(
+                                    &inp.data, planes, Some(bias), m, ust, n_lo, d_lo, &mut costs,
                                 ),
                             };
                             (Tensor::from_vec(y, &[m, *cout]), row_mask)
@@ -295,45 +424,86 @@ impl PsbNetwork {
                     let inp = &acts[node.inputs[0]];
                     let in_mask = &masks[node.inputs[0]];
                     let (bb, hh, ww, _) = dims4(inp);
-                    let (n_low, n_high) = precision.layer_n(cap_layer);
+                    let (n_lo, n_hi) = target.layer_n(cap_layer);
+                    let layer = cap_layer;
                     cap_layer += 1;
+                    let unit = unit_idx;
+                    unit_idx += 1;
                     let out_mask = in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
+                    let splits = out_mask.is_some() && n_hi > n_lo;
+                    let (d_lo, d_hi) = state.units[unit].advance(
+                        kind,
+                        seed,
+                        unit,
+                        &planes.prob,
+                        layer,
+                        n_lo,
+                        if splits { n_hi } else { n_lo },
+                    )?;
+                    let ust = &state.units[unit];
                     // nnz-discounted: pruned taps cost nothing
-                    let live = crate::sim::capacitor::nnz(planes);
-                    let macs = (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64
-                        * live;
-                    let out = match (&out_mask, n_low != n_high) {
+                    let live = nnz(planes);
+                    let macs =
+                        (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64 * live;
+                    let out = match (&out_mask, splits) {
                         (Some(mk), true) => {
-                            // two filter draws, per-pixel select
-                            let lo = sampled_depthwise(
-                                inp, planes, bias, *k, *stride, *c, n_low, &mut rng,
+                            // two filter realizations, per-pixel select
+                            let lo = depthwise_with_counts(
+                                inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
                             );
-                            let hi = sampled_depthwise(
-                                inp, planes, bias, *k, *stride, *c, n_high, &mut rng,
+                            let hi = depthwise_with_counts(
+                                inp, planes, bias, *k, *stride, *c, ust.counts_hi(), n_hi,
                             );
                             let frac_hi =
                                 mk.iter().filter(|&&v| v).count() as f64 / mk.len() as f64;
-                            costs.charge_capacitor(
-                                (macs as f64 * (1.0 - frac_hi)) as u64,
-                                n_low,
-                            );
-                            costs.charge_capacitor((macs as f64 * frac_hi) as u64, n_high);
+                            if d_lo > 0 {
+                                costs.charge_capacitor(
+                                    (macs as f64 * (1.0 - frac_hi)) as u64,
+                                    d_lo,
+                                );
+                            }
+                            if d_hi > 0 {
+                                costs.charge_capacitor((macs as f64 * frac_hi) as u64, d_hi);
+                            }
                             select_by_mask(&lo, &hi, mk, *c)
                         }
                         _ => {
-                            costs.charge_capacitor(macs, n_low);
-                            sampled_depthwise(inp, planes, bias, *k, *stride, *c, n_low, &mut rng)
+                            if d_lo > 0 {
+                                costs.charge_capacitor(macs, d_lo);
+                            }
+                            depthwise_with_counts(
+                                inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
+                            )
                         }
                     };
                     (out, out_mask)
                 }
                 PsbOp::StochasticBn { scales, shifts } => {
                     let inp = &acts[node.inputs[0]];
-                    let (n_low, _) = precision.layer_n(cap_layer);
+                    // shares the sample size of the *next* capacitor layer
+                    // (saturating), mirroring the historical behavior
+                    let (n, _) = target.layer_n(cap_layer);
+                    let unit = unit_idx;
+                    unit_idx += 1;
+                    let probs: Vec<f32> = scales.iter().map(|s| s.prob).collect();
+                    let (d, _) = state.units[unit].advance(
+                        kind, seed, unit, &probs, cap_layer, n, n,
+                    )?;
+                    let sampled: Vec<f32> = scales
+                        .iter()
+                        .zip(state.units[unit].counts_lo())
+                        .map(|(wt, &cnt)| if wt.sign == 0 { 0.0 } else { wt.realize(cnt, n) })
+                        .collect();
+                    let c = scales.len();
                     let mut out = inp.clone();
-                    stochastic_channel_scale(
-                        &mut out.data, scales, shifts, n_low, &mut rng, &mut costs,
-                    );
+                    for chunk in out.data.chunks_mut(c) {
+                        for ((v, s), sh) in chunk.iter_mut().zip(&sampled).zip(shifts) {
+                            *v = quantize_f32(*v * s + sh);
+                        }
+                    }
+                    if d > 0 {
+                        costs.charge_capacitor(out.len() as u64, d);
+                    }
                     (out, masks[node.inputs[0]].clone())
                 }
                 PsbOp::Identity => {
@@ -358,7 +528,7 @@ impl PsbNetwork {
                     let inp = &acts[node.inputs[0]];
                     let (bb, _, _, _) = dims4(inp);
                     let mut y = global_avg_pool(inp);
-                    crate::num::quantize_slice(&mut y.data);
+                    quantize_slice(&mut y.data);
                     let m = masks[node.inputs[0]].as_ref().map(|mk| {
                         let per = mk.len() / bb;
                         (0..bb)
@@ -374,34 +544,79 @@ impl PsbNetwork {
             acts.push(act);
             masks.push(mask);
         }
-        PsbOutput { logits: acts.pop().unwrap(), feat, costs }
+        Ok(PsbOutput { logits: acts.pop().expect("network has nodes"), feat, costs })
     }
 
-    /// Uniform-precision contraction, dispatching float-sim vs bit-exact
-    /// vs the §4.4 deterministic variant.
+    /// Uniform-precision contraction from accumulated counts, dispatching
+    /// float-sim vs bit-exact vs the §4.4 deterministic variant.  Charges
+    /// the `d` *incremental* samples this pass drew.
     #[allow(clippy::too_many_arguments)]
-    fn contract(
+    fn contract_counts(
         &self,
         x: &[f32],
         planes: &PsbPlanes,
         bias: Option<&[f32]>,
         m: usize,
+        unit: &crate::precision::UnitState,
         n: u32,
-        rng: &mut AnyRng,
-        seed: u64,
+        d: u32,
         costs: &mut CostCounter,
     ) -> Vec<f32> {
-        if self.options.deterministic {
-            return deterministic_matmul(x, planes, bias, m, n, costs);
-        }
-        if self.options.exact_integer && n.is_power_of_two() {
+        let y = if self.options.deterministic {
+            deterministic_matmul(x, planes, bias, m, n)
+        } else if self.options.exact_integer && n.is_power_of_two() {
             let xq: Vec<Q16> = x.iter().map(|&v| Q16::from_f32(v)).collect();
-            let yq = capacitor_matmul_exact(&xq, planes, bias, m, n, seed, costs);
+            let yq = capacitor_matmul_exact_counts(&xq, planes, bias, m, unit.counts_lo(), n);
             yq.into_iter().map(|q| q.to_f32()).collect()
         } else {
-            capacitor_matmul(x, planes, bias, m, n, rng, costs)
+            let wbar = realize_weights(planes, unit.counts_lo(), n);
+            let (k, nn) = (planes.shape[0], planes.shape[1]);
+            let mut y = matmul(x, &wbar, m, k, nn);
+            add_bias_quantize(&mut y, bias, nn);
+            y
+        };
+        if d > 0 {
+            costs.charge_capacitor(m as u64 * nnz(planes), d);
         }
+        y
     }
+}
+
+/// Charge a two-region contraction: low rows at `d_lo` incremental
+/// samples, attended rows at `d_hi`.
+fn charge_split(costs: &mut CostCounter, planes: &PsbPlanes, hi_rows: &[bool], d_lo: u32, d_hi: u32) {
+    let live = nnz(planes);
+    let rows_hi = hi_rows.iter().filter(|&&v| v).count() as u64;
+    let rows_lo = hi_rows.len() as u64 - rows_hi;
+    if d_lo > 0 {
+        costs.charge_capacitor(rows_lo * live, d_lo);
+    }
+    if d_hi > 0 {
+        costs.charge_capacitor(rows_hi * live, d_hi);
+    }
+}
+
+/// Two-region matmul: rows flagged in `hi_rows` use `wbar_hi`, the rest
+/// `wbar_lo`; both realizations come from the same progressive streams,
+/// mirroring the paper's shared two-region filter draw.
+fn two_level_matmul(
+    x: &[f32],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    hi_rows: &[bool],
+    wbar_lo: &[f32],
+    wbar_hi: &[f32],
+) -> Vec<f32> {
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(hi_rows.len(), m);
+    let mut y = vec![0.0f32; m * n];
+    for level in [false, true] {
+        let wbar = if level { wbar_hi } else { wbar_lo };
+        let rows: Vec<usize> = (0..m).filter(|&r| hi_rows[r] == level).collect();
+        crate::sim::capacitor::scatter_rows_matmul(x, wbar, bias, k, n, &rows, &mut y);
+    }
+    y
 }
 
 /// §4.4 deterministic contraction: counts are fixed at k = round(p·n),
@@ -414,23 +629,25 @@ fn deterministic_matmul(
     bias: Option<&[f32]>,
     m: usize,
     n: u32,
-    costs: &mut CostCounter,
 ) -> Vec<f32> {
     let counts: Vec<u32> =
         planes.prob.iter().map(|&p| (p * n as f32).round() as u32).collect();
     let wbar = realize_weights(planes, &counts, n);
     let (k, nn) = (planes.shape[0], planes.shape[1]);
-    let mut y = crate::sim::tensor::matmul(x, &wbar, m, k, nn);
+    let mut y = matmul(x, &wbar, m, k, nn);
+    add_bias_quantize(&mut y, bias, nn);
+    y
+}
+
+fn add_bias_quantize(y: &mut [f32], bias: Option<&[f32]>, n_out: usize) {
     if let Some(b) = bias {
-        for row in y.chunks_mut(nn) {
+        for row in y.chunks_mut(n_out) {
             for (v, bv) in row.iter_mut().zip(b) {
                 *v += bv;
             }
         }
     }
-    crate::num::quantize_slice(&mut y);
-    costs.charge_capacitor(m as u64 * crate::sim::capacitor::nnz(planes), n);
-    y
+    quantize_slice(y);
 }
 
 fn encode_planes(w: &[f32], shape: &[usize], options: &PsbOptions) -> PsbPlanes {
@@ -464,20 +681,20 @@ fn pool_mask(mask: &[bool], b: usize, h: usize, w: usize, stride: usize) -> Vec<
     out
 }
 
-fn sampled_depthwise(
+/// Depthwise convolution with weights realized from accumulated counts.
+fn depthwise_with_counts(
     x: &Tensor,
     planes: &PsbPlanes,
     bias: &[f32],
     k: usize,
     stride: usize,
     c: usize,
+    counts: &[u32],
     n: u32,
-    rng: &mut AnyRng,
 ) -> Tensor {
-    let counts = sample_counts(planes, n, rng);
-    let wbar = realize_weights(planes, &counts, n);
+    let wbar = realize_weights(planes, counts, n);
     let mut y = depthwise_forward(x, &wbar, bias, k, stride, c);
-    crate::num::quantize_slice(&mut y.data);
+    quantize_slice(&mut y.data);
     y
 }
 
@@ -554,7 +771,7 @@ mod tests {
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let mut errs = vec![];
         for n in [1u32, 8, 64, 256] {
-            let out = psb.forward(&x, &Precision::Uniform(n), 7);
+            let out = psb.forward(&x, &PrecisionPlan::uniform(n), 7).unwrap();
             errs.push(relative_logit_error(&out.logits, &float_logits));
         }
         assert!(errs[3] < errs[0], "errors should decrease: {errs:?}");
@@ -575,7 +792,7 @@ mod tests {
             let psb = PsbNetwork::prepare(net, PsbOptions::default());
             let mut tot = 0.0;
             for seed in 0..10 {
-                let out = psb.forward(&x, &Precision::Uniform(4), seed);
+                let out = psb.forward(&x, &PrecisionPlan::uniform(4), seed).unwrap();
                 tot += relative_logit_error(&out.logits, &float_logits);
             }
             tot / 10.0
@@ -594,29 +811,77 @@ mod tests {
         settle_bn(&mut net);
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let x = batch(5, 2);
-        let lo = psb.forward(&x, &Precision::Uniform(8), 1).costs;
-        let hi = psb.forward(&x, &Precision::Uniform(16), 1).costs;
+        let lo = psb.forward(&x, &PrecisionPlan::uniform(8), 1).unwrap().costs;
+        let hi = psb.forward(&x, &PrecisionPlan::uniform(16), 1).unwrap().costs;
         // top half of each image interesting (block mask survives the
         // OR-pooling across stride-2 layers; an alternating mask would
         // pool to all-true)
         let mask: Vec<bool> = (0..2 * 8 * 8).map(|i| (i % 64) < 32).collect();
         let att = psb
-            .forward(&x, &Precision::Spatial { mask, n_low: 8, n_high: 16 }, 1)
+            .forward(&x, &PrecisionPlan::spatial(mask, 8, 16), 1)
+            .unwrap()
             .costs;
         assert!(att.gated_adds > lo.gated_adds, "{} vs {}", att.gated_adds, lo.gated_adds);
         assert!(att.gated_adds < hi.gated_adds, "{} vs {}", att.gated_adds, hi.gated_adds);
     }
 
     #[test]
-    fn per_layer_precision() {
+    fn per_layer_precision_saturates() {
         let mut net = make_net(false);
         settle_bn(&mut net);
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         assert_eq!(psb.num_capacitors, 3);
         let x = batch(6, 2);
-        let out = psb.forward(&x, &Precision::PerLayer(vec![4, 8, 16]), 2);
+        let plan = PrecisionPlan::per_layer(&[4, 8, 16]).unwrap();
+        let out = psb.forward(&x, &plan, 2).unwrap();
         assert_eq!(out.logits.shape, vec![2, 4]);
         assert!(out.feat.is_some());
+        // a short plan saturates at its last entry instead of silently
+        // defaulting (the old enum's 16-fallback bug)
+        let short = PrecisionPlan::per_layer(&[4, 8]).unwrap();
+        let long = PrecisionPlan::per_layer(&[4, 8, 8]).unwrap();
+        let a = psb.forward(&x, &short, 5).unwrap();
+        let b = psb.forward(&x, &long, 5).unwrap();
+        assert_eq!(a.logits.data, b.logits.data, "saturation must equal explicit padding");
+    }
+
+    #[test]
+    fn refine_is_bit_identical_to_direct_pass() {
+        let mut net = make_net(true); // include a stochastic BN unit
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let x = batch(42, 2);
+        for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
+            let direct = psb
+                .forward_with_kind(&x, &PrecisionPlan::uniform(16), kind, 9)
+                .unwrap();
+            let mut state = psb.begin(kind, 9);
+            let stage1 = psb.refine(&x, &mut state, &PrecisionPlan::uniform(6)).unwrap();
+            let refined = psb.refine(&x, &mut state, &PrecisionPlan::uniform(16)).unwrap();
+            assert_eq!(
+                refined.logits.data, direct.logits.data,
+                "{kind:?}: refine(6→16) must equal a one-shot n=16 pass"
+            );
+            // progressive accounting: the two stages together cost exactly
+            // the direct pass, and the escalation alone costs strictly less
+            assert!(refined.costs.gated_adds < direct.costs.gated_adds);
+            assert_eq!(
+                stage1.costs.gated_adds + refined.costs.gated_adds,
+                direct.costs.gated_adds
+            );
+        }
+    }
+
+    #[test]
+    fn refine_rejects_downgrades() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let x = batch(1, 1);
+        let mut state = psb.begin(RngKind::Xorshift, 1);
+        psb.refine(&x, &mut state, &PrecisionPlan::uniform(16)).unwrap();
+        let err = psb.refine(&x, &mut state, &PrecisionPlan::uniform(8)).unwrap_err();
+        assert!(matches!(err, PlanError::NonMonotonic { .. }), "{err}");
     }
 
     #[test]
@@ -644,7 +909,7 @@ mod tests {
             &net,
             PsbOptions { exact_integer: true, ..Default::default() },
         );
-        let out = exact.forward(&x, &Precision::Uniform(64), 3);
+        let out = exact.forward(&x, &PrecisionPlan::uniform(64), 3).unwrap();
         let err = relative_logit_error(&out.logits, &float_logits);
         assert!(err < 0.5, "exact-path error too large: {err}");
     }
@@ -658,8 +923,8 @@ mod tests {
             &net,
             PsbOptions { prob_bits: Some(4), deterministic: true, ..Default::default() },
         );
-        let a = det.forward(&x, &Precision::Uniform(16), 1);
-        let b = det.forward(&x, &Precision::Uniform(16), 999);
+        let a = det.forward(&x, &PrecisionPlan::uniform(16), 1).unwrap();
+        let b = det.forward(&x, &PrecisionPlan::uniform(16), 999).unwrap();
         assert_eq!(a.logits.data, b.logits.data, "must be seed-independent");
         // and it should approximate the float output about as well as the
         // sampled version does on average (it IS the expectation on the
@@ -667,6 +932,30 @@ mod tests {
         let float_logits = net.forward::<Xorshift128Plus>(&x, false, None).logits().clone();
         let err = relative_logit_error(&a.logits, &float_logits);
         assert!(err < 0.2, "deterministic 4-bit error too large: {err}");
+    }
+
+    #[test]
+    fn capacitor_macs_match_charged_costs() {
+        // both with and without a stochastic (unfoldable) BN unit: the
+        // BN's element costs fold into the layer whose n it shares
+        for residual_bn in [false, true] {
+            let mut net = make_net(residual_bn);
+            settle_bn(&mut net);
+            let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+            let x = batch(9, 2);
+            for plan in [
+                PrecisionPlan::uniform(8),
+                PrecisionPlan::per_layer(&[4, 8, 16]).unwrap(),
+            ] {
+                let out = psb.forward(&x, &plan, 3).unwrap();
+                let estimate = plan.estimate_cost(&psb.capacitor_macs(2));
+                assert_eq!(
+                    out.costs.gated_adds, estimate.gated_adds,
+                    "residual_bn={residual_bn} plan={plan:?}"
+                );
+                assert_eq!(out.costs.macs, estimate.macs);
+            }
+        }
     }
 
     #[test]

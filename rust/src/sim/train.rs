@@ -200,11 +200,11 @@ pub fn evaluate(net: &mut Network, data: &Dataset) -> f32 {
     correct as f32 / n as f32
 }
 
-/// PSB test-set accuracy for a prepared network at a given precision.
+/// PSB test-set accuracy for a prepared network under a precision plan.
 pub fn evaluate_psb(
     psb: &crate::sim::psbnet::PsbNetwork,
     data: &Dataset,
-    precision: &crate::sim::psbnet::Precision,
+    plan: &crate::precision::PrecisionPlan,
     seed: u64,
 ) -> (f32, crate::costs::CostCounter) {
     let n = data.test_images.shape[0];
@@ -213,7 +213,9 @@ pub fn evaluate_psb(
     for start in (0..n).step_by(64) {
         let idx: Vec<usize> = (start..(start + 64).min(n)).collect();
         let (x, labels) = data.gather_test(&idx);
-        let out = psb.forward(&x, precision, seed.wrapping_add(start as u64));
+        let out = psb
+            .forward(&x, plan, seed.wrapping_add(start as u64))
+            .expect("evaluation plan must be valid");
         let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
         costs.merge(&out.costs);

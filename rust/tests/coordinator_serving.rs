@@ -1,16 +1,25 @@
-//! Integration: the adaptive-precision coordinator over real PJRT
-//! artifacts — routing, batching, escalation and metrics invariants.
+//! Integration: the adaptive-precision coordinator — routing, batching,
+//! escalation and metrics invariants.
+//!
+//! The `sim_*` tests run everywhere on the simulator engine (true
+//! progressive-state reuse); the artifact-backed tests additionally
+//! exercise the PJRT path and skip when `make artifacts` hasn't run.
 
 use psb::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, EscalationPolicy};
 use psb::data::{Dataset, SynthConfig};
 use psb::rng::Xorshift128Plus;
 use psb::runtime::{FloatBundle, PsbBundle};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::train::{train, TrainConfig};
 use std::sync::atomic::Ordering;
 
 const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
 
 fn setup() -> Option<(FloatBundle, PsbBundle, Dataset)> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     if !std::path::Path::new("artifacts/meta.txt").exists() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return None;
@@ -110,4 +119,93 @@ fn oversized_image_rejected() {
     let Some((float, psb, _)) = setup() else { return };
     let coord = Coordinator::start(config(true), psb, float).unwrap();
     assert!(coord.submit(vec![0.0; 17]).is_err());
+}
+
+// ---- simulator-engine tests: no artifacts needed ------------------------
+
+fn sim_setup() -> (PsbNetwork, Dataset) {
+    let data = Dataset::synth(&SynthConfig {
+        train: 256,
+        test: 64,
+        size: 32,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = Xorshift128Plus::seed_from(5);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    train(&mut net, &data, &TrainConfig { epochs: 1, ..Default::default() });
+    (PsbNetwork::prepare(&net, PsbOptions::default()), data)
+}
+
+#[test]
+fn sim_coordinator_answers_every_request_once() {
+    let (psb, data) = sim_setup();
+    let coord = Coordinator::start_sim(config(false), psb).unwrap();
+    const N: usize = 24;
+    let mut inflight = Vec::new();
+    for i in 0..N {
+        let (x, _) = data.gather_test(&[i % 64]);
+        inflight.push(coord.submit(x.data).unwrap());
+    }
+    let mut answers = 0;
+    for rx in inflight {
+        let resp = rx.recv().expect("reply must arrive");
+        assert!(resp.class < 10);
+        assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
+        assert!(resp.n_used == 2 || resp.n_used == 4);
+        assert_eq!(resp.escalated, resp.n_used == 4);
+        // progressive refinement: escalations inherit the stage-1 samples
+        assert_eq!(resp.n_reused, if resp.escalated { 2 } else { 0 });
+        answers += 1;
+    }
+    assert_eq!(answers, N);
+    assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), N as u64);
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), N as u64);
+}
+
+#[test]
+fn sim_escalations_reuse_progressive_state() {
+    let (psb, data) = sim_setup();
+    let coord = Coordinator::start_sim(config(false), psb).unwrap();
+    let mut inflight = Vec::new();
+    for i in 0..32 {
+        let (x, _) = data.gather_test(&[i % 64]);
+        inflight.push(coord.submit(x.data).unwrap());
+    }
+    let mut escalated = 0u32;
+    for rx in inflight {
+        escalated += rx.recv().unwrap().escalated as u32;
+    }
+    assert!(escalated > 0, "adaptive mode should escalate something");
+    let reuse = coord.metrics.reuse_ratio();
+    assert!(reuse > 0.0, "escalations must register sample reuse");
+    // with n_low=2 / n_high=4 the reuse ratio is bounded by 2/(4+2)
+    assert!(reuse <= 2.0 / 6.0 + 1e-9, "reuse {reuse}");
+    let paid = coord.metrics.samples_paid.load(Ordering::Relaxed);
+    let reused = coord.metrics.samples_reused.load(Ordering::Relaxed);
+    assert_eq!(reused, 2 * escalated as u64);
+    assert_eq!(paid, 2 * 32 + 2 * escalated as u64);
+}
+
+#[test]
+fn sim_flat_serving_never_escalates_and_costs_less() {
+    let (psb, data) = sim_setup();
+    let run = |disabled: bool| {
+        let coord = Coordinator::start_sim(config(disabled), psb.clone()).unwrap();
+        let mut inflight = Vec::new();
+        for i in 0..16 {
+            let (x, _) = data.gather_test(&[i % 64]);
+            inflight.push(coord.submit(x.data).unwrap());
+        }
+        let mut escalated = 0u32;
+        for rx in inflight {
+            escalated += rx.recv().unwrap().escalated as u32;
+        }
+        (escalated, coord.metrics.gated_adds.load(Ordering::Relaxed))
+    };
+    let (esc_flat, adds_flat) = run(true);
+    let (esc_adaptive, adds_adaptive) = run(false);
+    assert_eq!(esc_flat, 0);
+    assert!(esc_adaptive > 0, "adaptive mode should escalate something");
+    assert!(adds_adaptive > adds_flat, "{adds_adaptive} vs {adds_flat}");
 }

@@ -1,0 +1,186 @@
+//! Regression tests for the unified precision API: deterministic
+//! seeding, the refine-vs-direct additivity invariant (Eq. 8–10), plan
+//! saturation semantics, and the budgeted policy's cost guarantees.
+
+use psb::precision::{
+    Budgeted, PlanContext, PlanError, PrecisionPlan, PrecisionPolicy, SpatialAttention,
+};
+use psb::rng::{Rng, RngKind, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+const KINDS: [RngKind; 3] = [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox];
+
+/// Small conv net; `with_residual_bn` adds an unfoldable BN so the
+/// stochastic-channel-scale unit participates in the invariants.
+fn make_net(with_residual_bn: bool) -> Network {
+    let mut net = Network::new((8, 8, 3), "progressive-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 8 }, vec![0], "c1");
+    let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+    let r1 = net.add(Op::ReLU, vec![b1], "r1");
+    let c2 = net.add(Op::Conv { k: 3, stride: 1, cin: 8, cout: 8 }, vec![r1], "c2");
+    let tail = if with_residual_bn {
+        let a = net.add(Op::Add, vec![c2, r1], "add");
+        let b2 = net.add(Op::BatchNorm, vec![a], "bn2");
+        net.add(Op::ReLU, vec![b2], "r2")
+    } else {
+        let b2 = net.add(Op::BatchNorm, vec![c2], "bn2");
+        let a = net.add(Op::Add, vec![b2, r1], "add");
+        net.add(Op::ReLU, vec![a], "r2")
+    };
+    net.feat_node = Some(tail);
+    let g = net.add(Op::GlobalAvgPool, vec![tail], "gap");
+    net.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(21);
+    net.init(&mut rng);
+    net
+}
+
+fn prepared(with_residual_bn: bool, options: PsbOptions) -> PsbNetwork {
+    let mut net = make_net(with_residual_bn);
+    for s in 0..8 {
+        let x = batch(s, 4);
+        net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    PsbNetwork::prepare(&net, options)
+}
+
+fn batch(seed: u64, b: usize) -> Tensor {
+    let mut rng = Xorshift128Plus::seed_from(seed);
+    Tensor::from_vec((0..b * 8 * 8 * 3).map(|_| rng.uniform()).collect(), &[b, 8, 8, 3])
+}
+
+#[test]
+fn same_seed_same_plan_is_bit_identical_for_every_rng() {
+    let psb = prepared(true, PsbOptions::default());
+    let x = batch(3, 2);
+    let plan = PrecisionPlan::per_layer(&[4, 8, 16]).unwrap();
+    for kind in KINDS {
+        let a = psb.forward_with_kind(&x, &plan, kind, 99).unwrap();
+        let b = psb.forward_with_kind(&x, &plan, kind, 99).unwrap();
+        assert_eq!(a.logits.data, b.logits.data, "{kind:?}: same seed must reproduce");
+        let c = psb.forward_with_kind(&x, &plan, kind, 100).unwrap();
+        assert_ne!(a.logits.data, c.logits.data, "{kind:?}: different seed must differ");
+    }
+}
+
+#[test]
+fn refine_equals_direct_pass_for_every_rng() {
+    // the unbiasedness/additivity invariant: n_low → n_high refinement
+    // is bit-identical to a one-shot n_high pass (Eq. 8)
+    let psb = prepared(true, PsbOptions::default());
+    let x = batch(7, 2);
+    for kind in KINDS {
+        let direct = psb
+            .forward_with_kind(&x, &PrecisionPlan::uniform(16), kind, 5)
+            .unwrap();
+        let mut st = psb.begin(kind, 5);
+        let stage1 = psb.refine(&x, &mut st, &PrecisionPlan::uniform(4)).unwrap();
+        let mid = psb.refine(&x, &mut st, &PrecisionPlan::uniform(9)).unwrap();
+        let fin = psb.refine(&x, &mut st, &PrecisionPlan::uniform(16)).unwrap();
+        assert_eq!(fin.logits.data, direct.logits.data, "{kind:?}: 4→9→16 != direct 16");
+        // progressive accounting: the stages partition the direct cost
+        assert_eq!(
+            stage1.costs.gated_adds + mid.costs.gated_adds + fin.costs.gated_adds,
+            direct.costs.gated_adds,
+            "{kind:?}"
+        );
+        assert!(fin.costs.gated_adds < direct.costs.gated_adds);
+    }
+}
+
+#[test]
+fn spatial_refine_equals_direct_spatial_pass() {
+    let psb = prepared(false, PsbOptions::default());
+    let x = batch(11, 2);
+    // top half of each image attended (block mask survives OR-pooling)
+    let mask: Vec<bool> = (0..2 * 8 * 8).map(|i| (i % 64) < 32).collect();
+    let plan = PrecisionPlan::spatial(mask, 6, 14);
+    let direct = psb.forward(&x, &plan, 31).unwrap();
+    let mut st = psb.begin(RngKind::Xorshift, 31);
+    psb.refine(&x, &mut st, &PrecisionPlan::uniform(6)).unwrap();
+    let refined = psb.refine(&x, &mut st, &plan).unwrap();
+    assert_eq!(refined.logits.data, direct.logits.data);
+}
+
+#[test]
+fn exact_integer_refine_is_bit_identical() {
+    let psb = prepared(false, PsbOptions { exact_integer: true, ..Default::default() });
+    let x = batch(13, 1);
+    let direct = psb.forward(&x, &PrecisionPlan::uniform(16), 2).unwrap();
+    let mut st = psb.begin(RngKind::Xorshift, 2);
+    psb.refine(&x, &mut st, &PrecisionPlan::uniform(8)).unwrap();
+    let refined = psb.refine(&x, &mut st, &PrecisionPlan::uniform(16)).unwrap();
+    assert_eq!(refined.logits.data, direct.logits.data, "integer datapath must refine exactly");
+}
+
+#[test]
+fn short_plans_saturate_and_empty_plans_error() {
+    let psb = prepared(false, PsbOptions::default());
+    assert_eq!(psb.num_capacitors, 3);
+    let x = batch(17, 2);
+    let short = PrecisionPlan::per_layer(&[4, 8]).unwrap();
+    let padded = PrecisionPlan::per_layer(&[4, 8, 8]).unwrap();
+    let a = psb.forward(&x, &short, 23).unwrap();
+    let b = psb.forward(&x, &padded, 23).unwrap();
+    assert_eq!(a.logits.data, b.logits.data, "saturation == explicit padding");
+    assert_eq!(PrecisionPlan::per_layer(&[]).unwrap_err(), PlanError::Empty);
+    assert!(matches!(
+        psb.forward(&x, &PrecisionPlan::uniform(0), 1).unwrap_err(),
+        PlanError::ZeroSamples { .. }
+    ));
+}
+
+#[test]
+fn budgeted_policy_never_exceeds_budget_and_degrades_monotonically() {
+    let psb = prepared(false, PsbOptions::default());
+    let ctx = PlanContext::for_network(&psb, 2);
+    let per_sample = ctx.total_macs_per_sample();
+    assert!(per_sample > 0);
+    let mut prev_n = u32::MAX;
+    for budget in [200 * per_sample, 33 * per_sample, 9 * per_sample, 3 * per_sample + 1] {
+        let plan = Budgeted { gated_add_budget: budget, n_max: 128 }.plan(&ctx).unwrap();
+        let estimate = plan.estimate_cost(&ctx.layer_macs);
+        assert!(
+            estimate.gated_adds <= budget,
+            "estimate {} exceeds budget {budget}",
+            estimate.gated_adds
+        );
+        // the estimate is exact for uniform plans: the actual forward
+        // charges the same gated adds
+        let x = batch(29, 2);
+        let out = psb.forward(&x, &plan, 4).unwrap();
+        assert_eq!(out.costs.gated_adds, estimate.gated_adds);
+        assert!(out.costs.gated_adds <= budget);
+        let n = plan.layer_n(0).0;
+        assert!(n <= prev_n, "plan must degrade monotonically: {n} > {prev_n}");
+        prev_n = n;
+    }
+    assert!(matches!(
+        Budgeted { gated_add_budget: per_sample - 1, n_max: 128 }.plan(&ctx),
+        Err(PlanError::BudgetTooTight { .. })
+    ));
+}
+
+#[test]
+fn spatial_attention_policy_builds_plans_from_features() {
+    let psb = prepared(false, PsbOptions::default());
+    let x = batch(37, 2);
+    let stage1 = psb.forward(&x, &PrecisionPlan::uniform(8), 6).unwrap();
+    let feat = stage1.feat.as_ref().expect("feat node designated");
+    let plan = SpatialAttention {
+        n_low: 8,
+        n_high: 16,
+        threshold: psb::attention::Threshold::Mean,
+    }
+    .plan(&PlanContext::for_network(&psb, 2).with_feat(feat))
+    .unwrap();
+    let f = plan.mask_fraction();
+    assert!(f > 0.0 && f < 1.0, "mean threshold splits the image: {f}");
+    assert_eq!(plan.mask().unwrap().len(), 2 * 8 * 8, "mask at input resolution");
+    // the plan refines the stage-1 state monotonically
+    let mut st = psb.begin(RngKind::Xorshift, 6);
+    psb.refine(&x, &mut st, &PrecisionPlan::uniform(8)).unwrap();
+    psb.refine(&x, &mut st, &plan).unwrap();
+}

@@ -13,6 +13,10 @@ use psb::sim::train::{train, TrainConfig};
 const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let dir = std::path::PathBuf::from("artifacts");
     if dir.join("meta.txt").exists() {
         Some(dir)
