@@ -19,16 +19,20 @@ use psb::sim::train::{train, TrainConfig};
 const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
 
 fn main() -> anyhow::Result<()> {
+    // PSB_QUICK=1 shrinks the run for CI smoke jobs
+    let quick = std::env::var("PSB_QUICK").is_ok();
     // the PJRT path needs the artifacts AND the pjrt cargo feature
     let have_artifacts =
         cfg!(feature = "pjrt") && std::path::Path::new("artifacts/meta.txt").exists();
-    let requests: usize = if have_artifacts { 256 } else { 64 };
+    let requests: usize = if have_artifacts { 256 } else if quick { 24 } else { 64 };
     // train the serving model once
-    let data = Dataset::synth(&SynthConfig { train: 1536, test: 512, size: 32, seed: 42, ..Default::default() });
+    let n_train = if quick { 512 } else { 1536 };
+    let data = Dataset::synth(&SynthConfig { train: n_train, test: 512, size: 32, seed: 42, ..Default::default() });
     let mut rng = Xorshift128Plus::seed_from(42);
     let mut net = psb::models::serving_cnn(&mut rng);
     eprintln!("training serving CNN...");
-    let stats = train(&mut net, &data, &TrainConfig { epochs: 4, ..Default::default() });
+    let epochs = if quick { 1 } else { 4 };
+    let stats = train(&mut net, &data, &TrainConfig { epochs, ..Default::default() });
     eprintln!("float test acc {:.3}", stats.last().unwrap().test_acc);
     let float = FloatBundle::from_network(&net, &SERVING_SHAPES)?;
     let psb = PsbBundle::from_float(&float, Some(4));
@@ -53,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let coord = match &psb_net {
-            None => Coordinator::start(cfg, psb.clone(), float.clone())?,
+            None => Coordinator::start(cfg, psb.clone())?,
             Some(net) => Coordinator::start_sim(cfg, net.clone())?,
         };
         let start = std::time::Instant::now();

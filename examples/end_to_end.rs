@@ -13,6 +13,7 @@
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use psb::attention::adaptive_forward;
+use psb::backend::SimBackend;
 use psb::data::{Dataset, SynthConfig};
 use psb::rng::Xorshift128Plus;
 use psb::runtime::{FloatBundle, PsbBundle, Runtime};
@@ -85,7 +86,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- 4. headline table ----------------------------------------------
     println!("\n=== 4. accuracy vs sample size + attention (paper headline) ===");
-    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
     println!("{:>14} {:>10} {:>10} {:>16}", "system", "top-1", "rel.", "gated adds");
     println!("{:>14} {:>10.3} {:>9.1}% {:>16}", "float32", float_acc, 100.0, "-");
     let mut psb16_adds = 0u64;

@@ -7,6 +7,7 @@
 //!    to the float baseline as the sample size n grows — the paper's
 //!    core claim.
 
+use psb::backend::SimBackend;
 use psb::data::{Dataset, SynthConfig};
 use psb::num::PsbWeight;
 use psb::rng::Xorshift128Plus;
@@ -15,6 +16,8 @@ use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::train::{evaluate, evaluate_psb, train, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
+    // PSB_QUICK=1 shrinks the run for CI smoke jobs
+    let quick = std::env::var("PSB_QUICK").is_ok();
     // --- 1. the number system -------------------------------------------------
     let w = 0.37f32;
     let enc = PsbWeight::encode(w);
@@ -26,21 +29,25 @@ fn main() -> anyhow::Result<()> {
     println!("  single-sample draws (one random bit -> one of two shifts): {draws:?}");
 
     // --- 2. train a small float model -----------------------------------------
-    let data = Dataset::synth(&SynthConfig { train: 1024, test: 512, size: 32, seed: 7, ..Default::default() });
+    let (n_train, n_test) = if quick { (256, 128) } else { (1024, 512) };
+    let data = Dataset::synth(&SynthConfig { train: n_train, test: n_test, size: 32, seed: 7, ..Default::default() });
     let mut rng = Xorshift128Plus::seed_from(2);
     let mut net = psb::models::cnn8(32, &mut rng);
     println!("\ntraining cnn8 ({} params) on SynthImages...", net.num_params());
-    let cfg = TrainConfig { epochs: 3, verbose: true, ..Default::default() };
+    let cfg = TrainConfig { epochs: if quick { 1 } else { 3 }, verbose: true, ..Default::default() };
     train(&mut net, &data, &cfg);
     let float_acc = evaluate(&mut net, &data);
     println!("float32 test accuracy: {float_acc:.3}");
 
     // --- 3. in-place binarization: accuracy vs sample size --------------------
-    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    // execution goes through a backend session: open a plan, run, read
+    // the logits + hardware charge from the session's cost report
+    let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
     println!("\nPSB inference (no retraining — weights re-encoded bijectively):");
     println!("{:>6} {:>10} {:>12} {:>14}", "n", "accuracy", "rel. acc", "gated adds");
-    for n in [1u32, 2, 4, 8, 16, 32, 64] {
-        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), 3);
+    let sweep: &[u32] = if quick { &[1, 8, 64] } else { &[1, 2, 4, 8, 16, 32, 64] };
+    for &n in sweep {
+        let (acc, costs) = evaluate_psb(&backend, &data, &PrecisionPlan::uniform(n), 3);
         println!(
             "{n:>6} {acc:>10.3} {:>11.1}% {:>14}",
             100.0 * acc / float_acc,

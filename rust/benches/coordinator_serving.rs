@@ -52,7 +52,7 @@ fn main() {
             policy,
             seed: 3,
         };
-        let coord = Coordinator::start(cfg, psb.clone(), float.clone()).unwrap();
+        let coord = Coordinator::start(cfg, psb.clone()).unwrap();
         // warm the compile cache before timing
         let (x0, _) = data.gather_test(&[0]);
         coord.classify(x0.data).unwrap();

@@ -1,12 +1,14 @@
 //! Fig. 3 bench: one PSB inference through each zoo architecture
 //! (batch 8, 32×32) at n = 8 and n = 16 — the per-model inference cost
 //! behind the accuracy-vs-n sweep, plus the float simulator baseline.
+//! Runs through the backend/session API.
 
 #[path = "harness.rs"]
 mod harness;
 
 use std::time::Duration;
 
+use psb::backend::{Backend, InferenceSession as _, SimBackend};
 use psb::models::MODEL_NAMES;
 use psb::rng::{Rng, Xorshift128Plus};
 use psb::precision::PrecisionPlan;
@@ -27,12 +29,14 @@ fn main() {
             std::hint::black_box(net.forward::<Xorshift128Plus>(&x, false, None).logits().len());
         });
         harness::report_rate("  -> images", 8.0, mean);
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         for n in [8u32, 16] {
             let mut seed = 0u64;
+            let plan = PrecisionPlan::uniform(n);
             let mean = harness::bench(&format!("{name} psb{n} fwd b8"), budget, || {
                 seed += 1;
-                std::hint::black_box(psb.forward(&x, &PrecisionPlan::uniform(n), seed).unwrap().logits.len());
+                let mut sess = backend.open(&plan).unwrap();
+                std::hint::black_box(sess.begin(&x, seed).unwrap().costs.gated_adds);
             });
             harness::report_rate("  -> images", 8.0, mean);
         }

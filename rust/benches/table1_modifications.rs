@@ -1,7 +1,8 @@
 //! Table 1 bench: per-modification inference cost on the ResNet stand-in
 //! — pruning (sparsity should *speed up* the contraction via the
 //! zero-weight skip), probability discretization (free at run time), and
-//! the two-stage attention pass vs flat sampling.
+//! the two-stage attention pass vs flat sampling.  Runs through the
+//! backend/session API.
 
 #[path = "harness.rs"]
 mod harness;
@@ -9,11 +10,18 @@ mod harness;
 use std::time::Duration;
 
 use psb::attention::adaptive_forward;
+use psb::backend::{Backend, InferenceSession as _, SimBackend};
 use psb::prune::prune_global;
 use psb::rng::{Rng, Xorshift128Plus};
 use psb::precision::PrecisionPlan;
 use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::tensor::Tensor;
+
+fn one_pass(backend: &SimBackend, x: &Tensor, n: u32, seed: u64) -> usize {
+    let mut sess = backend.open(&PrecisionPlan::uniform(n)).unwrap();
+    sess.begin(x, seed).unwrap();
+    sess.logits().len()
+}
 
 fn main() {
     let budget = Duration::from_millis(600);
@@ -25,12 +33,12 @@ fn main() {
     }
 
     // no modification, flat n
-    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
     for n in [8u32, 16, 32] {
         let mut seed = 0u64;
         harness::bench(&format!("resnet_mini psb{n} b8"), budget, || {
             seed += 1;
-            std::hint::black_box(psb.forward(&x, &PrecisionPlan::uniform(n), seed).unwrap().logits.len());
+            std::hint::black_box(one_pass(&psb, &x, n, seed));
         });
     }
 
@@ -38,20 +46,23 @@ fn main() {
     for frac in [0.90f32, 0.99] {
         let mut pruned = net.clone();
         prune_global(&mut pruned, frac);
-        let psb_p = PsbNetwork::prepare(&pruned, PsbOptions::default());
+        let psb_p = SimBackend::new(PsbNetwork::prepare(&pruned, PsbOptions::default()));
         let mut seed = 0u64;
         harness::bench(&format!("pruned {:.0}% psb16 b8", frac * 100.0), budget, || {
             seed += 1;
-            std::hint::black_box(psb_p.forward(&x, &PrecisionPlan::uniform(16), seed).unwrap().logits.len());
+            std::hint::black_box(one_pass(&psb_p, &x, 16, seed));
         });
     }
 
     // probability discretization: same run-time cost by construction
-    let psb_d = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(4), ..Default::default() });
+    let psb_d = SimBackend::new(PsbNetwork::prepare(
+        &net,
+        PsbOptions { prob_bits: Some(4), ..Default::default() },
+    ));
     let mut seed = 0u64;
     harness::bench("4-bit probs psb16 b8", budget, || {
         seed += 1;
-        std::hint::black_box(psb_d.forward(&x, &PrecisionPlan::uniform(16), seed).unwrap().logits.len());
+        std::hint::black_box(one_pass(&psb_d, &x, 16, seed));
     });
 
     // two-stage attention vs its flat bounds

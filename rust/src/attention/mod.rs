@@ -1,23 +1,22 @@
 //! Computational attention (paper Sec. 4.5): use the network itself, in a
 //! cheap low-precision mode, to decide where to spend samples.
 //!
-//! Pipeline (now genuinely *progressive* — the stage-1 capacitor state
-//! is refined in place instead of recomputed):
-//! 1. `begin` a [`ProgressiveState`] and `refine` it to a uniform
-//!    `n_low` plan (8 in the paper) on the full image;
+//! Pipeline (session-native — one [`crate::backend::InferenceSession`]
+//! carries the capacitor state through both stages):
+//! 1. open a session at a uniform `n_low` plan (8 in the paper) and
+//!    `begin` it on the full image;
 //! 2. feed the last conv layer's activations to the
 //!    [`SpatialAttention`] policy: pixelwise channel entropy
 //!    `h_xy = Σ_c −softmax(a_xyc)·log softmax(a_xyc)`, thresholded into
 //!    a binary mask of "interesting" regions (~35% of pixels on the
 //!    paper's data), upsampled to input resolution;
-//! 3. `refine` the *same* state to the resulting spatial plan — masked
+//! 3. `refine` the *same session* to the resulting spatial plan — masked
 //!    regions add only the `n_high − n_low` missing samples (Eq. 8's
 //!    additivity), which is the paper's −33% headline.
 
+use crate::backend::{Backend, InferenceSession, SimBackend};
 use crate::costs::CostCounter;
 use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy, SpatialAttention};
-use crate::rng::RngKind;
-use crate::sim::psbnet::{PsbNetwork, PsbOutput};
 use crate::sim::tensor::{dims4, Tensor};
 
 /// Pixelwise channel entropy of a feature map `[B,H,W,C] -> [B,H,W]`.
@@ -113,26 +112,28 @@ pub struct AttentionOutput {
     pub costs_two_pass: CostCounter,
     /// Fraction of input pixels flagged interesting (paper: ~0.35).
     pub interesting_fraction: f32,
-    /// The first-stage (low-precision) output, for diagnostics.
-    pub stage1: PsbOutput,
+    /// The stage-1 last-conv feature map (the attention proposal).
+    pub stage1_feat: Tensor,
+    /// Hardware charge of stage 1 alone.
+    pub stage1_costs: CostCounter,
 }
 
 /// The full two-stage mechanism of Sec. 4.5 / Table 1 "attention":
 /// stage 1 at `n_low` everywhere → entropy mask → progressive refinement
-/// to the `n_low/n_high` spatial split.
+/// of the same session to the `n_low/n_high` spatial split.
 pub fn adaptive_forward(
-    psb: &PsbNetwork,
+    backend: &SimBackend,
     x: &Tensor,
     n_low: u32,
     n_high: u32,
     seed: u64,
 ) -> AttentionOutput {
-    adaptive_forward_with(psb, x, n_low, n_high, seed, Threshold::Mean)
+    adaptive_forward_with(backend, x, n_low, n_high, seed, Threshold::Mean)
 }
 
 /// As [`adaptive_forward`] with an explicit threshold policy.
 pub fn adaptive_forward_with(
-    psb: &PsbNetwork,
+    backend: &SimBackend,
     x: &Tensor,
     n_low: u32,
     n_high: u32,
@@ -140,21 +141,24 @@ pub fn adaptive_forward_with(
     thr: Threshold,
 ) -> AttentionOutput {
     let (b, h, w, _) = dims4(x);
-    let mut state = psb.begin(RngKind::Xorshift, seed);
-    let stage1 = psb
-        .refine(x, &mut state, &PrecisionPlan::uniform(n_low))
+    let mut sess = backend
+        .open(&PrecisionPlan::uniform(n_low))
         .expect("uniform stage-1 plan is always valid");
-    let feat = stage1.feat.as_ref().expect("network must designate a feat node");
+    let stage1 = sess.begin(x, seed).expect("stage-1 pass over a valid input");
+    let feat = sess
+        .feat()
+        .expect("network must designate a feat node")
+        .clone();
     // mask at the *actual* input resolution (the simulator is fully
     // convolutional, so x need not match the nominal prepare-time size)
-    let mut ctx = PlanContext::for_network(psb, b);
+    let mut ctx = PlanContext::for_network(backend.network(), b);
     ctx.input_hw = (h, w);
     let plan = SpatialAttention { n_low, n_high, threshold: thr }
-        .plan(&ctx.with_feat(feat))
+        .plan(&ctx.with_feat(&feat))
         .expect("feature map provided");
     let interesting = plan.mask_fraction();
-    let stage2 = psb
-        .refine(x, &mut state, &plan)
+    let stage2 = sess
+        .refine(&plan)
         .expect("spatial escalation refines the stage-1 plan");
     // progressive total: stage 1 + the incremental escalation.  The
     // gated-add/random-bit fields partition the work exactly; `macs`
@@ -170,11 +174,12 @@ pub fn adaptive_forward_with(
     costs_two_pass.merge(&stage1.costs);
     costs_two_pass.macs = stage1.costs.macs;
     AttentionOutput {
-        logits: stage2.logits,
+        logits: sess.logits().clone(),
         costs,
         costs_two_pass,
         interesting_fraction: interesting,
-        stage1,
+        stage1_feat: feat,
+        stage1_costs: stage1.costs,
     }
 }
 
@@ -227,11 +232,15 @@ mod tests {
             let (x, _) = d.gather_train(&(0..32).map(|i| i + s).collect::<Vec<_>>());
             net.forward::<Xorshift128Plus>(&x, true, None);
         }
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         let (x, _) = d.gather_test(&(0..4).collect::<Vec<_>>());
-        let out = adaptive_forward(&psb, &x, 8, 16, 3);
-        let flat8 = psb.forward(&x, &PrecisionPlan::uniform(8), 3).unwrap().costs;
-        let flat16 = psb.forward(&x, &PrecisionPlan::uniform(16), 3).unwrap().costs;
+        let out = adaptive_forward(&backend, &x, 8, 16, 3);
+        let flat = |n: u32| {
+            let mut s = backend.open(&PrecisionPlan::uniform(n)).unwrap();
+            s.begin(&x, 3).unwrap().costs
+        };
+        let flat8 = flat(8);
+        let flat16 = flat(16);
         // progressive accounting: strictly between flat-8 and flat-16
         assert!(out.interesting_fraction > 0.05 && out.interesting_fraction < 0.95);
         assert!(out.costs.gated_adds > flat8.gated_adds);
@@ -249,7 +258,7 @@ mod tests {
     #[test]
     fn adaptive_logits_match_one_shot_spatial_pass() {
         // the tentpole invariant at the attention level: refining the
-        // stage-1 state must equal a fresh pass under the same plan
+        // stage-1 session must equal a fresh pass under the same plan
         let mut rng = Xorshift128Plus::seed_from(5);
         let mut net = crate::models::cnn8(16, &mut rng);
         let d = crate::data::Dataset::synth(&crate::data::SynthConfig {
@@ -262,9 +271,9 @@ mod tests {
             let (x, _) = d.gather_train(&(0..32).collect::<Vec<_>>());
             net.forward::<Xorshift128Plus>(&x, true, None);
         }
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         let (x, _) = d.gather_test(&(0..2).collect::<Vec<_>>());
-        let out = adaptive_forward(&psb, &x, 4, 12, 17);
+        let out = adaptive_forward(&backend, &x, 4, 12, 17);
         // rebuild the same spatial plan from stage-1 features and run it
         // one-shot with the same seed
         let plan = crate::precision::SpatialAttention {
@@ -272,11 +281,10 @@ mod tests {
             n_high: 12,
             threshold: Threshold::Mean,
         }
-        .plan(
-            &PlanContext::for_network(&psb, 2).with_feat(out.stage1.feat.as_ref().unwrap()),
-        )
+        .plan(&PlanContext::for_network(backend.network(), 2).with_feat(&out.stage1_feat))
         .unwrap();
-        let direct = psb.forward(&x, &plan, 17).unwrap();
-        assert_eq!(out.logits.data, direct.logits.data);
+        let mut direct = backend.open(&plan).unwrap();
+        direct.begin(&x, 17).unwrap();
+        assert_eq!(out.logits.data, direct.logits().data);
     }
 }

@@ -1,0 +1,584 @@
+//! [`IntKernel`] — the paper's deployment claim as a runnable CPU
+//! reference: the whole forward pass in additions of small integers and
+//! fixed shifts (Eq. 9), in the shift-add execution style of
+//! BinaryConnect (Courbariaux et al. 2015) and Neural Networks with Few
+//! Multiplications (Lin et al. 2015).  No float multiply touches the
+//! datapath; activations are raw Q5.10 integers end to end.
+//!
+//! ## True capacitor semantics
+//!
+//! Per capacitor node the session caches the raw integer charge
+//!
+//! ```text
+//! A[r, j] = Σ_i s_ij · ( k_ij·H_i + (n − k_ij)·L_i )      H = x≪(e+1), L = x≪e
+//! ```
+//!
+//! which is *exactly additive* in `(n, k)`: escalating `n → n + Δn`
+//! (drawing `Δk` new high shifts per weight) updates
+//!
+//! ```text
+//! ΔA = Δn · D   +   Σ_{Δk>0} s·Δk·(H − L)        D[r, j] = Σ_i s_ij·L_i  (cached)
+//! ```
+//!
+//! — work proportional to the *new samples*, not to a full recompute,
+//! and bit-identical to a one-shot pass at the new `n` because integer
+//! arithmetic is exact.  The final activation is `(A ≫ log2 n)`
+//! saturated to Q16 plus the bias, byte-for-byte what
+//! [`crate::sim::capacitor::capacitor_matmul_exact_counts`] computes —
+//! so `IntKernel` and a [`super::SimBackend`] over an `exact_integer`
+//! network produce identical logits for the same `(seed, plan)`
+//! (property-tested in `tests/backend_parity.rs`).
+//!
+//! The delta path applies whenever a layer's input is unchanged — always
+//! for the first capacitor, and for every layer a per-layer plan leaves
+//! alone; a layer fed by changed activations rebuilds its charge from
+//! the accumulated counts (one pass over the live weights, like any
+//! fresh contraction).
+//!
+//! ## Scope
+//!
+//! The integer datapath covers the deployment-shaped graph: capacitor
+//! conv/dense, ReLU (a sign gate), residual add, global average pooling
+//! and the dense head.  Depthwise capacitors and *unfoldable* stochastic
+//! BNs (which need a stochastic multiply) are rejected at construction —
+//! deployment networks fold their BNs.  Plans must be uniform or
+//! per-layer with power-of-two sample sizes (the renormalization is a
+//! fixed shift); spatial masks are the simulator's domain.  The mean in
+//! the pooling layer mirrors the simulator's f32 rounding so the two
+//! backends stay bit-comparable.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::num::fixed::{MAX_RAW, MIN_RAW, SCALE};
+use crate::num::Q16;
+use crate::precision::{PrecisionPlan, ProgressiveState};
+use crate::rng::RngKind;
+use crate::sim::capacitor::nnz;
+use crate::sim::psbnet::{PsbNetwork, PsbOp};
+use crate::sim::tensor::Tensor;
+
+use super::{Backend, CostReport, InferenceSession, StepReport};
+
+/// Integer shift-add backend over a prepared [`PsbNetwork`].
+#[derive(Debug, Clone)]
+pub struct IntKernel {
+    net: Arc<PsbNetwork>,
+    kind: RngKind,
+}
+
+impl IntKernel {
+    /// Wrap a prepared network, rejecting graphs the integer datapath
+    /// cannot express (depthwise capacitors, unfoldable BNs, the §4.4
+    /// deterministic variant).
+    pub fn new(net: PsbNetwork) -> Result<IntKernel> {
+        IntKernel::from_arc(Arc::new(net))
+    }
+
+    pub fn from_arc(net: Arc<PsbNetwork>) -> Result<IntKernel> {
+        if net.options.deterministic {
+            bail!("IntKernel samples its counts; the deterministic variant runs on SimBackend");
+        }
+        for node in &net.nodes {
+            match &node.op {
+                PsbOp::DepthwiseCapacitor { .. } => {
+                    bail!("IntKernel does not support depthwise capacitors (node '{}')", node.name)
+                }
+                PsbOp::StochasticBn { .. } => bail!(
+                    "IntKernel needs fully-folded BNs; node '{}' is an unfoldable stochastic BN",
+                    node.name
+                ),
+                _ => {}
+            }
+        }
+        Ok(IntKernel { net, kind: RngKind::Philox })
+    }
+
+    pub fn with_rng(mut self, kind: RngKind) -> IntKernel {
+        self.kind = kind;
+        self
+    }
+
+    pub fn network(&self) -> &PsbNetwork {
+        &self.net
+    }
+}
+
+/// Check a plan is expressible on the integer datapath.
+fn check_plan(net: &PsbNetwork, plan: &PrecisionPlan) -> Result<()> {
+    if plan.mask().is_some() {
+        bail!("IntKernel does not support spatial masks; use SimBackend for attention plans");
+    }
+    for layer in 0..net.num_capacitors.max(1) {
+        let (n, _) = plan.layer_n(layer);
+        if n > 0 && !n.is_power_of_two() {
+            bail!("IntKernel renormalizes by a fixed shift: layer {layer} n={n} is not a power of two");
+        }
+    }
+    Ok(())
+}
+
+impl Backend for IntKernel {
+    fn name(&self) -> &'static str {
+        "int"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.net.input_hwc
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        plan.validate(self.net.num_capacitors, None).map_err(anyhow::Error::new)?;
+        check_plan(&self.net, plan)?;
+        Ok(Box::new(IntSession {
+            net: self.net.clone(),
+            kind: self.kind,
+            plan: plan.clone(),
+            state: None,
+            batch: 0,
+            outs: Vec::new(),
+            caps: HashMap::new(),
+            logits: Tensor::zeros(&[0]),
+            feat: None,
+            report: CostReport::default(),
+        }))
+    }
+}
+
+/// Cached charge of one capacitor node.
+#[derive(Debug, Clone)]
+struct CapCache {
+    /// Integer lowering of the node input (conv: im2col; dense: clamped
+    /// copy), `m × k` row-major.
+    cols: Vec<i32>,
+    m: usize,
+    /// Raw capacitor charge `A[r, j]` (see module docs).
+    acc: Vec<i64>,
+    /// Base charge rate `D[r, j] = Σ_i s·L_i` — the `Δn` multiplier.
+    base: Vec<i64>,
+}
+
+/// One integer inference: counts + per-node charge accumulators.
+#[derive(Debug, Clone)]
+struct IntSession {
+    net: Arc<PsbNetwork>,
+    kind: RngKind,
+    plan: PrecisionPlan,
+    state: Option<ProgressiveState>,
+    batch: usize,
+    /// Raw Q16-scale activation per node (i32: residual adds may exceed
+    /// the i16 range before the next capacitor saturates them).
+    outs: Vec<Vec<i32>>,
+    caps: HashMap<usize, CapCache>,
+    logits: Tensor,
+    feat: Option<Tensor>,
+    report: CostReport,
+}
+
+/// The barrel shifter: `v·2^shift` with floor on negative shifts —
+/// byte-identical to [`crate::num::Accum::add_shifted`]'s term.
+#[inline]
+fn shifted(v: i32, shift: i32) -> i64 {
+    let v = v as i64;
+    if shift >= 0 {
+        v << shift.min(40)
+    } else {
+        v >> (-shift).min(40)
+    }
+}
+
+/// `A ≫ log2 n`, saturate to Q16, add bias — [`crate::num::Accum::finish`]
+/// plus `Q16::sat_add`, as the exact sim path does.
+#[inline]
+fn finish(acc: i64, log2n: u32, bias_raw: i16) -> i32 {
+    let q = (acc >> log2n).clamp(MIN_RAW as i64, MAX_RAW as i64) as i16;
+    q.saturating_add(bias_raw) as i32
+}
+
+#[inline]
+fn clamp_q16(v: i32) -> i32 {
+    v.clamp(MIN_RAW, MAX_RAW)
+}
+
+/// SAME-padded integer im2col with the sim's `(di, dj, c)` patch order;
+/// gathered values saturate to the Q16 range (what `Q16::from_f32` does
+/// on the float path).
+#[allow(clippy::too_many_arguments)]
+fn im2col_i32(
+    x: &[i32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+) -> (Vec<i32>, usize, usize) {
+    let pad = ksize / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let kdim = ksize * ksize * c;
+    let mut out = vec![0i32; b * ho * wo * kdim];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((bi * ho + oy) * wo + ox) * kdim;
+                for di in 0..ksize {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    for dj in 0..ksize {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                            let dst = base + (di * ksize + dj) * c;
+                            for ci in 0..c {
+                                out[dst + ci] = clamp_q16(x[src + ci]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+impl IntSession {
+    /// One pass over the graph.  Error safety: counts, charge and output
+    /// are synced *together* per unit (advance → acc update → emit in
+    /// the same iteration), so a pass that fails at a later layer (e.g.
+    /// a non-monotonic target) leaves every earlier layer's cache
+    /// consistent with its counts — a subsequent valid refine resumes
+    /// bit-identically (regression-tested in `tests/backend_parity.rs`).
+    fn run_pass(&mut self, target: &PrecisionPlan, fresh_x: Option<&Tensor>) -> Result<StepReport> {
+        check_plan(&self.net, target)?;
+        let net = self.net.clone();
+        let (h0, w0, c0) = net.input_hwc;
+        let b = if let Some(x) = fresh_x { x.shape[0] } else { self.batch };
+        target
+            .validate(net.num_capacitors, Some(b * h0 * w0))
+            .map_err(anyhow::Error::new)?;
+        let state = self.state.as_mut().expect("caller ensured begin ran");
+        let (kind, seed) = (state.kind, state.seed);
+        let mut step = StepReport::default();
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(net.nodes.len());
+        let mut dirty: Vec<bool> = Vec::with_capacity(net.nodes.len());
+        let mut cap_layer = 0usize;
+        let mut unit_idx = 0usize;
+        if self.outs.len() != net.nodes.len() {
+            self.outs = vec![Vec::new(); net.nodes.len()];
+        }
+        for (idx, node) in net.nodes.iter().enumerate() {
+            let (shape, is_dirty): (Vec<usize>, bool) = match &node.op {
+                PsbOp::Input => {
+                    if let Some(x) = fresh_x {
+                        anyhow::ensure!(
+                            x.shape == vec![b, h0, w0, c0],
+                            "input must be [{b}, {h0}, {w0}, {c0}], got {:?}",
+                            x.shape
+                        );
+                        // round + saturate: Q16::from_f32 on every element
+                        self.outs[idx] = x
+                            .data
+                            .iter()
+                            .map(|&v| {
+                                (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
+                            })
+                            .collect();
+                        (vec![b, h0, w0, c0], true)
+                    } else {
+                        (vec![b, h0, w0, c0], false)
+                    }
+                }
+                PsbOp::Capacitor { planes, bias, conv, cout } => {
+                    let in_idx = node.inputs[0];
+                    let in_dirty = dirty[in_idx];
+                    let in_shape = shapes[in_idx].clone();
+                    let (n_lo, _) = target.layer_n(cap_layer);
+                    let layer = cap_layer;
+                    cap_layer += 1;
+                    let unit = unit_idx;
+                    unit_idx += 1;
+                    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
+                    debug_assert_eq!(n_out, *cout);
+                    // snapshot counts for the delta path before advancing
+                    let can_delta = !in_dirty && self.caps.contains_key(&idx);
+                    let prev: Option<Vec<u32>> =
+                        can_delta.then(|| state.units[unit].counts_lo().to_vec());
+                    let (d_lo, _) = state.units[unit]
+                        .advance(kind, seed, unit, &planes.prob, layer, n_lo, n_lo)
+                        .map_err(anyhow::Error::new)?;
+                    let log2n = n_lo.trailing_zeros();
+                    let (out_shape, m, lower): (Vec<usize>, usize, Option<(usize, usize)>) =
+                        match conv {
+                            Some((k, stride)) => {
+                                let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
+                                let ho = hh.div_ceil(*stride);
+                                let wo = ww.div_ceil(*stride);
+                                (vec![bb, ho, wo, n_out], bb * ho * wo, Some((*k, *stride)))
+                            }
+                            None => {
+                                let m = self.outs[in_idx].len() / kk;
+                                (vec![m, n_out], m, None)
+                            }
+                        };
+                    let live = nnz(planes);
+                    let bias_raw: Vec<i16> =
+                        bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
+                    let node_dirty = if d_lo == 0 && can_delta {
+                        // unchanged counts over an unchanged input: the
+                        // cached charge is current — zero work
+                        step.nodes_reused += 1;
+                        false
+                    } else if let Some(prev) = prev.filter(|_| d_lo > 0) {
+                        // O(Δ) capacitor update: ΔA = Δn·D + Σ Δk·(H−L)
+                        step.delta_updated += 1;
+                        let counts = state.units[unit].counts_lo().to_vec();
+                        let cache = self.caps.get_mut(&idx).expect("can_delta checked");
+                        let dn = d_lo as i64;
+                        for (a, &d) in cache.acc.iter_mut().zip(cache.base.iter()) {
+                            *a += dn * d;
+                        }
+                        step.executed_adds += (m * n_out) as u64;
+                        for (widx, (&now, &was)) in counts.iter().zip(prev.iter()).enumerate() {
+                            let dk = (now - was) as i64;
+                            if dk == 0 {
+                                continue;
+                            }
+                            let s = planes.sign[widx];
+                            if s == 0.0 {
+                                continue;
+                            }
+                            let si = s as i64;
+                            let e = planes.exp[widx] as i32;
+                            let i = widx / n_out;
+                            let j = widx % n_out;
+                            for r in 0..m {
+                                let v = cache.cols[r * kk + i];
+                                if v == 0 {
+                                    continue;
+                                }
+                                cache.acc[r * n_out + j] +=
+                                    si * dk * (shifted(v, e + 1) - shifted(v, e));
+                                step.executed_adds += 1;
+                            }
+                        }
+                        let mut out = vec![0i32; m * n_out];
+                        for r in 0..m {
+                            for j in 0..n_out {
+                                out[r * n_out + j] =
+                                    finish(cache.acc[r * n_out + j], log2n, bias_raw[j]);
+                            }
+                        }
+                        self.outs[idx] = out;
+                        true
+                    } else {
+                        // full rebuild from accumulated counts (input
+                        // changed, or first pass over this node)
+                        step.nodes_recomputed += 1;
+                        let cols: Vec<i32> = match lower {
+                            Some((k, stride)) => {
+                                let (bb, hh, ww, cc) =
+                                    (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                                im2col_i32(&self.outs[in_idx], bb, hh, ww, cc, k, stride).0
+                            }
+                            None => self.outs[in_idx].iter().map(|&v| clamp_q16(v)).collect(),
+                        };
+                        let counts = state.units[unit].counts_lo();
+                        let n = n_lo as i64;
+                        let mut acc = vec![0i64; m * n_out];
+                        let mut base = vec![0i64; m * n_out];
+                        let mut out = vec![0i32; m * n_out];
+                        for r in 0..m {
+                            let xrow = &cols[r * kk..(r + 1) * kk];
+                            for j in 0..n_out {
+                                let (mut a, mut d) = (0i64, 0i64);
+                                for (i, &v) in xrow.iter().enumerate() {
+                                    if v == 0 {
+                                        continue;
+                                    }
+                                    let widx = i * n_out + j;
+                                    let s = planes.sign[widx];
+                                    if s == 0.0 {
+                                        continue;
+                                    }
+                                    let si = s as i64;
+                                    let e = planes.exp[widx] as i32;
+                                    let hi = shifted(v, e + 1);
+                                    let lo = shifted(v, e);
+                                    let kcnt = counts[widx] as i64;
+                                    a += si * (kcnt * hi + (n - kcnt) * lo);
+                                    d += si * lo;
+                                }
+                                acc[r * n_out + j] = a;
+                                base[r * n_out + j] = d;
+                                out[r * n_out + j] = finish(a, log2n, bias_raw[j]);
+                            }
+                        }
+                        step.executed_adds += m as u64 * live;
+                        self.caps.insert(idx, CapCache { cols, m, acc, base });
+                        self.outs[idx] = out;
+                        true
+                    };
+                    if d_lo > 0 {
+                        step.costs.charge_capacitor(m as u64 * live, d_lo);
+                    }
+                    (out_shape, node_dirty)
+                }
+                PsbOp::Relu => {
+                    let in_idx = node.inputs[0];
+                    let d = dirty[in_idx];
+                    self.outs[idx] = self.outs[in_idx].iter().map(|&v| v.max(0)).collect();
+                    (shapes[in_idx].clone(), d)
+                }
+                PsbOp::Identity => {
+                    let in_idx = node.inputs[0];
+                    self.outs[idx] = self.outs[in_idx].clone();
+                    (shapes[in_idx].clone(), dirty[in_idx])
+                }
+                PsbOp::Add => {
+                    let (a, bb) = (node.inputs[0], node.inputs[1]);
+                    debug_assert_eq!(shapes[a], shapes[bb]);
+                    self.outs[idx] = self.outs[a]
+                        .iter()
+                        .zip(self.outs[bb].iter())
+                        .map(|(&p, &q)| p + q)
+                        .collect();
+                    (shapes[a].clone(), dirty[a] || dirty[bb])
+                }
+                PsbOp::GlobalAvgPool => {
+                    let in_idx = node.inputs[0];
+                    let s = &shapes[in_idx];
+                    let (bb, hh, ww, cc) = (s[0], s[1], s[2], s[3]);
+                    // mirror the simulator's f32 mean + Q16 rounding
+                    // exactly so the backends stay bit-comparable (raw
+                    // Q16 values are exact in f32)
+                    let src = &self.outs[in_idx];
+                    let mut mean = vec![0.0f32; bb * cc];
+                    for bi in 0..bb {
+                        for p in 0..hh * ww {
+                            let at = (bi * hh * ww + p) * cc;
+                            for ci in 0..cc {
+                                mean[bi * cc + ci] += src[at + ci] as f32 / SCALE;
+                            }
+                        }
+                        for ci in 0..cc {
+                            mean[bi * cc + ci] /= (hh * ww) as f32;
+                        }
+                    }
+                    self.outs[idx] = mean
+                        .iter()
+                        .map(|&v| {
+                            (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
+                        })
+                        .collect();
+                    (vec![bb, cc], dirty[in_idx])
+                }
+                PsbOp::DepthwiseCapacitor { .. } | PsbOp::StochasticBn { .. } => {
+                    bail!("unsupported op reached IntKernel (validated at construction)")
+                }
+            };
+            shapes.push(shape);
+            dirty.push(is_dirty);
+        }
+        self.batch = b;
+        self.logits = raw_to_tensor(self.outs.last().expect("network has nodes"), shapes.last().unwrap());
+        self.feat = net
+            .feat_node
+            .map(|i| raw_to_tensor(&self.outs[i], &shapes[i]));
+        self.report.record(step);
+        Ok(step)
+    }
+}
+
+fn raw_to_tensor(raw: &[i32], shape: &[usize]) -> Tensor {
+    Tensor::from_vec(raw.iter().map(|&v| v as f32 / SCALE).collect(), shape)
+}
+
+impl InferenceSession for IntSession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_none(), "session already begun — open a new one");
+        anyhow::ensure!(x.shape.len() == 4, "input must be [B, H, W, C], got {:?}", x.shape);
+        self.state = Some(self.net.begin(self.kind, seed));
+        self.batch = x.shape[0];
+        let plan = self.plan.clone();
+        let result = self.run_pass(&plan, Some(x));
+        if result.is_err() {
+            // a failed opening pass leaves no usable session state
+            self.state = None;
+        }
+        result
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_some(), "refine before begin");
+        let step = self.run_pass(target, None)?;
+        self.plan = target.clone();
+        Ok(step)
+    }
+
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        anyhow::ensure!(self.state.is_some(), "narrow before begin");
+        let old_b = self.batch;
+        if let Some(&bad) = rows.iter().find(|&&r| r >= old_b) {
+            return Err(anyhow!("row {bad} out of range (batch {old_b})"));
+        }
+        for out in self.outs.iter_mut() {
+            if !out.is_empty() {
+                *out = gather_i32(out, rows, old_b);
+            }
+        }
+        for cache in self.caps.values_mut() {
+            cache.cols = gather_i32(&cache.cols, rows, old_b);
+            cache.acc = gather_i64(&cache.acc, rows, old_b);
+            cache.base = gather_i64(&cache.base, rows, old_b);
+            cache.m = cache.m / old_b * rows.len();
+        }
+        if !self.logits.is_empty() {
+            self.logits = crate::sim::psbnet::gather_blocks(&self.logits, rows, old_b);
+        }
+        if let Some(f) = self.feat.take() {
+            self.feat = Some(crate::sim::psbnet::gather_blocks(&f, rows, old_b));
+        }
+        self.batch = rows.len();
+        Ok(())
+    }
+
+    fn fork(&self) -> Result<Box<dyn InferenceSession>> {
+        Ok(Box::new(self.clone()))
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.feat.as_ref()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+}
+
+fn gather_i32(v: &[i32], rows: &[usize], old_b: usize) -> Vec<i32> {
+    let block = v.len() / old_b;
+    let mut out = Vec::with_capacity(block * rows.len());
+    for &r in rows {
+        out.extend_from_slice(&v[r * block..(r + 1) * block]);
+    }
+    out
+}
+
+fn gather_i64(v: &[i64], rows: &[usize], old_b: usize) -> Vec<i64> {
+    let block = v.len() / old_b;
+    let mut out = Vec::with_capacity(block * rows.len());
+    for &r in rows {
+        out.extend_from_slice(&v[r * block..(r + 1) * block]);
+    }
+    out
+}

@@ -1,0 +1,193 @@
+//! Unified execution backends: one trait pair for every way a PSB
+//! network can run.
+//!
+//! The paper's deployment story is that a PSB network is *one* set of
+//! weights servable at any precision, on anything from a float simulator
+//! to fixed-function shift-add hardware (Sec. 4.4–4.5).  This module is
+//! the one place that story lives:
+//!
+//! * a [`Backend`] owns prepared weights and opens sessions
+//!   (`open(&PrecisionPlan) → InferenceSession`);
+//! * an [`InferenceSession`] owns one inference's **resumable capacitor
+//!   state** — the [`crate::precision::ProgressiveState`] of per-weight
+//!   Binomial counts *plus* cached per-node partial accumulators — so
+//!   `refine(n_low → n_high)` does incremental work in wall-time (true
+//!   capacitor semantics), not just in gated-add accounting;
+//! * a [`CostReport`] separates the *hardware-model charge* (gated adds,
+//!   always incremental under refinement) from the *executed* work the
+//!   backend actually performed (which the caches shrink).
+//!
+//! Three implementations ship:
+//!
+//! | backend | datapath | session state reused on refine |
+//! |---|---|---|
+//! | [`SimBackend`] | float-carried simulation (Eq. 8) | counts + per-node activations + im2col lowerings |
+//! | [`IntKernel`] | pure i32 shift-add (Eq. 9) — BinaryConnect-style | counts + per-node integer charge accumulators |
+//! | [`PjrtBackend`] | AOT HLO artifacts on PJRT (feature `pjrt`) | none (stateless artifacts; re-executes) |
+//!
+//! `SimBackend` in `exact_integer` mode and [`IntKernel`] are
+//! bit-identical for the same `(seed, plan)` (property-tested in
+//! `tests/backend_parity.rs`), and every backend's `refine` is
+//! bit-identical to a one-shot pass at the target plan.
+//!
+//! The serving engine (`crate::coordinator::engine`) executes any
+//! [`BackendFactory`] on a dedicated thread; see `docs/BACKENDS.md` for
+//! the trait contract, the session lifecycle, and how to pick a backend.
+
+pub mod intkernel;
+pub mod pjrt;
+pub mod sim;
+
+use anyhow::Result;
+
+use crate::costs::CostCounter;
+use crate::precision::PrecisionPlan;
+use crate::sim::tensor::Tensor;
+
+pub use intkernel::IntKernel;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+/// What one `begin` or `refine` step did.
+///
+/// `costs` is the hardware-model charge of the step (the paper's
+/// progressive accounting: only the incremental samples are billed).
+/// The remaining fields are backend telemetry: how much work the session
+/// caches allowed the step to *skip*.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    /// Hardware-model charge of this step (incremental samples only).
+    pub costs: CostCounter,
+    /// Accumulator additions the backend actually executed this step
+    /// (`rows × live weights` per full contraction; delta updates and
+    /// cache hits execute less).
+    pub executed_adds: u64,
+    /// Sampled units recomputed from their (refined) counts.
+    pub nodes_recomputed: usize,
+    /// Sampled units served from the session cache (unchanged counts
+    /// over unchanged inputs) — zero executed work.
+    pub nodes_reused: usize,
+    /// Conv lowerings (im2col) served from the cache.
+    pub cols_reused: usize,
+    /// Capacitor nodes updated via the O(Δ) integer delta path
+    /// (`IntKernel` only: `ΔA = Δn·D + Σ Δk·(H−L)`).
+    pub delta_updated: usize,
+}
+
+/// Cumulative account of a session: the sum over its steps plus the
+/// per-step breakdown.  `total` merges each step's charge, so after a
+/// `begin` + `refine` chain it equals the charge of the equivalent
+/// one-shot pass at the final plan (cost additivity, Eq. 8).
+#[derive(Debug, Clone, Default)]
+pub struct CostReport {
+    pub total: CostCounter,
+    pub executed_adds: u64,
+    pub steps: Vec<StepReport>,
+}
+
+impl CostReport {
+    pub fn record(&mut self, step: StepReport) {
+        self.total.merge(&step.costs);
+        self.executed_adds += step.executed_adds;
+        self.steps.push(step);
+    }
+
+    /// The most recent step (handy right after a `begin`/`refine`).
+    pub fn last_step(&self) -> Option<&StepReport> {
+        self.steps.last()
+    }
+}
+
+/// An execution backend: prepared weights plus whatever runtime they
+/// need, able to open independent inference sessions.
+///
+/// Backends are not required to be `Send` (the PJRT runtime holds
+/// thread-bound handles); the serving engine constructs its backend *on*
+/// the engine thread from a [`BackendFactory`].
+pub trait Backend {
+    /// Short stable name ("sim", "int", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Input geometry `(H, W, C)` a session's batch tensor must have.
+    fn input_hwc(&self) -> (usize, usize, usize);
+
+    /// Open a session that will run its first pass at `plan`.  The plan
+    /// is validated against the backend's network; execution starts at
+    /// [`InferenceSession::begin`].
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>>;
+}
+
+/// One inference over one input batch, escalatable in place.
+///
+/// Lifecycle: `open(plan)` → `begin(x, seed)` → (`narrow(rows)`)* →
+/// (`refine(target)`)* → `logits`/`feat`/`cost_report` at any point
+/// after `begin`.  Refinement targets must be monotone (per-layer sample
+/// counts never decrease); each refine pays only the incremental
+/// samples, and the logits after `refine` are bit-identical to a
+/// one-shot `begin` at the target plan with the same `(backend, seed)`.
+pub trait InferenceSession {
+    /// Run the opening plan over `x` (`[B, H, W, C]`), creating the
+    /// session's progressive state under `seed`.
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport>;
+
+    /// Escalate the session to `target`, reusing the accumulated
+    /// capacitor state (counts *and* cached partial accumulators).
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport>;
+
+    /// Restrict the session to the listed batch rows (in the given
+    /// order) — the serving path's "escalate only the uncertain rows".
+    /// Keeps all capacitor state valid (filter draws are shared across
+    /// the batch).
+    fn narrow(&mut self, rows: &[usize]) -> Result<()>;
+
+    /// Clone the session (state + caches) into an independent session —
+    /// e.g. to escalate the same stage-1 pass under several targets.
+    /// Stateless backends may not support this.
+    fn fork(&self) -> Result<Box<dyn InferenceSession>> {
+        anyhow::bail!("this backend's sessions cannot fork")
+    }
+
+    /// Logits of the most recent pass, `[rows, num_classes]`.
+    fn logits(&self) -> &Tensor;
+
+    /// Last-conv feature map of the most recent pass (attention /
+    /// escalation signal), when the network designates one.
+    fn feat(&self) -> Option<&Tensor>;
+
+    /// The plan most recently applied (`open` plan until refined).
+    fn plan(&self) -> &PrecisionPlan;
+
+    /// Cumulative charge + telemetry across `begin` and every `refine`.
+    fn cost_report(&self) -> &CostReport;
+}
+
+/// Deferred backend construction, executed on the thread that will own
+/// the backend (PJRT handles are not `Send`).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send + 'static>;
+
+/// Factory for the pure-rust float simulator backend.
+pub fn sim_factory(net: crate::sim::psbnet::PsbNetwork, kind: crate::rng::RngKind) -> BackendFactory {
+    Box::new(move || Ok(Box::new(SimBackend::new(net).with_rng(kind)) as Box<dyn Backend>))
+}
+
+/// Factory for the integer shift-add reference backend.
+pub fn int_kernel_factory(
+    net: crate::sim::psbnet::PsbNetwork,
+    kind: crate::rng::RngKind,
+) -> BackendFactory {
+    Box::new(move || Ok(Box::new(IntKernel::new(net)?.with_rng(kind)) as Box<dyn Backend>))
+}
+
+/// Factory for the PJRT artifact backend.  `pad_to` is the artifact
+/// batch size partial escalation groups are padded to; `warm` lists
+/// `(n, batch)` modules to compile eagerly.
+pub fn pjrt_factory(
+    artifact_dir: std::path::PathBuf,
+    psb: crate::runtime::PsbBundle,
+    pad_to: usize,
+    warm: Vec<(u32, usize)>,
+) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(PjrtBackend::new(&artifact_dir, psb, pad_to, warm)?) as Box<dyn Backend>)
+    })
+}

@@ -1,0 +1,236 @@
+//! [`PjrtBackend`] — the AOT HLO artifacts on the PJRT CPU client,
+//! behind the unified [`Backend`] API.
+//!
+//! Artifacts are compiled per `(n, batch)`, so only *uniform* plans
+//! execute here, and sessions are **stateless**: the modeled hardware
+//! would keep its capacitor accumulators across an escalation, but the
+//! AOT modules recompute, so `refine` re-executes at the target `n` and
+//! reports no measured gated adds (the coordinator falls back to its
+//! geometric estimate, still billed incrementally per the paper's
+//! progressive accounting).  PJRT handles are not `Send`; construct this
+//! backend on the thread that will run it (see
+//! [`super::pjrt_factory`] and `coordinator::engine`).
+//!
+//! Without the `pjrt` cargo feature the stub [`Runtime`] still parses
+//! artifact metadata (same error surface) but construction fails fast
+//! with a pointer at the simulator backend.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::precision::{PlanError, PrecisionPlan};
+use crate::runtime::{Execution, PsbBundle, Runtime};
+use crate::sim::tensor::Tensor;
+
+use super::{Backend, CostReport, InferenceSession, StepReport};
+
+/// PJRT artifact backend: a compiled-executable cache plus the PSB
+/// weight bundle the modules take as inputs.
+pub struct PjrtBackend {
+    rt: Rc<RefCell<Runtime>>,
+    psb: Rc<PsbBundle>,
+    /// Artifact batch size partial (narrowed) batches pad back up to.
+    pad_to: usize,
+    image: usize,
+}
+
+impl PjrtBackend {
+    /// Open an artifact directory and precompile the `warm` list of
+    /// `(n, batch)` modules.  Fails fast when the crate was built
+    /// without the `pjrt` feature: metadata loads either way (same
+    /// error surface), execution needs the real runtime.
+    pub fn new(
+        artifact_dir: &Path,
+        psb: PsbBundle,
+        pad_to: usize,
+        warm: Vec<(u32, usize)>,
+    ) -> Result<PjrtBackend> {
+        let mut rt = Runtime::new(artifact_dir)?;
+        if !cfg!(feature = "pjrt") {
+            return Err(anyhow!(
+                "psb was built without the `pjrt` feature — artifacts found but cannot \
+                 execute; rebuild with `--features pjrt`, or serve through the simulator \
+                 backend (`backend::SimBackend` / `Coordinator::start_sim`)"
+            ));
+        }
+        for (n, b) in warm {
+            let name = rt.meta.psb_module(n, b);
+            rt.ensure_loaded(&name)?;
+        }
+        let image = rt.meta.image;
+        Ok(PjrtBackend {
+            rt: Rc::new(RefCell::new(rt)),
+            psb: Rc::new(psb),
+            pad_to: pad_to.max(1),
+            image,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        (self.image, self.image, 3)
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        let n = plan
+            .uniform_n()
+            .ok_or_else(|| anyhow::Error::new(PlanError::NotUniform))?;
+        Ok(Box::new(PjrtSession {
+            rt: self.rt.clone(),
+            psb: self.psb.clone(),
+            pad_to: self.pad_to,
+            image: self.image,
+            plan: plan.clone(),
+            n_applied: 0,
+            pending_n: n,
+            x: None,
+            batch: 0,
+            seed: 0,
+            logits: Tensor::zeros(&[0]),
+            feat: None,
+            report: CostReport::default(),
+        }))
+    }
+}
+
+/// One artifact inference.  Stateless on the artifact side: the session
+/// keeps the input and seed so escalations re-execute the fixed-`n`
+/// module at the target precision.
+struct PjrtSession {
+    rt: Rc<RefCell<Runtime>>,
+    psb: Rc<PsbBundle>,
+    pad_to: usize,
+    image: usize,
+    plan: PrecisionPlan,
+    n_applied: u32,
+    pending_n: u32,
+    x: Option<Vec<f32>>,
+    batch: usize,
+    seed: u32,
+    logits: Tensor,
+    feat: Option<Tensor>,
+    report: CostReport,
+}
+
+impl PjrtSession {
+    /// Execute the `n`-sample module over the session rows, padding to
+    /// the artifact batch when the session was narrowed below it.
+    fn execute(&mut self, n: u32) -> Result<Execution> {
+        let x = self.x.as_ref().expect("caller ensured begin ran");
+        let rows = self.batch;
+        let img_len = self.image * self.image * 3;
+        let exec = if rows < self.pad_to {
+            let mut padded = x.clone();
+            padded.resize(self.pad_to * img_len, 0.0);
+            let exec =
+                self.rt.borrow_mut().run_psb(n, self.pad_to, &padded, self.seed, &self.psb)?;
+            slice_rows(exec, rows)
+        } else {
+            self.rt.borrow_mut().run_psb(n, rows, x, self.seed, &self.psb)?
+        };
+        Ok(exec)
+    }
+
+    fn store(&mut self, exec: Execution, n: u32) {
+        let nc = if self.batch > 0 { exec.logits.len() / self.batch } else { 0 };
+        self.logits = Tensor::from_vec(exec.logits, &[self.batch, nc.max(1)]);
+        let [fb, fh, fw, fc] = exec.feat_shape;
+        self.feat = Some(Tensor::from_vec(exec.feat, &[fb, fh, fw, fc]));
+        self.n_applied = n;
+        // stateless artifacts measure no gated adds; record the step for
+        // bookkeeping (the coordinator estimates hardware costs
+        // geometrically, still incremental per Sec. 4.5)
+        self.report.record(StepReport::default());
+    }
+}
+
+/// Keep only the first `rows` live rows of a padded execution.
+fn slice_rows(exec: Execution, rows: usize) -> Execution {
+    let [fb, fh, fw, fc] = exec.feat_shape;
+    let nc = exec.logits.len() / fb.max(1);
+    let feat_len = fh * fw * fc;
+    Execution {
+        logits: exec.logits[..rows * nc].to_vec(),
+        feat: exec.feat[..rows * feat_len].to_vec(),
+        feat_shape: [rows, fh, fw, fc],
+    }
+}
+
+impl InferenceSession for PjrtSession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        anyhow::ensure!(self.x.is_none(), "session already begun — open a new one");
+        anyhow::ensure!(x.shape.len() == 4, "input must be [B, H, W, C], got {:?}", x.shape);
+        self.batch = x.shape[0];
+        self.x = Some(x.data.clone());
+        self.seed = seed as u32;
+        let n = self.pending_n;
+        let exec = self.execute(n)?;
+        self.store(exec, n);
+        Ok(*self.report.last_step().expect("just recorded"))
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        anyhow::ensure!(self.x.is_some(), "refine before begin");
+        let n = target
+            .uniform_n()
+            .ok_or_else(|| anyhow::Error::new(PlanError::NotUniform))?;
+        if n < self.n_applied {
+            return Err(anyhow::Error::new(PlanError::NonMonotonic {
+                layer: 0,
+                have: self.n_applied,
+                want: n,
+            }));
+        }
+        let exec = self.execute(n)?;
+        self.store(exec, n);
+        self.plan = target.clone();
+        Ok(*self.report.last_step().expect("just recorded"))
+    }
+
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        anyhow::ensure!(self.x.is_some(), "narrow before begin");
+        let old_b = self.batch;
+        if let Some(&bad) = rows.iter().find(|&&r| r >= old_b) {
+            return Err(anyhow!("row {bad} out of range (batch {old_b})"));
+        }
+        let img_len = self.image * self.image * 3;
+        let x = self.x.take().expect("begun session holds its input");
+        let mut nx = Vec::with_capacity(rows.len() * img_len);
+        for &r in rows {
+            nx.extend_from_slice(&x[r * img_len..(r + 1) * img_len]);
+        }
+        self.x = Some(nx);
+        if !self.logits.is_empty() {
+            self.logits = crate::sim::psbnet::gather_blocks(&self.logits, rows, old_b);
+        }
+        if let Some(f) = self.feat.take() {
+            self.feat = Some(crate::sim::psbnet::gather_blocks(&f, rows, old_b));
+        }
+        self.batch = rows.len();
+        Ok(())
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.feat.as_ref()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+}

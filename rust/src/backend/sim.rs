@@ -1,0 +1,184 @@
+//! [`SimBackend`] — the pure-rust float-carried simulator behind the
+//! unified [`Backend`] API.
+//!
+//! A session pairs a [`ProgressiveState`] (per-weight Binomial counts)
+//! with a [`SimCache`] of per-node activations and im2col lowerings, so
+//! a `refine` recomputes only the layers whose sample counts moved (or
+//! whose upstream activations changed) and re-lowers no conv whose input
+//! is clean.  Logits are bit-identical to a cache-less one-shot pass at
+//! the target plan — the cache is a pure wall-time optimization (skipped
+//! layers would have recomputed the same values from the same counts).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::precision::{PrecisionPlan, ProgressiveState};
+use crate::rng::RngKind;
+use crate::sim::psbnet::{gather_blocks, PsbNetwork, SimCache};
+use crate::sim::tensor::Tensor;
+
+use super::{Backend, CostReport, InferenceSession, StepReport};
+
+/// Float-carried simulator backend over a prepared [`PsbNetwork`].
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    net: Arc<PsbNetwork>,
+    kind: RngKind,
+}
+
+impl SimBackend {
+    /// Defaults to Philox streams: counter-based generators skip their
+    /// consumed prefix in O(1), so escalations pay only the new samples
+    /// in RNG work too, not just in gated-add accounting.
+    pub fn new(net: PsbNetwork) -> SimBackend {
+        SimBackend::from_arc(Arc::new(net))
+    }
+
+    pub fn from_arc(net: Arc<PsbNetwork>) -> SimBackend {
+        SimBackend { net, kind: RngKind::Philox }
+    }
+
+    /// Swap the generator family (the paper's RNG ablation).
+    pub fn with_rng(mut self, kind: RngKind) -> SimBackend {
+        self.kind = kind;
+        self
+    }
+
+    /// The prepared network this backend executes.
+    pub fn network(&self) -> &PsbNetwork {
+        &self.net
+    }
+
+    pub fn rng(&self) -> RngKind {
+        self.kind
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.net.input_hwc
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        plan.validate(self.net.num_capacitors, None).map_err(anyhow::Error::new)?;
+        Ok(Box::new(SimSession {
+            net: self.net.clone(),
+            kind: self.kind,
+            plan: plan.clone(),
+            state: None,
+            x: None,
+            batch: 0,
+            cache: SimCache::default(),
+            logits: Tensor::zeros(&[0]),
+            feat: None,
+            report: CostReport::default(),
+        }))
+    }
+}
+
+/// One simulator inference: progressive counts + activation cache.
+#[derive(Debug, Clone)]
+struct SimSession {
+    net: Arc<PsbNetwork>,
+    kind: RngKind,
+    plan: PrecisionPlan,
+    state: Option<ProgressiveState>,
+    x: Option<Tensor>,
+    batch: usize,
+    cache: SimCache,
+    logits: Tensor,
+    feat: Option<Tensor>,
+    report: CostReport,
+}
+
+impl SimSession {
+    fn run(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let x = self.x.as_ref().expect("caller ensured begin ran");
+        let state = self.state.as_mut().expect("caller ensured begin ran");
+        let (out, stats) = self
+            .net
+            .refine_cached(x, state, target, &mut self.cache)
+            .map_err(anyhow::Error::new)?;
+        self.logits = out.logits;
+        self.feat = out.feat;
+        let step = StepReport {
+            costs: out.costs,
+            executed_adds: stats.executed_adds,
+            nodes_recomputed: stats.nodes_recomputed,
+            nodes_reused: stats.nodes_reused,
+            cols_reused: stats.cols_reused,
+            delta_updated: 0,
+        };
+        self.report.record(step);
+        Ok(step)
+    }
+}
+
+impl InferenceSession for SimSession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_none(), "session already begun — open a new one");
+        anyhow::ensure!(x.shape.len() == 4, "input must be [B, H, W, C], got {:?}", x.shape);
+        self.state = Some(self.net.begin(self.kind, seed));
+        self.x = Some(x.clone());
+        self.batch = x.shape[0];
+        let plan = self.plan.clone();
+        let result = self.run(&plan);
+        if result.is_err() {
+            // a failed opening pass leaves no usable session state
+            self.state = None;
+            self.x = None;
+        }
+        result
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_some(), "refine before begin");
+        let step = self.run(target)?;
+        self.plan = target.clone();
+        Ok(step)
+    }
+
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        anyhow::ensure!(self.state.is_some(), "narrow before begin");
+        let old_b = self.batch;
+        if let Some(&bad) = rows.iter().find(|&&r| r >= old_b) {
+            return Err(anyhow!("row {bad} out of range (batch {old_b})"));
+        }
+        let x = self.x.take().expect("begun session holds its input");
+        self.x = Some(gather_blocks(&x, rows, old_b));
+        self.cache.narrow(rows, old_b);
+        if !self.logits.is_empty() {
+            self.logits = gather_blocks(&self.logits, rows, old_b);
+        }
+        if let Some(f) = self.feat.take() {
+            self.feat = Some(gather_blocks(&f, rows, old_b));
+        }
+        self.batch = rows.len();
+        Ok(())
+    }
+
+    fn fork(&self) -> Result<Box<dyn InferenceSession>> {
+        Ok(Box::new(self.clone()))
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.feat.as_ref()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+}

@@ -1,59 +1,72 @@
-//! The engine thread: serialized model execution behind a channel.
+//! The engine thread: serialized model execution behind a channel, over
+//! any [`crate::backend::Backend`].
 //!
-//! Two backends share one job type:
-//!
-//! * **PJRT** ([`Engine::spawn`]) — owns the [`Runtime`] plus the weight
-//!   bundles on a dedicated OS thread (PJRT client/executable handles
-//!   are raw pointers without `Send`).  Artifacts are compiled per
-//!   `(n, batch)`, so only *uniform* plans execute here and progressive
-//!   state cannot be resumed (the hardware the artifacts model would
-//!   keep its capacitor accumulators; the AOT modules are stateless).
-//! * **Simulator** ([`Engine::spawn_sim`]) — owns a prepared
-//!   [`PsbNetwork`] and executes any [`PrecisionPlan`], returning the
-//!   [`ProgressiveState`] of the pass so an escalation can `refine` it
-//!   and pay only the incremental samples.
+//! The engine owns one backend (constructed *on* the engine thread from
+//! a [`BackendFactory`] — PJRT handles are not `Send`) plus a slab of
+//! open [`InferenceSession`]s.  Jobs reference sessions by id, so the
+//! serving path's escalation is "narrow this session to the uncertain
+//! rows and refine it" — the session's capacitor state (progressive
+//! counts + cached accumulators) never leaves the engine thread.
 //!
 //! Other threads talk to the engine through an unbounded std channel;
-//! replies travel back over rendezvous channels.
+//! replies travel back over rendezvous channels.  Failures are kept
+//! twofold: each job's error is returned to its caller, *and* the most
+//! recent backend failure is recorded so a later `submit` against a
+//! dead engine can still report the root cause.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::precision::{PlanError, PrecisionPlan, ProgressiveState};
-use crate::rng::RngKind;
-use crate::runtime::{Execution, FloatBundle, PsbBundle, Runtime};
-use crate::sim::psbnet::PsbNetwork;
-use crate::sim::tensor::{dims4, Tensor};
+use crate::backend::{Backend, BackendFactory, InferenceSession};
+use crate::precision::PrecisionPlan;
+use crate::runtime::Execution;
+use crate::sim::tensor::Tensor;
 
-/// A unit of engine work: one padded batch under one precision plan.
-pub struct EngineJob {
-    /// Precision plan; `None` runs the float32 baseline module (PJRT
-    /// backend only).
-    pub plan: Option<PrecisionPlan>,
-    /// Progressive state from an earlier pass over the same weights:
-    /// the simulator backend refines it in place (charging only the
-    /// incremental samples); the PJRT backend ignores it (see module
-    /// docs) and recomputes.
-    pub resume: Option<ProgressiveState>,
-    /// Row-major `[batch, img, img, 3]` input.
-    pub x: Vec<f32>,
-    pub batch: usize,
-    pub seed: u32,
-    pub reply: mpsc::SyncSender<Result<EngineOutput>>,
+/// Engine-thread-local session handle.
+pub type SessionId = u64;
+
+/// A unit of engine work.
+pub enum EngineJob {
+    /// Open a session at `plan` and run it over one padded batch.
+    /// `keep` leaves the session open (returning its id) so the caller
+    /// can `Refine` it later; otherwise it closes after the pass.
+    Begin {
+        plan: PrecisionPlan,
+        /// Row-major `[batch, H, W, C]` input.
+        x: Vec<f32>,
+        batch: usize,
+        seed: u64,
+        keep: bool,
+        reply: mpsc::SyncSender<Result<EngineOutput>>,
+    },
+    /// Escalate an open session: optionally narrow it to a row subset
+    /// (indices into the session's current batch, output follows their
+    /// order), then refine to `plan`.  The session closes after the
+    /// pass unless `keep`.
+    Refine {
+        session: SessionId,
+        rows: Option<Vec<usize>>,
+        plan: PrecisionPlan,
+        keep: bool,
+        reply: mpsc::SyncSender<Result<EngineOutput>>,
+    },
+    /// Drop an open session (e.g. nothing escalated).
+    Close { session: SessionId },
 }
 
 /// Result of one engine pass.
+#[derive(Debug)]
 pub struct EngineOutput {
     pub exec: Execution,
-    /// Progressive state after the pass (simulator backend only) —
-    /// submit it back via [`EngineJob::resume`] to escalate.
-    pub state: Option<ProgressiveState>,
-    /// Gated adds actually charged by the pass over the rows submitted
-    /// (the coordinator submits live rows only to the sim backend).
-    /// The PJRT backend reports 0 and consumers (the coordinator's
-    /// metrics) fall back to a geometric estimate over live rows.
+    /// The session left open for escalation (`keep` jobs only).
+    pub session: Option<SessionId>,
+    /// Gated adds actually charged by the pass over the rows submitted.
+    /// Stateless backends (PJRT artifacts) report 0 and consumers (the
+    /// coordinator's metrics) fall back to a geometric estimate.
     pub gated_adds: u64,
 }
 
@@ -61,160 +74,212 @@ pub struct EngineOutput {
 pub struct Engine {
     tx: mpsc::Sender<EngineJob>,
     handle: Option<JoinHandle<()>>,
+    /// Most recent backend/session failure, for post-mortem `submit`s.
+    fail: Arc<Mutex<Option<String>>>,
 }
 
 impl Engine {
-    /// Spawn the PJRT engine thread.  Compiles nothing eagerly;
-    /// executables are compiled on first use and cached (pass `warm` to
-    /// precompile).
-    pub fn spawn(
-        artifact_dir: std::path::PathBuf,
-        psb: PsbBundle,
-        float: FloatBundle,
-        warm: Vec<(Option<u32>, usize)>,
-    ) -> Result<Engine> {
+    /// Spawn the engine thread over a backend factory.  The factory runs
+    /// on the engine thread; construction failures propagate out of
+    /// `spawn` (and are recorded for later `last_error` queries).
+    pub fn spawn(factory: BackendFactory) -> Result<Engine> {
+        let fail = Arc::new(Mutex::new(None::<String>));
+        let fail_worker = fail.clone();
         let (tx, rx) = mpsc::channel::<EngineJob>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name("psb-engine".into())
             .spawn(move || {
-                let mut rt = match Runtime::new(&artifact_dir) {
-                    Ok(rt) => rt,
+                let backend: Box<dyn Backend> = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
                     Err(e) => {
+                        *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                // fail at startup, not per job: a stub runtime (built
-                // without the pjrt feature) can load metadata but will
-                // never execute anything
-                if !cfg!(feature = "pjrt") {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!(
-                        "psb was built without the `pjrt` feature — artifacts found but \
-                         cannot execute; rebuild with `--features pjrt`, or serve through \
-                         the simulator engine (`Engine::spawn_sim` / `Coordinator::start_sim`)"
-                    )));
-                    return;
-                }
-                let mut warm_result = Ok(());
-                for (n, b) in warm {
-                    let name = match n {
-                        Some(n) => rt.meta.psb_module(n, b),
-                        None => rt.meta.float_module(b),
-                    };
-                    if let Err(e) = rt.ensure_loaded(&name) {
-                        warm_result = Err(e);
-                        break;
+                let (h, w, c) = backend.input_hwc();
+                let mut sessions: HashMap<SessionId, Box<dyn InferenceSession>> = HashMap::new();
+                let mut next_id: SessionId = 1;
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        EngineJob::Begin { plan, x, batch, seed, keep, reply } => {
+                            let result = begin_job(
+                                backend.as_ref(),
+                                (h, w, c),
+                                plan,
+                                x,
+                                batch,
+                                seed,
+                            );
+                            let result = match result {
+                                Ok((sess, out)) => {
+                                    let mut out = out;
+                                    if keep {
+                                        let id = next_id;
+                                        next_id += 1;
+                                        sessions.insert(id, sess);
+                                        out.session = Some(id);
+                                    }
+                                    Ok(out)
+                                }
+                                Err(e) => {
+                                    *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
+                                    Err(e)
+                                }
+                            };
+                            // receiver may have given up; dropping is fine
+                            let _ = reply.send(result);
+                        }
+                        EngineJob::Refine { session, rows, plan, keep, reply } => {
+                            let result = match sessions.remove(&session) {
+                                None => Err(anyhow!("unknown engine session {session}")),
+                                Some(mut sess) => match refine_job(&mut *sess, rows, &plan) {
+                                    Ok(mut out) => {
+                                        if keep {
+                                            sessions.insert(session, sess);
+                                            out.session = Some(session);
+                                        }
+                                        Ok(out)
+                                    }
+                                    Err(e) => Err(e),
+                                },
+                            };
+                            if let Err(e) = &result {
+                                *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
+                            }
+                            let _ = reply.send(result);
+                        }
+                        EngineJob::Close { session } => {
+                            sessions.remove(&session);
+                        }
                     }
                 }
-                let failed = warm_result.is_err();
-                let _ = ready_tx.send(warm_result);
-                if failed {
-                    return;
-                }
-                while let Ok(job) = rx.recv() {
-                    let result = match &job.plan {
-                        Some(plan) => match plan.uniform_n() {
-                            Some(n) => rt
-                                .run_psb(n, job.batch, &job.x, job.seed, &psb)
-                                .map(|exec| EngineOutput { exec, state: None, gated_adds: 0 }),
-                            // fixed-n artifacts cannot express mixed plans
-                            None => Err(anyhow::Error::new(PlanError::NotUniform)),
-                        },
-                        None => rt
-                            .run_float(job.batch, &job.x, &float)
-                            .map(|exec| EngineOutput { exec, state: None, gated_adds: 0 }),
-                    };
-                    // receiver may have given up; dropping the reply is fine
-                    let _ = job.reply.send(result);
-                }
             })?;
-        ready_rx.recv().map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, handle: Some(handle) })
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Engine { tx, handle: Some(handle), fail })
     }
 
-    /// Spawn the simulator engine thread: pure-rust capacitor execution
-    /// of `net` with progressive state reuse.  Needs no artifacts, so
-    /// the coordinator can serve (and its tests run) anywhere.
-    pub fn spawn_sim(net: PsbNetwork) -> Result<Engine> {
-        anyhow::ensure!(
-            net.feat_node.is_some(),
-            "sim engine needs a feat node for the escalation signal"
-        );
-        let (tx, rx) = mpsc::channel::<EngineJob>();
-        let handle = std::thread::Builder::new()
-            .name("psb-sim-engine".into())
-            .spawn(move || {
-                let (h, w, c) = net.input_hwc;
-                while let Ok(job) = rx.recv() {
-                    let result = run_sim_job(&net, h, w, c, job.plan, job.resume, job.x, job.batch, job.seed);
-                    let _ = job.reply.send(result);
-                }
-            })?;
-        Ok(Engine { tx, handle: Some(handle) })
-    }
-
-    /// Enqueue a job (non-blocking).
+    /// Enqueue a job (non-blocking).  A send against a dead engine
+    /// reports the recorded root cause, not just "shut down".
     pub fn submit(&self, job: EngineJob) -> Result<()> {
-        self.tx.send(job).map_err(|_| anyhow::anyhow!("engine thread has shut down"))
+        self.tx.send(job).map_err(|_| match self.last_error() {
+            Some(cause) => {
+                anyhow!("engine thread has shut down (last backend failure: {cause})")
+            }
+            None => anyhow!("engine thread has shut down"),
+        })
     }
 
-    /// Convenience: run one batch and wait for the result.
-    pub fn run(
+    /// Most recent backend/session failure observed by the engine.
+    pub fn last_error(&self) -> Option<String> {
+        self.fail.lock().unwrap().clone()
+    }
+
+    /// Convenience: run one batch in a throwaway session and wait.
+    pub fn run_once(
         &self,
-        plan: Option<PrecisionPlan>,
-        resume: Option<ProgressiveState>,
+        plan: PrecisionPlan,
         x: Vec<f32>,
         batch: usize,
-        seed: u32,
+        seed: u64,
     ) -> Result<EngineOutput> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.submit(EngineJob { plan, resume, x, batch, seed, reply })?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped the job"))?
+        self.submit(EngineJob::Begin { plan, x, batch, seed, keep: false, reply })?;
+        self.wait(rx)
+    }
+
+    /// Run one batch, keeping the session open for escalation.
+    pub fn begin_session(
+        &self,
+        plan: PrecisionPlan,
+        x: Vec<f32>,
+        batch: usize,
+        seed: u64,
+    ) -> Result<EngineOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob::Begin { plan, x, batch, seed, keep: true, reply })?;
+        self.wait(rx)
+    }
+
+    /// Escalate (and close) an open session, optionally narrowed to a
+    /// row subset first.
+    pub fn refine_session(
+        &self,
+        session: SessionId,
+        rows: Option<Vec<usize>>,
+        plan: PrecisionPlan,
+    ) -> Result<EngineOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob::Refine { session, rows, plan, keep: false, reply })?;
+        self.wait(rx)
+    }
+
+    /// Drop an open session.
+    pub fn close_session(&self, session: SessionId) -> Result<()> {
+        self.submit(EngineJob::Close { session })
+    }
+
+    fn wait(&self, rx: mpsc::Receiver<Result<EngineOutput>>) -> Result<EngineOutput> {
+        rx.recv().map_err(|_| match self.last_error() {
+            Some(cause) => anyhow!("engine dropped the job (last backend failure: {cause})"),
+            None => anyhow!("engine dropped the job"),
+        })?
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_sim_job(
-    net: &PsbNetwork,
-    h: usize,
-    w: usize,
-    c: usize,
-    plan: Option<PrecisionPlan>,
-    resume: Option<ProgressiveState>,
+fn begin_job(
+    backend: &dyn Backend,
+    (h, w, c): (usize, usize, usize),
+    plan: PrecisionPlan,
     x: Vec<f32>,
     batch: usize,
-    seed: u32,
-) -> Result<EngineOutput> {
-    let plan = plan
-        .ok_or_else(|| anyhow::anyhow!("sim engine has no float32 module; submit a PSB plan"))?;
+    seed: u64,
+) -> Result<(Box<dyn InferenceSession>, EngineOutput)> {
     anyhow::ensure!(
         x.len() == batch * h * w * c,
         "input size {} != batch {batch} × {h}×{w}×{c}",
         x.len()
     );
     let xt = Tensor::from_vec(x, &[batch, h, w, c]);
-    let mut state = match resume {
-        Some(s) => s,
-        // Philox: counter-based streams skip their consumed prefix in
-        // O(1), so serving-path escalations pay only the new samples in
-        // RNG work too, not just in gated-add accounting
-        None => net.begin(RngKind::Philox, seed as u64),
+    let mut sess = backend.open(&plan)?;
+    let step = sess.begin(&xt, seed)?;
+    let out = output_of(sess.as_ref(), step.costs.gated_adds);
+    Ok((sess, out))
+}
+
+fn refine_job(
+    sess: &mut dyn InferenceSession,
+    rows: Option<Vec<usize>>,
+    plan: &PrecisionPlan,
+) -> Result<EngineOutput> {
+    if let Some(rows) = rows {
+        sess.narrow(&rows)?;
+    }
+    let step = sess.refine(plan)?;
+    Ok(output_of(sess, step.costs.gated_adds))
+}
+
+fn output_of(sess: &dyn InferenceSession, gated_adds: u64) -> EngineOutput {
+    let logits = sess.logits();
+    let (feat, feat_shape) = match sess.feat() {
+        Some(f) => {
+            let s = &f.shape;
+            let dim = |i: usize| s.get(i).copied().unwrap_or(1);
+            (f.data.clone(), [dim(0), dim(1), dim(2), dim(3)])
+        }
+        None => (Vec::new(), [logits.shape.first().copied().unwrap_or(0), 0, 0, 0]),
     };
-    let out = net.refine(&xt, &mut state, &plan)?;
-    let feat = out
-        .feat
-        .ok_or_else(|| anyhow::anyhow!("network lacks a feat node"))?;
-    let (fb, fh, fw, fc) = dims4(&feat);
-    Ok(EngineOutput {
-        exec: Execution {
-            logits: out.logits.data,
-            feat: feat.data,
-            feat_shape: [fb, fh, fw, fc],
-        },
-        state: Some(state),
-        gated_adds: out.costs.gated_adds,
-    })
+    EngineOutput {
+        exec: Execution { logits: logits.data.clone(), feat, feat_shape },
+        session: None,
+        gated_adds,
+    }
 }
 
 impl Drop for Engine {

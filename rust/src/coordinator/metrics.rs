@@ -67,6 +67,12 @@ pub struct Metrics {
     /// Samples carried over from stage 1 into an escalation instead of
     /// being recomputed — the progressive-refinement win (Sec. 4.5).
     pub samples_reused: AtomicU64,
+    /// Engine/backend failures observed by the stage handlers (the
+    /// affected requests' reply channels close; see
+    /// [`Self::last_engine_error`] for the root cause).
+    pub engine_errors: AtomicU64,
+    /// Root cause of the most recent engine failure.
+    pub last_engine_error: std::sync::Mutex<Option<String>>,
 }
 
 impl Metrics {
@@ -76,6 +82,12 @@ impl Metrics {
 
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record an engine failure: bump the counter and keep the message.
+    pub fn record_engine_error(&self, err: &anyhow::Error) {
+        Self::inc(&self.engine_errors);
+        *self.last_engine_error.lock().unwrap() = Some(format!("{err:#}"));
     }
 
     /// Mean rows per dispatched batch (occupancy diagnostics).

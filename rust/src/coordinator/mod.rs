@@ -8,24 +8,26 @@
 //! policy (Sec. 4.5 lifted to the request level):
 //!
 //! ```text
-//! client ── submit ──► [dynamic batcher] ──► engine(plan: n_low) ──► ProgressiveState
+//! client ── submit ──► [dynamic batcher] ──► engine.begin(plan: n_low) ──► open session
 //!                                               │ entropy of last conv
 //!                            confident ◄────────┤ (Scheduler: a PrecisionPolicy)
 //!                                               ▼ uncertain
-//!                      [escalation group] ──► engine.refine(state, plan: n_high)
+//!                      [escalation group] ──► engine.refine(session ∖ rows, plan: n_high)
 //! ```
 //!
-//! * the **engine** serializes model execution on a dedicated thread —
-//!   either the PJRT runtime over AOT artifacts ([`Engine::spawn`]) or
-//!   the pure-rust simulator with true progressive-state reuse
-//!   ([`Engine::spawn_sim`]);
+//! * the **engine** serializes model execution on a dedicated thread
+//!   over any [`crate::backend::Backend`] — the PJRT runtime over AOT
+//!   artifacts ([`Coordinator::start`]) or the pure-rust simulator with
+//!   true session-state reuse ([`Coordinator::start_sim`]).  Sessions
+//!   (progressive counts + cached per-node accumulators) live on the
+//!   engine thread and are escalated by id;
 //! * the **batcher** collects requests up to the artifact batch size with
 //!   a linger timeout and zero-pads partial batches;
 //! * the **scheduler** implements [`crate::precision::PrecisionPolicy`]:
 //!   it plans each request's final precision from the mean last-conv
-//!   entropy, and the high-entropy fraction escalates by *refining* the
-//!   stage-1 capacitor state — batch-level computational attention with
-//!   the network itself as the proposal mechanism.
+//!   entropy, and the high-entropy fraction escalates by *narrowing and
+//!   refining* the stage-1 session — batch-level computational attention
+//!   with the network itself as the proposal mechanism.
 
 pub mod batcher;
 pub mod engine;
@@ -34,7 +36,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatcherConfig;
-pub use engine::{Engine, EngineJob, EngineOutput};
+pub use engine::{Engine, EngineJob, EngineOutput, SessionId};
 pub use metrics::Metrics;
 pub use scheduler::{EscalationPolicy, SchedulerStats};
 pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig};

@@ -201,6 +201,7 @@ mod tests {
         PlanContext {
             num_layers: 1,
             layer_macs: Vec::new(),
+            layer_var: Vec::new(),
             batch: 1,
             input_hw: (0, 0),
             feat: None,

@@ -4,15 +4,16 @@
 //! serializes model execution, stage 1 batches on its own thread, and a
 //! stage-2 worker drains escalation groups.
 //!
-//! Escalation is *progressive*: the stage-1 pass returns the batch's
-//! [`ProgressiveState`] (simulator backend), and the escalated rows of
-//! that batch are refined against it in one group — paying only the
-//! `n_high − n_low` incremental samples instead of a fresh high-`n`
-//! job.  Rows of one stage-1 batch share one filter draw (the paper's
-//! batch-shared sampling), so their state is reusable for any subset of
-//! the batch; regrouping escalations *across* stage-1 batches would mix
-//! incompatible states, which is why stage 2 dispatches per source
-//! batch instead of re-batching.
+//! Escalation is *session-native*: the stage-1 pass leaves its
+//! [`crate::backend::InferenceSession`] open on the engine thread, and
+//! stage 2 narrows that session to the uncertain rows and refines it in
+//! place — the capacitor state (progressive counts + cached per-node
+//! accumulators) never crosses a thread, and the escalated rows pay only
+//! the `n_high − n_low` incremental samples.  Rows of one stage-1 batch
+//! share one filter draw (the paper's batch-shared sampling), so any
+//! subset can be narrowed out; regrouping escalations *across* stage-1
+//! batches would mix incompatible capacitor states, which is why stage 2
+//! dispatches per source session instead of re-batching.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -21,12 +22,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::backend::{pjrt_factory, sim_factory};
 use crate::coordinator::batcher::{run_batcher, BatcherConfig, FormedBatch, Pending};
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, SessionId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
-use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy, ProgressiveState};
-use crate::runtime::{ArtifactMeta, FloatBundle, PsbBundle};
+use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy};
+use crate::rng::RngKind;
+use crate::runtime::{ArtifactMeta, PsbBundle};
 use crate::sim::layers::softmax_rows;
 use crate::sim::psbnet::PsbNetwork;
 
@@ -73,14 +76,13 @@ struct RequestCtx {
     start: Instant,
 }
 
-/// One stage-1 batch's escalations, refined together against the
-/// batch's shared progressive state.
+/// One stage-1 session's escalations: the rows to narrow the open
+/// engine session to, refined together in one group.
 struct EscalationGroup {
-    /// gathered rows, `tags.len() × image_len`
-    x: Vec<f32>,
+    session: SessionId,
+    /// Row indices into the stage-1 batch, in reply order.
+    rows: Vec<usize>,
     tags: Vec<(RequestCtx, f32)>,
-    resume: Option<ProgressiveState>,
-    seed: u32,
 }
 
 /// Handle to a running coordinator.  Threads shut down when the handle
@@ -97,35 +99,30 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start against AOT artifacts on the PJRT engine.  Artifacts are
+    /// Start against AOT artifacts on the PJRT backend.  Artifacts are
     /// fixed-`(n, batch)` modules, so escalations re-execute at `n_high`
     /// (the reuse accounting still reflects what the modeled hardware's
     /// capacitor accumulators would pay — Sec. 4.5).
-    pub fn start(cfg: CoordinatorConfig, psb: PsbBundle, float: FloatBundle) -> Result<Coordinator> {
+    pub fn start(cfg: CoordinatorConfig, psb: PsbBundle) -> Result<Coordinator> {
         let meta = ArtifactMeta::load(&cfg.artifact_dir)?;
         let image_len = meta.image * meta.image * 3;
         let macs_per_image = macs_per_image(&meta);
         let batch = cfg.batcher.batch_size;
-        let engine = Engine::spawn(
-            cfg.artifact_dir.clone(),
-            psb,
-            float,
-            vec![(Some(cfg.policy.n_low), batch), (Some(cfg.policy.n_high), batch)],
-        )?;
-        Self::start_inner(
-            cfg,
-            engine,
-            image_len,
-            meta.num_classes,
-            macs_per_image,
-            Some(batch),
-        )
+        let warm = vec![(cfg.policy.n_low, batch), (cfg.policy.n_high, batch)];
+        let engine =
+            Engine::spawn(pjrt_factory(cfg.artifact_dir.clone(), psb, batch, warm))?;
+        Self::start_inner(cfg, engine, image_len, meta.num_classes, macs_per_image, true)
     }
 
-    /// Start against the pure-rust simulator engine: no artifacts
-    /// needed, and escalations genuinely refine the stage-1
-    /// [`ProgressiveState`] (only the incremental samples are drawn).
+    /// Start against the pure-rust simulator backend: no artifacts
+    /// needed, and escalations genuinely refine the stage-1 session
+    /// (only the incremental samples are drawn, against the cached
+    /// per-node activations).
     pub fn start_sim(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
+        anyhow::ensure!(
+            net.feat_node.is_some(),
+            "sim serving needs a feat node for the escalation signal"
+        );
         let (h, w, c) = net.input_hwc;
         let image_len = h * w * c;
         let num_classes = net
@@ -138,8 +135,8 @@ impl Coordinator {
             })
             .ok_or_else(|| anyhow::anyhow!("network has no capacitor layers"))?;
         let macs_per_image: u64 = net.capacitor_macs(1).iter().sum();
-        let engine = Engine::spawn_sim(net)?;
-        Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, None)
+        let engine = Engine::spawn(sim_factory(net, RngKind::Philox))?;
+        Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
     fn start_inner(
@@ -148,7 +145,7 @@ impl Coordinator {
         image_len: usize,
         num_classes: usize,
         macs_per_image: u64,
-        pad_to: Option<usize>,
+        pad_batches: bool,
     ) -> Result<Coordinator> {
         let engine = Arc::new(engine);
         let metrics = Arc::new(Metrics::default());
@@ -160,7 +157,9 @@ impl Coordinator {
 
         let mut threads = Vec::new();
 
-        // Stage 2 worker: escalation groups, one engine job per group.
+        // Stage 2 worker: one engine refine per escalation group.  Each
+        // group is bound to its own stage-1 session (shared filter
+        // draws), so groups dispatch as they arrive.
         {
             let ctx = StageCtx {
                 engine: engine.clone(),
@@ -170,56 +169,11 @@ impl Coordinator {
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
-                pad_to,
-                linger: cfg.batcher.linger,
+                pad_batches,
             };
             threads.push(
                 std::thread::Builder::new().name("psb-stage2".into()).spawn(move || {
-                    // Stateless (PJRT) groups carry no progressive state,
-                    // so escalations from different stage-1 batches can
-                    // still coalesce up to the artifact batch size;
-                    // stateful (sim) groups must run against their own
-                    // batch's streams and go solo.
-                    let mut pending: Option<EscalationGroup> = None;
-                    loop {
-                        let mut group = match pending.take() {
-                            Some(g) => g,
-                            None => match stage2_rx.recv() {
-                                Ok(g) => g,
-                                Err(_) => break,
-                            },
-                        };
-                        if group.resume.is_none() {
-                            if let Some(cap) = ctx.pad_to {
-                                // linger briefly like the stage-1 batcher:
-                                // groups arriving moments apart merge into
-                                // one (padded, fixed-batch) artifact run
-                                let deadline = Instant::now() + ctx.linger;
-                                while group.tags.len() < cap {
-                                    let now = Instant::now();
-                                    let next = if now >= deadline {
-                                        stage2_rx.try_recv().ok()
-                                    } else {
-                                        stage2_rx.recv_timeout(deadline - now).ok()
-                                    };
-                                    match next {
-                                        Some(next)
-                                            if next.resume.is_none()
-                                                && group.tags.len() + next.tags.len()
-                                                    <= cap =>
-                                        {
-                                            group.x.extend_from_slice(&next.x);
-                                            group.tags.extend(next.tags);
-                                        }
-                                        Some(next) => {
-                                            pending = Some(next);
-                                            break;
-                                        }
-                                        None => break,
-                                    }
-                                }
-                            }
-                        }
+                    while let Ok(group) = stage2_rx.recv() {
                         handle_stage2(&ctx, group);
                     }
                 })?,
@@ -236,8 +190,7 @@ impl Coordinator {
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
-                pad_to,
-                linger: cfg.batcher.linger,
+                pad_batches,
             };
             let scheduler = scheduler.clone();
             let bcfg = cfg.batcher;
@@ -329,12 +282,10 @@ struct StageCtx {
     nc: usize,
     macs: u64,
     image_len: usize,
-    /// PJRT artifacts are compiled for a fixed batch: pad stage-2 groups
-    /// up to this many rows.  `None` (simulator) runs exact-size groups.
-    pad_to: Option<usize>,
-    /// How long the stage-2 worker waits for more stateless groups to
-    /// coalesce before dispatching (mirrors the stage-1 batcher linger).
-    linger: Duration,
+    /// PJRT artifacts are compiled for a fixed batch: submit the padded
+    /// stage-1 batch as-is.  The simulator runs (and bills) live rows
+    /// only.
+    pad_batches: bool,
 }
 
 fn handle_stage1(
@@ -347,18 +298,20 @@ fn handle_stage1(
     Metrics::inc(&ctx.metrics.batches);
     Metrics::add(&ctx.metrics.batched_rows, rows as u64);
     Metrics::inc(&ctx.metrics.engine_calls);
-    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32;
+    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed);
     let plan = PrecisionPlan::uniform(ctx.policy.n_low);
     // PJRT artifacts are compiled for the padded batch; the simulator
     // runs (and bills) live rows only
-    let (x1, total_rows) = match ctx.pad_to {
-        Some(_) => (batch.x.clone(), batch.x.len() / ctx.image_len),
-        None => (batch.x[..rows * ctx.image_len].to_vec(), rows),
+    let (x1, total_rows) = if ctx.pad_batches {
+        (batch.x.clone(), batch.x.len() / ctx.image_len)
+    } else {
+        (batch.x[..rows * ctx.image_len].to_vec(), rows)
     };
-    let out = match ctx.engine.run(Some(plan), None, x1, total_rows, seed) {
+    let out = match ctx.engine.begin_session(plan, x1, total_rows, seed) {
         Ok(o) => o,
         Err(err) => {
             eprintln!("stage1 engine error: {err:#}");
+            ctx.metrics.record_engine_error(&err);
             return; // replies drop; callers observe closed channels
         }
     };
@@ -371,11 +324,12 @@ fn handle_stage1(
         if out.gated_adds > 0 { out.gated_adds } else { estimated },
     );
     Metrics::add(&ctx.metrics.samples_paid, ctx.policy.n_low as u64 * rows as u64);
+    let session = out.session;
     let exec = out.exec;
     let [_, fh, fw, fc] = exec.feat_shape;
     let feat_len = fh * fw * fc;
     let probs = softmax_rows(&exec.logits, ctx.nc);
-    let mut group_x = Vec::new();
+    let mut group_rows = Vec::new();
     let mut group_tags = Vec::new();
     for (row, req) in batch.tags.into_iter().enumerate() {
         let feat = &exec.feat[row * feat_len..(row + 1) * feat_len];
@@ -388,9 +342,9 @@ fn handle_stage1(
             .plan(&PlanContext::for_request(entropy))
             .expect("request context carries the entropy signal");
         if target.max_n() > ctx.policy.n_low {
-            group_x.extend_from_slice(&batch.x[row * ctx.image_len..(row + 1) * ctx.image_len]);
             Metrics::inc(&ctx.metrics.escalated);
             ctx.metrics.stage1_latency.record(req.start.elapsed());
+            group_rows.push(row);
             group_tags.push((req, entropy));
         } else {
             let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
@@ -409,15 +363,22 @@ fn handle_stage1(
             });
         }
     }
-    if !group_tags.is_empty() {
-        // escalations of this batch share the stage-1 state (one filter
-        // draw per batch), so they refine it together in one group
-        let _ = stage2.send(EscalationGroup {
-            x: group_x,
-            tags: group_tags,
-            resume: out.state,
-            seed,
-        });
+    match session {
+        Some(id) if !group_tags.is_empty() => {
+            // escalations of this batch share the stage-1 session (one
+            // filter draw per batch): narrow it to them and refine
+            let _ = stage2.send(EscalationGroup { session: id, rows: group_rows, tags: group_tags });
+        }
+        Some(id) => {
+            let _ = ctx.engine.close_session(id);
+        }
+        None => {
+            if !group_tags.is_empty() {
+                eprintln!("stage1: engine returned no session handle; dropping escalations");
+                ctx.metrics
+                    .record_engine_error(&anyhow::anyhow!("engine returned no session handle"));
+            }
+        }
     }
 }
 
@@ -428,37 +389,25 @@ fn handle_stage2(ctx: &StageCtx, group: EscalationGroup) {
     Metrics::inc(&ctx.metrics.batches);
     Metrics::add(&ctx.metrics.batched_rows, rows as u64);
     Metrics::inc(&ctx.metrics.engine_calls);
-    let mut x = group.x;
-    let total_rows = match ctx.pad_to {
-        Some(b) if rows < b => {
-            x.resize(b * ctx.image_len, 0.0);
-            b
-        }
-        _ => rows,
-    };
-    let seed = match &group.resume {
-        // refining a state replays its own streams; seed is embedded
-        Some(_) => group.seed,
-        None => ctx.seed_ctr.fetch_add(1, Ordering::Relaxed) as u32,
-    };
     let plan = PrecisionPlan::uniform(n_high);
-    let resumed = group.resume.is_some();
-    let out = match ctx.engine.run(Some(plan), group.resume, x, total_rows, seed) {
+    let out = match ctx.engine.refine_session(group.session, Some(group.rows), plan) {
         Ok(o) => o,
         Err(err) => {
             eprintln!("stage2 engine error: {err:#}");
+            ctx.metrics.record_engine_error(&err);
             return;
         }
     };
-    // accounting only after the pass ran.  With a resumed state the sim
-    // engine measured the true incremental cost; otherwise (PJRT,
-    // stateless artifacts) estimate it — still the incremental share,
-    // per the paper's progressive accounting: the n_low samples from
-    // stage 1 are reused, escalation costs only (n_high − n_low).
+    // accounting only after the pass ran.  The sim backend measured the
+    // true incremental cost of refining the narrowed session; PJRT
+    // (stateless artifacts) reports none and we estimate — still the
+    // incremental share, per the paper's progressive accounting: the
+    // n_low samples from stage 1 are reused, escalation costs only
+    // (n_high − n_low).
     let estimated = ctx.macs * (n_high - n_low) as u64 * rows as u64;
     Metrics::add(
         &ctx.metrics.gated_adds,
-        if resumed && out.gated_adds > 0 { out.gated_adds } else { estimated },
+        if out.gated_adds > 0 { out.gated_adds } else { estimated },
     );
     Metrics::add(&ctx.metrics.samples_paid, (n_high - n_low) as u64 * rows as u64);
     Metrics::add(&ctx.metrics.samples_reused, n_low as u64 * rows as u64);

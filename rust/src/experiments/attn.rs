@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::attention::{adaptive_forward_with, Threshold};
+use crate::backend::SimBackend;
 use crate::experiments::table1::evaluate_attention;
 use crate::sim::layers::argmax_rows;
 use crate::experiments::{train_model, ExpConfig};
@@ -19,7 +20,7 @@ use crate::sim::train::evaluate_psb;
 pub fn run(cfg: &ExpConfig) -> Result<()> {
     let data = cfg.dataset();
     let (net, _) = train_model("resnet_mini", &data, cfg);
-    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
 
     println!("Attention headline: spatial two-stage vs flat sampling");
     let mut rows = Vec::new();
@@ -75,7 +76,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
 
     // layer-wise adaption: front-loaded vs back-loaded sample budgets
     println!("\nLayer-wise adaption (same mean budget as flat psb16):");
-    let caps = psb.num_capacitors;
+    let caps = psb.network().num_capacitors;
     let schedules: Vec<(&str, Vec<u32>)> = vec![
         ("uniform16", vec![16; caps]),
         ("front-heavy", ramp(caps, 32, 8)),

@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::backend::SimBackend;
 use crate::experiments::{train_model, ExpConfig};
 use crate::precision::PrecisionPlan;
 use crate::sim::psbnet::{PsbNetwork, PsbOptions};
@@ -44,7 +45,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
             (net, acc)
         };
         let float_eval = evaluate(&mut net, &data);
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         print!("{label:>10}  float={float_eval:.3}  psb:");
         let mut cells = vec![format!("{label}"), format!("{float_acc:.4}")];
         for &en in &eval_ns {

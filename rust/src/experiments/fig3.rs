@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 
+use crate::backend::SimBackend;
 use crate::experiments::{train_model, ExpConfig};
 use crate::models::MODEL_NAMES;
 use crate::precision::PrecisionPlan;
@@ -32,10 +33,10 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     for name in MODEL_NAMES {
         let (mut net, _) = train_model(name, &data, cfg);
         let float_acc = evaluate(&mut net, &data);
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         let mut accs = Vec::new();
         for &n in &eval_ns {
-            let (acc, _) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
+            let (acc, _) = evaluate_psb(&backend, &data, &PrecisionPlan::uniform(n), cfg.seed);
             accs.push(acc);
         }
         println!(

@@ -10,6 +10,7 @@
 use anyhow::Result;
 
 use crate::attention::{mean_threshold_mask, pixel_entropy};
+use crate::backend::{Backend, InferenceSession as _, SimBackend};
 use crate::experiments::{train_model, ExpConfig};
 use crate::precision::PrecisionPlan;
 use crate::sim::psbnet::{PsbNetwork, PsbOptions};
@@ -32,27 +33,31 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     let runs = if cfg.quick { 20 } else { 100 };
     let psb = PsbNetwork::prepare(&net, PsbOptions::default());
     // The PSB graph mirrors the folded float graph node-for-node, so the
-    // same indices address the corresponding activations; we re-run the
-    // full forward and read `feat` (last conv) plus recompute the first
-    // conv from logits path — easiest faithful probe: instrument via
-    // feat_node for last layer and a temporary feat_node for the first.
+    // same indices address the corresponding activations; we run full
+    // backend sessions and read `feat` (last conv), plus a second
+    // backend whose feat_node is retargeted at the first conv.
     let mut first_err = Tensor::zeros(&err_shape(&float_first));
     let mut last_err = Tensor::zeros(&err_shape(&float_last));
     let mut psb_first = psb.clone();
     psb_first.feat_node = Some(first_idx);
+    let backend = SimBackend::new(psb);
+    let backend_first = SimBackend::new(psb_first);
+    let probe = |be: &SimBackend, n: u32, seed: u64| -> Result<Tensor> {
+        let mut sess = be.open(&PrecisionPlan::uniform(n))?;
+        sess.begin(&x, seed)?;
+        Ok(sess.feat().expect("feat node designated").clone())
+    };
     for run in 0..runs {
         let seed = cfg.seed + run as u64;
-        let out_last = psb.forward(&x, &PrecisionPlan::uniform(2), seed)?;
-        accumulate_rel_err(&mut last_err, out_last.feat.as_ref().unwrap(), &float_last);
-        let out_first = psb_first.forward(&x, &PrecisionPlan::uniform(2), seed)?;
-        accumulate_rel_err(&mut first_err, out_first.feat.as_ref().unwrap(), &float_first);
+        accumulate_rel_err(&mut last_err, &probe(&backend, 2, seed)?, &float_last);
+        accumulate_rel_err(&mut first_err, &probe(&backend_first, 2, seed)?, &float_first);
     }
     first_err = first_err.scale(1.0 / runs as f32);
     last_err = last_err.scale(1.0 / runs as f32);
 
     // entropy + mask at psb8 (the attention proposal pass)
-    let out8 = psb.forward(&x, &PrecisionPlan::uniform(8), cfg.seed ^ 0xabc)?;
-    let entropy = pixel_entropy(out8.feat.as_ref().unwrap());
+    let feat8 = probe(&backend, 8, cfg.seed ^ 0xabc)?;
+    let entropy = pixel_entropy(&feat8);
     let mask = mean_threshold_mask(&entropy);
     let interesting = mask.iter().filter(|&&m| m).count() as f32 / mask.len() as f32;
     println!(

@@ -11,6 +11,7 @@
 use anyhow::Result;
 
 use crate::attention::adaptive_forward;
+use crate::backend::SimBackend;
 use crate::costs::CostCounter;
 use crate::data::Dataset;
 use crate::experiments::{train_model, ExpConfig};
@@ -41,7 +42,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         acc: float_acc,
         gated_adds: 0,
     });
-    let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+    let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
     let base_ns: &[u32] = if cfg.quick { &[8, 16] } else { &[8, 16, 32, 64] };
     let mut psb16_cost = 0u64;
     for &n in base_ns {
@@ -66,7 +67,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         let mut pruned = net.clone();
         let report = prune_global(&mut pruned, frac);
         let pf_acc = evaluate(&mut pruned, &data);
-        let psb_p = PsbNetwork::prepare(&pruned, PsbOptions::default());
+        let psb_p = SimBackend::new(PsbNetwork::prepare(&pruned, PsbOptions::default()));
         let (acc, costs) = evaluate_psb(&psb_p, &data, &PrecisionPlan::uniform(16), cfg.seed);
         let tag = format!("pruning {:.0}%", frac * 100.0);
         rows.push(Row { experiment: tag.clone(), system: "float32".into(), acc: pf_acc, gated_adds: 0 });
@@ -76,7 +77,10 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
 
     // -- probability discretization -------------------------------------------
     for bits in [1u32, 2, 3, 4, 6] {
-        let psb_d = PsbNetwork::prepare(&net, PsbOptions { prob_bits: Some(bits), ..Default::default() });
+        let psb_d = SimBackend::new(PsbNetwork::prepare(
+            &net,
+            PsbOptions { prob_bits: Some(bits), ..Default::default() },
+        ));
         let (acc, costs) = evaluate_psb(&psb_d, &data, &PrecisionPlan::uniform(16), cfg.seed);
         rows.push(Row {
             experiment: format!("{bits}-bit probs"),
@@ -101,8 +105,10 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     {
         let mut pruned = net.clone();
         prune_global(&mut pruned, 0.50); // capacity-scaled (see above)
-        let psb_c =
-            PsbNetwork::prepare(&pruned, PsbOptions { prob_bits: Some(4), ..Default::default() });
+        let psb_c = SimBackend::new(PsbNetwork::prepare(
+            &pruned,
+            PsbOptions { prob_bits: Some(4), ..Default::default() },
+        ));
         for (n_low, n_high) in [(8u32, 16u32), (16, 32)] {
             let (acc, costs) = evaluate_attention(&psb_c, &data, n_low, n_high, cfg.seed);
             rows.push(Row {
@@ -141,7 +147,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
 /// Accuracy + total two-stage cost of the attention mechanism over the
 /// test set (Table 1 "attention" rows).
 pub fn evaluate_attention(
-    psb: &PsbNetwork,
+    psb: &SimBackend,
     data: &Dataset,
     n_low: u32,
     n_high: u32,

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::backend::{Backend, InferenceSession as _, SimBackend};
 use crate::costs::{break_even_n, table2, CostCounter};
 use crate::data::SynthConfig;
 use crate::experiments::ExpConfig;
@@ -52,9 +53,10 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
         let mut rng = Xorshift128Plus::seed_from(cfg.seed);
         let mut net = crate::models::by_name(name, 32, &mut rng);
         settle(&mut net, &x);
-        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let backend = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
         let cost_at = |n: u32| -> CostCounter {
-            psb.forward(&x, &PrecisionPlan::uniform(n), 1).expect("uniform plan").costs
+            let mut sess = backend.open(&PrecisionPlan::uniform(n)).expect("uniform plan");
+            sess.begin(&x, 1).expect("one-image pass").costs
         };
         let c8 = cost_at(8);
         let c16 = cost_at(16);

@@ -23,21 +23,32 @@
 //!   sample counts and knows its gated-add cost;
 //! * a [`precision::PrecisionPolicy`] chooses plans — built-ins cover
 //!   uniform sampling, layer-wise adaption, entropy-masked spatial
-//!   attention (Sec. 4.5) and budget-constrained allocation, and the
-//!   serving scheduler implements the same trait;
+//!   attention (Sec. 4.5) and budget-constrained allocation (with a
+//!   water-filling per-layer allocator), and the serving scheduler
+//!   implements the same trait;
 //! * a [`precision::ProgressiveState`] carries the capacitor layers'
 //!   accumulated Binomial counts, so escalating precision *adds*
-//!   `n_high − n_low` samples instead of recomputing
-//!   ([`sim::PsbNetwork::refine`]) — logits are bit-identical to a
-//!   one-shot full-precision pass (Eq. 8–10's additivity), at the cost
-//!   of only the incremental samples.  The coordinator exploits this
-//!   for cheap-pass → entropy → escalate serving.
+//!   `n_high − n_low` samples instead of recomputing — logits are
+//!   bit-identical to a one-shot full-precision pass (Eq. 8–10's
+//!   additivity), at the cost of only the incremental samples.
 //!
-//! See `docs/PRECISION.md` for the design and the migration notes from
-//! the old `Precision` enum, `DESIGN.md` for the experiment index and
-//! `EXPERIMENTS.md` for measured results.
+//! ## Execution
+//!
+//! Everything executes through one backend abstraction ([`backend`]):
+//! a [`backend::Backend`] opens [`backend::InferenceSession`]s that own
+//! the resumable capacitor state (progressive counts *plus* cached
+//! per-node partial accumulators), so `refine` is incremental in
+//! wall-time too.  Implementations: [`backend::SimBackend`] (float
+//! simulation), [`backend::IntKernel`] (pure integer shift-add — the
+//! paper's deployment datapath as a CPU reference) and
+//! [`backend::PjrtBackend`] (AOT artifacts, feature `pjrt`).  The
+//! coordinator serves any of them; see `docs/BACKENDS.md`.
+//!
+//! See `docs/PRECISION.md` for the precision API design, `DESIGN.md`
+//! for the experiment index and `EXPERIMENTS.md` for measured results.
 
 pub mod attention;
+pub mod backend;
 pub mod coordinator;
 pub mod costs;
 pub mod data;

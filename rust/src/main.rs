@@ -194,7 +194,7 @@ fn serve(
     // the PJRT engine needs both the compiled artifacts AND the pjrt
     // cargo feature; a default build always serves through the simulator
     let coord = if cfg!(feature = "pjrt") && artifacts.join("meta.txt").exists() {
-        Coordinator::start(cfg, psb_bundle, float)?
+        Coordinator::start(cfg, psb_bundle)?
     } else {
         let net = net.ok_or_else(|| anyhow::anyhow!(
             "PJRT unavailable (artifacts missing or built without `--features pjrt`) and \

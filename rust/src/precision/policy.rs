@@ -6,6 +6,9 @@
 //! layer-wise adaption, spatial attention (Sec. 4.5) — plus a
 //! [`Budgeted`] policy that allocates samples under an explicit
 //! gated-add budget (the serving-time "fit this op envelope" knob).
+//! When the context carries per-layer weight variances, `Budgeted`
+//! *water-fills*: each sample goes to the layer with the best marginal
+//! variance reduction per gated add, instead of a uniform split.
 //! The request-level scheduler of `coordinator::scheduler` implements
 //! the same trait, so simulator experiments and the serving stack speak
 //! one precision language.
@@ -24,6 +27,10 @@ pub struct PlanContext<'a> {
     /// Per-capacitor-layer MACs (`rows × live weights`) for this batch;
     /// the per-sample cost currency (see `PsbNetwork::capacitor_macs`).
     pub layer_macs: Vec<u64>,
+    /// Per-capacitor-layer single-sample weight variance `Σ_w Var(w̄_1)`
+    /// (see `PsbNetwork::layer_variances`) — the water-filling value
+    /// signal.  Empty ⇒ allocators fall back to uniform splits.
+    pub layer_var: Vec<f64>,
     pub batch: usize,
     /// Input spatial resolution `(H, W)` — spatial masks live here.
     pub input_hw: (usize, usize),
@@ -39,6 +46,7 @@ impl<'a> PlanContext<'a> {
         PlanContext {
             num_layers: net.num_capacitors,
             layer_macs: net.capacitor_macs(batch),
+            layer_var: net.layer_variances().to_vec(),
             batch,
             input_hw: (net.input_hwc.0, net.input_hwc.1),
             feat: None,
@@ -52,6 +60,7 @@ impl<'a> PlanContext<'a> {
         PlanContext {
             num_layers: 1,
             layer_macs: Vec::new(),
+            layer_var: Vec::new(),
             batch: 1,
             input_hw: (0, 0),
             feat: None,
@@ -126,11 +135,26 @@ impl PrecisionPolicy for SpatialAttention {
     }
 }
 
-/// Allocate samples under an explicit gated-add budget: the largest
-/// uniform `n ≤ n_max` whose estimated cost fits.  Degrades monotonically
-/// as the budget tightens; errs when even one sample per MAC does not
-/// fit.  (A smarter allocator could water-fill per layer; uniform keeps
-/// the plan's cost estimate exact — see `docs/PRECISION.md`.)
+/// Allocate samples under an explicit gated-add budget.
+///
+/// With per-layer variances in the context ([`PlanContext::layer_var`],
+/// filled by [`PlanContext::for_network`]), the allocator *water-fills*:
+/// starting from one sample everywhere, each further sample goes to the
+/// layer with the largest marginal variance reduction per gated add,
+///
+/// ```text
+/// gain(ℓ) = V_ℓ · (1/n_ℓ − 1/(n_ℓ+1)) / c_ℓ        (V_ℓ = Σ_w Var(w̄_1), c_ℓ = MACs)
+/// ```
+///
+/// so cheap high-variance layers get deep sampling and expensive
+/// low-variance layers stay shallow — strictly lower total weight
+/// variance than the uniform split at the same budget (regression-tested
+/// below).  The marginal gains are decreasing in `n_ℓ`, so the greedy
+/// allocation is maximal (no affordable positive-gain increment
+/// remains) and a looser budget never yields a higher-variance plan.
+/// Without variances the policy falls back to the largest uniform
+/// `n ≤ n_max` whose estimated cost fits.  Either way it errs when even
+/// one sample per layer does not fit.
 #[derive(Debug, Clone, Copy)]
 pub struct Budgeted {
     /// Gated int16-add budget for one pass over the context's batch.
@@ -142,14 +166,53 @@ pub struct Budgeted {
 impl PrecisionPolicy for Budgeted {
     fn plan(&mut self, ctx: &PlanContext) -> Result<PrecisionPlan, PlanError> {
         let per_sample = ctx.total_macs_per_sample().max(1);
-        let n = (self.gated_add_budget / per_sample).min(self.n_max as u64) as u32;
-        if n == 0 {
+        if self.gated_add_budget < per_sample {
             return Err(PlanError::BudgetTooTight {
                 budget: self.gated_add_budget,
                 floor: per_sample,
             });
         }
-        Ok(PrecisionPlan::uniform(n))
+        let water_fill = !ctx.layer_macs.is_empty()
+            && ctx.layer_var.len() == ctx.layer_macs.len()
+            && ctx.layer_var.iter().any(|&v| v > 0.0);
+        if !water_fill {
+            let n = (self.gated_add_budget / per_sample).min(self.n_max as u64) as u32;
+            return Ok(PrecisionPlan::uniform(n.max(1)));
+        }
+        let layers = ctx.layer_macs.len();
+        let mut ns = vec![1u32; layers];
+        let mut spent = per_sample;
+        // marginal gain of raising layer ℓ from n to n+1 samples
+        let gain = |l: usize, n: u32| -> f64 {
+            let c = ctx.layer_macs[l].max(1) as f64;
+            ctx.layer_var[l] * (1.0 / n as f64 - 1.0 / (n + 1) as f64) / c
+        };
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for l in 0..layers {
+                if ns[l] >= self.n_max || spent + ctx.layer_macs[l] > self.gated_add_budget {
+                    continue;
+                }
+                let g = gain(l, ns[l]);
+                // strict improvement with first-index tie-break keeps the
+                // allocation deterministic and prefix-monotone in budget
+                let better = match best {
+                    Some((_, bg)) => g > bg,
+                    None => g > 0.0,
+                };
+                if better {
+                    best = Some((l, g));
+                }
+            }
+            match best {
+                Some((l, _)) => {
+                    ns[l] += 1;
+                    spent += ctx.layer_macs[l];
+                }
+                None => break,
+            }
+        }
+        PrecisionPlan::per_layer(&ns)
     }
 }
 
@@ -161,11 +224,21 @@ mod tests {
         PlanContext {
             num_layers: 3,
             layer_macs: vec![1000, 2000, 500],
+            layer_var: Vec::new(),
             batch: 2,
             input_hw: (8, 8),
             feat: None,
             entropy: None,
         }
+    }
+
+    /// Total weight variance of a plan: `Σ_ℓ V_ℓ / n_ℓ`.
+    fn plan_variance(plan: &PrecisionPlan, layer_var: &[f64]) -> f64 {
+        layer_var
+            .iter()
+            .enumerate()
+            .map(|(l, &v)| v / plan.layer_n(l).0 as f64)
+            .sum()
     }
 
     #[test]
@@ -178,7 +251,7 @@ mod tests {
 
     #[test]
     fn budgeted_fits_and_degrades_monotonically() {
-        let c = ctx();
+        let c = ctx(); // no variance signal -> uniform fallback
         let total = c.total_macs_per_sample(); // 3500
         let mut prev = u32::MAX;
         for budget in [100 * total, 17 * total, 6 * total, total] {
@@ -197,6 +270,76 @@ mod tests {
             Budgeted { gated_add_budget: total - 1, n_max: 64 }.plan(&c),
             Err(PlanError::BudgetTooTight { .. })
         ));
+    }
+
+    #[test]
+    fn water_filling_beats_uniform_on_heterogeneous_net() {
+        // layer 0: cheap and noisy; layer 1: expensive and almost exact.
+        // uniform splits waste the budget sampling layer 1 deeply.
+        let c = PlanContext {
+            num_layers: 2,
+            layer_macs: vec![100, 10_000],
+            layer_var: vec![50.0, 1.0],
+            batch: 1,
+            input_hw: (8, 8),
+            feat: None,
+            entropy: None,
+        };
+        let budget = 8 * c.total_macs_per_sample(); // uniform could afford n=8
+        let mut wf = Budgeted { gated_add_budget: budget, n_max: 256 };
+        let plan = wf.plan(&c).unwrap();
+        assert!(plan.estimate_cost(&c.layer_macs).gated_adds <= budget);
+        // the allocation is genuinely non-uniform: the cheap noisy layer
+        // samples deeper than the expensive quiet one
+        assert!(
+            plan.layer_n(0).0 > plan.layer_n(1).0,
+            "expected front-loaded allocation, got {plan:?}"
+        );
+        // and it dominates the best uniform plan at the same budget
+        let uniform_ctx = PlanContext { layer_var: Vec::new(), ..c.clone() };
+        let uni = Budgeted { gated_add_budget: budget, n_max: 256 }
+            .plan(&uniform_ctx)
+            .unwrap();
+        let v_wf = plan_variance(&plan, &c.layer_var);
+        let v_uni = plan_variance(&uni, &c.layer_var);
+        assert!(
+            v_wf < v_uni,
+            "water-filling must cut total variance: {v_wf} vs uniform {v_uni}"
+        );
+    }
+
+    #[test]
+    fn water_filling_is_feasible_and_maximal() {
+        let c = PlanContext {
+            num_layers: 3,
+            layer_macs: vec![100, 400, 1600],
+            layer_var: vec![9.0, 4.0, 1.0],
+            batch: 1,
+            input_hw: (8, 8),
+            feat: None,
+            entropy: None,
+        };
+        let total = c.total_macs_per_sample();
+        let mut prev_var = f64::INFINITY;
+        for budget in [total, 4 * total, 16 * total, 64 * total] {
+            let plan = Budgeted { gated_add_budget: budget, n_max: 128 }.plan(&c).unwrap();
+            let spent = plan.estimate_cost(&c.layer_macs).gated_adds;
+            assert!(spent <= budget, "{spent} > {budget}");
+            // maximal: no affordable positive-gain increment remains
+            for l in 0..3 {
+                let n = plan.layer_n(l).0;
+                assert!((1..=128).contains(&n));
+                let affordable = spent + c.layer_macs[l] <= budget;
+                assert!(
+                    !affordable || n == 128,
+                    "layer {l} (n={n}) left budget on the table at {budget}"
+                );
+            }
+            // a looser budget never yields a higher-variance plan
+            let v = plan_variance(&plan, &c.layer_var);
+            assert!(v <= prev_var + 1e-12, "variance rose with budget: {v} > {prev_var}");
+            prev_var = v;
+        }
     }
 
     #[test]

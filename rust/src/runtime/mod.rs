@@ -13,8 +13,8 @@
 //! The PJRT dependency (`xla` crate) is optional: build with
 //! `--features pjrt` to execute artifacts.  Without the feature, a stub
 //! [`Runtime`] still parses artifact metadata (same error surface) but
-//! refuses to execute — serve through the simulator engine
-//! (`coordinator::Engine::spawn_sim`) instead.
+//! refuses to execute — serve through the simulator backend
+//! (`backend::SimBackend` / `Coordinator::start_sim`) instead.
 
 pub mod bundle;
 
@@ -311,8 +311,8 @@ impl Runtime {
     ) -> Result<Execution> {
         bail!(
             "psb was built without the `pjrt` feature — rebuild with `--features pjrt` \
-             to execute AOT artifacts, or serve through the simulator engine \
-             (`coordinator::Engine::spawn_sim`)"
+             to execute AOT artifacts, or serve through the simulator backend \
+             (`backend::SimBackend` / `Coordinator::start_sim`)"
         )
     }
 
@@ -324,8 +324,8 @@ impl Runtime {
     ) -> Result<Execution> {
         bail!(
             "psb was built without the `pjrt` feature — rebuild with `--features pjrt` \
-             to execute AOT artifacts, or serve through the simulator engine \
-             (`coordinator::Engine::spawn_sim`)"
+             to execute AOT artifacts, or serve through the simulator backend \
+             (`backend::SimBackend` / `Coordinator::start_sim`)"
         )
     }
 }

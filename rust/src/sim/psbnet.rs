@@ -10,7 +10,14 @@
 //! capacitor sum is an unbiased partial result (Eq. 8–10), escalating a
 //! state from `n_low` to `n_high` draws only the `n_high − n_low`
 //! missing samples and produces logits bit-identical to a one-shot
-//! `n_high` pass — [`PsbNetwork::forward`] is just `begin` + `refine`.
+//! `n_high` pass.
+//!
+//! Execution entry points live in [`crate::backend`]: a
+//! [`crate::backend::SimBackend`] session pairs a `ProgressiveState`
+//! with a [`SimCache`] of per-node activations and im2col lowerings, so
+//! an escalation also skips the *wall-time* work of layers whose sample
+//! counts did not move ([`PsbNetwork::refine_cached`]).  `refine` is the
+//! cache-less wrapper for one-shot use.
 //!
 //! Supports the paper's full modification grid:
 //! * uniform sample size `n` (Fig. 3 / Table 1 "no modification"),
@@ -21,6 +28,8 @@
 //! * residual (unfoldable) BNs as *stochastic channel scales* — the
 //!   "ResNet50 modified" variance blow-up of Sec. 4.3,
 //! * the bit-exact integer datapath (Eq. 9) for cross-validation.
+
+use std::collections::HashMap;
 
 use crate::costs::CostCounter;
 use crate::num::{discretize_prob, quantize_f32, quantize_slice, PsbPlanes, PsbWeight, Q16};
@@ -78,6 +87,7 @@ pub struct PsbOptions {
 }
 
 /// Result of one PSB forward (or refinement) pass.
+#[derive(Debug)]
 pub struct PsbOutput {
     pub logits: Tensor,
     /// Activation of the designated last conv layer (attention input).
@@ -86,6 +96,109 @@ pub struct PsbOutput {
     /// incremental samples it drew (the paper's progressive accounting,
     /// Sec. 4.5); a fresh forward charges the full plan.
     pub costs: CostCounter,
+}
+
+/// Per-session pass cache — the wall-time half of capacitor semantics.
+///
+/// A [`crate::backend::SimBackend`] session keeps one of these alongside
+/// its [`ProgressiveState`]: per-node activations and masks from the last
+/// pass, plus the im2col lowering of every conv input.  On the next
+/// [`PsbNetwork::refine_cached`] over the *same* input, a capacitor layer
+/// whose sample counts did not advance (and whose upstream activations
+/// are unchanged) reuses its cached activation instead of re-realizing
+/// weights and re-contracting, and a recomputed conv whose input is
+/// clean reuses its lowering.  Reuse is bit-identical by construction:
+/// skipped layers would have recomputed the same values from the same
+/// counts.
+///
+/// The cache is keyed to one input tensor; sessions own both and never
+/// mix inputs.  Geometry changes (batch/size) reset it.
+#[derive(Debug, Clone, Default)]
+pub struct SimCache {
+    valid: bool,
+    batch: usize,
+    x_len: usize,
+    acts: Vec<Tensor>,
+    masks: Vec<Option<Vec<bool>>>,
+    /// Whether node `i`'s cached activation was computed under a spatial
+    /// split (region structure is part of the reuse key).
+    had_mask: Vec<bool>,
+    /// im2col lowering per conv node index: `(cols, ho, wo)`.
+    cols: HashMap<usize, (Tensor, usize, usize)>,
+}
+
+impl SimCache {
+    fn reset(&mut self) {
+        self.valid = false;
+        self.acts.clear();
+        self.masks.clear();
+        self.had_mask.clear();
+        self.cols.clear();
+    }
+
+    /// Restrict the cache to the listed batch rows (in the given order) —
+    /// the serving path's "escalate only the uncertain rows".  Every
+    /// cached tensor is blocked per image, so gathering blocks preserves
+    /// validity; the progressive state is row-independent (one filter
+    /// draw per batch) and needs no change.
+    pub fn narrow(&mut self, rows: &[usize], old_batch: usize) {
+        if !self.valid || old_batch == 0 {
+            return;
+        }
+        for t in self.acts.iter_mut() {
+            *t = gather_blocks(t, rows, old_batch);
+        }
+        for m in self.masks.iter_mut() {
+            if let Some(mask) = m {
+                *mask = gather_mask_blocks(mask, rows, old_batch);
+            }
+        }
+        for (cols, _, _) in self.cols.values_mut() {
+            *cols = gather_blocks(cols, rows, old_batch);
+        }
+        self.batch = rows.len();
+        self.x_len = self.x_len / old_batch * rows.len();
+    }
+}
+
+/// Gather per-image blocks of a tensor whose leading extent is a
+/// multiple of `old_batch` (activations `[B,…]`, im2col `[B·HoWo, K]`).
+pub(crate) fn gather_blocks(t: &Tensor, rows: &[usize], old_batch: usize) -> Tensor {
+    debug_assert_eq!(t.len() % old_batch, 0);
+    let block = t.len() / old_batch;
+    let mut data = Vec::with_capacity(block * rows.len());
+    for &r in rows {
+        data.extend_from_slice(&t.data[r * block..(r + 1) * block]);
+    }
+    let mut shape = t.shape.clone();
+    debug_assert_eq!(shape[0] % old_batch, 0);
+    shape[0] = shape[0] / old_batch * rows.len();
+    Tensor::from_vec(data, &shape)
+}
+
+pub(crate) fn gather_mask_blocks(mask: &[bool], rows: &[usize], old_batch: usize) -> Vec<bool> {
+    debug_assert_eq!(mask.len() % old_batch, 0);
+    let block = mask.len() / old_batch;
+    let mut out = Vec::with_capacity(block * rows.len());
+    for &r in rows {
+        out.extend_from_slice(&mask[r * block..(r + 1) * block]);
+    }
+    out
+}
+
+/// What one cached pass actually executed (backend telemetry; the
+/// hardware-model charge lives in [`PsbOutput::costs`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    /// Sampled units whose activations were recomputed.
+    pub nodes_recomputed: usize,
+    /// Sampled units skipped via the cache (unchanged counts + input).
+    pub nodes_reused: usize,
+    /// Conv lowerings served from the cache instead of re-gathering.
+    pub cols_reused: usize,
+    /// Accumulator additions executed by this pass (`rows × live
+    /// weights` per recomputed contraction; reused nodes execute none).
+    pub executed_adds: u64,
 }
 
 /// A prepared PSB inference network.
@@ -98,6 +211,9 @@ pub struct PsbNetwork {
     /// Number of capacitor layers (what a [`PrecisionPlan`] indexes).
     pub num_capacitors: usize,
     pub name: String,
+    /// Precomputed `Σ_w Var(w̄_1)` per capacitor layer (planes are
+    /// immutable after `prepare`, so this is computed once).
+    layer_var: Vec<f64>,
 }
 
 impl PsbNetwork {
@@ -159,14 +275,17 @@ impl PsbNetwork {
             };
             nodes.push(PsbNode { op, inputs: node.inputs.clone(), name: node.name.clone() });
         }
-        PsbNetwork {
+        let mut net = PsbNetwork {
             nodes,
             input_hwc: folded.input_hwc,
             feat_node: folded.feat_node,
             options,
             num_capacitors,
             name: folded.name.clone(),
-        }
+            layer_var: Vec::new(),
+        };
+        net.layer_var = net.compute_layer_variances();
+        net
     }
 
     /// Total weight storage under a `(k_e, k_p)`-bit layout, in bits.
@@ -264,6 +383,41 @@ impl PsbNetwork {
         macs
     }
 
+    /// Per-capacitor-layer sum of single-sample weight variances
+    /// `Σ_w 2^{2e}·p(1−p)` = `Σ_w Var(w̄_1)` — the layer's value signal
+    /// for the water-filling `Budgeted` allocator (spending a sample on
+    /// layer `ℓ` shrinks its total weight variance by `V_ℓ·(1/n − 1/(n+1))`).
+    /// Stochastic-BN scales fold into the capacitor layer whose sample
+    /// size they share, mirroring [`Self::capacitor_macs`].  Computed
+    /// once at `prepare` time (plan contexts are built per pass).
+    pub fn layer_variances(&self) -> &[f64] {
+        &self.layer_var
+    }
+
+    fn compute_layer_variances(&self) -> Vec<f64> {
+        let mut vars: Vec<f64> = Vec::with_capacity(self.num_capacitors);
+        let mut bn_extra: Vec<(usize, f64)> = Vec::new();
+        for node in &self.nodes {
+            match &node.op {
+                PsbOp::Capacitor { planes, .. } | PsbOp::DepthwiseCapacitor { planes, .. } => {
+                    vars.push(planes_variance(planes));
+                }
+                PsbOp::StochasticBn { scales, .. } => {
+                    let v: f64 = scales.iter().map(|s| s.variance(1) as f64).sum();
+                    bn_extra.push((vars.len(), v));
+                }
+                _ => {}
+            }
+        }
+        for (idx, v) in bn_extra {
+            let i = idx.min(vars.len().saturating_sub(1));
+            if let Some(m) = vars.get_mut(i) {
+                *m += v;
+            }
+        }
+        vars
+    }
+
     /// Fresh progressive state: zero samples accumulated everywhere.
     pub fn begin(&self, kind: RngKind, seed: u64) -> ProgressiveState {
         ProgressiveState::new(
@@ -279,38 +433,38 @@ impl PsbNetwork {
         )
     }
 
-    /// One stochastic forward pass — a thin wrapper over
-    /// [`Self::begin`] + [`Self::refine`] with the default generator.
-    pub fn forward(
+    /// Escalate `state` to `target` and run the pass (cache-less).
+    ///
+    /// A thin wrapper over [`Self::refine_cached`] with a throwaway
+    /// cache; session-based execution (`crate::backend`) keeps the cache
+    /// alive across escalations so unchanged layers also skip their
+    /// wall-time recompute.
+    pub fn refine(
         &self,
         x: &Tensor,
-        plan: &PrecisionPlan,
-        seed: u64,
+        state: &mut ProgressiveState,
+        target: &PrecisionPlan,
     ) -> Result<PsbOutput, PlanError> {
-        self.forward_with_kind(x, plan, RngKind::Xorshift, seed)
+        let mut cache = SimCache::default();
+        self.refine_cached(x, state, target, &mut cache).map(|(out, _)| out)
     }
 
-    /// Forward with an explicit generator (the rng-ablation entry point).
-    pub fn forward_with_kind(
-        &self,
-        x: &Tensor,
-        plan: &PrecisionPlan,
-        kind: RngKind,
-        seed: u64,
-    ) -> Result<PsbOutput, PlanError> {
-        let mut state = self.begin(kind, seed);
-        self.refine(x, &mut state, plan)
-    }
-
-    /// Escalate `state` to `target` and run the pass.
+    /// Escalate `state` to `target` and run the pass against a
+    /// session-owned [`SimCache`].
     ///
     /// Each sampled unit tops up its Binomial counts with only the
-    /// samples the target adds over what the state already holds, then
-    /// the activations are recomputed from the refined weights.  The
-    /// returned [`PsbOutput::costs`] charge those incremental samples
-    /// (paper Sec. 4.5's progressive accounting), and the logits are
-    /// bit-identical to a single fresh pass at `target` with the same
-    /// `(kind, seed)` — the additivity invariant of Eq. 8.
+    /// samples the target adds over what the state already holds; units
+    /// whose counts did not move (and whose inputs are unchanged) reuse
+    /// their cached activation, the rest recompute from the refined
+    /// counts.  The returned [`PsbOutput::costs`] charge the incremental
+    /// samples (paper Sec. 4.5's progressive accounting), and the logits
+    /// are bit-identical to a single fresh pass at `target` with the same
+    /// `(kind, seed)` — the additivity invariant of Eq. 8.  The
+    /// [`PassStats`] report what was actually executed vs reused.
+    ///
+    /// The cache is only sound against the same input contents; callers
+    /// (sessions) must not swap `x` between passes except through
+    /// [`SimCache::narrow`].  Geometry changes reset it.
     ///
     /// Cost exactness: for refinement chains that keep the same region
     /// structure (uniform → uniform, or uniform → spatial split) the
@@ -319,12 +473,35 @@ impl PsbNetwork {
     /// attended rows' already-held samples can no longer be attributed
     /// per row and the pass conservatively re-bills them at the base
     /// track's increment (an upper bound; logits remain exact).
-    pub fn refine(
+    pub fn refine_cached(
         &self,
         x: &Tensor,
         state: &mut ProgressiveState,
         target: &PrecisionPlan,
-    ) -> Result<PsbOutput, PlanError> {
+        cache: &mut SimCache,
+    ) -> Result<(PsbOutput, PassStats), PlanError> {
+        let result = self.refine_walk(x, state, target, cache);
+        if result.is_err() {
+            // A failed pass (e.g. a non-monotonic target rejected at a
+            // later layer) may have advanced earlier units' counts
+            // before erroring, so the cached activations no longer
+            // correspond to the state.  Poison the cache: the next pass
+            // recomputes every layer from the accumulated counts, which
+            // keeps it bit-identical to a one-shot pass at whatever the
+            // state now holds (regression-tested in
+            // `tests/backend_parity.rs`).
+            cache.reset();
+        }
+        result
+    }
+
+    fn refine_walk(
+        &self,
+        x: &Tensor,
+        state: &mut ProgressiveState,
+        target: &PrecisionPlan,
+        cache: &mut SimCache,
+    ) -> Result<(PsbOutput, PassStats), PlanError> {
         let (b, h, w, _c) = dims4(x);
         target.validate(self.num_capacitors, Some(b * h * w))?;
         let expected = self.num_sampled_units();
@@ -333,218 +510,332 @@ impl PsbNetwork {
         }
         let (kind, seed) = (state.kind, state.seed);
         let mut costs = CostCounter::default();
-        // per-node activations and spatial masks (at activation resolution)
+        let mut stats = PassStats::default();
+        let reuse = cache.valid
+            && cache.acts.len() == self.nodes.len()
+            && cache.batch == b
+            && cache.x_len == x.len();
+        if !reuse {
+            cache.reset();
+        }
+        // per-node activations, spatial masks (at activation resolution),
+        // dirty flags and mask-influence flags for the next pass's cache
         let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
         let mut masks: Vec<Option<Vec<bool>>> = Vec::with_capacity(self.nodes.len());
+        let mut dirty: Vec<bool> = Vec::with_capacity(self.nodes.len());
+        let mut had_mask: Vec<bool> = Vec::with_capacity(self.nodes.len());
         let input_mask: Option<Vec<bool>> = target.mask().map(|m| m.to_vec());
         let mut cap_layer = 0usize;
         let mut unit_idx = 0usize;
         let mut feat = None;
-        for node in &self.nodes {
-            let (act, mask): (Tensor, Option<Vec<bool>>) = match &node.op {
-                PsbOp::Input => {
-                    let mut q = x.clone();
-                    quantize_slice(&mut q.data);
-                    (q, input_mask.clone())
-                }
-                PsbOp::Capacitor { planes, bias, conv, cout } => {
-                    let inp = &acts[node.inputs[0]];
-                    let in_mask = &masks[node.inputs[0]];
-                    let (n_lo, n_hi) = target.layer_n(cap_layer);
-                    let layer = cap_layer;
-                    cap_layer += 1;
-                    let unit = unit_idx;
-                    unit_idx += 1;
-                    let splits = in_mask.is_some() && n_hi > n_lo;
-                    let target_hi = if splits { n_hi } else { n_lo };
-                    // the §4.4 deterministic contraction ignores sampled
-                    // counts (k = round(p·n)), so only track the levels;
-                    // the spatial split still samples (as it always did)
-                    let (d_lo, d_hi) = if self.options.deterministic && !splits {
-                        state.units[unit].advance_levels_only(layer, n_lo, target_hi)?
-                    } else {
-                        state.units[unit].advance(
-                            kind, seed, unit, &planes.prob, layer, n_lo, target_hi,
-                        )?
-                    };
-                    let ust = &state.units[unit];
-                    match conv {
-                        Some((k, stride)) => {
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let (act, mask, is_dirty, masked): (Tensor, Option<Vec<bool>>, bool, bool) =
+                match &node.op {
+                    PsbOp::Input => {
+                        if reuse {
+                            (cache.acts[idx].clone(), input_mask.clone(), false, false)
+                        } else {
+                            let mut q = x.clone();
+                            quantize_slice(&mut q.data);
+                            (q, input_mask.clone(), true, false)
+                        }
+                    }
+                    PsbOp::Capacitor { planes, bias, conv, cout } => {
+                        let in_idx = node.inputs[0];
+                        let in_dirty = dirty[in_idx];
+                        let (n_lo, n_hi) = target.layer_n(cap_layer);
+                        let layer = cap_layer;
+                        cap_layer += 1;
+                        let unit = unit_idx;
+                        unit_idx += 1;
+                        let in_masked = masks[in_idx].is_some();
+                        let splits = in_masked && n_hi > n_lo;
+                        let target_hi = if splits { n_hi } else { n_lo };
+                        // the §4.4 deterministic contraction ignores sampled
+                        // counts (k = round(p·n)), so only track the levels;
+                        // the spatial split still samples (as it always did)
+                        let (d_lo, d_hi) = if self.options.deterministic && !splits {
+                            state.units[unit].advance_levels_only(layer, n_lo, target_hi)?
+                        } else {
+                            state.units[unit].advance(
+                                kind, seed, unit, &planes.prob, layer, n_lo, target_hi,
+                            )?
+                        };
+                        if reuse
+                            && !in_dirty
+                            && d_lo == 0
+                            && d_hi == 0
+                            && !in_masked
+                            && !cache.had_mask[idx]
+                        {
+                            // unchanged counts over an unchanged input (and
+                            // no region split either pass) — bit-identical
+                            stats.nodes_reused += 1;
+                            (cache.acts[idx].clone(), None, false, false)
+                        } else {
+                            stats.nodes_recomputed += 1;
+                            let ust = &state.units[unit];
+                            let inp = &acts[in_idx];
+                            let in_mask = &masks[in_idx];
+                            match conv {
+                                Some((k, stride)) => {
+                                    let (bb, hh, ww, _) = dims4(inp);
+                                    // the lowering depends only on the input
+                                    // activation — reuse it when that is clean
+                                    if in_dirty {
+                                        cache.cols.remove(&idx);
+                                    } else if cache.cols.contains_key(&idx) {
+                                        stats.cols_reused += 1;
+                                    }
+                                    let (cols, ho, wo) = {
+                                        let e = cache
+                                            .cols
+                                            .entry(idx)
+                                            .or_insert_with(|| im2col(inp, *k, *stride));
+                                        (&e.0, e.1, e.2)
+                                    };
+                                    let m = cols.shape[0];
+                                    stats.executed_adds += m as u64 * nnz(planes);
+                                    let out_mask = in_mask
+                                        .as_ref()
+                                        .map(|mk| pool_mask(mk, bb, hh, ww, *stride));
+                                    let y = match &out_mask {
+                                        Some(mk) if splits => {
+                                            let wbar_lo =
+                                                realize_weights(planes, ust.counts_lo(), n_lo);
+                                            let wbar_hi =
+                                                realize_weights(planes, ust.counts_hi(), n_hi);
+                                            let y = two_level_matmul(
+                                                &cols.data, planes, Some(bias), m, mk, &wbar_lo,
+                                                &wbar_hi,
+                                            );
+                                            charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                            y
+                                        }
+                                        _ => self.contract_counts(
+                                            &cols.data, planes, Some(bias), m, ust, n_lo, d_lo,
+                                            &mut costs,
+                                        ),
+                                    };
+                                    (
+                                        Tensor::from_vec(y, &[bb, ho, wo, *cout]),
+                                        out_mask,
+                                        true,
+                                        in_masked,
+                                    )
+                                }
+                                None => {
+                                    // dense: rows are images; a row is "interesting"
+                                    // if any of its mask pixels is set
+                                    let cin = planes.shape[0];
+                                    let m = inp.len() / cin;
+                                    stats.executed_adds += m as u64 * nnz(planes);
+                                    let row_mask = in_mask.as_ref().map(|mk| {
+                                        let per = mk.len() / m;
+                                        (0..m)
+                                            .map(|r| {
+                                                mk[r * per..(r + 1) * per].iter().any(|&v| v)
+                                            })
+                                            .collect::<Vec<bool>>()
+                                    });
+                                    let y = match &row_mask {
+                                        Some(mk) if splits => {
+                                            let wbar_lo =
+                                                realize_weights(planes, ust.counts_lo(), n_lo);
+                                            let wbar_hi =
+                                                realize_weights(planes, ust.counts_hi(), n_hi);
+                                            let y = two_level_matmul(
+                                                &inp.data, planes, Some(bias), m, mk, &wbar_lo,
+                                                &wbar_hi,
+                                            );
+                                            charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                            y
+                                        }
+                                        _ => self.contract_counts(
+                                            &inp.data, planes, Some(bias), m, ust, n_lo, d_lo,
+                                            &mut costs,
+                                        ),
+                                    };
+                                    (Tensor::from_vec(y, &[m, *cout]), row_mask, true, in_masked)
+                                }
+                            }
+                        }
+                    }
+                    PsbOp::DepthwiseCapacitor { planes, bias, k, stride, c } => {
+                        let in_idx = node.inputs[0];
+                        let in_dirty = dirty[in_idx];
+                        let (n_lo, n_hi) = target.layer_n(cap_layer);
+                        let layer = cap_layer;
+                        cap_layer += 1;
+                        let unit = unit_idx;
+                        unit_idx += 1;
+                        let in_masked = masks[in_idx].is_some();
+                        let splits = in_masked && n_hi > n_lo;
+                        let (d_lo, d_hi) = state.units[unit].advance(
+                            kind,
+                            seed,
+                            unit,
+                            &planes.prob,
+                            layer,
+                            n_lo,
+                            if splits { n_hi } else { n_lo },
+                        )?;
+                        if reuse
+                            && !in_dirty
+                            && d_lo == 0
+                            && d_hi == 0
+                            && !in_masked
+                            && !cache.had_mask[idx]
+                        {
+                            stats.nodes_reused += 1;
+                            (cache.acts[idx].clone(), None, false, false)
+                        } else {
+                            stats.nodes_recomputed += 1;
+                            let ust = &state.units[unit];
+                            let inp = &acts[in_idx];
+                            let in_mask = &masks[in_idx];
                             let (bb, hh, ww, _) = dims4(inp);
-                            let (cols, ho, wo) = im2col(inp, *k, *stride);
-                            let m = cols.shape[0];
                             let out_mask =
                                 in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
-                            let y = match &out_mask {
-                                Some(mk) if splits => {
-                                    let wbar_lo = realize_weights(planes, ust.counts_lo(), n_lo);
-                                    let wbar_hi = realize_weights(planes, ust.counts_hi(), n_hi);
-                                    let y = two_level_matmul(
-                                        &cols.data, planes, Some(bias), m, mk, &wbar_lo, &wbar_hi,
+                            // nnz-discounted: pruned taps cost nothing
+                            let live = nnz(planes);
+                            let macs =
+                                (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64 * live;
+                            stats.executed_adds += macs;
+                            let out = match (&out_mask, splits) {
+                                (Some(mk), true) => {
+                                    // two filter realizations, per-pixel select
+                                    let lo = depthwise_with_counts(
+                                        inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
                                     );
-                                    charge_split(&mut costs, planes, mk, d_lo, d_hi);
-                                    y
-                                }
-                                _ => self.contract_counts(
-                                    &cols.data, planes, Some(bias), m, ust, n_lo, d_lo, &mut costs,
-                                ),
-                            };
-                            (Tensor::from_vec(y, &[bb, ho, wo, *cout]), out_mask)
-                        }
-                        None => {
-                            // dense: rows are images; a row is "interesting"
-                            // if any of its mask pixels is set
-                            let cin = planes.shape[0];
-                            let m = inp.len() / cin;
-                            let row_mask = in_mask.as_ref().map(|mk| {
-                                let per = mk.len() / m;
-                                (0..m)
-                                    .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
-                                    .collect::<Vec<bool>>()
-                            });
-                            let y = match &row_mask {
-                                Some(mk) if splits => {
-                                    let wbar_lo = realize_weights(planes, ust.counts_lo(), n_lo);
-                                    let wbar_hi = realize_weights(planes, ust.counts_hi(), n_hi);
-                                    let y = two_level_matmul(
-                                        &inp.data, planes, Some(bias), m, mk, &wbar_lo, &wbar_hi,
+                                    let hi = depthwise_with_counts(
+                                        inp, planes, bias, *k, *stride, *c, ust.counts_hi(), n_hi,
                                     );
-                                    charge_split(&mut costs, planes, mk, d_lo, d_hi);
-                                    y
+                                    let frac_hi = mk.iter().filter(|&&v| v).count() as f64
+                                        / mk.len() as f64;
+                                    if d_lo > 0 {
+                                        costs.charge_capacitor(
+                                            (macs as f64 * (1.0 - frac_hi)) as u64,
+                                            d_lo,
+                                        );
+                                    }
+                                    if d_hi > 0 {
+                                        costs.charge_capacitor(
+                                            (macs as f64 * frac_hi) as u64,
+                                            d_hi,
+                                        );
+                                    }
+                                    select_by_mask(&lo, &hi, mk, *c)
                                 }
-                                _ => self.contract_counts(
-                                    &inp.data, planes, Some(bias), m, ust, n_lo, d_lo, &mut costs,
-                                ),
+                                _ => {
+                                    if d_lo > 0 {
+                                        costs.charge_capacitor(macs, d_lo);
+                                    }
+                                    depthwise_with_counts(
+                                        inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
+                                    )
+                                }
                             };
-                            (Tensor::from_vec(y, &[m, *cout]), row_mask)
+                            (out, out_mask, true, in_masked)
                         }
                     }
-                }
-                PsbOp::DepthwiseCapacitor { planes, bias, k, stride, c } => {
-                    let inp = &acts[node.inputs[0]];
-                    let in_mask = &masks[node.inputs[0]];
-                    let (bb, hh, ww, _) = dims4(inp);
-                    let (n_lo, n_hi) = target.layer_n(cap_layer);
-                    let layer = cap_layer;
-                    cap_layer += 1;
-                    let unit = unit_idx;
-                    unit_idx += 1;
-                    let out_mask = in_mask.as_ref().map(|mk| pool_mask(mk, bb, hh, ww, *stride));
-                    let splits = out_mask.is_some() && n_hi > n_lo;
-                    let (d_lo, d_hi) = state.units[unit].advance(
-                        kind,
-                        seed,
-                        unit,
-                        &planes.prob,
-                        layer,
-                        n_lo,
-                        if splits { n_hi } else { n_lo },
-                    )?;
-                    let ust = &state.units[unit];
-                    // nnz-discounted: pruned taps cost nothing
-                    let live = nnz(planes);
-                    let macs =
-                        (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64 * live;
-                    let out = match (&out_mask, splits) {
-                        (Some(mk), true) => {
-                            // two filter realizations, per-pixel select
-                            let lo = depthwise_with_counts(
-                                inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
-                            );
-                            let hi = depthwise_with_counts(
-                                inp, planes, bias, *k, *stride, *c, ust.counts_hi(), n_hi,
-                            );
-                            let frac_hi =
-                                mk.iter().filter(|&&v| v).count() as f64 / mk.len() as f64;
-                            if d_lo > 0 {
-                                costs.charge_capacitor(
-                                    (macs as f64 * (1.0 - frac_hi)) as u64,
-                                    d_lo,
-                                );
+                    PsbOp::StochasticBn { scales, shifts } => {
+                        let in_idx = node.inputs[0];
+                        let in_dirty = dirty[in_idx];
+                        // shares the sample size of the *next* capacitor layer
+                        // (saturating), mirroring the historical behavior
+                        let (n, _) = target.layer_n(cap_layer);
+                        let unit = unit_idx;
+                        unit_idx += 1;
+                        let probs: Vec<f32> = scales.iter().map(|s| s.prob).collect();
+                        let (d, _) = state.units[unit].advance(
+                            kind, seed, unit, &probs, cap_layer, n, n,
+                        )?;
+                        if reuse && !in_dirty && d == 0 {
+                            // values depend only on (counts, n, input) — the
+                            // mask is re-derived fresh below either way
+                            stats.nodes_reused += 1;
+                            (cache.acts[idx].clone(), masks[in_idx].clone(), false, false)
+                        } else {
+                            stats.nodes_recomputed += 1;
+                            let inp = &acts[in_idx];
+                            let sampled: Vec<f32> = scales
+                                .iter()
+                                .zip(state.units[unit].counts_lo())
+                                .map(|(wt, &cnt)| {
+                                    if wt.sign == 0 {
+                                        0.0
+                                    } else {
+                                        wt.realize(cnt, n)
+                                    }
+                                })
+                                .collect();
+                            let c = scales.len();
+                            let mut out = inp.clone();
+                            for chunk in out.data.chunks_mut(c) {
+                                for ((v, s), sh) in chunk.iter_mut().zip(&sampled).zip(shifts) {
+                                    *v = quantize_f32(*v * s + sh);
+                                }
                             }
-                            if d_hi > 0 {
-                                costs.charge_capacitor((macs as f64 * frac_hi) as u64, d_hi);
+                            stats.executed_adds += out.len() as u64;
+                            if d > 0 {
+                                costs.charge_capacitor(out.len() as u64, d);
                             }
-                            select_by_mask(&lo, &hi, mk, *c)
-                        }
-                        _ => {
-                            if d_lo > 0 {
-                                costs.charge_capacitor(macs, d_lo);
-                            }
-                            depthwise_with_counts(
-                                inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
-                            )
-                        }
-                    };
-                    (out, out_mask)
-                }
-                PsbOp::StochasticBn { scales, shifts } => {
-                    let inp = &acts[node.inputs[0]];
-                    // shares the sample size of the *next* capacitor layer
-                    // (saturating), mirroring the historical behavior
-                    let (n, _) = target.layer_n(cap_layer);
-                    let unit = unit_idx;
-                    unit_idx += 1;
-                    let probs: Vec<f32> = scales.iter().map(|s| s.prob).collect();
-                    let (d, _) = state.units[unit].advance(
-                        kind, seed, unit, &probs, cap_layer, n, n,
-                    )?;
-                    let sampled: Vec<f32> = scales
-                        .iter()
-                        .zip(state.units[unit].counts_lo())
-                        .map(|(wt, &cnt)| if wt.sign == 0 { 0.0 } else { wt.realize(cnt, n) })
-                        .collect();
-                    let c = scales.len();
-                    let mut out = inp.clone();
-                    for chunk in out.data.chunks_mut(c) {
-                        for ((v, s), sh) in chunk.iter_mut().zip(&sampled).zip(shifts) {
-                            *v = quantize_f32(*v * s + sh);
+                            (out, masks[in_idx].clone(), true, false)
                         }
                     }
-                    if d > 0 {
-                        costs.charge_capacitor(out.len() as u64, d);
+                    PsbOp::Identity => (
+                        acts[node.inputs[0]].clone(),
+                        masks[node.inputs[0]].clone(),
+                        dirty[node.inputs[0]],
+                        false,
+                    ),
+                    PsbOp::Relu => {
+                        let y = acts[node.inputs[0]].clone().map(|v| v.max(0.0));
+                        (y, masks[node.inputs[0]].clone(), dirty[node.inputs[0]], false)
                     }
-                    (out, masks[node.inputs[0]].clone())
-                }
-                PsbOp::Identity => {
-                    (acts[node.inputs[0]].clone(), masks[node.inputs[0]].clone())
-                }
-                PsbOp::Relu => {
-                    let y = acts[node.inputs[0]].clone().map(|v| v.max(0.0));
-                    (y, masks[node.inputs[0]].clone())
-                }
-                PsbOp::Add => {
-                    let y = acts[node.inputs[0]].add(&acts[node.inputs[1]]);
-                    let m = match (&masks[node.inputs[0]], &masks[node.inputs[1]]) {
-                        (Some(a), Some(b)) => {
-                            Some(a.iter().zip(b).map(|(x, y)| *x || *y).collect())
-                        }
-                        (Some(a), None) | (None, Some(a)) => Some(a.clone()),
-                        _ => None,
-                    };
-                    (y, m)
-                }
-                PsbOp::GlobalAvgPool => {
-                    let inp = &acts[node.inputs[0]];
-                    let (bb, _, _, _) = dims4(inp);
-                    let mut y = global_avg_pool(inp);
-                    quantize_slice(&mut y.data);
-                    let m = masks[node.inputs[0]].as_ref().map(|mk| {
-                        let per = mk.len() / bb;
-                        (0..bb)
-                            .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
-                            .collect::<Vec<bool>>()
-                    });
-                    (y, m)
-                }
-            };
-            if Some(acts.len()) == self.feat_node {
+                    PsbOp::Add => {
+                        let y = acts[node.inputs[0]].add(&acts[node.inputs[1]]);
+                        let m = match (&masks[node.inputs[0]], &masks[node.inputs[1]]) {
+                            (Some(a), Some(b)) => {
+                                Some(a.iter().zip(b).map(|(x, y)| *x || *y).collect())
+                            }
+                            (Some(a), None) | (None, Some(a)) => Some(a.clone()),
+                            _ => None,
+                        };
+                        let d = dirty[node.inputs[0]] || dirty[node.inputs[1]];
+                        (y, m, d, false)
+                    }
+                    PsbOp::GlobalAvgPool => {
+                        let inp = &acts[node.inputs[0]];
+                        let (bb, _, _, _) = dims4(inp);
+                        let mut y = global_avg_pool(inp);
+                        quantize_slice(&mut y.data);
+                        let m = masks[node.inputs[0]].as_ref().map(|mk| {
+                            let per = mk.len() / bb;
+                            (0..bb)
+                                .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
+                                .collect::<Vec<bool>>()
+                        });
+                        (y, m, dirty[node.inputs[0]], false)
+                    }
+                };
+            if Some(idx) == self.feat_node {
                 feat = Some(act.clone());
             }
             acts.push(act);
             masks.push(mask);
+            dirty.push(is_dirty);
+            had_mask.push(masked);
         }
-        Ok(PsbOutput { logits: acts.pop().expect("network has nodes"), feat, costs })
+        let logits = acts.last().expect("network has nodes").clone();
+        cache.acts = acts;
+        cache.masks = masks;
+        cache.had_mask = had_mask;
+        cache.valid = true;
+        cache.batch = b;
+        cache.x_len = x.len();
+        Ok((PsbOutput { logits, feat, costs }, stats))
     }
 
     /// Uniform-precision contraction from accumulated counts, dispatching
@@ -580,6 +871,17 @@ impl PsbNetwork {
         }
         y
     }
+}
+
+fn planes_variance(planes: &PsbPlanes) -> f64 {
+    planes
+        .sign
+        .iter()
+        .zip(&planes.exp)
+        .zip(&planes.prob)
+        .filter(|((s, _), _)| **s != 0.0)
+        .map(|((_, e), p)| ((2.0 * *e) as f64).exp2() * (*p as f64) * (1.0 - *p as f64))
+        .sum()
 }
 
 /// Charge a two-region contraction: low rows at `d_lo` incremental
@@ -727,6 +1029,28 @@ mod tests {
     use crate::rng::{Rng, Xorshift128Plus};
     use crate::sim::network::{Network, Op};
 
+    /// One-shot pass (begin + refine) with the historical default
+    /// generator — what the old `PsbNetwork::forward` did.
+    fn fwd(
+        psb: &PsbNetwork,
+        x: &Tensor,
+        plan: &PrecisionPlan,
+        seed: u64,
+    ) -> Result<PsbOutput, PlanError> {
+        fwd_kind(psb, x, plan, RngKind::Xorshift, seed)
+    }
+
+    fn fwd_kind(
+        psb: &PsbNetwork,
+        x: &Tensor,
+        plan: &PrecisionPlan,
+        kind: RngKind,
+        seed: u64,
+    ) -> Result<PsbOutput, PlanError> {
+        let mut state = psb.begin(kind, seed);
+        psb.refine(x, &mut state, plan)
+    }
+
     fn make_net(with_residual_bn: bool) -> Network {
         let mut net = Network::new((8, 8, 3), "psbnet-test");
         let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 8 }, vec![0], "c1");
@@ -771,7 +1095,7 @@ mod tests {
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let mut errs = vec![];
         for n in [1u32, 8, 64, 256] {
-            let out = psb.forward(&x, &PrecisionPlan::uniform(n), 7).unwrap();
+            let out = fwd(&psb, &x, &PrecisionPlan::uniform(n), 7).unwrap();
             errs.push(relative_logit_error(&out.logits, &float_logits));
         }
         assert!(errs[3] < errs[0], "errors should decrease: {errs:?}");
@@ -792,7 +1116,7 @@ mod tests {
             let psb = PsbNetwork::prepare(net, PsbOptions::default());
             let mut tot = 0.0;
             for seed in 0..10 {
-                let out = psb.forward(&x, &PrecisionPlan::uniform(4), seed).unwrap();
+                let out = fwd(&psb, &x, &PrecisionPlan::uniform(4), seed).unwrap();
                 tot += relative_logit_error(&out.logits, &float_logits);
             }
             tot / 10.0
@@ -811,16 +1135,13 @@ mod tests {
         settle_bn(&mut net);
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let x = batch(5, 2);
-        let lo = psb.forward(&x, &PrecisionPlan::uniform(8), 1).unwrap().costs;
-        let hi = psb.forward(&x, &PrecisionPlan::uniform(16), 1).unwrap().costs;
+        let lo = fwd(&psb, &x, &PrecisionPlan::uniform(8), 1).unwrap().costs;
+        let hi = fwd(&psb, &x, &PrecisionPlan::uniform(16), 1).unwrap().costs;
         // top half of each image interesting (block mask survives the
         // OR-pooling across stride-2 layers; an alternating mask would
         // pool to all-true)
         let mask: Vec<bool> = (0..2 * 8 * 8).map(|i| (i % 64) < 32).collect();
-        let att = psb
-            .forward(&x, &PrecisionPlan::spatial(mask, 8, 16), 1)
-            .unwrap()
-            .costs;
+        let att = fwd(&psb, &x, &PrecisionPlan::spatial(mask, 8, 16), 1).unwrap().costs;
         assert!(att.gated_adds > lo.gated_adds, "{} vs {}", att.gated_adds, lo.gated_adds);
         assert!(att.gated_adds < hi.gated_adds, "{} vs {}", att.gated_adds, hi.gated_adds);
     }
@@ -833,15 +1154,15 @@ mod tests {
         assert_eq!(psb.num_capacitors, 3);
         let x = batch(6, 2);
         let plan = PrecisionPlan::per_layer(&[4, 8, 16]).unwrap();
-        let out = psb.forward(&x, &plan, 2).unwrap();
+        let out = fwd(&psb, &x, &plan, 2).unwrap();
         assert_eq!(out.logits.shape, vec![2, 4]);
         assert!(out.feat.is_some());
         // a short plan saturates at its last entry instead of silently
         // defaulting (the old enum's 16-fallback bug)
         let short = PrecisionPlan::per_layer(&[4, 8]).unwrap();
         let long = PrecisionPlan::per_layer(&[4, 8, 8]).unwrap();
-        let a = psb.forward(&x, &short, 5).unwrap();
-        let b = psb.forward(&x, &long, 5).unwrap();
+        let a = fwd(&psb, &x, &short, 5).unwrap();
+        let b = fwd(&psb, &x, &long, 5).unwrap();
         assert_eq!(a.logits.data, b.logits.data, "saturation must equal explicit padding");
     }
 
@@ -852,9 +1173,7 @@ mod tests {
         let psb = PsbNetwork::prepare(&net, PsbOptions::default());
         let x = batch(42, 2);
         for kind in [RngKind::Xorshift, RngKind::Lfsr, RngKind::Philox] {
-            let direct = psb
-                .forward_with_kind(&x, &PrecisionPlan::uniform(16), kind, 9)
-                .unwrap();
+            let direct = fwd_kind(&psb, &x, &PrecisionPlan::uniform(16), kind, 9).unwrap();
             let mut state = psb.begin(kind, 9);
             let stage1 = psb.refine(&x, &mut state, &PrecisionPlan::uniform(6)).unwrap();
             let refined = psb.refine(&x, &mut state, &PrecisionPlan::uniform(16)).unwrap();
@@ -870,6 +1189,59 @@ mod tests {
                 direct.costs.gated_adds
             );
         }
+    }
+
+    #[test]
+    fn refine_cached_is_bit_identical_and_skips_unchanged_layers() {
+        let mut net = make_net(true);
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let x = batch(42, 2);
+        // reference: cache-less two-stage refinement
+        let plan_lo = PrecisionPlan::per_layer(&[4, 4, 4]).unwrap();
+        let plan_hi = PrecisionPlan::per_layer(&[4, 16, 16]).unwrap();
+        let mut ref_state = psb.begin(RngKind::Philox, 3);
+        psb.refine(&x, &mut ref_state, &plan_lo).unwrap();
+        let reference = psb.refine(&x, &mut ref_state, &plan_hi).unwrap();
+        // cached session: same passes over one cache
+        let mut state = psb.begin(RngKind::Philox, 3);
+        let mut cache = SimCache::default();
+        let (_, s1) = psb.refine_cached(&x, &mut state, &plan_lo, &mut cache).unwrap();
+        assert_eq!(s1.nodes_reused, 0, "fresh cache recomputes everything");
+        let (out, s2) = psb.refine_cached(&x, &mut state, &plan_hi, &mut cache).unwrap();
+        assert_eq!(out.logits.data, reference.logits.data, "cache must not change values");
+        // layer 0 kept n=4, and the first conv reads the (clean) input:
+        // it must be served from the cache
+        assert!(s2.nodes_reused >= 1, "unchanged first layer should be reused: {s2:?}");
+        assert!(
+            s2.executed_adds < s1.executed_adds,
+            "escalation must execute less than the full pass: {} vs {}",
+            s2.executed_adds,
+            s1.executed_adds
+        );
+    }
+
+    #[test]
+    fn cache_narrow_keeps_refinement_exact() {
+        let mut net = make_net(false);
+        settle_bn(&mut net);
+        let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+        let x = batch(8, 4);
+        let rows = [1usize, 3];
+        let xr = gather_blocks(&x, &rows, 4);
+        // narrowed cached escalation
+        let mut state = psb.begin(RngKind::Philox, 5);
+        let mut cache = SimCache::default();
+        psb.refine_cached(&x, &mut state, &PrecisionPlan::uniform(4), &mut cache).unwrap();
+        cache.narrow(&rows, 4);
+        let (out, _) =
+            psb.refine_cached(&xr, &mut state, &PrecisionPlan::uniform(12), &mut cache).unwrap();
+        // reference: the same rows refined without any cache
+        let mut ref_state = psb.begin(RngKind::Philox, 5);
+        psb.refine(&xr, &mut ref_state, &PrecisionPlan::uniform(4)).unwrap();
+        let reference = psb.refine(&xr, &mut ref_state, &PrecisionPlan::uniform(12)).unwrap();
+        assert_eq!(out.logits.data, reference.logits.data);
+        assert_eq!(out.logits.shape, vec![2, 4]);
     }
 
     #[test]
@@ -909,7 +1281,7 @@ mod tests {
             &net,
             PsbOptions { exact_integer: true, ..Default::default() },
         );
-        let out = exact.forward(&x, &PrecisionPlan::uniform(64), 3).unwrap();
+        let out = fwd(&exact, &x, &PrecisionPlan::uniform(64), 3).unwrap();
         let err = relative_logit_error(&out.logits, &float_logits);
         assert!(err < 0.5, "exact-path error too large: {err}");
     }
@@ -923,8 +1295,8 @@ mod tests {
             &net,
             PsbOptions { prob_bits: Some(4), deterministic: true, ..Default::default() },
         );
-        let a = det.forward(&x, &PrecisionPlan::uniform(16), 1).unwrap();
-        let b = det.forward(&x, &PrecisionPlan::uniform(16), 999).unwrap();
+        let a = fwd(&det, &x, &PrecisionPlan::uniform(16), 1).unwrap();
+        let b = fwd(&det, &x, &PrecisionPlan::uniform(16), 999).unwrap();
         assert_eq!(a.logits.data, b.logits.data, "must be seed-independent");
         // and it should approximate the float output about as well as the
         // sampled version does on average (it IS the expectation on the
@@ -947,7 +1319,7 @@ mod tests {
                 PrecisionPlan::uniform(8),
                 PrecisionPlan::per_layer(&[4, 8, 16]).unwrap(),
             ] {
-                let out = psb.forward(&x, &plan, 3).unwrap();
+                let out = fwd(&psb, &x, &plan, 3).unwrap();
                 let estimate = plan.estimate_cost(&psb.capacitor_macs(2));
                 assert_eq!(
                     out.costs.gated_adds, estimate.gated_adds,
@@ -955,6 +1327,19 @@ mod tests {
                 );
                 assert_eq!(out.costs.macs, estimate.macs);
             }
+        }
+    }
+
+    #[test]
+    fn layer_variances_cover_all_capacitor_layers() {
+        for residual_bn in [false, true] {
+            let mut net = make_net(residual_bn);
+            settle_bn(&mut net);
+            let psb = PsbNetwork::prepare(&net, PsbOptions::default());
+            let vars = psb.layer_variances();
+            assert_eq!(vars.len(), psb.num_capacitors);
+            assert!(vars.iter().all(|&v| v >= 0.0));
+            assert!(vars.iter().any(|&v| v > 0.0), "trained planes carry variance");
         }
     }
 

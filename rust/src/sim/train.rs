@@ -4,6 +4,7 @@
 //! 5e-4, β₁ 0.9, β₂ 0.999 — we keep the shape of that recipe at our
 //! miniature scale).
 
+use crate::backend::InferenceSession as _;
 use crate::data::Dataset;
 use crate::rng::{Rng, Xorshift128Plus};
 use crate::sim::layers::{argmax_rows, softmax_cross_entropy};
@@ -200,9 +201,10 @@ pub fn evaluate(net: &mut Network, data: &Dataset) -> f32 {
     correct as f32 / n as f32
 }
 
-/// PSB test-set accuracy for a prepared network under a precision plan.
+/// PSB test-set accuracy under a precision plan, executed through a
+/// [`crate::backend::Backend`] session per evaluation batch.
 pub fn evaluate_psb(
-    psb: &crate::sim::psbnet::PsbNetwork,
+    backend: &dyn crate::backend::Backend,
     data: &Dataset,
     plan: &crate::precision::PrecisionPlan,
     seed: u64,
@@ -213,12 +215,14 @@ pub fn evaluate_psb(
     for start in (0..n).step_by(64) {
         let idx: Vec<usize> = (start..(start + 64).min(n)).collect();
         let (x, labels) = data.gather_test(&idx);
-        let out = psb
-            .forward(&x, plan, seed.wrapping_add(start as u64))
-            .expect("evaluation plan must be valid");
-        let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
+        let mut sess = backend.open(plan).expect("evaluation plan must be valid");
+        let step = sess
+            .begin(&x, seed.wrapping_add(start as u64))
+            .expect("evaluation batch must run");
+        let logits = sess.logits();
+        let preds = argmax_rows(&logits.data, logits.shape[1]);
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
-        costs.merge(&out.costs);
+        costs.merge(&step.costs);
     }
     (correct as f32 / n as f32, costs)
 }

@@ -1,0 +1,277 @@
+//! Backend parity: the unified execution API's core contracts,
+//! hand-rolled property style (fixed-seed case generation, as in
+//! `properties.rs` — the offline build has no proptest crate).
+//!
+//! * `SimBackend` (over an `exact_integer` network) and `IntKernel`
+//!   produce **identical logits** for the same `(seed, plan)` — the
+//!   integer shift-add kernel is byte-for-byte the sim's Eq. 9 datapath;
+//! * `refine` through session-cached accumulators is **bit-identical**
+//!   to a one-shot pass at the target plan, on every backend;
+//! * per-layer escalations reuse the session cache (untouched layers
+//!   execute nothing; the integer kernel delta-updates clean layers);
+//! * stage charges partition the one-shot charge exactly (Eq. 8's cost
+//!   additivity);
+//! * narrowing a session to a row subset preserves bit-identity
+//!   (filter draws are shared across the batch);
+//! * `IntKernel` rejects what the integer datapath cannot express.
+
+use psb::backend::{Backend, InferenceSession, IntKernel, SimBackend};
+use psb::precision::PrecisionPlan;
+use psb::rng::{Rng, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+/// Foldable conv net (no depthwise, no residual BN) — the graph shape
+/// both backends can execute.
+fn make_net() -> Network {
+    let mut net = Network::new((8, 8, 3), "parity-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 8 }, vec![0], "c1");
+    let b1 = net.add(Op::BatchNorm, vec![c1], "bn1");
+    let r1 = net.add(Op::ReLU, vec![b1], "r1");
+    let c2 = net.add(Op::Conv { k: 3, stride: 1, cin: 8, cout: 8 }, vec![r1], "c2");
+    let b2 = net.add(Op::BatchNorm, vec![c2], "bn2");
+    let a = net.add(Op::Add, vec![b2, r1], "add");
+    let r2 = net.add(Op::ReLU, vec![a], "r2");
+    net.feat_node = Some(r2);
+    let g = net.add(Op::GlobalAvgPool, vec![r2], "gap");
+    net.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(21);
+    net.init(&mut rng);
+    net
+}
+
+fn prepared(options: PsbOptions) -> PsbNetwork {
+    let mut net = make_net();
+    for s in 0..8 {
+        let x = batch(s, 4);
+        net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    PsbNetwork::prepare(&net, options)
+}
+
+fn batch(seed: u64, b: usize) -> Tensor {
+    let mut rng = Xorshift128Plus::seed_from(seed);
+    Tensor::from_vec((0..b * 8 * 8 * 3).map(|_| rng.uniform()).collect(), &[b, 8, 8, 3])
+}
+
+/// Both backends over the *same* prepared planes; the sim runs the
+/// bit-exact integer datapath so the comparison is exact, not
+/// statistical.
+fn backend_pair() -> (SimBackend, IntKernel) {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let int = IntKernel::new(net).expect("parity net is integer-expressible");
+    (sim, int)
+}
+
+fn one_shot(backend: &dyn Backend, x: &Tensor, plan: &PrecisionPlan, seed: u64) -> Vec<f32> {
+    let mut sess = backend.open(plan).unwrap();
+    sess.begin(x, seed).unwrap();
+    sess.logits().data.clone()
+}
+
+#[test]
+fn prop_int_kernel_matches_exact_sim() {
+    let (sim, int) = backend_pair();
+    let x = batch(42, 2);
+    let plans = [
+        PrecisionPlan::uniform(4),
+        PrecisionPlan::uniform(16),
+        PrecisionPlan::per_layer(&[4, 8, 16]).unwrap(),
+    ];
+    for seed in 0..5u64 {
+        for plan in &plans {
+            let a = one_shot(&sim, &x, plan, seed);
+            let b = one_shot(&int, &x, plan, seed);
+            assert_eq!(a, b, "sim(exact) vs int kernel diverged: seed={seed} plan={plan:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_refine_from_cache_is_bit_identical_to_one_shot() {
+    let (sim, int) = backend_pair();
+    let x = batch(7, 2);
+    let target = PrecisionPlan::uniform(16);
+    for seed in 0..5u64 {
+        let mut results = Vec::new();
+        for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+            let direct = one_shot(backend, &x, &target, seed);
+            let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&x, seed).unwrap();
+            sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+            sess.refine(&target).unwrap();
+            assert_eq!(
+                sess.logits().data, direct,
+                "[{}] 4→8→16 must equal one-shot 16 (seed {seed})",
+                backend.name()
+            );
+            results.push(direct);
+        }
+        assert_eq!(results[0], results[1], "backends diverged after refinement chain");
+    }
+}
+
+#[test]
+fn per_layer_escalation_reuses_the_session_cache() {
+    let (sim, int) = backend_pair();
+    let x = batch(11, 2);
+    let lo = PrecisionPlan::per_layer(&[4, 4, 4]).unwrap();
+    let hi = PrecisionPlan::per_layer(&[4, 16, 16]).unwrap();
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let direct = one_shot(backend, &x, &hi, 3);
+        let mut sess = backend.open(&lo).unwrap();
+        let s1 = sess.begin(&x, 3).unwrap();
+        let s2 = sess.refine(&hi).unwrap();
+        assert_eq!(sess.logits().data, direct, "[{}] cached escalation", backend.name());
+        // layer 0 kept n=4 over the (clean) input: served from the cache
+        assert!(s2.nodes_reused >= 1, "[{}] expected cache reuse: {s2:?}", backend.name());
+        assert!(
+            s2.executed_adds < s1.executed_adds,
+            "[{}] escalation must execute less than the opening pass: {} vs {}",
+            backend.name(),
+            s2.executed_adds,
+            s1.executed_adds
+        );
+    }
+    // the integer kernel additionally delta-updates the first touched
+    // clean-input layer instead of rebuilding it
+    let mut sess = int.open(&PrecisionPlan::uniform(4)).unwrap();
+    sess.begin(&x, 3).unwrap();
+    let step = sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+    assert!(step.delta_updated >= 1, "O(Δ) delta path must engage: {step:?}");
+}
+
+#[test]
+fn stage_charges_partition_the_one_shot_charge() {
+    let (sim, int) = backend_pair();
+    let x = batch(5, 2);
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let mut fresh = backend.open(&PrecisionPlan::uniform(16)).unwrap();
+        let full = fresh.begin(&x, 9).unwrap();
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        let a = sess.begin(&x, 9).unwrap();
+        let b = sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+        assert_eq!(
+            a.costs.gated_adds + b.costs.gated_adds,
+            full.costs.gated_adds,
+            "[{}] stage charges must partition the direct pass",
+            backend.name()
+        );
+        assert!(b.costs.gated_adds < full.costs.gated_adds);
+        // the session's cumulative report agrees
+        assert_eq!(sess.cost_report().total.gated_adds, full.costs.gated_adds);
+    }
+}
+
+#[test]
+fn narrowed_sessions_refine_bit_identically() {
+    let (sim, int) = backend_pair();
+    let x = batch(13, 4);
+    let rows = [1usize, 3];
+    let xr = gather_rows(&x, &rows);
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        sess.begin(&x, 6).unwrap();
+        sess.narrow(&rows).unwrap();
+        sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+        // reference: the same rows, never having seen the other rows —
+        // filter draws are row-independent, so the logits agree exactly
+        let mut reference = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        reference.begin(&xr, 6).unwrap();
+        reference.refine(&PrecisionPlan::uniform(16)).unwrap();
+        assert_eq!(
+            sess.logits().data,
+            reference.logits().data,
+            "[{}] narrow must not perturb refinement",
+            backend.name()
+        );
+        assert_eq!(sess.logits().shape, vec![2, 4]);
+    }
+}
+
+#[test]
+fn failed_refine_leaves_the_session_consistent() {
+    // A non-monotonic target rejected at a *later* layer still advances
+    // earlier layers' counts before erroring.  The session must not
+    // serve stale cached activations afterwards: a subsequent valid
+    // refine has to be bit-identical to a one-shot pass at the merged
+    // counts (here: every layer ends at 16 under the same streams).
+    let (sim, int) = backend_pair();
+    let x = batch(23, 2);
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let mut sess = backend.open(&PrecisionPlan::uniform(8)).unwrap();
+        sess.begin(&x, 5).unwrap();
+        // layer 0 escalates to 16, layer 1 asks for 2 < 8 -> rejected
+        let bad = PrecisionPlan::per_layer(&[16, 2]).unwrap();
+        assert!(sess.refine(&bad).is_err(), "[{}] downgrade must error", backend.name());
+        sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+        let direct = one_shot(backend, &x, &PrecisionPlan::uniform(16), 5);
+        assert_eq!(
+            sess.logits().data, direct,
+            "[{}] retry after a failed refine must not serve stale caches",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn sim_float_sessions_match_direct_progressive_passes() {
+    // the default (float-carried) sim path: session caching must be a
+    // pure wall-time optimization
+    let net = prepared(PsbOptions::default());
+    let backend = SimBackend::new(net.clone());
+    let x = batch(17, 2);
+    let mut sess = backend.open(&PrecisionPlan::uniform(6)).unwrap();
+    sess.begin(&x, 4).unwrap();
+    sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+    let mut st = net.begin(backend.rng(), 4);
+    net.refine(&x, &mut st, &PrecisionPlan::uniform(6)).unwrap();
+    let direct = net.refine(&x, &mut st, &PrecisionPlan::uniform(16)).unwrap();
+    assert_eq!(sess.logits().data, direct.logits.data);
+}
+
+#[test]
+fn int_kernel_rejects_what_it_cannot_express() {
+    // depthwise capacitors
+    let mut dw = Network::new((8, 8, 3), "dw");
+    let c = net_stem(&mut dw);
+    let d = dw.add(Op::Depthwise { k: 3, stride: 1, c: 8 }, vec![c], "dw1");
+    let g = dw.add(Op::GlobalAvgPool, vec![d], "gap");
+    dw.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(2);
+    dw.init(&mut rng);
+    let psb = PsbNetwork::prepare(&dw, PsbOptions::default());
+    assert!(IntKernel::new(psb).is_err(), "depthwise must be rejected");
+
+    // the deterministic §4.4 variant
+    let det = prepared(PsbOptions { deterministic: true, prob_bits: Some(4), ..Default::default() });
+    assert!(IntKernel::new(det).is_err(), "deterministic variant must be rejected");
+
+    // masked plans and non-pow2 sample sizes
+    let (_, int) = backend_pair();
+    assert!(int.open(&PrecisionPlan::spatial(vec![true; 64], 4, 8)).is_err());
+    assert!(int.open(&PrecisionPlan::uniform(6)).is_err());
+    let mut sess = int.open(&PrecisionPlan::uniform(4)).unwrap();
+    let x = batch(1, 1);
+    sess.begin(&x, 1).unwrap();
+    assert!(sess.refine(&PrecisionPlan::uniform(12)).is_err(), "12 is not a power of two");
+}
+
+fn net_stem(net: &mut Network) -> usize {
+    let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 8 }, vec![0], "c1");
+    net.add(Op::ReLU, vec![c1], "r1")
+}
+
+fn gather_rows(x: &Tensor, rows: &[usize]) -> Tensor {
+    let b = x.shape[0];
+    let block = x.len() / b;
+    let mut data = Vec::with_capacity(rows.len() * block);
+    for &r in rows {
+        data.extend_from_slice(&x.data[r * block..(r + 1) * block]);
+    }
+    let mut shape = x.shape.clone();
+    shape[0] = rows.len();
+    Tensor::from_vec(data, &shape)
+}

@@ -15,7 +15,7 @@ use std::sync::atomic::Ordering;
 
 const SERVING_SHAPES: [[usize; 2]; 4] = [[27, 16], [144, 32], [288, 32], [32, 10]];
 
-fn setup() -> Option<(FloatBundle, PsbBundle, Dataset)> {
+fn setup() -> Option<(PsbBundle, Dataset)> {
     if !cfg!(feature = "pjrt") {
         eprintln!("SKIP: built without the `pjrt` feature");
         return None;
@@ -36,7 +36,7 @@ fn setup() -> Option<(FloatBundle, PsbBundle, Dataset)> {
     train(&mut net, &data, &TrainConfig { epochs: 1, ..Default::default() });
     let float = FloatBundle::from_network(&net, &SERVING_SHAPES).unwrap();
     let psb = PsbBundle::from_float(&float, Some(4));
-    Some((float, psb, data))
+    Some((psb, data))
 }
 
 fn config(disabled: bool) -> CoordinatorConfig {
@@ -50,8 +50,8 @@ fn config(disabled: bool) -> CoordinatorConfig {
 
 #[test]
 fn every_request_is_answered_exactly_once() {
-    let Some((float, psb, data)) = setup() else { return };
-    let coord = Coordinator::start(config(false), psb, float).unwrap();
+    let Some((psb, data)) = setup() else { return };
+    let coord = Coordinator::start(config(false), psb).unwrap();
     const N: usize = 40;
     let mut inflight = Vec::new();
     for i in 0..N {
@@ -74,9 +74,9 @@ fn every_request_is_answered_exactly_once() {
 
 #[test]
 fn disabled_policy_never_escalates_and_costs_less() {
-    let Some((float, psb, data)) = setup() else { return };
+    let Some((psb, data)) = setup() else { return };
     let run = |disabled: bool| {
-        let coord = Coordinator::start(config(disabled), psb.clone(), float.clone()).unwrap();
+        let coord = Coordinator::start(config(disabled), psb.clone()).unwrap();
         let mut inflight = Vec::new();
         for i in 0..24 {
             let (x, _) = data.gather_test(&[i % 64]);
@@ -97,8 +97,8 @@ fn disabled_policy_never_escalates_and_costs_less() {
 
 #[test]
 fn batcher_reports_occupancy_and_latency() {
-    let Some((float, psb, data)) = setup() else { return };
-    let coord = Coordinator::start(config(true), psb, float).unwrap();
+    let Some((psb, data)) = setup() else { return };
+    let coord = Coordinator::start(config(true), psb).unwrap();
     let mut inflight = Vec::new();
     for i in 0..16 {
         let (x, _) = data.gather_test(&[i % 64]);
@@ -116,8 +116,8 @@ fn batcher_reports_occupancy_and_latency() {
 
 #[test]
 fn oversized_image_rejected() {
-    let Some((float, psb, _)) = setup() else { return };
-    let coord = Coordinator::start(config(true), psb, float).unwrap();
+    let Some((psb, _)) = setup() else { return };
+    let coord = Coordinator::start(config(true), psb).unwrap();
     assert!(coord.submit(vec![0.0; 17]).is_err());
 }
 

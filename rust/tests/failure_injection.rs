@@ -1,9 +1,15 @@
 //! Failure injection: the system must fail loudly and precisely, not
 //! corrupt state — bad artifact dirs, malformed metadata, truncated
-//! bundles, shape mismatches.
+//! bundles, shape mismatches, dead engines that still name their root
+//! cause.
 
+use psb::backend::{pjrt_factory, sim_factory};
 use psb::coordinator::Engine;
+use psb::precision::PrecisionPlan;
+use psb::rng::{RngKind, Xorshift128Plus};
 use psb::runtime::{ArtifactMeta, FloatBundle, PsbBundle, Runtime};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 
 #[test]
 fn runtime_rejects_missing_artifact_dir() {
@@ -19,12 +25,41 @@ fn runtime_rejects_missing_artifact_dir() {
 #[test]
 fn engine_spawn_propagates_startup_error() {
     let psb = PsbBundle { layers: vec![] };
-    let float = FloatBundle { layers: vec![] };
-    let err = match Engine::spawn("/nonexistent".into(), psb, float, vec![]) {
+    let err = match Engine::spawn(pjrt_factory("/nonexistent".into(), psb, 8, vec![])) {
         Ok(_) => panic!("must fail"),
         Err(e) => e,
     };
     assert!(format!("{err:#}").contains("meta.txt"));
+}
+
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "failure-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: 2 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
+
+#[test]
+fn engine_keeps_root_cause_of_backend_failures() {
+    let engine = Engine::spawn(sim_factory(tiny_psbnet(), RngKind::Xorshift)).unwrap();
+    // malformed job: input length does not match the geometry
+    let err = engine.run_once(PrecisionPlan::uniform(4), vec![0.0; 7], 1, 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("input size"), "job error should name the cause: {msg}");
+    // the failure is retained for post-mortem queries (and would be
+    // appended to a submit-after-death error)
+    let last = engine.last_error().expect("failure must be recorded");
+    assert!(last.contains("input size"), "recorded cause: {last}");
+    // the engine survives a failed job: a well-formed one still runs
+    let ok = engine
+        .run_once(PrecisionPlan::uniform(4), vec![0.1; 8 * 8 * 3], 1, 1)
+        .expect("engine must keep serving after a bad job");
+    assert_eq!(ok.exec.logits.len(), 2);
 }
 
 #[test]
