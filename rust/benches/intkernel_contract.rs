@@ -1,0 +1,189 @@
+//! IntKernel contraction bench: packed+parallel vs the scalar reference,
+//! plus O(Δ) refine execution — emits machine-readable
+//! `BENCH_intkernel.json` so subsequent PRs have a perf trajectory.
+//!
+//! Measures, on a conv pyramid (resnet_mini) and a depthwise-separable
+//! graph:
+//! * ns/image of a full integer pass under the scalar datapath, the
+//!   packed datapath pinned to one thread (pure layout/packing win) and
+//!   the packed datapath at full parallelism;
+//! * executed accumulator adds of refine steps at growing Δn against
+//!   the executed adds of a fresh full-precision pass (refine execution
+//!   must track Δ, not total n);
+//! * a bit-identity sanity check between all datapaths before timing.
+//!
+//! Flags / env:
+//! * `--quick` or `PSB_BENCH_QUICK=1` — small batch + short budget (CI
+//!   smoke mode);
+//! * `--check` — exit non-zero unless the packed datapath is at least
+//!   as fast as the scalar baseline (the CI gate).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::backend::intkernel::Contraction;
+use psb::backend::{Backend, InferenceSession as _, IntKernel};
+use psb::precision::PrecisionPlan;
+use psb::rng::{Rng, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+/// Conv stem + two depthwise-separable blocks, BN-free so the integer
+/// kernel executes it end to end.
+fn depthwise_net(size: usize, rng: &mut impl Rng) -> Network {
+    let mut net = Network::new((size, size, 3), "dw-bench");
+    let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 16 }, vec![0], "stem");
+    let r1 = net.add(Op::ReLU, vec![c1], "stem.relu");
+    let d1 = net.add(Op::Depthwise { k: 3, stride: 1, c: 16 }, vec![r1], "dw1");
+    let rd1 = net.add(Op::ReLU, vec![d1], "dw1.relu");
+    let p1 = net.add(Op::Conv { k: 1, stride: 1, cin: 16, cout: 32 }, vec![rd1], "pw1");
+    let rp1 = net.add(Op::ReLU, vec![p1], "pw1.relu");
+    let d2 = net.add(Op::Depthwise { k: 3, stride: 2, c: 32 }, vec![rp1], "dw2");
+    let rd2 = net.add(Op::ReLU, vec![d2], "dw2.relu");
+    net.feat_node = Some(rd2);
+    let g = net.add(Op::GlobalAvgPool, vec![rd2], "gap");
+    net.add(Op::Dense { cin: 32, cout: 10 }, vec![g], "fc");
+    net.init(rng);
+    net
+}
+
+struct Timing {
+    scalar_ns: f64,
+    packed_1t_ns: f64,
+    packed_ns: f64,
+}
+
+/// Time one full `begin` pass per datapath (ns/image) after asserting
+/// the three produce bit-identical logits.
+fn time_backends(tag: &str, psb: &PsbNetwork, x: &Tensor, budget: Duration) -> Timing {
+    let b = x.shape[0];
+    let scalar = IntKernel::new(psb.clone())
+        .expect("bench net is integer-expressible")
+        .with_contraction(Contraction::Scalar);
+    let packed_1t = IntKernel::new(psb.clone()).unwrap().with_threads(1);
+    let packed = IntKernel::new(psb.clone()).unwrap();
+    let plan = PrecisionPlan::uniform(16);
+
+    // parity gate before timing anything
+    let logits_of = |backend: &dyn Backend| {
+        let mut sess = backend.open(&plan).unwrap();
+        sess.begin(x, 1).unwrap();
+        sess.logits().data.clone()
+    };
+    let want = logits_of(&scalar);
+    assert_eq!(logits_of(&packed_1t), want, "[{tag}] packed(1t) diverged from scalar");
+    assert_eq!(logits_of(&packed), want, "[{tag}] packed diverged from scalar");
+
+    let time_one = |name: &str, backend: &dyn Backend| {
+        let mut seed = 100u64;
+        let mean = harness::bench(&format!("[{tag}] {name} begin psb16 b{b}"), budget, || {
+            seed += 1;
+            let mut sess = backend.open(&plan).unwrap();
+            std::hint::black_box(sess.begin(x, seed).unwrap().executed_adds);
+        });
+        mean.as_nanos() as f64 / b as f64
+    };
+    let scalar_ns = time_one("scalar", &scalar);
+    let packed_1t_ns = time_one("packed 1-thread", &packed_1t);
+    let packed_ns = time_one("packed", &packed);
+    Timing { scalar_ns, packed_1t_ns, packed_ns }
+}
+
+fn main() {
+    let quick = std::env::var("PSB_BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick");
+    let check = std::env::args().any(|a| a == "--check");
+    let budget = Duration::from_millis(if quick { 200 } else { 600 });
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let batch = if quick { 2 } else { 8 };
+    let image = 32usize;
+
+    let mut rng = Xorshift128Plus::seed_from(21);
+    let mut conv_net = psb::models::by_name("resnet_mini", image, &mut rng);
+    let x = Tensor::from_vec(
+        (0..batch * image * image * 3).map(|_| rng.uniform()).collect(),
+        &[batch, image, image, 3],
+    );
+    for _ in 0..3 {
+        conv_net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    let conv_psb = PsbNetwork::prepare(&conv_net, PsbOptions::default());
+    let conv = time_backends("conv", &conv_psb, &x, budget);
+
+    let dw_net = depthwise_net(image, &mut rng);
+    let dw_psb = PsbNetwork::prepare(&dw_net, PsbOptions::default());
+    let dw = time_backends("depthwise", &dw_psb, &x, budget);
+
+    // refine execution vs Δn: one session escalated 8→16→32→64; the
+    // executed adds of each step against a fresh n=64 rebuild
+    let packed = IntKernel::new(conv_psb.clone()).unwrap();
+    let mut fresh = packed.open(&PrecisionPlan::uniform(64)).unwrap();
+    let fresh_step = fresh.begin(&x, 5).unwrap();
+    let mut sess = packed.open(&PrecisionPlan::uniform(8)).unwrap();
+    sess.begin(&x, 5).unwrap();
+    let mut refine_rows = Vec::new();
+    for target in [16u32, 32, 64] {
+        let step = sess.refine(&PrecisionPlan::uniform(target)).unwrap();
+        let dn = target / 2;
+        refine_rows.push(format!(
+            "    {{\"dn\": {dn}, \"target_n\": {target}, \"executed_adds\": {}, \
+             \"charged_adds\": {}, \"elapsed_ns\": {}}}",
+            step.executed_adds, step.costs.gated_adds, step.elapsed_ns
+        ));
+        println!(
+            "[refine] Δ{dn} → n={target}: executed={} charged={} (fresh n=64 executes {})",
+            step.executed_adds, step.costs.gated_adds, fresh_step.executed_adds
+        );
+    }
+
+    let speedup = conv.scalar_ns / conv.packed_ns.max(1.0);
+    let speedup_1t = conv.scalar_ns / conv.packed_1t_ns.max(1.0);
+    let dw_speedup = dw.scalar_ns / dw.packed_ns.max(1.0);
+    println!(
+        "[conv] scalar {:.0} ns/img | packed(1t) {:.0} ns/img ({speedup_1t:.2}x) | \
+         packed({threads}t) {:.0} ns/img ({speedup:.2}x)",
+        conv.scalar_ns, conv.packed_1t_ns, conv.packed_ns
+    );
+    println!(
+        "[depthwise] scalar {:.0} ns/img | packed {:.0} ns/img ({dw_speedup:.2}x)",
+        dw.scalar_ns, dw.packed_ns
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"intkernel_contract\",\n  \"quick\": {quick},\n  \
+         \"threads\": {threads},\n  \"packing_width\": 64,\n  \"batch\": {batch},\n  \
+         \"image\": {image},\n  \"conv\": {{\"scalar_ns_per_image\": {:.1}, \
+         \"packed_1t_ns_per_image\": {:.1}, \"packed_ns_per_image\": {:.1}, \
+         \"speedup_vs_scalar\": {speedup:.3}, \"speedup_1t_vs_scalar\": {speedup_1t:.3}}},\n  \
+         \"depthwise\": {{\"scalar_ns_per_image\": {:.1}, \"packed_ns_per_image\": {:.1}, \
+         \"speedup_vs_scalar\": {dw_speedup:.3}}},\n  \
+         \"fresh_n64_executed_adds\": {},\n  \"refine\": [\n{}\n  ]\n}}\n",
+        conv.scalar_ns,
+        conv.packed_1t_ns,
+        conv.packed_ns,
+        dw.scalar_ns,
+        dw.packed_ns,
+        fresh_step.executed_adds,
+        refine_rows.join(",\n")
+    );
+    std::fs::write("BENCH_intkernel.json", &json).expect("write BENCH_intkernel.json");
+    println!("wrote BENCH_intkernel.json");
+
+    if check {
+        assert!(
+            speedup >= 1.0 && dw_speedup >= 1.0,
+            "packed datapath regressed below the scalar baseline: \
+             conv {speedup:.2}x, depthwise {dw_speedup:.2}x"
+        );
+        println!("check OK: packed ≥ scalar (conv {speedup:.2}x, depthwise {dw_speedup:.2}x)");
+    }
+    if speedup < 4.0 {
+        println!(
+            "note: packed speedup {speedup:.2}x is below the 4x target on this machine \
+             ({threads} threads)"
+        );
+    }
+}

@@ -1,0 +1,338 @@
+//! The conv/dense capacitor contraction datapaths: the bit-packed,
+//! row-parallel kernel and the original scalar reference.
+//!
+//! Both compute the same raw charge
+//!
+//! ```text
+//! A[r, j] = Σ_i s_ij · ( k_ij·H_i + (n − k_ij)·L_i )    H = x≪(e+1), L = x≪e
+//! D[r, j] = Σ_i s_ij · L_i
+//! ```
+//!
+//! and are **bit-identical**: integer addition is exact, so re-ordering
+//! or re-associating the sum (packed walks `live[j] & nz[r]` word
+//! blocks; scalar walks every `(i, j)` pair) cannot change a single
+//! bit.  The same argument makes the row-parallel split deterministic —
+//! every output element is produced by exactly one thread, in a fixed
+//! per-element iteration order, so logits do not depend on the thread
+//! count or schedule (property-tested in `tests/backend_parity.rs`).
+//!
+//! Work accounting differs deliberately: the packed kernel reports the
+//! adds it *actually executed* (`popcount(live & nz)` per row×channel —
+//! zero activations execute nothing), while the scalar path keeps the
+//! legacy `rows × live-weights` convention.  Delta steps report
+//! identically on both paths.
+
+use super::pack::{count_coeffs, delta_coeffs, PackedPlanes};
+use super::CapCache;
+use crate::num::fixed::{MAX_RAW, MIN_RAW};
+use crate::num::PsbPlanes;
+
+/// Which datapath a session contracts with.  `Scalar` is the
+/// single-threaded reference the parity tests and the contraction bench
+/// compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Contraction {
+    /// Bit-packed word-blocked accumulation, parallel over row chunks.
+    #[default]
+    Packed,
+    /// The original scalar i32 loop (reference / bench baseline).
+    Scalar,
+}
+
+/// The barrel shifter: `v·2^shift` with floor on negative shifts —
+/// byte-identical to [`crate::num::Accum::add_shifted`]'s term.
+#[inline]
+pub(crate) fn shifted(v: i32, shift: i32) -> i64 {
+    let v = v as i64;
+    if shift >= 0 {
+        v << shift.min(40)
+    } else {
+        v >> (-shift).min(40)
+    }
+}
+
+/// `A ≫ log2 n`, saturate to Q16, add bias — [`crate::num::Accum::finish`]
+/// plus `Q16::sat_add`, as the exact sim path does.
+#[inline]
+pub(crate) fn finish(acc: i64, log2n: u32, bias_raw: i16) -> i32 {
+    let q = (acc >> log2n).clamp(MIN_RAW as i64, MAX_RAW as i64) as i16;
+    q.saturating_add(bias_raw) as i32
+}
+
+/// Everything a contraction needs besides the cache: the static packed
+/// planes, the raw planes (scalar path), this pass's counts and the
+/// fixed-shift renormalization.
+pub(crate) struct CapCtx<'a> {
+    pub planes: &'a PsbPlanes,
+    pub packed: &'a PackedPlanes,
+    pub counts: &'a [u32],
+    pub n: u32,
+    pub log2n: u32,
+    pub bias_raw: &'a [i16],
+    pub threads: usize,
+}
+
+/// Below this many row×weight visits the thread-spawn overhead exceeds
+/// the contraction; run inline.
+const PAR_MIN_WORK: u64 = 1 << 14;
+
+pub(crate) fn plan_threads(threads: usize, m: usize, work: u64) -> usize {
+    if work < PAR_MIN_WORK {
+        return 1;
+    }
+    threads.clamp(1, m.max(1))
+}
+
+/// Per-thread row blocks for `m` rows of `stride` elements under
+/// `threads` workers — never zero (an empty buffer yields no chunks,
+/// making the packed paths a no-op on an empty batch, like the scalar
+/// loops).
+pub(crate) fn rows_per_chunk(m: usize, threads: usize) -> usize {
+    m.div_ceil(threads).max(1)
+}
+
+/// Shared row-parallel scaffold: run `f(chunk_index, chunk)` over
+/// disjoint row blocks and sum the per-chunk executed-adds tallies.
+/// A single chunk (small work, `with_threads(1)`, or `plan_threads`'
+/// inline decision) runs on the calling thread with no spawn; more
+/// chunks fan out over a thread scope.  Every output element is
+/// produced by exactly one worker in a fixed per-element order, so
+/// results are bit-identical for any thread count.
+pub(crate) fn par_sum<T, I, F>(mut chunks: I, f: F) -> u64
+where
+    T: Send,
+    I: Iterator<Item = T>,
+    F: Fn(usize, T) -> u64 + Sync,
+{
+    let Some(first) = chunks.next() else { return 0 };
+    let Some(second) = chunks.next() else { return f(0, first) };
+    std::thread::scope(|s| {
+        let handles: Vec<_> = [first, second]
+            .into_iter()
+            .chain(chunks)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let fr = &f;
+                s.spawn(move || fr(ti, chunk))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("contraction worker panicked"))
+            .sum()
+    })
+}
+
+/// Rebuild a capacitor's charge, base rate and output from accumulated
+/// counts.  Returns the executed-adds tally.
+pub(crate) fn full_contract(
+    ctx: &CapCtx,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => full_packed(ctx, cache, out),
+        Contraction::Scalar => full_scalar(ctx, cache, out),
+    }
+}
+
+/// Apply a refine step (`Δn` new sample planes) against the cached
+/// lowering: `ΔA = Δn·D + Σ_{Δk≠0} s·Δk·(H − L)`, then re-emit the
+/// output at the new renormalization shift.  Executed adds are
+/// `rows × channels` (the `Δn·D` term) plus one per changed weight ×
+/// non-zero activation — O(Δ), not O(total n).
+pub(crate) fn delta_contract(
+    ctx: &CapCtx,
+    prev: &[u32],
+    dn: u32,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => delta_packed(ctx, prev, dn, cache, out),
+        Contraction::Scalar => delta_scalar(ctx, prev, dn, cache, out),
+    }
+}
+
+fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
+    let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * n_out)
+        .zip(cache.base.chunks_mut(rows_per * n_out))
+        .zip(out.chunks_mut(rows_per * n_out));
+    par_sum(chunks, |ti, ((acc_c, base_c), out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let xrow = &cols[r * kdim..(r + 1) * kdim];
+            let nzrow = &nz[r * words..(r + 1) * words];
+            for j in 0..n_out {
+                let coff = j * kdim;
+                let livej = &pp.live[j * words..(j + 1) * words];
+                let (mut a, mut d) = (0i64, 0i64);
+                for (w, (&lw, &zw)) in livej.iter().zip(nzrow).enumerate() {
+                    let mut bits = lw & zw;
+                    adds += bits.count_ones() as u64;
+                    while bits != 0 {
+                        let i = w * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let v = xrow[i];
+                        let e = pp.exp[coff + i] as i32;
+                        let hi = shifted(v, e + 1);
+                        let lo = shifted(v, e);
+                        a += a_hi[coff + i] as i64 * hi + a_lo[coff + i] as i64 * lo;
+                        d += pp.sign[coff + i] as i64 * lo;
+                    }
+                }
+                let at = ri * n_out + j;
+                acc_c[at] = a;
+                base_c[at] = d;
+                out_c[at] = finish(a, log2n, bias_raw[j]);
+            }
+        }
+        adds
+    })
+}
+
+fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (dc_v, ch_v, changed) = delta_coeffs(pp, prev, ctx.counts);
+    let (dc, ch) = (&dc_v, &ch_v);
+    let dnl = dn as i64;
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    let base = &cache.base;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * n_out as u64);
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache.acc.chunks_mut(rows_per * n_out).zip(out.chunks_mut(rows_per * n_out));
+    par_sum(chunks, |ti, (acc_c, out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let arow = &mut acc_c[ri * n_out..(ri + 1) * n_out];
+            let brow = &base[r * n_out..(r + 1) * n_out];
+            for (a, &d) in arow.iter_mut().zip(brow) {
+                *a += dnl * d;
+            }
+            adds += n_out as u64;
+            if changed {
+                let xrow = &cols[r * kdim..(r + 1) * kdim];
+                let nzrow = &nz[r * words..(r + 1) * words];
+                for (j, a) in arow.iter_mut().enumerate() {
+                    let coff = j * kdim;
+                    let chj = &ch[j * words..(j + 1) * words];
+                    let mut da = 0i64;
+                    for (w, (&cw, &zw)) in chj.iter().zip(nzrow).enumerate() {
+                        let mut bits = cw & zw;
+                        adds += bits.count_ones() as u64;
+                        while bits != 0 {
+                            let i = w * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = xrow[i];
+                            let e = pp.exp[coff + i] as i32;
+                            da += dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                        }
+                    }
+                    *a += da;
+                }
+            }
+            for (j, o) in out_c[ri * n_out..(ri + 1) * n_out].iter_mut().enumerate() {
+                *o = finish(arow[j], log2n, bias_raw[j]);
+            }
+        }
+        adds
+    })
+}
+
+fn full_scalar(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let planes = ctx.planes;
+    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
+    let n = ctx.n as i64;
+    let m = cache.m;
+    for r in 0..m {
+        let xrow = &cache.cols[r * kk..(r + 1) * kk];
+        for j in 0..n_out {
+            let (mut a, mut d) = (0i64, 0i64);
+            for (i, &v) in xrow.iter().enumerate() {
+                if v == 0 {
+                    continue;
+                }
+                let widx = i * n_out + j;
+                let s = planes.sign[widx];
+                if s == 0.0 {
+                    continue;
+                }
+                let si = s as i64;
+                let e = planes.exp[widx] as i32;
+                let hi = shifted(v, e + 1);
+                let lo = shifted(v, e);
+                let kcnt = ctx.counts[widx] as i64;
+                a += si * (kcnt * hi + (n - kcnt) * lo);
+                d += si * lo;
+            }
+            cache.acc[r * n_out + j] = a;
+            cache.base[r * n_out + j] = d;
+            out[r * n_out + j] = finish(a, ctx.log2n, ctx.bias_raw[j]);
+        }
+    }
+    m as u64 * ctx.packed.nnz
+}
+
+fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let planes = ctx.planes;
+    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
+    let m = cache.m;
+    let dnl = dn as i64;
+    let mut adds = 0u64;
+    for (a, &d) in cache.acc.iter_mut().zip(cache.base.iter()) {
+        *a += dnl * d;
+    }
+    adds += (m * n_out) as u64;
+    for (widx, (&now, &was)) in ctx.counts.iter().zip(prev.iter()).enumerate() {
+        let dk = (now - was) as i64;
+        if dk == 0 {
+            continue;
+        }
+        let s = planes.sign[widx];
+        if s == 0.0 {
+            continue;
+        }
+        let si = s as i64;
+        let e = planes.exp[widx] as i32;
+        let i = widx / n_out;
+        let j = widx % n_out;
+        for r in 0..m {
+            let v = cache.cols[r * kk + i];
+            if v == 0 {
+                continue;
+            }
+            cache.acc[r * n_out + j] += si * dk * (shifted(v, e + 1) - shifted(v, e));
+            adds += 1;
+        }
+    }
+    for r in 0..m {
+        for j in 0..n_out {
+            out[r * n_out + j] = finish(cache.acc[r * n_out + j], ctx.log2n, ctx.bias_raw[j]);
+        }
+    }
+    adds
+}

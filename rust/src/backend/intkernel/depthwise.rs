@@ -1,0 +1,235 @@
+//! Packed depthwise-capacitor kernel: per-channel `k×k` capacitor
+//! contractions over the lowered `[row][tap][c]` buffer from
+//! [`super::pack::lower_depthwise`].
+//!
+//! A depthwise capacitor is structurally a conv capacitor with
+//! `kdim = k·k` and `n_out = c`, except that channel `j` only reads its
+//! own activation column (`x[r][tap][j]`), so the reduction never mixes
+//! channels.  The packed planes and per-pass coefficients are therefore
+//! shared with the conv path ([`super::pack`]); only the activation
+//! gather differs.  Charge, base rate and output layouts match the conv
+//! path (`acc/base: m×c`), so the session cache, the O(Δ) refine and
+//! `narrow` treat both node kinds uniformly.
+//!
+//! Results are bit-identical to
+//! [`crate::sim::capacitor::depthwise_exact_counts`] (the sim's
+//! `exact_integer` depthwise path) for the same counts: padding taps are
+//! zero in the lowering and contribute nothing, and integer sums are
+//! order-independent.
+
+use super::contract::{finish, par_sum, plan_threads, rows_per_chunk, shifted, CapCtx, Contraction};
+use super::pack::{count_coeffs, delta_coeffs};
+use super::CapCache;
+
+/// Rebuild a depthwise capacitor's charge/base/output from accumulated
+/// counts.  Returns the executed-adds tally (packed: actual adds;
+/// scalar: the legacy `rows × live` convention).
+pub(crate) fn full_depthwise(
+    ctx: &CapCtx,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => full_packed(ctx, cache, out),
+        Contraction::Scalar => full_scalar(ctx, cache, out),
+    }
+}
+
+/// O(Δ) depthwise refine against the cached lowering: `Δn·D` plus the
+/// changed-tap walk.
+pub(crate) fn delta_depthwise(
+    ctx: &CapCtx,
+    prev: &[u32],
+    dn: u32,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => delta_packed(ctx, prev, dn, cache, out),
+        Contraction::Scalar => delta_scalar(ctx, prev, dn, cache, out),
+    }
+}
+
+fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
+    let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
+    let cols = &cache.cols;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(c as u64));
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * c)
+        .zip(cache.base.chunks_mut(rows_per * c))
+        .zip(out.chunks_mut(rows_per * c));
+    par_sum(chunks, |ti, ((acc_c, base_c), out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / c;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+            for ci in 0..c {
+                let coff = ci * kk;
+                let (mut a, mut d) = (0i64, 0i64);
+                for (w, &lw) in pp.live[ci * words..(ci + 1) * words].iter().enumerate() {
+                    let mut bits = lw;
+                    while bits != 0 {
+                        let tap = w * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let v = xrow[tap * c + ci];
+                        if v == 0 {
+                            continue;
+                        }
+                        adds += 1;
+                        let e = pp.exp[coff + tap] as i32;
+                        let hi = shifted(v, e + 1);
+                        let lo = shifted(v, e);
+                        a += a_hi[coff + tap] as i64 * hi + a_lo[coff + tap] as i64 * lo;
+                        d += pp.sign[coff + tap] as i64 * lo;
+                    }
+                }
+                let at = ri * c + ci;
+                acc_c[at] = a;
+                base_c[at] = d;
+                out_c[at] = finish(a, log2n, bias_raw[ci]);
+            }
+        }
+        adds
+    })
+}
+
+fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (dc_v, ch_v, changed) = delta_coeffs(pp, prev, ctx.counts);
+    let (dc, ch) = (&dc_v, &ch_v);
+    let dnl = dn as i64;
+    let cols = &cache.cols;
+    let base = &cache.base;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * c as u64);
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache.acc.chunks_mut(rows_per * c).zip(out.chunks_mut(rows_per * c));
+    par_sum(chunks, |ti, (acc_c, out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / c;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let arow = &mut acc_c[ri * c..(ri + 1) * c];
+            let brow = &base[r * c..(r + 1) * c];
+            for (a, &d) in arow.iter_mut().zip(brow) {
+                *a += dnl * d;
+            }
+            adds += c as u64;
+            if changed {
+                let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+                for (ci, a) in arow.iter_mut().enumerate() {
+                    let coff = ci * kk;
+                    let mut da = 0i64;
+                    for (w, &cw) in ch[ci * words..(ci + 1) * words].iter().enumerate() {
+                        let mut bits = cw;
+                        while bits != 0 {
+                            let tap = w * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = xrow[tap * c + ci];
+                            if v == 0 {
+                                continue;
+                            }
+                            adds += 1;
+                            let e = pp.exp[coff + tap] as i32;
+                            da += dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                        }
+                    }
+                    *a += da;
+                }
+            }
+            for (ci, o) in out_c[ri * c..(ri + 1) * c].iter_mut().enumerate() {
+                *o = finish(arow[ci], log2n, bias_raw[ci]);
+            }
+        }
+        adds
+    })
+}
+
+fn full_scalar(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let planes = ctx.planes;
+    let (kk, c) = (planes.shape[0], planes.shape[1]);
+    let n = ctx.n as i64;
+    let m = cache.m;
+    for r in 0..m {
+        let xrow = &cache.cols[r * kk * c..(r + 1) * kk * c];
+        for ci in 0..c {
+            let (mut a, mut d) = (0i64, 0i64);
+            for tap in 0..kk {
+                let widx = tap * c + ci;
+                let s = planes.sign[widx];
+                if s == 0.0 {
+                    continue;
+                }
+                let v = xrow[tap * c + ci];
+                if v == 0 {
+                    continue;
+                }
+                let si = s as i64;
+                let e = planes.exp[widx] as i32;
+                let hi = shifted(v, e + 1);
+                let lo = shifted(v, e);
+                let kcnt = ctx.counts[widx] as i64;
+                a += si * (kcnt * hi + (n - kcnt) * lo);
+                d += si * lo;
+            }
+            cache.acc[r * c + ci] = a;
+            cache.base[r * c + ci] = d;
+            out[r * c + ci] = finish(a, ctx.log2n, ctx.bias_raw[ci]);
+        }
+    }
+    m as u64 * ctx.packed.nnz
+}
+
+fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let planes = ctx.planes;
+    let (kk, c) = (planes.shape[0], planes.shape[1]);
+    let m = cache.m;
+    let dnl = dn as i64;
+    let mut adds = 0u64;
+    for (a, &d) in cache.acc.iter_mut().zip(cache.base.iter()) {
+        *a += dnl * d;
+    }
+    adds += (m * c) as u64;
+    for (widx, (&now, &was)) in ctx.counts.iter().zip(prev.iter()).enumerate() {
+        let dk = (now - was) as i64;
+        if dk == 0 {
+            continue;
+        }
+        let s = planes.sign[widx];
+        if s == 0.0 {
+            continue;
+        }
+        let si = s as i64;
+        let e = planes.exp[widx] as i32;
+        let tap = widx / c;
+        let ci = widx % c;
+        for r in 0..m {
+            let v = cache.cols[r * kk * c + tap * c + ci];
+            if v == 0 {
+                continue;
+            }
+            cache.acc[r * c + ci] += si * dk * (shifted(v, e + 1) - shifted(v, e));
+            adds += 1;
+        }
+    }
+    for r in 0..m {
+        for ci in 0..c {
+            out[r * c + ci] = finish(cache.acc[r * c + ci], ctx.log2n, ctx.bias_raw[ci]);
+        }
+    }
+    adds
+}

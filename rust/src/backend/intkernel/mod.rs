@@ -35,20 +35,39 @@
 //! the accumulated counts (one pass over the live weights, like any
 //! fresh contraction).
 //!
+//! ## The packed datapath
+//!
+//! The default contraction ([`Contraction::Packed`]) is bit-packed and
+//! row-parallel: planes are transposed channel-major with one `u64`
+//! live-mask block per output channel ([`pack::PackedPlanes`]), the
+//! im2col lowering carries a packed non-zero mask, and the inner loop
+//! walks `live[j] & nz[r]` 64 bits at a time (`popcount` of each block
+//! is the executed-adds tally).  Rows are split into disjoint chunks
+//! across `std::thread` workers; because every output element is
+//! produced by exactly one thread in a fixed per-element order and
+//! integer addition is exact, logits are bit-identical to the
+//! single-threaded scalar reference ([`Contraction::Scalar`]) regardless
+//! of thread count or schedule.  See `contract.rs` / `depthwise.rs`.
+//!
 //! ## Scope
 //!
 //! The integer datapath covers the deployment-shaped graph: capacitor
-//! conv/dense, ReLU (a sign gate), residual add, global average pooling
-//! and the dense head.  Depthwise capacitors and *unfoldable* stochastic
-//! BNs (which need a stochastic multiply) are rejected at construction —
+//! conv/dense/**depthwise**, ReLU (a sign gate), residual add, global
+//! average pooling and the dense head.  *Unfoldable* stochastic BNs
+//! (which need a stochastic multiply) are rejected at construction —
 //! deployment networks fold their BNs.  Plans must be uniform or
 //! per-layer with power-of-two sample sizes (the renormalization is a
 //! fixed shift); spatial masks are the simulator's domain.  The mean in
 //! the pooling layer mirrors the simulator's f32 rounding so the two
 //! backends stay bit-comparable.
 
+pub mod contract;
+pub mod depthwise;
+pub mod pack;
+
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -56,23 +75,29 @@ use crate::num::fixed::{MAX_RAW, MIN_RAW, SCALE};
 use crate::num::Q16;
 use crate::precision::{PrecisionPlan, ProgressiveState};
 use crate::rng::RngKind;
-use crate::sim::capacitor::nnz;
 use crate::sim::psbnet::{PsbNetwork, PsbOp};
 use crate::sim::tensor::Tensor;
 
 use super::{Backend, CostReport, InferenceSession, StepReport};
 
+pub use contract::Contraction;
+pub use pack::PackedPlanes;
+
 /// Integer shift-add backend over a prepared [`PsbNetwork`].
 #[derive(Debug, Clone)]
 pub struct IntKernel {
     net: Arc<PsbNetwork>,
+    /// Channel-major packed planes per node (None for non-capacitors),
+    /// built once — planes are immutable after `prepare`.
+    packed: Arc<Vec<Option<PackedPlanes>>>,
     kind: RngKind,
+    mode: Contraction,
+    threads: usize,
 }
 
 impl IntKernel {
     /// Wrap a prepared network, rejecting graphs the integer datapath
-    /// cannot express (depthwise capacitors, unfoldable BNs, the §4.4
-    /// deterministic variant).
+    /// cannot express (unfoldable BNs, the §4.4 deterministic variant).
     pub fn new(net: PsbNetwork) -> Result<IntKernel> {
         IntKernel::from_arc(Arc::new(net))
     }
@@ -81,19 +106,26 @@ impl IntKernel {
         if net.options.deterministic {
             bail!("IntKernel samples its counts; the deterministic variant runs on SimBackend");
         }
+        let mut packed = Vec::with_capacity(net.nodes.len());
         for node in &net.nodes {
             match &node.op {
-                PsbOp::DepthwiseCapacitor { .. } => {
-                    bail!("IntKernel does not support depthwise capacitors (node '{}')", node.name)
-                }
                 PsbOp::StochasticBn { .. } => bail!(
                     "IntKernel needs fully-folded BNs; node '{}' is an unfoldable stochastic BN",
                     node.name
                 ),
-                _ => {}
+                PsbOp::Capacitor { planes, .. } | PsbOp::DepthwiseCapacitor { planes, .. } => {
+                    packed.push(Some(PackedPlanes::from_planes(planes)));
+                }
+                _ => packed.push(None),
             }
         }
-        Ok(IntKernel { net, kind: RngKind::Philox })
+        Ok(IntKernel {
+            net,
+            packed: Arc::new(packed),
+            kind: RngKind::Philox,
+            mode: Contraction::Packed,
+            threads: default_threads(),
+        })
     }
 
     pub fn with_rng(mut self, kind: RngKind) -> IntKernel {
@@ -101,9 +133,29 @@ impl IntKernel {
         self
     }
 
+    /// Select the contraction datapath (default: [`Contraction::Packed`]).
+    /// The scalar path is the single-threaded reference used by the
+    /// parity tests and as the bench baseline.
+    pub fn with_contraction(mut self, mode: Contraction) -> IntKernel {
+        self.mode = mode;
+        self
+    }
+
+    /// Cap the contraction worker threads (`0` = one per available
+    /// core).  Any value produces bit-identical logits; only wall time
+    /// changes.
+    pub fn with_threads(mut self, threads: usize) -> IntKernel {
+        self.threads = if threads == 0 { default_threads() } else { threads };
+        self
+    }
+
     pub fn network(&self) -> &PsbNetwork {
         &self.net
     }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
 /// Check a plan is expressible on the integer datapath.
@@ -134,7 +186,10 @@ impl Backend for IntKernel {
         check_plan(&self.net, plan)?;
         Ok(Box::new(IntSession {
             net: self.net.clone(),
+            packed: self.packed.clone(),
             kind: self.kind,
+            mode: self.mode,
+            threads: self.threads,
             plan: plan.clone(),
             state: None,
             batch: 0,
@@ -147,24 +202,32 @@ impl Backend for IntKernel {
     }
 }
 
-/// Cached charge of one capacitor node.
+/// Cached charge of one capacitor node (conv/dense *or* depthwise —
+/// the layouts coincide: `acc`/`base` are `m × n_out`, `cols` is the
+/// node's integer lowering).
 #[derive(Debug, Clone)]
-struct CapCache {
+pub(crate) struct CapCache {
     /// Integer lowering of the node input (conv: im2col; dense: clamped
-    /// copy), `m × k` row-major.
-    cols: Vec<i32>,
-    m: usize,
+    /// copy; depthwise: per-pixel tap block), row-major.
+    pub cols: Vec<i32>,
+    /// Packed non-zero mask of `cols` (`m × words`; empty for
+    /// depthwise, whose packed loop walks live taps instead).
+    pub nz: Vec<u64>,
+    pub m: usize,
     /// Raw capacitor charge `A[r, j]` (see module docs).
-    acc: Vec<i64>,
+    pub acc: Vec<i64>,
     /// Base charge rate `D[r, j] = Σ_i s·L_i` — the `Δn` multiplier.
-    base: Vec<i64>,
+    pub base: Vec<i64>,
 }
 
 /// One integer inference: counts + per-node charge accumulators.
 #[derive(Debug, Clone)]
 struct IntSession {
     net: Arc<PsbNetwork>,
+    packed: Arc<Vec<Option<PackedPlanes>>>,
     kind: RngKind,
+    mode: Contraction,
+    threads: usize,
     plan: PrecisionPlan,
     state: Option<ProgressiveState>,
     batch: usize,
@@ -177,70 +240,9 @@ struct IntSession {
     report: CostReport,
 }
 
-/// The barrel shifter: `v·2^shift` with floor on negative shifts —
-/// byte-identical to [`crate::num::Accum::add_shifted`]'s term.
 #[inline]
-fn shifted(v: i32, shift: i32) -> i64 {
-    let v = v as i64;
-    if shift >= 0 {
-        v << shift.min(40)
-    } else {
-        v >> (-shift).min(40)
-    }
-}
-
-/// `A ≫ log2 n`, saturate to Q16, add bias — [`crate::num::Accum::finish`]
-/// plus `Q16::sat_add`, as the exact sim path does.
-#[inline]
-fn finish(acc: i64, log2n: u32, bias_raw: i16) -> i32 {
-    let q = (acc >> log2n).clamp(MIN_RAW as i64, MAX_RAW as i64) as i16;
-    q.saturating_add(bias_raw) as i32
-}
-
-#[inline]
-fn clamp_q16(v: i32) -> i32 {
+pub(crate) fn clamp_q16(v: i32) -> i32 {
     v.clamp(MIN_RAW, MAX_RAW)
-}
-
-/// SAME-padded integer im2col with the sim's `(di, dj, c)` patch order;
-/// gathered values saturate to the Q16 range (what `Q16::from_f32` does
-/// on the float path).
-#[allow(clippy::too_many_arguments)]
-fn im2col_i32(
-    x: &[i32],
-    b: usize,
-    h: usize,
-    w: usize,
-    c: usize,
-    ksize: usize,
-    stride: usize,
-) -> (Vec<i32>, usize, usize) {
-    let pad = ksize / 2;
-    let ho = h.div_ceil(stride);
-    let wo = w.div_ceil(stride);
-    let kdim = ksize * ksize * c;
-    let mut out = vec![0i32; b * ho * wo * kdim];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let base = ((bi * ho + oy) * wo + ox) * kdim;
-                for di in 0..ksize {
-                    let iy = (oy * stride + di) as isize - pad as isize;
-                    for dj in 0..ksize {
-                        let ix = (ox * stride + dj) as isize - pad as isize;
-                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                            let dst = base + (di * ksize + dj) * c;
-                            for ci in 0..c {
-                                out[dst + ci] = clamp_q16(x[src + ci]);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    (out, ho, wo)
 }
 
 impl IntSession {
@@ -251,8 +253,11 @@ impl IntSession {
     /// consistent with its counts — a subsequent valid refine resumes
     /// bit-identically (regression-tested in `tests/backend_parity.rs`).
     fn run_pass(&mut self, target: &PrecisionPlan, fresh_x: Option<&Tensor>) -> Result<StepReport> {
+        let t0 = Instant::now();
         check_plan(&self.net, target)?;
         let net = self.net.clone();
+        let packed_all = self.packed.clone();
+        let (mode, threads) = (self.mode, self.threads);
         let (h0, w0, c0) = net.input_hwc;
         let b = if let Some(x) = fresh_x { x.shape[0] } else { self.batch };
         target
@@ -260,7 +265,10 @@ impl IntSession {
             .map_err(anyhow::Error::new)?;
         let state = self.state.as_mut().expect("caller ensured begin ran");
         let (kind, seed) = (state.kind, state.seed);
-        let mut step = StepReport::default();
+        let mut step = StepReport {
+            layer_adds: vec![0; net.num_capacitors],
+            ..Default::default()
+        };
         let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(net.nodes.len());
         let mut dirty: Vec<bool> = Vec::with_capacity(net.nodes.len());
         let mut cap_layer = 0usize;
@@ -301,6 +309,7 @@ impl IntSession {
                     unit_idx += 1;
                     let (kk, n_out) = (planes.shape[0], planes.shape[1]);
                     debug_assert_eq!(n_out, *cout);
+                    let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
                     // snapshot counts for the delta path before advancing
                     let can_delta = !in_dirty && self.caps.contains_key(&idx);
                     let prev: Option<Vec<u32>> =
@@ -322,7 +331,7 @@ impl IntSession {
                                 (vec![m, n_out], m, None)
                             }
                         };
-                    let live = nnz(planes);
+                    let live = pp.nnz;
                     let bias_raw: Vec<i16> =
                         bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
                     let node_dirty = if d_lo == 0 && can_delta {
@@ -335,41 +344,20 @@ impl IntSession {
                         step.delta_updated += 1;
                         let counts = state.units[unit].counts_lo().to_vec();
                         let cache = self.caps.get_mut(&idx).expect("can_delta checked");
-                        let dn = d_lo as i64;
-                        for (a, &d) in cache.acc.iter_mut().zip(cache.base.iter()) {
-                            *a += dn * d;
-                        }
-                        step.executed_adds += (m * n_out) as u64;
-                        for (widx, (&now, &was)) in counts.iter().zip(prev.iter()).enumerate() {
-                            let dk = (now - was) as i64;
-                            if dk == 0 {
-                                continue;
-                            }
-                            let s = planes.sign[widx];
-                            if s == 0.0 {
-                                continue;
-                            }
-                            let si = s as i64;
-                            let e = planes.exp[widx] as i32;
-                            let i = widx / n_out;
-                            let j = widx % n_out;
-                            for r in 0..m {
-                                let v = cache.cols[r * kk + i];
-                                if v == 0 {
-                                    continue;
-                                }
-                                cache.acc[r * n_out + j] +=
-                                    si * dk * (shifted(v, e + 1) - shifted(v, e));
-                                step.executed_adds += 1;
-                            }
-                        }
+                        let ctx = contract::CapCtx {
+                            planes,
+                            packed: pp,
+                            counts: &counts,
+                            n: n_lo,
+                            log2n,
+                            bias_raw: &bias_raw,
+                            threads,
+                        };
                         let mut out = vec![0i32; m * n_out];
-                        for r in 0..m {
-                            for j in 0..n_out {
-                                out[r * n_out + j] =
-                                    finish(cache.acc[r * n_out + j], log2n, bias_raw[j]);
-                            }
-                        }
+                        let adds =
+                            contract::delta_contract(&ctx, &prev, d_lo, cache, &mut out, mode);
+                        step.executed_adds += adds;
+                        step.layer_adds[layer] += adds;
                         self.outs[idx] = out;
                         true
                     } else {
@@ -378,45 +366,35 @@ impl IntSession {
                         step.nodes_recomputed += 1;
                         let cols: Vec<i32> = match lower {
                             Some((k, stride)) => {
-                                let (bb, hh, ww, cc) =
+                                let dims =
                                     (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
-                                im2col_i32(&self.outs[in_idx], bb, hh, ww, cc, k, stride).0
+                                pack::im2col_i32(&self.outs[in_idx], dims, k, stride).0
                             }
                             None => self.outs[in_idx].iter().map(|&v| clamp_q16(v)).collect(),
                         };
+                        let nz = pack::pack_nonzero(&cols, m, kk);
+                        let mut cache = CapCache {
+                            cols,
+                            nz,
+                            m,
+                            acc: vec![0i64; m * n_out],
+                            base: vec![0i64; m * n_out],
+                        };
                         let counts = state.units[unit].counts_lo();
-                        let n = n_lo as i64;
-                        let mut acc = vec![0i64; m * n_out];
-                        let mut base = vec![0i64; m * n_out];
+                        let ctx = contract::CapCtx {
+                            planes,
+                            packed: pp,
+                            counts,
+                            n: n_lo,
+                            log2n,
+                            bias_raw: &bias_raw,
+                            threads,
+                        };
                         let mut out = vec![0i32; m * n_out];
-                        for r in 0..m {
-                            let xrow = &cols[r * kk..(r + 1) * kk];
-                            for j in 0..n_out {
-                                let (mut a, mut d) = (0i64, 0i64);
-                                for (i, &v) in xrow.iter().enumerate() {
-                                    if v == 0 {
-                                        continue;
-                                    }
-                                    let widx = i * n_out + j;
-                                    let s = planes.sign[widx];
-                                    if s == 0.0 {
-                                        continue;
-                                    }
-                                    let si = s as i64;
-                                    let e = planes.exp[widx] as i32;
-                                    let hi = shifted(v, e + 1);
-                                    let lo = shifted(v, e);
-                                    let kcnt = counts[widx] as i64;
-                                    a += si * (kcnt * hi + (n - kcnt) * lo);
-                                    d += si * lo;
-                                }
-                                acc[r * n_out + j] = a;
-                                base[r * n_out + j] = d;
-                                out[r * n_out + j] = finish(a, log2n, bias_raw[j]);
-                            }
-                        }
-                        step.executed_adds += m as u64 * live;
-                        self.caps.insert(idx, CapCache { cols, m, acc, base });
+                        let adds = contract::full_contract(&ctx, &mut cache, &mut out, mode);
+                        step.executed_adds += adds;
+                        step.layer_adds[layer] += adds;
+                        self.caps.insert(idx, cache);
                         self.outs[idx] = out;
                         true
                     };
@@ -424,6 +402,88 @@ impl IntSession {
                         step.costs.charge_capacitor(m as u64 * live, d_lo);
                     }
                     (out_shape, node_dirty)
+                }
+                PsbOp::DepthwiseCapacitor { planes, bias, k, stride, c } => {
+                    let in_idx = node.inputs[0];
+                    let in_dirty = dirty[in_idx];
+                    let in_shape = shapes[in_idx].clone();
+                    let (n_lo, _) = target.layer_n(cap_layer);
+                    let layer = cap_layer;
+                    cap_layer += 1;
+                    let unit = unit_idx;
+                    unit_idx += 1;
+                    let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
+                    let can_delta = !in_dirty && self.caps.contains_key(&idx);
+                    let prev: Option<Vec<u32>> =
+                        can_delta.then(|| state.units[unit].counts_lo().to_vec());
+                    let (d_lo, _) = state.units[unit]
+                        .advance(kind, seed, unit, &planes.prob, layer, n_lo, n_lo)
+                        .map_err(anyhow::Error::new)?;
+                    let log2n = n_lo.trailing_zeros();
+                    let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
+                    let ho = hh.div_ceil(*stride);
+                    let wo = ww.div_ceil(*stride);
+                    let m = bb * ho * wo;
+                    let live = pp.nnz;
+                    let bias_raw: Vec<i16> =
+                        bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
+                    let node_dirty = if d_lo == 0 && can_delta {
+                        step.nodes_reused += 1;
+                        false
+                    } else if let Some(prev) = prev.filter(|_| d_lo > 0) {
+                        step.delta_updated += 1;
+                        let counts = state.units[unit].counts_lo().to_vec();
+                        let cache = self.caps.get_mut(&idx).expect("can_delta checked");
+                        let ctx = contract::CapCtx {
+                            planes,
+                            packed: pp,
+                            counts: &counts,
+                            n: n_lo,
+                            log2n,
+                            bias_raw: &bias_raw,
+                            threads,
+                        };
+                        let mut out = vec![0i32; m * *c];
+                        let adds =
+                            depthwise::delta_depthwise(&ctx, &prev, d_lo, cache, &mut out, mode);
+                        step.executed_adds += adds;
+                        step.layer_adds[layer] += adds;
+                        self.outs[idx] = out;
+                        true
+                    } else {
+                        step.nodes_recomputed += 1;
+                        let dims = (bb, hh, ww, in_shape[3]);
+                        let (cols, _, _) =
+                            pack::lower_depthwise(&self.outs[in_idx], dims, *k, *stride);
+                        let mut cache = CapCache {
+                            cols,
+                            nz: Vec::new(),
+                            m,
+                            acc: vec![0i64; m * *c],
+                            base: vec![0i64; m * *c],
+                        };
+                        let counts = state.units[unit].counts_lo();
+                        let ctx = contract::CapCtx {
+                            planes,
+                            packed: pp,
+                            counts,
+                            n: n_lo,
+                            log2n,
+                            bias_raw: &bias_raw,
+                            threads,
+                        };
+                        let mut out = vec![0i32; m * *c];
+                        let adds = depthwise::full_depthwise(&ctx, &mut cache, &mut out, mode);
+                        step.executed_adds += adds;
+                        step.layer_adds[layer] += adds;
+                        self.caps.insert(idx, cache);
+                        self.outs[idx] = out;
+                        true
+                    };
+                    if d_lo > 0 {
+                        step.costs.charge_capacitor(m as u64 * live, d_lo);
+                    }
+                    (vec![bb, ho, wo, *c], node_dirty)
                 }
                 PsbOp::Relu => {
                     let in_idx = node.inputs[0];
@@ -474,7 +534,7 @@ impl IntSession {
                         .collect();
                     (vec![bb, cc], dirty[in_idx])
                 }
-                PsbOp::DepthwiseCapacitor { .. } | PsbOp::StochasticBn { .. } => {
+                PsbOp::StochasticBn { .. } => {
                     bail!("unsupported op reached IntKernel (validated at construction)")
                 }
             };
@@ -486,7 +546,8 @@ impl IntSession {
         self.feat = net
             .feat_node
             .map(|i| raw_to_tensor(&self.outs[i], &shapes[i]));
-        self.report.record(step);
+        step.elapsed_ns = t0.elapsed().as_nanos() as u64;
+        self.report.record(step.clone());
         Ok(step)
     }
 }
@@ -525,13 +586,16 @@ impl InferenceSession for IntSession {
         }
         for out in self.outs.iter_mut() {
             if !out.is_empty() {
-                *out = gather_i32(out, rows, old_b);
+                *out = gather(out, rows, old_b);
             }
         }
         for cache in self.caps.values_mut() {
-            cache.cols = gather_i32(&cache.cols, rows, old_b);
-            cache.acc = gather_i64(&cache.acc, rows, old_b);
-            cache.base = gather_i64(&cache.base, rows, old_b);
+            cache.cols = gather(&cache.cols, rows, old_b);
+            if !cache.nz.is_empty() {
+                cache.nz = gather(&cache.nz, rows, old_b);
+            }
+            cache.acc = gather(&cache.acc, rows, old_b);
+            cache.base = gather(&cache.base, rows, old_b);
             cache.m = cache.m / old_b * rows.len();
         }
         if !self.logits.is_empty() {
@@ -565,16 +629,10 @@ impl InferenceSession for IntSession {
     }
 }
 
-fn gather_i32(v: &[i32], rows: &[usize], old_b: usize) -> Vec<i32> {
-    let block = v.len() / old_b;
-    let mut out = Vec::with_capacity(block * rows.len());
-    for &r in rows {
-        out.extend_from_slice(&v[r * block..(r + 1) * block]);
-    }
-    out
-}
-
-fn gather_i64(v: &[i64], rows: &[usize], old_b: usize) -> Vec<i64> {
+/// Gather per-image blocks of a flat buffer whose length is a multiple
+/// of `old_b` — the one `narrow` primitive for every cached array
+/// (activations, lowerings, packed masks, charge accumulators).
+fn gather<T: Copy>(v: &[T], rows: &[usize], old_b: usize) -> Vec<T> {
     let block = v.len() / old_b;
     let mut out = Vec::with_capacity(block * rows.len());
     for &r in rows {

@@ -1,0 +1,205 @@
+//! Bit-packed, channel-major lowering of PSB planes and inputs — the
+//! data layout of the packed IntKernel contraction.
+//!
+//! A capacitor's [`crate::num::PsbPlanes`] are stored i-major
+//! (`widx = i·n_out + j`) because that is how the progressive state
+//! indexes its Binomial counts.  The contraction wants the transpose:
+//! for one output channel `j`, all of its live weights contiguous, plus
+//! a bitmask over the reduction dimension saying *which* positions are
+//! live.  [`PackedPlanes`] is that transpose, built once at backend
+//! construction (planes are immutable after `prepare`):
+//!
+//! ```text
+//! live[j·words + w]   bit i%64 of word i/64  ⇔  sign[i·n_out + j] ≠ 0
+//! sign[j·kdim + i], exp[j·kdim + i]          channel-major planes
+//! ```
+//!
+//! The matching activation-side mask is [`pack_nonzero`]: one word block
+//! per im2col row with a bit per *non-zero* element.  The inner loop
+//! then iterates `live[j] & nz[r]` — pruned weights and zero
+//! activations are skipped 64 at a time, and `popcount` of each block
+//! is exactly the number of accumulator adds the block executes.
+//!
+//! The count-dependent halves are rebuilt per pass from the progressive
+//! state: [`count_coeffs`] folds the sign into the sample split
+//! (`a_hi = s·k`, `a_lo = s·(n−k)`, so a visited weight costs two
+//! multiply-adds), and [`delta_coeffs`] packs the *changed* weights of
+//! a refine step (`dc = s·Δk` + a changed-bit mask per channel), which
+//! is what makes refine execution O(Δ).
+
+use crate::num::PsbPlanes;
+
+use super::clamp_q16;
+
+/// Channel-major, bit-masked view of one capacitor's planes.
+#[derive(Debug, Clone)]
+pub struct PackedPlanes {
+    /// Reduction length (conv: k·k·cin; dense: cin; depthwise: k·k).
+    pub kdim: usize,
+    /// Output channels.
+    pub n_out: usize,
+    /// `u64` words per channel mask: `kdim.div_ceil(64)`.
+    pub words: usize,
+    /// Live-weight mask, `n_out × words` (bit `i` ⇔ weight `(i, j)` is
+    /// un-pruned).
+    pub live: Vec<u64>,
+    /// Channel-major signs, `n_out × kdim` (0 where pruned).
+    pub sign: Vec<i8>,
+    /// Channel-major exponents, `n_out × kdim`.
+    pub exp: Vec<i16>,
+    /// Un-pruned weight count (the hardware-charge currency).
+    pub nnz: u64,
+}
+
+impl PackedPlanes {
+    pub fn from_planes(planes: &PsbPlanes) -> PackedPlanes {
+        let kdim = planes.shape[0];
+        let n_out = planes.shape[1];
+        let words = kdim.div_ceil(64).max(1);
+        let mut live = vec![0u64; n_out * words];
+        let mut sign = vec![0i8; n_out * kdim];
+        let mut exp = vec![0i16; n_out * kdim];
+        let mut nnz = 0u64;
+        for i in 0..kdim {
+            for j in 0..n_out {
+                let s = planes.sign[i * n_out + j];
+                if s == 0.0 {
+                    continue;
+                }
+                nnz += 1;
+                sign[j * kdim + i] = s as i8;
+                exp[j * kdim + i] = planes.exp[i * n_out + j] as i16;
+                live[j * words + i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        PackedPlanes { kdim, n_out, words, live, sign, exp, nnz }
+    }
+}
+
+/// Pack the non-zero structure of a lowered input buffer: one
+/// `words`-long `u64` block per row, bit `i` set iff `cols[r·kdim + i]`
+/// is non-zero.  Cached alongside the lowering (zero structure only
+/// changes when the input does).
+pub fn pack_nonzero(cols: &[i32], m: usize, kdim: usize) -> Vec<u64> {
+    let words = kdim.div_ceil(64).max(1);
+    let mut nz = vec![0u64; m * words];
+    for r in 0..m {
+        let row = &cols[r * kdim..(r + 1) * kdim];
+        let dst = &mut nz[r * words..(r + 1) * words];
+        for (i, &v) in row.iter().enumerate() {
+            if v != 0 {
+                dst[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+    nz
+}
+
+/// Per-pass contraction coefficients from accumulated Binomial counts,
+/// channel-major: `a_hi[j·kdim + i] = s·k`, `a_lo = s·(n − k)`, so the
+/// weight's charge contribution is `a_hi·(x≪(e+1)) + a_lo·(x≪e)` —
+/// identical in exact integer arithmetic to the scalar path's
+/// `s·(k·H + (n−k)·L)`.
+pub fn count_coeffs(pp: &PackedPlanes, counts: &[u32], n: u32) -> (Vec<i32>, Vec<i32>) {
+    let (kdim, n_out) = (pp.kdim, pp.n_out);
+    debug_assert_eq!(counts.len(), kdim * n_out);
+    let mut a_hi = vec![0i32; kdim * n_out];
+    let mut a_lo = vec![0i32; kdim * n_out];
+    for j in 0..n_out {
+        let coff = j * kdim;
+        for i in 0..kdim {
+            let s = pp.sign[coff + i] as i32;
+            if s == 0 {
+                continue;
+            }
+            let k = counts[i * n_out + j] as i32;
+            a_hi[coff + i] = s * k;
+            a_lo[coff + i] = s * (n as i32 - k);
+        }
+    }
+    (a_hi, a_lo)
+}
+
+/// Pack a refine step's *changed* weights: `dc[j·kdim + i] = s·Δk` plus
+/// a per-channel changed-bit mask.  Returns `(dc, mask, any_changed)`;
+/// weights whose counts did not move (or that are pruned) stay out of
+/// the mask, so delta execution scales with how many weights the Δn new
+/// sample planes actually touched.
+pub fn delta_coeffs(pp: &PackedPlanes, prev: &[u32], counts: &[u32]) -> (Vec<i32>, Vec<u64>, bool) {
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    debug_assert_eq!(prev.len(), counts.len());
+    let mut dc = vec![0i32; kdim * n_out];
+    let mut mask = vec![0u64; n_out * words];
+    let mut changed = false;
+    for (widx, (&now, &was)) in counts.iter().zip(prev.iter()).enumerate() {
+        if now == was {
+            continue;
+        }
+        let i = widx / n_out;
+        let j = widx % n_out;
+        let s = pp.sign[j * kdim + i] as i32;
+        if s == 0 {
+            continue;
+        }
+        dc[j * kdim + i] = s * (now - was) as i32;
+        mask[j * words + i / 64] |= 1u64 << (i % 64);
+        changed = true;
+    }
+    (dc, mask, changed)
+}
+
+/// SAME-padded integer im2col with the sim's `(di, dj, c)` patch order;
+/// gathered values saturate to the Q16 range (what `Q16::from_f32` does
+/// on the float path).
+pub fn im2col_i32(
+    x: &[i32],
+    dims: (usize, usize, usize, usize),
+    ksize: usize,
+    stride: usize,
+) -> (Vec<i32>, usize, usize) {
+    let (b, h, w, c) = dims;
+    let pad = ksize / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let kdim = ksize * ksize * c;
+    let mut out = vec![0i32; b * ho * wo * kdim];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((bi * ho + oy) * wo + ox) * kdim;
+                for di in 0..ksize {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    for dj in 0..ksize {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                            let dst = base + (di * ksize + dj) * c;
+                            for ci in 0..c {
+                                out[dst + ci] = clamp_q16(x[src + ci]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// SAME-padded depthwise lowering: per output pixel, the `k×k` taps of
+/// every channel, row layout `[tap][c]`; invalid (padding) taps stay
+/// zero and contribute nothing to the charge.
+///
+/// This *is* the conv im2col buffer — its row layout
+/// `(di·k + dj)·c + ci` is exactly the depthwise `[tap][c]` block with
+/// `tap = di·k + dj` — so the lowering delegates to [`im2col_i32`] and
+/// the two stay bit-identical by construction.
+#[inline]
+pub fn lower_depthwise(
+    x: &[i32],
+    dims: (usize, usize, usize, usize),
+    k: usize,
+    stride: usize,
+) -> (Vec<i32>, usize, usize) {
+    im2col_i32(x, dims, k, stride)
+}

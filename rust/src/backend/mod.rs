@@ -53,15 +53,25 @@ pub use sim::SimBackend;
 /// `costs` is the hardware-model charge of the step (the paper's
 /// progressive accounting: only the incremental samples are billed).
 /// The remaining fields are backend telemetry: how much work the session
-/// caches allowed the step to *skip*.
-#[derive(Debug, Clone, Copy, Default)]
+/// caches allowed the step to *skip*, and how long it actually took.
+#[derive(Debug, Clone, Default)]
 pub struct StepReport {
     /// Hardware-model charge of this step (incremental samples only).
     pub costs: CostCounter,
     /// Accumulator additions the backend actually executed this step
-    /// (`rows × live weights` per full contraction; delta updates and
-    /// cache hits execute less).
+    /// (delta updates and cache hits execute less; the packed IntKernel
+    /// reports true adds — zero activations and pruned weights are
+    /// skipped — while the scalar paths keep the legacy `rows × live
+    /// weights` convention per full contraction).
     pub executed_adds: u64,
+    /// Wall time of the step as measured by the backend, in
+    /// nanoseconds — the "real speed" companion to the gated-add
+    /// accounting.  Stateless backends that cannot attribute time
+    /// report 0.
+    pub elapsed_ns: u64,
+    /// Executed adds per capacitor layer (index = plan layer).  Empty
+    /// for backends without per-layer attribution.
+    pub layer_adds: Vec<u64>,
     /// Sampled units recomputed from their (refined) counts.
     pub nodes_recomputed: usize,
     /// Sampled units served from the session cache (unchanged counts
@@ -82,6 +92,10 @@ pub struct StepReport {
 pub struct CostReport {
     pub total: CostCounter,
     pub executed_adds: u64,
+    /// Backend wall time summed over the session's steps (ns).
+    pub elapsed_ns: u64,
+    /// Executed adds per capacitor layer, summed over steps.
+    pub layer_adds: Vec<u64>,
     pub steps: Vec<StepReport>,
 }
 
@@ -89,6 +103,13 @@ impl CostReport {
     pub fn record(&mut self, step: StepReport) {
         self.total.merge(&step.costs);
         self.executed_adds += step.executed_adds;
+        self.elapsed_ns += step.elapsed_ns;
+        if self.layer_adds.len() < step.layer_adds.len() {
+            self.layer_adds.resize(step.layer_adds.len(), 0);
+        }
+        for (t, &a) in self.layer_adds.iter_mut().zip(&step.layer_adds) {
+            *t += a;
+        }
         self.steps.push(step);
     }
 

@@ -139,16 +139,16 @@ impl PjrtSession {
         Ok(exec)
     }
 
-    fn store(&mut self, exec: Execution, n: u32) {
+    fn store(&mut self, exec: Execution, n: u32, elapsed_ns: u64) {
         let nc = if self.batch > 0 { exec.logits.len() / self.batch } else { 0 };
         self.logits = Tensor::from_vec(exec.logits, &[self.batch, nc.max(1)]);
         let [fb, fh, fw, fc] = exec.feat_shape;
         self.feat = Some(Tensor::from_vec(exec.feat, &[fb, fh, fw, fc]));
         self.n_applied = n;
-        // stateless artifacts measure no gated adds; record the step for
-        // bookkeeping (the coordinator estimates hardware costs
-        // geometrically, still incremental per Sec. 4.5)
-        self.report.record(StepReport::default());
+        // stateless artifacts measure no gated adds; record the step
+        // (wall time only) for bookkeeping (the coordinator estimates
+        // hardware costs geometrically, still incremental per Sec. 4.5)
+        self.report.record(StepReport { elapsed_ns, ..Default::default() });
     }
 }
 
@@ -172,9 +172,10 @@ impl InferenceSession for PjrtSession {
         self.x = Some(x.data.clone());
         self.seed = seed as u32;
         let n = self.pending_n;
+        let t0 = std::time::Instant::now();
         let exec = self.execute(n)?;
-        self.store(exec, n);
-        Ok(*self.report.last_step().expect("just recorded"))
+        self.store(exec, n, t0.elapsed().as_nanos() as u64);
+        Ok(self.report.last_step().expect("just recorded").clone())
     }
 
     fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
@@ -189,10 +190,11 @@ impl InferenceSession for PjrtSession {
                 want: n,
             }));
         }
+        let t0 = std::time::Instant::now();
         let exec = self.execute(n)?;
-        self.store(exec, n);
+        self.store(exec, n, t0.elapsed().as_nanos() as u64);
         self.plan = target.clone();
-        Ok(*self.report.last_step().expect("just recorded"))
+        Ok(self.report.last_step().expect("just recorded").clone())
     }
 
     fn narrow(&mut self, rows: &[usize]) -> Result<()> {

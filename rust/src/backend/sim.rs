@@ -98,6 +98,7 @@ struct SimSession {
 
 impl SimSession {
     fn run(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let t0 = std::time::Instant::now();
         let x = self.x.as_ref().expect("caller ensured begin ran");
         let state = self.state.as_mut().expect("caller ensured begin ran");
         let (out, stats) = self
@@ -109,12 +110,14 @@ impl SimSession {
         let step = StepReport {
             costs: out.costs,
             executed_adds: stats.executed_adds,
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            layer_adds: stats.layer_adds,
             nodes_recomputed: stats.nodes_recomputed,
             nodes_reused: stats.nodes_reused,
             cols_reused: stats.cols_reused,
             delta_updated: 0,
         };
-        self.report.record(step);
+        self.report.record(step.clone());
         Ok(step)
     }
 }

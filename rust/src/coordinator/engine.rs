@@ -21,7 +21,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, BackendFactory, InferenceSession};
+use crate::backend::{Backend, BackendFactory, InferenceSession, StepReport};
 use crate::precision::PrecisionPlan;
 use crate::runtime::Execution;
 use crate::sim::tensor::Tensor;
@@ -68,6 +68,12 @@ pub struct EngineOutput {
     /// Stateless backends (PJRT artifacts) report 0 and consumers (the
     /// coordinator's metrics) fall back to a geometric estimate.
     pub gated_adds: u64,
+    /// Accumulator adds the backend actually executed for this pass
+    /// (session caches and the O(Δ) delta paths shrink it) — the "real
+    /// speed" companion to the hardware-model charge.
+    pub executed_adds: u64,
+    /// Backend-measured wall time of the pass, in nanoseconds.
+    pub backend_ns: u64,
 }
 
 /// Handle to the engine thread.
@@ -249,7 +255,7 @@ fn begin_job(
     let xt = Tensor::from_vec(x, &[batch, h, w, c]);
     let mut sess = backend.open(&plan)?;
     let step = sess.begin(&xt, seed)?;
-    let out = output_of(sess.as_ref(), step.costs.gated_adds);
+    let out = output_of(sess.as_ref(), &step);
     Ok((sess, out))
 }
 
@@ -262,10 +268,10 @@ fn refine_job(
         sess.narrow(&rows)?;
     }
     let step = sess.refine(plan)?;
-    Ok(output_of(sess, step.costs.gated_adds))
+    Ok(output_of(sess, &step))
 }
 
-fn output_of(sess: &dyn InferenceSession, gated_adds: u64) -> EngineOutput {
+fn output_of(sess: &dyn InferenceSession, step: &StepReport) -> EngineOutput {
     let logits = sess.logits();
     let (feat, feat_shape) = match sess.feat() {
         Some(f) => {
@@ -278,7 +284,9 @@ fn output_of(sess: &dyn InferenceSession, gated_adds: u64) -> EngineOutput {
     EngineOutput {
         exec: Execution { logits: logits.data.clone(), feat, feat_shape },
         session: None,
-        gated_adds,
+        gated_adds: step.costs.gated_adds,
+        executed_adds: step.executed_adds,
+        backend_ns: step.elapsed_ns,
     }
 }
 

@@ -61,6 +61,12 @@ pub struct Metrics {
     pub latency: Histogram,
     pub stage1_latency: Histogram,
     pub gated_adds: AtomicU64,
+    /// Accumulator adds the backends actually *executed* (session caches
+    /// and the IntKernel O(Δ) delta path shrink it below the charge) —
+    /// real work, not hardware-model accounting.
+    pub executed_adds: AtomicU64,
+    /// Backend-measured wall time across all engine passes, in ns.
+    pub backend_ns: AtomicU64,
     /// Per-weight samples actually paid for (stage-1 `n_low` per row
     /// plus the incremental `n_high − n_low` per escalated row).
     pub samples_paid: AtomicU64,
@@ -116,12 +122,15 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% p50={:?} p99={:?} mean={:?}",
+            "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% \
+             exec_adds={} backend_ms={:.1} p50={:?} p99={:?} mean={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             100.0 * self.escalation_rate(),
             self.batch_occupancy(),
             100.0 * self.reuse_ratio(),
+            self.executed_adds.load(Ordering::Relaxed),
+            self.backend_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
             self.latency.mean(),

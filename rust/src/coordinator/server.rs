@@ -324,6 +324,8 @@ fn handle_stage1(
         if out.gated_adds > 0 { out.gated_adds } else { estimated },
     );
     Metrics::add(&ctx.metrics.samples_paid, ctx.policy.n_low as u64 * rows as u64);
+    Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
+    Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
     let session = out.session;
     let exec = out.exec;
     let [_, fh, fw, fc] = exec.feat_shape;
@@ -411,6 +413,8 @@ fn handle_stage2(ctx: &StageCtx, group: EscalationGroup) {
     );
     Metrics::add(&ctx.metrics.samples_paid, (n_high - n_low) as u64 * rows as u64);
     Metrics::add(&ctx.metrics.samples_reused, n_low as u64 * rows as u64);
+    Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
+    Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
     let probs = softmax_rows(&out.exec.logits, ctx.nc);
     for (row, (req, entropy)) in group.tags.into_iter().enumerate() {
         let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];

@@ -217,6 +217,84 @@ pub fn capacitor_matmul_exact_counts(
     y
 }
 
+/// Bit-exact integer **depthwise** capacitor convolution (Eq. 9 applied
+/// per channel): SAME padding, stride `ks.1`, one `k×k` capacitor filter
+/// per channel with counts indexed `widx = (di·k + dj)·c + ci`.
+///
+/// Per output element the accumulator sums
+/// `s · (k_cnt·(x≪(e+1)) + (n−k_cnt)·(x≪e))` over the valid taps, is
+/// renormalized once by `≫ log2 n` and saturates to Q16 before the bias
+/// add — exactly the conv-capacitor semantics of
+/// [`capacitor_matmul_exact_counts`], and byte-for-byte what the
+/// `IntKernel` depthwise kernel computes over its zero-padded lowering
+/// (padding taps contribute nothing; integer sums are order-free).
+/// `n` must be a power of two.  Does **not** charge costs (the caller
+/// knows how many of the counts' samples are incremental).
+pub fn depthwise_exact_counts(
+    x_q: &[Q16],
+    planes: &PsbPlanes,
+    bias: &[f32],
+    dims: (usize, usize, usize, usize),
+    ks: (usize, usize),
+    counts: &[u32],
+    n_samples: u32,
+) -> Vec<Q16> {
+    let (b, h, w, c) = dims;
+    let (k, stride) = ks;
+    assert!(n_samples.is_power_of_two(), "exact path needs power-of-two n");
+    let log2n = n_samples.trailing_zeros();
+    assert_eq!(planes.shape, vec![k * k, c]);
+    assert_eq!(x_q.len(), b * h * w * c);
+    assert_eq!(counts.len(), k * k * c);
+    let pad = k / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut y = vec![Q16::ZERO; b * ho * wo * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = ((bi * ho + oy) * wo + ox) * c;
+                for ci in 0..c {
+                    let mut acc = Accum::default();
+                    for di in 0..k {
+                        let iy = (oy * stride + di) as isize - pad as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for dj in 0..k {
+                            let ix = (ox * stride + dj) as isize - pad as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
+                            }
+                            let widx = (di * k + dj) * c + ci;
+                            let wi = planes.get(widx);
+                            if wi.sign == 0 {
+                                continue;
+                            }
+                            let xv =
+                                x_q[((bi * h + iy as usize) * w + ix as usize) * c + ci];
+                            if xv.raw() == 0 {
+                                continue;
+                            }
+                            let e = wi.exp as i32;
+                            let (mut hi, mut lo) = (Accum::default(), Accum::default());
+                            hi.add_shifted(xv, e + 1);
+                            lo.add_shifted(xv, e);
+                            let kcnt = counts[widx];
+                            acc.0 += wi.sign as i64
+                                * (kcnt as i64 * hi.0 + (n_samples - kcnt) as i64 * lo.0);
+                        }
+                    }
+                    let mut q = acc.finish(log2n);
+                    q = q.sat_add(Q16::from_f32(bias[ci]));
+                    y[dst + ci] = q;
+                }
+            }
+        }
+    }
+    y
+}
+
 /// Multiply activations by a *stochastic scalar* per channel — the
 /// un-foldable batch-norm of the "ResNet50 modified" experiment (Sec.
 /// 4.3): each scale is PSB-encoded and sampled, so successive stochastic

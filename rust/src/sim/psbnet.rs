@@ -35,7 +35,9 @@ use crate::costs::CostCounter;
 use crate::num::{discretize_prob, quantize_f32, quantize_slice, PsbPlanes, PsbWeight, Q16};
 use crate::precision::{PlanError, PrecisionPlan, ProgressiveState};
 use crate::rng::RngKind;
-use crate::sim::capacitor::{capacitor_matmul_exact_counts, nnz, realize_weights};
+use crate::sim::capacitor::{
+    capacitor_matmul_exact_counts, depthwise_exact_counts, nnz, realize_weights,
+};
 use crate::sim::layers::global_avg_pool;
 use crate::sim::network::{depthwise_forward, Network, Op};
 use crate::sim::tensor::{dims4, im2col, matmul, Tensor};
@@ -188,7 +190,7 @@ pub(crate) fn gather_mask_blocks(mask: &[bool], rows: &[usize], old_batch: usize
 
 /// What one cached pass actually executed (backend telemetry; the
 /// hardware-model charge lives in [`PsbOutput::costs`]).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct PassStats {
     /// Sampled units whose activations were recomputed.
     pub nodes_recomputed: usize,
@@ -199,6 +201,10 @@ pub struct PassStats {
     /// Accumulator additions executed by this pass (`rows × live
     /// weights` per recomputed contraction; reused nodes execute none).
     pub executed_adds: u64,
+    /// Executed adds attributed per capacitor layer (stochastic-BN work
+    /// folds into the layer whose sample size it shares, mirroring
+    /// [`PsbNetwork::capacitor_macs`]).
+    pub layer_adds: Vec<u64>,
 }
 
 /// A prepared PSB inference network.
@@ -510,7 +516,7 @@ impl PsbNetwork {
         }
         let (kind, seed) = (state.kind, state.seed);
         let mut costs = CostCounter::default();
-        let mut stats = PassStats::default();
+        let mut stats = PassStats { layer_adds: vec![0; self.num_capacitors], ..Default::default() };
         let reuse = cache.valid
             && cache.acts.len() == self.nodes.len()
             && cache.batch == b
@@ -595,7 +601,9 @@ impl PsbNetwork {
                                         (&e.0, e.1, e.2)
                                     };
                                     let m = cols.shape[0];
-                                    stats.executed_adds += m as u64 * nnz(planes);
+                                    let adds = m as u64 * nnz(planes);
+                                    stats.executed_adds += adds;
+                                    stats.layer_adds[layer] += adds;
                                     let out_mask = in_mask
                                         .as_ref()
                                         .map(|mk| pool_mask(mk, bb, hh, ww, *stride));
@@ -629,7 +637,9 @@ impl PsbNetwork {
                                     // if any of its mask pixels is set
                                     let cin = planes.shape[0];
                                     let m = inp.len() / cin;
-                                    stats.executed_adds += m as u64 * nnz(planes);
+                                    let adds = m as u64 * nnz(planes);
+                                    stats.executed_adds += adds;
+                                    stats.layer_adds[layer] += adds;
                                     let row_mask = in_mask.as_ref().map(|mk| {
                                         let per = mk.len() / m;
                                         (0..m)
@@ -702,6 +712,7 @@ impl PsbNetwork {
                             let macs =
                                 (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64 * live;
                             stats.executed_adds += macs;
+                            stats.layer_adds[layer] += macs;
                             let out = match (&out_mask, splits) {
                                 (Some(mk), true) => {
                                     // two filter realizations, per-pixel select
@@ -731,9 +742,19 @@ impl PsbNetwork {
                                     if d_lo > 0 {
                                         costs.charge_capacitor(macs, d_lo);
                                     }
-                                    depthwise_with_counts(
-                                        inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
-                                    )
+                                    if self.options.exact_integer && n_lo.is_power_of_two() {
+                                        // bit-exact Eq. 9 semantics, byte-identical
+                                        // to the IntKernel depthwise kernel
+                                        depthwise_exact(
+                                            inp, planes, bias, (*k, *stride), *c,
+                                            ust.counts_lo(), n_lo,
+                                        )
+                                    } else {
+                                        depthwise_with_counts(
+                                            inp, planes, bias, *k, *stride, *c,
+                                            ust.counts_lo(), n_lo,
+                                        )
+                                    }
                                 }
                             };
                             (out, out_mask, true, in_masked)
@@ -778,6 +799,11 @@ impl PsbNetwork {
                                 }
                             }
                             stats.executed_adds += out.len() as u64;
+                            // folds into the layer whose n it shares
+                            let li = cap_layer.min(stats.layer_adds.len().saturating_sub(1));
+                            if let Some(slot) = stats.layer_adds.get_mut(li) {
+                                *slot += out.len() as u64;
+                            }
                             if d > 0 {
                                 costs.charge_capacitor(out.len() as u64, d);
                             }
@@ -981,6 +1007,27 @@ fn pool_mask(mask: &[bool], b: usize, h: usize, w: usize, stride: usize) -> Vec<
         }
     }
     out
+}
+
+/// Bit-exact integer depthwise capacitor pass (Eq. 9): Q16-quantize the
+/// activations, contract with [`depthwise_exact_counts`], and carry the
+/// result back as floats on the Q16 grid — the depthwise analogue of the
+/// `exact_integer` conv path.
+fn depthwise_exact(
+    x: &Tensor,
+    planes: &PsbPlanes,
+    bias: &[f32],
+    ks: (usize, usize),
+    c: usize,
+    counts: &[u32],
+    n: u32,
+) -> Tensor {
+    let (b, h, w, _) = dims4(x);
+    let xq: Vec<Q16> = x.data.iter().map(|&v| Q16::from_f32(v)).collect();
+    let yq = depthwise_exact_counts(&xq, planes, bias, (b, h, w, c), ks, counts, n);
+    let ho = h.div_ceil(ks.1);
+    let wo = w.div_ceil(ks.1);
+    Tensor::from_vec(yq.into_iter().map(|q| q.to_f32()).collect(), &[b, ho, wo, c])
 }
 
 /// Depthwise convolution with weights realized from accumulated counts.

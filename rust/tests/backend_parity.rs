@@ -15,6 +15,7 @@
 //!   (filter draws are shared across the batch);
 //! * `IntKernel` rejects what the integer datapath cannot express.
 
+use psb::backend::intkernel::Contraction;
 use psb::backend::{Backend, InferenceSession, IntKernel, SimBackend};
 use psb::precision::PrecisionPlan;
 use psb::rng::{Rng, Xorshift128Plus};
@@ -234,16 +235,27 @@ fn sim_float_sessions_match_direct_progressive_passes() {
 
 #[test]
 fn int_kernel_rejects_what_it_cannot_express() {
-    // depthwise capacitors
-    let mut dw = Network::new((8, 8, 3), "dw");
-    let c = net_stem(&mut dw);
-    let d = dw.add(Op::Depthwise { k: 3, stride: 1, c: 8 }, vec![c], "dw1");
-    let g = dw.add(Op::GlobalAvgPool, vec![d], "gap");
-    dw.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+    // unfoldable (residual) stochastic BNs need a stochastic multiply
+    let mut resid = Network::new((8, 8, 3), "resid-bn");
+    let r1 = net_stem(&mut resid);
+    let c2 = resid.add(Op::Conv { k: 3, stride: 1, cin: 8, cout: 8 }, vec![r1], "c2");
+    let a = resid.add(Op::Add, vec![c2, r1], "add");
+    let b2 = resid.add(Op::BatchNorm, vec![a], "bn2");
+    let r2 = resid.add(Op::ReLU, vec![b2], "r2");
+    let g = resid.add(Op::GlobalAvgPool, vec![r2], "gap");
+    resid.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
     let mut rng = Xorshift128Plus::seed_from(2);
-    dw.init(&mut rng);
-    let psb = PsbNetwork::prepare(&dw, PsbOptions::default());
-    assert!(IntKernel::new(psb).is_err(), "depthwise must be rejected");
+    resid.init(&mut rng);
+    for s in 0..4 {
+        let x = batch(s, 2);
+        resid.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    let psb = PsbNetwork::prepare(&resid, PsbOptions::default());
+    assert!(IntKernel::new(psb).is_err(), "unfoldable stochastic BN must be rejected");
+
+    // depthwise capacitors are now expressible (packed depthwise kernel)
+    let psb = PsbNetwork::prepare(&make_depthwise_net(), PsbOptions::default());
+    assert!(IntKernel::new(psb).is_ok(), "depthwise is supported since the packed kernel");
 
     // the deterministic §4.4 variant
     let det = prepared(PsbOptions { deterministic: true, prob_bits: Some(4), ..Default::default() });
@@ -262,6 +274,184 @@ fn int_kernel_rejects_what_it_cannot_express() {
 fn net_stem(net: &mut Network) -> usize {
     let c1 = net.add(Op::Conv { k: 3, stride: 1, cin: 3, cout: 8 }, vec![0], "c1");
     net.add(Op::ReLU, vec![c1], "r1")
+}
+
+/// Conv stem + depthwise + dense head — the MobileNet-ish graph shape
+/// the packed depthwise kernel opens to the integer backend.
+fn make_depthwise_net() -> Network {
+    let mut net = Network::new((8, 8, 3), "dw-parity");
+    let r1 = net_stem(&mut net);
+    let d1 = net.add(Op::Depthwise { k: 3, stride: 2, c: 8 }, vec![r1], "dw1");
+    let r2 = net.add(Op::ReLU, vec![d1], "r2");
+    net.feat_node = Some(r2);
+    let g = net.add(Op::GlobalAvgPool, vec![r2], "gap");
+    net.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(7);
+    net.init(&mut rng);
+    net
+}
+
+/// The packed, parallel contraction must be **bit-identical** to the
+/// scalar i32 reference — one-shot, across refinement chains, after
+/// `narrow`, for any thread count, and on reduction lengths below,
+/// above and not a multiple of the 64-bit packing width (dense kdim 8,
+/// stem kdim 27, conv kdim 72 here).
+#[test]
+fn prop_packed_contraction_matches_scalar_bit_identically() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let scalar = IntKernel::new(net.clone())
+        .unwrap()
+        .with_contraction(Contraction::Scalar);
+    let packed: Vec<IntKernel> = [0usize, 1, 3]
+        .iter()
+        .map(|&t| IntKernel::new(net.clone()).unwrap().with_threads(t))
+        .collect();
+    let x = batch(31, 4);
+    let plans = [
+        PrecisionPlan::uniform(4),
+        PrecisionPlan::uniform(16),
+        PrecisionPlan::per_layer(&[4, 8, 16]).unwrap(),
+    ];
+    for seed in 0..3u64 {
+        for plan in &plans {
+            let want = one_shot(&scalar, &x, plan, seed);
+            for (pi, p) in packed.iter().enumerate() {
+                assert_eq!(
+                    one_shot(p, &x, plan, seed),
+                    want,
+                    "packed[{pi}] diverged from scalar: seed={seed} plan={plan:?}"
+                );
+            }
+        }
+        // refine chain + narrow, against the scalar session doing the same
+        let mut sref = scalar.open(&PrecisionPlan::uniform(4)).unwrap();
+        sref.begin(&x, seed).unwrap();
+        sref.narrow(&[0, 2]).unwrap();
+        sref.refine(&PrecisionPlan::uniform(8)).unwrap();
+        sref.refine(&PrecisionPlan::uniform(32)).unwrap();
+        for (pi, p) in packed.iter().enumerate() {
+            let mut sess = p.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&x, seed).unwrap();
+            sess.narrow(&[0, 2]).unwrap();
+            sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+            let step = sess.refine(&PrecisionPlan::uniform(32)).unwrap();
+            assert_eq!(
+                sess.logits().data,
+                sref.logits().data,
+                "packed[{pi}] narrowed refine chain diverged (seed {seed})"
+            );
+            assert!(step.delta_updated >= 1, "packed delta path must engage: {step:?}");
+        }
+    }
+}
+
+/// Depthwise graphs: the integer kernel and the `exact_integer` sim
+/// produce identical logits, through one-shot passes and cached
+/// refinement, on both contraction datapaths.
+#[test]
+fn prop_depthwise_int_kernel_matches_exact_sim() {
+    let psb = PsbNetwork::prepare(
+        &make_depthwise_net(),
+        PsbOptions { exact_integer: true, ..Default::default() },
+    );
+    let sim = SimBackend::new(psb.clone());
+    let scalar = IntKernel::new(psb.clone())
+        .unwrap()
+        .with_contraction(Contraction::Scalar);
+    let packed = IntKernel::new(psb).unwrap();
+    let x = batch(19, 3);
+    let plans = [PrecisionPlan::uniform(8), PrecisionPlan::per_layer(&[4, 8, 16]).unwrap()];
+    for seed in 0..3u64 {
+        for plan in &plans {
+            let want = one_shot(&sim, &x, plan, seed);
+            assert_eq!(
+                one_shot(&packed, &x, plan, seed),
+                want,
+                "depthwise packed vs exact sim: seed={seed} plan={plan:?}"
+            );
+            assert_eq!(
+                one_shot(&scalar, &x, plan, seed),
+                want,
+                "depthwise scalar vs exact sim: seed={seed} plan={plan:?}"
+            );
+        }
+        // uniform refine-from-cache (stem deltas, depthwise rebuilds on
+        // its changed input) stays bit-identical to one-shot
+        let direct = one_shot(&packed, &x, &PrecisionPlan::uniform(32), seed);
+        for backend in [&sim as &dyn Backend, &scalar as &dyn Backend, &packed as &dyn Backend] {
+            let mut sess = backend.open(&PrecisionPlan::uniform(8)).unwrap();
+            sess.begin(&x, seed).unwrap();
+            sess.refine(&PrecisionPlan::uniform(32)).unwrap();
+            assert_eq!(
+                sess.logits().data,
+                direct,
+                "[{}] depthwise refine 8→32 vs one-shot 32 (seed {seed})",
+                backend.name()
+            );
+        }
+        // per-layer escalation that keeps the stem fixed: the depthwise
+        // node's input is clean, so it takes the O(Δ) depthwise delta
+        // path — and must still match the sim doing the same escalation
+        let lo = PrecisionPlan::per_layer(&[4, 4, 4]).unwrap();
+        let hi = PrecisionPlan::per_layer(&[4, 16, 16]).unwrap();
+        let mut sim_sess = sim.open(&lo).unwrap();
+        sim_sess.begin(&x, seed).unwrap();
+        sim_sess.refine(&hi).unwrap();
+        for backend in [&scalar as &dyn Backend, &packed as &dyn Backend] {
+            let mut sess = backend.open(&lo).unwrap();
+            sess.begin(&x, seed).unwrap();
+            let step = sess.refine(&hi).unwrap();
+            assert!(
+                step.delta_updated >= 1,
+                "[{}] depthwise delta path must engage: {step:?}",
+                backend.name()
+            );
+            assert_eq!(
+                sess.logits().data,
+                sim_sess.logits().data,
+                "[{}] per-layer depthwise escalation diverged (seed {seed})",
+                backend.name()
+            );
+        }
+    }
+}
+
+/// Refine *execution* is O(Δ): a small escalation executes no more adds
+/// than a large one from the same base, and a modest escalation executes
+/// strictly less than rebuilding at the target — work follows the new
+/// samples, not the total.
+#[test]
+fn packed_refine_executed_adds_scale_with_delta() {
+    let (_, int) = backend_pair();
+    let x = batch(3, 2);
+    // fresh n=8 pass: every capacitor rebuilds in full
+    let mut fresh = int.open(&PrecisionPlan::uniform(8)).unwrap();
+    let full = fresh.begin(&x, 11).unwrap();
+    // Δ4 escalation of an existing n=4 session: delta path on the first
+    // capacitor, strictly less executed work than the rebuild
+    let mut sess = int.open(&PrecisionPlan::uniform(4)).unwrap();
+    sess.begin(&x, 11).unwrap();
+    let d4 = sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+    assert!(d4.delta_updated >= 1, "delta path must engage: {d4:?}");
+    assert!(
+        d4.executed_adds < full.executed_adds,
+        "Δ4 refine must execute less than a fresh n=8 pass: {} vs {}",
+        d4.executed_adds,
+        full.executed_adds
+    );
+    // Δ monotonicity from the same base: changed-weight sets are nested
+    let mut s2 = int.open(&PrecisionPlan::uniform(4)).unwrap();
+    s2.begin(&x, 11).unwrap();
+    let d60 = s2.refine(&PrecisionPlan::uniform(64)).unwrap();
+    assert!(
+        d4.executed_adds < d60.executed_adds,
+        "executed adds must grow with Δn: Δ4={} Δ60={}",
+        d4.executed_adds,
+        d60.executed_adds
+    );
+    // per-layer reporting covers every capacitor layer and sums up
+    assert_eq!(d4.layer_adds.len(), int.network().num_capacitors);
+    assert_eq!(d4.layer_adds.iter().sum::<u64>(), d4.executed_adds);
 }
 
 fn gather_rows(x: &Tensor, rows: &[usize]) -> Tensor {
