@@ -12,11 +12,19 @@
 //!   must track Δ, not total n);
 //! * a bit-identity sanity check between all datapaths before timing.
 //!
+//! Also measures **row-masked execution** (the attention path): one
+//! stage-1 session at `n_low`, escalated to spatial plans at mask
+//! fractions 0.35 / 0.5 / 1.0 — ns/image, executed adds and charged
+//! gated adds of the high-precision increment, against the full-plan
+//! (uniform `n_high`) refine.  Masked rows finish early at `n_low`, so
+//! the 0.35 row must land strictly below the full-plan pass.
+//!
 //! Flags / env:
 //! * `--quick` or `PSB_BENCH_QUICK=1` — small batch + short budget (CI
 //!   smoke mode);
 //! * `--check` — exit non-zero unless the packed datapath is at least
-//!   as fast as the scalar baseline (the CI gate).
+//!   as fast as the scalar baseline AND the masked-0.35 refine is
+//!   faster than the full-plan refine (the CI gates).
 
 #[path = "harness.rs"]
 mod harness;
@@ -139,6 +147,64 @@ fn main() {
         );
     }
 
+    // ---- row-masked (spatial) refine: the attend→refine increment ------
+    // A block mask (top rows of each image) survives OR-pooling through
+    // strides roughly intact; fraction 1.0 ≡ every row attended.
+    let top_mask = |frac: f64| -> Vec<bool> {
+        let cut = ((image as f64 * frac).round() as usize).min(image);
+        (0..batch * image * image)
+            .map(|i| (i % (image * image)) / image < cut)
+            .collect()
+    };
+    // parity gate first: masked packed ≡ masked scalar (bit-identity)
+    let scalar_kernel =
+        IntKernel::new(conv_psb.clone()).unwrap().with_contraction(Contraction::Scalar);
+    {
+        let plan = PrecisionPlan::spatial(top_mask(0.35), 8, 16);
+        let mut a = packed.open(&plan).unwrap();
+        a.begin(&x, 9).unwrap();
+        let mut b = scalar_kernel.open(&plan).unwrap();
+        b.begin(&x, 9).unwrap();
+        assert_eq!(a.logits().data, b.logits().data, "[masked] packed diverged from scalar");
+    }
+    // baseline: full-plan (uniform n_high) refine of a stage-1 session
+    let mut base = packed.open(&PrecisionPlan::uniform(8)).unwrap();
+    base.begin(&x, 5).unwrap();
+    let time_refine = |name: &str, plan: &PrecisionPlan| -> (f64, u64, u64) {
+        let mut exec = 0u64;
+        let mut charged = 0u64;
+        let mean = harness::bench(&format!("[masked] {name} refine b{batch}"), budget, || {
+            let mut sess = base.fork().expect("int sessions fork");
+            let step = sess.refine(plan).unwrap();
+            exec = step.executed_adds;
+            charged = step.costs.gated_adds;
+            std::hint::black_box(step.executed_adds);
+        });
+        (mean.as_nanos() as f64 / batch as f64, exec, charged)
+    };
+    let (full_refine_ns, full_refine_adds, full_refine_charged) =
+        time_refine("full-plan 8→16", &PrecisionPlan::uniform(16));
+    let fractions = [0.35f64, 0.5, 1.0];
+    let mut masked_rows = Vec::new();
+    let mut masked_035_ns = f64::INFINITY;
+    let mut masked_035_adds = u64::MAX;
+    for (fi, &f) in fractions.iter().enumerate() {
+        let plan = PrecisionPlan::spatial(top_mask(f), 8, 16);
+        let (ns, exec, charged) = time_refine(&format!("mask {f:.2} 8/16"), &plan);
+        if fi == 0 {
+            masked_035_ns = ns;
+            masked_035_adds = exec;
+        }
+        println!(
+            "[masked] fraction {f:.2}: {ns:.0} ns/img, executed {exec} adds, charged {charged} \
+             (full-plan: {full_refine_ns:.0} ns/img, {full_refine_adds} adds)"
+        );
+        masked_rows.push(format!(
+            "    {{\"fraction\": {f:.2}, \"refine_ns_per_image\": {ns:.1}, \
+             \"executed_adds\": {exec}, \"charged_adds\": {charged}}}"
+        ));
+    }
+
     let speedup = conv.scalar_ns / conv.packed_ns.max(1.0);
     let speedup_1t = conv.scalar_ns / conv.packed_1t_ns.max(1.0);
     let dw_speedup = dw.scalar_ns / dw.packed_ns.max(1.0);
@@ -152,6 +218,11 @@ fn main() {
         dw.scalar_ns, dw.packed_ns
     );
 
+    let masked_speedup = full_refine_ns / masked_035_ns.max(1.0);
+    println!(
+        "[masked] 0.35 refine {masked_035_ns:.0} ns/img vs full-plan {full_refine_ns:.0} ns/img \
+         ({masked_speedup:.2}x; executed {masked_035_adds} vs {full_refine_adds} adds)"
+    );
     let json = format!(
         "{{\n  \"bench\": \"intkernel_contract\",\n  \"quick\": {quick},\n  \
          \"threads\": {threads},\n  \"packing_width\": 64,\n  \"batch\": {batch},\n  \
@@ -160,14 +231,19 @@ fn main() {
          \"speedup_vs_scalar\": {speedup:.3}, \"speedup_1t_vs_scalar\": {speedup_1t:.3}}},\n  \
          \"depthwise\": {{\"scalar_ns_per_image\": {:.1}, \"packed_ns_per_image\": {:.1}, \
          \"speedup_vs_scalar\": {dw_speedup:.3}}},\n  \
-         \"fresh_n64_executed_adds\": {},\n  \"refine\": [\n{}\n  ]\n}}\n",
+         \"fresh_n64_executed_adds\": {},\n  \"refine\": [\n{}\n  ],\n  \
+         \"masked\": {{\"full_refine_ns_per_image\": {full_refine_ns:.1}, \
+         \"full_refine_executed_adds\": {full_refine_adds}, \
+         \"full_refine_charged_adds\": {full_refine_charged}, \
+         \"speedup_035_vs_full\": {masked_speedup:.3}, \"rows\": [\n{}\n  ]}}\n}}\n",
         conv.scalar_ns,
         conv.packed_1t_ns,
         conv.packed_ns,
         dw.scalar_ns,
         dw.packed_ns,
         fresh_step.executed_adds,
-        refine_rows.join(",\n")
+        refine_rows.join(",\n"),
+        masked_rows.join(",\n")
     );
     std::fs::write("BENCH_intkernel.json", &json).expect("write BENCH_intkernel.json");
     println!("wrote BENCH_intkernel.json");
@@ -178,7 +254,20 @@ fn main() {
             "packed datapath regressed below the scalar baseline: \
              conv {speedup:.2}x, depthwise {dw_speedup:.2}x"
         );
-        println!("check OK: packed ≥ scalar (conv {speedup:.2}x, depthwise {dw_speedup:.2}x)");
+        assert!(
+            masked_035_ns < full_refine_ns,
+            "masked-0.35 refine must beat the full-plan refine: \
+             {masked_035_ns:.0} vs {full_refine_ns:.0} ns/img"
+        );
+        assert!(
+            masked_035_adds < full_refine_adds,
+            "masked-0.35 refine must execute fewer adds than the full plan: \
+             {masked_035_adds} vs {full_refine_adds}"
+        );
+        println!(
+            "check OK: packed ≥ scalar (conv {speedup:.2}x, depthwise {dw_speedup:.2}x); \
+             masked-0.35 {masked_speedup:.2}x vs full-plan refine"
+        );
     }
     if speedup < 4.0 {
         println!(

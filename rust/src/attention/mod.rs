@@ -13,10 +13,16 @@
 //! 3. `refine` the *same session* to the resulting spatial plan — masked
 //!    regions add only the `n_high − n_low` missing samples (Eq. 8's
 //!    additivity), which is the paper's −33% headline.
+//!
+//! The pipeline is backend-generic: any [`Backend`] whose sessions
+//! execute spatial plans can run it — the float simulator *or* the
+//! integer shift-add `IntKernel`, whose row-masked contraction turns
+//! the masked refine into executed work proportional to the attended
+//! fraction (`psb experiment attn --backend int`).
 
-use crate::backend::{Backend, InferenceSession, SimBackend};
+use crate::backend::{Backend, InferenceSession};
 use crate::costs::CostCounter;
-use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy, SpatialAttention};
+use crate::precision::{PrecisionPlan, PrecisionPolicy, SpatialAttention};
 use crate::sim::tensor::{dims4, Tensor};
 
 /// Pixelwise channel entropy of a feature map `[B,H,W,C] -> [B,H,W]`.
@@ -120,9 +126,10 @@ pub struct AttentionOutput {
 
 /// The full two-stage mechanism of Sec. 4.5 / Table 1 "attention":
 /// stage 1 at `n_low` everywhere → entropy mask → progressive refinement
-/// of the same session to the `n_low/n_high` spatial split.
+/// of the same session to the `n_low/n_high` spatial split, on any
+/// [`Backend`] whose sessions accept spatial plans (sim or IntKernel).
 pub fn adaptive_forward(
-    backend: &SimBackend,
+    backend: &dyn Backend,
     x: &Tensor,
     n_low: u32,
     n_high: u32,
@@ -133,7 +140,7 @@ pub fn adaptive_forward(
 
 /// As [`adaptive_forward`] with an explicit threshold policy.
 pub fn adaptive_forward_with(
-    backend: &SimBackend,
+    backend: &dyn Backend,
     x: &Tensor,
     n_low: u32,
     n_high: u32,
@@ -149,9 +156,9 @@ pub fn adaptive_forward_with(
         .feat()
         .expect("network must designate a feat node")
         .clone();
-    // mask at the *actual* input resolution (the simulator is fully
+    // mask at the *actual* input resolution (the backends are fully
     // convolutional, so x need not match the nominal prepare-time size)
-    let mut ctx = PlanContext::for_network(backend.network(), b);
+    let mut ctx = backend.plan_context(b);
     ctx.input_hw = (h, w);
     let plan = SpatialAttention { n_low, n_high, threshold: thr }
         .plan(&ctx.with_feat(&feat))
@@ -186,6 +193,8 @@ pub fn adaptive_forward_with(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::SimBackend;
+    use crate::precision::PlanContext;
     use crate::rng::Xorshift128Plus;
     use crate::sim::psbnet::{PsbNetwork, PsbOptions};
 

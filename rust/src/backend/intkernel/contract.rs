@@ -22,10 +22,136 @@
 //! legacy `rows × live-weights` convention.  Delta steps report
 //! identically on both paths.
 
-use super::pack::{count_coeffs, delta_coeffs, PackedPlanes};
+use super::pack::{count_coeffs, delta_coeffs, delta_coeffs_signed, PackedPlanes};
 use super::CapCache;
 use crate::num::fixed::{MAX_RAW, MIN_RAW};
 use crate::num::PsbPlanes;
+
+/// Two-level (row-masked) view of one contraction: base-track counts at
+/// `n_lo` for rows outside the attended region, high-track counts at
+/// `n_hi` inside it.  `row_hi` is the *new* region flag per contraction
+/// row; empty ⇔ every row on the base track (a uniform pass).
+pub(crate) struct MaskedCtx<'a> {
+    pub planes: &'a PsbPlanes,
+    pub packed: &'a PackedPlanes,
+    pub counts_lo: &'a [u32],
+    pub counts_hi: &'a [u32],
+    pub n_lo: u32,
+    pub n_hi: u32,
+    pub bias_raw: &'a [i16],
+    pub threads: usize,
+    pub row_hi: &'a [bool],
+}
+
+impl MaskedCtx<'_> {
+    #[inline]
+    pub(crate) fn is_hi(&self, r: usize) -> bool {
+        !self.row_hi.is_empty() && self.row_hi[r]
+    }
+
+    #[inline]
+    pub(crate) fn counts(&self, hi: bool) -> &[u32] {
+        if hi {
+            self.counts_hi
+        } else {
+            self.counts_lo
+        }
+    }
+
+    #[inline]
+    pub(crate) fn n(&self, hi: bool) -> u32 {
+        if hi {
+            self.n_hi
+        } else {
+            self.n_lo
+        }
+    }
+
+    #[inline]
+    pub(crate) fn log2n(&self, hi: bool) -> u32 {
+        self.n(hi).trailing_zeros()
+    }
+}
+
+/// What the previous pass left in a node's cache: the counts both tracks
+/// held, the levels they sat at, and each row's region (`row_hi` empty ⇔
+/// all rows on the base track).  `None` prev ⇒ rebuild every row.
+pub(crate) struct StepPrev<'a> {
+    pub counts_lo: &'a [u32],
+    pub counts_hi: &'a [u32],
+    pub levels: (u32, u32),
+    pub row_hi: &'a [bool],
+}
+
+impl StepPrev<'_> {
+    #[inline]
+    pub(crate) fn is_hi(&self, r: usize) -> bool {
+        !self.row_hi.is_empty() && self.row_hi[r]
+    }
+}
+
+/// One (prev-region, new-region) combo of the masked delta step:
+/// `ΔA = dn·D + Σ dc·(H − L)` moves a row's charge from its previous
+/// track/level to the new one.  Stored only when it does something —
+/// a `None` combo means its rows finish early with zero work.
+pub(crate) struct ComboPack {
+    pub dn: i64,
+    pub dc: Vec<i32>,
+    pub mask: Vec<u64>,
+    pub any: bool,
+}
+
+#[inline]
+pub(crate) fn combo_idx(prev_hi: bool, new_hi: bool) -> usize {
+    ((prev_hi as usize) << 1) | new_hi as usize
+}
+
+/// Cheap "did this combo move" predicate — the scalar reference's
+/// replacement for materializing a [`ComboPack`]: true iff the combo's
+/// level changed or any *live* weight's count did (mirroring
+/// [`build_combos`]' no-op rule; pruned weights' counts advance too but
+/// contribute nothing).
+pub(crate) fn combo_moved(ctx: &MaskedCtx, prev: &StepPrev, idx: usize) -> bool {
+    let was_hi = idx & 2 != 0;
+    let now_hi = idx & 1 != 0;
+    let n_prev = if was_hi { prev.levels.1 } else { prev.levels.0 };
+    if ctx.n(now_hi) != n_prev {
+        return true;
+    }
+    let (kdim, n_out) = (ctx.packed.kdim, ctx.packed.n_out);
+    let prev_counts = if was_hi { prev.counts_hi } else { prev.counts_lo };
+    prev_counts
+        .iter()
+        .zip(ctx.counts(now_hi))
+        .enumerate()
+        .any(|(widx, (was, now))| {
+            was != now && ctx.packed.sign[(widx % n_out) * kdim + widx / n_out] != 0
+        })
+}
+
+pub(crate) fn build_combos(
+    ctx: &MaskedCtx,
+    prev: &StepPrev,
+    present: [bool; 4],
+) -> [Option<ComboPack>; 4] {
+    let mut combos: [Option<ComboPack>; 4] = [None, None, None, None];
+    for (idx, combo) in combos.iter_mut().enumerate() {
+        if !present[idx] {
+            continue;
+        }
+        let was_hi = idx & 2 != 0;
+        let now_hi = idx & 1 != 0;
+        let prev_counts = if was_hi { prev.counts_hi } else { prev.counts_lo };
+        let n_prev = if was_hi { prev.levels.1 } else { prev.levels.0 };
+        let dn = ctx.n(now_hi) as i64 - n_prev as i64;
+        let (dc, mask, any) = delta_coeffs_signed(ctx.packed, prev_counts, ctx.counts(now_hi));
+        if dn == 0 && !any {
+            continue; // no-op combo: its rows finish early
+        }
+        *combo = Some(ComboPack { dn, dc, mask, any });
+    }
+    combos
+}
 
 /// Which datapath a session contracts with.  `Scalar` is the
 /// single-threaded reference the parity tests and the contraction bench
@@ -156,6 +282,51 @@ pub(crate) fn delta_contract(
     }
 }
 
+/// Rebuild one row's charge/base/output from full coefficient packs —
+/// the shared inner loop of the uniform full contraction and the
+/// masked per-row rebuild (same ops in the same order, so the two are
+/// bit-identical by construction).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_row(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    nzrow: &[u64],
+    log2n: u32,
+    bias_raw: &[i16],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) -> u64 {
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let mut adds = 0u64;
+    for j in 0..n_out {
+        let coff = j * kdim;
+        let livej = &pp.live[j * words..(j + 1) * words];
+        let (mut a, mut d) = (0i64, 0i64);
+        for (w, (&lw, &zw)) in livej.iter().zip(nzrow).enumerate() {
+            let mut bits = lw & zw;
+            adds += bits.count_ones() as u64;
+            while bits != 0 {
+                let i = w * 64 + bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let v = xrow[i];
+                let e = pp.exp[coff + i] as i32;
+                let hi = shifted(v, e + 1);
+                let lo = shifted(v, e);
+                a += a_hi[coff + i] as i64 * hi + a_lo[coff + i] as i64 * lo;
+                d += pp.sign[coff + i] as i64 * lo;
+            }
+        }
+        acc_row[j] = a;
+        base_row[j] = d;
+        out_row[j] = finish(a, log2n, bias_raw[j]);
+    }
+    adds
+}
+
 fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let pp = ctx.packed;
     let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
@@ -178,31 +349,18 @@ fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
         let mut adds = 0u64;
         for ri in 0..rows {
             let r = r0 + ri;
-            let xrow = &cols[r * kdim..(r + 1) * kdim];
-            let nzrow = &nz[r * words..(r + 1) * words];
-            for j in 0..n_out {
-                let coff = j * kdim;
-                let livej = &pp.live[j * words..(j + 1) * words];
-                let (mut a, mut d) = (0i64, 0i64);
-                for (w, (&lw, &zw)) in livej.iter().zip(nzrow).enumerate() {
-                    let mut bits = lw & zw;
-                    adds += bits.count_ones() as u64;
-                    while bits != 0 {
-                        let i = w * 64 + bits.trailing_zeros() as usize;
-                        bits &= bits - 1;
-                        let v = xrow[i];
-                        let e = pp.exp[coff + i] as i32;
-                        let hi = shifted(v, e + 1);
-                        let lo = shifted(v, e);
-                        a += a_hi[coff + i] as i64 * hi + a_lo[coff + i] as i64 * lo;
-                        d += pp.sign[coff + i] as i64 * lo;
-                    }
-                }
-                let at = ri * n_out + j;
-                acc_c[at] = a;
-                base_c[at] = d;
-                out_c[at] = finish(a, log2n, bias_raw[j]);
-            }
+            adds += packed_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kdim..(r + 1) * kdim],
+                &nz[r * words..(r + 1) * words],
+                log2n,
+                bias_raw,
+                &mut acc_c[ri * n_out..(ri + 1) * n_out],
+                &mut base_c[ri * n_out..(ri + 1) * n_out],
+                &mut out_c[ri * n_out..(ri + 1) * n_out],
+            );
         }
         adds
     })
@@ -263,38 +421,252 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
     })
 }
 
+/// Rebuild one row from raw planes + counts — the scalar reference's
+/// shared inner loop (uniform full pass and masked per-row rebuild).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn scalar_row(
+    planes: &PsbPlanes,
+    counts: &[u32],
+    n: i64,
+    log2n: u32,
+    bias_raw: &[i16],
+    xrow: &[i32],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) {
+    let n_out = planes.shape[1];
+    for j in 0..n_out {
+        let (mut a, mut d) = (0i64, 0i64);
+        for (i, &v) in xrow.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            let widx = i * n_out + j;
+            let s = planes.sign[widx];
+            if s == 0.0 {
+                continue;
+            }
+            let si = s as i64;
+            let e = planes.exp[widx] as i32;
+            let hi = shifted(v, e + 1);
+            let lo = shifted(v, e);
+            let kcnt = counts[widx] as i64;
+            a += si * (kcnt * hi + (n - kcnt) * lo);
+            d += si * lo;
+        }
+        acc_row[j] = a;
+        base_row[j] = d;
+        out_row[j] = finish(a, log2n, bias_raw[j]);
+    }
+}
+
 fn full_scalar(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let planes = ctx.planes;
     let (kk, n_out) = (planes.shape[0], planes.shape[1]);
-    let n = ctx.n as i64;
     let m = cache.m;
     for r in 0..m {
-        let xrow = &cache.cols[r * kk..(r + 1) * kk];
-        for j in 0..n_out {
-            let (mut a, mut d) = (0i64, 0i64);
-            for (i, &v) in xrow.iter().enumerate() {
-                if v == 0 {
-                    continue;
-                }
-                let widx = i * n_out + j;
-                let s = planes.sign[widx];
-                if s == 0.0 {
-                    continue;
-                }
-                let si = s as i64;
-                let e = planes.exp[widx] as i32;
-                let hi = shifted(v, e + 1);
-                let lo = shifted(v, e);
-                let kcnt = ctx.counts[widx] as i64;
-                a += si * (kcnt * hi + (n - kcnt) * lo);
-                d += si * lo;
-            }
-            cache.acc[r * n_out + j] = a;
-            cache.base[r * n_out + j] = d;
-            out[r * n_out + j] = finish(a, ctx.log2n, ctx.bias_raw[j]);
-        }
+        scalar_row(
+            planes,
+            ctx.counts,
+            ctx.n as i64,
+            ctx.log2n,
+            ctx.bias_raw,
+            &cache.cols[r * kk..(r + 1) * kk],
+            &mut cache.acc[r * n_out..(r + 1) * n_out],
+            &mut cache.base[r * n_out..(r + 1) * n_out],
+            &mut out[r * n_out..(r + 1) * n_out],
+        );
     }
     m as u64 * ctx.packed.nnz
+}
+
+/// The row-masked conv/dense step: every contraction row is either
+/// **rebuilt** (its lowering changed — the attended halo), **delta
+/// updated** (its region/track moved: `ΔA = dn·D + Σ dc·(H − L)` against
+/// the cached lowering), or **finished early** with zero work (base-track
+/// rows of a spatial escalation).  `prev = None` rebuilds every row at
+/// its region's level (fresh pass / fully-changed input).  `out` must
+/// arrive holding the previous pass's values — skipped rows keep them.
+/// `touched[r]` reports which rows' outputs may have changed (the change
+/// mask propagated downstream).  Returns executed adds: per rebuilt row
+/// the packed popcount walk (scalar: the legacy `row × live` tally), per
+/// delta row `n_out` for the `dn·D` term plus one per changed weight ×
+/// non-zero activation, per skipped row nothing — execution is O(Δ)
+/// where Δ includes rows whose region flipped.
+pub(crate) fn masked_step(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => masked_packed(ctx, prev, rebuild, cache, out, touched),
+        Contraction::Scalar => masked_scalar(ctx, prev, rebuild, cache, out, touched),
+    }
+}
+
+#[inline]
+pub(crate) fn row_rebuilds(prev: Option<&StepPrev>, rebuild: Option<&[bool]>, r: usize) -> bool {
+    prev.is_none() || rebuild.is_some_and(|rb| rb[r])
+}
+
+fn masked_packed(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    // full coefficient packs, built only for levels some row rebuilds at
+    let mut need_full = [false; 2];
+    let mut present = [false; 4];
+    for r in 0..m {
+        let hi = ctx.is_hi(r);
+        if row_rebuilds(prev, rebuild, r) {
+            need_full[hi as usize] = true;
+        } else if let Some(p) = prev {
+            present[combo_idx(p.is_hi(r), hi)] = true;
+        }
+    }
+    let full_lo_v = need_full[0].then(|| count_coeffs(pp, ctx.counts_lo, ctx.n_lo));
+    let full_hi_v = need_full[1].then(|| count_coeffs(pp, ctx.counts_hi, ctx.n_hi));
+    let combos = match prev {
+        Some(p) => build_combos(ctx, p, present),
+        None => [None, None, None, None],
+    };
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    let bias_raw = ctx.bias_raw;
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * n_out)
+        .zip(cache.base.chunks_mut(rows_per * n_out))
+        .zip(out.chunks_mut(rows_per * n_out))
+        .zip(touched.chunks_mut(rows_per));
+    par_sum(chunks, |ti, (((acc_c, base_c), out_c), tch_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let hi = ctx.is_hi(r);
+            if row_rebuilds(prev, rebuild, r) {
+                let (a_hi, a_lo) =
+                    if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() }.expect("pack built");
+                adds += packed_row(
+                    pp,
+                    a_hi,
+                    a_lo,
+                    &cols[r * kdim..(r + 1) * kdim],
+                    &nz[r * words..(r + 1) * words],
+                    ctx.log2n(hi),
+                    bias_raw,
+                    &mut acc_c[ri * n_out..(ri + 1) * n_out],
+                    &mut base_c[ri * n_out..(ri + 1) * n_out],
+                    &mut out_c[ri * n_out..(ri + 1) * n_out],
+                );
+                tch_c[ri] = true;
+                continue;
+            }
+            let p = prev.expect("non-rebuild rows have a previous pass");
+            let Some(cb) = &combos[combo_idx(p.is_hi(r), hi)] else {
+                continue; // early finish: nothing moved for this row
+            };
+            let arow = &mut acc_c[ri * n_out..(ri + 1) * n_out];
+            if cb.dn != 0 {
+                let brow = &base_c[ri * n_out..(ri + 1) * n_out];
+                for (a, &d) in arow.iter_mut().zip(brow) {
+                    *a += cb.dn * d;
+                }
+                adds += n_out as u64;
+            }
+            if cb.any {
+                let xrow = &cols[r * kdim..(r + 1) * kdim];
+                let nzrow = &nz[r * words..(r + 1) * words];
+                for (j, a) in arow.iter_mut().enumerate() {
+                    let coff = j * kdim;
+                    let chj = &cb.mask[j * words..(j + 1) * words];
+                    let mut da = 0i64;
+                    for (w, (&cw, &zw)) in chj.iter().zip(nzrow).enumerate() {
+                        let mut bits = cw & zw;
+                        adds += bits.count_ones() as u64;
+                        while bits != 0 {
+                            let i = w * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = xrow[i];
+                            let e = pp.exp[coff + i] as i32;
+                            da += cb.dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                        }
+                    }
+                    *a += da;
+                }
+            }
+            let log2n = ctx.log2n(hi);
+            for (j, o) in out_c[ri * n_out..(ri + 1) * n_out].iter_mut().enumerate() {
+                *o = finish(arow[j], log2n, bias_raw[j]);
+            }
+            tch_c[ri] = true;
+        }
+        adds
+    })
+}
+
+/// Scalar reference for the masked step: every touched row (rebuild or
+/// non-no-op combo) is rebuilt from the current counts at its region's
+/// level — bit-identical to the packed delta because integer charge is
+/// an exact function of `(counts, n, lowering)`.  Untouched rows finish
+/// early.  Adds keep the legacy `touched rows × live` convention.
+fn masked_scalar(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let planes = ctx.planes;
+    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
+    let m = cache.m;
+    // no-op combos are decided once, without materializing packs
+    let moved: [bool; 4] = match prev {
+        Some(p) => std::array::from_fn(|i| combo_moved(ctx, p, i)),
+        None => [false; 4],
+    };
+    let mut adds = 0u64;
+    for r in 0..m {
+        let hi = ctx.is_hi(r);
+        if !row_rebuilds(prev, rebuild, r) {
+            let p = prev.expect("non-rebuild rows have a previous pass");
+            if !moved[combo_idx(p.is_hi(r), hi)] {
+                continue;
+            }
+        }
+        scalar_row(
+            planes,
+            ctx.counts(hi),
+            ctx.n(hi) as i64,
+            ctx.log2n(hi),
+            ctx.bias_raw,
+            &cache.cols[r * kk..(r + 1) * kk],
+            &mut cache.acc[r * n_out..(r + 1) * n_out],
+            &mut cache.base[r * n_out..(r + 1) * n_out],
+            &mut out[r * n_out..(r + 1) * n_out],
+        );
+        touched[r] = true;
+        adds += ctx.packed.nnz;
+    }
+    adds
 }
 
 fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {

@@ -17,8 +17,11 @@
 //! zero in the lowering and contribute nothing, and integer sums are
 //! order-independent.
 
-use super::contract::{finish, par_sum, plan_threads, rows_per_chunk, shifted, CapCtx, Contraction};
-use super::pack::{count_coeffs, delta_coeffs};
+use super::contract::{
+    build_combos, combo_idx, combo_moved, finish, par_sum, plan_threads, row_rebuilds,
+    rows_per_chunk, shifted, CapCtx, Contraction, MaskedCtx, StepPrev,
+};
+use super::pack::{count_coeffs, delta_coeffs, PackedPlanes};
 use super::CapCache;
 
 /// Rebuild a depthwise capacitor's charge/base/output from accumulated
@@ -52,9 +55,54 @@ pub(crate) fn delta_depthwise(
     }
 }
 
+/// Rebuild one pixel row's charge/base/output from full coefficient
+/// packs — shared by the uniform full pass and the masked per-row
+/// rebuild (identical ops in identical order ⇒ bit-identical).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dw_packed_row(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    log2n: u32,
+    bias_raw: &[i16],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) -> u64 {
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let mut adds = 0u64;
+    for ci in 0..c {
+        let coff = ci * kk;
+        let (mut a, mut d) = (0i64, 0i64);
+        for (w, &lw) in pp.live[ci * words..(ci + 1) * words].iter().enumerate() {
+            let mut bits = lw;
+            while bits != 0 {
+                let tap = w * 64 + bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let v = xrow[tap * c + ci];
+                if v == 0 {
+                    continue;
+                }
+                adds += 1;
+                let e = pp.exp[coff + tap] as i32;
+                let hi = shifted(v, e + 1);
+                let lo = shifted(v, e);
+                a += a_hi[coff + tap] as i64 * hi + a_lo[coff + tap] as i64 * lo;
+                d += pp.sign[coff + tap] as i64 * lo;
+            }
+        }
+        acc_row[ci] = a;
+        base_row[ci] = d;
+        out_row[ci] = finish(a, log2n, bias_raw[ci]);
+    }
+    adds
+}
+
 fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let pp = ctx.packed;
-    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let (kk, c) = (pp.kdim, pp.n_out);
     let m = cache.m;
     let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
     let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
@@ -73,32 +121,17 @@ fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
         let mut adds = 0u64;
         for ri in 0..rows {
             let r = r0 + ri;
-            let xrow = &cols[r * kk * c..(r + 1) * kk * c];
-            for ci in 0..c {
-                let coff = ci * kk;
-                let (mut a, mut d) = (0i64, 0i64);
-                for (w, &lw) in pp.live[ci * words..(ci + 1) * words].iter().enumerate() {
-                    let mut bits = lw;
-                    while bits != 0 {
-                        let tap = w * 64 + bits.trailing_zeros() as usize;
-                        bits &= bits - 1;
-                        let v = xrow[tap * c + ci];
-                        if v == 0 {
-                            continue;
-                        }
-                        adds += 1;
-                        let e = pp.exp[coff + tap] as i32;
-                        let hi = shifted(v, e + 1);
-                        let lo = shifted(v, e);
-                        a += a_hi[coff + tap] as i64 * hi + a_lo[coff + tap] as i64 * lo;
-                        d += pp.sign[coff + tap] as i64 * lo;
-                    }
-                }
-                let at = ri * c + ci;
-                acc_c[at] = a;
-                base_c[at] = d;
-                out_c[at] = finish(a, log2n, bias_raw[ci]);
-            }
+            adds += dw_packed_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kk * c..(r + 1) * kk * c],
+                log2n,
+                bias_raw,
+                &mut acc_c[ri * c..(ri + 1) * c],
+                &mut base_c[ri * c..(ri + 1) * c],
+                &mut out_c[ri * c..(ri + 1) * c],
+            );
         }
         adds
     })
@@ -159,37 +192,63 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
     })
 }
 
+/// Rebuild one pixel row from raw planes + counts (scalar reference).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dw_scalar_row(
+    planes: &crate::num::PsbPlanes,
+    counts: &[u32],
+    n: i64,
+    log2n: u32,
+    bias_raw: &[i16],
+    xrow: &[i32],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) {
+    let (kk, c) = (planes.shape[0], planes.shape[1]);
+    for ci in 0..c {
+        let (mut a, mut d) = (0i64, 0i64);
+        for tap in 0..kk {
+            let widx = tap * c + ci;
+            let s = planes.sign[widx];
+            if s == 0.0 {
+                continue;
+            }
+            let v = xrow[tap * c + ci];
+            if v == 0 {
+                continue;
+            }
+            let si = s as i64;
+            let e = planes.exp[widx] as i32;
+            let hi = shifted(v, e + 1);
+            let lo = shifted(v, e);
+            let kcnt = counts[widx] as i64;
+            a += si * (kcnt * hi + (n - kcnt) * lo);
+            d += si * lo;
+        }
+        acc_row[ci] = a;
+        base_row[ci] = d;
+        out_row[ci] = finish(a, log2n, bias_raw[ci]);
+    }
+}
+
 fn full_scalar(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let planes = ctx.planes;
     let (kk, c) = (planes.shape[0], planes.shape[1]);
-    let n = ctx.n as i64;
     let m = cache.m;
     for r in 0..m {
-        let xrow = &cache.cols[r * kk * c..(r + 1) * kk * c];
-        for ci in 0..c {
-            let (mut a, mut d) = (0i64, 0i64);
-            for tap in 0..kk {
-                let widx = tap * c + ci;
-                let s = planes.sign[widx];
-                if s == 0.0 {
-                    continue;
-                }
-                let v = xrow[tap * c + ci];
-                if v == 0 {
-                    continue;
-                }
-                let si = s as i64;
-                let e = planes.exp[widx] as i32;
-                let hi = shifted(v, e + 1);
-                let lo = shifted(v, e);
-                let kcnt = ctx.counts[widx] as i64;
-                a += si * (kcnt * hi + (n - kcnt) * lo);
-                d += si * lo;
-            }
-            cache.acc[r * c + ci] = a;
-            cache.base[r * c + ci] = d;
-            out[r * c + ci] = finish(a, ctx.log2n, ctx.bias_raw[ci]);
-        }
+        dw_scalar_row(
+            planes,
+            ctx.counts,
+            ctx.n as i64,
+            ctx.log2n,
+            ctx.bias_raw,
+            &cache.cols[r * kk * c..(r + 1) * kk * c],
+            &mut cache.acc[r * c..(r + 1) * c],
+            &mut cache.base[r * c..(r + 1) * c],
+            &mut out[r * c..(r + 1) * c],
+        );
     }
     m as u64 * ctx.packed.nnz
 }
@@ -230,6 +289,176 @@ fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
         for ci in 0..c {
             out[r * c + ci] = finish(cache.acc[r * c + ci], ctx.log2n, ctx.bias_raw[ci]);
         }
+    }
+    adds
+}
+
+/// The row-masked depthwise step — the per-channel analogue of
+/// [`super::contract::masked_step`]: pixels rebuild (changed lowering),
+/// delta-update (region/track moved) or finish early with zero work;
+/// `out` arrives holding the previous pass's values and `touched`
+/// reports which pixels changed.
+pub(crate) fn masked_step_depthwise(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+    mode: Contraction,
+) -> u64 {
+    match mode {
+        Contraction::Packed => masked_packed(ctx, prev, rebuild, cache, out, touched),
+        Contraction::Scalar => masked_scalar(ctx, prev, rebuild, cache, out, touched),
+    }
+}
+
+fn masked_packed(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let mut need_full = [false; 2];
+    let mut present = [false; 4];
+    for r in 0..m {
+        let hi = ctx.is_hi(r);
+        if row_rebuilds(prev, rebuild, r) {
+            need_full[hi as usize] = true;
+        } else if let Some(p) = prev {
+            present[combo_idx(p.is_hi(r), hi)] = true;
+        }
+    }
+    let full_lo_v = need_full[0].then(|| count_coeffs(pp, ctx.counts_lo, ctx.n_lo));
+    let full_hi_v = need_full[1].then(|| count_coeffs(pp, ctx.counts_hi, ctx.n_hi));
+    let combos = match prev {
+        Some(p) => build_combos(ctx, p, present),
+        None => [None, None, None, None],
+    };
+    let cols = &cache.cols;
+    let bias_raw = ctx.bias_raw;
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(c as u64));
+    let rows_per = rows_per_chunk(m, threads);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * c)
+        .zip(cache.base.chunks_mut(rows_per * c))
+        .zip(out.chunks_mut(rows_per * c))
+        .zip(touched.chunks_mut(rows_per));
+    par_sum(chunks, |ti, (((acc_c, base_c), out_c), tch_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / c;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let hi = ctx.is_hi(r);
+            if row_rebuilds(prev, rebuild, r) {
+                let (a_hi, a_lo) =
+                    if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() }.expect("pack built");
+                adds += dw_packed_row(
+                    pp,
+                    a_hi,
+                    a_lo,
+                    &cols[r * kk * c..(r + 1) * kk * c],
+                    ctx.log2n(hi),
+                    bias_raw,
+                    &mut acc_c[ri * c..(ri + 1) * c],
+                    &mut base_c[ri * c..(ri + 1) * c],
+                    &mut out_c[ri * c..(ri + 1) * c],
+                );
+                tch_c[ri] = true;
+                continue;
+            }
+            let p = prev.expect("non-rebuild rows have a previous pass");
+            let Some(cb) = &combos[combo_idx(p.is_hi(r), hi)] else {
+                continue; // early finish
+            };
+            let arow = &mut acc_c[ri * c..(ri + 1) * c];
+            if cb.dn != 0 {
+                let brow = &base_c[ri * c..(ri + 1) * c];
+                for (a, &d) in arow.iter_mut().zip(brow) {
+                    *a += cb.dn * d;
+                }
+                adds += c as u64;
+            }
+            if cb.any {
+                let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+                for (ci, a) in arow.iter_mut().enumerate() {
+                    let coff = ci * kk;
+                    let mut da = 0i64;
+                    for (w, &cw) in cb.mask[ci * words..(ci + 1) * words].iter().enumerate() {
+                        let mut bits = cw;
+                        while bits != 0 {
+                            let tap = w * 64 + bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = xrow[tap * c + ci];
+                            if v == 0 {
+                                continue;
+                            }
+                            adds += 1;
+                            let e = pp.exp[coff + tap] as i32;
+                            da += cb.dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                        }
+                    }
+                    *a += da;
+                }
+            }
+            let log2n = ctx.log2n(hi);
+            for (ci, o) in out_c[ri * c..(ri + 1) * c].iter_mut().enumerate() {
+                *o = finish(arow[ci], log2n, bias_raw[ci]);
+            }
+            tch_c[ri] = true;
+        }
+        adds
+    })
+}
+
+/// Scalar reference: touched pixels rebuild from current counts at their
+/// region's level, untouched pixels finish early (bit-identical to the
+/// packed delta — integer charge is a pure function of counts/n/taps).
+fn masked_scalar(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let planes = ctx.planes;
+    let (kk, c) = (planes.shape[0], planes.shape[1]);
+    let m = cache.m;
+    // no-op combos are decided once, without materializing packs
+    let moved: [bool; 4] = match prev {
+        Some(p) => std::array::from_fn(|i| combo_moved(ctx, p, i)),
+        None => [false; 4],
+    };
+    let mut adds = 0u64;
+    for r in 0..m {
+        let hi = ctx.is_hi(r);
+        if !row_rebuilds(prev, rebuild, r) {
+            let p = prev.expect("non-rebuild rows have a previous pass");
+            if !moved[combo_idx(p.is_hi(r), hi)] {
+                continue;
+            }
+        }
+        dw_scalar_row(
+            planes,
+            ctx.counts(hi),
+            ctx.n(hi) as i64,
+            ctx.log2n(hi),
+            ctx.bias_raw,
+            &cache.cols[r * kk * c..(r + 1) * kk * c],
+            &mut cache.acc[r * c..(r + 1) * c],
+            &mut cache.base[r * c..(r + 1) * c],
+            &mut out[r * c..(r + 1) * c],
+        );
+        touched[r] = true;
+        adds += ctx.packed.nnz;
     }
     adds
 }

@@ -10,14 +10,14 @@
 //! Per capacitor node the session caches the raw integer charge
 //!
 //! ```text
-//! A[r, j] = Σ_i s_ij · ( k_ij·H_i + (n − k_ij)·L_i )      H = x≪(e+1), L = x≪e
+//! A[r, j] = Σ_i s_ij · ( k_ij·H_i + (n_r − k_ij)·L_i )      H = x≪(e+1), L = x≪e
 //! ```
 //!
 //! which is *exactly additive* in `(n, k)`: escalating `n → n + Δn`
 //! (drawing `Δk` new high shifts per weight) updates
 //!
 //! ```text
-//! ΔA = Δn · D   +   Σ_{Δk>0} s·Δk·(H − L)        D[r, j] = Σ_i s_ij·L_i  (cached)
+//! ΔA = Δn · D   +   Σ_{Δk≠0} s·Δk·(H − L)        D[r, j] = Σ_i s_ij·L_i  (cached)
 //! ```
 //!
 //! — work proportional to the *new samples*, not to a full recompute,
@@ -29,11 +29,31 @@
 //! network produce identical logits for the same `(seed, plan)`
 //! (property-tested in `tests/backend_parity.rs`).
 //!
-//! The delta path applies whenever a layer's input is unchanged — always
-//! for the first capacitor, and for every layer a per-layer plan leaves
-//! alone; a layer fed by changed activations rebuilds its charge from
-//! the accumulated counts (one pass over the live weights, like any
-//! fresh contraction).
+//! ## Row-masked (spatial) execution
+//!
+//! Spatial plans (Sec. 4.5) run natively: the input-resolution mask is
+//! propagated to a per-contraction-row region flag per layer with the
+//! *same* rules the simulator uses (OR-pooling through strides, per-row
+//! collapse into dense layers, OR across residual adds), and each row's
+//! charge sits at its own region's `(counts, n)` — base-track rows at
+//! `n_low`, attended rows at `n_high`, renormalized by their own fixed
+//! shift.  A masked refine executes per row: rows whose region or track
+//! moved take the delta path above (a lo→hi flip pays
+//! `ΔA = (n_high − n_low)·D + Σ Δk·(H − L)`), rows inside the attended
+//! halo (their im2col window reads escalated activations) re-lower and
+//! rebuild *just those rows*, and every other row **finishes early at
+//! `n_low` with zero work** — executed adds of the high-precision
+//! increment scale with the mask fraction, which is what turns the
+//! paper's −33% cost accounting into wall-clock savings on this
+//! backend.  Masked logits stay bit-identical to the masked
+//! exact-integer sim reference
+//! ([`crate::sim::capacitor::spatial_exact_counts`]) at any thread
+//! count.
+//!
+//! The hardware charge is billed exactly per row
+//! ([`crate::costs::CostCounter::charge_rows_exact`]): each row pays
+//! `live × (n_new(row) − n_prev(row))`, so refinement charges partition
+//! the one-shot charge under spatial splits and through split collapse.
 //!
 //! ## The packed datapath
 //!
@@ -55,11 +75,11 @@
 //! conv/dense/**depthwise**, ReLU (a sign gate), residual add, global
 //! average pooling and the dense head.  *Unfoldable* stochastic BNs
 //! (which need a stochastic multiply) are rejected at construction —
-//! deployment networks fold their BNs.  Plans must be uniform or
-//! per-layer with power-of-two sample sizes (the renormalization is a
-//! fixed shift); spatial masks are the simulator's domain.  The mean in
-//! the pooling layer mirrors the simulator's f32 rounding so the two
-//! backends stay bit-comparable.
+//! deployment networks fold their BNs.  Plans must use power-of-two
+//! sample sizes on both tracks (the renormalization is a fixed shift);
+//! uniform, per-layer and spatial (row-masked) plans all execute.  The
+//! mean in the pooling layer mirrors the simulator's f32 rounding so
+//! the two backends stay bit-comparable.
 
 pub mod contract;
 pub mod depthwise;
@@ -72,10 +92,10 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::num::fixed::{MAX_RAW, MIN_RAW, SCALE};
-use crate::num::Q16;
-use crate::precision::{PrecisionPlan, ProgressiveState};
+use crate::num::{PsbPlanes, Q16};
+use crate::precision::{PlanContext, PrecisionPlan, ProgressiveState};
 use crate::rng::RngKind;
-use crate::sim::psbnet::{PsbNetwork, PsbOp};
+use crate::sim::psbnet::{collapse_mask_rows, or_masks, pool_mask, PsbNetwork, PsbOp};
 use crate::sim::tensor::Tensor;
 
 use super::{Backend, CostReport, InferenceSession, StepReport};
@@ -158,15 +178,20 @@ fn default_threads() -> usize {
     std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
-/// Check a plan is expressible on the integer datapath.
+/// Check a plan is expressible on the integer datapath: every scheduled
+/// level — the attended track of a spatial plan included — renormalizes
+/// by a fixed shift, i.e. is a power of two.
 fn check_plan(net: &PsbNetwork, plan: &PrecisionPlan) -> Result<()> {
-    if plan.mask().is_some() {
-        bail!("IntKernel does not support spatial masks; use SimBackend for attention plans");
-    }
+    let masked = plan.mask().is_some();
     for layer in 0..net.num_capacitors.max(1) {
-        let (n, _) = plan.layer_n(layer);
+        let (n, n_hi) = plan.layer_n(layer);
         if n > 0 && !n.is_power_of_two() {
             bail!("IntKernel renormalizes by a fixed shift: layer {layer} n={n} is not a power of two");
+        }
+        if masked && n_hi > 0 && !n_hi.is_power_of_two() {
+            bail!(
+                "IntKernel renormalizes by a fixed shift: layer {layer} n_high={n_hi} is not a power of two"
+            );
         }
     }
     Ok(())
@@ -179,6 +204,10 @@ impl Backend for IntKernel {
 
     fn input_hwc(&self) -> (usize, usize, usize) {
         self.net.input_hwc
+    }
+
+    fn plan_context(&self, batch: usize) -> PlanContext<'static> {
+        PlanContext::for_network(&self.net, batch)
     }
 
     fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
@@ -214,10 +243,24 @@ pub(crate) struct CapCache {
     /// depthwise, whose packed loop walks live taps instead).
     pub nz: Vec<u64>,
     pub m: usize,
-    /// Raw capacitor charge `A[r, j]` (see module docs).
+    /// Raw capacitor charge `A[r, j]` (see module docs) — under a
+    /// spatial split each row's charge sits at its own region's
+    /// `(counts, n)`.
     pub acc: Vec<i64>,
-    /// Base charge rate `D[r, j] = Σ_i s·L_i` — the `Δn` multiplier.
+    /// Base charge rate `D[r, j] = Σ_i s·L_i` — the `Δn` multiplier
+    /// (count-independent, shared by both regions).
     pub base: Vec<i64>,
+    /// Region each row's charge was last computed in (`true` = attended
+    /// track); empty ⇔ every row on the base track.
+    pub row_hi: Vec<bool>,
+}
+
+/// Static geometry of one capacitor node — what the lowering, the
+/// region pooling and the change-halo dilation need.
+enum CapGeom {
+    Conv { k: usize, stride: usize, dims: (usize, usize, usize, usize) },
+    Dense,
+    Depthwise { k: usize, stride: usize, dims: (usize, usize, usize, usize) },
 }
 
 /// One integer inference: counts + per-node charge accumulators.
@@ -243,6 +286,99 @@ struct IntSession {
 #[inline]
 pub(crate) fn clamp_q16(v: i32) -> i32 {
     v.clamp(MIN_RAW, MAX_RAW)
+}
+
+/// Project a region mask to contraction-row resolution — the simulator's
+/// own shared rules ([`pool_mask`] / [`collapse_mask_rows`]), so both
+/// backends put every row in the same region: conv/depthwise OR-pool
+/// through the stride, dense collapses each row's input block.
+fn pool_regions(mask: &[bool], geom: &CapGeom, m: usize) -> Vec<bool> {
+    match geom {
+        CapGeom::Conv { stride, dims, .. } | CapGeom::Depthwise { stride, dims, .. } => {
+            pool_mask(mask, dims.0, dims.1, dims.2, *stride)
+        }
+        CapGeom::Dense => collapse_mask_rows(mask, m),
+    }
+}
+
+/// Project an upstream *change* mask to this node's rows, including the
+/// conv halo: an output row must rebuild iff any input pixel inside its
+/// SAME-padded `k×k` window changed.  Conservative by construction — a
+/// flagged row re-lowers and rebuilds, an unflagged row provably reads
+/// only unchanged activations.
+fn dilate_to_rows(changed: &[bool], geom: &CapGeom, m: usize) -> Vec<bool> {
+    match geom {
+        CapGeom::Conv { k, stride, dims } | CapGeom::Depthwise { k, stride, dims } => {
+            let (b, h, w, _) = *dims;
+            let pad = k / 2;
+            let ho = h.div_ceil(*stride);
+            let wo = w.div_ceil(*stride);
+            let mut out = vec![false; b * ho * wo];
+            for bi in 0..b {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut any = false;
+                        'taps: for di in 0..*k {
+                            let iy = (oy * stride + di) as isize - pad as isize;
+                            if iy < 0 || iy as usize >= h {
+                                continue;
+                            }
+                            for dj in 0..*k {
+                                let ix = (ox * stride + dj) as isize - pad as isize;
+                                if ix < 0 || ix as usize >= w {
+                                    continue;
+                                }
+                                if changed[(bi * h + iy as usize) * w + ix as usize] {
+                                    any = true;
+                                    break 'taps;
+                                }
+                            }
+                        }
+                        out[(bi * ho + oy) * wo + ox] = any;
+                    }
+                }
+            }
+            out
+        }
+        CapGeom::Dense => {
+            if changed.len() % m.max(1) != 0 || changed.len() < m {
+                return vec![true; m]; // irregular block structure: rebuild all
+            }
+            collapse_mask_rows(changed, m)
+        }
+    }
+}
+
+/// Merge the change state of a two-input node: clean + clean = clean,
+/// any fully-changed side poisons the result, partial sides OR.
+fn merge_changed(
+    a_dirty: bool,
+    a_ch: &Option<Vec<bool>>,
+    b_dirty: bool,
+    b_ch: &Option<Vec<bool>>,
+) -> (bool, Option<Vec<bool>>) {
+    if !a_dirty && !b_dirty {
+        return (false, None);
+    }
+    if (a_dirty && a_ch.is_none()) || (b_dirty && b_ch.is_none()) {
+        return (true, None);
+    }
+    let merged = match (a_ch, b_ch) {
+        (Some(x), Some(y)) => x.iter().zip(y).map(|(p, q)| *p || *q).collect(),
+        (Some(x), None) | (None, Some(x)) => x.clone(),
+        (None, None) => unreachable!("a dirty side without rows was handled above"),
+    };
+    (true, Some(merged))
+}
+
+#[inline]
+fn regions_equal(a: &[bool], b: &[bool]) -> bool {
+    match (a.is_empty(), b.is_empty()) {
+        (true, true) => true,
+        (true, false) => !b.iter().any(|&v| v),
+        (false, true) => !a.iter().any(|&v| v),
+        (false, false) => a == b,
+    }
 }
 
 impl IntSession {
@@ -271,13 +407,24 @@ impl IntSession {
         };
         let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(net.nodes.len());
         let mut dirty: Vec<bool> = Vec::with_capacity(net.nodes.len());
+        // per-node change rows: `None` + dirty ⇒ everything changed,
+        // `Some(rows)` ⇒ only the flagged rows/pixels did
+        let mut changed: Vec<Option<Vec<bool>>> = Vec::with_capacity(net.nodes.len());
+        // per-node region mask (the simulator's propagation rules)
+        let mut masks: Vec<Option<Vec<bool>>> = Vec::with_capacity(net.nodes.len());
+        let input_mask: Option<Vec<bool>> = target.mask().map(|m| m.to_vec());
         let mut cap_layer = 0usize;
         let mut unit_idx = 0usize;
         if self.outs.len() != net.nodes.len() {
             self.outs = vec![Vec::new(); net.nodes.len()];
         }
         for (idx, node) in net.nodes.iter().enumerate() {
-            let (shape, is_dirty): (Vec<usize>, bool) = match &node.op {
+            let (shape, is_dirty, rows_changed, mask): (
+                Vec<usize>,
+                bool,
+                Option<Vec<bool>>,
+                Option<Vec<bool>>,
+            ) = match &node.op {
                 PsbOp::Input => {
                     if let Some(x) = fresh_x {
                         anyhow::ensure!(
@@ -293,208 +440,127 @@ impl IntSession {
                                 (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
                             })
                             .collect();
-                        (vec![b, h0, w0, c0], true)
+                        (vec![b, h0, w0, c0], true, None, input_mask.clone())
                     } else {
-                        (vec![b, h0, w0, c0], false)
+                        (vec![b, h0, w0, c0], false, None, input_mask.clone())
                     }
                 }
                 PsbOp::Capacitor { planes, bias, conv, cout } => {
                     let in_idx = node.inputs[0];
-                    let in_dirty = dirty[in_idx];
                     let in_shape = shapes[in_idx].clone();
-                    let (n_lo, _) = target.layer_n(cap_layer);
+                    let (n_lo, n_hi) = target.layer_n(cap_layer);
                     let layer = cap_layer;
                     cap_layer += 1;
                     let unit = unit_idx;
                     unit_idx += 1;
-                    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
-                    debug_assert_eq!(n_out, *cout);
+                    let kk = planes.shape[0];
+                    debug_assert_eq!(planes.shape[1], *cout);
                     let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
-                    // snapshot counts for the delta path before advancing
-                    let can_delta = !in_dirty && self.caps.contains_key(&idx);
-                    let prev: Option<Vec<u32>> =
-                        can_delta.then(|| state.units[unit].counts_lo().to_vec());
-                    let (d_lo, _) = state.units[unit]
-                        .advance(kind, seed, unit, &planes.prob, layer, n_lo, n_lo)
-                        .map_err(anyhow::Error::new)?;
-                    let log2n = n_lo.trailing_zeros();
-                    let (out_shape, m, lower): (Vec<usize>, usize, Option<(usize, usize)>) =
-                        match conv {
-                            Some((k, stride)) => {
-                                let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
-                                let ho = hh.div_ceil(*stride);
-                                let wo = ww.div_ceil(*stride);
-                                (vec![bb, ho, wo, n_out], bb * ho * wo, Some((*k, *stride)))
-                            }
-                            None => {
-                                let m = self.outs[in_idx].len() / kk;
-                                (vec![m, n_out], m, None)
-                            }
-                        };
-                    let live = pp.nnz;
-                    let bias_raw: Vec<i16> =
-                        bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
-                    let node_dirty = if d_lo == 0 && can_delta {
-                        // unchanged counts over an unchanged input: the
-                        // cached charge is current — zero work
-                        step.nodes_reused += 1;
-                        false
-                    } else if let Some(prev) = prev.filter(|_| d_lo > 0) {
-                        // O(Δ) capacitor update: ΔA = Δn·D + Σ Δk·(H−L)
-                        step.delta_updated += 1;
-                        let counts = state.units[unit].counts_lo().to_vec();
-                        let cache = self.caps.get_mut(&idx).expect("can_delta checked");
-                        let ctx = contract::CapCtx {
-                            planes,
-                            packed: pp,
-                            counts: &counts,
-                            n: n_lo,
-                            log2n,
-                            bias_raw: &bias_raw,
-                            threads,
-                        };
-                        let mut out = vec![0i32; m * n_out];
-                        let adds =
-                            contract::delta_contract(&ctx, &prev, d_lo, cache, &mut out, mode);
-                        step.executed_adds += adds;
-                        step.layer_adds[layer] += adds;
-                        self.outs[idx] = out;
-                        true
-                    } else {
-                        // full rebuild from accumulated counts (input
-                        // changed, or first pass over this node)
-                        step.nodes_recomputed += 1;
-                        let cols: Vec<i32> = match lower {
-                            Some((k, stride)) => {
-                                let dims =
-                                    (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
-                                pack::im2col_i32(&self.outs[in_idx], dims, k, stride).0
-                            }
-                            None => self.outs[in_idx].iter().map(|&v| clamp_q16(v)).collect(),
-                        };
-                        let nz = pack::pack_nonzero(&cols, m, kk);
-                        let mut cache = CapCache {
-                            cols,
-                            nz,
-                            m,
-                            acc: vec![0i64; m * n_out],
-                            base: vec![0i64; m * n_out],
-                        };
-                        let counts = state.units[unit].counts_lo();
-                        let ctx = contract::CapCtx {
-                            planes,
-                            packed: pp,
-                            counts,
-                            n: n_lo,
-                            log2n,
-                            bias_raw: &bias_raw,
-                            threads,
-                        };
-                        let mut out = vec![0i32; m * n_out];
-                        let adds = contract::full_contract(&ctx, &mut cache, &mut out, mode);
-                        step.executed_adds += adds;
-                        step.layer_adds[layer] += adds;
-                        self.caps.insert(idx, cache);
-                        self.outs[idx] = out;
-                        true
+                    let (out_shape, m, geom): (Vec<usize>, usize, CapGeom) = match conv {
+                        Some((k, stride)) => {
+                            let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
+                            let ho = hh.div_ceil(*stride);
+                            let wo = ww.div_ceil(*stride);
+                            (
+                                vec![bb, ho, wo, *cout],
+                                bb * ho * wo,
+                                CapGeom::Conv {
+                                    k: *k,
+                                    stride: *stride,
+                                    dims: (bb, hh, ww, in_shape[3]),
+                                },
+                            )
+                        }
+                        None => {
+                            let m = self.outs[in_idx].len() / kk;
+                            (vec![m, *cout], m, CapGeom::Dense)
+                        }
                     };
-                    if d_lo > 0 {
-                        step.costs.charge_capacitor(m as u64 * live, d_lo);
-                    }
-                    (out_shape, node_dirty)
+                    let in_mask = masks[in_idx].clone();
+                    let out_mask = in_mask.as_ref().map(|mk| pool_regions(mk, &geom, m));
+                    let splits = in_mask.is_some() && n_hi > n_lo;
+                    let row_hi_new: &[bool] =
+                        if splits { out_mask.as_deref().expect("masked") } else { &[] };
+                    let (is_dirty, ch) = cap_node_pass(
+                        &mut self.caps,
+                        &mut self.outs,
+                        (idx, in_idx),
+                        planes,
+                        pp,
+                        bias,
+                        &geom,
+                        (m, *cout),
+                        (n_lo, if splits { n_hi } else { n_lo }),
+                        row_hi_new,
+                        (dirty[in_idx], changed[in_idx].as_deref()),
+                        state,
+                        (unit, layer, kind, seed),
+                        (mode, threads),
+                        &mut step,
+                    )?;
+                    (out_shape, is_dirty, ch, out_mask)
                 }
                 PsbOp::DepthwiseCapacitor { planes, bias, k, stride, c } => {
                     let in_idx = node.inputs[0];
-                    let in_dirty = dirty[in_idx];
                     let in_shape = shapes[in_idx].clone();
-                    let (n_lo, _) = target.layer_n(cap_layer);
+                    let (n_lo, n_hi) = target.layer_n(cap_layer);
                     let layer = cap_layer;
                     cap_layer += 1;
                     let unit = unit_idx;
                     unit_idx += 1;
                     let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
-                    let can_delta = !in_dirty && self.caps.contains_key(&idx);
-                    let prev: Option<Vec<u32>> =
-                        can_delta.then(|| state.units[unit].counts_lo().to_vec());
-                    let (d_lo, _) = state.units[unit]
-                        .advance(kind, seed, unit, &planes.prob, layer, n_lo, n_lo)
-                        .map_err(anyhow::Error::new)?;
-                    let log2n = n_lo.trailing_zeros();
                     let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
                     let ho = hh.div_ceil(*stride);
                     let wo = ww.div_ceil(*stride);
                     let m = bb * ho * wo;
-                    let live = pp.nnz;
-                    let bias_raw: Vec<i16> =
-                        bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
-                    let node_dirty = if d_lo == 0 && can_delta {
-                        step.nodes_reused += 1;
-                        false
-                    } else if let Some(prev) = prev.filter(|_| d_lo > 0) {
-                        step.delta_updated += 1;
-                        let counts = state.units[unit].counts_lo().to_vec();
-                        let cache = self.caps.get_mut(&idx).expect("can_delta checked");
-                        let ctx = contract::CapCtx {
-                            planes,
-                            packed: pp,
-                            counts: &counts,
-                            n: n_lo,
-                            log2n,
-                            bias_raw: &bias_raw,
-                            threads,
-                        };
-                        let mut out = vec![0i32; m * *c];
-                        let adds =
-                            depthwise::delta_depthwise(&ctx, &prev, d_lo, cache, &mut out, mode);
-                        step.executed_adds += adds;
-                        step.layer_adds[layer] += adds;
-                        self.outs[idx] = out;
-                        true
-                    } else {
-                        step.nodes_recomputed += 1;
-                        let dims = (bb, hh, ww, in_shape[3]);
-                        let (cols, _, _) =
-                            pack::lower_depthwise(&self.outs[in_idx], dims, *k, *stride);
-                        let mut cache = CapCache {
-                            cols,
-                            nz: Vec::new(),
-                            m,
-                            acc: vec![0i64; m * *c],
-                            base: vec![0i64; m * *c],
-                        };
-                        let counts = state.units[unit].counts_lo();
-                        let ctx = contract::CapCtx {
-                            planes,
-                            packed: pp,
-                            counts,
-                            n: n_lo,
-                            log2n,
-                            bias_raw: &bias_raw,
-                            threads,
-                        };
-                        let mut out = vec![0i32; m * *c];
-                        let adds = depthwise::full_depthwise(&ctx, &mut cache, &mut out, mode);
-                        step.executed_adds += adds;
-                        step.layer_adds[layer] += adds;
-                        self.caps.insert(idx, cache);
-                        self.outs[idx] = out;
-                        true
+                    let geom = CapGeom::Depthwise {
+                        k: *k,
+                        stride: *stride,
+                        dims: (bb, hh, ww, in_shape[3]),
                     };
-                    if d_lo > 0 {
-                        step.costs.charge_capacitor(m as u64 * live, d_lo);
-                    }
-                    (vec![bb, ho, wo, *c], node_dirty)
+                    let in_mask = masks[in_idx].clone();
+                    let out_mask = in_mask.as_ref().map(|mk| pool_regions(mk, &geom, m));
+                    let splits = in_mask.is_some() && n_hi > n_lo;
+                    let row_hi_new: &[bool] =
+                        if splits { out_mask.as_deref().expect("masked") } else { &[] };
+                    let (is_dirty, ch) = cap_node_pass(
+                        &mut self.caps,
+                        &mut self.outs,
+                        (idx, in_idx),
+                        planes,
+                        pp,
+                        bias,
+                        &geom,
+                        (m, *c),
+                        (n_lo, if splits { n_hi } else { n_lo }),
+                        row_hi_new,
+                        (dirty[in_idx], changed[in_idx].as_deref()),
+                        state,
+                        (unit, layer, kind, seed),
+                        (mode, threads),
+                        &mut step,
+                    )?;
+                    (vec![bb, ho, wo, *c], is_dirty, ch, out_mask)
                 }
                 PsbOp::Relu => {
                     let in_idx = node.inputs[0];
-                    let d = dirty[in_idx];
                     self.outs[idx] = self.outs[in_idx].iter().map(|&v| v.max(0)).collect();
-                    (shapes[in_idx].clone(), d)
+                    (
+                        shapes[in_idx].clone(),
+                        dirty[in_idx],
+                        changed[in_idx].clone(),
+                        masks[in_idx].clone(),
+                    )
                 }
                 PsbOp::Identity => {
                     let in_idx = node.inputs[0];
                     self.outs[idx] = self.outs[in_idx].clone();
-                    (shapes[in_idx].clone(), dirty[in_idx])
+                    (
+                        shapes[in_idx].clone(),
+                        dirty[in_idx],
+                        changed[in_idx].clone(),
+                        masks[in_idx].clone(),
+                    )
                 }
                 PsbOp::Add => {
                     let (a, bb) = (node.inputs[0], node.inputs[1]);
@@ -504,7 +570,8 @@ impl IntSession {
                         .zip(self.outs[bb].iter())
                         .map(|(&p, &q)| p + q)
                         .collect();
-                    (shapes[a].clone(), dirty[a] || dirty[bb])
+                    let (d, ch) = merge_changed(dirty[a], &changed[a], dirty[bb], &changed[bb]);
+                    (shapes[a].clone(), d, ch, or_masks(&masks[a], &masks[bb]))
                 }
                 PsbOp::GlobalAvgPool => {
                     let in_idx = node.inputs[0];
@@ -532,7 +599,13 @@ impl IntSession {
                             (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
                         })
                         .collect();
-                    (vec![bb, cc], dirty[in_idx])
+                    let ch = if !dirty[in_idx] {
+                        None
+                    } else {
+                        changed[in_idx].as_ref().map(|c| collapse_mask_rows(c, bb))
+                    };
+                    let mk = masks[in_idx].as_ref().map(|mk| collapse_mask_rows(mk, bb));
+                    (vec![bb, cc], dirty[in_idx], ch, mk)
                 }
                 PsbOp::StochasticBn { .. } => {
                     bail!("unsupported op reached IntKernel (validated at construction)")
@@ -540,6 +613,8 @@ impl IntSession {
             };
             shapes.push(shape);
             dirty.push(is_dirty);
+            changed.push(rows_changed);
+            masks.push(mask);
         }
         self.batch = b;
         self.logits = raw_to_tensor(self.outs.last().expect("network has nodes"), shapes.last().unwrap());
@@ -550,6 +625,274 @@ impl IntSession {
         self.report.record(step.clone());
         Ok(step)
     }
+}
+
+/// Execute one capacitor node (conv, dense or depthwise — `geom` picks
+/// the lowering and kernels) with per-row region semantics, and bill it
+/// exactly per row.  Returns `(dirty, changed_rows)` for downstream
+/// propagation.
+#[allow(clippy::too_many_arguments)]
+fn cap_node_pass(
+    caps: &mut HashMap<usize, CapCache>,
+    outs: &mut [Vec<i32>],
+    (idx, in_idx): (usize, usize),
+    planes: &PsbPlanes,
+    pp: &PackedPlanes,
+    bias: &[f32],
+    geom: &CapGeom,
+    (m, n_out): (usize, usize),
+    (n_lo, n_hi): (u32, u32),
+    row_hi_new: &[bool],
+    (in_dirty, in_changed): (bool, Option<&[bool]>),
+    state: &mut ProgressiveState,
+    (unit, layer, kind, seed): (usize, usize, RngKind, u64),
+    (mode, threads): (Contraction, usize),
+    step: &mut StepReport,
+) -> Result<(bool, Option<Vec<bool>>)> {
+    let kk = planes.shape[0];
+    let live = pp.nnz;
+    let bias_raw: Vec<i16> = bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
+    // Incremental execution needs a geometry-matched cache and an input
+    // that is clean or changed in a known row subset.
+    let incremental = caps.get(&idx).is_some_and(|c| c.m == m)
+        && outs[idx].len() == m * n_out
+        && (!in_dirty || in_changed.is_some());
+    // Billing snapshot *before* the counts advance: what each row's
+    // charge currently holds.
+    let prev_levels = (state.units[unit].n_lo(), state.units[unit].n_hi());
+    let prev_counts = incremental.then(|| {
+        let u = &state.units[unit];
+        // the hi track aliases the base track when no split is open —
+        // snapshot it only when it is distinct
+        let lo = u.counts_lo().to_vec();
+        let hi = (u.n_hi() > u.n_lo()).then(|| u.counts_hi().to_vec());
+        (lo, hi)
+    });
+    let (d_lo, d_hi) = state.units[unit]
+        .advance(kind, seed, unit, &planes.prob, layer, n_lo, n_hi)
+        .map_err(anyhow::Error::new)?;
+    let prev_row_hi: Vec<bool> = caps
+        .get(&idx)
+        .filter(|c| c.row_hi.len() == m)
+        .map(|c| c.row_hi.clone())
+        .unwrap_or_default();
+    // Rows whose lowering must refresh: the upstream change dilated
+    // through this node's window (attended region + conv halo).
+    let reb: Option<Vec<bool>> =
+        if incremental { in_changed.map(|ch| dilate_to_rows(ch, geom, m)) } else { None };
+    let reb_any = reb.as_ref().is_some_and(|r| r.iter().any(|&v| v));
+    let mask_involved = !prev_row_hi.is_empty() || !row_hi_new.is_empty();
+
+    let result: (bool, Option<Vec<bool>>) = if incremental
+        && d_lo == 0
+        && d_hi == 0
+        && !reb_any
+        && regions_equal(&prev_row_hi, row_hi_new)
+    {
+        // unchanged counts over unchanged inputs and regions: the cached
+        // charge is current — zero work
+        step.nodes_reused += 1;
+        (false, None)
+    } else if incremental && !mask_involved && reb.is_none() {
+        // uniform O(Δ) capacitor update: ΔA = Δn·D + Σ Δk·(H−L)
+        step.delta_updated += 1;
+        let counts = state.units[unit].counts_lo();
+        let (prev_lo, _) = prev_counts.as_ref().expect("incremental snapshots the base track");
+        let cache = caps.get_mut(&idx).expect("incremental requires a cache");
+        let ctx = contract::CapCtx {
+            planes,
+            packed: pp,
+            counts,
+            n: n_lo,
+            log2n: n_lo.trailing_zeros(),
+            bias_raw: &bias_raw,
+            threads,
+        };
+        let mut out = vec![0i32; m * n_out];
+        let adds = match geom {
+            CapGeom::Depthwise { .. } => {
+                depthwise::delta_depthwise(&ctx, prev_lo, d_lo, cache, &mut out, mode)
+            }
+            _ => contract::delta_contract(&ctx, prev_lo, d_lo, cache, &mut out, mode),
+        };
+        step.executed_adds += adds;
+        step.layer_adds[layer] += adds;
+        outs[idx] = out;
+        (true, None)
+    } else if incremental {
+        // row-masked step: rebuild the changed-input rows, delta the
+        // rows whose region/track moved, finish the rest early
+        step.delta_updated += 1;
+        let (prev_lo, prev_hi_snap) =
+            prev_counts.as_ref().expect("incremental snapshots the base track");
+        let prev_hi: &[u32] = prev_hi_snap.as_deref().unwrap_or(prev_lo);
+        let counts_lo = state.units[unit].counts_lo();
+        let counts_hi = state.units[unit].counts_hi();
+        let cache = caps.get_mut(&idx).expect("incremental requires a cache");
+        if reb_any {
+            let rb = reb.as_deref().expect("reb_any implies a rebuild-row mask");
+            let x = &outs[in_idx];
+            match geom {
+                CapGeom::Conv { k, stride, dims } | CapGeom::Depthwise { k, stride, dims } => {
+                    pack::im2col_rows_i32(x, *dims, *k, *stride, rb, &mut cache.cols, &mut cache.nz)
+                }
+                CapGeom::Dense => {
+                    pack::refresh_dense_rows(x, rb, kk, &mut cache.cols, &mut cache.nz)
+                }
+            }
+        }
+        let mctx = contract::MaskedCtx {
+            planes,
+            packed: pp,
+            counts_lo,
+            counts_hi,
+            n_lo,
+            n_hi,
+            bias_raw: &bias_raw,
+            threads,
+            row_hi: row_hi_new,
+        };
+        let sprev = contract::StepPrev {
+            counts_lo: prev_lo,
+            counts_hi: prev_hi,
+            levels: prev_levels,
+            row_hi: &prev_row_hi,
+        };
+        let mut out = std::mem::take(&mut outs[idx]);
+        let mut touched = vec![false; m];
+        let adds = match geom {
+            CapGeom::Depthwise { .. } => depthwise::masked_step_depthwise(
+                &mctx,
+                Some(&sprev),
+                reb.as_deref(),
+                cache,
+                &mut out,
+                &mut touched,
+                mode,
+            ),
+            _ => contract::masked_step(
+                &mctx,
+                Some(&sprev),
+                reb.as_deref(),
+                cache,
+                &mut out,
+                &mut touched,
+                mode,
+            ),
+        };
+        step.executed_adds += adds;
+        step.layer_adds[layer] += adds;
+        cache.row_hi = row_hi_new.to_vec();
+        outs[idx] = out;
+        let any = touched.iter().any(|&v| v);
+        let all = touched.iter().all(|&v| v);
+        if !any {
+            (false, None)
+        } else if all {
+            (true, None)
+        } else {
+            (true, Some(touched))
+        }
+    } else {
+        // full rebuild from accumulated counts (input changed wholesale,
+        // or first pass over this node)
+        step.nodes_recomputed += 1;
+        let x = &outs[in_idx];
+        let (cols, nz): (Vec<i32>, Vec<u64>) = match geom {
+            CapGeom::Conv { k, stride, dims } => {
+                let cols = pack::im2col_i32(x, *dims, *k, *stride).0;
+                let nz = pack::pack_nonzero(&cols, m, kk);
+                (cols, nz)
+            }
+            CapGeom::Dense => {
+                let cols: Vec<i32> = x.iter().map(|&v| clamp_q16(v)).collect();
+                let nz = pack::pack_nonzero(&cols, m, kk);
+                (cols, nz)
+            }
+            CapGeom::Depthwise { k, stride, dims } => {
+                (pack::lower_depthwise(x, *dims, *k, *stride).0, Vec::new())
+            }
+        };
+        let mut cache = CapCache {
+            cols,
+            nz,
+            m,
+            acc: vec![0i64; m * n_out],
+            base: vec![0i64; m * n_out],
+            row_hi: row_hi_new.to_vec(),
+        };
+        let counts_lo = state.units[unit].counts_lo();
+        let counts_hi = state.units[unit].counts_hi();
+        let mut out = vec![0i32; m * n_out];
+        let adds = if row_hi_new.is_empty() {
+            let ctx = contract::CapCtx {
+                planes,
+                packed: pp,
+                counts: counts_lo,
+                n: n_lo,
+                log2n: n_lo.trailing_zeros(),
+                bias_raw: &bias_raw,
+                threads,
+            };
+            match geom {
+                CapGeom::Depthwise { .. } => {
+                    depthwise::full_depthwise(&ctx, &mut cache, &mut out, mode)
+                }
+                _ => contract::full_contract(&ctx, &mut cache, &mut out, mode),
+            }
+        } else {
+            let mctx = contract::MaskedCtx {
+                planes,
+                packed: pp,
+                counts_lo,
+                counts_hi,
+                n_lo,
+                n_hi,
+                bias_raw: &bias_raw,
+                threads,
+                row_hi: row_hi_new,
+            };
+            let mut touched = vec![false; m];
+            match geom {
+                CapGeom::Depthwise { .. } => depthwise::masked_step_depthwise(
+                    &mctx,
+                    None,
+                    None,
+                    &mut cache,
+                    &mut out,
+                    &mut touched,
+                    mode,
+                ),
+                _ => contract::masked_step(
+                    &mctx,
+                    None,
+                    None,
+                    &mut cache,
+                    &mut out,
+                    &mut touched,
+                    mode,
+                ),
+            }
+        };
+        step.executed_adds += adds;
+        step.layer_adds[layer] += adds;
+        caps.insert(idx, cache);
+        outs[idx] = out;
+        (true, None)
+    };
+    // exact per-row hardware charge: each row pays live × (n_new − n_prev)
+    // for its own (previous, new) region — identical to the simulator's
+    // accounting, so stage charges partition one-shot charges under
+    // masks and through split collapse
+    step.costs.charge_rows_exact(
+        live,
+        m,
+        (prev_row_hi.len() == m).then_some(prev_row_hi.as_slice()),
+        (!row_hi_new.is_empty()).then_some(row_hi_new),
+        prev_levels,
+        (n_lo, n_hi),
+    );
+    Ok(result)
 }
 
 fn raw_to_tensor(raw: &[i32], shape: &[usize]) -> Tensor {
@@ -596,6 +939,9 @@ impl InferenceSession for IntSession {
             }
             cache.acc = gather(&cache.acc, rows, old_b);
             cache.base = gather(&cache.base, rows, old_b);
+            if !cache.row_hi.is_empty() {
+                cache.row_hi = gather(&cache.row_hi, rows, old_b);
+            }
             cache.m = cache.m / old_b * rows.len();
         }
         if !self.logits.is_empty() {
@@ -631,7 +977,8 @@ impl InferenceSession for IntSession {
 
 /// Gather per-image blocks of a flat buffer whose length is a multiple
 /// of `old_b` — the one `narrow` primitive for every cached array
-/// (activations, lowerings, packed masks, charge accumulators).
+/// (activations, lowerings, packed masks, region flags, charge
+/// accumulators).
 fn gather<T: Copy>(v: &[T], rows: &[usize], old_b: usize) -> Vec<T> {
     let block = v.len() / old_b;
     let mut out = Vec::with_capacity(block * rows.len());

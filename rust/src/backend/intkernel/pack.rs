@@ -84,13 +84,7 @@ pub fn pack_nonzero(cols: &[i32], m: usize, kdim: usize) -> Vec<u64> {
     let words = kdim.div_ceil(64).max(1);
     let mut nz = vec![0u64; m * words];
     for r in 0..m {
-        let row = &cols[r * kdim..(r + 1) * kdim];
-        let dst = &mut nz[r * words..(r + 1) * words];
-        for (i, &v) in row.iter().enumerate() {
-            if v != 0 {
-                dst[i / 64] |= 1u64 << (i % 64);
-            }
-        }
+        repack_row(cols, r, kdim, &mut nz);
     }
     nz
 }
@@ -146,6 +140,124 @@ pub fn delta_coeffs(pp: &PackedPlanes, prev: &[u32], counts: &[u32]) -> (Vec<i32
         changed = true;
     }
     (dc, mask, changed)
+}
+
+/// [`delta_coeffs`] with *signed* count deltas — the row-masked step's
+/// combo packs, where a row changing region may move to a track holding
+/// **fewer** samples than its charge currently encodes (hi→lo flips).
+/// Integer arithmetic is exact, so a negative `Δk` subtracts the charge
+/// bit-identically to a rebuild at the new counts.
+pub fn delta_coeffs_signed(
+    pp: &PackedPlanes,
+    prev: &[u32],
+    counts: &[u32],
+) -> (Vec<i32>, Vec<u64>, bool) {
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    debug_assert_eq!(prev.len(), counts.len());
+    let mut dc = vec![0i32; kdim * n_out];
+    let mut mask = vec![0u64; n_out * words];
+    let mut changed = false;
+    for (widx, (&now, &was)) in counts.iter().zip(prev.iter()).enumerate() {
+        if now == was {
+            continue;
+        }
+        let i = widx / n_out;
+        let j = widx % n_out;
+        let s = pp.sign[j * kdim + i] as i32;
+        if s == 0 {
+            continue;
+        }
+        dc[j * kdim + i] = s * (now as i64 - was as i64) as i32;
+        mask[j * words + i / 64] |= 1u64 << (i % 64);
+        changed = true;
+    }
+    (dc, mask, changed)
+}
+
+/// Re-pack the non-zero words of one lowered row in place.
+#[inline]
+pub(crate) fn repack_row(cols: &[i32], r: usize, kdim: usize, nz: &mut [u64]) {
+    let words = kdim.div_ceil(64).max(1);
+    let row = &cols[r * kdim..(r + 1) * kdim];
+    let dst = &mut nz[r * words..(r + 1) * words];
+    dst.fill(0);
+    for (i, &v) in row.iter().enumerate() {
+        if v != 0 {
+            dst[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+}
+
+/// Partial [`im2col_i32`]: re-gather only the flagged output rows of a
+/// cached lowering (and refresh their packed non-zero words) — the O(Δ)
+/// response to a masked refine whose upstream change touched a subset
+/// of pixels (the attended region plus its conv halo).  Rows written
+/// here are bit-identical to what a full `im2col_i32` would produce.
+pub fn im2col_rows_i32(
+    x: &[i32],
+    dims: (usize, usize, usize, usize),
+    ksize: usize,
+    stride: usize,
+    rows: &[bool],
+    cols: &mut [i32],
+    nz: &mut [u64],
+) {
+    let (b, h, w, c) = dims;
+    let pad = ksize / 2;
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let kdim = ksize * ksize * c;
+    debug_assert_eq!(rows.len(), b * ho * wo);
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let r = (bi * ho + oy) * wo + ox;
+                if !rows[r] {
+                    continue;
+                }
+                let base = r * kdim;
+                cols[base..base + kdim].fill(0);
+                for di in 0..ksize {
+                    let iy = (oy * stride + di) as isize - pad as isize;
+                    for dj in 0..ksize {
+                        let ix = (ox * stride + dj) as isize - pad as isize;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                            let dst = base + (di * ksize + dj) * c;
+                            for ci in 0..c {
+                                cols[dst + ci] = clamp_q16(x[src + ci]);
+                            }
+                        }
+                    }
+                }
+                // depthwise caches carry no nz mask (their packed loop
+                // walks live taps instead)
+                if !nz.is_empty() {
+                    repack_row(cols, r, kdim, nz);
+                }
+            }
+        }
+    }
+}
+
+/// Partial dense lowering refresh: flagged rows re-copy (and re-clamp)
+/// their input block and refresh their packed non-zero words.
+pub(crate) fn refresh_dense_rows(
+    x: &[i32],
+    rows: &[bool],
+    kdim: usize,
+    cols: &mut [i32],
+    nz: &mut [u64],
+) {
+    for (r, &flag) in rows.iter().enumerate() {
+        if !flag {
+            continue;
+        }
+        for i in 0..kdim {
+            cols[r * kdim + i] = clamp_q16(x[r * kdim + i]);
+        }
+        repack_row(cols, r, kdim, nz);
+    }
 }
 
 /// SAME-padded integer im2col with the sim's `(di, dj, c)` patch order;

@@ -41,7 +41,7 @@ pub mod sim;
 use anyhow::Result;
 
 use crate::costs::CostCounter;
-use crate::precision::PrecisionPlan;
+use crate::precision::{PlanContext, PrecisionPlan};
 use crate::sim::tensor::Tensor;
 
 pub use intkernel::IntKernel;
@@ -131,6 +131,26 @@ pub trait Backend {
 
     /// Input geometry `(H, W, C)` a session's batch tensor must have.
     fn input_hwc(&self) -> (usize, usize, usize);
+
+    /// Plan-policy context for a `batch`-image pass — what precision
+    /// policies beyond the entropy signal need (layer count, per-layer
+    /// MACs/variances, input resolution).  Backends over a prepared
+    /// [`crate::sim::PsbNetwork`] return the full network context; the
+    /// default is a minimal geometry-only context (enough for
+    /// [`crate::precision::SpatialAttention`], which only reads
+    /// `input_hw` and the feature map the caller attaches).
+    fn plan_context(&self, batch: usize) -> PlanContext<'static> {
+        let (h, w, _c) = self.input_hwc();
+        PlanContext {
+            num_layers: 1,
+            layer_macs: Vec::new(),
+            layer_var: Vec::new(),
+            batch,
+            input_hw: (h, w),
+            feat: None,
+            entropy: None,
+        }
+    }
 
     /// Open a session that will run its first pass at `plan`.  The plan
     /// is validated against the backend's network; execution starts at

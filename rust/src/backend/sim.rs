@@ -64,6 +64,10 @@ impl Backend for SimBackend {
         self.net.input_hwc
     }
 
+    fn plan_context(&self, batch: usize) -> crate::precision::PlanContext<'static> {
+        crate::precision::PlanContext::for_network(&self.net, batch)
+    }
+
     fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
         plan.validate(self.net.num_capacitors, None).map_err(anyhow::Error::new)?;
         Ok(Box::new(SimSession {

@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::backend::{pjrt_factory, sim_factory};
+use crate::backend::{int_kernel_factory, pjrt_factory, sim_factory};
 use crate::coordinator::batcher::{run_batcher, BatcherConfig, FormedBatch, Pending};
 use crate::coordinator::engine::{Engine, SessionId};
 use crate::coordinator::metrics::Metrics;
@@ -119,23 +119,20 @@ impl Coordinator {
     /// (only the incremental samples are drawn, against the cached
     /// per-node activations).
     pub fn start_sim(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
-        anyhow::ensure!(
-            net.feat_node.is_some(),
-            "sim serving needs a feat node for the escalation signal"
-        );
-        let (h, w, c) = net.input_hwc;
-        let image_len = h * w * c;
-        let num_classes = net
-            .nodes
-            .iter()
-            .rev()
-            .find_map(|n| match &n.op {
-                crate::sim::psbnet::PsbOp::Capacitor { cout, .. } => Some(*cout),
-                _ => None,
-            })
-            .ok_or_else(|| anyhow::anyhow!("network has no capacitor layers"))?;
-        let macs_per_image: u64 = net.capacitor_macs(1).iter().sum();
+        let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
         let engine = Engine::spawn(sim_factory(net, RngKind::Philox))?;
+        Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
+    }
+
+    /// Start against the integer shift-add backend: the whole serving
+    /// path — stage-1 pass, session narrow, stage-2 refine (spatial
+    /// plans included) — runs on `IntKernel`'s packed contraction.
+    /// Networks the integer datapath cannot express (unfoldable BNs,
+    /// the deterministic variant) fail at `Engine::spawn` with the
+    /// root cause.
+    pub fn start_int(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
+        let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
+        let engine = Engine::spawn(int_kernel_factory(net, RngKind::Philox))?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
@@ -251,6 +248,27 @@ impl Drop for Coordinator {
             let _ = t.join();
         }
     }
+}
+
+/// Serving geometry of a prepared network: image length, class count,
+/// MACs/image — shared by the sim and IntKernel engine constructors.
+fn net_geometry(net: &PsbNetwork) -> Result<(usize, usize, u64)> {
+    anyhow::ensure!(
+        net.feat_node.is_some(),
+        "session serving needs a feat node for the escalation signal"
+    );
+    let (h, w, c) = net.input_hwc;
+    let num_classes = net
+        .nodes
+        .iter()
+        .rev()
+        .find_map(|n| match &n.op {
+            crate::sim::psbnet::PsbOp::Capacitor { cout, .. } => Some(*cout),
+            _ => None,
+        })
+        .ok_or_else(|| anyhow::anyhow!("network has no capacitor layers"))?;
+    let macs_per_image: u64 = net.capacitor_macs(1).iter().sum();
+    Ok((h * w * c, num_classes, macs_per_image))
 }
 
 /// MACs of one serving-CNN inference, derived from the artifact geometry

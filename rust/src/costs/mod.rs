@@ -74,6 +74,50 @@ impl CostCounter {
         self.float_ops += ops;
     }
 
+    /// Exact per-row charge of a (possibly) two-level contraction step:
+    /// each of the `m` rows pays `live × (n_new(row) − n_prev(row))`
+    /// gated adds, where a row's sample level is picked by its region
+    /// flag — `levels.1` inside the attended mask, `levels.0` outside
+    /// (`None` mask ⇒ every row on the base track).  Rows whose region
+    /// flipped are billed their true increment (e.g. a row promoted
+    /// lo→hi pays `n_hi_new − n_lo_prev`), and a row whose target level
+    /// sits below what it already holds (hi→lo demotion) pays nothing —
+    /// no new samples are drawn for it.  This is what makes refinement
+    /// charges partition the one-shot charge exactly under spatial
+    /// splits *and* through split collapse, per row instead of via a
+    /// `mask_fraction()` estimate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn charge_rows_exact(
+        &mut self,
+        live: u64,
+        m: usize,
+        prev_hi: Option<&[bool]>,
+        new_hi: Option<&[bool]>,
+        prev_levels: (u32, u32),
+        new_levels: (u32, u32),
+    ) {
+        // a mask of the wrong geometry carries no row attribution
+        let prev_hi = prev_hi.filter(|mk| mk.len() == m);
+        let new_hi = new_hi.filter(|mk| mk.len() == m);
+        // rows per (prev_region, new_region) combo
+        let mut rows = [0u64; 4];
+        for r in 0..m {
+            let p = prev_hi.is_some_and(|mk| mk[r]);
+            let n = new_hi.is_some_and(|mk| mk[r]);
+            rows[((p as usize) << 1) | n as usize] += 1;
+        }
+        for (combo, &count) in rows.iter().enumerate() {
+            if count == 0 {
+                continue;
+            }
+            let n_prev = if combo & 2 != 0 { prev_levels.1 } else { prev_levels.0 };
+            let n_new = if combo & 1 != 0 { new_levels.1 } else { new_levels.0 };
+            if n_new > n_prev {
+                self.charge_capacitor(count * live, n_new - n_prev);
+            }
+        }
+    }
+
     pub fn merge(&mut self, other: &CostCounter) {
         self.gated_adds += other.gated_adds;
         self.random_bits += other.random_bits;

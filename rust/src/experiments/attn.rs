@@ -5,11 +5,16 @@
 //!
 //! Also sweeps the layer-wise precision alternative the paper examined
 //! (and found less promising than spatial adaption).
+//!
+//! `--backend int` runs the whole two-stage pipeline on the integer
+//! shift-add `IntKernel` — the row-masked contraction executes the
+//! masked refine in work proportional to the attended fraction, so the
+//! paper's −33% accounting shows up as real skipped adds.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::attention::{adaptive_forward_with, Threshold};
-use crate::backend::SimBackend;
+use crate::backend::{Backend, IntKernel, SimBackend};
 use crate::experiments::table1::evaluate_attention;
 use crate::sim::layers::argmax_rows;
 use crate::experiments::{train_model, ExpConfig};
@@ -20,19 +25,28 @@ use crate::sim::train::evaluate_psb;
 pub fn run(cfg: &ExpConfig) -> Result<()> {
     let data = cfg.dataset();
     let (net, _) = train_model("resnet_mini", &data, cfg);
-    let psb = SimBackend::new(PsbNetwork::prepare(&net, PsbOptions::default()));
+    let prepared = PsbNetwork::prepare(&net, PsbOptions::default());
+    let boxed: Box<dyn Backend> = match cfg.backend.as_str() {
+        "sim" => Box::new(SimBackend::new(prepared)),
+        "int" => Box::new(IntKernel::new(prepared)?),
+        other => bail!("unknown backend '{other}' for the attn experiment (sim|int)"),
+    };
+    let psb: &dyn Backend = boxed.as_ref();
 
-    println!("Attention headline: spatial two-stage vs flat sampling");
+    println!(
+        "Attention headline: spatial two-stage vs flat sampling [{} backend]",
+        psb.name()
+    );
     let mut rows = Vec::new();
     let mut flat = std::collections::HashMap::new();
     for n in [8u32, 16, 32] {
-        let (acc, costs) = evaluate_psb(&psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
+        let (acc, costs) = evaluate_psb(psb, &data, &PrecisionPlan::uniform(n), cfg.seed);
         println!("  flat psb{n:<2}: acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
         flat.insert(n, (acc, costs.gated_adds));
         rows.push(format!("flat,psb{n},{acc:.4},{}", costs.gated_adds));
     }
     for (lo, hi) in [(8u32, 16u32), (16, 32)] {
-        let (acc, costs) = evaluate_attention(&psb, &data, lo, hi, cfg.seed);
+        let (acc, costs) = evaluate_attention(psb, &data, lo, hi, cfg.seed);
         let base = flat[&hi].1 as f64;
         let vs_low_flat = costs.gated_adds as f64 / flat[&lo].1 as f64;
         let saving = 1.0 - costs.gated_adds as f64 / base;
@@ -55,7 +69,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
             let idx: Vec<usize> = (start..(start + 64).min(n_imgs)).collect();
             let (x, labels) = data.gather_test(&idx);
             let out = adaptive_forward_with(
-                &psb, &x, lo, hi, cfg.seed.wrapping_add(start as u64), Threshold::Quantile(0.65),
+                psb, &x, lo, hi, cfg.seed.wrapping_add(start as u64), Threshold::Quantile(0.65),
             );
             let preds = argmax_rows(&out.logits.data, out.logits.shape[1]);
             correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
@@ -76,7 +90,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
 
     // layer-wise adaption: front-loaded vs back-loaded sample budgets
     println!("\nLayer-wise adaption (same mean budget as flat psb16):");
-    let caps = psb.network().num_capacitors;
+    let caps = psb.plan_context(1).num_layers;
     let schedules: Vec<(&str, Vec<u32>)> = vec![
         ("uniform16", vec![16; caps]),
         ("front-heavy", ramp(caps, 32, 8)),
@@ -84,7 +98,7 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
     ];
     for (name, sched) in schedules {
         let (acc, costs) =
-            evaluate_psb(&psb, &data, &PrecisionPlan::per_layer(&sched)?, cfg.seed);
+            evaluate_psb(psb, &data, &PrecisionPlan::per_layer(&sched)?, cfg.seed);
         println!("  {name:<12} acc {:.2}%  gated adds {}", acc * 100.0, costs.gated_adds);
         rows.push(format!("layerwise,{name},{acc:.4},{}", costs.gated_adds));
     }

@@ -32,11 +32,14 @@ pub struct ExpConfig {
     pub quick: bool,
     pub out_dir: PathBuf,
     pub seed: u64,
+    /// Execution backend for backend-generic experiments (`sim` | `int`;
+    /// currently honored by `attn`).
+    pub backend: String,
 }
 
 impl Default for ExpConfig {
     fn default() -> Self {
-        ExpConfig { quick: false, out_dir: "results".into(), seed: 1234 }
+        ExpConfig { quick: false, out_dir: "results".into(), seed: 1234, backend: "sim".into() }
     }
 }
 

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::attention::adaptive_forward;
-use crate::backend::SimBackend;
+use crate::backend::{Backend, SimBackend};
 use crate::costs::CostCounter;
 use crate::data::Dataset;
 use crate::experiments::{train_model, ExpConfig};
@@ -145,9 +145,10 @@ pub fn run(cfg: &ExpConfig) -> Result<()> {
 }
 
 /// Accuracy + total two-stage cost of the attention mechanism over the
-/// test set (Table 1 "attention" rows).
+/// test set (Table 1 "attention" rows) — on any backend whose sessions
+/// accept spatial plans (sim or IntKernel).
 pub fn evaluate_attention(
-    psb: &SimBackend,
+    psb: &dyn Backend,
     data: &Dataset,
     n_low: u32,
     n_high: u32,

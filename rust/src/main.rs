@@ -25,7 +25,7 @@ const USAGE: &str = "\
 psb — Progressive Stochastic Binarization, full-system reproduction
 
 USAGE:
-  psb experiment <fig1|fig2|fig3|fig4|table1|table2|attn|all> [--quick] [--out-dir D] [--seed S]
+  psb experiment <fig1|fig2|fig3|fig4|table1|table2|attn|all> [--quick] [--out-dir D] [--seed S] [--backend sim|int]
   psb train-serving [--out F] [--epochs N] [--seed S]
   psb serve [--artifacts D] [--weights F] [--requests N] [--n-low N] [--n-high N] [--flat]
   psb encode <w>
@@ -89,6 +89,7 @@ fn main() -> Result<()> {
                     quick: a.switches.contains("quick"),
                     out_dir: PathBuf::from(a.get("out-dir", "results".to_string())?),
                     seed: a.get("seed", 1234u64)?,
+                    backend: a.get("backend", "sim".to_string())?,
                 },
             )
         }

@@ -181,7 +181,9 @@ impl PrecisionPlan {
     /// estimated with the input-resolution mask fraction (OR-pooling
     /// across strides grows the attended region slightly, so this is a
     /// mild under-estimate for deep nets — documented in
-    /// `docs/PRECISION.md`).
+    /// `docs/PRECISION.md`).  This is a *planning* signal only: executed
+    /// passes are billed exactly per row on every backend
+    /// ([`crate::costs::CostCounter::charge_rows_exact`]).
     pub fn estimate_cost(&self, layer_macs: &[u64]) -> CostCounter {
         let f = self.mask_fraction() as f64;
         let mut costs = CostCounter::default();

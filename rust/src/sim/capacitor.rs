@@ -217,6 +217,50 @@ pub fn capacitor_matmul_exact_counts(
     y
 }
 
+/// Two-level (spatial, Sec. 4.5) bit-exact integer capacitor matmul —
+/// the masked exact-integer reference the row-masked `IntKernel`
+/// contraction is property-tested against: row `r` contracts with
+/// `(counts_hi, n_hi)` when `hi_rows[r]` and `(counts_lo, n_lo)`
+/// otherwise, renormalized by its own fixed shift.  Rows are
+/// independent, so this is literally [`capacitor_matmul_exact_counts`]
+/// applied per region over the same shared-filter counts (gather the
+/// region's rows, contract, scatter back) — bit-identical per row to a
+/// uniform pass at that row's level.  Both `n` must be powers of two.
+/// Does **not** charge costs (callers bill per row).
+#[allow(clippy::too_many_arguments)]
+pub fn spatial_exact_counts(
+    x_q: &[Q16],
+    planes: &PsbPlanes,
+    bias: Option<&[f32]>,
+    m: usize,
+    hi_rows: &[bool],
+    counts_lo: &[u32],
+    n_lo: u32,
+    counts_hi: &[u32],
+    n_hi: u32,
+) -> Vec<Q16> {
+    let (k, n) = (planes.shape[0], planes.shape[1]);
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(hi_rows.len(), m);
+    let mut y = vec![Q16::ZERO; m * n];
+    for level in [false, true] {
+        let rows: Vec<usize> = (0..m).filter(|&r| hi_rows[r] == level).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let mut sub = Vec::with_capacity(rows.len() * k);
+        for &r in &rows {
+            sub.extend_from_slice(&x_q[r * k..(r + 1) * k]);
+        }
+        let (counts, n_samples) = if level { (counts_hi, n_hi) } else { (counts_lo, n_lo) };
+        let ysub = capacitor_matmul_exact_counts(&sub, planes, bias, rows.len(), counts, n_samples);
+        for (i, &r) in rows.iter().enumerate() {
+            y[r * n..(r + 1) * n].copy_from_slice(&ysub[i * n..(i + 1) * n]);
+        }
+    }
+    y
+}
+
 /// Bit-exact integer **depthwise** capacitor convolution (Eq. 9 applied
 /// per channel): SAME padding, stride `ks.1`, one `k×k` capacitor filter
 /// per channel with counts indexed `widx = (di·k + dj)·c + ci`.

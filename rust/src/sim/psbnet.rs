@@ -37,6 +37,7 @@ use crate::precision::{PlanError, PrecisionPlan, ProgressiveState};
 use crate::rng::RngKind;
 use crate::sim::capacitor::{
     capacitor_matmul_exact_counts, depthwise_exact_counts, nnz, realize_weights,
+    spatial_exact_counts,
 };
 use crate::sim::layers::global_avg_pool;
 use crate::sim::network::{depthwise_forward, Network, Op};
@@ -472,13 +473,17 @@ impl PsbNetwork {
     /// (sessions) must not swap `x` between passes except through
     /// [`SimCache::narrow`].  Geometry changes reset it.
     ///
-    /// Cost exactness: for refinement chains that keep the same region
-    /// structure (uniform → uniform, or uniform → spatial split) the
-    /// stages' costs sum exactly to the direct pass.  Collapsing a
-    /// spatial split back to a uniform plan drops the mask, so the
-    /// attended rows' already-held samples can no longer be attributed
-    /// per row and the pass conservatively re-bills them at the base
-    /// track's increment (an upper bound; logits remain exact).
+    /// Cost exactness: every capacitor row is billed its own increment
+    /// (`live × (n_new(row) − n_prev(row))`, via
+    /// [`CostCounter::charge_rows_exact`]), with the previous pass's
+    /// cached out-masks attributing each row to the region its result
+    /// currently holds.  Refinement chains therefore partition the
+    /// direct pass's cost exactly — through spatial splits, mask
+    /// changes *and* split collapse.  Only a cache-less chain (plain
+    /// [`PsbNetwork::refine`] with a throwaway cache) loses the row
+    /// attribution on collapse and conservatively re-bills attended
+    /// rows at the base track's increment (an upper bound; logits
+    /// remain exact in all cases).
     pub fn refine_cached(
         &self,
         x: &Tensor,
@@ -557,6 +562,18 @@ impl PsbNetwork {
                         let in_masked = masks[in_idx].is_some();
                         let splits = in_masked && n_hi > n_lo;
                         let target_hi = if splits { n_hi } else { n_lo };
+                        // billing snapshot: the levels each row's result
+                        // currently holds, and which region each row was
+                        // in last pass (the cached out-mask) — what makes
+                        // the per-row charge exact through mask changes
+                        // and split collapse
+                        let prev_levels =
+                            (state.units[unit].n_lo(), state.units[unit].n_hi());
+                        let prev_rows: Option<Vec<bool>> = if reuse {
+                            cache.masks.get(idx).cloned().flatten()
+                        } else {
+                            None
+                        };
                         // the §4.4 deterministic contraction ignores sampled
                         // counts (k = round(p·n)), so only track the levels;
                         // the spatial split still samples (as it always did)
@@ -609,21 +626,32 @@ impl PsbNetwork {
                                         .map(|mk| pool_mask(mk, bb, hh, ww, *stride));
                                     let y = match &out_mask {
                                         Some(mk) if splits => {
-                                            let wbar_lo =
-                                                realize_weights(planes, ust.counts_lo(), n_lo);
-                                            let wbar_hi =
-                                                realize_weights(planes, ust.counts_hi(), n_hi);
-                                            let y = two_level_matmul(
-                                                &cols.data, planes, Some(bias), m, mk, &wbar_lo,
-                                                &wbar_hi,
+                                            let y = self.two_level_counts(
+                                                &cols.data, planes, bias, m, mk, ust, n_lo, n_hi,
                                             );
-                                            charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                            costs.charge_rows_exact(
+                                                nnz(planes),
+                                                m,
+                                                prev_rows.as_deref(),
+                                                Some(mk),
+                                                prev_levels,
+                                                (n_lo, n_hi),
+                                            );
                                             y
                                         }
-                                        _ => self.contract_counts(
-                                            &cols.data, planes, Some(bias), m, ust, n_lo, d_lo,
-                                            &mut costs,
-                                        ),
+                                        _ => {
+                                            costs.charge_rows_exact(
+                                                nnz(planes),
+                                                m,
+                                                prev_rows.as_deref(),
+                                                None,
+                                                prev_levels,
+                                                (n_lo, n_lo),
+                                            );
+                                            self.contract_counts(
+                                                &cols.data, planes, Some(bias), m, ust, n_lo,
+                                            )
+                                        }
                                     };
                                     (
                                         Tensor::from_vec(y, &[bb, ho, wo, *cout]),
@@ -640,31 +668,36 @@ impl PsbNetwork {
                                     let adds = m as u64 * nnz(planes);
                                     stats.executed_adds += adds;
                                     stats.layer_adds[layer] += adds;
-                                    let row_mask = in_mask.as_ref().map(|mk| {
-                                        let per = mk.len() / m;
-                                        (0..m)
-                                            .map(|r| {
-                                                mk[r * per..(r + 1) * per].iter().any(|&v| v)
-                                            })
-                                            .collect::<Vec<bool>>()
-                                    });
+                                    let row_mask =
+                                        in_mask.as_ref().map(|mk| collapse_mask_rows(mk, m));
                                     let y = match &row_mask {
                                         Some(mk) if splits => {
-                                            let wbar_lo =
-                                                realize_weights(planes, ust.counts_lo(), n_lo);
-                                            let wbar_hi =
-                                                realize_weights(planes, ust.counts_hi(), n_hi);
-                                            let y = two_level_matmul(
-                                                &inp.data, planes, Some(bias), m, mk, &wbar_lo,
-                                                &wbar_hi,
+                                            let y = self.two_level_counts(
+                                                &inp.data, planes, bias, m, mk, ust, n_lo, n_hi,
                                             );
-                                            charge_split(&mut costs, planes, mk, d_lo, d_hi);
+                                            costs.charge_rows_exact(
+                                                nnz(planes),
+                                                m,
+                                                prev_rows.as_deref(),
+                                                Some(mk),
+                                                prev_levels,
+                                                (n_lo, n_hi),
+                                            );
                                             y
                                         }
-                                        _ => self.contract_counts(
-                                            &inp.data, planes, Some(bias), m, ust, n_lo, d_lo,
-                                            &mut costs,
-                                        ),
+                                        _ => {
+                                            costs.charge_rows_exact(
+                                                nnz(planes),
+                                                m,
+                                                prev_rows.as_deref(),
+                                                None,
+                                                prev_levels,
+                                                (n_lo, n_lo),
+                                            );
+                                            self.contract_counts(
+                                                &inp.data, planes, Some(bias), m, ust, n_lo,
+                                            )
+                                        }
                                     };
                                     (Tensor::from_vec(y, &[m, *cout]), row_mask, true, in_masked)
                                 }
@@ -681,6 +714,13 @@ impl PsbNetwork {
                         unit_idx += 1;
                         let in_masked = masks[in_idx].is_some();
                         let splits = in_masked && n_hi > n_lo;
+                        let prev_levels =
+                            (state.units[unit].n_lo(), state.units[unit].n_hi());
+                        let prev_rows: Option<Vec<bool>> = if reuse {
+                            cache.masks.get(idx).cloned().flatten()
+                        } else {
+                            None
+                        };
                         let (d_lo, d_hi) = state.units[unit].advance(
                             kind,
                             seed,
@@ -713,35 +753,61 @@ impl PsbNetwork {
                                 (bb * hh.div_ceil(*stride) * ww.div_ceil(*stride)) as u64 * live;
                             stats.executed_adds += macs;
                             stats.layer_adds[layer] += macs;
+                            let rows = bb * hh.div_ceil(*stride) * ww.div_ceil(*stride);
                             let out = match (&out_mask, splits) {
                                 (Some(mk), true) => {
-                                    // two filter realizations, per-pixel select
-                                    let lo = depthwise_with_counts(
-                                        inp, planes, bias, *k, *stride, *c, ust.counts_lo(), n_lo,
+                                    // two filter realizations, per-pixel select —
+                                    // bit-exact Eq. 9 per region on the integer
+                                    // path (what the IntKernel depthwise masked
+                                    // kernel computes per row)
+                                    let exact = self.options.exact_integer
+                                        && n_lo.is_power_of_two()
+                                        && n_hi.is_power_of_two();
+                                    let (lo, hi) = if exact {
+                                        (
+                                            depthwise_exact(
+                                                inp, planes, bias, (*k, *stride), *c,
+                                                ust.counts_lo(), n_lo,
+                                            ),
+                                            depthwise_exact(
+                                                inp, planes, bias, (*k, *stride), *c,
+                                                ust.counts_hi(), n_hi,
+                                            ),
+                                        )
+                                    } else {
+                                        (
+                                            depthwise_with_counts(
+                                                inp, planes, bias, *k, *stride, *c,
+                                                ust.counts_lo(), n_lo,
+                                            ),
+                                            depthwise_with_counts(
+                                                inp, planes, bias, *k, *stride, *c,
+                                                ust.counts_hi(), n_hi,
+                                            ),
+                                        )
+                                    };
+                                    // exact per-pixel billing (no fraction
+                                    // estimate): each pixel pays live ×
+                                    // its own increment
+                                    costs.charge_rows_exact(
+                                        live,
+                                        rows,
+                                        prev_rows.as_deref(),
+                                        Some(mk),
+                                        prev_levels,
+                                        (n_lo, n_hi),
                                     );
-                                    let hi = depthwise_with_counts(
-                                        inp, planes, bias, *k, *stride, *c, ust.counts_hi(), n_hi,
-                                    );
-                                    let frac_hi = mk.iter().filter(|&&v| v).count() as f64
-                                        / mk.len() as f64;
-                                    if d_lo > 0 {
-                                        costs.charge_capacitor(
-                                            (macs as f64 * (1.0 - frac_hi)) as u64,
-                                            d_lo,
-                                        );
-                                    }
-                                    if d_hi > 0 {
-                                        costs.charge_capacitor(
-                                            (macs as f64 * frac_hi) as u64,
-                                            d_hi,
-                                        );
-                                    }
                                     select_by_mask(&lo, &hi, mk, *c)
                                 }
                                 _ => {
-                                    if d_lo > 0 {
-                                        costs.charge_capacitor(macs, d_lo);
-                                    }
+                                    costs.charge_rows_exact(
+                                        live,
+                                        rows,
+                                        prev_rows.as_deref(),
+                                        None,
+                                        prev_levels,
+                                        (n_lo, n_lo),
+                                    );
                                     if self.options.exact_integer && n_lo.is_power_of_two() {
                                         // bit-exact Eq. 9 semantics, byte-identical
                                         // to the IntKernel depthwise kernel
@@ -822,13 +888,7 @@ impl PsbNetwork {
                     }
                     PsbOp::Add => {
                         let y = acts[node.inputs[0]].add(&acts[node.inputs[1]]);
-                        let m = match (&masks[node.inputs[0]], &masks[node.inputs[1]]) {
-                            (Some(a), Some(b)) => {
-                                Some(a.iter().zip(b).map(|(x, y)| *x || *y).collect())
-                            }
-                            (Some(a), None) | (None, Some(a)) => Some(a.clone()),
-                            _ => None,
-                        };
+                        let m = or_masks(&masks[node.inputs[0]], &masks[node.inputs[1]]);
                         let d = dirty[node.inputs[0]] || dirty[node.inputs[1]];
                         (y, m, d, false)
                     }
@@ -837,12 +897,9 @@ impl PsbNetwork {
                         let (bb, _, _, _) = dims4(inp);
                         let mut y = global_avg_pool(inp);
                         quantize_slice(&mut y.data);
-                        let m = masks[node.inputs[0]].as_ref().map(|mk| {
-                            let per = mk.len() / bb;
-                            (0..bb)
-                                .map(|r| mk[r * per..(r + 1) * per].iter().any(|&v| v))
-                                .collect::<Vec<bool>>()
-                        });
+                        let m = masks[node.inputs[0]]
+                            .as_ref()
+                            .map(|mk| collapse_mask_rows(mk, bb));
                         (y, m, dirty[node.inputs[0]], false)
                     }
                 };
@@ -865,9 +922,8 @@ impl PsbNetwork {
     }
 
     /// Uniform-precision contraction from accumulated counts, dispatching
-    /// float-sim vs bit-exact vs the §4.4 deterministic variant.  Charges
-    /// the `d` *incremental* samples this pass drew.
-    #[allow(clippy::too_many_arguments)]
+    /// float-sim vs bit-exact vs the §4.4 deterministic variant.  Does
+    /// not charge costs (the caller bills each row's increment exactly).
     fn contract_counts(
         &self,
         x: &[f32],
@@ -876,10 +932,8 @@ impl PsbNetwork {
         m: usize,
         unit: &crate::precision::UnitState,
         n: u32,
-        d: u32,
-        costs: &mut CostCounter,
     ) -> Vec<f32> {
-        let y = if self.options.deterministic {
+        if self.options.deterministic {
             deterministic_matmul(x, planes, bias, m, n)
         } else if self.options.exact_integer && n.is_power_of_two() {
             let xq: Vec<Q16> = x.iter().map(|&v| Q16::from_f32(v)).collect();
@@ -891,11 +945,51 @@ impl PsbNetwork {
             let mut y = matmul(x, &wbar, m, k, nn);
             add_bias_quantize(&mut y, bias, nn);
             y
-        };
-        if d > 0 {
-            costs.charge_capacitor(m as u64 * nnz(planes), d);
         }
-        y
+    }
+
+    /// Two-region contraction from accumulated counts: attended rows at
+    /// `(counts_hi, n_hi)`, the rest at `(counts_lo, n_lo)`.  On an
+    /// `exact_integer` network with power-of-two levels this is the
+    /// bit-exact Eq. 9 reference ([`spatial_exact_counts`]) the
+    /// row-masked `IntKernel` contraction is property-tested against;
+    /// otherwise the float-carried two-level matmul.  Does not charge
+    /// costs (the caller bills each row's increment exactly).
+    #[allow(clippy::too_many_arguments)]
+    fn two_level_counts(
+        &self,
+        x: &[f32],
+        planes: &PsbPlanes,
+        bias: &[f32],
+        m: usize,
+        hi_rows: &[bool],
+        unit: &crate::precision::UnitState,
+        n_lo: u32,
+        n_hi: u32,
+    ) -> Vec<f32> {
+        if self.options.exact_integer
+            && !self.options.deterministic
+            && n_lo.is_power_of_two()
+            && n_hi.is_power_of_two()
+        {
+            let xq: Vec<Q16> = x.iter().map(|&v| Q16::from_f32(v)).collect();
+            let yq = spatial_exact_counts(
+                &xq,
+                planes,
+                Some(bias),
+                m,
+                hi_rows,
+                unit.counts_lo(),
+                n_lo,
+                unit.counts_hi(),
+                n_hi,
+            );
+            yq.into_iter().map(|q| q.to_f32()).collect()
+        } else {
+            let wbar_lo = realize_weights(planes, unit.counts_lo(), n_lo);
+            let wbar_hi = realize_weights(planes, unit.counts_hi(), n_hi);
+            two_level_matmul(x, planes, Some(bias), m, hi_rows, &wbar_lo, &wbar_hi)
+        }
     }
 }
 
@@ -908,20 +1002,6 @@ fn planes_variance(planes: &PsbPlanes) -> f64 {
         .filter(|((s, _), _)| **s != 0.0)
         .map(|((_, e), p)| ((2.0 * *e) as f64).exp2() * (*p as f64) * (1.0 - *p as f64))
         .sum()
-}
-
-/// Charge a two-region contraction: low rows at `d_lo` incremental
-/// samples, attended rows at `d_hi`.
-fn charge_split(costs: &mut CostCounter, planes: &PsbPlanes, hi_rows: &[bool], d_lo: u32, d_hi: u32) {
-    let live = nnz(planes);
-    let rows_hi = hi_rows.iter().filter(|&&v| v).count() as u64;
-    let rows_lo = hi_rows.len() as u64 - rows_hi;
-    if d_lo > 0 {
-        costs.charge_capacitor(rows_lo * live, d_lo);
-    }
-    if d_hi > 0 {
-        costs.charge_capacitor(rows_hi * live, d_hi);
-    }
 }
 
 /// Two-region matmul: rows flagged in `hi_rows` use `wbar_hi`, the rest
@@ -986,9 +1066,29 @@ fn encode_planes(w: &[f32], shape: &[usize], options: &PsbOptions) -> PsbPlanes 
     planes
 }
 
+/// Per-row collapse of a finer mask: row `r` is flagged iff any entry of
+/// its block is — the dense/GAP region rule ("a row is interesting if
+/// any of its pixels is").  Shared with the IntKernel so both backends
+/// assign rows to regions by the identical rule.
+pub(crate) fn collapse_mask_rows(mask: &[bool], m: usize) -> Vec<bool> {
+    let per = mask.len() / m.max(1);
+    (0..m).map(|r| mask[r * per..(r + 1) * per].iter().any(|&v| v)).collect()
+}
+
+/// OR of two optional region masks — the residual-add rule.  Shared
+/// with the IntKernel, like [`collapse_mask_rows`] and [`pool_mask`].
+pub(crate) fn or_masks(a: &Option<Vec<bool>>, b: &Option<Vec<bool>>) -> Option<Vec<bool>> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.iter().zip(y).map(|(p, q)| *p || *q).collect()),
+        (Some(x), None) | (None, Some(x)) => Some(x.clone()),
+        _ => None,
+    }
+}
+
 /// Downsample a B×H×W boolean mask by `stride` with OR-pooling (a region
-/// is interesting if any covered pixel is).
-fn pool_mask(mask: &[bool], b: usize, h: usize, w: usize, stride: usize) -> Vec<bool> {
+/// is interesting if any covered pixel is).  Shared with the IntKernel so
+/// both backends assign rows to regions by the identical rule.
+pub(crate) fn pool_mask(mask: &[bool], b: usize, h: usize, w: usize, stride: usize) -> Vec<bool> {
     if stride == 1 {
         return mask.to_vec();
     }

@@ -209,3 +209,65 @@ fn sim_flat_serving_never_escalates_and_costs_less() {
     assert!(esc_adaptive > 0, "adaptive mode should escalate something");
     assert!(adds_adaptive > adds_flat, "{adds_adaptive} vs {adds_flat}");
 }
+
+// ---- integer-engine tests: serving on the IntKernel backend -------------
+
+#[test]
+fn int_coordinator_answers_every_request_once() {
+    let (psb, data) = sim_setup();
+    let coord = Coordinator::start_int(config(false), psb).unwrap();
+    const N: usize = 24;
+    let mut inflight = Vec::new();
+    for i in 0..N {
+        let (x, _) = data.gather_test(&[i % 64]);
+        inflight.push(coord.submit(x.data).unwrap());
+    }
+    let mut answers = 0;
+    for rx in inflight {
+        let resp = rx.recv().expect("reply must arrive");
+        assert!(resp.class < 10);
+        assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
+        assert!(resp.n_used == 2 || resp.n_used == 4);
+        assert_eq!(resp.escalated, resp.n_used == 4);
+        assert_eq!(resp.n_reused, if resp.escalated { 2 } else { 0 });
+        answers += 1;
+    }
+    assert_eq!(answers, N);
+    assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), N as u64);
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), N as u64);
+    // the integer backend reports real executed work to the metrics
+    assert!(coord.metrics.executed_adds.load(Ordering::Relaxed) > 0);
+}
+
+/// The engine's stage-2 shape — narrow an open session to the uncertain
+/// rows, refine to a *spatial* plan — runs on IntKernel sessions: the
+/// row-masked contraction accepts the masked target and reports both
+/// executed and charged work.
+#[test]
+fn int_engine_accepts_masked_narrow_refine() {
+    let (psb, data) = sim_setup();
+    let (h, w, _c) = psb.input_hwc;
+    let engine = psb::coordinator::Engine::spawn(psb::backend::int_kernel_factory(
+        psb,
+        psb::rng::RngKind::Philox,
+    ))
+    .unwrap();
+    let (x, _) = data.gather_test(&[0, 1, 2, 3]);
+    let out = engine
+        .begin_session(psb::precision::PrecisionPlan::uniform(4), x.data, 4, 7)
+        .unwrap();
+    let sid = out.session.expect("keep-session begin returns an id");
+    let rows = vec![1usize, 3];
+    // attend to the top half of each narrowed image
+    let mask: Vec<bool> = (0..rows.len() * h * w).map(|i| (i % (h * w)) / w < h / 2).collect();
+    let refined = engine
+        .refine_session(sid, Some(rows), psb::precision::PrecisionPlan::spatial(mask, 4, 8))
+        .unwrap();
+    assert_eq!(refined.exec.logits.len(), 2 * 10, "two narrowed rows × 10 classes");
+    assert!(refined.executed_adds > 0, "masked refine must report executed work");
+    assert!(refined.gated_adds > 0, "masked refine must charge the attended rows");
+    assert!(
+        refined.gated_adds < out.gated_adds,
+        "half-mask Δ4 increment must charge less than the full stage-1 pass"
+    );
+}
