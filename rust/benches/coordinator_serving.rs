@@ -51,6 +51,7 @@ fn main() {
             batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
             policy,
             seed: 3,
+            ..Default::default()
         };
         let coord = Coordinator::start(cfg, psb.clone()).unwrap();
         // warm the compile cache before timing

@@ -15,21 +15,116 @@
 //!   work than a recompute, which is the acceptance criterion of the
 //!   session API;
 //! * a per-layer escalation (`[8,8,8] → [8,32,32]`): layers the plan
-//!   leaves alone are served from the session cache.
+//!   leaves alone are served from the session cache;
+//! * **pooled vs serial engine dispatch** (`BENCH_pool.json`): K
+//!   escalations against K pooled sim sessions, submitted one-at-a-time
+//!   (serial round-trips) vs all-at-once (the engine's dispatch window
+//!   merges them into batched dispatches).  Pooled dispatch must not be
+//!   slower than serial — the `--check` CI gate (with a small tolerance
+//!   for shared-runner scheduling noise).
+//!
+//! Flags / env: `--quick` / `PSB_BENCH_QUICK=1` shrink budgets for CI
+//! smoke; `--check` exits non-zero when pooled dispatch regresses.
 
 #[path = "harness.rs"]
 mod harness;
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use psb::backend::{Backend, InferenceSession as _, IntKernel, SimBackend};
+use psb::backend::{sim_factory, Backend, InferenceSession as _, IntKernel, SimBackend};
+use psb::coordinator::{Engine, EngineJob};
 use psb::precision::PrecisionPlan;
-use psb::rng::{Rng, Xorshift128Plus};
+use psb::rng::{Rng, RngKind, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
 use psb::sim::psbnet::{PsbNetwork, PsbOptions};
 use psb::sim::tensor::Tensor;
 
+/// A dispatch-dominated serving shape: a tiny network over single-image
+/// sessions, so the engine round-trip is a real fraction of a refine.
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "pool-bench");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: 2 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
+
+/// Pooled-vs-serial stage-2 dispatch over one engine: K pooled sessions,
+/// escalated either with K serialized round-trips or with K jobs
+/// submitted into one dispatch window (alternating rounds, so drift
+/// hits both arms equally).  Returns (serial ns/refine, pooled
+/// ns/refine, merged dispatches, dispatches saved).
+fn pool_dispatch_bench(quick: bool) -> (f64, f64, u64, u64) {
+    let engine = Engine::spawn(sim_factory(tiny_psbnet(), RngKind::Philox)).unwrap();
+    let img = 8 * 8 * 3;
+    let k = 8usize;
+    let rounds = if quick { 12 } else { 40 };
+    let lo = PrecisionPlan::uniform(4);
+    let hi = PrecisionPlan::uniform(8);
+    let mut seed = 0u64;
+    let begin_round = |seed: &mut u64| -> Vec<u64> {
+        (0..k)
+            .map(|i| {
+                *seed += 1;
+                let x: Vec<f32> = (0..img).map(|j| ((i + j) as f32 * 0.13).sin().abs()).collect();
+                engine
+                    .begin_session(lo.clone(), x, 1, *seed)
+                    .unwrap()
+                    .session
+                    .expect("kept session")
+            })
+            .collect()
+    };
+    let (mut serial_ns, mut pooled_ns) = (0u128, 0u128);
+    let merges0 = engine.stats().merges.load(std::sync::atomic::Ordering::Relaxed);
+    for _ in 0..rounds {
+        // serial arm: one round-trip per escalation
+        let ids = begin_round(&mut seed);
+        let t0 = Instant::now();
+        for id in ids {
+            engine.refine_session(id, None, hi.clone()).unwrap();
+        }
+        serial_ns += t0.elapsed().as_nanos();
+        // pooled arm: all escalations into one dispatch window
+        let ids = begin_round(&mut seed);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = ids
+            .into_iter()
+            .map(|id| {
+                let (reply, rx) = std::sync::mpsc::sync_channel(1);
+                engine
+                    .submit(EngineJob::Refine {
+                        session: id,
+                        rows: None,
+                        plan: hi.clone(),
+                        keep: false,
+                        reply,
+                    })
+                    .unwrap();
+                rx
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        pooled_ns += t0.elapsed().as_nanos();
+    }
+    let merges =
+        engine.stats().merges.load(std::sync::atomic::Ordering::Relaxed) - merges0;
+    let saved = engine.stats().runs_saved.load(std::sync::atomic::Ordering::Relaxed);
+    let per = (rounds * k) as f64;
+    (serial_ns as f64 / per, pooled_ns as f64 / per, merges, saved)
+}
+
 fn main() {
-    let budget = Duration::from_millis(600);
+    let quick = std::env::var("PSB_BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick");
+    let check = std::env::args().any(|a| a == "--check");
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
     let mut rng = Xorshift128Plus::seed_from(21);
     let mut net = psb::models::by_name("resnet_mini", 32, &mut rng);
     let x = Tensor::from_vec((0..8 * 32 * 32 * 3).map(|_| rng.uniform()).collect(), &[8, 32, 32, 3]);
@@ -44,8 +139,9 @@ fn main() {
     let backends: [(&str, &dyn Backend); 2] = [("sim", &sim), ("int", &int)];
 
     let mut all_ok = true;
+    let points: &[(u32, u32)] = if quick { &[(8, 16)] } else { &[(8, 16), (16, 32)] };
     for (bname, backend) in backends {
-        for (lo, hi) in [(8u32, 16u32), (16, 32)] {
+        for &(lo, hi) in points {
             // fresh full-precision session: the non-progressive baseline
             let mut seed = 0u64;
             harness::bench(&format!("[{bname}] fresh psb{hi} b8"), budget, || {
@@ -128,4 +224,34 @@ fn main() {
         );
     }
     assert!(all_ok, "escalation must charge (and, where claimed, execute) less than a fresh pass");
+
+    // ---- pooled vs serial engine dispatch -------------------------------
+    let (serial_ns, pooled_ns, merges, saved) = pool_dispatch_bench(quick);
+    let speedup = serial_ns / pooled_ns.max(1.0);
+    println!(
+        "[pool] serial dispatch {serial_ns:.0} ns/refine | pooled dispatch {pooled_ns:.0} \
+         ns/refine ({speedup:.2}x) | merged dispatches {merges} | dispatches saved {saved}"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"session_pool\",\n  \"quick\": {quick},\n  \
+         \"sessions_per_round\": 8,\n  \"serial_ns_per_refine\": {serial_ns:.1},\n  \
+         \"pooled_ns_per_refine\": {pooled_ns:.1},\n  \"speedup\": {speedup:.3},\n  \
+         \"merged_dispatches\": {merges},\n  \"dispatches_saved\": {saved}\n}}\n"
+    );
+    std::fs::write("BENCH_pool.json", &json).expect("write BENCH_pool.json");
+    println!("wrote BENCH_pool.json");
+    if check {
+        // tolerance absorbs shared-runner scheduling noise; pooled
+        // dispatch must not lose real ground to serialized round-trips
+        assert!(
+            pooled_ns <= serial_ns * 1.15,
+            "pooled dispatch regressed below serial: pooled {pooled_ns:.0} vs serial \
+             {serial_ns:.0} ns/refine"
+        );
+        assert!(
+            merges > 0,
+            "the pooled arm never merged a dispatch window — batching is not engaging"
+        );
+        println!("check OK: pooled dispatch {speedup:.2}x vs serial, {merges} merged dispatches");
+    }
 }

@@ -515,17 +515,40 @@ pub(crate) fn row_rebuilds(prev: Option<&StepPrev>, rebuild: Option<&[bool]>, r:
     prev.is_none() || rebuild.is_some_and(|rb| rb[r])
 }
 
-fn masked_packed(
+/// The shared row-masked step skeleton, parametrized over the per-row
+/// kernel — conv/dense and depthwise masked steps are the *same* driver
+/// (which combos exist, which coefficient packs to build, the chunked
+/// row-parallel walk, the `dn·D` term, early finishes, `touched`
+/// propagation); only the two inner kernels differ:
+///
+/// * `rebuild_row(r, (a_hi, a_lo), log2n, acc_row, base_row, out_row)` —
+///   rebuild row `r` from full coefficient packs (conv: the `live & nz`
+///   word walk; depthwise: the per-channel live-tap walk);
+/// * `delta_row(r, combo, acc_row)` — apply the combo's changed-weight
+///   walk to row `r`'s charge.
+///
+/// Both kernels return their executed-adds tally.  Bit-identity of the
+/// callers is preserved by construction: the driver performs the exact
+/// op sequence the two hand-copied skeletons used to.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn masked_step_driver<R, D>(
     ctx: &MaskedCtx,
     prev: Option<&StepPrev>,
     rebuild: Option<&[bool]>,
-    cache: &mut CapCache,
+    m: usize,
+    acc: &mut [i64],
+    base: &mut [i64],
     out: &mut [i32],
     touched: &mut [bool],
-) -> u64 {
+    rebuild_row: R,
+    delta_row: D,
+) -> u64
+where
+    R: Fn(usize, (&[i32], &[i32]), u32, &mut [i64], &mut [i64], &mut [i32]) -> u64 + Sync,
+    D: Fn(usize, &ComboPack, &mut [i64]) -> u64 + Sync,
+{
     let pp = ctx.packed;
-    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
-    let m = cache.m;
+    let n_out = pp.n_out;
     // full coefficient packs, built only for levels some row rebuilds at
     let mut need_full = [false; 2];
     let mut present = [false; 4];
@@ -543,15 +566,12 @@ fn masked_packed(
         Some(p) => build_combos(ctx, p, present),
         None => [None, None, None, None],
     };
-    let cols = &cache.cols;
-    let nz = &cache.nz;
     let bias_raw = ctx.bias_raw;
     let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
     let rows_per = rows_per_chunk(m, threads);
-    let chunks = cache
-        .acc
+    let chunks = acc
         .chunks_mut(rows_per * n_out)
-        .zip(cache.base.chunks_mut(rows_per * n_out))
+        .zip(base.chunks_mut(rows_per * n_out))
         .zip(out.chunks_mut(rows_per * n_out))
         .zip(touched.chunks_mut(rows_per));
     par_sum(chunks, |ti, (((acc_c, base_c), out_c), tch_c)| {
@@ -564,14 +584,10 @@ fn masked_packed(
             if row_rebuilds(prev, rebuild, r) {
                 let (a_hi, a_lo) =
                     if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() }.expect("pack built");
-                adds += packed_row(
-                    pp,
-                    a_hi,
-                    a_lo,
-                    &cols[r * kdim..(r + 1) * kdim],
-                    &nz[r * words..(r + 1) * words],
+                adds += rebuild_row(
+                    r,
+                    (a_hi.as_slice(), a_lo.as_slice()),
                     ctx.log2n(hi),
-                    bias_raw,
                     &mut acc_c[ri * n_out..(ri + 1) * n_out],
                     &mut base_c[ri * n_out..(ri + 1) * n_out],
                     &mut out_c[ri * n_out..(ri + 1) * n_out],
@@ -592,25 +608,7 @@ fn masked_packed(
                 adds += n_out as u64;
             }
             if cb.any {
-                let xrow = &cols[r * kdim..(r + 1) * kdim];
-                let nzrow = &nz[r * words..(r + 1) * words];
-                for (j, a) in arow.iter_mut().enumerate() {
-                    let coff = j * kdim;
-                    let chj = &cb.mask[j * words..(j + 1) * words];
-                    let mut da = 0i64;
-                    for (w, (&cw, &zw)) in chj.iter().zip(nzrow).enumerate() {
-                        let mut bits = cw & zw;
-                        adds += bits.count_ones() as u64;
-                        while bits != 0 {
-                            let i = w * 64 + bits.trailing_zeros() as usize;
-                            bits &= bits - 1;
-                            let v = xrow[i];
-                            let e = pp.exp[coff + i] as i32;
-                            da += cb.dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
-                        }
-                    }
-                    *a += da;
-                }
+                adds += delta_row(r, cb, arow);
             }
             let log2n = ctx.log2n(hi);
             for (j, o) in out_c[ri * n_out..(ri + 1) * n_out].iter_mut().enumerate() {
@@ -622,22 +620,20 @@ fn masked_packed(
     })
 }
 
-/// Scalar reference for the masked step: every touched row (rebuild or
-/// non-no-op combo) is rebuilt from the current counts at its region's
-/// level — bit-identical to the packed delta because integer charge is
-/// an exact function of `(counts, n, lowering)`.  Untouched rows finish
-/// early.  Adds keep the legacy `touched rows × live` convention.
-fn masked_scalar(
+/// The shared scalar-reference skeleton of the masked step: decide the
+/// no-op combos once, then rebuild every touched row (rebuild flag or
+/// non-no-op combo) through `row(r, hi)` at its region's level and
+/// finish the rest early.  Adds keep the legacy `touched rows × live`
+/// convention; `row` is the only kernel-specific part (conv
+/// [`scalar_row`] vs the depthwise per-channel walk).
+pub(crate) fn masked_scalar_driver(
     ctx: &MaskedCtx,
     prev: Option<&StepPrev>,
     rebuild: Option<&[bool]>,
-    cache: &mut CapCache,
-    out: &mut [i32],
+    m: usize,
     touched: &mut [bool],
+    mut row: impl FnMut(usize, bool),
 ) -> u64 {
-    let planes = ctx.planes;
-    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
-    let m = cache.m;
     // no-op combos are decided once, without materializing packs
     let moved: [bool; 4] = match prev {
         Some(p) => std::array::from_fn(|i| combo_moved(ctx, p, i)),
@@ -652,21 +648,107 @@ fn masked_scalar(
                 continue;
             }
         }
+        row(r, hi);
+        touched[r] = true;
+        adds += ctx.packed.nnz;
+    }
+    adds
+}
+
+fn masked_packed(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, words) = (pp.kdim, pp.words);
+    let m = cache.m;
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    masked_step_driver(
+        ctx,
+        prev,
+        rebuild,
+        m,
+        &mut cache.acc,
+        &mut cache.base,
+        out,
+        touched,
+        |r, (a_hi, a_lo), log2n, acc_row, base_row, out_row| {
+            packed_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kdim..(r + 1) * kdim],
+                &nz[r * words..(r + 1) * words],
+                log2n,
+                ctx.bias_raw,
+                acc_row,
+                base_row,
+                out_row,
+            )
+        },
+        |r, cb, arow| {
+            let xrow = &cols[r * kdim..(r + 1) * kdim];
+            let nzrow = &nz[r * words..(r + 1) * words];
+            let mut adds = 0u64;
+            for (j, a) in arow.iter_mut().enumerate() {
+                let coff = j * kdim;
+                let chj = &cb.mask[j * words..(j + 1) * words];
+                let mut da = 0i64;
+                for (w, (&cw, &zw)) in chj.iter().zip(nzrow).enumerate() {
+                    let mut bits = cw & zw;
+                    adds += bits.count_ones() as u64;
+                    while bits != 0 {
+                        let i = w * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let v = xrow[i];
+                        let e = pp.exp[coff + i] as i32;
+                        da += cb.dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                    }
+                }
+                *a += da;
+            }
+            adds
+        },
+    )
+}
+
+/// Scalar reference for the masked step: every touched row (rebuild or
+/// non-no-op combo) is rebuilt from the current counts at its region's
+/// level — bit-identical to the packed delta because integer charge is
+/// an exact function of `(counts, n, lowering)`.  Untouched rows finish
+/// early.
+fn masked_scalar(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let planes = ctx.planes;
+    let (kk, n_out) = (planes.shape[0], planes.shape[1]);
+    let m = cache.m;
+    let cols = &cache.cols;
+    let acc = &mut cache.acc;
+    let base = &mut cache.base;
+    masked_scalar_driver(ctx, prev, rebuild, m, touched, |r, hi| {
         scalar_row(
             planes,
             ctx.counts(hi),
             ctx.n(hi) as i64,
             ctx.log2n(hi),
             ctx.bias_raw,
-            &cache.cols[r * kk..(r + 1) * kk],
-            &mut cache.acc[r * n_out..(r + 1) * n_out],
-            &mut cache.base[r * n_out..(r + 1) * n_out],
+            &cols[r * kk..(r + 1) * kk],
+            &mut acc[r * n_out..(r + 1) * n_out],
+            &mut base[r * n_out..(r + 1) * n_out],
             &mut out[r * n_out..(r + 1) * n_out],
         );
-        touched[r] = true;
-        adds += ctx.packed.nnz;
-    }
-    adds
+    })
 }
 
 fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {

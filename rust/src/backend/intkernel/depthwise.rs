@@ -18,8 +18,8 @@
 //! order-independent.
 
 use super::contract::{
-    build_combos, combo_idx, combo_moved, finish, par_sum, plan_threads, row_rebuilds,
-    rows_per_chunk, shifted, CapCtx, Contraction, MaskedCtx, StepPrev,
+    finish, masked_scalar_driver, masked_step_driver, par_sum, plan_threads, rows_per_chunk,
+    shifted, CapCtx, Contraction, MaskedCtx, StepPrev,
 };
 use super::pack::{count_coeffs, delta_coeffs, PackedPlanes};
 use super::CapCache;
@@ -313,6 +313,10 @@ pub(crate) fn masked_step_depthwise(
     }
 }
 
+/// Depthwise instantiation of [`masked_step_driver`]: the driver owns
+/// the combo/coefficient/chunking skeleton; only the two per-row kernels
+/// (per-channel live-tap rebuild, per-channel changed-tap delta) are
+/// depthwise-specific.
 fn masked_packed(
     ctx: &MaskedCtx,
     prev: Option<&StepPrev>,
@@ -324,98 +328,54 @@ fn masked_packed(
     let pp = ctx.packed;
     let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
     let m = cache.m;
-    let mut need_full = [false; 2];
-    let mut present = [false; 4];
-    for r in 0..m {
-        let hi = ctx.is_hi(r);
-        if row_rebuilds(prev, rebuild, r) {
-            need_full[hi as usize] = true;
-        } else if let Some(p) = prev {
-            present[combo_idx(p.is_hi(r), hi)] = true;
-        }
-    }
-    let full_lo_v = need_full[0].then(|| count_coeffs(pp, ctx.counts_lo, ctx.n_lo));
-    let full_hi_v = need_full[1].then(|| count_coeffs(pp, ctx.counts_hi, ctx.n_hi));
-    let combos = match prev {
-        Some(p) => build_combos(ctx, p, present),
-        None => [None, None, None, None],
-    };
     let cols = &cache.cols;
-    let bias_raw = ctx.bias_raw;
-    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(c as u64));
-    let rows_per = rows_per_chunk(m, threads);
-    let chunks = cache
-        .acc
-        .chunks_mut(rows_per * c)
-        .zip(cache.base.chunks_mut(rows_per * c))
-        .zip(out.chunks_mut(rows_per * c))
-        .zip(touched.chunks_mut(rows_per));
-    par_sum(chunks, |ti, (((acc_c, base_c), out_c), tch_c)| {
-        let r0 = ti * rows_per;
-        let rows = acc_c.len() / c;
-        let mut adds = 0u64;
-        for ri in 0..rows {
-            let r = r0 + ri;
-            let hi = ctx.is_hi(r);
-            if row_rebuilds(prev, rebuild, r) {
-                let (a_hi, a_lo) =
-                    if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() }.expect("pack built");
-                adds += dw_packed_row(
-                    pp,
-                    a_hi,
-                    a_lo,
-                    &cols[r * kk * c..(r + 1) * kk * c],
-                    ctx.log2n(hi),
-                    bias_raw,
-                    &mut acc_c[ri * c..(ri + 1) * c],
-                    &mut base_c[ri * c..(ri + 1) * c],
-                    &mut out_c[ri * c..(ri + 1) * c],
-                );
-                tch_c[ri] = true;
-                continue;
-            }
-            let p = prev.expect("non-rebuild rows have a previous pass");
-            let Some(cb) = &combos[combo_idx(p.is_hi(r), hi)] else {
-                continue; // early finish
-            };
-            let arow = &mut acc_c[ri * c..(ri + 1) * c];
-            if cb.dn != 0 {
-                let brow = &base_c[ri * c..(ri + 1) * c];
-                for (a, &d) in arow.iter_mut().zip(brow) {
-                    *a += cb.dn * d;
-                }
-                adds += c as u64;
-            }
-            if cb.any {
-                let xrow = &cols[r * kk * c..(r + 1) * kk * c];
-                for (ci, a) in arow.iter_mut().enumerate() {
-                    let coff = ci * kk;
-                    let mut da = 0i64;
-                    for (w, &cw) in cb.mask[ci * words..(ci + 1) * words].iter().enumerate() {
-                        let mut bits = cw;
-                        while bits != 0 {
-                            let tap = w * 64 + bits.trailing_zeros() as usize;
-                            bits &= bits - 1;
-                            let v = xrow[tap * c + ci];
-                            if v == 0 {
-                                continue;
-                            }
-                            adds += 1;
-                            let e = pp.exp[coff + tap] as i32;
-                            da += cb.dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
+    masked_step_driver(
+        ctx,
+        prev,
+        rebuild,
+        m,
+        &mut cache.acc,
+        &mut cache.base,
+        out,
+        touched,
+        |r, (a_hi, a_lo), log2n, acc_row, base_row, out_row| {
+            dw_packed_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kk * c..(r + 1) * kk * c],
+                log2n,
+                ctx.bias_raw,
+                acc_row,
+                base_row,
+                out_row,
+            )
+        },
+        |r, cb, arow| {
+            let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+            let mut adds = 0u64;
+            for (ci, a) in arow.iter_mut().enumerate() {
+                let coff = ci * kk;
+                let mut da = 0i64;
+                for (w, &cw) in cb.mask[ci * words..(ci + 1) * words].iter().enumerate() {
+                    let mut bits = cw;
+                    while bits != 0 {
+                        let tap = w * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let v = xrow[tap * c + ci];
+                        if v == 0 {
+                            continue;
                         }
+                        adds += 1;
+                        let e = pp.exp[coff + tap] as i32;
+                        da += cb.dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
                     }
-                    *a += da;
                 }
+                *a += da;
             }
-            let log2n = ctx.log2n(hi);
-            for (ci, o) in out_c[ri * c..(ri + 1) * c].iter_mut().enumerate() {
-                *o = finish(arow[ci], log2n, bias_raw[ci]);
-            }
-            tch_c[ri] = true;
-        }
-        adds
-    })
+            adds
+        },
+    )
 }
 
 /// Scalar reference: touched pixels rebuild from current counts at their
@@ -432,33 +392,20 @@ fn masked_scalar(
     let planes = ctx.planes;
     let (kk, c) = (planes.shape[0], planes.shape[1]);
     let m = cache.m;
-    // no-op combos are decided once, without materializing packs
-    let moved: [bool; 4] = match prev {
-        Some(p) => std::array::from_fn(|i| combo_moved(ctx, p, i)),
-        None => [false; 4],
-    };
-    let mut adds = 0u64;
-    for r in 0..m {
-        let hi = ctx.is_hi(r);
-        if !row_rebuilds(prev, rebuild, r) {
-            let p = prev.expect("non-rebuild rows have a previous pass");
-            if !moved[combo_idx(p.is_hi(r), hi)] {
-                continue;
-            }
-        }
+    let cols = &cache.cols;
+    let acc = &mut cache.acc;
+    let base = &mut cache.base;
+    masked_scalar_driver(ctx, prev, rebuild, m, touched, |r, hi| {
         dw_scalar_row(
             planes,
             ctx.counts(hi),
             ctx.n(hi) as i64,
             ctx.log2n(hi),
             ctx.bias_raw,
-            &cache.cols[r * kk * c..(r + 1) * kk * c],
-            &mut cache.acc[r * c..(r + 1) * c],
-            &mut cache.base[r * c..(r + 1) * c],
+            &cols[r * kk * c..(r + 1) * kk * c],
+            &mut acc[r * c..(r + 1) * c],
+            &mut base[r * c..(r + 1) * c],
             &mut out[r * c..(r + 1) * c],
         );
-        touched[r] = true;
-        adds += ctx.packed.nnz;
-    }
-    adds
+    })
 }

@@ -98,7 +98,7 @@ use crate::rng::RngKind;
 use crate::sim::psbnet::{collapse_mask_rows, or_masks, pool_mask, PsbNetwork, PsbOp};
 use crate::sim::tensor::Tensor;
 
-use super::{Backend, CostReport, InferenceSession, StepReport};
+use super::{Backend, CostReport, InferenceSession, MergeOutcome, StepReport};
 
 pub use contract::Contraction;
 pub use pack::PackedPlanes;
@@ -229,6 +229,14 @@ impl Backend for IntKernel {
             report: CostReport::default(),
         }))
     }
+
+    /// Same-plan integer sessions merge row-wise: per-part capacitor
+    /// charges (`CapCache`) and progressive counts stay with their part,
+    /// so merged execution and `charge_rows_exact` billing are
+    /// bit-identical to serial at any thread count.
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        super::merged::merge_same_plan(sessions)
+    }
 }
 
 /// Cached charge of one capacitor node (conv/dense *or* depthwise —
@@ -308,37 +316,11 @@ fn pool_regions(mask: &[bool], geom: &CapGeom, m: usize) -> Vec<bool> {
 /// only unchanged activations.
 fn dilate_to_rows(changed: &[bool], geom: &CapGeom, m: usize) -> Vec<bool> {
     match geom {
+        // the dilation walks the same shared window iterator the
+        // lowering gathers through (pack::SameWindows), so "unflagged ⇒
+        // reads only unchanged pixels" holds by construction
         CapGeom::Conv { k, stride, dims } | CapGeom::Depthwise { k, stride, dims } => {
-            let (b, h, w, _) = *dims;
-            let pad = k / 2;
-            let ho = h.div_ceil(*stride);
-            let wo = w.div_ceil(*stride);
-            let mut out = vec![false; b * ho * wo];
-            for bi in 0..b {
-                for oy in 0..ho {
-                    for ox in 0..wo {
-                        let mut any = false;
-                        'taps: for di in 0..*k {
-                            let iy = (oy * stride + di) as isize - pad as isize;
-                            if iy < 0 || iy as usize >= h {
-                                continue;
-                            }
-                            for dj in 0..*k {
-                                let ix = (ox * stride + dj) as isize - pad as isize;
-                                if ix < 0 || ix as usize >= w {
-                                    continue;
-                                }
-                                if changed[(bi * h + iy as usize) * w + ix as usize] {
-                                    any = true;
-                                    break 'taps;
-                                }
-                            }
-                        }
-                        out[(bi * ho + oy) * wo + ox] = any;
-                    }
-                }
-            }
-            out
+            pack::dilate_to_rows(changed, *dims, *k, *stride)
         }
         CapGeom::Dense => {
             if changed.len() % m.max(1) != 0 || changed.len() < m {
@@ -972,6 +954,10 @@ impl InferenceSession for IntSession {
 
     fn cost_report(&self) -> &CostReport {
         &self.report
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

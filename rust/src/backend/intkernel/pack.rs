@@ -174,6 +174,103 @@ pub fn delta_coeffs_signed(
     (dc, mask, changed)
 }
 
+/// The SAME-padded window geometry every spatial walk shares: output
+/// rows `r = (bi·ho + oy)·wo + ox`, taps `tap = di·k + dj` reading input
+/// pixel `(iy, ix) = (oy·stride + di − pad, ox·stride + dj − pad)` when
+/// in bounds.  [`im2col_i32`], [`im2col_rows_i32`] and [`dilate_to_rows`]
+/// all walk through this one iterator, so the halo invariant — "an
+/// unflagged row of the dilated change mask provably reads only
+/// unchanged pixels" — holds by construction instead of by three
+/// hand-copied `iy`/`ix`/`pad` loops staying identical
+/// (regression-tested in this module).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SameWindows {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub ho: usize,
+    pub wo: usize,
+}
+
+impl SameWindows {
+    pub(crate) fn new((b, h, w, _c): (usize, usize, usize, usize), ksize: usize, stride: usize) -> SameWindows {
+        SameWindows {
+            b,
+            h,
+            w,
+            ksize,
+            stride,
+            pad: ksize / 2,
+            ho: h.div_ceil(stride),
+            wo: w.div_ceil(stride),
+        }
+    }
+
+    /// Output rows of the walk (`b · ho · wo`).
+    pub(crate) fn rows(&self) -> usize {
+        self.b * self.ho * self.wo
+    }
+
+    /// Visit every output row as `f(r, bi, oy, ox)`, `r` in row-major
+    /// order.
+    pub(crate) fn for_each_row(&self, mut f: impl FnMut(usize, usize, usize, usize)) {
+        for bi in 0..self.b {
+            for oy in 0..self.ho {
+                for ox in 0..self.wo {
+                    f((bi * self.ho + oy) * self.wo + ox, bi, oy, ox);
+                }
+            }
+        }
+    }
+
+    /// The in-bounds taps of output pixel `(oy, ox)`: yields
+    /// `(tap, iy, ix)`; padding taps are skipped (they stay zero in a
+    /// lowering and contribute nothing to a dilation).
+    pub(crate) fn taps(
+        &self,
+        oy: usize,
+        ox: usize,
+    ) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        let (k, s, pad) = (self.ksize, self.stride, self.pad);
+        (0..k).flat_map(move |di| {
+            let iy = (oy * s + di) as isize - pad as isize;
+            (0..k).filter_map(move |dj| {
+                let ix = (ox * s + dj) as isize - pad as isize;
+                if iy >= 0 && (iy as usize) < self.h && ix >= 0 && (ix as usize) < self.w {
+                    Some((di * k + dj, iy as usize, ix as usize))
+                } else {
+                    None
+                }
+            })
+        })
+    }
+}
+
+/// Project an input-pixel change mask to output rows, including the conv
+/// halo: an output row must rebuild iff any input pixel inside its
+/// SAME-padded `k×k` window changed.  Conservative by construction — a
+/// flagged row re-lowers and rebuilds, an unflagged row provably reads
+/// only unchanged activations (its window walk is the *same* iterator
+/// the lowering gathers through).
+pub(crate) fn dilate_to_rows(
+    changed: &[bool],
+    dims: (usize, usize, usize, usize),
+    ksize: usize,
+    stride: usize,
+) -> Vec<bool> {
+    let win = SameWindows::new(dims, ksize, stride);
+    let mut out = vec![false; win.rows()];
+    win.for_each_row(|r, bi, oy, ox| {
+        out[r] = win
+            .taps(oy, ox)
+            .any(|(_, iy, ix)| changed[(bi * win.h + iy) * win.w + ix]);
+    });
+    out
+}
+
 /// Re-pack the non-zero words of one lowered row in place.
 #[inline]
 pub(crate) fn repack_row(cols: &[i32], r: usize, kdim: usize, nz: &mut [u64]) {
@@ -202,42 +299,29 @@ pub fn im2col_rows_i32(
     cols: &mut [i32],
     nz: &mut [u64],
 ) {
-    let (b, h, w, c) = dims;
-    let pad = ksize / 2;
-    let ho = h.div_ceil(stride);
-    let wo = w.div_ceil(stride);
+    let c = dims.3;
+    let win = SameWindows::new(dims, ksize, stride);
     let kdim = ksize * ksize * c;
-    debug_assert_eq!(rows.len(), b * ho * wo);
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let r = (bi * ho + oy) * wo + ox;
-                if !rows[r] {
-                    continue;
-                }
-                let base = r * kdim;
-                cols[base..base + kdim].fill(0);
-                for di in 0..ksize {
-                    let iy = (oy * stride + di) as isize - pad as isize;
-                    for dj in 0..ksize {
-                        let ix = (ox * stride + dj) as isize - pad as isize;
-                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                            let dst = base + (di * ksize + dj) * c;
-                            for ci in 0..c {
-                                cols[dst + ci] = clamp_q16(x[src + ci]);
-                            }
-                        }
-                    }
-                }
-                // depthwise caches carry no nz mask (their packed loop
-                // walks live taps instead)
-                if !nz.is_empty() {
-                    repack_row(cols, r, kdim, nz);
-                }
+    debug_assert_eq!(rows.len(), win.rows());
+    win.for_each_row(|r, bi, oy, ox| {
+        if !rows[r] {
+            return;
+        }
+        let base = r * kdim;
+        cols[base..base + kdim].fill(0);
+        for (tap, iy, ix) in win.taps(oy, ox) {
+            let src = ((bi * win.h + iy) * win.w + ix) * c;
+            let dst = base + tap * c;
+            for ci in 0..c {
+                cols[dst + ci] = clamp_q16(x[src + ci]);
             }
         }
-    }
+        // depthwise caches carry no nz mask (their packed loop
+        // walks live taps instead)
+        if !nz.is_empty() {
+            repack_row(cols, r, kdim, nz);
+        }
+    });
 }
 
 /// Partial dense lowering refresh: flagged rows re-copy (and re-clamp)
@@ -269,33 +353,21 @@ pub fn im2col_i32(
     ksize: usize,
     stride: usize,
 ) -> (Vec<i32>, usize, usize) {
-    let (b, h, w, c) = dims;
-    let pad = ksize / 2;
-    let ho = h.div_ceil(stride);
-    let wo = w.div_ceil(stride);
+    let c = dims.3;
+    let win = SameWindows::new(dims, ksize, stride);
     let kdim = ksize * ksize * c;
-    let mut out = vec![0i32; b * ho * wo * kdim];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let base = ((bi * ho + oy) * wo + ox) * kdim;
-                for di in 0..ksize {
-                    let iy = (oy * stride + di) as isize - pad as isize;
-                    for dj in 0..ksize {
-                        let ix = (ox * stride + dj) as isize - pad as isize;
-                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                            let dst = base + (di * ksize + dj) * c;
-                            for ci in 0..c {
-                                out[dst + ci] = clamp_q16(x[src + ci]);
-                            }
-                        }
-                    }
-                }
+    let mut out = vec![0i32; win.rows() * kdim];
+    win.for_each_row(|r, bi, oy, ox| {
+        let base = r * kdim;
+        for (tap, iy, ix) in win.taps(oy, ox) {
+            let src = ((bi * win.h + iy) * win.w + ix) * c;
+            let dst = base + tap * c;
+            for ci in 0..c {
+                out[dst + ci] = clamp_q16(x[src + ci]);
             }
         }
-    }
-    (out, ho, wo)
+    });
+    (out, win.ho, win.wo)
 }
 
 /// SAME-padded depthwise lowering: per output pixel, the `k×k` taps of
@@ -314,4 +386,113 @@ pub fn lower_depthwise(
     stride: usize,
 ) -> (Vec<i32>, usize, usize) {
     im2col_i32(x, dims, k, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pre-refactor walk, kept verbatim as an independent oracle:
+    /// the `(r, tap, iy, ix)` visits of one hand-rolled SAME-padded
+    /// `iy`/`ix`/`pad` loop (this exact arithmetic used to be copied
+    /// into `im2col_i32`, `im2col_rows_i32` and `dilate_to_rows`).
+    fn reference_visits(
+        (b, h, w, _c): (usize, usize, usize, usize),
+        ksize: usize,
+        stride: usize,
+    ) -> Vec<(usize, usize, usize, usize)> {
+        let pad = ksize / 2;
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        let mut visits = Vec::new();
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let r = (bi * ho + oy) * wo + ox;
+                    for di in 0..ksize {
+                        let iy = (oy * stride + di) as isize - pad as isize;
+                        for dj in 0..ksize {
+                            let ix = (ox * stride + dj) as isize - pad as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                visits.push((r, di * ksize + dj, iy as usize, ix as usize));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        visits
+    }
+
+    fn odd_cases() -> Vec<((usize, usize, usize, usize), usize, usize)> {
+        let mut cases = Vec::new();
+        for dims in [(1, 5, 7, 2), (2, 7, 5, 3), (1, 9, 3, 1)] {
+            for ksize in [1usize, 3, 5] {
+                for stride in [1usize, 2, 3] {
+                    cases.push((dims, ksize, stride));
+                }
+            }
+        }
+        cases
+    }
+
+    /// The one shared iterator visits exactly the index set of the old
+    /// hand-copied loops, on odd shapes, kernels and strides.
+    #[test]
+    fn window_walk_matches_the_legacy_loop_index_set() {
+        for (dims, ksize, stride) in odd_cases() {
+            let win = SameWindows::new(dims, ksize, stride);
+            let mut visits = Vec::new();
+            win.for_each_row(|r, _bi, oy, ox| {
+                for (tap, iy, ix) in win.taps(oy, ox) {
+                    visits.push((r, tap, iy, ix));
+                }
+            });
+            assert_eq!(
+                visits,
+                reference_visits(dims, ksize, stride),
+                "dims={dims:?} k={ksize} stride={stride}"
+            );
+        }
+    }
+
+    /// All three consumers agree: the full lowering, the partial row
+    /// refresh over every row, and the change-mask dilation all walk the
+    /// same windows.
+    #[test]
+    fn im2col_full_partial_and_dilate_agree() {
+        for (dims, ksize, stride) in odd_cases() {
+            let (b, h, w, c) = dims;
+            let n = b * h * w * c;
+            let x: Vec<i32> = (0..n as i32).map(|v| (v * 37) % 2000 - 1000).collect();
+            let (full, ho, wo) = im2col_i32(&x, dims, ksize, stride);
+            let kdim = ksize * ksize * c;
+            let m = b * ho * wo;
+
+            // partial refresh of every row over a poisoned buffer must
+            // reproduce the full lowering bit-for-bit
+            let mut cols = vec![i32::MIN; m * kdim];
+            let mut nz = vec![u64::MAX; m * kdim.div_ceil(64).max(1)];
+            let every_row = vec![true; m];
+            im2col_rows_i32(&x, dims, ksize, stride, &every_row, &mut cols, &mut nz);
+            assert_eq!(cols, full, "dims={dims:?} k={ksize} stride={stride}");
+            assert_eq!(nz, pack_nonzero(&full, m, kdim));
+
+            // a single changed pixel dilates to exactly the rows whose
+            // window the reference walk says read it
+            for changed_pix in [0usize, (h * w) / 2, h * w - 1] {
+                let mut changed = vec![false; b * h * w];
+                changed[changed_pix] = true;
+                let got = dilate_to_rows(&changed, dims, ksize, stride);
+                let mut want = vec![false; m];
+                for (r, _tap, iy, ix) in reference_visits(dims, ksize, stride) {
+                    // reference rows are per image; changed_pix lives in image 0
+                    if r < ho * wo && iy * w + ix == changed_pix {
+                        want[r] = true;
+                    }
+                }
+                assert_eq!(got, want, "dims={dims:?} k={ksize} stride={stride} pix={changed_pix}");
+            }
+        }
+    }
 }

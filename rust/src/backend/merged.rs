@@ -1,0 +1,269 @@
+//! [`MergedSession`] — several already-begun sessions fused behind one
+//! [`InferenceSession`], rows concatenated in part order.
+//!
+//! This is the stateful backends' `merge_sessions` implementation: the
+//! capacitor states of same-plan [`super::SimBackend`] / [`super::IntKernel`]
+//! sessions concatenate row-wise — each part keeps its *own*
+//! [`crate::precision::ProgressiveState`] (its original `begin` seed and
+//! per-weight Philox streams), so a merged `refine` draws exactly the
+//! samples each part's serial refine would have drawn.  Nothing about a
+//! part's sampling identity depends on its position in the merged pool;
+//! that is what makes pooled/merged execution bit-identical to serial
+//! execution, logits and `charge_rows_exact` billing both
+//! (property-tested in `tests/backend_parity.rs`).
+//!
+//! The win is dispatch-shaped, not FLOP-shaped: one engine job (one
+//! channel round-trip, one reply scatter) escalates every part, and the
+//! per-part [`StepReport`]s stay separately attributable through
+//! [`InferenceSession::part_steps`].
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::precision::PrecisionPlan;
+use crate::sim::tensor::Tensor;
+
+use super::{CostReport, InferenceSession, MergeOutcome, StepReport};
+
+/// The stateful backends' shared `merge_sessions` body: fuse same-plan,
+/// already-begun sessions into a [`MergedSession`]; anything else is
+/// handed back for serial dispatch.
+pub(crate) fn merge_same_plan(
+    sessions: Vec<Box<dyn InferenceSession>>,
+) -> Result<MergeOutcome> {
+    if sessions.len() < 2 {
+        return Ok(MergeOutcome::Unsupported(sessions));
+    }
+    let compatible = sessions.iter().all(|s| {
+        s.plan() == sessions[0].plan() && s.logits().shape.first().copied().unwrap_or(0) > 0
+    });
+    if !compatible {
+        return Ok(MergeOutcome::Unsupported(sessions));
+    }
+    Ok(MergeOutcome::Merged(Box::new(MergedSession::try_new(sessions)?)))
+}
+
+/// Concatenate parts' logits (and, when every part carries a feature
+/// map of matching per-row geometry, their feature maps), rows in part
+/// order — the one definition of "merged output" every fused session
+/// shape shares (stateful [`MergedSession`] and the stateless PJRT
+/// fuse alike).
+pub(crate) fn concat_parts<'a>(
+    parts: impl Iterator<Item = (&'a Tensor, Option<&'a Tensor>)>,
+) -> Result<(Tensor, Option<Tensor>)> {
+    let mut nc: Option<usize> = None;
+    let mut rows = 0usize;
+    let mut data = Vec::new();
+    let mut feat_data = Vec::new();
+    let mut feat_rows = 0usize;
+    let mut tail: Option<Vec<usize>> = None;
+    let mut all_feat = true;
+    for (i, (l, f)) in parts.enumerate() {
+        let c = l.shape.get(1).copied().unwrap_or(0);
+        let want = *nc.get_or_insert(c);
+        ensure!(c == want, "merge part {i} has {c} output classes, part 0 has {want}");
+        rows += l.shape.first().copied().unwrap_or(0);
+        data.extend_from_slice(&l.data);
+        match f {
+            Some(f) if f.shape.len() == 4 && all_feat => {
+                let t = f.shape[1..].to_vec();
+                if tail.get_or_insert_with(|| t.clone()) != &t {
+                    all_feat = false;
+                } else {
+                    feat_rows += f.shape[0];
+                    feat_data.extend_from_slice(&f.data);
+                }
+            }
+            _ => all_feat = false,
+        }
+    }
+    let logits = Tensor::from_vec(data, &[rows, nc.unwrap_or(0)]);
+    let feat = match (all_feat, tail) {
+        (true, Some(t)) => Some(Tensor::from_vec(feat_data, &[feat_rows, t[0], t[1], t[2]])),
+        _ => None,
+    };
+    Ok((logits, feat))
+}
+
+/// Map global merged-row indices to per-part local rows.  Rows must
+/// arrive grouped by part (part indices non-decreasing) — a merged
+/// output concatenates parts in order, so an interleaving could not be
+/// honored.  Parts mapped to no rows get an empty list (the caller
+/// drops them).
+pub(crate) fn split_rows_by_part(rows: &[usize], extents: &[usize]) -> Result<Vec<Vec<usize>>> {
+    let total: usize = extents.iter().sum();
+    let mut per_part: Vec<Vec<usize>> = vec![Vec::new(); extents.len()];
+    let mut last_part = 0usize;
+    for &r in rows {
+        ensure!(r < total, "row {r} out of range (merged batch {total})");
+        let (mut part, mut local) = (0usize, r);
+        while local >= extents[part] {
+            local -= extents[part];
+            part += 1;
+        }
+        ensure!(
+            part >= last_part,
+            "merged narrow needs rows grouped by part in order (row {r} \
+             belongs to part {part}, after part {last_part})"
+        );
+        last_part = part;
+        per_part[part].push(local);
+    }
+    Ok(per_part)
+}
+
+/// Row-concatenated view over constituent sessions (see module docs).
+pub struct MergedSession {
+    parts: Vec<Box<dyn InferenceSession>>,
+    plan: PrecisionPlan,
+    logits: Tensor,
+    feat: Option<Tensor>,
+    report: CostReport,
+    /// Per-part reports of the most recent `refine`, aligned with parts.
+    last_steps: Vec<StepReport>,
+}
+
+impl MergedSession {
+    /// Fuse already-begun sessions holding the same current plan.  The
+    /// merged row order is the parts' rows in part order.
+    pub fn try_new(parts: Vec<Box<dyn InferenceSession>>) -> Result<MergedSession> {
+        ensure!(!parts.is_empty(), "a merged session needs at least one part");
+        for (i, p) in parts.iter().enumerate() {
+            ensure!(
+                p.logits().shape.first().copied().unwrap_or(0) > 0,
+                "merge part {i} has not begun (no logits yet)"
+            );
+            ensure!(
+                p.plan() == parts[0].plan(),
+                "merge parts hold different plans (part {i} vs part 0) — \
+                 refine them to a common plan first"
+            );
+        }
+        let plan = parts[0].plan().clone();
+        let mut merged = MergedSession {
+            parts,
+            plan,
+            logits: Tensor::zeros(&[0]),
+            feat: None,
+            report: CostReport::default(),
+            last_steps: Vec::new(),
+        };
+        merged.assemble()?;
+        Ok(merged)
+    }
+
+    /// Rebuild the concatenated logits / feature map from the parts.
+    fn assemble(&mut self) -> Result<()> {
+        let (logits, feat) = concat_parts(self.parts.iter().map(|p| (p.logits(), p.feat())))?;
+        self.logits = logits;
+        self.feat = feat;
+        Ok(())
+    }
+}
+
+impl InferenceSession for MergedSession {
+    fn begin(&mut self, _x: &Tensor, _seed: u64) -> Result<StepReport> {
+        bail!("merged sessions are fused from already-begun sessions; begin the parts instead")
+    }
+
+    /// One dispatch, every part: refine each constituent against its own
+    /// progressive state.  The aggregate step is recorded on the merged
+    /// report; the per-part split stays available via
+    /// [`InferenceSession::part_steps`].  A part failure poisons the
+    /// merged session (earlier parts may already have advanced).
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let mut steps = Vec::with_capacity(self.parts.len());
+        for (i, p) in self.parts.iter_mut().enumerate() {
+            let step = p
+                .refine(target)
+                .map_err(|e| anyhow!("merged refine failed at part {i}: {e:#}"))?;
+            steps.push(step);
+        }
+        self.assemble()?;
+        self.plan = target.clone();
+        let aggregate = StepReport::aggregate(steps.iter());
+        self.last_steps = steps;
+        self.report.record(aggregate.clone());
+        Ok(aggregate)
+    }
+
+    /// Narrow to a global row subset.  Rows must arrive grouped by part
+    /// (part indices non-decreasing) — the merged output concatenates
+    /// parts in order, so an interleaving could not be honored.  Parts
+    /// narrowed to zero rows are dropped from the merge.
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        let per_part = split_rows_by_part(rows, &self.part_rows())?;
+        let mut kept = Vec::with_capacity(self.parts.len());
+        let mut kept_steps = Vec::new();
+        let had_steps = self.last_steps.len() == self.parts.len();
+        for (i, (mut p, local)) in
+            std::mem::take(&mut self.parts).into_iter().zip(per_part).enumerate()
+        {
+            if local.is_empty() {
+                continue; // this part contributed no surviving rows
+            }
+            p.narrow(&local)?;
+            kept.push(p);
+            if had_steps {
+                kept_steps.push(self.last_steps[i].clone());
+            }
+        }
+        ensure!(!kept.is_empty(), "merged narrow removed every row");
+        self.parts = kept;
+        self.last_steps = kept_steps;
+        self.assemble()
+    }
+
+    fn fork(&self) -> Result<Box<dyn InferenceSession>> {
+        let mut parts = Vec::with_capacity(self.parts.len());
+        for p in &self.parts {
+            parts.push(p.fork()?);
+        }
+        Ok(Box::new(MergedSession {
+            parts,
+            plan: self.plan.clone(),
+            logits: self.logits.clone(),
+            feat: self.feat.clone(),
+            report: self.report.clone(),
+            last_steps: self.last_steps.clone(),
+        }))
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.feat.as_ref()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    fn part_rows(&self) -> Vec<usize> {
+        self.parts
+            .iter()
+            .map(|p| p.logits().shape.first().copied().unwrap_or(0))
+            .collect()
+    }
+
+    fn part_steps(&self) -> Vec<StepReport> {
+        if self.last_steps.is_empty() {
+            // not refined yet: fall back to each part's own last step
+            self.parts
+                .iter()
+                .map(|p| p.cost_report().last_step().cloned().unwrap_or_default())
+                .collect()
+        } else {
+            self.last_steps.clone()
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}

@@ -35,6 +35,7 @@
 //! the trait contract, the session lifecycle, and how to pick a backend.
 
 pub mod intkernel;
+pub mod merged;
 pub mod pjrt;
 pub mod sim;
 
@@ -45,6 +46,7 @@ use crate::precision::{PlanContext, PrecisionPlan};
 use crate::sim::tensor::Tensor;
 
 pub use intkernel::IntKernel;
+pub use merged::MergedSession;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
@@ -82,6 +84,31 @@ pub struct StepReport {
     /// Capacitor nodes updated via the O(Δ) integer delta path
     /// (`IntKernel` only: `ΔA = Δn·D + Σ Δk·(H−L)`).
     pub delta_updated: usize,
+}
+
+impl StepReport {
+    /// Sum several steps into one — the aggregate view of a merged
+    /// dispatch (cost counters merge, work/time tallies add, per-layer
+    /// adds align elementwise).
+    pub fn aggregate<'a>(steps: impl IntoIterator<Item = &'a StepReport>) -> StepReport {
+        let mut total = StepReport::default();
+        for s in steps {
+            total.costs.merge(&s.costs);
+            total.executed_adds += s.executed_adds;
+            total.elapsed_ns += s.elapsed_ns;
+            if total.layer_adds.len() < s.layer_adds.len() {
+                total.layer_adds.resize(s.layer_adds.len(), 0);
+            }
+            for (t, &a) in total.layer_adds.iter_mut().zip(&s.layer_adds) {
+                *t += a;
+            }
+            total.nodes_recomputed += s.nodes_recomputed;
+            total.nodes_reused += s.nodes_reused;
+            total.cols_reused += s.cols_reused;
+            total.delta_updated += s.delta_updated;
+        }
+        total
+    }
 }
 
 /// Cumulative account of a session: the sum over its steps plus the
@@ -156,6 +183,37 @@ pub trait Backend {
     /// is validated against the backend's network; execution starts at
     /// [`InferenceSession::begin`].
     fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>>;
+
+    /// Fuse several already-begun sessions of *this* backend into one
+    /// session whose rows are the parts' rows concatenated in order, so
+    /// one dispatch refines them all (the serving engine's cross-batch
+    /// coalescing of escalation groups).  The contract is bit-identity:
+    /// the merged session must produce, per part, the same logits and
+    /// the same exact per-row charges a serial refine of that part would
+    /// — each part keeps its own progressive identity (its original
+    /// `begin` seed and per-image row order), never its position in the
+    /// merged pool.
+    ///
+    /// The default is `Unsupported` (the sessions are handed back
+    /// untouched and the caller dispatches them serially).  Stateful
+    /// backends whose capacitor state concatenates row-wise
+    /// ([`SimBackend`], [`IntKernel`]) merge same-plan sessions via
+    /// [`MergedSession`]; the stateless [`PjrtBackend`] fuses sessions
+    /// into coalesced padded artifact runs.
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        Ok(MergeOutcome::Unsupported(sessions))
+    }
+}
+
+/// What [`Backend::merge_sessions`] decided.
+pub enum MergeOutcome {
+    /// One fused session; [`InferenceSession::part_rows`] /
+    /// [`InferenceSession::part_steps`] expose the per-part split.
+    Merged(Box<dyn InferenceSession>),
+    /// This backend cannot merge these sessions (stateless with
+    /// incompatible identities, mismatched plans, foreign session type);
+    /// they are returned unchanged for serial dispatch.
+    Unsupported(Vec<Box<dyn InferenceSession>>),
 }
 
 /// One inference over one input batch, escalatable in place.
@@ -200,6 +258,26 @@ pub trait InferenceSession {
 
     /// Cumulative charge + telemetry across `begin` and every `refine`.
     fn cost_report(&self) -> &CostReport;
+
+    /// Row extents of the constituent sessions, in output order — merged
+    /// sessions report one entry per part; plain sessions report one
+    /// entry spanning their whole batch.  Callers use this to split a
+    /// merged pass's logits back per part.
+    fn part_rows(&self) -> Vec<usize> {
+        vec![self.logits().shape.first().copied().unwrap_or(0)]
+    }
+
+    /// Per-part [`StepReport`]s of the most recent `begin`/`refine`,
+    /// aligned with [`Self::part_rows`] — how a merged dispatch's charge
+    /// and executed work split across its constituents (each part's
+    /// report is exactly what its serial refine would have reported).
+    fn part_steps(&self) -> Vec<StepReport> {
+        self.cost_report().last_step().cloned().into_iter().collect()
+    }
+
+    /// Downcast support for backend-specific session ops (the stateless
+    /// PJRT merge recovers its own session type through this).
+    fn as_any(&self) -> &dyn std::any::Any;
 }
 
 /// Deferred backend construction, executed on the thread that will own

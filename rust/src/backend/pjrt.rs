@@ -25,7 +25,7 @@ use crate::precision::{PlanError, PrecisionPlan};
 use crate::runtime::{Execution, PsbBundle, Runtime};
 use crate::sim::tensor::Tensor;
 
-use super::{Backend, CostReport, InferenceSession, StepReport};
+use super::{Backend, CostReport, InferenceSession, MergeOutcome, StepReport};
 
 /// PJRT artifact backend: a compiled-executable cache plus the PSB
 /// weight bundle the modules take as inputs.
@@ -99,6 +99,60 @@ impl Backend for PjrtBackend {
             report: CostReport::default(),
         }))
     }
+
+    /// Stateless merge: fuse PJRT sessions at the same applied `n` into
+    /// one session whose `refine` coalesces the parts' rows into shared
+    /// padded artifact runs — one run per `pad_to` rows *per distinct
+    /// seed* (rows drawn under different seeds cannot share a run
+    /// bit-identically, but still share the one dispatch).  Parts keep
+    /// their original seeds, so each row's logits are exactly what its
+    /// serial re-execution would produce.
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        if sessions.len() < 2 {
+            return Ok(MergeOutcome::Unsupported(sessions));
+        }
+        let compatible = sessions.iter().all(|s| {
+            s.as_any().downcast_ref::<PjrtSession>().is_some_and(|p| {
+                p.x.is_some()
+                    && sessions[0]
+                        .as_any()
+                        .downcast_ref::<PjrtSession>()
+                        .is_some_and(|first| p.n_applied == first.n_applied)
+            })
+        });
+        if !compatible {
+            return Ok(MergeOutcome::Unsupported(sessions));
+        }
+        let mut parts = Vec::with_capacity(sessions.len());
+        let mut x = Vec::new();
+        let mut plan = None;
+        let mut n_applied = 0;
+        for s in &sessions {
+            let p = s.as_any().downcast_ref::<PjrtSession>().expect("checked above");
+            parts.push(FusedPart { rows: p.batch, seed: p.seed });
+            x.extend_from_slice(p.x.as_ref().expect("checked above"));
+            plan.get_or_insert_with(|| p.plan.clone());
+            n_applied = p.n_applied;
+        }
+        let mut fused = PjrtFused {
+            rt: self.rt.clone(),
+            psb: self.psb.clone(),
+            pad_to: self.pad_to,
+            image: self.image,
+            plan: plan.expect("at least two parts"),
+            n_applied,
+            parts,
+            x,
+            logits: Tensor::zeros(&[0]),
+            feat: None,
+            report: CostReport::default(),
+            last_steps: Vec::new(),
+        };
+        // seed the fused view from the parts' current outputs so
+        // logits()/feat() are valid before the first fused refine
+        fused.assemble_from(&sessions)?;
+        Ok(MergeOutcome::Merged(Box::new(fused)))
+    }
 }
 
 /// One artifact inference.  Stateless on the artifact side: the session
@@ -152,16 +206,21 @@ impl PjrtSession {
     }
 }
 
-/// Keep only the first `rows` live rows of a padded execution.
-fn slice_rows(exec: Execution, rows: usize) -> Execution {
+/// Rows `[off, off + rows)` of an execution.
+fn rows_range(exec: &Execution, off: usize, rows: usize) -> Execution {
     let [fb, fh, fw, fc] = exec.feat_shape;
     let nc = exec.logits.len() / fb.max(1);
     let feat_len = fh * fw * fc;
     Execution {
-        logits: exec.logits[..rows * nc].to_vec(),
-        feat: exec.feat[..rows * feat_len].to_vec(),
+        logits: exec.logits[off * nc..(off + rows) * nc].to_vec(),
+        feat: exec.feat[off * feat_len..(off + rows) * feat_len].to_vec(),
         feat_shape: [rows, fh, fw, fc],
     }
+}
+
+/// Keep only the first `rows` live rows of a padded execution.
+fn slice_rows(exec: Execution, rows: usize) -> Execution {
+    rows_range(&exec, 0, rows)
 }
 
 impl InferenceSession for PjrtSession {
@@ -234,5 +293,225 @@ impl InferenceSession for PjrtSession {
 
     fn cost_report(&self) -> &CostReport {
         &self.report
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// One part of a fused stateless session: its row extent and the seed
+/// its stage-1 pass ran under (the sampling identity a re-execution must
+/// keep — rows never adopt the seed of a pool neighbour).
+struct FusedPart {
+    rows: usize,
+    seed: u32,
+}
+
+/// Several stateless sessions fused into one: `refine` re-executes all
+/// parts' rows in coalesced padded artifact runs, one run per `pad_to`
+/// rows per distinct seed.  See [`PjrtBackend::merge_sessions`].
+struct PjrtFused {
+    rt: Rc<RefCell<Runtime>>,
+    psb: Rc<PsbBundle>,
+    pad_to: usize,
+    image: usize,
+    plan: PrecisionPlan,
+    n_applied: u32,
+    parts: Vec<FusedPart>,
+    /// Parts' input rows concatenated in part order.
+    x: Vec<f32>,
+    logits: Tensor,
+    feat: Option<Tensor>,
+    report: CostReport,
+    last_steps: Vec<StepReport>,
+}
+
+impl PjrtFused {
+    /// Seed the fused logits/feat from the constituent sessions' current
+    /// outputs (valid before the first fused refine).
+    fn assemble_from(&mut self, sessions: &[Box<dyn InferenceSession>]) -> Result<()> {
+        let (logits, feat) =
+            super::merged::concat_parts(sessions.iter().map(|s| (s.logits(), s.feat())))?;
+        self.logits = logits;
+        self.feat = feat;
+        Ok(())
+    }
+
+    /// Execute `rows` gathered rows at sample size `n` under one seed,
+    /// chunked into `pad_to`-sized padded artifact runs.
+    fn run_rows(&self, n: u32, x: &[f32], rows: usize, seed: u32) -> Result<Execution> {
+        let img_len = self.image * self.image * 3;
+        let mut out: Option<Execution> = None;
+        let mut off = 0usize;
+        while off < rows {
+            let take = (rows - off).min(self.pad_to);
+            let chunk = &x[off * img_len..(off + take) * img_len];
+            let exec = if take < self.pad_to {
+                let mut padded = chunk.to_vec();
+                padded.resize(self.pad_to * img_len, 0.0);
+                let e = self.rt.borrow_mut().run_psb(n, self.pad_to, &padded, seed, &self.psb)?;
+                slice_rows(e, take)
+            } else {
+                self.rt.borrow_mut().run_psb(n, take, chunk, seed, &self.psb)?
+            };
+            out = Some(match out {
+                None => exec,
+                Some(mut acc) => {
+                    acc.logits.extend_from_slice(&exec.logits);
+                    acc.feat.extend_from_slice(&exec.feat);
+                    acc.feat_shape[0] += exec.feat_shape[0];
+                    acc
+                }
+            });
+            off += take;
+        }
+        out.ok_or_else(|| anyhow!("fused run over zero rows"))
+    }
+}
+
+impl InferenceSession for PjrtFused {
+    fn begin(&mut self, _x: &Tensor, _seed: u64) -> Result<StepReport> {
+        anyhow::bail!("fused sessions are merged from already-begun sessions")
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let n = target
+            .uniform_n()
+            .ok_or_else(|| anyhow::Error::new(PlanError::NotUniform))?;
+        if n < self.n_applied {
+            return Err(anyhow::Error::new(PlanError::NonMonotonic {
+                layer: 0,
+                have: self.n_applied,
+                want: n,
+            }));
+        }
+        let img_len = self.image * self.image * 3;
+        let t0 = std::time::Instant::now();
+        // part indices per distinct seed, first-appearance order
+        let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
+        for (i, p) in self.parts.iter().enumerate() {
+            match groups.iter().position(|(s, _)| *s == p.seed) {
+                Some(g) => groups[g].1.push(i),
+                None => groups.push((p.seed, vec![i])),
+            }
+        }
+        let mut offsets = vec![0usize; self.parts.len()];
+        let mut off = 0usize;
+        for (i, p) in self.parts.iter().enumerate() {
+            offsets[i] = off;
+            off += p.rows;
+        }
+        let mut part_exec: Vec<Option<Execution>> = (0..self.parts.len()).map(|_| None).collect();
+        let mut part_ns = vec![0u64; self.parts.len()];
+        for (seed, members) in &groups {
+            let mut gx = Vec::new();
+            for &i in members {
+                let p = &self.parts[i];
+                gx.extend_from_slice(
+                    &self.x[offsets[i] * img_len..(offsets[i] + p.rows) * img_len],
+                );
+            }
+            let rows: usize = members.iter().map(|&i| self.parts[i].rows).sum();
+            let g0 = std::time::Instant::now();
+            let exec = self.run_rows(n, &gx, rows, *seed)?;
+            // the group's wall time lands on its first member so the
+            // per-part split still sums to the dispatch total
+            part_ns[members[0]] += g0.elapsed().as_nanos() as u64;
+            let mut goff = 0usize;
+            for &i in members {
+                let r = self.parts[i].rows;
+                part_exec[i] = Some(rows_range(&exec, goff, r));
+                goff += r;
+            }
+        }
+        // assemble fused outputs in part order
+        let mut data = Vec::new();
+        let mut fdata = Vec::new();
+        let mut rows = 0usize;
+        let mut fshape = [0usize; 4];
+        for e in part_exec.iter().flatten() {
+            data.extend_from_slice(&e.logits);
+            fdata.extend_from_slice(&e.feat);
+            rows += e.feat_shape[0];
+            fshape = e.feat_shape;
+        }
+        let nc = if rows > 0 { data.len() / rows } else { 1 };
+        self.logits = Tensor::from_vec(data, &[rows, nc.max(1)]);
+        self.feat = Some(Tensor::from_vec(fdata, &[rows, fshape[1], fshape[2], fshape[3]]));
+        self.n_applied = n;
+        self.plan = target.clone();
+        self.last_steps = part_ns
+            .into_iter()
+            .map(|ns| StepReport { elapsed_ns: ns, ..Default::default() })
+            .collect();
+        let aggregate =
+            StepReport { elapsed_ns: t0.elapsed().as_nanos() as u64, ..Default::default() };
+        self.report.record(aggregate.clone());
+        Ok(aggregate)
+    }
+
+    /// Narrow to a global row subset, grouped by part in order (the
+    /// fused output concatenates parts).  Parts losing every row drop
+    /// out of the fuse.
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        let img_len = self.image * self.image * 3;
+        let extents: Vec<usize> = self.parts.iter().map(|p| p.rows).collect();
+        let total: usize = extents.iter().sum();
+        let per_part = super::merged::split_rows_by_part(rows, &extents)?;
+        let mut nx = Vec::with_capacity(rows.len() * img_len);
+        for &r in rows {
+            nx.extend_from_slice(&self.x[r * img_len..(r + 1) * img_len]);
+        }
+        self.x = nx;
+        let kept_parts: Vec<FusedPart> = self
+            .parts
+            .iter()
+            .zip(per_part)
+            .filter(|(_, kept)| !kept.is_empty())
+            .map(|(p, kept)| FusedPart { rows: kept.len(), seed: p.seed })
+            .collect();
+        anyhow::ensure!(!kept_parts.is_empty(), "fused narrow removed every row");
+        self.parts = kept_parts;
+        if !self.logits.is_empty() {
+            self.logits = crate::sim::psbnet::gather_blocks(&self.logits, rows, total);
+        }
+        if let Some(f) = self.feat.take() {
+            self.feat = Some(crate::sim::psbnet::gather_blocks(&f, rows, total));
+        }
+        self.last_steps.clear();
+        Ok(())
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.feat.as_ref()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    fn part_rows(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.rows).collect()
+    }
+
+    fn part_steps(&self) -> Vec<StepReport> {
+        if self.last_steps.is_empty() {
+            self.parts.iter().map(|_| StepReport::default()).collect()
+        } else {
+            self.last_steps.clone()
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }

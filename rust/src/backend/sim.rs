@@ -18,7 +18,7 @@ use crate::rng::RngKind;
 use crate::sim::psbnet::{gather_blocks, PsbNetwork, SimCache};
 use crate::sim::tensor::Tensor;
 
-use super::{Backend, CostReport, InferenceSession, StepReport};
+use super::{Backend, CostReport, InferenceSession, MergeOutcome, StepReport};
 
 /// Float-carried simulator backend over a prepared [`PsbNetwork`].
 #[derive(Debug, Clone)]
@@ -82,6 +82,13 @@ impl Backend for SimBackend {
             feat: None,
             report: CostReport::default(),
         }))
+    }
+
+    /// Same-plan sim sessions merge row-wise: each part keeps its own
+    /// `ProgressiveState` (original seed) and `SimCache`, so a merged
+    /// refine draws exactly what each serial refine would have drawn.
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        super::merged::merge_same_plan(sessions)
     }
 }
 
@@ -187,5 +194,9 @@ impl InferenceSession for SimSession {
 
     fn cost_report(&self) -> &CostReport {
         &self.report
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }

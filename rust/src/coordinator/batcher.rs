@@ -11,9 +11,29 @@
 //! groups instead (see `server::EscalationGroup`): rows of one stage-1
 //! batch share a progressive capacitor state, and re-batching across
 //! stage-1 batches would mix states drawn from different streams.
+//! Cross-batch coalescing of escalation groups happens downstream, in
+//! the engine's dispatch window ([`drain_ready`] + session merge),
+//! which preserves each group's capacitor state bit-exactly.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+/// Drain whatever is already queued on `rx` behind a blocking first
+/// item into one dispatch batch, up to `max` items — the zero-latency
+/// batching shape the engine's job window and the stage-2 escalation
+/// worker share (nothing waits; only work that has *already* queued
+/// rides along).
+pub fn drain_ready<T>(rx: &Receiver<T>, first: T, max: usize) -> Vec<T> {
+    let mut batch = Vec::with_capacity(max.min(16).max(1));
+    batch.push(first);
+    while batch.len() < max {
+        match rx.try_recv() {
+            Ok(v) => batch.push(v),
+            Err(_) => break,
+        }
+    }
+    batch
+}
 
 /// One queued request: the image plus its enqueue time and an opaque tag
 /// the caller uses to route the response.

@@ -1,27 +1,36 @@
-//! The engine thread: serialized model execution behind a channel, over
-//! any [`crate::backend::Backend`].
+//! The engine thread: pooled, batch-dispatched model execution behind a
+//! channel, over any [`crate::backend::Backend`].
 //!
 //! The engine owns one backend (constructed *on* the engine thread from
-//! a [`BackendFactory`] — PJRT handles are not `Send`) plus a slab of
-//! open [`InferenceSession`]s.  Jobs reference sessions by id, so the
-//! serving path's escalation is "narrow this session to the uncertain
-//! rows and refine it" — the session's capacitor state (progressive
-//! counts + cached accumulators) never leaves the engine thread.
+//! a [`BackendFactory`] — PJRT handles are not `Send`) plus a
+//! [`SessionPool`]: a bounded, LRU-evicted slab of open
+//! [`InferenceSession`]s, so **several stage-1 sessions stay alive per
+//! backend** and escalations target them by id.  The job loop drains
+//! whatever is queued into one dispatch window per wakeup; compatible
+//! `Refine` jobs (same target plan, fire-and-forget) are handed to
+//! [`crate::backend::Backend::merge_sessions`] and, when the backend
+//! supports it, escalate as **one merged dispatch** — restoring
+//! cross-batch coalescing of stateless escalation groups, and cutting
+//! per-job round-trips for stateful backends.  Merged outputs are split
+//! back per caller from the session's `part_rows`/`part_steps`, so each
+//! job still receives exactly the logits and charges its serial dispatch
+//! would have produced (bit-identity is the backends' merge contract).
 //!
-//! Other threads talk to the engine through an unbounded std channel;
-//! replies travel back over rendezvous channels.  Failures are kept
-//! twofold: each job's error is returned to its caller, *and* the most
-//! recent backend failure is recorded so a later `submit` against a
-//! dead engine can still report the root cause.
+//! Failures are kept twofold: each job's error is returned to its
+//! caller, *and* the most recent backend failure is recorded so a later
+//! `submit` against a dead engine can still report the root cause.
+//! Closed and evicted session ids are never reused, and a `Refine`
+//! against one names what happened to it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, BackendFactory, InferenceSession, StepReport};
+use crate::backend::{Backend, BackendFactory, InferenceSession, MergeOutcome, StepReport};
 use crate::precision::PrecisionPlan;
 use crate::runtime::Execution;
 use crate::sim::tensor::Tensor;
@@ -29,11 +38,54 @@ use crate::sim::tensor::Tensor;
 /// Engine-thread-local session handle.
 pub type SessionId = u64;
 
+/// Most jobs drained into one dispatch window.
+const MAX_DRAIN: usize = 64;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Most sessions kept resident in the pool; beyond it the least
+    /// recently used session is evicted (its id is retired with the
+    /// eviction reason).
+    pub pool_cap: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { pool_cap: 32 }
+    }
+}
+
+/// Live counters of the pool and the merge path, shared with the engine
+/// handle (and surfaced by `coordinator::Metrics`).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Sessions currently resident in the pool.
+    pub sessions_open: AtomicU64,
+    /// High-water mark of resident sessions.
+    pub sessions_peak: AtomicU64,
+    /// Sessions evicted by the LRU bound.
+    pub evictions: AtomicU64,
+    /// Merged dispatches performed (≥ 2 refine jobs fused into one).
+    pub merges: AtomicU64,
+    /// Backend dispatches saved by merging — Σ (parts − 1) over merged
+    /// dispatches (for the stateless PJRT backend with shared seeds this
+    /// is padded artifact runs saved).
+    pub runs_saved: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn sessions_open(&self) -> u64 {
+        self.sessions_open.load(Ordering::Relaxed)
+    }
+}
+
 /// A unit of engine work.
 pub enum EngineJob {
     /// Open a session at `plan` and run it over one padded batch.
-    /// `keep` leaves the session open (returning its id) so the caller
-    /// can `Refine` it later; otherwise it closes after the pass.
+    /// `keep` leaves the session open in the pool (returning its id) so
+    /// the caller can `Refine` it later; otherwise it closes after the
+    /// pass.
     Begin {
         plan: PrecisionPlan,
         /// Row-major `[batch, H, W, C]` input.
@@ -43,10 +95,11 @@ pub enum EngineJob {
         keep: bool,
         reply: mpsc::SyncSender<Result<EngineOutput>>,
     },
-    /// Escalate an open session: optionally narrow it to a row subset
+    /// Escalate a pooled session: optionally narrow it to a row subset
     /// (indices into the session's current batch, output follows their
     /// order), then refine to `plan`.  The session closes after the
-    /// pass unless `keep`.
+    /// pass unless `keep`.  Same-plan fire-and-forget refines drained in
+    /// one dispatch window may be merged into one backend dispatch.
     Refine {
         session: SessionId,
         rows: Option<Vec<usize>>,
@@ -54,7 +107,7 @@ pub enum EngineJob {
         keep: bool,
         reply: mpsc::SyncSender<Result<EngineOutput>>,
     },
-    /// Drop an open session (e.g. nothing escalated).
+    /// Drop a pooled session (e.g. nothing escalated).  Idempotent.
     Close { session: SessionId },
 }
 
@@ -74,6 +127,127 @@ pub struct EngineOutput {
     pub executed_adds: u64,
     /// Backend-measured wall time of the pass, in nanoseconds.
     pub backend_ns: u64,
+    /// This output came out of a merged dispatch (several refine jobs
+    /// coalesced into one backend call).
+    pub merged: bool,
+}
+
+/// Bounded LRU slab of open sessions.  Ids are monotonic and never
+/// reused; retired ids (closed, evicted, or consumed by a completed or
+/// failed refine) keep a human-readable reason so a late or duplicate
+/// `Refine` names what happened instead of "unknown session".
+struct SessionPool {
+    cap: usize,
+    slots: HashMap<SessionId, Box<dyn InferenceSession>>,
+    /// Least recently used first.
+    lru: VecDeque<SessionId>,
+    retired: HashMap<SessionId, String>,
+    next_id: SessionId,
+    stats: Arc<EngineStats>,
+}
+
+impl SessionPool {
+    fn new(cap: usize, stats: Arc<EngineStats>) -> SessionPool {
+        SessionPool {
+            cap: cap.max(1),
+            slots: HashMap::new(),
+            lru: VecDeque::new(),
+            retired: HashMap::new(),
+            next_id: 1,
+            stats,
+        }
+    }
+
+    fn sync_gauges(&self) {
+        let open = self.slots.len() as u64;
+        self.stats.sessions_open.store(open, Ordering::Relaxed);
+        self.stats.sessions_peak.fetch_max(open, Ordering::Relaxed);
+    }
+
+    fn retire(&mut self, id: SessionId, reason: String) {
+        self.retired.insert(id, reason);
+        if self.retired.len() > 1024 {
+            // ids are monotonic: forget the oldest retirements
+            let cutoff = self.next_id.saturating_sub(1024);
+            self.retired.retain(|&k, _| k >= cutoff);
+        }
+    }
+
+    /// Insert a session at the most-recently-used end, evicting the LRU
+    /// session(s) beyond capacity.
+    fn insert(&mut self, sess: Box<dyn InferenceSession>) -> SessionId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.slots.insert(id, sess);
+        self.lru.push_back(id);
+        self.evict_over_cap();
+        self.sync_gauges();
+        id
+    }
+
+    fn evict_over_cap(&mut self) {
+        while self.slots.len() > self.cap {
+            if let Some(old) = self.lru.pop_front() {
+                self.slots.remove(&old);
+                self.retire(
+                    old,
+                    format!(
+                        "session {old} was evicted from the pool (LRU, capacity {})",
+                        self.cap
+                    ),
+                );
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Remove a session for use; the reason a missing id is missing is
+    /// part of the error.
+    fn take(&mut self, id: SessionId) -> Result<Box<dyn InferenceSession>> {
+        match self.slots.remove(&id) {
+            Some(s) => {
+                self.lru.retain(|&x| x != id);
+                self.sync_gauges();
+                Ok(s)
+            }
+            None => Err(match self.retired.get(&id) {
+                Some(reason) => anyhow!("{reason}"),
+                None => anyhow!("unknown engine session {id}"),
+            }),
+        }
+    }
+
+    /// Return a taken session under its existing id (a kept refine);
+    /// touches it to most-recently-used.
+    fn put_back(&mut self, id: SessionId, sess: Box<dyn InferenceSession>) {
+        self.slots.insert(id, sess);
+        self.lru.push_back(id);
+        self.evict_over_cap();
+        self.sync_gauges();
+    }
+
+    /// Explicit close; idempotent, and the id is retired so later jobs
+    /// name the close (never a recycled session).
+    fn close(&mut self, id: SessionId) {
+        if self.slots.remove(&id).is_some() {
+            self.lru.retain(|&x| x != id);
+        }
+        if id < self.next_id && !self.retired.contains_key(&id) {
+            self.retire(id, format!("session {id} was closed"));
+        }
+        self.sync_gauges();
+    }
+}
+
+/// One pending refine of a dispatch window.
+struct RefineReq {
+    session: SessionId,
+    rows: Option<Vec<usize>>,
+    plan: PrecisionPlan,
+    keep: bool,
+    reply: mpsc::SyncSender<Result<EngineOutput>>,
 }
 
 /// Handle to the engine thread.
@@ -82,15 +256,24 @@ pub struct Engine {
     handle: Option<JoinHandle<()>>,
     /// Most recent backend/session failure, for post-mortem `submit`s.
     fail: Arc<Mutex<Option<String>>>,
+    stats: Arc<EngineStats>,
 }
 
 impl Engine {
-    /// Spawn the engine thread over a backend factory.  The factory runs
-    /// on the engine thread; construction failures propagate out of
-    /// `spawn` (and are recorded for later `last_error` queries).
+    /// Spawn the engine thread over a backend factory with the default
+    /// pool bound.  The factory runs on the engine thread; construction
+    /// failures propagate out of `spawn` (and are recorded for later
+    /// `last_error` queries).
     pub fn spawn(factory: BackendFactory) -> Result<Engine> {
+        Engine::spawn_with(factory, EngineConfig::default())
+    }
+
+    /// [`Engine::spawn`] with explicit tuning.
+    pub fn spawn_with(factory: BackendFactory, cfg: EngineConfig) -> Result<Engine> {
         let fail = Arc::new(Mutex::new(None::<String>));
+        let stats = Arc::new(EngineStats::default());
         let fail_worker = fail.clone();
+        let stats_worker = stats.clone();
         let (tx, rx) = mpsc::channel::<EngineJob>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -107,68 +290,71 @@ impl Engine {
                         return;
                     }
                 };
-                let (h, w, c) = backend.input_hwc();
-                let mut sessions: HashMap<SessionId, Box<dyn InferenceSession>> = HashMap::new();
-                let mut next_id: SessionId = 1;
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        EngineJob::Begin { plan, x, batch, seed, keep, reply } => {
-                            let result = begin_job(
-                                backend.as_ref(),
-                                (h, w, c),
-                                plan,
-                                x,
-                                batch,
-                                seed,
-                            );
-                            let result = match result {
-                                Ok((sess, out)) => {
-                                    let mut out = out;
-                                    if keep {
-                                        let id = next_id;
-                                        next_id += 1;
-                                        sessions.insert(id, sess);
-                                        out.session = Some(id);
-                                    }
-                                    Ok(out)
-                                }
-                                Err(e) => {
-                                    *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
-                                    Err(e)
-                                }
-                            };
-                            // receiver may have given up; dropping is fine
-                            let _ = reply.send(result);
-                        }
-                        EngineJob::Refine { session, rows, plan, keep, reply } => {
-                            let result = match sessions.remove(&session) {
-                                None => Err(anyhow!("unknown engine session {session}")),
-                                Some(mut sess) => match refine_job(&mut *sess, rows, &plan) {
-                                    Ok(mut out) => {
-                                        if keep {
-                                            sessions.insert(session, sess);
-                                            out.session = Some(session);
-                                        }
-                                        Ok(out)
-                                    }
-                                    Err(e) => Err(e),
-                                },
-                            };
-                            if let Err(e) = &result {
-                                *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
+                let hwc = backend.input_hwc();
+                let mut pool = SessionPool::new(cfg.pool_cap, stats_worker.clone());
+                while let Ok(first) = rx.recv() {
+                    // one dispatch window: everything already queued
+                    let window = crate::coordinator::batcher::drain_ready(&rx, first, MAX_DRAIN);
+                    let mut refines: Vec<RefineReq> = Vec::new();
+                    for job in window {
+                        match job {
+                            EngineJob::Refine { session, rows, plan, keep, reply } => {
+                                refines.push(RefineReq { session, rows, plan, keep, reply });
                             }
-                            let _ = reply.send(result);
-                        }
-                        EngineJob::Close { session } => {
-                            sessions.remove(&session);
+                            other => {
+                                // preserve job order around non-refine jobs
+                                dispatch_refines(
+                                    backend.as_ref(),
+                                    &mut pool,
+                                    std::mem::take(&mut refines),
+                                    &stats_worker,
+                                    &fail_worker,
+                                );
+                                match other {
+                                    EngineJob::Begin { plan, x, batch, seed, keep, reply } => {
+                                        let result = begin_job(
+                                            backend.as_ref(),
+                                            hwc,
+                                            plan,
+                                            x,
+                                            batch,
+                                            seed,
+                                        );
+                                        let result = match result {
+                                            Ok((sess, mut out)) => {
+                                                if keep {
+                                                    out.session = Some(pool.insert(sess));
+                                                }
+                                                Ok(out)
+                                            }
+                                            Err(e) => {
+                                                *fail_worker.lock().unwrap() =
+                                                    Some(format!("{e:#}"));
+                                                Err(e)
+                                            }
+                                        };
+                                        // receiver may have given up; dropping is fine
+                                        let _ = reply.send(result);
+                                    }
+                                    EngineJob::Close { session } => pool.close(session),
+                                    EngineJob::Refine { .. } => unreachable!("matched above"),
+                                }
+                            }
                         }
                     }
+                    dispatch_refines(
+                        backend.as_ref(),
+                        &mut pool,
+                        refines,
+                        &stats_worker,
+                        &fail_worker,
+                    );
                 }
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, handle: Some(handle), fail })
+        Ok(Engine { tx, handle: Some(handle), fail, stats })
     }
 
     /// Enqueue a job (non-blocking).  A send against a dead engine
@@ -187,6 +373,11 @@ impl Engine {
         self.fail.lock().unwrap().clone()
     }
 
+    /// Live pool / merge counters.
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
     /// Convenience: run one batch in a throwaway session and wait.
     pub fn run_once(
         &self,
@@ -200,7 +391,8 @@ impl Engine {
         self.wait(rx)
     }
 
-    /// Run one batch, keeping the session open for escalation.
+    /// Run one batch, keeping the session open in the pool for
+    /// escalation.
     pub fn begin_session(
         &self,
         plan: PrecisionPlan,
@@ -213,7 +405,7 @@ impl Engine {
         self.wait(rx)
     }
 
-    /// Escalate (and close) an open session, optionally narrowed to a
+    /// Escalate (and close) a pooled session, optionally narrowed to a
     /// row subset first.
     pub fn refine_session(
         &self,
@@ -226,7 +418,7 @@ impl Engine {
         self.wait(rx)
     }
 
-    /// Drop an open session.
+    /// Drop a pooled session.
     pub fn close_session(&self, session: SessionId) -> Result<()> {
         self.submit(EngineJob::Close { session })
     }
@@ -237,6 +429,208 @@ impl Engine {
             None => anyhow!("engine dropped the job"),
         })?
     }
+}
+
+/// Dispatch one window's refine jobs: take + narrow every target
+/// session, merge the compatible ones (same target plan, not kept) into
+/// one backend dispatch, run the rest serially.
+fn dispatch_refines(
+    backend: &dyn Backend,
+    pool: &mut SessionPool,
+    refines: Vec<RefineReq>,
+    stats: &EngineStats,
+    fail: &Mutex<Option<String>>,
+) {
+    if refines.is_empty() {
+        return;
+    }
+    // partition into merge groups by target plan; kept refines always
+    // dispatch alone (a merged session cannot be split back into pool
+    // slots)
+    let mut groups: Vec<(PrecisionPlan, Vec<RefineReq>)> = Vec::new();
+    let mut singles: Vec<RefineReq> = Vec::new();
+    for req in refines {
+        if req.keep {
+            singles.push(req);
+            continue;
+        }
+        match groups.iter().position(|(p, _)| *p == req.plan) {
+            Some(i) => groups[i].1.push(req),
+            None => groups.push((req.plan.clone(), vec![req])),
+        }
+    }
+    for (plan, group) in groups {
+        if group.len() < 2 {
+            singles.extend(group);
+            continue;
+        }
+        // take + narrow each member; failures answer that member alone
+        let mut ready: Vec<(RefineReq, Box<dyn InferenceSession>)> = Vec::new();
+        for req in group {
+            match take_and_narrow(pool, &req) {
+                Ok(sess) => ready.push((req, sess)),
+                Err(e) => {
+                    *fail.lock().unwrap() = Some(format!("{e:#}"));
+                    let _ = req.reply.send(Err(e));
+                }
+            }
+        }
+        if ready.len() < 2 {
+            for (req, sess) in ready {
+                refine_in_hand(pool, req, sess, fail);
+            }
+            continue;
+        }
+        let (reqs, parts): (Vec<RefineReq>, Vec<Box<dyn InferenceSession>>) =
+            ready.into_iter().unzip();
+        match backend.merge_sessions(parts) {
+            Ok(MergeOutcome::Merged(mut merged)) => {
+                let parts_n = reqs.len() as u64;
+                match merged.refine(&plan) {
+                    Ok(_aggregate) => {
+                        stats.merges.fetch_add(1, Ordering::Relaxed);
+                        stats.runs_saved.fetch_add(parts_n - 1, Ordering::Relaxed);
+                        let outs = split_merged_outputs(merged.as_ref());
+                        debug_assert_eq!(outs.len(), reqs.len());
+                        for (req, out) in reqs.into_iter().zip(outs) {
+                            pool.retire(
+                                req.session,
+                                format!(
+                                    "session {} was closed by its completed (merged) refine",
+                                    req.session
+                                ),
+                            );
+                            let _ = req.reply.send(Ok(out));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        *fail.lock().unwrap() = Some(msg.clone());
+                        for req in reqs {
+                            pool.retire(
+                                req.session,
+                                format!(
+                                    "session {} was dropped by a failed merged refine: {msg}",
+                                    req.session
+                                ),
+                            );
+                            let _ = req.reply.send(Err(anyhow!("merged dispatch failed: {msg}")));
+                        }
+                    }
+                }
+            }
+            Ok(MergeOutcome::Unsupported(parts)) => {
+                for (req, sess) in reqs.into_iter().zip(parts) {
+                    refine_in_hand(pool, req, sess, fail);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                *fail.lock().unwrap() = Some(msg.clone());
+                for req in reqs {
+                    let _ = req.reply.send(Err(anyhow!("session merge failed: {msg}")));
+                }
+            }
+        }
+    }
+    for req in singles {
+        match take_and_narrow(pool, &req) {
+            Ok(sess) => refine_in_hand(pool, req, sess, fail),
+            Err(e) => {
+                *fail.lock().unwrap() = Some(format!("{e:#}"));
+                let _ = req.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Pull a refine's session out of the pool and narrow it to the
+/// requested rows.  A narrow failure drops the session (its row state is
+/// unknown), mirroring the serial path — the id is retired with that
+/// reason so later jobs against it are diagnosable.
+fn take_and_narrow(pool: &mut SessionPool, req: &RefineReq) -> Result<Box<dyn InferenceSession>> {
+    let mut sess = pool.take(req.session)?;
+    if let Some(rows) = &req.rows {
+        if let Err(e) = sess.narrow(rows) {
+            pool.retire(
+                req.session,
+                format!("session {} was dropped by a failed narrow: {e:#}", req.session),
+            );
+            return Err(e);
+        }
+    }
+    Ok(sess)
+}
+
+/// Serial refine of a session already taken (and narrowed) from the
+/// pool.  Consumed (`keep == false`) and failed sessions retire their
+/// id with the reason, so duplicate/late jobs name what happened.
+fn refine_in_hand(
+    pool: &mut SessionPool,
+    req: RefineReq,
+    mut sess: Box<dyn InferenceSession>,
+    fail: &Mutex<Option<String>>,
+) {
+    let result = match sess.refine(&req.plan) {
+        Ok(step) => {
+            let mut out = output_of(sess.as_ref(), &step);
+            if req.keep {
+                pool.put_back(req.session, sess);
+                out.session = Some(req.session);
+            } else {
+                pool.retire(
+                    req.session,
+                    format!("session {} was closed by its completed refine", req.session),
+                );
+            }
+            Ok(out)
+        }
+        Err(e) => {
+            pool.retire(
+                req.session,
+                format!("session {} was dropped by a failed refine: {e:#}", req.session),
+            );
+            *fail.lock().unwrap() = Some(format!("{e:#}"));
+            Err(e)
+        }
+    };
+    let _ = req.reply.send(result);
+}
+
+/// Split a merged session's pass back into per-part outputs, using the
+/// per-part rows and step reports the merge contract guarantees.
+fn split_merged_outputs(merged: &dyn InferenceSession) -> Vec<EngineOutput> {
+    let steps = merged.part_steps();
+    let parts = merged.part_rows();
+    let logits = merged.logits();
+    let nc = logits.shape.get(1).copied().unwrap_or(0);
+    let feat = merged.feat();
+    let mut outs = Vec::with_capacity(parts.len());
+    let mut off = 0usize;
+    for (i, &rows) in parts.iter().enumerate() {
+        let l = logits.data[off * nc..(off + rows) * nc].to_vec();
+        let (f, fshape) = match feat {
+            Some(f) if f.shape.len() == 4 => {
+                let flen = f.shape[1] * f.shape[2] * f.shape[3];
+                (
+                    f.data[off * flen..(off + rows) * flen].to_vec(),
+                    [rows, f.shape[1], f.shape[2], f.shape[3]],
+                )
+            }
+            _ => (Vec::new(), [rows, 0, 0, 0]),
+        };
+        let step = steps.get(i).cloned().unwrap_or_default();
+        outs.push(EngineOutput {
+            exec: Execution { logits: l, feat: f, feat_shape: fshape },
+            session: None,
+            gated_adds: step.costs.gated_adds,
+            executed_adds: step.executed_adds,
+            backend_ns: step.elapsed_ns,
+            merged: true,
+        });
+        off += rows;
+    }
+    outs
 }
 
 fn begin_job(
@@ -259,18 +653,6 @@ fn begin_job(
     Ok((sess, out))
 }
 
-fn refine_job(
-    sess: &mut dyn InferenceSession,
-    rows: Option<Vec<usize>>,
-    plan: &PrecisionPlan,
-) -> Result<EngineOutput> {
-    if let Some(rows) = rows {
-        sess.narrow(&rows)?;
-    }
-    let step = sess.refine(plan)?;
-    Ok(output_of(sess, &step))
-}
-
 fn output_of(sess: &dyn InferenceSession, step: &StepReport) -> EngineOutput {
     let logits = sess.logits();
     let (feat, feat_shape) = match sess.feat() {
@@ -287,6 +669,7 @@ fn output_of(sess: &dyn InferenceSession, step: &StepReport) -> EngineOutput {
         gated_adds: step.costs.gated_adds,
         executed_adds: step.executed_adds,
         backend_ns: step.elapsed_ns,
+        merged: false,
     }
 }
 

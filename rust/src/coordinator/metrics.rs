@@ -79,6 +79,18 @@ pub struct Metrics {
     pub engine_errors: AtomicU64,
     /// Root cause of the most recent engine failure.
     pub last_engine_error: std::sync::Mutex<Option<String>>,
+    /// Stage-1 sessions currently resident in the engine's pool (gauge,
+    /// mirrored from [`crate::coordinator::engine::EngineStats`]).
+    pub pool_sessions: AtomicU64,
+    /// High-water mark of resident pool sessions.
+    pub pool_peak: AtomicU64,
+    /// Pool sessions evicted by the LRU bound.
+    pub pool_evictions: AtomicU64,
+    /// Merged dispatches performed (escalation groups coalesced).
+    pub merges: AtomicU64,
+    /// Backend dispatches (padded artifact runs, on stateless backends)
+    /// saved by merging.
+    pub runs_saved: AtomicU64,
 }
 
 impl Metrics {
@@ -94,6 +106,17 @@ impl Metrics {
     pub fn record_engine_error(&self, err: &anyhow::Error) {
         Self::inc(&self.engine_errors);
         *self.last_engine_error.lock().unwrap() = Some(format!("{err:#}"));
+    }
+
+    /// Mirror the engine's live pool/merge counters into the serving
+    /// metrics (called by the stage handlers after each engine pass).
+    pub fn sync_engine(&self, stats: &crate::coordinator::engine::EngineStats) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.pool_sessions.store(stats.sessions_open.load(Relaxed), Relaxed);
+        self.pool_peak.store(stats.sessions_peak.load(Relaxed), Relaxed);
+        self.pool_evictions.store(stats.evictions.load(Relaxed), Relaxed);
+        self.merges.store(stats.merges.load(Relaxed), Relaxed);
+        self.runs_saved.store(stats.runs_saved.load(Relaxed), Relaxed);
     }
 
     /// Mean rows per dispatched batch (occupancy diagnostics).
@@ -123,12 +146,18 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% \
+             pool={}(peak {}, evicted {}) merges={} runs_saved={} \
              exec_adds={} backend_ms={:.1} p50={:?} p99={:?} mean={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             100.0 * self.escalation_rate(),
             self.batch_occupancy(),
             100.0 * self.reuse_ratio(),
+            self.pool_sessions.load(Ordering::Relaxed),
+            self.pool_peak.load(Ordering::Relaxed),
+            self.pool_evictions.load(Ordering::Relaxed),
+            self.merges.load(Ordering::Relaxed),
+            self.runs_saved.load(Ordering::Relaxed),
             self.executed_adds.load(Ordering::Relaxed),
             self.backend_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.latency.quantile(0.5),

@@ -19,8 +19,12 @@
 //!   over any [`crate::backend::Backend`] — the PJRT runtime over AOT
 //!   artifacts ([`Coordinator::start`]) or the pure-rust simulator with
 //!   true session-state reuse ([`Coordinator::start_sim`]).  Sessions
-//!   (progressive counts + cached per-node accumulators) live on the
-//!   engine thread and are escalated by id;
+//!   (progressive counts + cached per-node accumulators) live in the
+//!   engine's bounded **session pool** (several stage-1 sessions in
+//!   flight, LRU-evicted) and are escalated by id; compatible
+//!   escalation groups drained in one dispatch window **merge** into a
+//!   single backend pass (`Backend::merge_sessions`) without touching
+//!   any group's capacitor state;
 //! * the **batcher** collects requests up to the artifact batch size with
 //!   a linger timeout and zero-pads partial batches;
 //! * the **scheduler** implements [`crate::precision::PrecisionPolicy`]:
@@ -36,7 +40,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatcherConfig;
-pub use engine::{Engine, EngineJob, EngineOutput, SessionId};
+pub use engine::{Engine, EngineConfig, EngineJob, EngineOutput, EngineStats, SessionId};
 pub use metrics::Metrics;
 pub use scheduler::{EscalationPolicy, SchedulerStats};
-pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig};
+pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, ServedVia};

@@ -5,15 +5,19 @@
 //! stage-2 worker drains escalation groups.
 //!
 //! Escalation is *session-native*: the stage-1 pass leaves its
-//! [`crate::backend::InferenceSession`] open on the engine thread, and
-//! stage 2 narrows that session to the uncertain rows and refines it in
-//! place — the capacitor state (progressive counts + cached per-node
-//! accumulators) never crosses a thread, and the escalated rows pay only
-//! the `n_high − n_low` incremental samples.  Rows of one stage-1 batch
-//! share one filter draw (the paper's batch-shared sampling), so any
-//! subset can be narrowed out; regrouping escalations *across* stage-1
-//! batches would mix incompatible capacitor states, which is why stage 2
-//! dispatches per source session instead of re-batching.
+//! [`crate::backend::InferenceSession`] open in the engine's session
+//! pool, and stage 2 narrows that session to the uncertain rows and
+//! refines it in place — the capacitor state (progressive counts +
+//! cached per-node accumulators) never crosses a thread, and the
+//! escalated rows pay only the `n_high − n_low` incremental samples.
+//! Rows of one stage-1 batch share one filter draw (the paper's
+//! batch-shared sampling), so any subset can be narrowed out.
+//! Escalation groups from *different* stage-1 batches are never
+//! re-batched into one session — instead the stage-2 worker submits
+//! every queued group at once and the engine merges compatible groups
+//! through [`crate::backend::Backend::merge_sessions`], which keeps each
+//! group's capacitor state (and so its logits and billing) bit-identical
+//! to a serial dispatch while sharing one engine pass.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -23,8 +27,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::backend::{int_kernel_factory, pjrt_factory, sim_factory};
-use crate::coordinator::batcher::{run_batcher, BatcherConfig, FormedBatch, Pending};
-use crate::coordinator::engine::{Engine, SessionId};
+use crate::coordinator::batcher::{drain_ready, run_batcher, BatcherConfig, FormedBatch, Pending};
+use crate::coordinator::engine::{Engine, EngineConfig, EngineJob, EngineOutput, SessionId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
 use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy};
@@ -40,6 +44,9 @@ pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     pub policy: EscalationPolicy,
     pub seed: u64,
+    /// Most stage-1 sessions the engine keeps resident for escalation
+    /// (LRU-evicted beyond it; see [`crate::coordinator::engine::EngineConfig`]).
+    pub pool_cap: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -49,8 +56,21 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             policy: EscalationPolicy::default(),
             seed: 7,
+            pool_cap: 32,
         }
     }
+}
+
+/// Which execution path produced a response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServedVia {
+    /// Answered directly from the stage-1 pass (no escalation).
+    Stage1,
+    /// Escalated by narrowing + refining its own pooled stage-1 session.
+    Pooled,
+    /// Escalated through a merged dispatch (several escalation groups
+    /// coalesced into one engine pass).
+    Merged,
 }
 
 /// Final answer for one request.
@@ -69,11 +89,25 @@ pub struct ClassifyResponse {
     pub latency: Duration,
     /// mean last-conv entropy observed at stage 1
     pub entropy: f32,
+    /// Whether the answer came straight from stage 1, from this
+    /// request's own pooled session, or from a merged dispatch.
+    pub served: ServedVia,
 }
 
 struct RequestCtx {
     reply: SyncSender<ClassifyResponse>,
     start: Instant,
+}
+
+/// One escalating request: its reply handle, the stage-1 signal, and
+/// the stage-1 answer kept as the fallback if the escalation cannot run
+/// (e.g. its pooled session was evicted under burst load) — degraded
+/// service beats a dropped reply.
+struct EscTag {
+    req: RequestCtx,
+    entropy: f32,
+    stage1_class: usize,
+    stage1_conf: f32,
 }
 
 /// One stage-1 session's escalations: the rows to narrow the open
@@ -82,7 +116,7 @@ struct EscalationGroup {
     session: SessionId,
     /// Row indices into the stage-1 batch, in reply order.
     rows: Vec<usize>,
-    tags: Vec<(RequestCtx, f32)>,
+    tags: Vec<EscTag>,
 }
 
 /// Handle to a running coordinator.  Threads shut down when the handle
@@ -109,8 +143,10 @@ impl Coordinator {
         let macs_per_image = macs_per_image(&meta);
         let batch = cfg.batcher.batch_size;
         let warm = vec![(cfg.policy.n_low, batch), (cfg.policy.n_high, batch)];
-        let engine =
-            Engine::spawn(pjrt_factory(cfg.artifact_dir.clone(), psb, batch, warm))?;
+        let engine = Engine::spawn_with(
+            pjrt_factory(cfg.artifact_dir.clone(), psb, batch, warm),
+            EngineConfig { pool_cap: cfg.pool_cap },
+        )?;
         Self::start_inner(cfg, engine, image_len, meta.num_classes, macs_per_image, true)
     }
 
@@ -120,7 +156,10 @@ impl Coordinator {
     /// per-node activations).
     pub fn start_sim(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
         let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
-        let engine = Engine::spawn(sim_factory(net, RngKind::Philox))?;
+        let engine = Engine::spawn_with(
+            sim_factory(net, RngKind::Philox),
+            EngineConfig { pool_cap: cfg.pool_cap },
+        )?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
@@ -132,7 +171,10 @@ impl Coordinator {
     /// root cause.
     pub fn start_int(cfg: CoordinatorConfig, net: PsbNetwork) -> Result<Coordinator> {
         let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
-        let engine = Engine::spawn(int_kernel_factory(net, RngKind::Philox))?;
+        let engine = Engine::spawn_with(
+            int_kernel_factory(net, RngKind::Philox),
+            EngineConfig { pool_cap: cfg.pool_cap },
+        )?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
@@ -142,7 +184,7 @@ impl Coordinator {
         image_len: usize,
         num_classes: usize,
         macs_per_image: u64,
-        pad_batches: bool,
+        stateless: bool,
     ) -> Result<Coordinator> {
         let engine = Arc::new(engine);
         let metrics = Arc::new(Metrics::default());
@@ -154,24 +196,29 @@ impl Coordinator {
 
         let mut threads = Vec::new();
 
-        // Stage 2 worker: one engine refine per escalation group.  Each
-        // group is bound to its own stage-1 session (shared filter
-        // draws), so groups dispatch as they arrive.
+        // Stage 2 worker: each escalation group narrows + refines its
+        // own pooled stage-1 session (shared filter draws), so groups
+        // stay bit-identical to serial execution.  The worker drains
+        // every group already queued and submits them to the engine
+        // *together* — the engine's dispatch window can then merge
+        // compatible groups into one backend dispatch.
         {
             let ctx = StageCtx {
                 engine: engine.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr: seed_ctr.clone(),
+                seed0: cfg.seed,
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
-                pad_batches,
+                stateless,
             };
             threads.push(
                 std::thread::Builder::new().name("psb-stage2".into()).spawn(move || {
                     while let Ok(group) = stage2_rx.recv() {
-                        handle_stage2(&ctx, group);
+                        let groups = drain_ready(&stage2_rx, group, 16);
+                        handle_stage2(&ctx, groups);
                     }
                 })?,
             );
@@ -184,10 +231,11 @@ impl Coordinator {
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr,
+                seed0: cfg.seed,
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
-                pad_batches,
+                stateless,
             };
             let scheduler = scheduler.clone();
             let bcfg = cfg.batcher;
@@ -297,14 +345,27 @@ struct StageCtx {
     metrics: Arc<Metrics>,
     policy: EscalationPolicy,
     seed_ctr: Arc<AtomicU64>,
+    /// Base seed of the config (the stateless path derives its epoch
+    /// seeds from it; see below).
+    seed0: u64,
     nc: usize,
     macs: u64,
     image_len: usize,
-    /// PJRT artifacts are compiled for a fixed batch: submit the padded
-    /// stage-1 batch as-is.  The simulator runs (and bills) live rows
-    /// only.
-    pad_batches: bool,
+    /// The backend is stateless (PJRT artifacts): batches are submitted
+    /// padded to the compiled batch size (the simulator runs — and
+    /// bills — live rows only), and stage-1 batches share one seed per
+    /// **epoch** of [`SEED_EPOCH_BATCHES`] consecutive batches.  Merging
+    /// happens inside a dispatch window (burst-local, so the colliding
+    /// groups are near-always same-epoch), which lets cross-batch
+    /// escalation groups coalesce into one padded artifact run
+    /// bit-identically — while the epoch rotation keeps one unlucky
+    /// weight draw from biasing the server for its whole lifetime (the
+    /// failure mode a single fixed seed would have).
+    stateless: bool,
 }
+
+/// Stage-1 batches per shared-seed epoch on stateless backends.
+const SEED_EPOCH_BATCHES: u64 = 16;
 
 fn handle_stage1(
     ctx: &StageCtx,
@@ -316,11 +377,19 @@ fn handle_stage1(
     Metrics::inc(&ctx.metrics.batches);
     Metrics::add(&ctx.metrics.batched_rows, rows as u64);
     Metrics::inc(&ctx.metrics.engine_calls);
-    let seed = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed);
+    // stateful backends draw a fresh filter-sample stream per batch;
+    // stateless backends share one per epoch so concurrent escalation
+    // groups coalesce into shared artifact runs (see StageCtx::stateless)
+    let counter = ctx.seed_ctr.fetch_add(1, Ordering::Relaxed);
+    let seed = if ctx.stateless {
+        ctx.seed0 + counter.wrapping_sub(ctx.seed0) / SEED_EPOCH_BATCHES
+    } else {
+        counter
+    };
     let plan = PrecisionPlan::uniform(ctx.policy.n_low);
     // PJRT artifacts are compiled for the padded batch; the simulator
     // runs (and bills) live rows only
-    let (x1, total_rows) = if ctx.pad_batches {
+    let (x1, total_rows) = if ctx.stateless {
         (batch.x.clone(), batch.x.len() / ctx.image_len)
     } else {
         (batch.x[..rows * ctx.image_len].to_vec(), rows)
@@ -344,6 +413,7 @@ fn handle_stage1(
     Metrics::add(&ctx.metrics.samples_paid, ctx.policy.n_low as u64 * rows as u64);
     Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
     Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
+    ctx.metrics.sync_engine(ctx.engine.stats());
     let session = out.session;
     let exec = out.exec;
     let [_, fh, fw, fc] = exec.feat_shape;
@@ -354,6 +424,8 @@ fn handle_stage1(
     for (row, req) in batch.tags.into_iter().enumerate() {
         let feat = &exec.feat[row * feat_len..(row + 1) * feat_len];
         let entropy = Scheduler::request_entropy(feat, fc);
+        let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
+        let (class, conf) = argmax_conf(p);
         // the scheduler is a PrecisionPolicy: it plans the precision the
         // request should *finish* at; more than stage 1 paid ⇒ escalate
         let target = scheduler
@@ -365,10 +437,8 @@ fn handle_stage1(
             Metrics::inc(&ctx.metrics.escalated);
             ctx.metrics.stage1_latency.record(req.start.elapsed());
             group_rows.push(row);
-            group_tags.push((req, entropy));
+            group_tags.push(EscTag { req, entropy, stage1_class: class, stage1_conf: conf });
         } else {
-            let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
-            let (class, conf) = argmax_conf(p);
             let latency = req.start.elapsed();
             ctx.metrics.latency.record(latency);
             Metrics::inc(&ctx.metrics.completed);
@@ -380,6 +450,7 @@ fn handle_stage1(
                 n_reused: 0,
                 latency,
                 entropy,
+                served: ServedVia::Stage1,
             });
         }
     }
@@ -402,52 +473,107 @@ fn handle_stage1(
     }
 }
 
-fn handle_stage2(ctx: &StageCtx, group: EscalationGroup) {
-    let rows = group.tags.len();
+/// Escalate a window of groups: submit every group's narrow+refine to
+/// the engine *before* waiting on any reply, so the engine's dispatch
+/// window sees them together and can merge compatible groups into one
+/// backend dispatch.  Each group still resolves against its own pooled
+/// stage-1 session — merging never mixes capacitor states.
+fn handle_stage2(ctx: &StageCtx, groups: Vec<EscalationGroup>) {
     let n_low = ctx.policy.n_low;
     let n_high = ctx.policy.n_high;
-    Metrics::inc(&ctx.metrics.batches);
-    Metrics::add(&ctx.metrics.batched_rows, rows as u64);
-    Metrics::inc(&ctx.metrics.engine_calls);
     let plan = PrecisionPlan::uniform(n_high);
-    let out = match ctx.engine.refine_session(group.session, Some(group.rows), plan) {
-        Ok(o) => o,
-        Err(err) => {
-            eprintln!("stage2 engine error: {err:#}");
-            ctx.metrics.record_engine_error(&err);
-            return;
+    let mut inflight: Vec<(EscalationGroup, mpsc::Receiver<Result<EngineOutput>>)> =
+        Vec::with_capacity(groups.len());
+    for group in groups {
+        Metrics::inc(&ctx.metrics.batches);
+        Metrics::add(&ctx.metrics.batched_rows, group.tags.len() as u64);
+        Metrics::inc(&ctx.metrics.engine_calls);
+        let (reply, rx) = mpsc::sync_channel(1);
+        let job = EngineJob::Refine {
+            session: group.session,
+            rows: Some(group.rows.clone()),
+            plan: plan.clone(),
+            keep: false,
+            reply,
+        };
+        match ctx.engine.submit(job) {
+            Ok(()) => inflight.push((group, rx)),
+            Err(err) => fallback_to_stage1(ctx, group, &err),
         }
-    };
-    // accounting only after the pass ran.  The sim backend measured the
-    // true incremental cost of refining the narrowed session; PJRT
-    // (stateless artifacts) reports none and we estimate — still the
-    // incremental share, per the paper's progressive accounting: the
-    // n_low samples from stage 1 are reused, escalation costs only
-    // (n_high − n_low).
-    let estimated = ctx.macs * (n_high - n_low) as u64 * rows as u64;
-    Metrics::add(
-        &ctx.metrics.gated_adds,
-        if out.gated_adds > 0 { out.gated_adds } else { estimated },
-    );
-    Metrics::add(&ctx.metrics.samples_paid, (n_high - n_low) as u64 * rows as u64);
-    Metrics::add(&ctx.metrics.samples_reused, n_low as u64 * rows as u64);
-    Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
-    Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
-    let probs = softmax_rows(&out.exec.logits, ctx.nc);
-    for (row, (req, entropy)) in group.tags.into_iter().enumerate() {
-        let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
-        let (class, conf) = argmax_conf(p);
-        let latency = req.start.elapsed();
+    }
+    for (group, rx) in inflight {
+        let rows = group.tags.len();
+        let out = match rx.recv() {
+            Ok(Ok(o)) => o,
+            Ok(Err(err)) => {
+                fallback_to_stage1(ctx, group, &err);
+                continue;
+            }
+            Err(_) => {
+                let err = anyhow::anyhow!("engine dropped the escalation job");
+                fallback_to_stage1(ctx, group, &err);
+                continue;
+            }
+        };
+        // accounting only after the pass ran.  The sim backend measured
+        // the true incremental cost of refining the narrowed session;
+        // PJRT (stateless artifacts) reports none and we estimate —
+        // still the incremental share, per the paper's progressive
+        // accounting: the n_low samples from stage 1 are reused,
+        // escalation costs only (n_high − n_low).
+        let estimated = ctx.macs * (n_high - n_low) as u64 * rows as u64;
+        Metrics::add(
+            &ctx.metrics.gated_adds,
+            if out.gated_adds > 0 { out.gated_adds } else { estimated },
+        );
+        Metrics::add(&ctx.metrics.samples_paid, (n_high - n_low) as u64 * rows as u64);
+        Metrics::add(&ctx.metrics.samples_reused, n_low as u64 * rows as u64);
+        Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
+        Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
+        ctx.metrics.sync_engine(ctx.engine.stats());
+        let served = if out.merged { ServedVia::Merged } else { ServedVia::Pooled };
+        let probs = softmax_rows(&out.exec.logits, ctx.nc);
+        for (row, tag) in group.tags.into_iter().enumerate() {
+            let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
+            let (class, conf) = argmax_conf(p);
+            let latency = tag.req.start.elapsed();
+            ctx.metrics.latency.record(latency);
+            Metrics::inc(&ctx.metrics.completed);
+            let _ = tag.req.reply.send(ClassifyResponse {
+                class,
+                confidence: conf,
+                escalated: true,
+                n_used: n_high,
+                n_reused: n_low,
+                latency,
+                entropy: tag.entropy,
+                served,
+            });
+        }
+    }
+}
+
+/// An escalation group whose engine pass could not run (pooled session
+/// evicted under burst, engine failure, shutdown) answers with its
+/// stage-1 result instead of dropping the replies: degraded precision,
+/// not degraded availability.  The failure is still counted and its
+/// root cause retained.
+fn fallback_to_stage1(ctx: &StageCtx, group: EscalationGroup, err: &anyhow::Error) {
+    eprintln!("stage2 engine error (serving stage-1 answers): {err:#}");
+    ctx.metrics.record_engine_error(err);
+    for tag in group.tags {
+        let latency = tag.req.start.elapsed();
         ctx.metrics.latency.record(latency);
         Metrics::inc(&ctx.metrics.completed);
-        let _ = req.reply.send(ClassifyResponse {
-            class,
-            confidence: conf,
-            escalated: true,
-            n_used: n_high,
-            n_reused: n_low,
+        let _ = tag.req.reply.send(ClassifyResponse {
+            class: tag.stage1_class,
+            confidence: tag.stage1_conf,
+            escalated: false,
+            n_used: ctx.policy.n_low,
+            n_reused: 0,
             latency,
-            entropy,
+            entropy: tag.entropy,
+            served: ServedVia::Stage1,
         });
     }
 }

@@ -44,7 +44,7 @@ pub mod table2 {
 }
 
 /// Running tally of hardware operations charged by the simulator.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CostCounter {
     /// Gated int16 shift-adds inside capacitor accumulators
     /// (`macs × n_samples` — the PSB currency, Sec. 4.5's "33%" is

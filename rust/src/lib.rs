@@ -42,7 +42,11 @@
 //! simulation), [`backend::IntKernel`] (pure integer shift-add — the
 //! paper's deployment datapath as a CPU reference) and
 //! [`backend::PjrtBackend`] (AOT artifacts, feature `pjrt`).  The
-//! coordinator serves any of them; see `docs/BACKENDS.md`.
+//! coordinator serves any of them from a pooled engine: several stage-1
+//! sessions stay resident per backend, and compatible escalation groups
+//! merge into one dispatch ([`backend::Backend::merge_sessions`])
+//! without disturbing any session's bit-exact progressive identity; see
+//! `docs/BACKENDS.md`.
 //!
 //! See `docs/PRECISION.md` for the precision API design, `DESIGN.md`
 //! for the experiment index and `EXPERIMENTS.md` for measured results.

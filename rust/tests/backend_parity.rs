@@ -726,3 +726,143 @@ fn masked_refine_executed_adds_track_the_mask_fraction() {
         full.costs.gated_adds
     );
 }
+
+// ---- pooled / merged sessions -------------------------------------------
+
+/// The engine's merge contract, at the backend level: N independent
+/// sessions (distinct inputs, distinct seeds, stage-2-style narrows)
+/// merged via `Backend::merge_sessions` and refined as ONE dispatch must
+/// produce, per part, the same logits and the same exact per-row charges
+/// as N serial sessions — on both backends, at any thread count, through
+/// uniform AND masked (spatial) refinement chains.
+#[test]
+fn prop_merged_sessions_refine_bit_identically_to_serial() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let int_1t = IntKernel::new(net.clone()).unwrap().with_threads(1);
+    let int_mt = IntKernel::new(net).unwrap().with_threads(5);
+    let backends: [(&str, &dyn Backend); 3] =
+        [("sim", &sim), ("int-1t", &int_1t), ("int-5t", &int_mt)];
+
+    // three parts: different inputs, different seeds, stage-2-shaped
+    // narrows (None = whole batch)
+    let xs = [batch(101, 2), batch(202, 2), batch(303, 2)];
+    let seeds = [11u64, 22, 33];
+    let narrows: [Option<Vec<usize>>; 3] = [None, Some(vec![0]), Some(vec![1, 0])];
+    // chain: uniform 4 → uniform 8 → spatial (8, 16) over the top rows
+    let mask_for = |rows: usize| top_rows_mask(rows, 8, 8, 0.5);
+    let open_part = |backend: &dyn Backend, i: usize| {
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        sess.begin(&xs[i], seeds[i]).unwrap();
+        if let Some(rows) = &narrows[i] {
+            sess.narrow(rows).unwrap();
+        }
+        sess
+    };
+    for (bname, backend) in backends {
+        // serial oracle: each part (its own input, seed and narrow)
+        // refined on its own, 4 → 8 → 16
+        let mut serial_logits: Vec<Vec<f32>> = Vec::new();
+        let mut serial_steps: Vec<Vec<psb::backend::StepReport>> = Vec::new();
+        for i in 0..3 {
+            let mut sess = open_part(backend, i);
+            let s8 = sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+            let s16 = sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+            serial_steps.push(vec![s8, s16]);
+            serial_logits.push(sess.logits().data.clone());
+        }
+        // merged: same parts, ONE dispatch per refinement step
+        let parts: Vec<Box<dyn InferenceSession>> =
+            (0..3).map(|i| open_part(backend, i)).collect();
+        let part_rows: Vec<usize> =
+            parts.iter().map(|p| p.logits().shape[0]).collect();
+        let mut merged = match backend.merge_sessions(parts).unwrap() {
+            psb::backend::MergeOutcome::Merged(m) => m,
+            psb::backend::MergeOutcome::Unsupported(_) => {
+                panic!("[{bname}] stateful backend must merge same-plan sessions")
+            }
+        };
+        assert_eq!(merged.part_rows(), part_rows, "[{bname}] part extents");
+        for (step_idx, target) in
+            [PrecisionPlan::uniform(8), PrecisionPlan::uniform(16)].iter().enumerate()
+        {
+            merged.refine(target).unwrap();
+            let steps = merged.part_steps();
+            assert_eq!(steps.len(), 3, "[{bname}] one step report per part");
+            for i in 0..3 {
+                assert_eq!(
+                    steps[i].costs, serial_steps[i][step_idx].costs,
+                    "[{bname}] part {i} charge of merged step {step_idx} must equal serial"
+                );
+                assert_eq!(
+                    steps[i].executed_adds, serial_steps[i][step_idx].executed_adds,
+                    "[{bname}] part {i} executed work of merged step {step_idx} must equal serial"
+                );
+            }
+        }
+        // the merged logits are the serial logits, concatenated in part
+        // order — nothing about a part depends on its pool position
+        let want: Vec<f32> = serial_logits.concat();
+        assert_eq!(
+            merged.logits().data, want,
+            "[{bname}] merged 4→8→16 logits must equal the serial concatenation"
+        );
+        // masked chains go through the merged session too when parts
+        // share geometry: verify against two equal-extent parts
+        let eq_parts: Vec<Box<dyn InferenceSession>> = (0..2)
+            .map(|i| {
+                let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+                sess.begin(&xs[i], seeds[i]).unwrap();
+                sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+                sess
+            })
+            .collect();
+        let mut eq_merged = match backend.merge_sessions(eq_parts).unwrap() {
+            psb::backend::MergeOutcome::Merged(m) => m,
+            psb::backend::MergeOutcome::Unsupported(_) => panic!("[{bname}] must merge"),
+        };
+        let masked_target = PrecisionPlan::spatial(mask_for(2), 8, 16);
+        eq_merged.refine(&masked_target).unwrap();
+        let eq_steps = eq_merged.part_steps();
+        let mut serial_cat = Vec::new();
+        for i in 0..2 {
+            let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&xs[i], seeds[i]).unwrap();
+            sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+            let step = sess.refine(&masked_target).unwrap();
+            assert_eq!(
+                eq_steps[i].costs, step.costs,
+                "[{bname}] masked merged charge (part {i}) must equal serial"
+            );
+            serial_cat.extend_from_slice(&sess.logits().data);
+        }
+        assert_eq!(
+            eq_merged.logits().data, serial_cat,
+            "[{bname}] masked merged logits must be the serial concatenation"
+        );
+    }
+}
+
+/// Merging rejects what it cannot keep bit-identical: mismatched plans
+/// hand the sessions back untouched, and the parts keep serving.
+#[test]
+fn merge_rejects_mismatched_plans_and_returns_sessions() {
+    let (_, int) = backend_pair();
+    let x = batch(5, 2);
+    let mut a = int.open(&PrecisionPlan::uniform(4)).unwrap();
+    a.begin(&x, 1).unwrap();
+    let mut b = int.open(&PrecisionPlan::uniform(8)).unwrap();
+    b.begin(&x, 2).unwrap();
+    let direct_a = a.logits().data.clone();
+    match int.merge_sessions(vec![a, b]).unwrap() {
+        psb::backend::MergeOutcome::Merged(_) => {
+            panic!("sessions at different plans must not merge")
+        }
+        psb::backend::MergeOutcome::Unsupported(mut parts) => {
+            assert_eq!(parts.len(), 2, "both sessions hand back");
+            // the returned sessions are intact and still refine
+            assert_eq!(parts[0].logits().data, direct_a);
+            parts[0].refine(&PrecisionPlan::uniform(8)).unwrap();
+        }
+    }
+}

@@ -45,6 +45,7 @@ fn config(disabled: bool) -> CoordinatorConfig {
         batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
         policy: EscalationPolicy { n_low: 2, n_high: 4, disabled, ..Default::default() },
         seed: 3,
+        pool_cap: 32,
     }
 }
 
@@ -156,11 +157,22 @@ fn sim_coordinator_answers_every_request_once() {
         assert_eq!(resp.escalated, resp.n_used == 4);
         // progressive refinement: escalations inherit the stage-1 samples
         assert_eq!(resp.n_reused, if resp.escalated { 2 } else { 0 });
+        // the served-via tag is consistent: direct answers come from
+        // stage 1, escalations from a pooled or merged session
+        assert_eq!(resp.escalated, resp.served != psb::coordinator::ServedVia::Stage1);
         answers += 1;
     }
     assert_eq!(answers, N);
     assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), N as u64);
     assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), N as u64);
+    // the engine pool hosted the stage-1 sessions and the metrics saw it
+    assert!(
+        coord.metrics.pool_peak.load(Ordering::Relaxed) >= 1,
+        "pool peak must register resident stage-1 sessions"
+    );
+    let summary = coord.metrics.summary();
+    assert!(summary.contains("pool="), "summary must surface the pool: {summary}");
+    assert!(summary.contains("merges="), "summary must surface merges: {summary}");
 }
 
 #[test]
@@ -230,6 +242,7 @@ fn int_coordinator_answers_every_request_once() {
         assert!(resp.n_used == 2 || resp.n_used == 4);
         assert_eq!(resp.escalated, resp.n_used == 4);
         assert_eq!(resp.n_reused, if resp.escalated { 2 } else { 0 });
+        assert_eq!(resp.escalated, resp.served != psb::coordinator::ServedVia::Stage1);
         answers += 1;
     }
     assert_eq!(answers, N);

@@ -1,0 +1,500 @@
+//! The pooled engine: several stage-1 sessions resident at once,
+//! stage-2 narrow+refine resolving against the *correct* pooled session
+//! by id, LRU eviction and close with precise error reporting, and
+//! merged dispatch of compatible escalation groups — including the
+//! PJRT-shaped (stateless) merge, where two escalation groups coalesce
+//! into **one** backend execution.
+//!
+//! The stateless backend here is a mock with PJRT's exact session
+//! shape: no capacitor state, `refine` re-executes a pure function of
+//! `(rows, seed, n)`, and `merge_sessions` fuses parts into one run —
+//! so coalescing is observable as a single execution-counter increment
+//! while per-part outputs stay bit-identical to serial re-execution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Result};
+
+use psb::backend::{
+    Backend, CostReport, InferenceSession, MergeOutcome, SimBackend, StepReport,
+};
+use psb::coordinator::{Engine, EngineConfig, EngineJob};
+use psb::precision::PrecisionPlan;
+use psb::rng::Xorshift128Plus;
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+// ---- a PJRT-shaped stateless mock backend -------------------------------
+
+const H: usize = 2;
+const W: usize = 2;
+const C: usize = 1;
+const NC: usize = 2;
+const IMG: usize = H * W * C;
+
+/// The mock's "model": a pure function of one row, its batch seed and
+/// the sample size — exactly the identity a stateless re-execution must
+/// preserve (and the oracle the tests compare merged outputs against).
+fn mock_logit(row: &[f32], seed: u64, n: u32) -> [f32; NC] {
+    let s: f32 = row.iter().sum();
+    [s * n as f32 + seed as f32, s - seed as f32]
+}
+
+#[derive(Clone)]
+struct MockStateless {
+    /// Backend executions performed ("artifact runs").
+    runs: Arc<AtomicU64>,
+    /// Milliseconds each `begin` sleeps — lets a test hold the engine
+    /// busy so follow-up jobs pile into one dispatch window.
+    begin_delay_ms: Arc<AtomicU64>,
+}
+
+fn mock_backend() -> MockStateless {
+    MockStateless {
+        runs: Arc::new(AtomicU64::new(0)),
+        begin_delay_ms: Arc::new(AtomicU64::new(0)),
+    }
+}
+
+struct MockSession {
+    runs: Arc<AtomicU64>,
+    begin_delay_ms: Arc<AtomicU64>,
+    plan: PrecisionPlan,
+    x: Vec<f32>,
+    rows: usize,
+    seed: u64,
+    logits: Tensor,
+    report: CostReport,
+}
+
+impl MockSession {
+    fn execute(&mut self, n: u32) {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let mut data = Vec::with_capacity(self.rows * NC);
+        for r in 0..self.rows {
+            data.extend_from_slice(&mock_logit(&self.x[r * IMG..(r + 1) * IMG], self.seed, n));
+        }
+        self.logits = Tensor::from_vec(data, &[self.rows, NC]);
+        self.report.record(StepReport::default());
+    }
+}
+
+impl InferenceSession for MockSession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        let delay = self.begin_delay_ms.load(Ordering::SeqCst);
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(delay));
+        }
+        self.x = x.data.clone();
+        self.rows = x.shape[0];
+        self.seed = seed;
+        let n = self.plan.uniform_n().ok_or_else(|| anyhow!("mock is uniform-only"))?;
+        self.execute(n);
+        Ok(StepReport::default())
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let n = target.uniform_n().ok_or_else(|| anyhow!("mock is uniform-only"))?;
+        self.execute(n);
+        self.plan = target.clone();
+        Ok(StepReport::default())
+    }
+
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        let mut nx = Vec::with_capacity(rows.len() * IMG);
+        let mut nl = Vec::with_capacity(rows.len() * NC);
+        for &r in rows {
+            anyhow::ensure!(r < self.rows, "row {r} out of range");
+            nx.extend_from_slice(&self.x[r * IMG..(r + 1) * IMG]);
+            nl.extend_from_slice(&self.logits.data[r * NC..(r + 1) * NC]);
+        }
+        self.x = nx;
+        self.rows = rows.len();
+        self.logits = Tensor::from_vec(nl, &[self.rows, NC]);
+        Ok(())
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        None
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Two-plus stateless sessions fused: one execution covers every part's
+/// rows, each under its *own* seed identity.
+struct MockFused {
+    runs: Arc<AtomicU64>,
+    /// `(rows, seed, x)` per part, in order.
+    parts: Vec<(usize, u64, Vec<f32>)>,
+    plan: PrecisionPlan,
+    logits: Tensor,
+    report: CostReport,
+}
+
+impl InferenceSession for MockFused {
+    fn begin(&mut self, _x: &Tensor, _seed: u64) -> Result<StepReport> {
+        Err(anyhow!("fused sessions are merged from begun sessions"))
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let n = target.uniform_n().ok_or_else(|| anyhow!("mock is uniform-only"))?;
+        // the whole point: ONE backend execution for every part
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let mut data = Vec::new();
+        let mut rows = 0usize;
+        for (prows, seed, x) in &self.parts {
+            for r in 0..*prows {
+                data.extend_from_slice(&mock_logit(&x[r * IMG..(r + 1) * IMG], *seed, n));
+            }
+            rows += prows;
+        }
+        self.logits = Tensor::from_vec(data, &[rows, NC]);
+        self.plan = target.clone();
+        let step = StepReport::default();
+        self.report.record(step.clone());
+        Ok(step)
+    }
+
+    fn narrow(&mut self, _rows: &[usize]) -> Result<()> {
+        Err(anyhow!("merged mock sessions are narrowed before the merge"))
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        None
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    fn part_rows(&self) -> Vec<usize> {
+        self.parts.iter().map(|(r, _, _)| *r).collect()
+    }
+
+    fn part_steps(&self) -> Vec<StepReport> {
+        self.parts.iter().map(|_| StepReport::default()).collect()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl Backend for MockStateless {
+    fn name(&self) -> &'static str {
+        "mock-stateless"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        (H, W, C)
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        Ok(Box::new(MockSession {
+            runs: self.runs.clone(),
+            begin_delay_ms: self.begin_delay_ms.clone(),
+            plan: plan.clone(),
+            x: Vec::new(),
+            rows: 0,
+            seed: 0,
+            logits: Tensor::zeros(&[0]),
+            report: CostReport::default(),
+        }))
+    }
+
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        if sessions.len() < 2
+            || !sessions.iter().all(|s| s.as_any().downcast_ref::<MockSession>().is_some())
+        {
+            return Ok(MergeOutcome::Unsupported(sessions));
+        }
+        let mut parts = Vec::with_capacity(sessions.len());
+        let mut data = Vec::new();
+        let mut rows = 0usize;
+        for s in &sessions {
+            let p = s.as_any().downcast_ref::<MockSession>().expect("checked");
+            parts.push((p.rows, p.seed, p.x.clone()));
+            data.extend_from_slice(&p.logits.data);
+            rows += p.rows;
+        }
+        Ok(MergeOutcome::Merged(Box::new(MockFused {
+            runs: self.runs.clone(),
+            parts,
+            plan: sessions[0].plan().clone(),
+            logits: Tensor::from_vec(data, &[rows, NC]),
+            report: CostReport::default(),
+        })))
+    }
+}
+
+fn mock_factory(mock: &MockStateless) -> psb::backend::BackendFactory {
+    let m = mock.clone();
+    Box::new(move || Ok(Box::new(m) as Box<dyn Backend>))
+}
+
+fn image(tag: f32, rows: usize) -> Vec<f32> {
+    (0..rows * IMG).map(|i| tag + i as f32 * 0.25).collect()
+}
+
+fn expect_logits(x: &[f32], rows: &[usize], seed: u64, n: u32) -> Vec<f32> {
+    let mut out = Vec::new();
+    for &r in rows {
+        out.extend_from_slice(&mock_logit(&x[r * IMG..(r + 1) * IMG], seed, n));
+    }
+    out
+}
+
+// ---- pool residency + correct per-session resolution --------------------
+
+#[test]
+fn pool_keeps_sessions_resident_and_stage2_resolves_the_right_one() {
+    let mock = mock_backend();
+    let engine = Engine::spawn(mock_factory(&mock)).unwrap();
+    let plan8 = PrecisionPlan::uniform(8);
+    let (xa, xb, xc) = (image(1.0, 3), image(100.0, 3), image(10_000.0, 3));
+    let a = engine.begin_session(plan8.clone(), xa.clone(), 3, 11).unwrap();
+    let b = engine.begin_session(plan8.clone(), xb.clone(), 3, 22).unwrap();
+    let c = engine.begin_session(plan8, xc, 3, 33).unwrap();
+    assert_eq!(
+        engine.stats().sessions_open(),
+        3,
+        "three stage-1 sessions must be concurrently resident"
+    );
+    // stage-2 shape: narrow the *middle* session to its uncertain rows
+    // and refine — the answer must come from b's state, not a's or c's
+    let out = engine
+        .refine_session(b.session.unwrap(), Some(vec![0, 2]), PrecisionPlan::uniform(16))
+        .unwrap();
+    assert_eq!(out.exec.logits, expect_logits(&xb, &[0, 2], 22, 16));
+    assert_eq!(engine.stats().sessions_open(), 2, "the refined session closed");
+    // a duplicate/late refine of the consumed session names what
+    // happened to it, not "unknown session"
+    let err = engine
+        .refine_session(b.session.unwrap(), None, PrecisionPlan::uniform(16))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("completed refine"),
+        "consumed sessions must be retired with a reason: {msg}"
+    );
+    // the others still resolve correctly afterwards
+    let out_a = engine
+        .refine_session(a.session.unwrap(), None, PrecisionPlan::uniform(16))
+        .unwrap();
+    assert_eq!(out_a.exec.logits, expect_logits(&xa, &[0, 1, 2], 11, 16));
+    let _ = c;
+}
+
+#[test]
+fn sim_pool_narrow_refine_is_bit_identical_to_a_dedicated_engine() {
+    let psb = tiny_psbnet();
+    let engine =
+        Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap();
+    let (h, w, c) = psb.input_hwc;
+    let img = h * w * c;
+    let mk_x = |tag: f32, rows: usize| -> Vec<f32> {
+        (0..rows * img).map(|i| (tag + i as f32 * 0.37).sin().abs()).collect()
+    };
+    let (xa, xb) = (mk_x(0.3, 4), mk_x(5.0, 4));
+    let a = engine.begin_session(PrecisionPlan::uniform(4), xa.clone(), 4, 7).unwrap();
+    let b = engine.begin_session(PrecisionPlan::uniform(4), xb.clone(), 4, 9).unwrap();
+    assert!(engine.stats().sessions_open() >= 2, "two sim sessions resident");
+    let got_b = engine
+        .refine_session(b.session.unwrap(), Some(vec![1, 3]), PrecisionPlan::uniform(8))
+        .unwrap();
+    let got_a = engine
+        .refine_session(a.session.unwrap(), Some(vec![0, 2]), PrecisionPlan::uniform(8))
+        .unwrap();
+    // oracle: a dedicated single-session backend run, same (x, seed)
+    let oracle = |x: &Vec<f32>, seed: u64, rows: Vec<usize>| -> Vec<f32> {
+        let backend = SimBackend::new(psb.clone());
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        sess.begin(&Tensor::from_vec(x.clone(), &[4, h, w, c]), seed).unwrap();
+        sess.narrow(&rows).unwrap();
+        sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+        sess.logits().data.clone()
+    };
+    assert_eq!(got_b.exec.logits, oracle(&xb, 9, vec![1, 3]), "pooled b ≡ serial b");
+    assert_eq!(got_a.exec.logits, oracle(&xa, 7, vec![0, 2]), "pooled a ≡ serial a");
+}
+
+// ---- stateless merge: two escalation groups, one dispatch ---------------
+
+#[test]
+fn stateless_merge_coalesces_two_escalation_groups_into_one_run() {
+    let mock = mock_backend();
+    let engine = Engine::spawn(mock_factory(&mock)).unwrap();
+    let plan8 = PrecisionPlan::uniform(8);
+    let (xa, xb) = (image(1.0, 4), image(50.0, 4));
+    // two stage-1 "batches" → two pooled sessions → two escalation groups
+    let a = engine.begin_session(plan8.clone(), xa.clone(), 4, 5).unwrap();
+    let b = engine.begin_session(plan8.clone(), xb.clone(), 4, 6).unwrap();
+    // hold the engine busy so both refines land in one dispatch window
+    mock.begin_delay_ms.store(80, Ordering::SeqCst);
+    let (blk_reply, blk_rx) = mpsc::sync_channel(1);
+    engine
+        .submit(EngineJob::Begin {
+            plan: plan8,
+            x: image(0.0, 1),
+            batch: 1,
+            seed: 0,
+            keep: false,
+            reply: blk_reply,
+        })
+        .unwrap();
+    let runs_before = mock.runs.load(Ordering::SeqCst);
+    let plan16 = PrecisionPlan::uniform(16);
+    let (reply_a, rx_a) = mpsc::sync_channel(1);
+    engine
+        .submit(EngineJob::Refine {
+            session: a.session.unwrap(),
+            rows: Some(vec![0, 2]),
+            plan: plan16.clone(),
+            keep: false,
+            reply: reply_a,
+        })
+        .unwrap();
+    let (reply_b, rx_b) = mpsc::sync_channel(1);
+    engine
+        .submit(EngineJob::Refine {
+            session: b.session.unwrap(),
+            rows: Some(vec![1, 2, 3]),
+            plan: plan16,
+            keep: false,
+            reply: reply_b,
+        })
+        .unwrap();
+    let blocker = blk_rx.recv().unwrap();
+    mock.begin_delay_ms.store(0, Ordering::SeqCst);
+    let out_a = rx_a.recv().unwrap().unwrap();
+    let out_b = rx_b.recv().unwrap().unwrap();
+    assert!(blocker.is_ok());
+    // one merged dispatch = exactly one backend execution for both
+    // groups (the blocker begin was the only other run)
+    let runs_after = mock.runs.load(Ordering::SeqCst);
+    assert_eq!(
+        runs_after - runs_before,
+        2,
+        "blocker begin (1) + merged escalation (1); serial dispatch would be 3"
+    );
+    assert!(out_a.merged && out_b.merged, "both outputs must be flagged merged");
+    assert_eq!(engine.stats().merges.load(Ordering::SeqCst), 1);
+    assert_eq!(engine.stats().runs_saved.load(Ordering::SeqCst), 1);
+    // bit-identity per group: each part kept its own seed identity
+    assert_eq!(out_a.exec.logits, expect_logits(&xa, &[0, 2], 5, 16));
+    assert_eq!(out_b.exec.logits, expect_logits(&xb, &[1, 2, 3], 6, 16));
+}
+
+// ---- error paths under pooling ------------------------------------------
+
+#[test]
+fn closed_session_ids_are_retired_never_reused() {
+    let mock = mock_backend();
+    let engine = Engine::spawn(mock_factory(&mock)).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap();
+    let id_a = a.session.unwrap();
+    engine.close_session(id_a).unwrap();
+    let err = engine
+        .refine_session(id_a, None, PrecisionPlan::uniform(16))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("was closed"), "refine-after-close must name the close: {msg}");
+    // ids are monotonic: a new session never reuses the closed id
+    let b = engine.begin_session(plan, image(2.0, 2), 2, 2).unwrap();
+    assert!(b.session.unwrap() > id_a, "session ids must never be reused");
+}
+
+#[test]
+fn evicted_sessions_name_the_eviction_in_last_error() {
+    let mock = mock_backend();
+    let engine =
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap();
+    let b = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap();
+    let c = engine.begin_session(plan, image(3.0, 2), 2, 3).unwrap();
+    assert_eq!(engine.stats().sessions_open(), 2, "pool bounded at capacity");
+    assert_eq!(engine.stats().evictions.load(Ordering::SeqCst), 1);
+    // the LRU session (a) was evicted; refining it names the eviction
+    let err = engine
+        .refine_session(a.session.unwrap(), None, PrecisionPlan::uniform(16))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("evicted") && msg.contains("capacity 2"),
+        "eviction must be named with the pool bound: {msg}"
+    );
+    let last = engine.last_error().expect("eviction refine failure is recorded");
+    assert!(last.contains("evicted"), "Engine::last_error must name the eviction: {last}");
+    // the resident sessions still refine fine
+    assert!(engine.refine_session(b.session.unwrap(), None, PrecisionPlan::uniform(16)).is_ok());
+    assert!(engine.refine_session(c.session.unwrap(), None, PrecisionPlan::uniform(16)).is_ok());
+}
+
+#[test]
+fn close_while_queued_does_not_wedge_the_job_loop() {
+    let mock = mock_backend();
+    let engine = Engine::spawn(mock_factory(&mock)).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap();
+    let id = a.session.unwrap();
+    // refine + close queued back-to-back: the refine (queued first)
+    // wins, the close is an idempotent no-op afterwards
+    let (reply, rx) = mpsc::sync_channel(1);
+    engine
+        .submit(EngineJob::Refine {
+            session: id,
+            rows: None,
+            plan: PrecisionPlan::uniform(16),
+            keep: false,
+            reply,
+        })
+        .unwrap();
+    engine.close_session(id).unwrap();
+    assert!(rx.recv().unwrap().is_ok(), "queued refine must still be served");
+    // closing garbage ids must not wedge anything either
+    engine.close_session(9999).unwrap();
+    // the loop is alive and serving
+    let ok = engine.run_once(plan, image(4.0, 2), 2, 9).unwrap();
+    assert_eq!(ok.exec.logits.len(), 2 * NC);
+}
+
+// ---- helpers ------------------------------------------------------------
+
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "pool-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: 2 }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
