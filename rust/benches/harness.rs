@@ -3,6 +3,8 @@
 //!
 //! Used by every `[[bench]]` target via `#[path = "harness.rs"] mod harness;`.
 
+// psb-lint: allow(target-manifest): shared helper included via #[path] by every bench, not a bench target itself
+
 use std::time::{Duration, Instant};
 
 /// Run `f` repeatedly for ~`budget` (after 3 warmup calls) and report.

@@ -1,0 +1,290 @@
+//! A minimal Rust lexer for `psb-lint`: just enough token structure to
+//! match rule patterns without false positives from comments, string
+//! literals, or char literals.
+//!
+//! The lexer is deliberately lossy — it keeps identifiers, literal
+//! *kinds* (int vs float vs string vs char), lifetimes, and single-char
+//! punctuation, each tagged with a 1-based line number.  Comments are
+//! captured separately (the waiver syntax lives in them).  That is all
+//! the rule engine needs; it is not a parser and never will be.
+
+/// One lexed token kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (raw identifiers `r#x` are unescaped to `x`).
+    Ident(String),
+    /// `'a`, `'static`, `'_` in lifetime position.
+    Lifetime,
+    /// Integer literal (any base, any suffix except `f*`).
+    Int,
+    /// Float literal: decimal point, exponent, or an `f32`/`f64` suffix.
+    Float,
+    /// String literal of any flavor (cooked, raw, byte, C).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Any other single character.
+    Punct(char),
+}
+
+/// A token with its source line (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment (line or block, doc or plain), starting on `line`, with the
+/// full source text including its `//` / `/*` introducer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens and comments.  Unterminated constructs consume
+/// to end of input rather than erroring: the linter must never panic on
+/// the code it is judging.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments)
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < cs.len() && cs[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment { line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment { line: start_line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // string literals, incl. b/c/r prefixes and raw `r#"…"#`
+        if let Some(next) = try_string(&cs, i, &mut line, &mut out.tokens) {
+            i = next;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if let Some(&nc) = cs.get(i + 1) {
+                if is_ident_start(nc) && cs.get(i + 2) != Some(&'\'') {
+                    let mut j = i + 1;
+                    while j < cs.len() && is_ident_cont(cs[j]) {
+                        j += 1;
+                    }
+                    out.tokens.push(Token { tok: Tok::Lifetime, line });
+                    i = j;
+                    continue;
+                }
+            }
+            let j = consume_char_like(&cs, i);
+            out.tokens.push(Token { tok: Tok::Char, line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            // raw identifier r#name lexes as `name`
+            if c == 'r' && cs.get(i + 1) == Some(&'#') && cs.get(i + 2).is_some_and(|&x| is_ident_start(x)) {
+                j = i + 2;
+            }
+            let start = j;
+            while j < cs.len() && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token { tok: Tok::Ident(cs[start..j].iter().collect()), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            i = consume_number(&cs, i, line, &mut out.tokens);
+            continue;
+        }
+        out.tokens.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    out
+}
+
+/// Consume a char-like literal starting at the opening quote at `j`;
+/// returns the index one past the closing quote.
+fn consume_char_like(cs: &[char], mut j: usize) -> usize {
+    j += 1;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Try to lex a string literal (with optional `b`/`c`/`r`/`br`/`cr`
+/// prefix) or a byte-char literal at `i`.  Returns the index past the
+/// literal, or `None` when `i` does not start one (e.g. an identifier
+/// that merely begins with `r`).
+fn try_string(cs: &[char], i: usize, line: &mut u32, tokens: &mut Vec<Token>) -> Option<usize> {
+    let mut j = i;
+    let mut raw = false;
+    let mut prefix = 0usize;
+    while prefix < 2 && matches!(cs.get(j), Some(&'b') | Some(&'c') | Some(&'r')) {
+        let is_r = cs[j] == 'r';
+        j += 1;
+        prefix += 1;
+        if is_r {
+            raw = true;
+            break; // `r` ends the prefix
+        }
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while cs.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if cs.get(j) != Some(&'"') {
+            return None; // `r#ident`, or just an identifier starting with r
+        }
+        let tok_line = *line;
+        j += 1;
+        while j < cs.len() {
+            if cs[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes && cs.get(j + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                j += 1 + k;
+                if k == hashes {
+                    break;
+                }
+            } else {
+                if cs[j] == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+        }
+        tokens.push(Token { tok: Tok::Str, line: tok_line });
+        return Some(j);
+    }
+    // byte-char literal b'x'
+    if prefix == 1 && cs[i] == 'b' && cs.get(j) == Some(&'\'') {
+        let end = consume_char_like(cs, j);
+        tokens.push(Token { tok: Tok::Char, line: *line });
+        return Some(end);
+    }
+    if cs.get(j) != Some(&'"') {
+        return None;
+    }
+    let tok_line = *line;
+    j += 1;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '"' => {
+                j += 1;
+                break;
+            }
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    tokens.push(Token { tok: Tok::Str, line: tok_line });
+    Some(j)
+}
+
+/// Consume a numeric literal starting at digit `i`; pushes `Int` or
+/// `Float` and returns the index past it (suffix included).
+fn consume_number(cs: &[char], i: usize, line: u32, tokens: &mut Vec<Token>) -> usize {
+    let mut j = i;
+    if cs[i] == '0' && matches!(cs.get(i + 1), Some(&'x') | Some(&'o') | Some(&'b')) {
+        j = i + 2;
+        while j < cs.len() && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+            j += 1;
+        }
+        tokens.push(Token { tok: Tok::Int, line });
+        return j;
+    }
+    let mut float = false;
+    while j < cs.len() && (cs[j].is_ascii_digit() || cs[j] == '_') {
+        j += 1;
+    }
+    if cs.get(j) == Some(&'.') && cs.get(j + 1).is_some_and(|c| c.is_ascii_digit()) {
+        float = true;
+        j += 1;
+        while j < cs.len() && (cs[j].is_ascii_digit() || cs[j] == '_') {
+            j += 1;
+        }
+    }
+    if matches!(cs.get(j), Some(&'e') | Some(&'E')) {
+        let k = if matches!(cs.get(j + 1), Some(&'+') | Some(&'-')) { j + 2 } else { j + 1 };
+        if cs.get(k).is_some_and(|c| c.is_ascii_digit()) {
+            float = true;
+            j = k;
+            while j < cs.len() && (cs[j].is_ascii_digit() || cs[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    let suffix_start = j;
+    while j < cs.len() && is_ident_cont(cs[j]) {
+        j += 1;
+    }
+    if cs.get(suffix_start) == Some(&'f') {
+        float = true; // f32 / f64 suffix
+    }
+    tokens.push(Token { tok: if float { Tok::Float } else { Tok::Int }, line });
+    j
+}

@@ -1,0 +1,144 @@
+//! The target-manifest consistency rule: every file under `rust/tests`,
+//! `rust/benches`, and `examples` must be named by an explicit
+//! `[[test]]` / `[[bench]]` / `[[example]]` entry in `Cargo.toml`, and
+//! vice versa — this crate keeps its library under `rust/`, so cargo's
+//! auto-discovery is off and a forgotten manifest entry silently stops a
+//! suite from ever running.
+//!
+//! The parser below is a minimal line-oriented scan of the three target
+//! array-of-table kinds; it is not a TOML parser and only needs to
+//! understand the manifest this repo actually writes.
+
+use super::{Finding, RuleId};
+
+/// The three auto-discoverable target kinds we pin explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    Test,
+    Bench,
+    Example,
+}
+
+impl TargetKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TargetKind::Test => "test",
+            TargetKind::Bench => "bench",
+            TargetKind::Example => "example",
+        }
+    }
+
+    /// The directory (repo-relative) whose `.rs` files this kind must
+    /// cover.
+    pub fn dir(self) -> &'static str {
+        match self {
+            TargetKind::Test => "rust/tests",
+            TargetKind::Bench => "rust/benches",
+            TargetKind::Example => "examples",
+        }
+    }
+
+    fn of_section(name: &str) -> Option<TargetKind> {
+        match name {
+            "test" => Some(TargetKind::Test),
+            "bench" => Some(TargetKind::Bench),
+            "example" => Some(TargetKind::Example),
+            _ => None,
+        }
+    }
+}
+
+/// One `path = "…"` binding found under a `[[test]]`-style section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TargetEntry {
+    pub kind: TargetKind,
+    /// The manifest's path value, as written (repo-relative).
+    pub path: String,
+    /// Line of the `path = …` binding in `Cargo.toml` (1-based).
+    pub line: u32,
+}
+
+/// Extract every `[[test]]` / `[[bench]]` / `[[example]]` path from a
+/// `Cargo.toml` source.
+pub fn parse_targets(cargo_toml: &str) -> Vec<TargetEntry> {
+    let mut entries = Vec::new();
+    let mut current: Option<TargetKind> = None;
+    for (idx, raw) in cargo_toml.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+            current = TargetKind::of_section(name.trim());
+            continue;
+        }
+        if line.starts_with('[') {
+            current = None;
+            continue;
+        }
+        let Some(kind) = current else { continue };
+        let Some(value) = line.strip_prefix("path").map(|r| r.trim_start()) else { continue };
+        let Some(value) = value.strip_prefix('=') else { continue };
+        if let Some(path) = unquote(value.trim()) {
+            entries.push(TargetEntry { kind, path, line: idx as u32 + 1 });
+        }
+    }
+    entries
+}
+
+fn unquote(v: &str) -> Option<String> {
+    let v = v.strip_prefix('"')?;
+    let end = v.find('"')?;
+    Some(v[..end].to_string())
+}
+
+/// Cross-check manifest entries against the `.rs` files actually on
+/// disk (`files` holds repo-relative paths, forward slashes).  Returns
+/// one finding per orphan file (at its line 1, so an in-file waiver can
+/// cover it) and per dangling manifest entry (at its `Cargo.toml` line).
+pub fn check(entries: &[TargetEntry], files: &[String]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let Some(kind) = kind_of_file(f) else { continue };
+        if !entries.iter().any(|e| e.path == *f) {
+            out.push(Finding {
+                rule: RuleId::TargetManifest,
+                file: f.clone(),
+                line: 1,
+                message: format!(
+                    "no `[[{}]]` entry in Cargo.toml names this file — it will never build \
+                     or run (add the entry, or waive if it is a helper included via \
+                     `#[path]`)",
+                    kind.as_str()
+                ),
+            });
+        }
+    }
+    for e in entries {
+        if !files.iter().any(|f| *f == e.path) {
+            out.push(Finding {
+                rule: RuleId::TargetManifest,
+                file: "Cargo.toml".to_string(),
+                line: e.line,
+                message: format!(
+                    "`[[{}]]` entry points at `{}`, which does not exist",
+                    e.kind.as_str(),
+                    e.path
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Which target kind a file's directory implies, if any.
+pub fn kind_of_file(path: &str) -> Option<TargetKind> {
+    for kind in [TargetKind::Test, TargetKind::Bench, TargetKind::Example] {
+        if let Some(rest) = path.strip_prefix(kind.dir()) {
+            if rest.starts_with('/') && rest.ends_with(".rs") {
+                return Some(kind);
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,340 @@
+//! `psb-lint`: the in-tree static invariant analyzer behind the
+//! `psb-lint` binary (`cargo run --release --bin psb-lint -- --check`).
+//!
+//! The paper's load-bearing claims are *structural* properties of this
+//! codebase — an integer-only IntKernel datapath, bit-identical
+//! progressive refinement (so nothing nondeterministic may feed logits
+//! or the `charge_rows_exact` billing), and a serving loop that reports
+//! failure instead of unwinding.  `backend_parity` checks them
+//! dynamically; this module checks them statically, so CI fails the
+//! moment a PR reintroduces float contamination, unordered-map
+//! iteration, or a hot-path `unwrap()`.  See `docs/ANALYSIS.md` for the
+//! rule book.
+//!
+//! Design constraints: zero new dependencies (hand-rolled lexer, TOML
+//! target scan, and JSON writer), deterministic output (sorted walk,
+//! ordered findings, `BTreeMap` only), and never panicking on the code
+//! under analysis.
+//!
+//! # Waivers
+//!
+//! Intentional boundary sites are waived in-source:
+//!
+//! ```text
+//! // psb-lint: allow(float-purity): Q16 quantization boundary — input floats become raw i32 here
+//! ```
+//!
+//! A waiver covers findings of that rule on its own line and the next
+//! line.  Waivers are themselves checked: an unknown rule name, a
+//! missing reason, or a waiver that suppresses nothing is an error.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The rule a finding belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// Float tokens / literals in the IntKernel.
+    FloatPurity,
+    /// Unordered maps, wall clocks, OS randomness in result-bearing modules.
+    Determinism,
+    /// Panicking calls on the serving hot path.
+    NoPanic,
+    /// `unsafe` anywhere.
+    Unsafe,
+    /// `[[test]]`/`[[bench]]`/`[[example]]` entries vs files on disk.
+    TargetManifest,
+    /// Problems with the waivers themselves (not waivable).
+    Waiver,
+}
+
+impl RuleId {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::FloatPurity => "float-purity",
+            RuleId::Determinism => "determinism",
+            RuleId::NoPanic => "no-panic",
+            RuleId::Unsafe => "unsafe",
+            RuleId::TargetManifest => "target-manifest",
+            RuleId::Waiver => "waiver",
+        }
+    }
+
+    /// Rules a waiver may name (everything except the waiver meta-rule).
+    fn waivable(name: &str) -> Option<RuleId> {
+        match name {
+            "float-purity" => Some(RuleId::FloatPurity),
+            "determinism" => Some(RuleId::Determinism),
+            "no-panic" => Some(RuleId::NoPanic),
+            "unsafe" => Some(RuleId::Unsafe),
+            "target-manifest" => Some(RuleId::TargetManifest),
+            _ => None,
+        }
+    }
+}
+
+/// One diagnostic: `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.as_str(), self.message)
+    }
+}
+
+/// A parsed `// psb-lint: allow(rule): reason` directive.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub line: u32,
+    pub rule: RuleId,
+    pub used: bool,
+}
+
+/// Lint result for one source file: rule findings (waivers already
+/// applied) plus the waivers found, with their used flags — the
+/// repo-level pass still needs unused `target-manifest` waivers.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+}
+
+/// Lint one file's source text.  `path` must be the repo-relative path
+/// (forward slashes) — it selects which rule scopes apply.
+pub fn lint_source(path: &str, src: &str) -> FileLint {
+    let lx = lexer::lex(src);
+    let mut findings = rules::scan_tokens(path, &lx);
+    let mut waivers: Vec<Waiver> = Vec::new();
+    for c in &lx.comments {
+        match parse_waiver_comment(&c.text) {
+            WaiverParse::None => {}
+            WaiverParse::Ok(rule) => waivers.push(Waiver { line: c.line, rule, used: false }),
+            WaiverParse::Err(msg) => findings.push(Finding {
+                rule: RuleId::Waiver,
+                file: path.to_string(),
+                line: c.line,
+                message: msg,
+            }),
+        }
+    }
+    findings.retain(|f| {
+        if f.rule == RuleId::Waiver {
+            return true;
+        }
+        for w in waivers.iter_mut() {
+            if w.rule == f.rule && (w.line == f.line || w.line + 1 == f.line) {
+                w.used = true;
+                return false;
+            }
+        }
+        true
+    });
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileLint { findings, waivers }
+}
+
+/// [`lint_source`] plus finalized waiver accounting, for tests and
+/// single-file use: any still-unused waiver becomes an error finding.
+pub fn lint_source_complete(path: &str, src: &str) -> Vec<Finding> {
+    let mut fl = lint_source(path, src);
+    flag_unused_waivers(path, &fl.waivers, &mut fl.findings);
+    fl.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    fl.findings
+}
+
+fn flag_unused_waivers(path: &str, waivers: &[Waiver], findings: &mut Vec<Finding>) {
+    for w in waivers {
+        if !w.used {
+            findings.push(Finding {
+                rule: RuleId::Waiver,
+                file: path.to_string(),
+                line: w.line,
+                message: format!(
+                    "waiver for `{}` suppresses nothing — remove it (stale waivers hide \
+                     future regressions)",
+                    w.rule.as_str()
+                ),
+            });
+        }
+    }
+}
+
+enum WaiverParse {
+    /// Not a psb-lint directive at all.
+    None,
+    Ok(RuleId),
+    Err(String),
+}
+
+/// Parse one comment's text for a waiver directive.  The comment text
+/// includes its `//` / `/*` introducer.
+fn parse_waiver_comment(text: &str) -> WaiverParse {
+    let t = text
+        .trim_start_matches(['/', '*', '!'])
+        .trim_end_matches("*/")
+        .trim();
+    let Some(rest) = t.strip_prefix("psb-lint:") else {
+        return WaiverParse::None;
+    };
+    let rest = rest.trim();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return WaiverParse::Err(
+            "malformed psb-lint directive (expected `psb-lint: allow(<rule>): <reason>`)".into(),
+        );
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return WaiverParse::Err(
+            "malformed psb-lint directive (expected `psb-lint: allow(<rule>): <reason>`)".into(),
+        );
+    };
+    let Some(close) = rest.find(')') else {
+        return WaiverParse::Err("unclosed rule name in psb-lint waiver".into());
+    };
+    let name = rest[..close].trim();
+    let Some(rule) = RuleId::waivable(name) else {
+        return WaiverParse::Err(format!(
+            "unknown rule `{name}` in psb-lint waiver (known: float-purity, determinism, \
+             no-panic, unsafe, target-manifest)"
+        ));
+    };
+    let tail = rest[close + 1..].trim();
+    let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return WaiverParse::Err(format!(
+            "waiver for `{name}` has no reason — every waiver must say *why* the invariant \
+             holds (`psb-lint: allow({name}): <reason>`)"
+        ));
+    }
+    WaiverParse::Ok(rule)
+}
+
+/// The directories a repo lint walks for `.rs` sources.
+const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Lint the whole repo rooted at `root`: every `.rs` file under the
+/// scan directories, plus the target-manifest cross-check against
+/// `Cargo.toml`.  Findings come back sorted by `(file, line, rule)`.
+pub fn lint_repo(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut files: Vec<String> = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs(root, &root.join(dir), &mut files)?;
+    }
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut lints: Vec<(String, FileLint)> = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .map_err(|e| anyhow::anyhow!("reading {rel}: {e}"))?;
+        lints.push((rel.clone(), lint_source(rel, &src)));
+    }
+
+    // target-manifest cross-check, honoring in-file waivers anywhere in
+    // the orphan file (orphan findings anchor at line 1)
+    let cargo_path = root.join("Cargo.toml");
+    let cargo = std::fs::read_to_string(&cargo_path)
+        .map_err(|e| anyhow::anyhow!("reading Cargo.toml: {e}"))?;
+    let entries = manifest::parse_targets(&cargo);
+    let target_files: Vec<String> =
+        files.iter().filter(|f| manifest::kind_of_file(f).is_some()).cloned().collect();
+    for mf in manifest::check(&entries, &target_files) {
+        let waived = lints.iter_mut().any(|(rel, fl)| {
+            *rel == mf.file
+                && fl.waivers.iter_mut().any(|w| {
+                    if w.rule == RuleId::TargetManifest {
+                        w.used = true;
+                        true
+                    } else {
+                        false
+                    }
+                })
+        });
+        if !waived {
+            findings.push(mf);
+        }
+    }
+
+    for (rel, mut fl) in lints {
+        flag_unused_waivers(&rel, &fl.waivers, &mut fl.findings);
+        findings.append(&mut fl.findings);
+    }
+    findings.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(findings)
+}
+
+/// Recursively collect `.rs` files under `dir`, as repo-relative
+/// forward-slash paths.  A missing scan directory is fine (empty).
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()),
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Serialize findings as a small JSON report (no serde in this crate).
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            f.rule.as_str(),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        s.push('\n');
+        s.push_str("  ");
+    }
+    s.push_str(&format!("],\n  \"count\": {}\n}}\n", findings.len()));
+    s
+}
+
+fn json_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

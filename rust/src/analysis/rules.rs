@@ -1,0 +1,252 @@
+//! The `psb-lint` rules: repo-specific structural invariants behind the
+//! paper's claims, enforced lexically.
+//!
+//! * **float-purity** — the IntKernel datapath "restricts itself to
+//!   additions of small integers and fixed shifts"; `f32`/`f64` tokens
+//!   and float literals are banned in `rust/src/backend/intkernel/`
+//!   outside waived Q16 quantization boundaries.
+//! * **determinism** — logits, charge accounting, and `Metrics::summary`
+//!   text must be bit-stable across runs: no `HashMap`/`HashSet` (their
+//!   iteration order is seeded per-process), no wall clocks or OS
+//!   randomness outside waived timing-report sites.
+//! * **no-panic** — the serving loop (`coordinator/`, `backend/`) must
+//!   degrade through `Engine::last_error` / `Metrics::engine_errors`,
+//!   not unwind: `unwrap()` / `expect(` / `panic!` / `todo!` /
+//!   `unimplemented!` are banned in non-test code.
+//! * **unsafe** — the repo is `unsafe`-free; keep it that way.
+//!
+//! Rules are lexical on purpose: they catch the *tokens* that introduce
+//! the hazard (a float type ascription, an unordered map name, a
+//! panicking call) and accept that type inference is invisible.  The
+//! waiver mechanism (see [`crate::analysis`]) covers the intentional
+//! boundary sites.
+
+use super::lexer::{Lexed, Tok, Token};
+use super::{Finding, RuleId};
+
+/// Module prefixes (repo-relative, `/`-separated) where float tokens are
+/// banned: the shift-add IntKernel.
+fn in_float_scope(path: &str) -> bool {
+    path.starts_with("rust/src/backend/intkernel/")
+}
+
+/// Modules whose iteration order / clock reads can reach logits, the
+/// `charge_rows_exact` billing, or `Metrics::summary` text.
+fn in_determinism_scope(path: &str) -> bool {
+    const SCOPES: [&str; 6] = [
+        "rust/src/backend/",
+        "rust/src/coordinator/",
+        "rust/src/sim/",
+        "rust/src/precision/",
+        "rust/src/num/",
+        "rust/src/costs/",
+    ];
+    SCOPES.iter().any(|s| path.starts_with(s))
+}
+
+/// Modules on the serving hot path where panicking calls are banned.
+fn in_panic_scope(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator/") || path.starts_with("rust/src/backend/")
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    t.tok == Tok::Punct(c)
+}
+
+fn ident_str(t: &Token) -> Option<&str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// Mark the token ranges covered by `#[test]` / `#[cfg(test)]` items
+/// (including whole `mod tests { … }` bodies) so in-scope rules can skip
+/// test code.  Attribute arguments containing `not` (`#[cfg(not(test))]`)
+/// do not count.
+fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let n = tokens.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if !(is_punct(&tokens[i], '#') && i + 1 < n && is_punct(&tokens[i + 1], '[')) {
+            i += 1;
+            continue;
+        }
+        let close = skip_attr(tokens, i + 1);
+        let attr = &tokens[i + 2..close.saturating_sub(1).max(i + 2)];
+        if !attr_is_test(attr) {
+            i = close;
+            continue;
+        }
+        // swallow any further attributes on the same item
+        let mut k = close;
+        while k + 1 < n && is_punct(&tokens[k], '#') && is_punct(&tokens[k + 1], '[') {
+            k = skip_attr(tokens, k + 1);
+        }
+        // the item extends to the first `;` at brace depth 0, or to the
+        // matching `}` of its first `{`
+        let mut end = k;
+        let mut depth = 0usize;
+        while end < n {
+            if is_punct(&tokens[end], '{') {
+                depth += 1;
+            } else if is_punct(&tokens[end], '}') {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    end += 1;
+                    break;
+                }
+            } else if is_punct(&tokens[end], ';') && depth == 0 {
+                end += 1;
+                break;
+            }
+            end += 1;
+        }
+        for m in mask.iter_mut().take(end).skip(i) {
+            *m = true;
+        }
+        i = end;
+    }
+    mask
+}
+
+/// Given `open` at the `[` of an attribute, return the index one past
+/// its matching `]`.
+fn skip_attr(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < tokens.len() && depth > 0 {
+        if is_punct(&tokens[j], '[') {
+            depth += 1;
+        } else if is_punct(&tokens[j], ']') {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+fn attr_is_test(attr: &[Token]) -> bool {
+    let idents: Vec<&str> = attr.iter().filter_map(ident_str).collect();
+    match idents.first() {
+        Some(&"test") => true,
+        Some(&"cfg") => idents.contains(&"test") && !idents.contains(&"not"),
+        _ => false,
+    }
+}
+
+/// Idents that read OS randomness or a randomly-seeded hasher.
+const RANDOM_SOURCES: [&str; 5] = ["thread_rng", "OsRng", "RandomState", "getrandom", "from_entropy"];
+
+/// Run every token-level rule over one lexed file.  `path` is the
+/// repo-relative path (forward slashes) and selects the rule scopes.
+pub fn scan_tokens(path: &str, lx: &Lexed) -> Vec<Finding> {
+    let toks = &lx.tokens;
+    let tmask = test_mask(toks);
+    let float_scope = in_float_scope(path);
+    let det_scope = in_determinism_scope(path);
+    let panic_scope = in_panic_scope(path);
+    let mut out = Vec::new();
+    let mut push = |rule: RuleId, line: u32, message: String| {
+        out.push(Finding { rule, file: path.to_string(), line, message });
+    };
+    for (i, t) in toks.iter().enumerate() {
+        let in_test = tmask[i];
+        match &t.tok {
+            Tok::Float => {
+                if float_scope && !in_test {
+                    push(
+                        RuleId::FloatPurity,
+                        t.line,
+                        "float literal in the IntKernel (shift-add datapath must stay integer)"
+                            .into(),
+                    );
+                }
+            }
+            Tok::Ident(id) => {
+                if id == "unsafe" {
+                    push(RuleId::Unsafe, t.line, "`unsafe` (this repo is unsafe-free)".into());
+                }
+                if float_scope && !in_test && (id == "f32" || id == "f64") {
+                    push(
+                        RuleId::FloatPurity,
+                        t.line,
+                        format!("`{id}` in the IntKernel (shift-add datapath must stay integer)"),
+                    );
+                }
+                if det_scope && !in_test {
+                    if id == "HashMap" || id == "HashSet" {
+                        push(
+                            RuleId::Determinism,
+                            t.line,
+                            format!(
+                                "`{id}` in a determinism-critical module (iteration order is \
+                                 per-process random; use BTreeMap/BTreeSet or sort keys)"
+                            ),
+                        );
+                    }
+                    if (id == "Instant" || id == "SystemTime")
+                        && is_punct_at(toks, i + 1, ':')
+                        && is_punct_at(toks, i + 2, ':')
+                        && toks.get(i + 3).and_then(ident_str) == Some("now")
+                    {
+                        push(
+                            RuleId::Determinism,
+                            t.line,
+                            format!("`{id}::now` in a determinism-critical module (wall clocks \
+                                     may only feed timing reports; waive such sites)"),
+                        );
+                    }
+                    if RANDOM_SOURCES.contains(&id.as_str()) {
+                        push(
+                            RuleId::Determinism,
+                            t.line,
+                            format!("`{id}` is an OS randomness source (use `crate::rng`)"),
+                        );
+                    }
+                }
+                if panic_scope && !in_test {
+                    let after_dot = i > 0 && is_punct(&toks[i - 1], '.');
+                    if id == "unwrap"
+                        && after_dot
+                        && is_punct_at(toks, i + 1, '(')
+                        && is_punct_at(toks, i + 2, ')')
+                    {
+                        push(
+                            RuleId::NoPanic,
+                            t.line,
+                            "`.unwrap()` on the serving hot path (propagate the error through \
+                             `Engine::last_error` / `Metrics::engine_errors`)"
+                                .into(),
+                        );
+                    }
+                    if id == "expect" && after_dot && is_punct_at(toks, i + 1, '(') {
+                        push(
+                            RuleId::NoPanic,
+                            t.line,
+                            "`.expect(` on the serving hot path (propagate the error, or waive \
+                             with the invariant that makes it unreachable)"
+                                .into(),
+                        );
+                    }
+                    if matches!(id.as_str(), "panic" | "todo" | "unimplemented")
+                        && is_punct_at(toks, i + 1, '!')
+                    {
+                        push(
+                            RuleId::NoPanic,
+                            t.line,
+                            format!("`{id}!` on the serving hot path (return an error instead)"),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn is_punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| is_punct(t, c))
+}

@@ -224,6 +224,7 @@ pub(crate) fn rows_per_chunk(m: usize, threads: usize) -> usize {
 /// chunks fan out over a thread scope.  Every output element is
 /// produced by exactly one worker in a fixed per-element order, so
 /// results are bit-identical for any thread count.
+#[allow(clippy::expect_used)] // waived: re-raises worker panics (see psb-lint waiver below)
 pub(crate) fn par_sum<T, I, F>(mut chunks: I, f: F) -> u64
 where
     T: Send,
@@ -244,6 +245,7 @@ where
             .collect();
         handles
             .into_iter()
+            // psb-lint: allow(no-panic): re-raises a contraction worker's panic — a silently lost partial sum would corrupt charges, which is worse than unwinding
             .map(|h| h.join().expect("contraction worker panicked"))
             .sum()
     })
@@ -444,11 +446,10 @@ fn scalar_row(
                 continue;
             }
             let widx = i * n_out + j;
-            let s = planes.sign[widx];
-            if s == 0.0 {
+            let si = planes.sign[widx] as i64;
+            if si == 0 {
                 continue;
             }
-            let si = s as i64;
             let e = planes.exp[widx] as i32;
             let hi = shifted(v, e + 1);
             let lo = shifted(v, e);
@@ -531,6 +532,7 @@ pub(crate) fn row_rebuilds(prev: Option<&StepPrev>, rebuild: Option<&[bool]>, r:
 /// callers is preserved by construction: the driver performs the exact
 /// op sequence the two hand-copied skeletons used to.
 #[allow(clippy::too_many_arguments)]
+#[allow(clippy::expect_used)] // waived: pack/prev invariants (see psb-lint waivers below)
 pub(crate) fn masked_step_driver<R, D>(
     ctx: &MaskedCtx,
     prev: Option<&StepPrev>,
@@ -582,8 +584,9 @@ where
             let r = r0 + ri;
             let hi = ctx.is_hi(r);
             if row_rebuilds(prev, rebuild, r) {
-                let (a_hi, a_lo) =
-                    if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() }.expect("pack built");
+                let packs = if hi { full_hi_v.as_ref() } else { full_lo_v.as_ref() };
+                // psb-lint: allow(no-panic): both full-level packs are materialized above before any rebuild row runs — silently skipping a rebuild would corrupt charges
+                let (a_hi, a_lo) = packs.expect("pack built");
                 adds += rebuild_row(
                     r,
                     (a_hi.as_slice(), a_lo.as_slice()),
@@ -595,6 +598,7 @@ where
                 tch_c[ri] = true;
                 continue;
             }
+            // psb-lint: allow(no-panic): row_rebuilds() is true whenever prev is None, so a non-rebuild row always has a previous pass — skipping it would corrupt charges
             let p = prev.expect("non-rebuild rows have a previous pass");
             let Some(cb) = &combos[combo_idx(p.is_hi(r), hi)] else {
                 continue; // early finish: nothing moved for this row
@@ -626,6 +630,7 @@ where
 /// finish the rest early.  Adds keep the legacy `touched rows × live`
 /// convention; `row` is the only kernel-specific part (conv
 /// [`scalar_row`] vs the depthwise per-channel walk).
+#[allow(clippy::expect_used)] // waived: prev invariant (see psb-lint waiver below)
 pub(crate) fn masked_scalar_driver(
     ctx: &MaskedCtx,
     prev: Option<&StepPrev>,
@@ -643,6 +648,7 @@ pub(crate) fn masked_scalar_driver(
     for r in 0..m {
         let hi = ctx.is_hi(r);
         if !row_rebuilds(prev, rebuild, r) {
+            // psb-lint: allow(no-panic): row_rebuilds() is true whenever prev is None, so a non-rebuild row always has a previous pass — skipping it would corrupt charges
             let p = prev.expect("non-rebuild rows have a previous pass");
             if !moved[combo_idx(p.is_hi(r), hi)] {
                 continue;
@@ -766,11 +772,10 @@ fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
         if dk == 0 {
             continue;
         }
-        let s = planes.sign[widx];
-        if s == 0.0 {
+        let si = planes.sign[widx] as i64;
+        if si == 0 {
             continue;
         }
-        let si = s as i64;
         let e = planes.exp[widx] as i32;
         let i = widx / n_out;
         let j = widx % n_out;

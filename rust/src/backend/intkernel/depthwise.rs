@@ -211,15 +211,14 @@ fn dw_scalar_row(
         let (mut a, mut d) = (0i64, 0i64);
         for tap in 0..kk {
             let widx = tap * c + ci;
-            let s = planes.sign[widx];
-            if s == 0.0 {
+            let si = planes.sign[widx] as i64;
+            if si == 0 {
                 continue;
             }
             let v = xrow[tap * c + ci];
             if v == 0 {
                 continue;
             }
-            let si = s as i64;
             let e = planes.exp[widx] as i32;
             let hi = shifted(v, e + 1);
             let lo = shifted(v, e);
@@ -268,11 +267,10 @@ fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
         if dk == 0 {
             continue;
         }
-        let s = planes.sign[widx];
-        if s == 0.0 {
+        let si = planes.sign[widx] as i64;
+        if si == 0 {
             continue;
         }
-        let si = s as i64;
         let e = planes.exp[widx] as i32;
         let tap = widx / c;
         let ci = widx % c;

@@ -85,7 +85,7 @@ pub mod contract;
 pub mod depthwise;
 pub mod pack;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -223,7 +223,7 @@ impl Backend for IntKernel {
             state: None,
             batch: 0,
             outs: Vec::new(),
-            caps: HashMap::new(),
+            caps: BTreeMap::new(),
             logits: Tensor::zeros(&[0]),
             feat: None,
             report: CostReport::default(),
@@ -285,7 +285,7 @@ struct IntSession {
     /// Raw Q16-scale activation per node (i32: residual adds may exceed
     /// the i16 range before the next capacitor saturates them).
     outs: Vec<Vec<i32>>,
-    caps: HashMap<usize, CapCache>,
+    caps: BTreeMap<usize, CapCache>,
     logits: Tensor,
     feat: Option<Tensor>,
     report: CostReport,
@@ -371,6 +371,7 @@ impl IntSession {
     /// consistent with its counts — a subsequent valid refine resumes
     /// bit-identically (regression-tested in `tests/backend_parity.rs`).
     fn run_pass(&mut self, target: &PrecisionPlan, fresh_x: Option<&Tensor>) -> Result<StepReport> {
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = Instant::now();
         check_plan(&self.net, target)?;
         let net = self.net.clone();
@@ -381,7 +382,9 @@ impl IntSession {
         target
             .validate(net.num_capacitors, Some(b * h0 * w0))
             .map_err(anyhow::Error::new)?;
-        let state = self.state.as_mut().expect("caller ensured begin ran");
+        let Some(state) = self.state.as_mut() else {
+            bail!("pass before begin (session holds no progressive state)");
+        };
         let (kind, seed) = (state.kind, state.seed);
         let mut step = StepReport {
             layer_adds: vec![0; net.num_capacitors],
@@ -419,6 +422,7 @@ impl IntSession {
                             .data
                             .iter()
                             .map(|&v| {
+                                // psb-lint: allow(float-purity): Q16 quantization boundary — external f32 input becomes raw i32 here
                                 (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
                             })
                             .collect();
@@ -437,7 +441,9 @@ impl IntSession {
                     unit_idx += 1;
                     let kk = planes.shape[0];
                     debug_assert_eq!(planes.shape[1], *cout);
-                    let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
+                    let Some(pp) = packed_all[idx].as_ref() else {
+                        bail!("capacitor node {idx} has no packed planes (corrupt construction)");
+                    };
                     let (out_shape, m, geom): (Vec<usize>, usize, CapGeom) = match conv {
                         Some((k, stride)) => {
                             let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
@@ -461,8 +467,10 @@ impl IntSession {
                     let in_mask = masks[in_idx].clone();
                     let out_mask = in_mask.as_ref().map(|mk| pool_regions(mk, &geom, m));
                     let splits = in_mask.is_some() && n_hi > n_lo;
-                    let row_hi_new: &[bool] =
-                        if splits { out_mask.as_deref().expect("masked") } else { &[] };
+                    let row_hi_new: &[bool] = match out_mask.as_deref() {
+                        Some(mk) if splits => mk,
+                        _ => &[],
+                    };
                     let (is_dirty, ch) = cap_node_pass(
                         &mut self.caps,
                         &mut self.outs,
@@ -490,7 +498,9 @@ impl IntSession {
                     cap_layer += 1;
                     let unit = unit_idx;
                     unit_idx += 1;
-                    let pp = packed_all[idx].as_ref().expect("capacitor packed at construction");
+                    let Some(pp) = packed_all[idx].as_ref() else {
+                        bail!("capacitor node {idx} has no packed planes (corrupt construction)");
+                    };
                     let (bb, hh, ww) = (in_shape[0], in_shape[1], in_shape[2]);
                     let ho = hh.div_ceil(*stride);
                     let wo = ww.div_ceil(*stride);
@@ -503,8 +513,10 @@ impl IntSession {
                     let in_mask = masks[in_idx].clone();
                     let out_mask = in_mask.as_ref().map(|mk| pool_regions(mk, &geom, m));
                     let splits = in_mask.is_some() && n_hi > n_lo;
-                    let row_hi_new: &[bool] =
-                        if splits { out_mask.as_deref().expect("masked") } else { &[] };
+                    let row_hi_new: &[bool] = match out_mask.as_deref() {
+                        Some(mk) if splits => mk,
+                        _ => &[],
+                    };
                     let (is_dirty, ch) = cap_node_pass(
                         &mut self.caps,
                         &mut self.outs,
@@ -563,21 +575,25 @@ impl IntSession {
                     // exactly so the backends stay bit-comparable (raw
                     // Q16 values are exact in f32)
                     let src = &self.outs[in_idx];
+                    // psb-lint: allow(float-purity): GAP mirrors the simulator's f32 mean bit-exactly (raw Q16 values are exact in f32)
                     let mut mean = vec![0.0f32; bb * cc];
                     for bi in 0..bb {
                         for p in 0..hh * ww {
                             let at = (bi * hh * ww + p) * cc;
                             for ci in 0..cc {
+                                // psb-lint: allow(float-purity): GAP mirrors the simulator's f32 mean bit-exactly
                                 mean[bi * cc + ci] += src[at + ci] as f32 / SCALE;
                             }
                         }
                         for ci in 0..cc {
+                            // psb-lint: allow(float-purity): GAP mirrors the simulator's f32 mean bit-exactly
                             mean[bi * cc + ci] /= (hh * ww) as f32;
                         }
                     }
                     self.outs[idx] = mean
                         .iter()
                         .map(|&v| {
+                            // psb-lint: allow(float-purity): GAP re-quantizes its f32 mean back to raw Q16
                             (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
                         })
                         .collect();
@@ -599,7 +615,10 @@ impl IntSession {
             masks.push(mask);
         }
         self.batch = b;
-        self.logits = raw_to_tensor(self.outs.last().expect("network has nodes"), shapes.last().unwrap());
+        let (Some(last_out), Some(last_shape)) = (self.outs.last(), shapes.last()) else {
+            bail!("network has no nodes");
+        };
+        self.logits = raw_to_tensor(last_out, last_shape);
         self.feat = net
             .feat_node
             .map(|i| raw_to_tensor(&self.outs[i], &shapes[i]));
@@ -615,11 +634,12 @@ impl IntSession {
 /// propagation.
 #[allow(clippy::too_many_arguments)]
 fn cap_node_pass(
-    caps: &mut HashMap<usize, CapCache>,
+    caps: &mut BTreeMap<usize, CapCache>,
     outs: &mut [Vec<i32>],
     (idx, in_idx): (usize, usize),
     planes: &PsbPlanes,
     pp: &PackedPlanes,
+    // psb-lint: allow(float-purity): bias arrives as f32 from the shared network and is quantized to raw Q16 below
     bias: &[f32],
     geom: &CapGeom,
     (m, n_out): (usize, usize),
@@ -679,8 +699,12 @@ fn cap_node_pass(
         // uniform O(Δ) capacitor update: ΔA = Δn·D + Σ Δk·(H−L)
         step.delta_updated += 1;
         let counts = state.units[unit].counts_lo();
-        let (prev_lo, _) = prev_counts.as_ref().expect("incremental snapshots the base track");
-        let cache = caps.get_mut(&idx).expect("incremental requires a cache");
+        let Some((prev_lo, _)) = prev_counts.as_ref() else {
+            bail!("incremental delta path without a counts snapshot");
+        };
+        let Some(cache) = caps.get_mut(&idx) else {
+            bail!("incremental delta path without a cached charge");
+        };
         let ctx = contract::CapCtx {
             planes,
             packed: pp,
@@ -705,14 +729,16 @@ fn cap_node_pass(
         // row-masked step: rebuild the changed-input rows, delta the
         // rows whose region/track moved, finish the rest early
         step.delta_updated += 1;
-        let (prev_lo, prev_hi_snap) =
-            prev_counts.as_ref().expect("incremental snapshots the base track");
+        let Some((prev_lo, prev_hi_snap)) = prev_counts.as_ref() else {
+            bail!("incremental masked path without a counts snapshot");
+        };
         let prev_hi: &[u32] = prev_hi_snap.as_deref().unwrap_or(prev_lo);
         let counts_lo = state.units[unit].counts_lo();
         let counts_hi = state.units[unit].counts_hi();
-        let cache = caps.get_mut(&idx).expect("incremental requires a cache");
-        if reb_any {
-            let rb = reb.as_deref().expect("reb_any implies a rebuild-row mask");
+        let Some(cache) = caps.get_mut(&idx) else {
+            bail!("incremental masked path without a cached charge");
+        };
+        if let (true, Some(rb)) = (reb_any, reb.as_deref()) {
             let x = &outs[in_idx];
             match geom {
                 CapGeom::Conv { k, stride, dims } | CapGeom::Depthwise { k, stride, dims } => {
@@ -878,6 +904,7 @@ fn cap_node_pass(
 }
 
 fn raw_to_tensor(raw: &[i32], shape: &[usize]) -> Tensor {
+    // psb-lint: allow(float-purity): Q16 dequantization boundary — raw i32 charges leave the kernel as f32 tensors
     Tensor::from_vec(raw.iter().map(|&v| v as f32 / SCALE).collect(), shape)
 }
 

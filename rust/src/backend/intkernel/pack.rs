@@ -62,12 +62,12 @@ impl PackedPlanes {
         let mut nnz = 0u64;
         for i in 0..kdim {
             for j in 0..n_out {
-                let s = planes.sign[i * n_out + j];
-                if s == 0.0 {
+                let s = planes.sign[i * n_out + j] as i8;
+                if s == 0 {
                     continue;
                 }
                 nnz += 1;
-                sign[j * kdim + i] = s as i8;
+                sign[j * kdim + i] = s;
                 exp[j * kdim + i] = planes.exp[i * n_out + j] as i16;
                 live[j * words + i / 64] |= 1u64 << (i % 64);
             }

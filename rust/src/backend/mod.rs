@@ -34,6 +34,12 @@
 //! [`BackendFactory`] on a dedicated thread; see `docs/BACKENDS.md` for
 //! the trait contract, the session lifecycle, and how to pick a backend.
 
+// Backends run on the serving hot path: failures must propagate as
+// `Result` (surfacing through `Engine::last_error`), never unwind.
+// psb-lint's no-panic rule enforces this lexically; the scoped clippy
+// lints keep the compiler enforcing it too (CI runs `-D warnings`).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod intkernel;
 pub mod merged;
 pub mod pjrt;

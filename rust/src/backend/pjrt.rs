@@ -111,35 +111,15 @@ impl Backend for PjrtBackend {
         if sessions.len() < 2 {
             return Ok(MergeOutcome::Unsupported(sessions));
         }
-        let compatible = sessions.iter().all(|s| {
-            s.as_any().downcast_ref::<PjrtSession>().is_some_and(|p| {
-                p.x.is_some()
-                    && sessions[0]
-                        .as_any()
-                        .downcast_ref::<PjrtSession>()
-                        .is_some_and(|first| p.n_applied == first.n_applied)
-            })
-        });
-        if !compatible {
+        let Some((parts, x, plan, n_applied)) = fuse_parts(&sessions) else {
             return Ok(MergeOutcome::Unsupported(sessions));
-        }
-        let mut parts = Vec::with_capacity(sessions.len());
-        let mut x = Vec::new();
-        let mut plan = None;
-        let mut n_applied = 0;
-        for s in &sessions {
-            let p = s.as_any().downcast_ref::<PjrtSession>().expect("checked above");
-            parts.push(FusedPart { rows: p.batch, seed: p.seed });
-            x.extend_from_slice(p.x.as_ref().expect("checked above"));
-            plan.get_or_insert_with(|| p.plan.clone());
-            n_applied = p.n_applied;
-        }
+        };
         let mut fused = PjrtFused {
             rt: self.rt.clone(),
             psb: self.psb.clone(),
             pad_to: self.pad_to,
             image: self.image,
-            plan: plan.expect("at least two parts"),
+            plan,
             n_applied,
             parts,
             x,
@@ -153,6 +133,28 @@ impl Backend for PjrtBackend {
         fused.assemble_from(&sessions)?;
         Ok(MergeOutcome::Merged(Box::new(fused)))
     }
+}
+
+/// Gather the fused-merge inputs from a compatible set of PJRT
+/// sessions: every part begun (holds its input) and all at the same
+/// applied `n`.  `None` means the set cannot merge bit-identically and
+/// the caller falls back to serial dispatch.
+#[allow(clippy::type_complexity)]
+fn fuse_parts(
+    sessions: &[Box<dyn InferenceSession>],
+) -> Option<(Vec<FusedPart>, Vec<f32>, PrecisionPlan, u32)> {
+    let first = sessions.first()?.as_any().downcast_ref::<PjrtSession>()?;
+    let mut parts = Vec::with_capacity(sessions.len());
+    let mut x = Vec::new();
+    for s in sessions {
+        let p = s.as_any().downcast_ref::<PjrtSession>()?;
+        if p.n_applied != first.n_applied {
+            return None;
+        }
+        parts.push(FusedPart { rows: p.batch, seed: p.seed });
+        x.extend_from_slice(p.x.as_ref()?);
+    }
+    Some((parts, x, first.plan.clone(), first.n_applied))
 }
 
 /// One artifact inference.  Stateless on the artifact side: the session
@@ -178,7 +180,9 @@ impl PjrtSession {
     /// Execute the `n`-sample module over the session rows, padding to
     /// the artifact batch when the session was narrowed below it.
     fn execute(&mut self, n: u32) -> Result<Execution> {
-        let x = self.x.as_ref().expect("caller ensured begin ran");
+        let Some(x) = self.x.as_ref() else {
+            return Err(anyhow!("pass before begin (session holds no input)"));
+        };
         let rows = self.batch;
         let img_len = self.image * self.image * 3;
         let exec = if rows < self.pad_to {
@@ -193,7 +197,7 @@ impl PjrtSession {
         Ok(exec)
     }
 
-    fn store(&mut self, exec: Execution, n: u32, elapsed_ns: u64) {
+    fn store(&mut self, exec: Execution, n: u32, elapsed_ns: u64) -> StepReport {
         let nc = if self.batch > 0 { exec.logits.len() / self.batch } else { 0 };
         self.logits = Tensor::from_vec(exec.logits, &[self.batch, nc.max(1)]);
         let [fb, fh, fw, fc] = exec.feat_shape;
@@ -202,7 +206,9 @@ impl PjrtSession {
         // stateless artifacts measure no gated adds; record the step
         // (wall time only) for bookkeeping (the coordinator estimates
         // hardware costs geometrically, still incremental per Sec. 4.5)
-        self.report.record(StepReport { elapsed_ns, ..Default::default() });
+        let step = StepReport { elapsed_ns, ..Default::default() };
+        self.report.record(step.clone());
+        step
     }
 }
 
@@ -231,10 +237,10 @@ impl InferenceSession for PjrtSession {
         self.x = Some(x.data.clone());
         self.seed = seed as u32;
         let n = self.pending_n;
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = std::time::Instant::now();
         let exec = self.execute(n)?;
-        self.store(exec, n, t0.elapsed().as_nanos() as u64);
-        Ok(self.report.last_step().expect("just recorded").clone())
+        Ok(self.store(exec, n, t0.elapsed().as_nanos() as u64))
     }
 
     fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
@@ -249,11 +255,12 @@ impl InferenceSession for PjrtSession {
                 want: n,
             }));
         }
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = std::time::Instant::now();
         let exec = self.execute(n)?;
-        self.store(exec, n, t0.elapsed().as_nanos() as u64);
+        let step = self.store(exec, n, t0.elapsed().as_nanos() as u64);
         self.plan = target.clone();
-        Ok(self.report.last_step().expect("just recorded").clone())
+        Ok(step)
     }
 
     fn narrow(&mut self, rows: &[usize]) -> Result<()> {
@@ -263,7 +270,9 @@ impl InferenceSession for PjrtSession {
             return Err(anyhow!("row {bad} out of range (batch {old_b})"));
         }
         let img_len = self.image * self.image * 3;
-        let x = self.x.take().expect("begun session holds its input");
+        let Some(x) = self.x.take() else {
+            return Err(anyhow!("narrow before begin (session holds no input)"));
+        };
         let mut nx = Vec::with_capacity(rows.len() * img_len);
         for &r in rows {
             nx.extend_from_slice(&x[r * img_len..(r + 1) * img_len]);
@@ -387,6 +396,7 @@ impl InferenceSession for PjrtFused {
             }));
         }
         let img_len = self.image * self.image * 3;
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = std::time::Instant::now();
         // part indices per distinct seed, first-appearance order
         let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
@@ -413,6 +423,7 @@ impl InferenceSession for PjrtFused {
                 );
             }
             let rows: usize = members.iter().map(|&i| self.parts[i].rows).sum();
+            // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
             let g0 = std::time::Instant::now();
             let exec = self.run_rows(n, &gx, rows, *seed)?;
             // the group's wall time lands on its first member so the

@@ -109,9 +109,11 @@ struct SimSession {
 
 impl SimSession {
     fn run(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = std::time::Instant::now();
-        let x = self.x.as_ref().expect("caller ensured begin ran");
-        let state = self.state.as_mut().expect("caller ensured begin ran");
+        let (Some(x), Some(state)) = (self.x.as_ref(), self.state.as_mut()) else {
+            return Err(anyhow!("pass before begin (session holds no input/state)"));
+        };
         let (out, stats) = self
             .net
             .refine_cached(x, state, target, &mut self.cache)
@@ -163,7 +165,9 @@ impl InferenceSession for SimSession {
         if let Some(&bad) = rows.iter().find(|&&r| r >= old_b) {
             return Err(anyhow!("row {bad} out of range (batch {old_b})"));
         }
-        let x = self.x.take().expect("begun session holds its input");
+        let Some(x) = self.x.take() else {
+            return Err(anyhow!("narrow before begin (session holds no input)"));
+        };
         self.x = Some(gather_blocks(&x, rows, old_b));
         self.cache.narrow(rows, old_b);
         if !self.logits.is_empty() {

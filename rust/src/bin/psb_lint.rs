@@ -1,0 +1,81 @@
+//! `psb-lint` — the repo's static invariant gate.
+//!
+//! ```text
+//! psb-lint [--root DIR] [--json FILE] [--check]
+//! ```
+//!
+//! Walks `rust/src`, `rust/benches`, `rust/tests`, and `examples` under
+//! the repo root and enforces the invariants in `docs/ANALYSIS.md`:
+//! float purity of the IntKernel, determinism of everything that feeds
+//! logits / charges / metrics text, a panic-free serving path, the
+//! zero-`unsafe` budget, and Cargo.toml target-manifest consistency.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/IO error.  `--check` is
+//! the CI spelling of the default behavior (kept explicit so the gate
+//! reads as a gate); `--json FILE` additionally writes the findings as
+//! a machine-readable report, clean or not.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use psb::analysis;
+
+struct Args {
+    root: PathBuf,
+    json: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut root = PathBuf::from(".");
+    let mut json = None;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--root" => {
+                root = PathBuf::from(argv.next().ok_or("--root needs a directory")?);
+            }
+            "--json" => {
+                json = Some(PathBuf::from(argv.next().ok_or("--json needs a file path")?));
+            }
+            "--check" => {} // the default behavior, spelled out
+            "--help" | "-h" => {
+                return Err("usage: psb-lint [--root DIR] [--json FILE] [--check]".into());
+            }
+            other => return Err(format!("unknown argument `{other}` (try --help)")),
+        }
+    }
+    Ok(Args { root, json })
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match analysis::lint_repo(&args.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("psb-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &args.json {
+        if let Err(e) = std::fs::write(path, analysis::to_json(&findings)) {
+            eprintln!("psb-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("psb-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("psb-lint: {} finding(s)", findings.len());
+        ExitCode::from(1)
+    }
+}

@@ -87,6 +87,7 @@ pub fn run_batcher<T>(
             }
         } else {
             let deadline = hold[0].enqueued + cfg.linger;
+            // psb-lint: allow(determinism): linger-deadline clock — batching policy timing only, never feeds logits or billing
             let now = Instant::now();
             if hold.len() >= cfg.batch_size || now >= deadline {
                 dispatch(form(&mut hold, cfg.batch_size, image_len));
@@ -134,7 +135,7 @@ mod tests {
         let feeder = std::thread::spawn(move || feed(tx));
         let mut batches = Vec::new();
         run_batcher(rx, cfg, image_len, |b| batches.push(b));
-        feeder.join().unwrap();
+        assert!(feeder.join().is_ok(), "feeder thread panicked");
         batches
     }
 
@@ -143,8 +144,8 @@ mod tests {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
         let batches = collect_batches(cfg, 2, |tx| {
             for i in 0..8usize {
-                tx.send(Pending { image: vec![i as f32; 2], enqueued: Instant::now(), tag: i })
-                    .unwrap();
+                let p = Pending { image: vec![i as f32; 2], enqueued: Instant::now(), tag: i };
+                assert!(tx.send(p).is_ok(), "batcher hung up early");
             }
         });
         assert_eq!(batches.len(), 2);
@@ -157,7 +158,8 @@ mod tests {
     fn linger_flushes_partial_batch_with_padding() {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) };
         let batches = collect_batches(cfg, 3, |tx| {
-            tx.send(Pending { image: vec![1.0; 3], enqueued: Instant::now(), tag: 7u8 }).unwrap();
+            let p = Pending { image: vec![1.0; 3], enqueued: Instant::now(), tag: 7u8 };
+            assert!(tx.send(p).is_ok(), "batcher hung up early");
             // keep the channel open past the linger deadline
             std::thread::sleep(Duration::from_millis(40));
         });
@@ -172,7 +174,8 @@ mod tests {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
         let batches = collect_batches(cfg, 1, |tx| {
             for i in 0..6u8 {
-                tx.send(Pending { image: vec![0.0], enqueued: Instant::now(), tag: i }).unwrap();
+                let p = Pending { image: vec![0.0], enqueued: Instant::now(), tag: i };
+                assert!(tx.send(p).is_ok(), "batcher hung up early");
             }
         });
         let total: usize = batches.iter().map(|b| b.tags.len()).sum();

@@ -22,7 +22,7 @@
 //! Closed and evicted session ids are never reused, and a `Refine`
 //! against one names what happened to it.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -138,10 +138,10 @@ pub struct EngineOutput {
 /// `Refine` names what happened instead of "unknown session".
 struct SessionPool {
     cap: usize,
-    slots: HashMap<SessionId, Box<dyn InferenceSession>>,
+    slots: BTreeMap<SessionId, Box<dyn InferenceSession>>,
     /// Least recently used first.
     lru: VecDeque<SessionId>,
-    retired: HashMap<SessionId, String>,
+    retired: BTreeMap<SessionId, String>,
     next_id: SessionId,
     stats: Arc<EngineStats>,
 }
@@ -150,9 +150,9 @@ impl SessionPool {
     fn new(cap: usize, stats: Arc<EngineStats>) -> SessionPool {
         SessionPool {
             cap: cap.max(1),
-            slots: HashMap::new(),
+            slots: BTreeMap::new(),
             lru: VecDeque::new(),
-            retired: HashMap::new(),
+            retired: BTreeMap::new(),
             next_id: 1,
             stats,
         }
@@ -285,7 +285,7 @@ impl Engine {
                         b
                     }
                     Err(e) => {
-                        *fail_worker.lock().unwrap() = Some(format!("{e:#}"));
+                        *crate::coordinator::lock_unpoisoned(&fail_worker) = Some(format!("{e:#}"));
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
@@ -328,8 +328,9 @@ impl Engine {
                                                 Ok(out)
                                             }
                                             Err(e) => {
-                                                *fail_worker.lock().unwrap() =
-                                                    Some(format!("{e:#}"));
+                                                *crate::coordinator::lock_unpoisoned(
+                                                    &fail_worker,
+                                                ) = Some(format!("{e:#}"));
                                                 Err(e)
                                             }
                                         };
@@ -370,7 +371,7 @@ impl Engine {
 
     /// Most recent backend/session failure observed by the engine.
     pub fn last_error(&self) -> Option<String> {
-        self.fail.lock().unwrap().clone()
+        crate::coordinator::lock_unpoisoned(&self.fail).clone()
     }
 
     /// Live pool / merge counters.
@@ -470,7 +471,7 @@ fn dispatch_refines(
             match take_and_narrow(pool, &req) {
                 Ok(sess) => ready.push((req, sess)),
                 Err(e) => {
-                    *fail.lock().unwrap() = Some(format!("{e:#}"));
+                    *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
                     let _ = req.reply.send(Err(e));
                 }
             }
@@ -505,7 +506,7 @@ fn dispatch_refines(
                     }
                     Err(e) => {
                         let msg = format!("{e:#}");
-                        *fail.lock().unwrap() = Some(msg.clone());
+                        *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
                         for req in reqs {
                             pool.retire(
                                 req.session,
@@ -526,7 +527,7 @@ fn dispatch_refines(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                *fail.lock().unwrap() = Some(msg.clone());
+                *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
                 for req in reqs {
                     let _ = req.reply.send(Err(anyhow!("session merge failed: {msg}")));
                 }
@@ -537,7 +538,7 @@ fn dispatch_refines(
         match take_and_narrow(pool, &req) {
             Ok(sess) => refine_in_hand(pool, req, sess, fail),
             Err(e) => {
-                *fail.lock().unwrap() = Some(format!("{e:#}"));
+                *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -590,7 +591,7 @@ fn refine_in_hand(
                 req.session,
                 format!("session {} was dropped by a failed refine: {e:#}", req.session),
             );
-            *fail.lock().unwrap() = Some(format!("{e:#}"));
+            *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
             Err(e)
         }
     };

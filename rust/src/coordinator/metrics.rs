@@ -105,7 +105,7 @@ impl Metrics {
     /// Record an engine failure: bump the counter and keep the message.
     pub fn record_engine_error(&self, err: &anyhow::Error) {
         Self::inc(&self.engine_errors);
-        *self.last_engine_error.lock().unwrap() = Some(format!("{err:#}"));
+        *crate::coordinator::lock_unpoisoned(&self.last_engine_error) = Some(format!("{err:#}"));
     }
 
     /// Mirror the engine's live pool/merge counters into the serving
@@ -196,6 +196,34 @@ mod tests {
         Metrics::add(&m.batches, 2);
         Metrics::add(&m.batched_rows, 12);
         assert!((m.batch_occupancy() - 6.0).abs() < 1e-9);
+    }
+
+    /// Identical counter histories must render the identical summary
+    /// string — the textual face of the determinism invariant (psb-lint
+    /// bans unordered maps and clocks from everything feeding it).
+    #[test]
+    fn summary_text_is_stable_across_runs() {
+        let build = || {
+            let m = Metrics::default();
+            Metrics::add(&m.requests, 100);
+            Metrics::add(&m.completed, 100);
+            Metrics::add(&m.escalated, 35);
+            Metrics::add(&m.batches, 20);
+            Metrics::add(&m.batched_rows, 100);
+            Metrics::add(&m.samples_paid, 1000);
+            Metrics::add(&m.samples_reused, 280);
+            Metrics::add(&m.executed_adds, 123_456);
+            Metrics::add(&m.backend_ns, 5_000_000);
+            Metrics::add(&m.pool_sessions, 3);
+            Metrics::add(&m.pool_peak, 7);
+            Metrics::add(&m.merges, 4);
+            m.latency.record(Duration::from_micros(300));
+            m.latency.record(Duration::from_micros(900));
+            m.summary()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        assert!(a.contains("requests=100"), "{a}");
     }
 
     #[test]

@@ -33,6 +33,12 @@
 //!   refining* the stage-1 session — batch-level computational attention
 //!   with the network itself as the proposal mechanism.
 
+// The serving loop reports failure through `Engine::last_error` /
+// `Metrics::engine_errors` instead of unwinding; psb-lint's no-panic
+// rule enforces that lexically, and these scoped clippy lints keep the
+// compiler enforcing it too (CI runs clippy with `-D warnings`).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -44,3 +50,14 @@ pub use engine::{Engine, EngineConfig, EngineJob, EngineOutput, EngineStats, Ses
 pub use metrics::Metrics;
 pub use scheduler::{EscalationPolicy, SchedulerStats};
 pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, ServedVia};
+
+/// Lock a mutex, recovering the data of a poisoned lock: the values
+/// guarded here (failure strings, scheduler state) stay meaningful after
+/// a peer thread's panic, and the serving path must keep reporting
+/// errors rather than start unwinding itself.
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

@@ -178,7 +178,7 @@ mod tests {
     }
 
     #[test]
-    fn scheduler_is_a_precision_policy() {
+    fn scheduler_is_a_precision_policy() -> Result<(), PlanError> {
         let mut s = Scheduler::new(EscalationPolicy {
             n_low: 8,
             n_high: 16,
@@ -189,11 +189,12 @@ mod tests {
         assert!(matches!(s.plan(&signal_less_ctx()), Err(PlanError::MissingSignal)));
         // warm the EWMA on a low-entropy stream, then a spike escalates
         for _ in 0..20 {
-            let plan = s.plan(&PlanContext::for_request(0.5)).unwrap();
+            let plan = s.plan(&PlanContext::for_request(0.5))?;
             assert_eq!(plan.uniform_n(), Some(8));
         }
-        let plan = s.plan(&PlanContext::for_request(5.0)).unwrap();
+        let plan = s.plan(&PlanContext::for_request(5.0))?;
         assert_eq!(plan.uniform_n(), Some(16), "entropy spike must escalate");
+        Ok(())
     }
 
     /// A context with no entropy signal at all.

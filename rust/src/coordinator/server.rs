@@ -272,16 +272,18 @@ impl Coordinator {
         let (reply, rx) = mpsc::sync_channel(1);
         self.stage1_tx
             .send(Pending {
-                image,
+                // psb-lint: allow(determinism): submit-time latency clock — feeds the latency histograms only, never logits or billing
                 enqueued: Instant::now(),
+                // psb-lint: allow(determinism): submit-time latency clock — feeds the latency histograms only, never logits or billing
                 tag: RequestCtx { reply, start: Instant::now() },
+                image,
             })
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
         Ok(rx)
     }
 
     pub fn scheduler_stats(&self) -> SchedulerStats {
-        self.scheduler.lock().unwrap().stats
+        crate::coordinator::lock_unpoisoned(&self.scheduler).stats
     }
 }
 
@@ -428,11 +430,15 @@ fn handle_stage1(
         let (class, conf) = argmax_conf(p);
         // the scheduler is a PrecisionPolicy: it plans the precision the
         // request should *finish* at; more than stage 1 paid ⇒ escalate
-        let target = scheduler
-            .lock()
-            .unwrap()
+        let target = crate::coordinator::lock_unpoisoned(scheduler)
             .plan(&PlanContext::for_request(entropy))
-            .expect("request context carries the entropy signal");
+            .unwrap_or_else(|e| {
+                // a scheduler that cannot plan must not kill the
+                // request: record the failure and serve the stage-1
+                // answer un-escalated
+                ctx.metrics.record_engine_error(&anyhow::Error::new(e));
+                PrecisionPlan::uniform(ctx.policy.n_low)
+            });
         if target.max_n() > ctx.policy.n_low {
             Metrics::inc(&ctx.metrics.escalated);
             ctx.metrics.stage1_latency.record(req.start.elapsed());

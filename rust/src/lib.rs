@@ -51,6 +51,7 @@
 //! See `docs/PRECISION.md` for the precision API design, `DESIGN.md`
 //! for the experiment index and `EXPERIMENTS.md` for measured results.
 
+pub mod analysis;
 pub mod attention;
 pub mod backend;
 pub mod coordinator;

@@ -29,7 +29,7 @@
 //!   "ResNet50 modified" variance blow-up of Sec. 4.3,
 //! * the bit-exact integer datapath (Eq. 9) for cross-validation.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::costs::CostCounter;
 use crate::num::{discretize_prob, quantize_f32, quantize_slice, PsbPlanes, PsbWeight, Q16};
@@ -127,7 +127,7 @@ pub struct SimCache {
     /// split (region structure is part of the reuse key).
     had_mask: Vec<bool>,
     /// im2col lowering per conv node index: `(cols, ho, wo)`.
-    cols: HashMap<usize, (Tensor, usize, usize)>,
+    cols: BTreeMap<usize, (Tensor, usize, usize)>,
 }
 
 impl SimCache {

@@ -1,0 +1,305 @@
+//! `psb-lint` self-tests: lexer unit tests, one fixture per rule proving
+//! it fires (with the right `file:line`), waiver semantics, the
+//! target-manifest cross-check, and finally the linter run over this
+//! repo itself — which must come back clean under the shipped waivers.
+
+use psb::analysis::lexer::{lex, Tok};
+use psb::analysis::manifest::{check, parse_targets, TargetKind};
+use psb::analysis::{lint_repo, lint_source_complete, to_json, Finding, RuleId};
+
+// ---------------------------------------------------------------- lexer
+
+#[test]
+fn lexer_separates_comments_from_tokens() {
+    let lx = lex("// leading\nlet x = 1; // trailing\n");
+    assert_eq!(lx.comments.len(), 2);
+    assert_eq!(lx.comments[0].line, 1);
+    assert_eq!(lx.comments[0].text, "// leading");
+    assert_eq!(lx.comments[1].line, 2);
+    let idents: Vec<_> = lx
+        .tokens
+        .iter()
+        .filter_map(|t| match &t.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(idents, ["let", "x"]);
+}
+
+#[test]
+fn lexer_handles_nested_block_comments() {
+    let lx = lex("/* a /* nested */ b */ let y = 2;");
+    assert_eq!(lx.comments.len(), 1);
+    assert!(lx.comments[0].text.contains("nested"));
+    assert!(matches!(lx.tokens[0].tok, Tok::Ident(ref s) if s == "let"));
+}
+
+#[test]
+fn lexer_raw_strings_hide_their_contents() {
+    // a raw string whose *contents* look like a comment and a waiver —
+    // neither may surface as a Comment
+    let src = r##"let s = r#"// psb-lint: allow(unsafe): not real"#;"##;
+    let lx = lex(src);
+    assert!(lx.comments.is_empty(), "raw string leaked a comment");
+    assert_eq!(lx.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 1);
+}
+
+#[test]
+fn lexer_strings_hide_their_contents() {
+    let lx = lex(r#"let s = "HashMap::new() // not a comment"; let b = b"x";"#);
+    assert!(lx.comments.is_empty());
+    assert_eq!(lx.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 2);
+    // the HashMap inside the string must NOT be an ident token
+    assert!(!lx
+        .tokens
+        .iter()
+        .any(|t| matches!(&t.tok, Tok::Ident(s) if s == "HashMap")));
+}
+
+#[test]
+fn lexer_chars_vs_lifetimes() {
+    let lx = lex(r"fn f<'a>(c: char) { let x = 'x'; let n = '\n'; }");
+    assert_eq!(lx.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count(), 1);
+    assert_eq!(lx.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 2);
+}
+
+#[test]
+fn lexer_float_vs_int_literals() {
+    let lx = lex("let a = 1; let b = 1.5; let c = 1e3; let d = 2f32; let e = 0x1F; let g = 1.max(2);");
+    let floats = lx.tokens.iter().filter(|t| t.tok == Tok::Float).count();
+    let ints = lx.tokens.iter().filter(|t| t.tok == Tok::Int).count();
+    assert_eq!(floats, 3, "1.5, 1e3, 2f32");
+    assert_eq!(ints, 4, "1, 0x1F, 1 (recv of .max), 2");
+}
+
+#[test]
+fn lexer_line_numbers_are_accurate() {
+    let lx = lex("let a = 1;\n\nlet b = 2.0;\n");
+    let float = lx.tokens.iter().find(|t| t.tok == Tok::Float).unwrap();
+    assert_eq!(float.line, 3);
+}
+
+// ------------------------------------------------------------ rule fixtures
+
+fn rules_of(findings: &[Finding]) -> Vec<(RuleId, u32)> {
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+#[test]
+fn float_purity_fires_in_the_intkernel() {
+    let src = "fn quantize(x: f32) -> i32 {\n    (x * 65536.0) as i32\n}\n";
+    let f = lint_source_complete("rust/src/backend/intkernel/fake.rs", src);
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::FloatPurity, 1), (RuleId::FloatPurity, 2)],
+        "{f:?}"
+    );
+    assert!(
+        f[0].to_string().starts_with("rust/src/backend/intkernel/fake.rs:1: [float-purity]"),
+        "{}",
+        f[0]
+    );
+    // the same source outside the IntKernel is fine
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn float_purity_skips_test_code() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x = 1.0f32; }\n}\n";
+    let f = lint_source_complete("rust/src/backend/intkernel/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    // …but #[cfg(not(test))] code is NOT test code
+    let src = "#[cfg(not(test))]\nmod prod {\n    fn t() { let x = 1.0f32; }\n}\n";
+    let f = lint_source_complete("rust/src/backend/intkernel/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::FloatPurity, 3)], "{f:?}");
+}
+
+#[test]
+fn determinism_bans_unordered_maps_and_clocks() {
+    let src = "use std::collections::HashMap;\nfn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::Determinism, 1), (RuleId::Determinism, 3)],
+        "{f:?}"
+    );
+    // `Instant` without `::now` (type position, elapsed()) is fine
+    assert!(f.iter().all(|x| x.line != 2));
+    // out of scope: runtime/ is lookup-only
+    let f = lint_source_complete("rust/src/runtime/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn determinism_bans_os_randomness() {
+    let src = "fn seed() -> u64 {\n    let h = std::collections::hash_map::RandomState::new();\n    0\n}\n";
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::Determinism, 2)], "{f:?}");
+}
+
+#[test]
+fn no_panic_fires_on_the_hot_path() {
+    let src = r#"fn serve() {
+    let v: Option<u32> = None;
+    v.unwrap();
+    v.expect("boom");
+    panic!("down");
+}
+"#;
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::NoPanic, 3), (RuleId::NoPanic, 4), (RuleId::NoPanic, 5)],
+        "{f:?}"
+    );
+    assert!(f[0].message.contains("unwrap"), "{}", f[0].message);
+    // identical code off the hot path is not flagged
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn no_panic_skips_test_code_and_non_calls() {
+    let src = "#[test]\nfn t() {\n    Some(1).unwrap();\n}\nfn unwrap() {}\nfn prod() { unwrap(); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    // the free function `unwrap()` (no receiver dot) is not a finding
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn unsafe_is_banned_everywhere_even_in_tests() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t() { let p = unsafe { 1 }; }\n}\n";
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::Unsafe, 3)], "{f:?}");
+}
+
+// ---------------------------------------------------------------- waivers
+
+#[test]
+fn waiver_suppresses_next_line_and_same_line() {
+    let src = "// psb-lint: allow(float-purity): Q16 boundary, floats stop here\nfn q(x: f32) -> i32 { x as i32 }\n";
+    let f = lint_source_complete("rust/src/backend/intkernel/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    let src = "use std::collections::HashMap; // psb-lint: allow(determinism): keys sorted before iteration\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn waiver_does_not_reach_two_lines_down() {
+    let src = "// psb-lint: allow(float-purity): too far away\n\nfn q(x: f32) -> i32 { x as i32 }\n";
+    let f = lint_source_complete("rust/src/backend/intkernel/fake.rs", src);
+    // the f32 finding survives AND the waiver is flagged as unused
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::Waiver, 1), (RuleId::FloatPurity, 3)],
+        "{f:?}"
+    );
+}
+
+#[test]
+fn waiver_without_reason_is_an_error() {
+    let src = "// psb-lint: allow(determinism)\nuse std::collections::HashMap;\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    // reasonless waiver does not suppress; it errors, and the HashMap still fires
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::Waiver, 1), (RuleId::Determinism, 2)],
+        "{f:?}"
+    );
+    assert!(f[0].message.contains("no reason"), "{}", f[0].message);
+}
+
+#[test]
+fn waiver_with_unknown_rule_is_an_error() {
+    let src = "// psb-lint: allow(speed): because fast\nfn f() {}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::Waiver, 1)], "{f:?}");
+    assert!(f[0].message.contains("unknown rule `speed`"), "{}", f[0].message);
+}
+
+#[test]
+fn unused_waiver_is_an_error() {
+    let src = "// psb-lint: allow(no-panic): nothing here panics (exactly!)\nfn calm() {}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::Waiver, 1)], "{f:?}");
+    assert!(f[0].message.contains("suppresses nothing"), "{}", f[0].message);
+}
+
+#[test]
+fn waiver_meta_rule_is_not_waivable() {
+    let src = "// psb-lint: allow(waiver): meta\nfn f() {}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::Waiver, 1)], "{f:?}");
+    assert!(f[0].message.contains("unknown rule `waiver`"), "{}", f[0].message);
+}
+
+// --------------------------------------------------------- target manifest
+
+#[test]
+fn manifest_parses_target_sections() {
+    let cargo = "[package]\nname = \"x\"\n\n[[bench]]\nname = \"a\"\npath = \"rust/benches/a.rs\"\n\n[[test]]\nname = \"b\"\npath = \"rust/tests/b.rs\"\n\n[[example]]\nname = \"c\"\npath = \"examples/c.rs\"\n";
+    let entries = parse_targets(cargo);
+    assert_eq!(entries.len(), 3);
+    assert_eq!(entries[0].kind, TargetKind::Bench);
+    assert_eq!(entries[0].path, "rust/benches/a.rs");
+    assert_eq!(entries[0].line, 6);
+    assert_eq!(entries[2].kind, TargetKind::Example);
+}
+
+#[test]
+fn manifest_flags_orphans_and_dangling_entries() {
+    let cargo = "[[bench]]\nname = \"a\"\npath = \"rust/benches/a.rs\"\n\n[[test]]\nname = \"b\"\npath = \"rust/tests/missing.rs\"\n";
+    let entries = parse_targets(cargo);
+    let files = vec!["rust/benches/a.rs".to_string(), "rust/benches/orphan.rs".to_string()];
+    let f = check(&entries, &files);
+    assert_eq!(f.len(), 2, "{f:?}");
+    // the orphan bench file, anchored at its line 1
+    assert_eq!(f[0].rule, RuleId::TargetManifest);
+    assert_eq!(f[0].file, "rust/benches/orphan.rs");
+    assert_eq!(f[0].line, 1);
+    assert!(f[0].message.contains("[[bench]]"), "{}", f[0].message);
+    // the dangling manifest entry, anchored at its Cargo.toml line
+    assert_eq!(f[1].file, "Cargo.toml");
+    assert_eq!(f[1].line, 7);
+    assert!(f[1].message.contains("rust/tests/missing.rs"), "{}", f[1].message);
+}
+
+// ------------------------------------------------------------------- json
+
+#[test]
+fn json_report_shape() {
+    let f = vec![Finding {
+        rule: RuleId::Determinism,
+        file: "rust/src/x.rs".into(),
+        line: 7,
+        message: "a \"quoted\" reason".into(),
+    }];
+    let j = to_json(&f);
+    assert!(j.contains("\"rule\": \"determinism\""), "{j}");
+    assert!(j.contains("\"line\": 7"), "{j}");
+    assert!(j.contains("a \\\"quoted\\\" reason"), "{j}");
+    assert!(j.contains("\"count\": 1"), "{j}");
+    assert!(to_json(&[]).contains("\"count\": 0"));
+}
+
+// -------------------------------------------------------------- self-test
+
+/// The linter over this repo itself: every invariant the rules encode
+/// must actually hold, with every intentional boundary site explicitly
+/// waived.  This is the same check CI's `lint` job runs via the binary.
+#[test]
+fn repo_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_repo(root).expect("lint_repo walk failed");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(
+        findings.is_empty(),
+        "psb-lint found {} issue(s) in the repo (listed above)",
+        findings.len()
+    );
+}
