@@ -1,0 +1,174 @@
+//! Temporal delta streaming bench: `rebase_input` vs a fresh `begin`
+//! on drifting frames — emits machine-readable `BENCH_stream.json`.
+//!
+//! Simulates a fixed camera: consecutive frames agree except for a
+//! moving band covering a fraction of the image's pixel rows.  One
+//! IntKernel session is begun once and then *rebased* frame after frame
+//! (alternating between two drifted variants, so every rebase sees the
+//! same changed fraction); the baseline pays a fresh `begin` per frame.
+//! Measured per changed-fraction ∈ {0.05, 0.25, 1.0}:
+//!
+//! * ns/frame of the rebase vs the fresh pass;
+//! * executed accumulator adds of each (the O(Δ) claim: rebase work
+//!   follows the changed rows + conv halo, not the frame);
+//! * a bit-identity + billing gate before timing (rebase logits and
+//!   charge must equal the fresh begin's).
+//!
+//! Flags / env:
+//! * `--quick` or `PSB_BENCH_QUICK=1` — small batch + short budget (CI
+//!   smoke mode);
+//! * `--check` — exit non-zero unless the 5%-changed rebase beats the
+//!   fresh begin in BOTH executed adds and ns/frame (the CI gate).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use psb::backend::{Backend, InferenceSession as _, IntKernel};
+use psb::precision::PrecisionPlan;
+use psb::rng::{Rng, Xorshift128Plus};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+use psb::sim::tensor::Tensor;
+
+fn main() {
+    let quick = std::env::var("PSB_BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick");
+    let check = std::env::args().any(|a| a == "--check");
+    let budget = Duration::from_millis(if quick { 200 } else { 600 });
+    let batch = if quick { 2 } else { 4 };
+    let image = 32usize;
+    let img = image * image * 3;
+
+    let mut rng = Xorshift128Plus::seed_from(21);
+    let mut net = psb::models::by_name("resnet_mini", image, &mut rng);
+    let x0 = Tensor::from_vec(
+        (0..batch * img).map(|_| rng.uniform()).collect(),
+        &[batch, image, image, 3],
+    );
+    for _ in 0..3 {
+        net.forward::<Xorshift128Plus>(&x0, true, None);
+    }
+    let psb_net = PsbNetwork::prepare(&net, PsbOptions::default());
+    let kernel = IntKernel::new(psb_net).expect("bench net is integer-expressible");
+    let plan = PrecisionPlan::uniform(16);
+
+    // a frame whose top `rows_changed` pixel rows drifted by `delta`
+    let drift = |rows_changed: usize, delta: f32| -> Tensor {
+        let mut x = x0.clone();
+        for b in 0..batch {
+            for v in x.data[b * img..b * img + rows_changed * image * 3].iter_mut() {
+                *v = (*v + delta).fract();
+            }
+        }
+        x
+    };
+
+    // fresh-begin baseline: the cost every frame pays without rebase
+    let mut fresh_exec = 0u64;
+    let mut seed = 50u64;
+    let fresh_mean = harness::bench(&format!("[stream] fresh begin b{batch}"), budget, || {
+        seed += 1;
+        let mut sess = kernel.open(&plan).unwrap();
+        let step = sess.begin(&x0, seed).unwrap();
+        fresh_exec = step.executed_adds;
+        std::hint::black_box(step.executed_adds);
+    });
+    let fresh_ns = fresh_mean.as_nanos() as f64 / batch as f64;
+
+    let fractions = [0.05f64, 0.25, 1.0];
+    let mut rows_json = Vec::new();
+    let mut rebase_005_ns = f64::INFINITY;
+    let mut rebase_005_adds = u64::MAX;
+    for (fi, &frac) in fractions.iter().enumerate() {
+        let rows_changed = ((image as f64 * frac).round() as usize).clamp(1, image);
+        let xa = drift(rows_changed, 0.31);
+        let xb = drift(rows_changed, 0.62);
+
+        // bit-identity + billing gate before timing: rebase ≡ fresh begin
+        {
+            let mut sess = kernel.open(&plan).unwrap();
+            sess.begin(&x0, 7).unwrap();
+            let step = sess.rebase_input(&xa).unwrap();
+            let mut fresh = kernel.open(&plan).unwrap();
+            let fresh_step = fresh.begin(&xa, 7).unwrap();
+            assert_eq!(
+                sess.logits().data,
+                fresh.logits().data,
+                "[stream] rebase logits diverged from a fresh begin (frac {frac:.2})"
+            );
+            assert_eq!(
+                step.costs, fresh_step.costs,
+                "[stream] rebase must bill exactly a fresh pass (frac {frac:.2})"
+            );
+        }
+
+        // steady-state streaming: one session, frames alternating xa↔xb
+        // (every rebase sees the same changed band)
+        let mut sess = kernel.open(&plan).unwrap();
+        sess.begin(&x0, 7).unwrap();
+        let mut flip = false;
+        let mut exec = 0u64;
+        let mut charged = 0u64;
+        let mean =
+            harness::bench(&format!("[stream] rebase frac {frac:.2} b{batch}"), budget, || {
+                flip = !flip;
+                let frame = if flip { &xa } else { &xb };
+                let step = sess.rebase_input(frame).unwrap();
+                exec = step.executed_adds;
+                charged = step.costs.gated_adds;
+                std::hint::black_box(step.executed_adds);
+            });
+        let ns = mean.as_nanos() as f64 / batch as f64;
+        if fi == 0 {
+            rebase_005_ns = ns;
+            rebase_005_adds = exec;
+        }
+        println!(
+            "[stream] frac {frac:.2} ({rows_changed}/{image} rows): rebase {ns:.0} ns/frame, \
+             executed {exec} adds, charged {charged} (fresh: {fresh_ns:.0} ns/frame, \
+             {fresh_exec} adds)"
+        );
+        rows_json.push(format!(
+            "    {{\"fraction\": {frac:.2}, \"rows_changed\": {rows_changed}, \
+             \"rebase_ns_per_frame\": {ns:.1}, \"rebase_executed_adds\": {exec}, \
+             \"charged_adds\": {charged}}}"
+        ));
+    }
+
+    let speedup = fresh_ns / rebase_005_ns.max(1.0);
+    let adds_ratio = rebase_005_adds as f64 / fresh_exec.max(1) as f64;
+    println!(
+        "[stream] 5%-changed rebase: {speedup:.2}x faster than fresh begin, \
+         executes {:.1}% of its adds",
+        adds_ratio * 100.0
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"stream_delta\",\n  \"quick\": {quick},\n  \"batch\": {batch},\n  \
+         \"image\": {image},\n  \"plan_n\": 16,\n  \
+         \"fresh\": {{\"ns_per_frame\": {fresh_ns:.1}, \"executed_adds\": {fresh_exec}}},\n  \
+         \"speedup_005_vs_fresh\": {speedup:.3},\n  \
+         \"adds_ratio_005_vs_fresh\": {adds_ratio:.4},\n  \"rebase\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
+
+    if check {
+        assert!(
+            rebase_005_adds < fresh_exec,
+            "5%-changed rebase must execute fewer adds than a fresh begin: \
+             {rebase_005_adds} vs {fresh_exec}"
+        );
+        assert!(
+            rebase_005_ns < fresh_ns,
+            "5%-changed rebase must be faster than a fresh begin: \
+             {rebase_005_ns:.0} vs {fresh_ns:.0} ns/frame"
+        );
+        println!(
+            "check OK: 5%-changed rebase {speedup:.2}x vs fresh begin \
+             ({:.1}% of its executed adds)",
+            adds_ratio * 100.0
+        );
+    }
+}

@@ -84,6 +84,7 @@
 pub mod contract;
 pub mod depthwise;
 pub mod pack;
+mod stream;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -99,6 +100,8 @@ use crate::sim::psbnet::{collapse_mask_rows, or_masks, pool_mask, PsbNetwork, Ps
 use crate::sim::tensor::Tensor;
 
 use super::{Backend, CostReport, InferenceSession, MergeOutcome, StepReport};
+
+use stream::InputMode;
 
 pub use contract::Contraction;
 pub use pack::PackedPlanes;
@@ -370,15 +373,22 @@ impl IntSession {
     /// a non-monotonic target) leaves every earlier layer's cache
     /// consistent with its counts — a subsequent valid refine resumes
     /// bit-identically (regression-tested in `tests/backend_parity.rs`).
-    fn run_pass(&mut self, target: &PrecisionPlan, fresh_x: Option<&Tensor>) -> Result<StepReport> {
+    fn run_pass(&mut self, target: &PrecisionPlan, input: InputMode) -> Result<StepReport> {
         // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
         let t0 = Instant::now();
         check_plan(&self.net, target)?;
         let net = self.net.clone();
         let packed_all = self.packed.clone();
         let (mode, threads) = (self.mode, self.threads);
+        // A rebased frame is billed as a fresh begin: every row pays from
+        // zero up to its region's n, regardless of what the previous
+        // frame's charge already held (see `stream`).
+        let bill_fresh = matches!(input, InputMode::Rebase(_));
         let (h0, w0, c0) = net.input_hwc;
-        let b = if let Some(x) = fresh_x { x.shape[0] } else { self.batch };
+        let b = match input {
+            InputMode::Fresh(x) | InputMode::Rebase(x) => x.shape[0],
+            InputMode::Cached => self.batch,
+        };
         target
             .validate(net.num_capacitors, Some(b * h0 * w0))
             .map_err(anyhow::Error::new)?;
@@ -410,27 +420,36 @@ impl IntSession {
                 Option<Vec<bool>>,
                 Option<Vec<bool>>,
             ) = match &node.op {
-                PsbOp::Input => {
-                    if let Some(x) = fresh_x {
+                PsbOp::Input => match input {
+                    InputMode::Fresh(x) => {
                         anyhow::ensure!(
                             x.shape == vec![b, h0, w0, c0],
                             "input must be [{b}, {h0}, {w0}, {c0}], got {:?}",
                             x.shape
                         );
                         // round + saturate: Q16::from_f32 on every element
-                        self.outs[idx] = x
-                            .data
-                            .iter()
-                            .map(|&v| {
-                                // psb-lint: allow(float-purity): Q16 quantization boundary — external f32 input becomes raw i32 here
-                                (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
-                            })
-                            .collect();
+                        self.outs[idx] = stream::quantize_input(x);
                         (vec![b, h0, w0, c0], true, None, input_mask.clone())
-                    } else {
-                        (vec![b, h0, w0, c0], false, None, input_mask.clone())
                     }
-                }
+                    InputMode::Cached => (vec![b, h0, w0, c0], false, None, input_mask.clone()),
+                    InputMode::Rebase(x) => {
+                        anyhow::ensure!(
+                            x.shape == vec![b, h0, w0, c0],
+                            "rebase input must be [{b}, {h0}, {w0}, {c0}], got {:?}",
+                            x.shape
+                        );
+                        // diff the new frame against the cached quantized
+                        // input: a pixel changed iff any of its channels'
+                        // raw Q16 values moved — pixels that quantize
+                        // identically are exactly reusable
+                        let new_raw = stream::quantize_input(x);
+                        let (any, pixel_changed) =
+                            stream::diff_pixels(&self.outs[idx], &new_raw, c0);
+                        self.outs[idx] = new_raw;
+                        let ch = any.then_some(pixel_changed);
+                        (vec![b, h0, w0, c0], any, ch, input_mask.clone())
+                    }
+                },
                 PsbOp::Capacitor { planes, bias, conv, cout } => {
                     let in_idx = node.inputs[0];
                     let in_shape = shapes[in_idx].clone();
@@ -485,7 +504,7 @@ impl IntSession {
                         (dirty[in_idx], changed[in_idx].as_deref()),
                         state,
                         (unit, layer, kind, seed),
-                        (mode, threads),
+                        (mode, threads, bill_fresh),
                         &mut step,
                     )?;
                     (out_shape, is_dirty, ch, out_mask)
@@ -531,7 +550,7 @@ impl IntSession {
                         (dirty[in_idx], changed[in_idx].as_deref()),
                         state,
                         (unit, layer, kind, seed),
-                        (mode, threads),
+                        (mode, threads, bill_fresh),
                         &mut step,
                     )?;
                     (vec![bb, ho, wo, *c], is_dirty, ch, out_mask)
@@ -648,7 +667,7 @@ fn cap_node_pass(
     (in_dirty, in_changed): (bool, Option<&[bool]>),
     state: &mut ProgressiveState,
     (unit, layer, kind, seed): (usize, usize, RngKind, u64),
-    (mode, threads): (Contraction, usize),
+    (mode, threads, bill_fresh): (Contraction, usize, bool),
     step: &mut StepReport,
 ) -> Result<(bool, Option<Vec<bool>>)> {
     let kk = planes.shape[0];
@@ -891,13 +910,21 @@ fn cap_node_pass(
     // exact per-row hardware charge: each row pays live × (n_new − n_prev)
     // for its own (previous, new) region — identical to the simulator's
     // accounting, so stage charges partition one-shot charges under
-    // masks and through split collapse
+    // masks and through split collapse.  A rebased frame bills as a
+    // fresh begin (no previous regions, levels from zero): the new frame
+    // is a full pass in hardware-model terms even though the session
+    // only *executed* the changed rows + halo.
+    let (bill_prev_rows, bill_prev_levels) = if bill_fresh {
+        (None, (0, 0))
+    } else {
+        ((prev_row_hi.len() == m).then_some(prev_row_hi.as_slice()), prev_levels)
+    };
     step.costs.charge_rows_exact(
         live,
         m,
-        (prev_row_hi.len() == m).then_some(prev_row_hi.as_slice()),
+        bill_prev_rows,
         (!row_hi_new.is_empty()).then_some(row_hi_new),
-        prev_levels,
+        bill_prev_levels,
         (n_lo, n_hi),
     );
     Ok(result)
@@ -915,7 +942,7 @@ impl InferenceSession for IntSession {
         self.state = Some(self.net.begin(self.kind, seed));
         self.batch = x.shape[0];
         let plan = self.plan.clone();
-        let result = self.run_pass(&plan, Some(x));
+        let result = self.run_pass(&plan, InputMode::Fresh(x));
         if result.is_err() {
             // a failed opening pass leaves no usable session state
             self.state = None;
@@ -925,9 +952,13 @@ impl InferenceSession for IntSession {
 
     fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
         anyhow::ensure!(self.state.is_some(), "refine before begin");
-        let step = self.run_pass(target, None)?;
+        let step = self.run_pass(target, InputMode::Cached)?;
         self.plan = target.clone();
         Ok(step)
+    }
+
+    fn rebase_input(&mut self, x: &Tensor) -> Result<StepReport> {
+        self.rebase(x)
     }
 
     fn narrow(&mut self, rows: &[usize]) -> Result<()> {

@@ -1,0 +1,113 @@
+//! Temporal delta streaming for the [`super::IntKernel`]: rebase a begun
+//! session onto a *new input frame* in O(changed rows + halo).
+//!
+//! The paper's representation makes this possible where per-pass
+//! binarization schemes cannot: the cached capacitor charge
+//! `A[r, j] = Σ s·(k·H + (n−k)·L)` is a pure function of the row's
+//! lowering and the batch-shared progressive counts, so a row whose
+//! input window did not change between frames already holds *exactly*
+//! the charge a fresh `begin` on the new frame would compute — the
+//! accumulator survives across inputs, not just across sample
+//! escalations.
+//!
+//! The rebase pass:
+//!
+//! 1. quantizes the new frame and diffs it per pixel against the cached
+//!    quantized input (a pixel changed iff any channel's raw Q16 value
+//!    moved — sub-quantum drift is exactly reusable);
+//! 2. propagates the changed-pixel mask through the graph, dilating it
+//!    at every capacitor to the rows whose SAME-padded window reads a
+//!    changed pixel (`dilate_to_rows` walks the same
+//!    [`super::pack::SameWindows`] iterator the lowering gathers
+//!    through, so "unflagged ⇒ reads only unchanged activations" holds
+//!    by construction);
+//! 3. re-lowers and rebuilds *just those rows* via the `masked_step`
+//!    drivers at the session's current per-row `(counts, n)` — every
+//!    other row finishes early with zero work and keeps its accumulator.
+//!
+//! Because the filter draws are batch-shared and row-independent, and
+//! the rebuilt rows use the same counts a fresh session would reach, the
+//! logits after `rebase_input` are bit-identical to a fresh
+//! `begin(new_frame, seed)` at the session's current plan — at any
+//! thread count (property-tested in `tests/backend_parity.rs`).
+//!
+//! Billing: the hardware-model charge of a rebase is a **fresh pass**
+//! over the new frame — every row pays `live × n(region)` from zero —
+//! while `executed_adds` records the real O(Δ) work.  Reusing a row's
+//! charge does not make the new frame's samples free in the hardware
+//! model; it only means the backend did not have to re-add them.
+
+use anyhow::Result;
+
+use crate::num::fixed::{MAX_RAW, MIN_RAW, SCALE};
+use crate::sim::tensor::Tensor;
+
+use super::{IntSession, StepReport};
+
+/// What `run_pass` reads its input activations from.
+pub(super) enum InputMode<'a> {
+    /// First pass: quantize and install `x` wholesale.
+    Fresh(&'a Tensor),
+    /// Refine: reuse the cached input unchanged.
+    Cached,
+    /// Streaming rebase: diff `x` against the cached input and
+    /// recompute only the changed pixels' downstream rows, billed as a
+    /// fresh pass.
+    Rebase(&'a Tensor),
+}
+
+/// Quantize an external f32 frame to raw Q16 — round + saturate,
+/// `Q16::from_f32` on every element.
+pub(super) fn quantize_input(x: &Tensor) -> Vec<i32> {
+    x.data
+        .iter()
+        .map(|&v| {
+            // psb-lint: allow(float-purity): Q16 quantization boundary — external f32 input becomes raw i32 here
+            (v * SCALE).round().clamp(MIN_RAW as f32, MAX_RAW as f32) as i32
+        })
+        .collect()
+}
+
+/// Per-pixel diff of two quantized frames with `c` channels per pixel:
+/// `mask[p]` is true iff any channel of pixel `p` differs.  Length
+/// mismatches (a cache that cannot be trusted) flag conservatively.
+pub(super) fn diff_pixels(old: &[i32], new: &[i32], c: usize) -> (bool, Vec<bool>) {
+    let c = c.max(1);
+    let pixels = new.len() / c;
+    let mut mask = vec![false; pixels];
+    let mut any = false;
+    for (p, flag) in mask.iter_mut().enumerate() {
+        let at = p * c;
+        if old.get(at..at + c) != new.get(at..at + c) {
+            *flag = true;
+            any = true;
+        }
+    }
+    (any, mask)
+}
+
+impl IntSession {
+    /// The [`crate::backend::InferenceSession::rebase_input`] op: move a
+    /// begun session onto a new same-geometry frame, reusing every
+    /// untouched row's accumulator.
+    pub(super) fn rebase(&mut self, x: &Tensor) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_some(), "rebase before begin");
+        let (h0, w0, c0) = self.net.input_hwc;
+        anyhow::ensure!(
+            x.shape == vec![self.batch, h0, w0, c0],
+            "rebase input must keep the session geometry [{}, {h0}, {w0}, {c0}], got {:?}",
+            self.batch,
+            x.shape
+        );
+        let plan = self.plan.clone();
+        let result = self.run_pass(&plan, InputMode::Rebase(x));
+        if result.is_err() {
+            // a pass that failed mid-graph has already installed the new
+            // frame at the input but not propagated it everywhere; the
+            // change masks are gone, so no later pass could resync — the
+            // session is unusable and says so
+            self.state = None;
+        }
+        result
+    }
+}

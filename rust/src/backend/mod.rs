@@ -252,6 +252,24 @@ pub trait InferenceSession {
         anyhow::bail!("this backend's sessions cannot fork")
     }
 
+    /// Re-anchor a begun session on a *new input* of the same geometry —
+    /// the streaming-inference op: diff `x` against the session's cached
+    /// lowering, recompute only the rows whose windows saw a changed
+    /// pixel (changed rows plus their conv halo) at the session's
+    /// current per-row counts, and reuse every untouched row's
+    /// accumulator as-is.
+    ///
+    /// Contract: after `rebase_input(x)`, the logits *and* the exact
+    /// per-row charge billed for the step are bit-identical to a fresh
+    /// `begin(x, seed)` at the session's current plan and seed — the
+    /// new frame is billed as a full pass (every row at full n), while
+    /// the *executed* work scales with changed rows + halo
+    /// (`StepReport::executed_adds`).  Stateful backends only; the
+    /// default is unsupported.
+    fn rebase_input(&mut self, _x: &Tensor) -> Result<StepReport> {
+        anyhow::bail!("this backend's sessions cannot rebase their input")
+    }
+
     /// Logits of the most recent pass, `[rows, num_classes]`.
     fn logits(&self) -> &Tensor;
 

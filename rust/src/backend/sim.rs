@@ -159,6 +159,53 @@ impl InferenceSession for SimSession {
         Ok(step)
     }
 
+    /// Exact-arithmetic streaming reference: full recompute over the new
+    /// frame from the accumulated counts, billed as a fresh begin (see
+    /// [`PsbNetwork::rebase_cached`]) — the correctness oracle the
+    /// IntKernel's O(Δ) rebase is parity-tested against.
+    fn rebase_input(&mut self, x: &Tensor) -> Result<StepReport> {
+        anyhow::ensure!(self.state.is_some(), "rebase before begin");
+        let Some(prev_shape) = self.x.as_ref().map(|t| t.shape.clone()) else {
+            return Err(anyhow!("rebase before begin (session holds no input)"));
+        };
+        anyhow::ensure!(
+            x.shape == prev_shape,
+            "rebase input must keep the session geometry {prev_shape:?}, got {:?}",
+            x.shape
+        );
+        let old = self.x.replace(x.clone());
+        // psb-lint: allow(determinism): backend wall-time telemetry (StepReport::elapsed_ns) — never feeds logits or billing
+        let t0 = std::time::Instant::now();
+        let plan = self.plan.clone();
+        let (Some(xr), Some(state)) = (self.x.as_ref(), self.state.as_mut()) else {
+            return Err(anyhow!("rebase before begin (session holds no input/state)"));
+        };
+        match self.net.rebase_cached(xr, state, &plan, &mut self.cache) {
+            Ok((out, stats)) => {
+                self.logits = out.logits;
+                self.feat = out.feat;
+                let step = StepReport {
+                    costs: out.costs,
+                    executed_adds: stats.executed_adds,
+                    elapsed_ns: t0.elapsed().as_nanos() as u64,
+                    layer_adds: stats.layer_adds,
+                    nodes_recomputed: stats.nodes_recomputed,
+                    nodes_reused: stats.nodes_reused,
+                    cols_reused: stats.cols_reused,
+                    delta_updated: 0,
+                };
+                self.report.record(step.clone());
+                Ok(step)
+            }
+            Err(e) => {
+                // restore the previous frame; rebase_cached already
+                // poisoned the cache, so the next pass recomputes it
+                self.x = old;
+                Err(anyhow::Error::new(e))
+            }
+        }
+    }
+
     fn narrow(&mut self, rows: &[usize]) -> Result<()> {
         anyhow::ensure!(self.state.is_some(), "narrow before begin");
         let old_b = self.batch;

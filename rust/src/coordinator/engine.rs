@@ -22,7 +22,7 @@
 //! Closed and evicted session ids are never reused, and a `Refine`
 //! against one names what happened to it.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -72,6 +72,15 @@ pub struct EngineStats {
     /// dispatches (for the stateless PJRT backend with shared seeds this
     /// is padded artifact runs saved).
     pub runs_saved: AtomicU64,
+    /// Streaming frames served (`SubmitFrame` rebases that completed).
+    pub stream_frames: AtomicU64,
+    /// Input-frame elements observed unchanged across rebases —
+    /// accumulated by the stream registry from its per-frame diffs, a
+    /// proxy for the accumulator rows the backend reused.
+    pub stream_rows_reused: AtomicU64,
+    /// Σ per-frame changed fraction in milli-units (0–1000); the mean
+    /// rebase fraction is `stream_frac_milli / stream_frames`.
+    pub stream_frac_milli: AtomicU64,
 }
 
 impl EngineStats {
@@ -107,6 +116,31 @@ pub enum EngineJob {
         keep: bool,
         reply: mpsc::SyncSender<Result<EngineOutput>>,
     },
+    /// Rebase a pooled (streaming) session onto a new frame of the same
+    /// geometry via [`InferenceSession::rebase_input`], reusing every
+    /// unchanged row's accumulator.  The session always stays in the
+    /// pool (streams are long-lived); the reply carries its id.
+    SubmitFrame {
+        session: SessionId,
+        /// Row-major `[batch, H, W, C]` frame, same geometry as the
+        /// session's `Begin`.
+        x: Vec<f32>,
+        reply: mpsc::SyncSender<Result<EngineOutput>>,
+    },
+    /// Escalate a *fork* of a pooled session: clone it, narrow the
+    /// clone to `rows`, refine it to `plan`, reply with the clone's
+    /// output and drop it — the pooled session itself stays untouched
+    /// at its stage-1 precision for the stream's next frame.
+    ForkEscalate {
+        session: SessionId,
+        rows: Option<Vec<usize>>,
+        plan: PrecisionPlan,
+        reply: mpsc::SyncSender<Result<EngineOutput>>,
+    },
+    /// Pin (or release) a pooled session against LRU eviction — stream
+    /// sessions hold their slot while the stream is live.  Pinning an
+    /// unknown id is a no-op.  Fire-and-forget, like `Close`.
+    SetPinned { session: SessionId, pinned: bool },
     /// Drop a pooled session (e.g. nothing escalated).  Idempotent.
     Close { session: SessionId },
 }
@@ -141,6 +175,11 @@ struct SessionPool {
     slots: BTreeMap<SessionId, Box<dyn InferenceSession>>,
     /// Least recently used first.
     lru: VecDeque<SessionId>,
+    /// Sessions exempt from LRU eviction while live (streaming sessions
+    /// pinned by their stream).  Pinned sessions still count toward
+    /// capacity, so a fully pinned pool can exceed `cap` — that is the
+    /// stream registry's admission problem, not the pool's.
+    pinned: BTreeSet<SessionId>,
     retired: BTreeMap<SessionId, String>,
     next_id: SessionId,
     stats: Arc<EngineStats>,
@@ -152,6 +191,7 @@ impl SessionPool {
             cap: cap.max(1),
             slots: BTreeMap::new(),
             lru: VecDeque::new(),
+            pinned: BTreeSet::new(),
             retired: BTreeMap::new(),
             next_id: 1,
             stats,
@@ -186,20 +226,40 @@ impl SessionPool {
     }
 
     fn evict_over_cap(&mut self) {
+        // pinned ids are skipped (and kept in LRU order); when only
+        // pinned sessions remain, eviction stops rather than livelock
+        let mut kept: VecDeque<SessionId> = VecDeque::new();
         while self.slots.len() > self.cap {
-            if let Some(old) = self.lru.pop_front() {
-                self.slots.remove(&old);
-                self.retire(
-                    old,
-                    format!(
-                        "session {old} was evicted from the pool (LRU, capacity {})",
-                        self.cap
-                    ),
-                );
-                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-            } else {
-                break;
+            let Some(old) = self.lru.pop_front() else { break };
+            if self.pinned.contains(&old) {
+                kept.push_back(old);
+                continue;
             }
+            self.slots.remove(&old);
+            self.retire(
+                old,
+                format!(
+                    "session {old} was evicted from the pool (LRU, capacity {})",
+                    self.cap
+                ),
+            );
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        while let Some(id) = kept.pop_back() {
+            self.lru.push_front(id);
+        }
+    }
+
+    /// Mark a resident session exempt from (or again subject to) LRU
+    /// eviction.  Unpinning re-applies the capacity bound immediately.
+    fn set_pinned(&mut self, id: SessionId, pinned: bool) {
+        if pinned {
+            if self.slots.contains_key(&id) {
+                self.pinned.insert(id);
+            }
+        } else if self.pinned.remove(&id) {
+            self.evict_over_cap();
+            self.sync_gauges();
         }
     }
 
@@ -212,6 +272,18 @@ impl SessionPool {
                 self.sync_gauges();
                 Ok(s)
             }
+            None => Err(match self.retired.get(&id) {
+                Some(reason) => anyhow!("{reason}"),
+                None => anyhow!("unknown engine session {id}"),
+            }),
+        }
+    }
+
+    /// Borrow a resident session without touching LRU order (the fork
+    /// path reads it in place); a missing id names its retirement.
+    fn peek(&self, id: SessionId) -> Result<&dyn InferenceSession> {
+        match self.slots.get(&id) {
+            Some(s) => Ok(s.as_ref()),
             None => Err(match self.retired.get(&id) {
                 Some(reason) => anyhow!("{reason}"),
                 None => anyhow!("unknown engine session {id}"),
@@ -234,6 +306,7 @@ impl SessionPool {
         if self.slots.remove(&id).is_some() {
             self.lru.retain(|&x| x != id);
         }
+        self.pinned.remove(&id);
         if id < self.next_id && !self.retired.contains_key(&id) {
             self.retire(id, format!("session {id} was closed"));
         }
@@ -247,6 +320,15 @@ struct RefineReq {
     rows: Option<Vec<usize>>,
     plan: PrecisionPlan,
     keep: bool,
+    reply: mpsc::SyncSender<Result<EngineOutput>>,
+}
+
+/// One pending fire-and-forget begin of a dispatch window.
+struct BeginReq {
+    plan: PrecisionPlan,
+    x: Vec<f32>,
+    batch: usize,
+    seed: u64,
     reply: mpsc::SyncSender<Result<EngineOutput>>,
 }
 
@@ -296,13 +378,21 @@ impl Engine {
                     // one dispatch window: everything already queued
                     let window = crate::coordinator::batcher::drain_ready(&rx, first, MAX_DRAIN);
                     let mut refines: Vec<RefineReq> = Vec::new();
+                    // fire-and-forget begins accumulate too: nothing in
+                    // the window can reference a session they have not
+                    // created yet, so deferring them to the window end
+                    // (where same-identity ones merge) preserves order
+                    let mut begins: Vec<BeginReq> = Vec::new();
                     for job in window {
                         match job {
                             EngineJob::Refine { session, rows, plan, keep, reply } => {
                                 refines.push(RefineReq { session, rows, plan, keep, reply });
                             }
+                            EngineJob::Begin { plan, x, batch, seed, keep: false, reply } => {
+                                begins.push(BeginReq { plan, x, batch, seed, reply });
+                            }
                             other => {
-                                // preserve job order around non-refine jobs
+                                // preserve job order around order-sensitive jobs
                                 dispatch_refines(
                                     backend.as_ref(),
                                     &mut pool,
@@ -311,7 +401,11 @@ impl Engine {
                                     &fail_worker,
                                 );
                                 match other {
-                                    EngineJob::Begin { plan, x, batch, seed, keep, reply } => {
+                                    EngineJob::Begin { plan, x, batch, seed, keep: _, reply } => {
+                                        // keep == true: the session enters
+                                        // the pool, so dispatch inline (a
+                                        // merged begin cannot be split
+                                        // back into pool slots)
                                         let result = begin_job(
                                             backend.as_ref(),
                                             hwc,
@@ -322,9 +416,7 @@ impl Engine {
                                         );
                                         let result = match result {
                                             Ok((sess, mut out)) => {
-                                                if keep {
-                                                    out.session = Some(pool.insert(sess));
-                                                }
+                                                out.session = Some(pool.insert(sess));
                                                 Ok(out)
                                             }
                                             Err(e) => {
@@ -337,6 +429,39 @@ impl Engine {
                                         // receiver may have given up; dropping is fine
                                         let _ = reply.send(result);
                                     }
+                                    EngineJob::SubmitFrame { session, x, reply } => {
+                                        let result = submit_frame_job(
+                                            hwc,
+                                            &mut pool,
+                                            session,
+                                            x,
+                                        );
+                                        match &result {
+                                            Ok(_) => {
+                                                stats_worker
+                                                    .stream_frames
+                                                    .fetch_add(1, Ordering::Relaxed);
+                                            }
+                                            Err(e) => {
+                                                *crate::coordinator::lock_unpoisoned(
+                                                    &fail_worker,
+                                                ) = Some(format!("{e:#}"));
+                                            }
+                                        }
+                                        let _ = reply.send(result);
+                                    }
+                                    EngineJob::ForkEscalate { session, rows, plan, reply } => {
+                                        let result =
+                                            fork_escalate_job(&pool, session, rows, &plan);
+                                        if let Err(e) = &result {
+                                            *crate::coordinator::lock_unpoisoned(&fail_worker) =
+                                                Some(format!("{e:#}"));
+                                        }
+                                        let _ = reply.send(result);
+                                    }
+                                    EngineJob::SetPinned { session, pinned } => {
+                                        pool.set_pinned(session, pinned)
+                                    }
                                     EngineJob::Close { session } => pool.close(session),
                                     EngineJob::Refine { .. } => unreachable!("matched above"),
                                 }
@@ -347,6 +472,13 @@ impl Engine {
                         backend.as_ref(),
                         &mut pool,
                         refines,
+                        &stats_worker,
+                        &fail_worker,
+                    );
+                    dispatch_begins(
+                        backend.as_ref(),
+                        hwc,
+                        begins,
                         &stats_worker,
                         &fail_worker,
                     );
@@ -417,6 +549,33 @@ impl Engine {
         let (reply, rx) = mpsc::sync_channel(1);
         self.submit(EngineJob::Refine { session, rows, plan, keep: false, reply })?;
         self.wait(rx)
+    }
+
+    /// Rebase a pooled streaming session onto a new frame and wait —
+    /// the per-frame serving call of a stream.
+    pub fn submit_frame(&self, session: SessionId, x: Vec<f32>) -> Result<EngineOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob::SubmitFrame { session, x, reply })?;
+        self.wait(rx)
+    }
+
+    /// Escalate a *fork* of a pooled session (narrow + refine the
+    /// fork), leaving the pooled session itself untouched for the
+    /// stream's next frame.
+    pub fn fork_escalate(
+        &self,
+        session: SessionId,
+        rows: Option<Vec<usize>>,
+        plan: PrecisionPlan,
+    ) -> Result<EngineOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob::ForkEscalate { session, rows, plan, reply })?;
+        self.wait(rx)
+    }
+
+    /// Pin or release a pooled session against LRU eviction.
+    pub fn pin_session(&self, session: SessionId, pinned: bool) -> Result<()> {
+        self.submit(EngineJob::SetPinned { session, pinned })
     }
 
     /// Drop a pooled session.
@@ -543,6 +702,206 @@ fn dispatch_refines(
             }
         }
     }
+}
+
+/// Dispatch one window's fire-and-forget `Begin` jobs: jobs with the
+/// same `(plan, seed)` coalesce into **one** concatenated backend pass
+/// (a stage-1 frame burst shares one artifact run on stateless
+/// backends), split back per job afterwards.  Bit-identity holds for
+/// every shipped backend because filter draws are batch-shared (they
+/// depend on the seed, never the batch size) and rows are computed
+/// independently — a row's logits in the concatenated pass are exactly
+/// its logits in a solo pass under the same seed.
+fn dispatch_begins(
+    backend: &dyn Backend,
+    hwc: (usize, usize, usize),
+    begins: Vec<BeginReq>,
+    stats: &EngineStats,
+    fail: &Mutex<Option<String>>,
+) {
+    if begins.is_empty() {
+        return;
+    }
+    let mut groups: Vec<(PrecisionPlan, u64, Vec<BeginReq>)> = Vec::new();
+    for req in begins {
+        match groups.iter().position(|(p, s, _)| *p == req.plan && *s == req.seed) {
+            Some(i) => groups[i].2.push(req),
+            None => groups.push((req.plan.clone(), req.seed, vec![req])),
+        }
+    }
+    let (h, w, c) = hwc;
+    let img = h * w * c;
+    for (plan, seed, group) in groups {
+        if group.len() < 2 {
+            for req in group {
+                serve_begin(backend, hwc, req, fail);
+            }
+            continue;
+        }
+        // validate each member's geometry up front so one malformed job
+        // fails alone instead of poisoning the merged pass
+        let mut ready: Vec<BeginReq> = Vec::new();
+        for req in group {
+            if req.batch > 0 && req.x.len() == req.batch * img {
+                ready.push(req);
+            } else {
+                let e = anyhow!(
+                    "input size {} != batch {} × {h}×{w}×{c}",
+                    req.x.len(),
+                    req.batch
+                );
+                *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+                let _ = req.reply.send(Err(e));
+            }
+        }
+        if ready.len() < 2 {
+            for req in ready {
+                serve_begin(backend, hwc, req, fail);
+            }
+            continue;
+        }
+        let parts: Vec<usize> = ready.iter().map(|r| r.batch).collect();
+        let total: usize = parts.iter().sum();
+        let mut x = Vec::with_capacity(total * img);
+        for req in &ready {
+            x.extend_from_slice(&req.x);
+        }
+        match begin_job(backend, hwc, plan, x, total, seed) {
+            Ok((sess, _)) => {
+                stats.merges.fetch_add(1, Ordering::Relaxed);
+                stats.runs_saved.fetch_add(ready.len() as u64 - 1, Ordering::Relaxed);
+                let step = sess.cost_report().last_step().cloned().unwrap_or_default();
+                let outs = split_begun_outputs(sess.as_ref(), &step, &parts);
+                debug_assert_eq!(outs.len(), ready.len());
+                for (req, out) in ready.into_iter().zip(outs) {
+                    let _ = req.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                // geometry was pre-validated, so a merged-begin failure
+                // (bad plan, backend fault) is shared by every member
+                let msg = format!("{e:#}");
+                *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
+                for req in ready {
+                    let _ = req.reply.send(Err(anyhow!("merged begin failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+/// Serial fire-and-forget begin (the non-merged path).
+fn serve_begin(
+    backend: &dyn Backend,
+    hwc: (usize, usize, usize),
+    req: BeginReq,
+    fail: &Mutex<Option<String>>,
+) {
+    let result = match begin_job(backend, hwc, req.plan, req.x, req.batch, req.seed) {
+        Ok((_sess, out)) => Ok(out),
+        Err(e) => {
+            *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+            Err(e)
+        }
+    };
+    let _ = req.reply.send(result);
+}
+
+/// Split a merged begin's single pass back into per-job outputs.  Rows
+/// split by each job's batch extent; the charge splits proportionally by
+/// rows, which is *exact* for the per-row-billed backends (every layer's
+/// charge is linear in the batch) and the documented estimate for
+/// stateless ones.
+fn split_begun_outputs(
+    sess: &dyn InferenceSession,
+    step: &StepReport,
+    parts: &[usize],
+) -> Vec<EngineOutput> {
+    let logits = sess.logits();
+    let nc = logits.shape.get(1).copied().unwrap_or(0);
+    let feat = sess.feat();
+    let total: usize = parts.iter().sum::<usize>().max(1);
+    let mut outs = Vec::with_capacity(parts.len());
+    let mut off = 0usize;
+    for &rows in parts {
+        let l = logits.data[off * nc..(off + rows) * nc].to_vec();
+        let (f, fshape) = match feat {
+            Some(f) if f.shape.len() == 4 => {
+                let flen = f.shape[1] * f.shape[2] * f.shape[3];
+                (
+                    f.data[off * flen..(off + rows) * flen].to_vec(),
+                    [rows, f.shape[1], f.shape[2], f.shape[3]],
+                )
+            }
+            _ => (Vec::new(), [rows, 0, 0, 0]),
+        };
+        let share = |v: u64| v * rows as u64 / total as u64;
+        outs.push(EngineOutput {
+            exec: Execution { logits: l, feat: f, feat_shape: fshape },
+            session: None,
+            gated_adds: share(step.costs.gated_adds),
+            executed_adds: share(step.executed_adds),
+            backend_ns: share(step.elapsed_ns),
+            merged: true,
+        });
+        off += rows;
+    }
+    outs
+}
+
+/// Serve one streaming frame: take the pooled session, rebase it onto
+/// the new frame, and put it back (streams always keep their session).
+/// A missing id answers with its retirement reason — a reclaimed stream
+/// names the reclaim, never a dropped reply.
+fn submit_frame_job(
+    (h, w, c): (usize, usize, usize),
+    pool: &mut SessionPool,
+    id: SessionId,
+    x: Vec<f32>,
+) -> Result<EngineOutput> {
+    let img = h * w * c;
+    anyhow::ensure!(
+        img > 0 && x.len() % img == 0 && !x.is_empty(),
+        "frame size {} is not a multiple of {h}×{w}×{c}",
+        x.len()
+    );
+    let batch = x.len() / img;
+    let mut sess = pool.take(id)?;
+    let xt = Tensor::from_vec(x, &[batch, h, w, c]);
+    match sess.rebase_input(&xt) {
+        Ok(step) => {
+            let mut out = output_of(sess.as_ref(), &step);
+            pool.put_back(id, sess);
+            out.session = Some(id);
+            Ok(out)
+        }
+        Err(e) => {
+            // the session's cached state no longer matches any frame
+            pool.retire(
+                id,
+                format!("session {id} was dropped by a failed frame rebase: {e:#}"),
+            );
+            pool.pinned.remove(&id);
+            Err(e)
+        }
+    }
+}
+
+/// Stage-2 escalation of a stream: fork the pooled session, narrow and
+/// refine the fork, drop it — the pooled session stays at its stage-1
+/// precision for the next frame.
+fn fork_escalate_job(
+    pool: &SessionPool,
+    id: SessionId,
+    rows: Option<Vec<usize>>,
+    plan: &PrecisionPlan,
+) -> Result<EngineOutput> {
+    let mut fork = pool.peek(id)?.fork()?;
+    if let Some(rows) = &rows {
+        fork.narrow(rows)?;
+    }
+    let step = fork.refine(plan)?;
+    Ok(output_of(fork.as_ref(), &step))
 }
 
 /// Pull a refine's session out of the pool and narrow it to the

@@ -91,6 +91,15 @@ pub struct Metrics {
     /// Backend dispatches (padded artifact runs, on stateless backends)
     /// saved by merging.
     pub runs_saved: AtomicU64,
+    /// Streaming frames served through session rebase (mirrored from
+    /// [`crate::coordinator::engine::EngineStats`]).
+    pub stream_frames: AtomicU64,
+    /// Input-frame elements observed unchanged across rebases (proxy
+    /// for the accumulator rows the backend reused).
+    pub stream_rows_reused: AtomicU64,
+    /// Σ per-frame changed fraction in milli-units; the mean rebase
+    /// fraction is `stream_frac_milli / stream_frames`.
+    pub stream_frac_milli: AtomicU64,
 }
 
 impl Metrics {
@@ -117,6 +126,19 @@ impl Metrics {
         self.pool_evictions.store(stats.evictions.load(Relaxed), Relaxed);
         self.merges.store(stats.merges.load(Relaxed), Relaxed);
         self.runs_saved.store(stats.runs_saved.load(Relaxed), Relaxed);
+        self.stream_frames.store(stats.stream_frames.load(Relaxed), Relaxed);
+        self.stream_rows_reused.store(stats.stream_rows_reused.load(Relaxed), Relaxed);
+        self.stream_frac_milli.store(stats.stream_frac_milli.load(Relaxed), Relaxed);
+    }
+
+    /// Mean fraction of each served frame that actually changed (0..1);
+    /// zero before any stream traffic.
+    pub fn stream_mean_frac(&self) -> f64 {
+        let frames = self.stream_frames.load(Ordering::Relaxed);
+        if frames == 0 {
+            return 0.0;
+        }
+        self.stream_frac_milli.load(Ordering::Relaxed) as f64 / (1000.0 * frames as f64)
     }
 
     /// Mean rows per dispatched batch (occupancy diagnostics).
@@ -147,6 +169,7 @@ impl Metrics {
         format!(
             "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% \
              pool={}(peak {}, evicted {}) merges={} runs_saved={} \
+             stream={} frames(rows_reused {}, mean_frac {:.3}) \
              exec_adds={} backend_ms={:.1} p50={:?} p99={:?} mean={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -158,6 +181,9 @@ impl Metrics {
             self.pool_evictions.load(Ordering::Relaxed),
             self.merges.load(Ordering::Relaxed),
             self.runs_saved.load(Ordering::Relaxed),
+            self.stream_frames.load(Ordering::Relaxed),
+            self.stream_rows_reused.load(Ordering::Relaxed),
+            self.stream_mean_frac(),
             self.executed_adds.load(Ordering::Relaxed),
             self.backend_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.latency.quantile(0.5),

@@ -31,7 +31,13 @@
 //!   it plans each request's final precision from the mean last-conv
 //!   entropy, and the high-entropy fraction escalates by *narrowing and
 //!   refining* the stage-1 session — batch-level computational attention
-//!   with the network itself as the proposal mechanism.
+//!   with the network itself as the proposal mechanism;
+//! * the **stream registry** serves temporal frame traffic: one pinned
+//!   pool session per stream id, *rebased* onto every new frame in
+//!   O(changed rows + halo)
+//!   ([`crate::backend::InferenceSession::rebase_input`]), with
+//!   per-frame fork-escalation — the temporal analog of the spatial
+//!   attention above.
 
 // The serving loop reports failure through `Engine::last_error` /
 // `Metrics::engine_errors` instead of unwinding; psb-lint's no-panic
@@ -44,12 +50,14 @@ pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
+pub mod stream;
 
 pub use batcher::BatcherConfig;
 pub use engine::{Engine, EngineConfig, EngineJob, EngineOutput, EngineStats, SessionId};
 pub use metrics::Metrics;
 pub use scheduler::{EscalationPolicy, SchedulerStats};
 pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, ServedVia};
+pub use stream::{StreamConfig, StreamId, StreamRegistry};
 
 /// Lock a mutex, recovering the data of a poisoned lock: the values
 /// guarded here (failure strings, scheduler state) stay meaningful after

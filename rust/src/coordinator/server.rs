@@ -31,6 +31,7 @@ use crate::coordinator::batcher::{drain_ready, run_batcher, BatcherConfig, Forme
 use crate::coordinator::engine::{Engine, EngineConfig, EngineJob, EngineOutput, SessionId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
+use crate::coordinator::stream::{StreamConfig, StreamId, StreamRegistry};
 use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy};
 use crate::rng::RngKind;
 use crate::runtime::{ArtifactMeta, PsbBundle};
@@ -47,6 +48,9 @@ pub struct CoordinatorConfig {
     /// Most stage-1 sessions the engine keeps resident for escalation
     /// (LRU-evicted beyond it; see [`crate::coordinator::engine::EngineConfig`]).
     pub pool_cap: usize,
+    /// Streaming sessions with no frame for this long lose their pinned
+    /// pool slot (see [`crate::coordinator::stream::StreamConfig`]).
+    pub stream_idle_ttl: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -57,6 +61,7 @@ impl Default for CoordinatorConfig {
             policy: EscalationPolicy::default(),
             seed: 7,
             pool_cap: 32,
+            stream_idle_ttl: Duration::from_secs(30),
         }
     }
 }
@@ -71,6 +76,10 @@ pub enum ServedVia {
     /// Escalated through a merged dispatch (several escalation groups
     /// coalesced into one engine pass).
     Merged,
+    /// Served on a streaming session: an O(Δ) rebase of the stream's
+    /// pinned pooled session onto the new frame (possibly followed by a
+    /// fork-escalation; see [`crate::coordinator::stream::StreamRegistry`]).
+    Stream,
 }
 
 /// Final answer for one request.
@@ -125,6 +134,9 @@ pub struct Coordinator {
     stage1_tx: Sender<Pending<RequestCtx>>,
     pub metrics: Arc<Metrics>,
     scheduler: Arc<Mutex<Scheduler>>,
+    /// Streaming frame traffic (pinned sessions + O(Δ) rebase); see
+    /// [`Coordinator::submit_frame`].
+    pub stream: Arc<StreamRegistry>,
     pub image_len: usize,
     pub num_classes: usize,
     /// MACs per image (from the artifact layer geometry / network)
@@ -188,6 +200,19 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let engine = Arc::new(engine);
         let metrics = Arc::new(Metrics::default());
+        let stream = Arc::new(StreamRegistry::new(
+            engine.clone(),
+            metrics.clone(),
+            image_len,
+            num_classes,
+            StreamConfig {
+                policy: cfg.policy,
+                idle_ttl: cfg.stream_idle_ttl,
+                // keep the stream seed space away from the stage-1
+                // counter's (which starts at cfg.seed and increments)
+                seed: cfg.seed ^ (1 << 32),
+            },
+        ));
         let scheduler = Arc::new(Mutex::new(Scheduler::new(cfg.policy)));
         let seed_ctr = Arc::new(AtomicU64::new(cfg.seed));
 
@@ -252,6 +277,7 @@ impl Coordinator {
             stage1_tx,
             metrics,
             scheduler,
+            stream,
             image_len,
             num_classes,
             macs_per_image,
@@ -280,6 +306,23 @@ impl Coordinator {
             })
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
         Ok(rx)
+    }
+
+    /// Serve one frame of a temporal stream and block for its answer.
+    ///
+    /// The first frame on an id opens the stream (fresh pass, session
+    /// pinned in the engine pool); later frames rebase that session in
+    /// O(changed rows + halo) and answer with [`ServedVia::Stream`].
+    /// Uncertain frames still escalate — against a *fork*, so the
+    /// pinned session stays cheap to rebase.  Frames on a reclaimed
+    /// stream answer a named error, never a dropped reply.
+    pub fn submit_frame(&self, stream: StreamId, frame: Vec<f32>) -> Result<ClassifyResponse> {
+        self.stream.submit_frame(stream, frame)
+    }
+
+    /// Close a stream, releasing its pinned session (idempotent).
+    pub fn close_stream(&self, stream: StreamId) -> Result<()> {
+        self.stream.close(stream)
     }
 
     pub fn scheduler_stats(&self) -> SchedulerStats {

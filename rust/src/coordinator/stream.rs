@@ -1,0 +1,329 @@
+//! Temporal delta serving: named streams over pinned pooled sessions.
+//!
+//! A video/sensor client serves *frames*, not independent requests:
+//! consecutive inputs differ in a small region and agree everywhere
+//! else.  PSB's capacitor representation turns that temporal redundancy
+//! into compute savings — a begun session's cached accumulators are a
+//! pure function of the input lowering and the batch-shared counts, so
+//! [`crate::backend::InferenceSession::rebase_input`] can move the
+//! session onto the next frame recomputing only the changed rows (plus
+//! conv halo), with logits bit-identical to a fresh pass.
+//!
+//! The [`StreamRegistry`] is the serving-layer face of that op:
+//!
+//! * each stream id owns one engine session, **pinned** in the engine's
+//!   session pool (exempt from LRU eviction while the stream lives);
+//! * every frame is a [`crate::coordinator::engine::EngineJob::SubmitFrame`]
+//!   — an O(Δ) rebase of the pinned session, sharing the engine's
+//!   dispatch windows with ordinary serving traffic;
+//! * per frame, the stage-1 entropy signal can still escalate: the
+//!   registry refines a *fork* of the pinned session at `n_high`
+//!   ([`Engine::fork_escalate`]), leaving the pinned session at `n_low`
+//!   for the next frame's rebase;
+//! * streams idle past [`StreamConfig::idle_ttl`] are reclaimed (their
+//!   session unpinned and closed) by a sweep that runs on every submit,
+//!   and a later frame on a reclaimed id answers a **named error**
+//!   carrying the reclaim reason — never a dropped reply.
+//!
+//! Backends whose sessions cannot rebase (the stateless PJRT artifact
+//! runtime) fail the second frame with the backend's own message; the
+//! stream then retires with that reason, so callers learn the capability
+//! gap loudly instead of silently paying fresh passes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{Engine, EngineOutput, SessionId};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{EscalationPolicy, Scheduler};
+use crate::coordinator::server::{ClassifyResponse, ServedVia};
+use crate::precision::PrecisionPlan;
+use crate::sim::layers::softmax_rows;
+
+/// Caller-chosen stream identifier (e.g. a camera or connection id).
+pub type StreamId = u64;
+
+/// Streaming knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Escalation policy for per-frame stage-2 refinement (each stream
+    /// keeps its own adaptive entropy threshold).
+    pub policy: EscalationPolicy,
+    /// Streams with no frame for this long are reclaimed — their pinned
+    /// session is released back to the pool's LRU discipline and closed.
+    /// The sweep runs on every submit (no background thread).
+    pub idle_ttl: Duration,
+    /// Base seed for the per-stream filter-sample streams.
+    pub seed: u64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            policy: EscalationPolicy::default(),
+            idle_ttl: Duration::from_secs(30),
+            seed: 11,
+        }
+    }
+}
+
+/// One live stream: its pinned session and the last served frame.
+struct StreamEntry {
+    session: SessionId,
+    /// Per-stream adaptive escalation threshold (EWMA of frame
+    /// entropies) — a static scene self-calibrates independently of a
+    /// busy one.
+    scheduler: Scheduler,
+    /// The previous frame, kept to measure how much of each new frame
+    /// actually changed (the registry's reuse accounting; the backend
+    /// diffs quantized values itself and may reuse even more).
+    last_image: Vec<f32>,
+    last_seen: Instant,
+    /// Frames served on this stream, the opening `begin` included.
+    frames: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    live: BTreeMap<StreamId, StreamEntry>,
+    /// Why a stream went away — the named error any later frame gets.
+    retired: BTreeMap<StreamId, String>,
+}
+
+/// Registry of live streams over one engine.  All engine traffic is
+/// serialized by the engine thread anyway, so the registry holds one
+/// mutex across a frame's engine calls.
+pub struct StreamRegistry {
+    engine: Arc<Engine>,
+    metrics: Arc<Metrics>,
+    cfg: StreamConfig,
+    image_len: usize,
+    num_classes: usize,
+    seed_ctr: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl StreamRegistry {
+    pub fn new(
+        engine: Arc<Engine>,
+        metrics: Arc<Metrics>,
+        image_len: usize,
+        num_classes: usize,
+        cfg: StreamConfig,
+    ) -> StreamRegistry {
+        StreamRegistry {
+            engine,
+            metrics,
+            seed_ctr: AtomicU64::new(cfg.seed),
+            cfg,
+            image_len,
+            num_classes,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Serve one frame on `stream`, opening the stream on first use.
+    ///
+    /// The opening frame is a fresh `begin` (pinned into the pool);
+    /// every later frame rebases the pinned session in O(changed rows +
+    /// halo) and answers with [`ServedVia::Stream`].  A frame on a
+    /// reclaimed or failed stream returns the retained reason.
+    pub fn submit_frame(&self, stream: StreamId, image: Vec<f32>) -> Result<ClassifyResponse> {
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "frame must be {} floats, got {}",
+            self.image_len,
+            image.len()
+        );
+        // psb-lint: allow(determinism): frame latency clock — feeds the latency histograms only, never logits or billing
+        let start = Instant::now();
+        Metrics::inc(&self.metrics.requests);
+        let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
+        self.sweep_idle(&mut inner, Some(stream));
+        if let Some(reason) = inner.retired.get(&stream) {
+            return Err(anyhow!("{reason}"));
+        }
+        let out = match inner.live.get_mut(&stream) {
+            Some(entry) => {
+                let frac = changed_fraction(&entry.last_image, &image);
+                let reused = image.len() as u64 - (frac * image.len() as f64).round() as u64;
+                match self.engine.submit_frame(entry.session, image.clone()) {
+                    Ok(out) => {
+                        use std::sync::atomic::Ordering::Relaxed;
+                        let stats = self.engine.stats();
+                        stats.stream_rows_reused.fetch_add(reused, Relaxed);
+                        stats.stream_frac_milli.fetch_add((frac * 1000.0).round() as u64, Relaxed);
+                        entry.last_image = image;
+                        // psb-lint: allow(determinism): idle-TTL bookkeeping — feeds stream reclaim only, never logits or billing
+                        entry.last_seen = Instant::now();
+                        entry.frames += 1;
+                        out
+                    }
+                    Err(err) => {
+                        // the engine already retired the session (a
+                        // failed rebase poisons it); retire the stream
+                        // with the root cause so later frames get it too
+                        let reason =
+                            format!("stream {stream} was dropped by a failed frame rebase: {err:#}");
+                        inner.live.remove(&stream);
+                        inner.retired.insert(stream, reason.clone());
+                        self.metrics.record_engine_error(&err);
+                        return Err(anyhow!("{reason}"));
+                    }
+                }
+            }
+            None => {
+                let seed = self.seed_ctr.fetch_add(1, Ordering::Relaxed);
+                let plan = PrecisionPlan::uniform(self.cfg.policy.n_low);
+                let out = self.engine.begin_session(plan, image.clone(), 1, seed)?;
+                let Some(session) = out.session else {
+                    return Err(anyhow!("engine returned no session handle for stream {stream}"));
+                };
+                self.engine.pin_session(session, true)?;
+                inner.live.insert(
+                    stream,
+                    StreamEntry {
+                        session,
+                        scheduler: Scheduler::new(self.cfg.policy),
+                        last_image: image,
+                        // psb-lint: allow(determinism): idle-TTL bookkeeping — feeds stream reclaim only, never logits or billing
+                        last_seen: Instant::now(),
+                        frames: 1,
+                    },
+                );
+                out
+            }
+        };
+        self.record_pass(&out, self.cfg.policy.n_low as u64);
+        // Stage-2 decision on the frame's entropy signal: escalate a
+        // *fork* so the pinned session stays at n_low for the next
+        // frame's rebase.  A failed escalation degrades to the rebased
+        // answer instead of dropping the frame.
+        let [_, _, _, fc] = out.exec.feat_shape;
+        let entropy = if fc > 0 && !out.exec.feat.is_empty() {
+            Scheduler::request_entropy(&out.exec.feat, fc)
+        } else {
+            0.0
+        };
+        let policy = self.cfg.policy;
+        let escalate = policy.n_high > policy.n_low
+            && inner.live.get_mut(&stream).is_some_and(|e| e.scheduler.decide(entropy));
+        let session = inner.live.get(&stream).map(|e| e.session);
+        let (final_out, escalated) = if escalate {
+            let session = session.ok_or_else(|| anyhow!("stream {stream} vanished mid-frame"))?;
+            match self.engine.fork_escalate(session, None, PrecisionPlan::uniform(policy.n_high)) {
+                Ok(hi) => {
+                    self.record_pass(&hi, (policy.n_high - policy.n_low) as u64);
+                    Metrics::inc(&self.metrics.escalated);
+                    Metrics::add(&self.metrics.samples_reused, policy.n_low as u64);
+                    (hi, true)
+                }
+                Err(err) => {
+                    self.metrics.record_engine_error(&err);
+                    (out, false)
+                }
+            }
+        } else {
+            (out, false)
+        };
+        let probs = softmax_rows(&final_out.exec.logits, self.num_classes);
+        let (class, confidence) = argmax_conf(&probs[..self.num_classes.min(probs.len())]);
+        let latency = start.elapsed();
+        self.metrics.latency.record(latency);
+        Metrics::inc(&self.metrics.completed);
+        self.metrics.sync_engine(self.engine.stats());
+        Ok(ClassifyResponse {
+            class,
+            confidence,
+            escalated,
+            n_used: if escalated { policy.n_high } else { policy.n_low },
+            n_reused: if escalated { policy.n_low } else { 0 },
+            latency,
+            entropy,
+            served: ServedVia::Stream,
+        })
+    }
+
+    /// Close a stream: unpin + drop its session and forget any retained
+    /// retirement reason (the id becomes reusable).  Idempotent.
+    pub fn close(&self, stream: StreamId) -> Result<()> {
+        let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
+        inner.retired.remove(&stream);
+        if let Some(entry) = inner.live.remove(&stream) {
+            self.engine.pin_session(entry.session, false)?;
+            self.engine.close_session(entry.session)?;
+        }
+        Ok(())
+    }
+
+    /// Live stream count (diagnostics/tests).
+    pub fn live_streams(&self) -> usize {
+        crate::coordinator::lock_unpoisoned(&self.inner).live.len()
+    }
+
+    /// Frames served on a live stream (opening frame included); `None`
+    /// once reclaimed or never opened.
+    pub fn frames(&self, stream: StreamId) -> Option<u64> {
+        crate::coordinator::lock_unpoisoned(&self.inner).live.get(&stream).map(|e| e.frames)
+    }
+
+    /// Reclaim every stream idle past the TTL except `keep` (the one
+    /// being served right now).  Reclaimed ids keep a named reason.
+    fn sweep_idle(&self, inner: &mut Inner, keep: Option<StreamId>) {
+        let ttl = self.cfg.idle_ttl;
+        let idle: Vec<StreamId> = inner
+            .live
+            .iter()
+            .filter(|(id, e)| Some(**id) != keep && e.last_seen.elapsed() > ttl)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in idle {
+            if let Some(entry) = inner.live.remove(&id) {
+                let _ = self.engine.pin_session(entry.session, false);
+                let _ = self.engine.close_session(entry.session);
+                inner.retired.insert(
+                    id,
+                    format!(
+                        "stream {id} was reclaimed after sitting idle past the {:?} TTL \
+                         ({} frames served); open a new stream id or close({id}) to reuse it",
+                        ttl, entry.frames
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Record one engine pass into the serving metrics.
+    fn record_pass(&self, out: &EngineOutput, samples: u64) {
+        Metrics::inc(&self.metrics.engine_calls);
+        Metrics::add(&self.metrics.gated_adds, out.gated_adds);
+        Metrics::add(&self.metrics.executed_adds, out.executed_adds);
+        Metrics::add(&self.metrics.backend_ns, out.backend_ns);
+        Metrics::add(&self.metrics.samples_paid, samples);
+    }
+}
+
+/// Fraction of frame elements whose bit pattern moved (exact, NaN-safe
+/// compare) — the registry-level change measure; the backend's own
+/// quantized diff may find even fewer changed pixels.
+fn changed_fraction(old: &[f32], new: &[f32]) -> f64 {
+    if old.len() != new.len() || new.is_empty() {
+        return 1.0;
+    }
+    let changed = old.iter().zip(new).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+    changed as f64 / new.len() as f64
+}
+
+fn argmax_conf(p: &[f32]) -> (usize, f32) {
+    let mut best = 0usize;
+    for (i, v) in p.iter().enumerate() {
+        if *v > p.get(best).copied().unwrap_or(f32::NEG_INFINITY) {
+            best = i;
+        }
+    }
+    (best, p.get(best).copied().unwrap_or(0.0))
+}

@@ -491,7 +491,7 @@ impl PsbNetwork {
         target: &PrecisionPlan,
         cache: &mut SimCache,
     ) -> Result<(PsbOutput, PassStats), PlanError> {
-        let result = self.refine_walk(x, state, target, cache);
+        let result = self.refine_walk(x, state, target, cache, false);
         if result.is_err() {
             // A failed pass (e.g. a non-monotonic target rejected at a
             // later layer) may have advanced earlier units' counts
@@ -506,12 +506,42 @@ impl PsbNetwork {
         result
     }
 
+    /// Re-anchor a session's cached walk on a *new input* of the same
+    /// geometry — the exact-arithmetic reference for
+    /// [`crate::backend::InferenceSession::rebase_input`].
+    ///
+    /// The simulator recomputes the full graph from the accumulated
+    /// counts (it is the correctness oracle, not the O(Δ) fast path),
+    /// which is bit-identical to a fresh `begin(x, seed)` at the current
+    /// plan because counts are additive and filter draws are
+    /// batch-shared.  The returned charge bills the pass as that fresh
+    /// begin: every row pays `live × n(region)` from zero, matching what
+    /// the IntKernel's delta rebase bills — so `backend_parity` can
+    /// assert rebase billing ≡ fresh-begin billing across backends.
+    pub fn rebase_cached(
+        &self,
+        x: &Tensor,
+        state: &mut ProgressiveState,
+        target: &PrecisionPlan,
+        cache: &mut SimCache,
+    ) -> Result<(PsbOutput, PassStats), PlanError> {
+        // the cache holds the *old* frame's activations; drop them so
+        // every layer recomputes over the new input
+        cache.reset();
+        let result = self.refine_walk(x, state, target, cache, true);
+        if result.is_err() {
+            cache.reset();
+        }
+        result
+    }
+
     fn refine_walk(
         &self,
         x: &Tensor,
         state: &mut ProgressiveState,
         target: &PrecisionPlan,
         cache: &mut SimCache,
+        bill_fresh: bool,
     ) -> Result<(PsbOutput, PassStats), PlanError> {
         let (b, h, w, _c) = dims4(x);
         target.validate(self.num_capacitors, Some(b * h * w))?;
@@ -566,10 +596,14 @@ impl PsbNetwork {
                         // currently holds, and which region each row was
                         // in last pass (the cached out-mask) — what makes
                         // the per-row charge exact through mask changes
-                        // and split collapse
-                        let prev_levels =
-                            (state.units[unit].n_lo(), state.units[unit].n_hi());
-                        let prev_rows: Option<Vec<bool>> = if reuse {
+                        // and split collapse.  A rebase bills as a fresh
+                        // pass: no previous rows, levels from zero.
+                        let prev_levels = if bill_fresh {
+                            (0, 0)
+                        } else {
+                            (state.units[unit].n_lo(), state.units[unit].n_hi())
+                        };
+                        let prev_rows: Option<Vec<bool>> = if reuse && !bill_fresh {
                             cache.masks.get(idx).cloned().flatten()
                         } else {
                             None
@@ -714,9 +748,12 @@ impl PsbNetwork {
                         unit_idx += 1;
                         let in_masked = masks[in_idx].is_some();
                         let splits = in_masked && n_hi > n_lo;
-                        let prev_levels =
-                            (state.units[unit].n_lo(), state.units[unit].n_hi());
-                        let prev_rows: Option<Vec<bool>> = if reuse {
+                        let prev_levels = if bill_fresh {
+                            (0, 0)
+                        } else {
+                            (state.units[unit].n_lo(), state.units[unit].n_hi())
+                        };
+                        let prev_rows: Option<Vec<bool>> = if reuse && !bill_fresh {
                             cache.masks.get(idx).cloned().flatten()
                         } else {
                             None
@@ -870,8 +907,11 @@ impl PsbNetwork {
                             if let Some(slot) = stats.layer_adds.get_mut(li) {
                                 *slot += out.len() as u64;
                             }
-                            if d > 0 {
-                                costs.charge_capacitor(out.len() as u64, d);
+                            // a rebase bills the BN's samples as a fresh
+                            // pass (all n of them), not the increment
+                            let d_bill = if bill_fresh { n } else { d };
+                            if d_bill > 0 {
+                                costs.charge_capacitor(out.len() as u64, d_bill);
                             }
                             (out, masks[in_idx].clone(), true, false)
                         }

@@ -843,6 +843,202 @@ fn prop_merged_sessions_refine_bit_identically_to_serial() {
     }
 }
 
+// ---- temporal delta rebase ----------------------------------------------
+
+/// `rebase_input` contract, property style: after any refinement chain,
+/// rebasing a session onto a new frame yields **logits and per-row
+/// charges bit-identical to a fresh `begin(new_frame, seed)`** at the
+/// session's current plan — on the exact sim (full-recompute reference)
+/// and the IntKernel's O(Δ) path (scalar and packed, several thread
+/// counts), for partially-changed, fully-changed and identical frames,
+/// and across chained rebases.
+#[test]
+fn prop_rebase_matches_fresh_begin_bit_identically() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let scalar = IntKernel::new(net.clone())
+        .unwrap()
+        .with_contraction(Contraction::Scalar);
+    let packed: Vec<IntKernel> = [0usize, 1, 3]
+        .iter()
+        .map(|&t| IntKernel::new(net.clone()).unwrap().with_threads(t))
+        .collect();
+    let mut backends: Vec<(String, &dyn Backend)> =
+        vec![("sim".into(), &sim), ("int-scalar".into(), &scalar)];
+    for (i, p) in packed.iter().enumerate() {
+        backends.push((format!("int-packed-t{}", [0, 1, 3][i]), p));
+    }
+    let seed = 17u64;
+    let x0 = batch(61, 2);
+    // partial frame: image 0's top two pixel rows drift, image 1 is
+    // untouched (rebase must not disturb the clean image's rows)
+    let mut x_part = x0.clone();
+    for v in x_part.data[..2 * 8 * 3].iter_mut() {
+        *v += 0.25;
+    }
+    let x_full = batch(62, 2);
+    let mask = top_rows_mask(2, 8, 8, 0.5);
+    // (chain of refines after begin(uniform 4), the plan the session
+    // ends at — the plan a fresh reference session must open with)
+    let chains: Vec<(Vec<PrecisionPlan>, PrecisionPlan)> = vec![
+        (vec![], PrecisionPlan::uniform(4)),
+        (vec![PrecisionPlan::uniform(8)], PrecisionPlan::uniform(8)),
+        (
+            vec![PrecisionPlan::spatial(mask.clone(), 4, 8)],
+            PrecisionPlan::spatial(mask.clone(), 4, 8),
+        ),
+    ];
+    for (chain, final_plan) in &chains {
+        let mut cross: Vec<Vec<f32>> = Vec::new();
+        for (bname, backend) in &backends {
+            let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&x0, seed).unwrap();
+            for target in chain {
+                sess.refine(target).unwrap();
+            }
+            for (fname, frame) in
+                [("partial", &x_part), ("full", &x_full), ("identical", &x0)]
+            {
+                let mut fork = sess.fork().unwrap();
+                let step = fork.rebase_input(frame).unwrap();
+                let mut fresh = backend.open(final_plan).unwrap();
+                let fresh_step = fresh.begin(frame, seed).unwrap();
+                assert_eq!(
+                    fork.logits().data,
+                    fresh.logits().data,
+                    "[{bname}] {fname} rebase logits must equal a fresh begin"
+                );
+                assert_eq!(
+                    step.costs, fresh_step.costs,
+                    "[{bname}] {fname} rebase must bill exactly a fresh pass"
+                );
+            }
+            // chained rebases: frame k's state rebases onto frame k+1
+            sess.rebase_input(&x_part).unwrap();
+            sess.rebase_input(&x_full).unwrap();
+            let mut fresh = backend.open(final_plan).unwrap();
+            fresh.begin(&x_full, seed).unwrap();
+            assert_eq!(
+                sess.logits().data,
+                fresh.logits().data,
+                "[{bname}] chained rebases must equal a fresh begin on the last frame"
+            );
+            cross.push(sess.logits().data.clone());
+        }
+        for (i, got) in cross.iter().enumerate() {
+            assert_eq!(got, &cross[0], "backend {i} diverged from backend 0 after rebases");
+        }
+    }
+}
+
+/// Rebased sessions keep refining: escalate after a rebase and the
+/// logits equal a fresh begin + refine on the new frame — the streaming
+/// serve loop's rebase → (maybe) escalate cycle is exact.
+#[test]
+fn rebased_sessions_refine_bit_identically() {
+    let (sim, int) = backend_pair();
+    let x0 = batch(71, 2);
+    let x1 = batch(72, 2);
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        sess.begin(&x0, 9).unwrap();
+        sess.rebase_input(&x1).unwrap();
+        sess.refine(&PrecisionPlan::uniform(16)).unwrap();
+        let mut fresh = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        fresh.begin(&x1, 9).unwrap();
+        fresh.refine(&PrecisionPlan::uniform(16)).unwrap();
+        assert_eq!(
+            sess.logits().data,
+            fresh.logits().data,
+            "[{}] refine after rebase must equal begin + refine on the new frame",
+            backend.name()
+        );
+    }
+}
+
+/// The point of the rebase: executed work is O(changed rows + halo),
+/// not O(frame).  An identical frame executes zero adds (while still
+/// billing the full fresh-pass charge), and a ~5%-changed frame on the
+/// 32×32 serving CNN executes a small fraction of a fresh pass.
+#[test]
+fn rebase_executed_adds_scale_with_changed_fraction() {
+    let mut rng = Xorshift128Plus::seed_from(11);
+    let mut net = psb::models::serving_cnn(&mut rng);
+    let batch32 = |seed: u64, b: usize| {
+        let mut rng = Xorshift128Plus::seed_from(seed);
+        Tensor::from_vec(
+            (0..b * 32 * 32 * 3).map(|_| rng.uniform()).collect(),
+            &[b, 32, 32, 3],
+        )
+    };
+    for s in 0..6 {
+        let x = batch32(s, 4);
+        net.forward::<Xorshift128Plus>(&x, true, None);
+    }
+    let psb = PsbNetwork::prepare(&net, PsbOptions { exact_integer: true, ..Default::default() });
+    let int = IntKernel::new(psb).unwrap();
+    let x0 = batch32(100, 2);
+    let mut sess = int.open(&PrecisionPlan::uniform(8)).unwrap();
+    sess.begin(&x0, 3).unwrap();
+    let mut fresh = int.open(&PrecisionPlan::uniform(8)).unwrap();
+    let fresh_step = fresh.begin(&x0, 3).unwrap();
+    // identical frame: all-rows reuse — zero executed adds, full charge
+    let mut same = sess.fork().unwrap();
+    let same_step = same.rebase_input(&x0).unwrap();
+    assert_eq!(same_step.executed_adds, 0, "identical frame must execute nothing");
+    assert_eq!(same_step.costs, fresh_step.costs, "…while billing a full fresh pass");
+    assert_eq!(same.logits().data, fresh.logits().data);
+    // drift the top 2 of 32 pixel rows (~6% of the frame) in both images
+    let frac = 2.0 / 32.0;
+    let mut x1 = x0.clone();
+    let img = 32 * 32 * 3;
+    for b in 0..2 {
+        for v in x1.data[b * img..b * img + 2 * 32 * 3].iter_mut() {
+            *v += 0.3;
+        }
+    }
+    let step = sess.rebase_input(&x1).unwrap();
+    let direct = one_shot(&int, &x1, &PrecisionPlan::uniform(8), 3);
+    assert_eq!(sess.logits().data, direct, "delta rebase must stay exact");
+    let ratio = step.executed_adds as f64 / fresh_step.executed_adds.max(1) as f64;
+    assert!(
+        ratio <= frac + 0.25,
+        "rebase of a {:.0}%-changed frame executed {:.0}% of a fresh pass (want ≤ {:.0}%; \
+         ε covers the conv halo and the always-rebuilt dense head)",
+        frac * 100.0,
+        ratio * 100.0,
+        (frac + 0.25) * 100.0
+    );
+    assert_eq!(step.costs, fresh_step.costs, "rebase bills as a fresh pass");
+}
+
+/// Rebase guards: geometry changes are rejected with the session
+/// intact, and rebase before begin errors by name.
+#[test]
+fn rebase_rejects_bad_frames_loudly() {
+    let (sim, int) = backend_pair();
+    let x = batch(81, 2);
+    for backend in [&sim as &dyn Backend, &int as &dyn Backend] {
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        assert!(
+            sess.rebase_input(&x).is_err(),
+            "[{}] rebase before begin must error",
+            backend.name()
+        );
+        sess.begin(&x, 2).unwrap();
+        let before = sess.logits().data.clone();
+        let wrong = batch(81, 3); // batch extent changed
+        assert!(
+            sess.rebase_input(&wrong).is_err(),
+            "[{}] geometry change must be rejected",
+            backend.name()
+        );
+        // the rejection is a no-op: the session still serves and refines
+        assert_eq!(sess.logits().data, before, "[{}] reject is a no-op", backend.name());
+        sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+    }
+}
+
 /// Merging rejects what it cannot keep bit-identical: mismatched plans
 /// hand the sessions back untouched, and the parts keep serving.
 #[test]

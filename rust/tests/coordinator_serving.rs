@@ -46,6 +46,7 @@ fn config(disabled: bool) -> CoordinatorConfig {
         policy: EscalationPolicy { n_low: 2, n_high: 4, disabled, ..Default::default() },
         seed: 3,
         pool_cap: 32,
+        stream_idle_ttl: std::time::Duration::from_secs(30),
     }
 }
 
@@ -220,6 +221,62 @@ fn sim_flat_serving_never_escalates_and_costs_less() {
     assert_eq!(esc_flat, 0);
     assert!(esc_adaptive > 0, "adaptive mode should escalate something");
     assert!(adds_adaptive > adds_flat, "{adds_adaptive} vs {adds_flat}");
+}
+
+// ---- streaming: temporal frame traffic over pinned sessions -------------
+
+#[test]
+fn sim_streams_serve_frames_via_rebase() {
+    let (psb, data) = sim_setup();
+    let coord = Coordinator::start_sim(config(false), psb).unwrap();
+    let (x0, _) = data.gather_test(&[0]);
+    let (x1, _) = data.gather_test(&[1]);
+    // frame 1 opens the stream (fresh pass, session pinned); frames 2-3
+    // rebase that session onto the drifting input
+    let r0 = coord.submit_frame(7, x0.data.clone()).unwrap();
+    assert_eq!(r0.served, psb::coordinator::ServedVia::Stream);
+    assert!(r0.class < 10 && r0.confidence > 0.0 && r0.confidence <= 1.0);
+    let mut drift = x0.data.clone();
+    drift[..2 * 32 * 3].copy_from_slice(&x1.data[..2 * 32 * 3]); // top 2 pixel rows move
+    let r1 = coord.submit_frame(7, drift).unwrap();
+    assert_eq!(r1.served, psb::coordinator::ServedVia::Stream);
+    assert!(r1.n_used == 2 || r1.n_used == 4);
+    assert_eq!(r1.n_reused, if r1.escalated { 2 } else { 0 });
+    let r2 = coord.submit_frame(7, x1.data.clone()).unwrap();
+    assert_eq!(r2.served, psb::coordinator::ServedVia::Stream);
+    // the stream counters flowed into the serving metrics and summary
+    assert_eq!(coord.metrics.stream_frames.load(Ordering::Relaxed), 2, "two rebased frames");
+    assert!(
+        coord.metrics.stream_rows_reused.load(Ordering::Relaxed) > 0,
+        "the mostly-unchanged frame must register reuse"
+    );
+    let mf = coord.metrics.stream_mean_frac();
+    assert!(mf > 0.0 && mf <= 1.0, "mean rebase fraction {mf}");
+    let summary = coord.metrics.summary();
+    assert!(summary.contains("stream="), "summary must surface streaming: {summary}");
+    // ordinary classify traffic keeps flowing next to the stream
+    let resp = coord.classify(x0.data).unwrap();
+    assert!(resp.class < 10);
+    coord.close_stream(7).unwrap();
+}
+
+#[test]
+fn int_streams_serve_frames_on_the_integer_backend() {
+    let (psb, data) = sim_setup();
+    let coord = Coordinator::start_int(config(false), psb).unwrap();
+    let (x0, _) = data.gather_test(&[2]);
+    let (x1, _) = data.gather_test(&[3]);
+    let r0 = coord.submit_frame(1, x0.data.clone()).unwrap();
+    let mut drift = x0.data;
+    drift[..2 * 32 * 3].copy_from_slice(&x1.data[..2 * 32 * 3]);
+    let r1 = coord.submit_frame(1, drift).unwrap();
+    for r in [&r0, &r1] {
+        assert_eq!(r.served, psb::coordinator::ServedVia::Stream);
+        assert!(r.class < 10 && r.confidence > 0.0);
+    }
+    assert_eq!(coord.metrics.stream_frames.load(Ordering::Relaxed), 1);
+    // the O(Δ) path reports real executed work through the metrics
+    assert!(coord.metrics.executed_adds.load(Ordering::Relaxed) > 0);
 }
 
 // ---- integer-engine tests: serving on the IntKernel backend -------------

@@ -485,6 +485,188 @@ fn close_while_queued_does_not_wedge_the_job_loop() {
     assert_eq!(ok.exec.logits.len(), 2 * NC);
 }
 
+// ---- pinned sessions + streaming frames ---------------------------------
+
+#[test]
+fn pinned_sessions_survive_pool_pressure() {
+    let mock = mock_backend();
+    let engine =
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let xa = image(1.0, 2);
+    let a = engine.begin_session(plan.clone(), xa.clone(), 2, 1).unwrap().session.unwrap();
+    engine.pin_session(a, true).unwrap();
+    // pressure: three more sessions through a cap-2 pool
+    let b = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap().session.unwrap();
+    let c = engine.begin_session(plan.clone(), image(3.0, 2), 2, 3).unwrap().session.unwrap();
+    let _d = engine.begin_session(plan.clone(), image(4.0, 2), 2, 4).unwrap().session.unwrap();
+    assert_eq!(engine.stats().sessions_open(), 2, "pool still bounded at capacity");
+    // the unpinned LRU sessions were evicted around the pinned one
+    let msg = format!(
+        "{:#}",
+        engine.refine_session(b, None, PrecisionPlan::uniform(16)).unwrap_err()
+    );
+    assert!(msg.contains("evicted"), "unpinned b must have been evicted: {msg}");
+    let _ = c;
+    // the pinned session outlived arbitrary pressure and still serves
+    let out = engine.refine_session(a, None, PrecisionPlan::uniform(16)).unwrap();
+    assert_eq!(out.exec.logits, expect_logits(&xa, &[0, 1], 1, 16));
+}
+
+#[test]
+fn unpinning_restores_lru_discipline() {
+    let mock = mock_backend();
+    let engine =
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap().session.unwrap();
+    engine.pin_session(a, true).unwrap();
+    engine.pin_session(a, false).unwrap();
+    let _b = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap();
+    let _c = engine.begin_session(plan.clone(), image(3.0, 2), 2, 3).unwrap();
+    let msg = format!(
+        "{:#}",
+        engine.refine_session(a, None, PrecisionPlan::uniform(16)).unwrap_err()
+    );
+    assert!(msg.contains("evicted"), "an unpinned session rejoins the LRU order: {msg}");
+}
+
+#[test]
+fn fully_pinned_pool_evicts_newcomers_by_name() {
+    // the registry's admission problem: when every slot is pinned, a new
+    // keep-session cannot be admitted — it is evicted immediately (and a
+    // later use names that), rather than growing the pool unboundedly
+    let mock = mock_backend();
+    let engine =
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let g = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap().session.unwrap();
+    let h = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap().session.unwrap();
+    engine.pin_session(g, true).unwrap();
+    engine.pin_session(h, true).unwrap();
+    let i = engine.begin_session(plan, image(3.0, 2), 2, 3).unwrap().session.unwrap();
+    assert_eq!(engine.stats().sessions_open(), 2, "pinned slots hold, newcomer bounced");
+    let msg = format!(
+        "{:#}",
+        engine.refine_session(i, None, PrecisionPlan::uniform(16)).unwrap_err()
+    );
+    assert!(msg.contains("evicted"), "the bounced newcomer must be named: {msg}");
+    // both pinned sessions still serve
+    assert!(engine.refine_session(g, None, PrecisionPlan::uniform(16)).is_ok());
+    assert!(engine.refine_session(h, None, PrecisionPlan::uniform(16)).is_ok());
+}
+
+#[test]
+fn submit_frame_rebases_the_pooled_session_bit_identically() {
+    let psb = tiny_psbnet();
+    let engine =
+        Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap();
+    let (h, w, c) = psb.input_hwc;
+    let img = h * w * c;
+    let mk_x = |tag: f32| -> Vec<f32> {
+        (0..2 * img).map(|i| (tag + i as f32 * 0.37).sin().abs()).collect()
+    };
+    let (x0, x1, x2) = (mk_x(0.3), mk_x(5.0), mk_x(9.0));
+    let id = engine
+        .begin_session(PrecisionPlan::uniform(4), x0, 2, 7)
+        .unwrap()
+        .session
+        .unwrap();
+    engine.pin_session(id, true).unwrap();
+    let f1 = engine.submit_frame(id, x1.clone()).unwrap();
+    assert_eq!(f1.session, Some(id), "the stream session stays pooled across frames");
+    let f2 = engine.submit_frame(id, x2.clone()).unwrap();
+    assert_eq!(engine.stats().stream_frames.load(Ordering::SeqCst), 2);
+    // oracle: fresh dedicated sessions on each frame, same seed
+    let oracle = |x: &Vec<f32>| -> Vec<f32> {
+        let backend = SimBackend::new(psb.clone());
+        let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+        sess.begin(&Tensor::from_vec(x.clone(), &[2, h, w, c]), 7).unwrap();
+        sess.logits().data.clone()
+    };
+    assert_eq!(f1.exec.logits, oracle(&x1), "frame 1 rebase ≡ fresh begin");
+    assert_eq!(f2.exec.logits, oracle(&x2), "frame 2 rebase ≡ fresh begin");
+}
+
+#[test]
+fn submit_frame_failures_answer_named_errors_never_dropped_replies() {
+    // 1. a backend whose sessions cannot rebase: the frame fails with
+    //    the backend's message, the session is retired with the cause
+    let mock = mock_backend();
+    let engine = Engine::spawn(mock_factory(&mock)).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let id = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap().session.unwrap();
+    let msg = format!("{:#}", engine.submit_frame(id, image(2.0, 2)).unwrap_err());
+    assert!(msg.contains("cannot rebase"), "capability gap must be loud: {msg}");
+    let msg = format!("{:#}", engine.submit_frame(id, image(3.0, 2)).unwrap_err());
+    assert!(
+        msg.contains("dropped by a failed frame rebase"),
+        "later frames must name the retirement: {msg}"
+    );
+    // 2. frames on closed / unknown sessions name what happened
+    let id2 = engine.begin_session(plan, image(4.0, 2), 2, 2).unwrap().session.unwrap();
+    engine.close_session(id2).unwrap();
+    let msg = format!("{:#}", engine.submit_frame(id2, image(5.0, 2)).unwrap_err());
+    assert!(msg.contains("was closed"), "frame-after-close must name the close: {msg}");
+    // 3. malformed frame geometry is rejected before touching the pool
+    let psb = tiny_psbnet();
+    let engine =
+        Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap();
+    let (h, w, c) = psb.input_hwc;
+    let x0: Vec<f32> = (0..h * w * c).map(|i| i as f32 * 0.01).collect();
+    let id = engine
+        .begin_session(PrecisionPlan::uniform(4), x0, 1, 3)
+        .unwrap()
+        .session
+        .unwrap();
+    assert!(engine.submit_frame(id, vec![0.0; 5]).is_err(), "ragged frame must be rejected");
+    // …and the session survived the rejection
+    let ok: Vec<f32> = (0..h * w * c).map(|i| i as f32 * 0.02).collect();
+    assert!(engine.submit_frame(id, ok).is_ok());
+}
+
+#[test]
+fn stream_registry_reclaims_idle_streams_with_a_named_reason() {
+    use psb::coordinator::{Metrics, StreamConfig, StreamRegistry};
+    let psb = tiny_psbnet();
+    let engine = Arc::new(
+        Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap(),
+    );
+    let (h, w, c) = psb.input_hwc;
+    let img = h * w * c;
+    let metrics = Arc::new(Metrics::default());
+    let registry = StreamRegistry::new(
+        engine.clone(),
+        metrics.clone(),
+        img,
+        2,
+        StreamConfig { idle_ttl: std::time::Duration::ZERO, ..Default::default() },
+    );
+    let frame = |tag: f32| -> Vec<f32> { (0..img).map(|i| (tag + i as f32 * 0.31).abs() % 1.0).collect() };
+    // stream 1 opens and serves; its second frame is a rebase (the
+    // sweep spares the stream being served even at a zero TTL)
+    let r = registry.submit_frame(1, frame(0.2)).unwrap();
+    assert_eq!(r.served, psb::coordinator::ServedVia::Stream);
+    let r = registry.submit_frame(1, frame(0.4)).unwrap();
+    assert_eq!(r.served, psb::coordinator::ServedVia::Stream);
+    assert_eq!(registry.frames(1), Some(2));
+    assert_eq!(registry.live_streams(), 1);
+    // a submit on another stream sweeps: with a zero TTL, stream 1 is
+    // now idle-reclaimed (its pinned session released)
+    registry.submit_frame(2, frame(0.5)).unwrap();
+    let msg = format!("{:#}", registry.submit_frame(1, frame(0.7)).unwrap_err());
+    assert!(
+        msg.contains("reclaimed") && msg.contains("idle"),
+        "frames on a reclaimed stream must carry the reclaim reason: {msg}"
+    );
+    // close() forgets the retirement; the id becomes usable again
+    registry.close(1).unwrap();
+    let r = registry.submit_frame(1, frame(0.9)).unwrap();
+    assert_eq!(r.served, psb::coordinator::ServedVia::Stream);
+    // reuse accounting flowed into the serving metrics
+    assert!(metrics.stream_frames.load(Ordering::SeqCst) >= 1);
+}
+
 // ---- helpers ------------------------------------------------------------
 
 fn tiny_psbnet() -> PsbNetwork {
