@@ -64,7 +64,7 @@ fn main() {
             inflight.push(coord.submit(x.data).unwrap());
         }
         for rx in inflight {
-            rx.recv().unwrap();
+            assert!(rx.recv().is_ok_and(|r| r.is_ok()), "request failed");
         }
         let elapsed = start.elapsed();
         let m = &coord.metrics;

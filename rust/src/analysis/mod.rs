@@ -44,6 +44,9 @@ pub enum RuleId {
     Determinism,
     /// Panicking calls on the serving hot path.
     NoPanic,
+    /// Raw `.lock()` in the coordinator (must route through
+    /// `lock_unpoisoned` so a peer panic cannot cascade).
+    LockHygiene,
     /// `unsafe` anywhere.
     Unsafe,
     /// `[[test]]`/`[[bench]]`/`[[example]]` entries vs files on disk.
@@ -58,6 +61,7 @@ impl RuleId {
             RuleId::FloatPurity => "float-purity",
             RuleId::Determinism => "determinism",
             RuleId::NoPanic => "no-panic",
+            RuleId::LockHygiene => "lock-hygiene",
             RuleId::Unsafe => "unsafe",
             RuleId::TargetManifest => "target-manifest",
             RuleId::Waiver => "waiver",
@@ -70,6 +74,7 @@ impl RuleId {
             "float-purity" => Some(RuleId::FloatPurity),
             "determinism" => Some(RuleId::Determinism),
             "no-panic" => Some(RuleId::NoPanic),
+            "lock-hygiene" => Some(RuleId::LockHygiene),
             "unsafe" => Some(RuleId::Unsafe),
             "target-manifest" => Some(RuleId::TargetManifest),
             _ => None,
@@ -206,7 +211,7 @@ fn parse_waiver_comment(text: &str) -> WaiverParse {
     let Some(rule) = RuleId::waivable(name) else {
         return WaiverParse::Err(format!(
             "unknown rule `{name}` in psb-lint waiver (known: float-purity, determinism, \
-             no-panic, unsafe, target-manifest)"
+             no-panic, lock-hygiene, unsafe, target-manifest)"
         ));
     };
     let tail = rest[close + 1..].trim();

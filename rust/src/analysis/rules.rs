@@ -10,9 +10,13 @@
 //!   iteration order is seeded per-process), no wall clocks or OS
 //!   randomness outside waived timing-report sites.
 //! * **no-panic** — the serving loop (`coordinator/`, `backend/`) must
-//!   degrade through `Engine::last_error` / `Metrics::engine_errors`,
+//!   degrade through `Engine::recent_errors` / `Metrics::engine_errors`,
 //!   not unwind: `unwrap()` / `expect(` / `panic!` / `todo!` /
 //!   `unimplemented!` are banned in non-test code.
+//! * **lock-hygiene** — coordinator mutexes must be taken through
+//!   `lock_unpoisoned`, which recovers a poisoned lock's data; a raw
+//!   `.lock()` there turns one thread's panic into a cascade of
+//!   `PoisonError` failures on every peer.
 //! * **unsafe** — the repo is `unsafe`-free; keep it that way.
 //!
 //! Rules are lexical on purpose: they catch the *tokens* that introduce
@@ -47,6 +51,13 @@ fn in_determinism_scope(path: &str) -> bool {
 /// Modules on the serving hot path where panicking calls are banned.
 fn in_panic_scope(path: &str) -> bool {
     path.starts_with("rust/src/coordinator/") || path.starts_with("rust/src/backend/")
+}
+
+/// Modules whose mutexes must be taken through
+/// `coordinator::lock_unpoisoned` (raw `.lock()` would cascade a peer
+/// panic as `PoisonError` on every later taker).
+fn in_lock_scope(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator/")
 }
 
 fn is_punct(t: &Token, c: char) -> bool {
@@ -147,6 +158,7 @@ pub fn scan_tokens(path: &str, lx: &Lexed) -> Vec<Finding> {
     let float_scope = in_float_scope(path);
     let det_scope = in_determinism_scope(path);
     let panic_scope = in_panic_scope(path);
+    let lock_scope = in_lock_scope(path);
     let mut out = Vec::new();
     let mut push = |rule: RuleId, line: u32, message: String| {
         out.push(Finding { rule, file: path.to_string(), line, message });
@@ -239,6 +251,22 @@ pub fn scan_tokens(path: &str, lx: &Lexed) -> Vec<Finding> {
                             format!("`{id}!` on the serving hot path (return an error instead)"),
                         );
                     }
+                }
+                if lock_scope
+                    && !in_test
+                    && id == "lock"
+                    && i > 0
+                    && is_punct(&toks[i - 1], '.')
+                    && is_punct_at(toks, i + 1, '(')
+                    && is_punct_at(toks, i + 2, ')')
+                {
+                    push(
+                        RuleId::LockHygiene,
+                        t.line,
+                        "raw `.lock()` in the coordinator (use `lock_unpoisoned` — a peer \
+                         thread's panic must not cascade as PoisonError)"
+                            .into(),
+                    );
                 }
             }
             _ => {}

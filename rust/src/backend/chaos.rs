@@ -1,0 +1,420 @@
+//! Deterministic fault injection: a [`ChaosBackend`] decorator that
+//! wraps any other backend and injects **named, scheduled** faults into
+//! its session operations.
+//!
+//! The point is to *prove* the serving stack's robustness story (see
+//! docs/ROBUSTNESS.md): PSB sessions are a pure function of
+//! `(plan, seed, input)`, so a supervisor can retry, resurrect, or
+//! degrade around any failure and the chaos test suite can assert the
+//! recovered answers are **bit-identical** to a never-faulted oracle.
+//! That assertion only works if the faults themselves are reproducible,
+//! so the schedule is a counter-based PRNG draw — op `k` of a schedule
+//! seeded `s` always faults the same way, independent of wall clock,
+//! thread timing, or OS randomness (psb-lint's determinism rules apply
+//! to this file like any other backend).
+//!
+//! ## Fault table
+//!
+//! Each executing session op (`begin`, `refine`, `rebase_input`) draws
+//! once from the schedule:
+//!
+//! | fault | effect | supervisor contract |
+//! |---|---|---|
+//! | transient | op fails with a `(transient)`-marked error, inner backend untouched | retry the op; resurrect the session if it was consumed |
+//! | permanent | op fails with a `(permanent)`-marked error | don't burn retries: degrade (escalations) or resurrect fresh (streams) |
+//! | slow | op succeeds after an injected delay | deadline budget absorbs it or the job times out |
+//! | poison | op succeeds; **every later** `refine`/`rebase` on this session fails `(transient)` | resurrection replaces the session |
+//! | geometry | op succeeds but the session reports truncated logits | geometry validation rejects the reply; retry/resurrect |
+//!
+//! `begin` maps a drawn `permanent` to `transient` — in this fault model
+//! permanence is a property of a *session's* escalation path, and a
+//! fresh begin is always a fresh roll.
+//!
+//! Merging is declined (`MergeOutcome::Unsupported`), so the engine
+//! falls back to serial dispatch: each constituent keeps its own fault
+//! draw and the bit-identity contract of merge stays out of scope.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::precision::{PlanContext, PrecisionPlan};
+use crate::rng::{Rng, Xorshift128Plus};
+use crate::sim::tensor::Tensor;
+
+use super::{Backend, BackendFactory, CostReport, InferenceSession, MergeOutcome, StepReport};
+
+/// Fault mix and timing of a chaos schedule.  Rates are per-mille of
+/// session ops; the remainder of the table executes clean.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Schedule seed: same seed + same op order → same faults.
+    pub seed: u64,
+    /// ‰ of ops that fail with a retryable `(transient)` error.
+    pub transient_permille: u32,
+    /// ‰ of ops that fail with a non-retryable `(permanent)` error.
+    pub permanent_permille: u32,
+    /// ‰ of ops delayed by `slow_op` before executing normally.
+    pub slow_permille: u32,
+    /// ‰ of ops that succeed but poison the session's future refines.
+    pub poison_permille: u32,
+    /// ‰ of ops that succeed but report wrong-geometry logits.
+    pub geometry_permille: u32,
+    /// Injected delay of a slow op.
+    pub slow_op: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            transient_permille: 60,
+            permanent_permille: 5,
+            slow_permille: 30,
+            poison_permille: 20,
+            geometry_permille: 15,
+            slow_op: Duration::from_millis(2),
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// A schedule with the default mix under `seed`.
+    pub fn seeded(seed: u64) -> ChaosConfig {
+        ChaosConfig { seed, ..ChaosConfig::default() }
+    }
+
+    fn total_permille(&self) -> u32 {
+        self.transient_permille
+            + self.permanent_permille
+            + self.slow_permille
+            + self.poison_permille
+            + self.geometry_permille
+    }
+}
+
+/// Counters of what a schedule actually injected (shared with the test
+/// harness via [`chaos_factory`]).
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    /// Session ops that drew from the schedule.
+    pub ops: AtomicU64,
+    pub transient: AtomicU64,
+    pub permanent: AtomicU64,
+    pub slow: AtomicU64,
+    /// Poison faults armed (the op that set the flag).
+    pub poison_armed: AtomicU64,
+    /// Ops that failed because their session was already poisoned.
+    pub poison_hits: AtomicU64,
+    pub geometry: AtomicU64,
+}
+
+impl ChaosStats {
+    /// Total injected faults of every kind (poison counted when armed).
+    pub fn total_faults(&self) -> u64 {
+        self.transient.load(Ordering::Relaxed)
+            + self.permanent.load(Ordering::Relaxed)
+            + self.slow.load(Ordering::Relaxed)
+            + self.poison_armed.load(Ordering::Relaxed)
+            + self.geometry.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    Transient,
+    Permanent,
+    Slow,
+    Poison,
+    Geometry,
+}
+
+/// The deterministic schedule: a monotone op counter whose k-th draw is
+/// a pure function of `(cfg.seed, k)`.
+struct Schedule {
+    cfg: ChaosConfig,
+    ops: AtomicU64,
+    stats: Arc<ChaosStats>,
+}
+
+impl Schedule {
+    /// Draw the next op's fault (if any).  `None` = clean op.
+    fn draw(&self) -> (u64, Option<Fault>) {
+        let k = self.ops.fetch_add(1, Ordering::SeqCst);
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
+        // Counter-based: a fresh generator per op, keyed by (seed, k),
+        // so the k-th op faults identically no matter which thread or
+        // session executes it.
+        let mut rng =
+            Xorshift128Plus::seed_from(self.cfg.seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let roll = (rng.next_u64() % 1000) as u32;
+        let c = &self.cfg;
+        let mut edge = c.transient_permille;
+        if roll < edge {
+            return (k, Some(Fault::Transient));
+        }
+        edge += c.permanent_permille;
+        if roll < edge {
+            return (k, Some(Fault::Permanent));
+        }
+        edge += c.slow_permille;
+        if roll < edge {
+            return (k, Some(Fault::Slow));
+        }
+        edge += c.poison_permille;
+        if roll < edge {
+            return (k, Some(Fault::Poison));
+        }
+        edge += c.geometry_permille;
+        if roll < edge {
+            return (k, Some(Fault::Geometry));
+        }
+        (k, None)
+    }
+}
+
+/// Decorator backend: every session it opens is a [`ChaosSession`]
+/// drawing faults from the shared schedule.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    schedule: Arc<Schedule>,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn Backend>, cfg: ChaosConfig) -> ChaosBackend {
+        let stats = Arc::new(ChaosStats::default());
+        ChaosBackend { inner, schedule: Arc::new(Schedule { cfg, ops: AtomicU64::new(0), stats }) }
+    }
+
+    /// Injection counters of this backend's schedule.
+    pub fn stats(&self) -> Arc<ChaosStats> {
+        Arc::clone(&self.schedule.stats)
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.inner.input_hwc()
+    }
+
+    fn plan_context(&self, batch: usize) -> PlanContext<'static> {
+        self.inner.plan_context(batch)
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        let inner = self.inner.open(plan)?;
+        Ok(Box::new(ChaosSession {
+            inner,
+            schedule: Arc::clone(&self.schedule),
+            poisoned: false,
+            garbled: None,
+        }))
+    }
+
+    fn merge_sessions(&self, sessions: Vec<Box<dyn InferenceSession>>) -> Result<MergeOutcome> {
+        // Declined on purpose: serial dispatch keeps one schedule draw
+        // per constituent op, which the oracle replay can reproduce.
+        Ok(MergeOutcome::Unsupported(sessions))
+    }
+}
+
+/// A session that consults the schedule before every executing op.
+pub struct ChaosSession {
+    inner: Box<dyn InferenceSession>,
+    schedule: Arc<Schedule>,
+    /// Armed by a poison fault: all later refine/rebase ops fail.
+    poisoned: bool,
+    /// Set by a geometry fault: reported instead of the real logits
+    /// until the next successful op.
+    garbled: Option<Tensor>,
+}
+
+impl ChaosSession {
+    /// Apply the k-th draw around `op`.  Returns `Ok(fault)` when the
+    /// inner op should still run (clean / slow / poison / geometry),
+    /// `Err` when the op fails outright.
+    fn gate(&mut self, op: &'static str, map_permanent: bool) -> Result<Option<Fault>> {
+        let st = Arc::clone(&self.schedule.stats);
+        if self.poisoned && op != "begin" {
+            st.poison_hits.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("chaos: session poisoned, {op} refused (transient)");
+        }
+        let (k, fault) = self.schedule.draw();
+        let fault = match fault {
+            // A fresh begin is always a fresh roll; permanence only
+            // makes sense for a session's escalation path.
+            Some(Fault::Permanent) if map_permanent => Some(Fault::Transient),
+            f => f,
+        };
+        match fault {
+            Some(Fault::Transient) => {
+                st.transient.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("chaos: injected fault #{k} on {op} (transient)");
+            }
+            Some(Fault::Permanent) => {
+                st.permanent.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("chaos: injected fault #{k} on {op} (permanent)");
+            }
+            Some(Fault::Slow) => {
+                st.slow.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.schedule.cfg.slow_op);
+                Ok(Some(Fault::Slow))
+            }
+            Some(Fault::Poison) => {
+                st.poison_armed.fetch_add(1, Ordering::Relaxed);
+                self.poisoned = true;
+                Ok(Some(Fault::Poison))
+            }
+            Some(Fault::Geometry) => {
+                st.geometry.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(Fault::Geometry))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// After a successful inner op: garble or clear the reported logits
+    /// per the drawn fault.
+    fn settle(&mut self, fault: Option<Fault>) {
+        if fault == Some(Fault::Geometry) {
+            let real = self.inner.logits();
+            let rows = real.shape.first().copied().unwrap_or(0);
+            let cols = real.shape.get(1).copied().unwrap_or(0);
+            let keep = rows.saturating_sub(1);
+            let mut bad = Tensor::zeros(&[keep, cols]);
+            bad.data.copy_from_slice(&real.data[..keep * cols]);
+            self.garbled = Some(bad);
+        } else {
+            self.garbled = None;
+        }
+    }
+}
+
+impl InferenceSession for ChaosSession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        let fault = self.gate("begin", true)?;
+        let report = self.inner.begin(x, seed)?;
+        self.settle(fault);
+        Ok(report)
+    }
+
+    fn refine(&mut self, target: &PrecisionPlan) -> Result<StepReport> {
+        let fault = self.gate("refine", false)?;
+        let report = self.inner.refine(target)?;
+        self.settle(fault);
+        Ok(report)
+    }
+
+    fn narrow(&mut self, rows: &[usize]) -> Result<()> {
+        // Bookkeeping only — no schedule draw, so narrowed and
+        // un-narrowed dispatch orders consume the same op counts.
+        self.inner.narrow(rows)
+    }
+
+    fn fork(&self) -> Result<Box<dyn InferenceSession>> {
+        let inner = self.inner.fork()?;
+        Ok(Box::new(ChaosSession {
+            inner,
+            schedule: Arc::clone(&self.schedule),
+            poisoned: self.poisoned,
+            garbled: None,
+        }))
+    }
+
+    fn rebase_input(&mut self, x: &Tensor) -> Result<StepReport> {
+        let fault = self.gate("rebase", false)?;
+        let report = self.inner.rebase_input(x)?;
+        self.settle(fault);
+        Ok(report)
+    }
+
+    fn logits(&self) -> &Tensor {
+        match &self.garbled {
+            Some(bad) => bad,
+            None => self.inner.logits(),
+        }
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        self.inner.feat()
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        self.inner.plan()
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        self.inner.cost_report()
+    }
+
+    fn part_rows(&self) -> Vec<usize> {
+        self.inner.part_rows()
+    }
+
+    fn part_steps(&self) -> Vec<StepReport> {
+        self.inner.part_steps()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Wrap `inner` in a chaos schedule.  Returns the decorated factory and
+/// the shared injection counters (the factory is `FnOnce` on a foreign
+/// thread, so the stats handle is created up front).
+pub fn chaos_factory(inner: BackendFactory, cfg: ChaosConfig) -> (BackendFactory, Arc<ChaosStats>) {
+    let stats = Arc::new(ChaosStats::default());
+    let handle = Arc::clone(&stats);
+    let factory: BackendFactory = Box::new(move || {
+        let backend = inner()?;
+        Ok(Box::new(ChaosBackend {
+            inner: backend,
+            schedule: Arc::new(Schedule { cfg, ops: AtomicU64::new(0), stats }),
+        }) as Box<dyn Backend>)
+    });
+    (factory, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draws(seed: u64, n: u64) -> Vec<Option<Fault>> {
+        let sched = Schedule {
+            cfg: ChaosConfig::seeded(seed),
+            ops: AtomicU64::new(0),
+            stats: Arc::new(ChaosStats::default()),
+        };
+        (0..n).map(|_| sched.draw().1).collect()
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_and_counter() {
+        assert_eq!(draws(7, 500), draws(7, 500));
+        assert_ne!(draws(7, 500), draws(8, 500), "different seeds differ somewhere in 500 ops");
+    }
+
+    #[test]
+    fn default_mix_injects_every_kind_eventually() {
+        let seen: Vec<Option<Fault>> = draws(42, 4000);
+        for want in
+            [Fault::Transient, Fault::Permanent, Fault::Slow, Fault::Poison, Fault::Geometry]
+        {
+            assert!(seen.iter().any(|f| *f == Some(want)), "no {want:?} in 4000 draws");
+        }
+        let clean = seen.iter().filter(|f| f.is_none()).count();
+        assert!(clean > 3000, "default mix must stay mostly clean, got {clean}/4000");
+    }
+
+    #[test]
+    fn rates_sum_below_one() {
+        assert!(ChaosConfig::default().total_permille() < 1000);
+    }
+}

@@ -40,6 +40,7 @@
 // lints keep the compiler enforcing it too (CI runs `-D warnings`).
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod chaos;
 pub mod intkernel;
 pub mod merged;
 pub mod pjrt;
@@ -51,6 +52,7 @@ use crate::costs::CostCounter;
 use crate::precision::{PlanContext, PrecisionPlan};
 use crate::sim::tensor::Tensor;
 
+pub use chaos::{chaos_factory, ChaosBackend, ChaosConfig, ChaosStats};
 pub use intkernel::IntKernel;
 pub use merged::MergedSession;
 pub use pjrt::PjrtBackend;

@@ -14,9 +14,15 @@
 //! Cross-batch coalescing of escalation groups happens downstream, in
 //! the engine's dispatch window ([`drain_ready`] + session merge),
 //! which preserves each group's capacitor state bit-exactly.
+//!
+//! All timing flows through [`Clock`], so linger behaviour is testable
+//! on a virtual clock; in virtual mode the channel wait is polled in
+//! short real slices while the deadline is evaluated in virtual time.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::coordinator::clock::Clock;
 
 /// Drain whatever is already queued on `rx` behind a blocking first
 /// item into one dispatch batch, up to `max` items — the zero-latency
@@ -35,11 +41,12 @@ pub fn drain_ready<T>(rx: &Receiver<T>, first: T, max: usize) -> Vec<T> {
     batch
 }
 
-/// One queued request: the image plus its enqueue time and an opaque tag
-/// the caller uses to route the response.
+/// One queued request: the image plus its enqueue time (an offset on the
+/// batcher's [`Clock`]) and an opaque tag the caller uses to route the
+/// response.
 pub struct Pending<T> {
     pub image: Vec<f32>,
-    pub enqueued: Instant,
+    pub enqueued: Duration,
     pub tag: T,
 }
 
@@ -68,6 +75,11 @@ pub struct FormedBatch<T> {
     pub oldest_wait: Duration,
 }
 
+/// How long a virtual-clock batcher blocks on the real channel between
+/// virtual-deadline checks.  Short enough that a test advancing the
+/// clock is observed promptly; long enough not to busy-spin.
+const VIRTUAL_POLL: Duration = Duration::from_micros(200);
+
 /// Pull requests off `rx` and form batches, invoking `dispatch` for each.
 /// Runs until the channel closes and all pending work is flushed.
 /// `dispatch` may block (e.g. waiting on the engine); requests keep
@@ -76,6 +88,7 @@ pub fn run_batcher<T>(
     rx: Receiver<Pending<T>>,
     cfg: BatcherConfig,
     image_len: usize,
+    clock: Clock,
     mut dispatch: impl FnMut(FormedBatch<T>),
 ) {
     let mut hold: Vec<Pending<T>> = Vec::with_capacity(cfg.batch_size);
@@ -87,30 +100,44 @@ pub fn run_batcher<T>(
             }
         } else {
             let deadline = hold[0].enqueued + cfg.linger;
-            // psb-lint: allow(determinism): linger-deadline clock — batching policy timing only, never feeds logits or billing
-            let now = Instant::now();
+            let now = clock.now();
             if hold.len() >= cfg.batch_size || now >= deadline {
-                dispatch(form(&mut hold, cfg.batch_size, image_len));
+                dispatch(form(&mut hold, cfg.batch_size, image_len, now));
                 continue;
             }
-            match rx.recv_timeout(deadline - now) {
+            // On a virtual clock real recv_timeout durations are
+            // meaningless; poll in short real slices and re-check the
+            // virtual deadline each wakeup.
+            let wait =
+                if clock.is_virtual() { VIRTUAL_POLL } else { deadline.saturating_sub(now) };
+            match rx.recv_timeout(wait) {
                 Ok(p) => hold.push(p),
                 Err(RecvTimeoutError::Timeout) => {
-                    dispatch(form(&mut hold, cfg.batch_size, image_len));
+                    let now = clock.now();
+                    if now >= deadline || hold.len() >= cfg.batch_size {
+                        dispatch(form(&mut hold, cfg.batch_size, image_len, now));
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
     }
     while !hold.is_empty() {
-        dispatch(form(&mut hold, cfg.batch_size, image_len));
+        let now = clock.now();
+        dispatch(form(&mut hold, cfg.batch_size, image_len, now));
     }
 }
 
-fn form<T>(hold: &mut Vec<Pending<T>>, batch_size: usize, image_len: usize) -> FormedBatch<T> {
+fn form<T>(
+    hold: &mut Vec<Pending<T>>,
+    batch_size: usize,
+    image_len: usize,
+    now: Duration,
+) -> FormedBatch<T> {
     let take = hold.len().min(batch_size);
     let drained: Vec<Pending<T>> = hold.drain(..take).collect();
-    let oldest_wait = drained.iter().map(|p| p.enqueued.elapsed()).max().unwrap_or_default();
+    let oldest_wait =
+        drained.iter().map(|p| now.saturating_sub(p.enqueued)).max().unwrap_or_default();
     let mut x = vec![0.0f32; batch_size * image_len];
     let mut tags = Vec::with_capacity(take);
     for (i, p) in drained.into_iter().enumerate() {
@@ -129,12 +156,14 @@ mod tests {
     fn collect_batches<T: Send + 'static>(
         cfg: BatcherConfig,
         image_len: usize,
-        feed: impl FnOnce(mpsc::Sender<Pending<T>>) + Send + 'static,
+        clock: Clock,
+        feed: impl FnOnce(mpsc::Sender<Pending<T>>, Clock) + Send + 'static,
     ) -> Vec<FormedBatch<T>> {
         let (tx, rx) = mpsc::channel();
-        let feeder = std::thread::spawn(move || feed(tx));
+        let feed_clock = clock.clone();
+        let feeder = std::thread::spawn(move || feed(tx, feed_clock));
         let mut batches = Vec::new();
-        run_batcher(rx, cfg, image_len, |b| batches.push(b));
+        run_batcher(rx, cfg, image_len, clock, |b| batches.push(b));
         assert!(feeder.join().is_ok(), "feeder thread panicked");
         batches
     }
@@ -142,9 +171,9 @@ mod tests {
     #[test]
     fn full_batches_depart_immediately() {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
-        let batches = collect_batches(cfg, 2, |tx| {
+        let batches = collect_batches(cfg, 2, Clock::real(), |tx, clock| {
             for i in 0..8usize {
-                let p = Pending { image: vec![i as f32; 2], enqueued: Instant::now(), tag: i };
+                let p = Pending { image: vec![i as f32; 2], enqueued: clock.now(), tag: i };
                 assert!(tx.send(p).is_ok(), "batcher hung up early");
             }
         });
@@ -157,8 +186,8 @@ mod tests {
     #[test]
     fn linger_flushes_partial_batch_with_padding() {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) };
-        let batches = collect_batches(cfg, 3, |tx| {
-            let p = Pending { image: vec![1.0; 3], enqueued: Instant::now(), tag: 7u8 };
+        let batches = collect_batches(cfg, 3, Clock::real(), |tx, clock| {
+            let p = Pending { image: vec![1.0; 3], enqueued: clock.now(), tag: 7u8 };
             assert!(tx.send(p).is_ok(), "batcher hung up early");
             // keep the channel open past the linger deadline
             std::thread::sleep(Duration::from_millis(40));
@@ -170,11 +199,35 @@ mod tests {
     }
 
     #[test]
+    fn virtual_clock_linger_fires_only_when_advanced() {
+        let clock = Clock::virtual_clock();
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(3) };
+        let batches = collect_batches(cfg, 1, clock.clone(), move |tx, clock| {
+            let p = Pending { image: vec![2.0], enqueued: clock.now(), tag: 1u8 };
+            assert!(tx.send(p).is_ok(), "batcher hung up early");
+            // real time passes but virtual time does not: no flush yet
+            std::thread::sleep(Duration::from_millis(20));
+            // jump virtual time past the linger deadline
+            clock.advance(Duration::from_secs(5));
+            // give the poll loop a real slice to observe it
+            std::thread::sleep(Duration::from_millis(20));
+            let p = Pending { image: vec![3.0], enqueued: clock.now(), tag: 2u8 };
+            assert!(tx.send(p).is_ok(), "batcher hung up early");
+        });
+        // first batch departed on the virtual deadline, before the
+        // second request arrived; the second flushed on close
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].tags, vec![1]);
+        assert!(batches[0].oldest_wait >= Duration::from_secs(3));
+        assert_eq!(batches[1].tags, vec![2]);
+    }
+
+    #[test]
     fn close_flushes_everything() {
         let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
-        let batches = collect_batches(cfg, 1, |tx| {
+        let batches = collect_batches(cfg, 1, Clock::real(), |tx, clock| {
             for i in 0..6u8 {
-                let p = Pending { image: vec![0.0], enqueued: Instant::now(), tag: i };
+                let p = Pending { image: vec![0.0], enqueued: clock.now(), tag: i };
                 assert!(tx.send(p).is_ok(), "batcher hung up early");
             }
         });

@@ -1,0 +1,134 @@
+//! The coordinator's clock facade: every serving-policy timing decision
+//! (batcher linger, stream idle-TTL, supervisor deadlines and backoff)
+//! reads time through a [`Clock`] instead of calling `Instant::now`
+//! directly.
+//!
+//! Two modes:
+//!
+//! * [`Clock::real`] — monotonic wall time since a process-wide epoch.
+//!   The production default.
+//! * [`Clock::virtual_clock`] — a shared atomic nanosecond counter that
+//!   only moves when a test calls [`Clock::advance`] (or when a
+//!   supervised retry "sleeps", which advances it instead of blocking).
+//!   Chaos and TTL tests drive deadlines, lingers, and breaker cooldowns
+//!   deterministically and without real sleeps.
+//!
+//! This is the one sanctioned wall-clock site in `coordinator/`: psb-lint
+//! bans `Instant::now` across the determinism scope, and routing policy
+//! timing through here shrank the waiver list to this single file.
+//! Nothing read from a `Clock` may feed logits or `charge_rows_exact`
+//! billing — clocks gate *when* work runs and *how long* callers wait,
+//! never *what* the backend computes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonic time source: real (process epoch) or virtual (test-driven
+/// atomic nanoseconds).  Cheap to clone; clones of a virtual clock share
+/// the same timeline.
+#[derive(Clone)]
+pub enum Clock {
+    /// Wall time since the process-wide epoch.
+    Real,
+    /// Shared nanosecond counter, advanced explicitly.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Clock::Real => write!(f, "Clock::Real"),
+            Clock::Virtual(ns) => {
+                write!(f, "Clock::Virtual({}ns)", ns.load(Ordering::Relaxed))
+            }
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::Real
+    }
+}
+
+fn real_now() -> Duration {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    // psb-lint: allow(determinism): the clock facade's one real wall-clock read — feeds linger/TTL/deadline policy and latency histograms only, never logits or billing
+    Instant::now().saturating_duration_since(*EPOCH.get_or_init(Instant::now))
+}
+
+impl Clock {
+    /// The production clock.
+    pub fn real() -> Clock {
+        Clock::Real
+    }
+
+    /// A fresh virtual clock starting at zero.  Clone it into every
+    /// component that should share the timeline.
+    pub fn virtual_clock() -> Clock {
+        Clock::Virtual(Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Nanoseconds (as a `Duration`) since this clock's epoch.
+    pub fn now(&self) -> Duration {
+        match self {
+            Clock::Real => real_now(),
+            Clock::Virtual(ns) => Duration::from_nanos(ns.load(Ordering::SeqCst)),
+        }
+    }
+
+    /// Wait out `d`: a real clock blocks the thread, a virtual clock
+    /// advances its counter and returns immediately — so supervised
+    /// retry backoff costs zero wall time in tests while still consuming
+    /// the deadline budget deterministically.
+    pub fn sleep(&self, d: Duration) {
+        match self {
+            Clock::Real => std::thread::sleep(d),
+            Clock::Virtual(ns) => {
+                ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Advance a virtual clock (no-op on a real clock, which advances
+    /// itself).  Test hook for expiring TTLs, lingers, and breaker
+    /// cooldowns without sleeping.
+    pub fn advance(&self, d: Duration) {
+        if let Clock::Virtual(ns) = self {
+            ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+        }
+    }
+
+    /// True when this is a test-virtual clock (pollers shorten their
+    /// real channel timeouts so virtual deadlines are observed promptly).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_shared_and_explicit() {
+        let c = Clock::virtual_clock();
+        let c2 = c.clone();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c2.now(), Duration::from_millis(5), "clones share the timeline");
+        c2.sleep(Duration::from_millis(7));
+        assert_eq!(c.now(), Duration::from_millis(12), "virtual sleep advances, never blocks");
+    }
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = Clock::real();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        c.advance(Duration::from_secs(100)); // no-op on real clocks
+        assert!(c.now() < a + Duration::from_secs(50));
+    }
+}

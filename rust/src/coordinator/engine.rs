@@ -17,23 +17,49 @@
 //! would have produced (bit-identity is the backends' merge contract).
 //!
 //! Failures are kept twofold: each job's error is returned to its
-//! caller, *and* the most recent backend failure is recorded so a later
-//! `submit` against a dead engine can still report the root cause.
+//! caller, *and* recent backend failures are recorded in a bounded
+//! [`ErrorRing`] so a later `submit` against a dead engine reports the
+//! root cause and a cascade stays diagnosable post-mortem
+//! ([`Engine::recent_errors`]).  Backend calls run under a panic guard
+//! ([`no_unwind`]): a panicking backend op becomes a named, transient
+//! error for that one job instead of killing the engine thread.
 //! Closed and evicted session ids are never reused, and a `Refine`
 //! against one names what happened to it.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, BackendFactory, InferenceSession, MergeOutcome, StepReport};
+use crate::coordinator::metrics::ErrorRing;
 use crate::precision::PrecisionPlan;
 use crate::runtime::Execution;
 use crate::sim::tensor::Tensor;
+
+/// Run a backend call under a panic guard: an unwinding backend op is
+/// converted into a named error (marked `(transient)` — a retry against
+/// a fresh or resurrected session may well succeed) so one poisoned op
+/// cannot take down the engine thread and every other pooled session
+/// with it.
+fn no_unwind<T>(what: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow!("backend panicked during {what}: {msg} (transient)"))
+        }
+    }
+}
 
 /// Engine-thread-local session handle.
 pub type SessionId = u64;
@@ -336,8 +362,9 @@ struct BeginReq {
 pub struct Engine {
     tx: mpsc::Sender<EngineJob>,
     handle: Option<JoinHandle<()>>,
-    /// Most recent backend/session failure, for post-mortem `submit`s.
-    fail: Arc<Mutex<Option<String>>>,
+    /// Recent backend/session failures, for post-mortem `submit`s and
+    /// cascade diagnosis.
+    fail: Arc<ErrorRing>,
     stats: Arc<EngineStats>,
 }
 
@@ -352,7 +379,7 @@ impl Engine {
 
     /// [`Engine::spawn`] with explicit tuning.
     pub fn spawn_with(factory: BackendFactory, cfg: EngineConfig) -> Result<Engine> {
-        let fail = Arc::new(Mutex::new(None::<String>));
+        let fail = Arc::new(ErrorRing::default());
         let stats = Arc::new(EngineStats::default());
         let fail_worker = fail.clone();
         let stats_worker = stats.clone();
@@ -361,13 +388,13 @@ impl Engine {
         let handle = std::thread::Builder::new()
             .name("psb-engine".into())
             .spawn(move || {
-                let backend: Box<dyn Backend> = match factory() {
+                let backend: Box<dyn Backend> = match no_unwind("construction", factory) {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
                         b
                     }
                     Err(e) => {
-                        *crate::coordinator::lock_unpoisoned(&fail_worker) = Some(format!("{e:#}"));
+                        fail_worker.push(format!("{e:#}"));
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
@@ -420,9 +447,7 @@ impl Engine {
                                                 Ok(out)
                                             }
                                             Err(e) => {
-                                                *crate::coordinator::lock_unpoisoned(
-                                                    &fail_worker,
-                                                ) = Some(format!("{e:#}"));
+                                                fail_worker.push(format!("{e:#}"));
                                                 Err(e)
                                             }
                                         };
@@ -443,9 +468,7 @@ impl Engine {
                                                     .fetch_add(1, Ordering::Relaxed);
                                             }
                                             Err(e) => {
-                                                *crate::coordinator::lock_unpoisoned(
-                                                    &fail_worker,
-                                                ) = Some(format!("{e:#}"));
+                                                fail_worker.push(format!("{e:#}"));
                                             }
                                         }
                                         let _ = reply.send(result);
@@ -454,8 +477,7 @@ impl Engine {
                                         let result =
                                             fork_escalate_job(&pool, session, rows, &plan);
                                         if let Err(e) = &result {
-                                            *crate::coordinator::lock_unpoisoned(&fail_worker) =
-                                                Some(format!("{e:#}"));
+                                            fail_worker.push(format!("{e:#}"));
                                         }
                                         let _ = reply.send(result);
                                     }
@@ -503,7 +525,13 @@ impl Engine {
 
     /// Most recent backend/session failure observed by the engine.
     pub fn last_error(&self) -> Option<String> {
-        crate::coordinator::lock_unpoisoned(&self.fail).clone()
+        self.fail.last()
+    }
+
+    /// Recent backend/session failures, oldest first (bounded ring) —
+    /// the post-mortem view of a cascade, not just its last symptom.
+    pub fn recent_errors(&self) -> Vec<String> {
+        self.fail.to_vec()
     }
 
     /// Live pool / merge counters.
@@ -599,7 +627,7 @@ fn dispatch_refines(
     pool: &mut SessionPool,
     refines: Vec<RefineReq>,
     stats: &EngineStats,
-    fail: &Mutex<Option<String>>,
+    fail: &ErrorRing,
 ) {
     if refines.is_empty() {
         return;
@@ -630,7 +658,7 @@ fn dispatch_refines(
             match take_and_narrow(pool, &req) {
                 Ok(sess) => ready.push((req, sess)),
                 Err(e) => {
-                    *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+                    fail.push(format!("{e:#}"));
                     let _ = req.reply.send(Err(e));
                 }
             }
@@ -643,10 +671,10 @@ fn dispatch_refines(
         }
         let (reqs, parts): (Vec<RefineReq>, Vec<Box<dyn InferenceSession>>) =
             ready.into_iter().unzip();
-        match backend.merge_sessions(parts) {
+        match no_unwind("session merge", || backend.merge_sessions(parts)) {
             Ok(MergeOutcome::Merged(mut merged)) => {
                 let parts_n = reqs.len() as u64;
-                match merged.refine(&plan) {
+                match no_unwind("merged refine", || merged.refine(&plan)) {
                     Ok(_aggregate) => {
                         stats.merges.fetch_add(1, Ordering::Relaxed);
                         stats.runs_saved.fetch_add(parts_n - 1, Ordering::Relaxed);
@@ -665,7 +693,7 @@ fn dispatch_refines(
                     }
                     Err(e) => {
                         let msg = format!("{e:#}");
-                        *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
+                        fail.push(msg.clone());
                         for req in reqs {
                             pool.retire(
                                 req.session,
@@ -686,7 +714,7 @@ fn dispatch_refines(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
+                fail.push(msg.clone());
                 for req in reqs {
                     let _ = req.reply.send(Err(anyhow!("session merge failed: {msg}")));
                 }
@@ -697,7 +725,7 @@ fn dispatch_refines(
         match take_and_narrow(pool, &req) {
             Ok(sess) => refine_in_hand(pool, req, sess, fail),
             Err(e) => {
-                *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+                fail.push(format!("{e:#}"));
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -717,7 +745,7 @@ fn dispatch_begins(
     hwc: (usize, usize, usize),
     begins: Vec<BeginReq>,
     stats: &EngineStats,
-    fail: &Mutex<Option<String>>,
+    fail: &ErrorRing,
 ) {
     if begins.is_empty() {
         return;
@@ -750,7 +778,7 @@ fn dispatch_begins(
                     req.x.len(),
                     req.batch
                 );
-                *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+                fail.push(format!("{e:#}"));
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -781,7 +809,7 @@ fn dispatch_begins(
                 // geometry was pre-validated, so a merged-begin failure
                 // (bad plan, backend fault) is shared by every member
                 let msg = format!("{e:#}");
-                *crate::coordinator::lock_unpoisoned(fail) = Some(msg.clone());
+                fail.push(msg.clone());
                 for req in ready {
                     let _ = req.reply.send(Err(anyhow!("merged begin failed: {msg}")));
                 }
@@ -795,12 +823,12 @@ fn serve_begin(
     backend: &dyn Backend,
     hwc: (usize, usize, usize),
     req: BeginReq,
-    fail: &Mutex<Option<String>>,
+    fail: &ErrorRing,
 ) {
     let result = match begin_job(backend, hwc, req.plan, req.x, req.batch, req.seed) {
         Ok((_sess, out)) => Ok(out),
         Err(e) => {
-            *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+            fail.push(format!("{e:#}"));
             Err(e)
         }
     };
@@ -868,7 +896,7 @@ fn submit_frame_job(
     let batch = x.len() / img;
     let mut sess = pool.take(id)?;
     let xt = Tensor::from_vec(x, &[batch, h, w, c]);
-    match sess.rebase_input(&xt) {
+    match no_unwind("rebase", || sess.rebase_input(&xt)) {
         Ok(step) => {
             let mut out = output_of(sess.as_ref(), &step);
             pool.put_back(id, sess);
@@ -896,11 +924,15 @@ fn fork_escalate_job(
     rows: Option<Vec<usize>>,
     plan: &PrecisionPlan,
 ) -> Result<EngineOutput> {
-    let mut fork = pool.peek(id)?.fork()?;
-    if let Some(rows) = &rows {
-        fork.narrow(rows)?;
-    }
-    let step = fork.refine(plan)?;
+    let sess = pool.peek(id)?;
+    let (fork, step) = no_unwind("fork-escalate", || {
+        let mut fork = sess.fork()?;
+        if let Some(rows) = &rows {
+            fork.narrow(rows)?;
+        }
+        let step = fork.refine(plan)?;
+        Ok((fork, step))
+    })?;
     Ok(output_of(fork.as_ref(), &step))
 }
 
@@ -911,7 +943,7 @@ fn fork_escalate_job(
 fn take_and_narrow(pool: &mut SessionPool, req: &RefineReq) -> Result<Box<dyn InferenceSession>> {
     let mut sess = pool.take(req.session)?;
     if let Some(rows) = &req.rows {
-        if let Err(e) = sess.narrow(rows) {
+        if let Err(e) = no_unwind("narrow", || sess.narrow(rows)) {
             pool.retire(
                 req.session,
                 format!("session {} was dropped by a failed narrow: {e:#}", req.session),
@@ -929,9 +961,9 @@ fn refine_in_hand(
     pool: &mut SessionPool,
     req: RefineReq,
     mut sess: Box<dyn InferenceSession>,
-    fail: &Mutex<Option<String>>,
+    fail: &ErrorRing,
 ) {
-    let result = match sess.refine(&req.plan) {
+    let result = match no_unwind("refine", || sess.refine(&req.plan)) {
         Ok(step) => {
             let mut out = output_of(sess.as_ref(), &step);
             if req.keep {
@@ -950,7 +982,7 @@ fn refine_in_hand(
                 req.session,
                 format!("session {} was dropped by a failed refine: {e:#}", req.session),
             );
-            *crate::coordinator::lock_unpoisoned(fail) = Some(format!("{e:#}"));
+            fail.push(format!("{e:#}"));
             Err(e)
         }
     };
@@ -1007,8 +1039,11 @@ fn begin_job(
         x.len()
     );
     let xt = Tensor::from_vec(x, &[batch, h, w, c]);
-    let mut sess = backend.open(&plan)?;
-    let step = sess.begin(&xt, seed)?;
+    let (sess, step) = no_unwind("begin", || {
+        let mut sess = backend.open(&plan)?;
+        let step = sess.begin(&xt, seed)?;
+        Ok((sess, step))
+    })?;
     let out = output_of(sess.as_ref(), &step);
     Ok((sess, out))
 }

@@ -49,6 +49,45 @@ impl Histogram {
     }
 }
 
+/// Bounded ring of recent named failures.  A cascade (breaker trip,
+/// repeated resurrections, a dying backend) is diagnosable post-mortem
+/// from the last [`ErrorRing::CAP`] messages, not just the final one;
+/// `total` keeps counting past the bound.
+#[derive(Debug, Default)]
+pub struct ErrorRing {
+    ring: std::sync::Mutex<std::collections::VecDeque<String>>,
+    total: AtomicU64,
+}
+
+impl ErrorRing {
+    /// Messages retained; older ones fall off the front.
+    pub const CAP: usize = 16;
+
+    pub fn push(&self, msg: String) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut g = crate::coordinator::lock_unpoisoned(&self.ring);
+        while g.len() >= Self::CAP {
+            g.pop_front();
+        }
+        g.push_back(msg);
+    }
+
+    /// Most recent message.
+    pub fn last(&self) -> Option<String> {
+        crate::coordinator::lock_unpoisoned(&self.ring).back().cloned()
+    }
+
+    /// Retained messages, oldest first.
+    pub fn to_vec(&self) -> Vec<String> {
+        crate::coordinator::lock_unpoisoned(&self.ring).iter().cloned().collect()
+    }
+
+    /// Every failure ever pushed (including those the ring dropped).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
 /// Coordinator-wide metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -73,12 +112,25 @@ pub struct Metrics {
     /// Samples carried over from stage 1 into an escalation instead of
     /// being recomputed — the progressive-refinement win (Sec. 4.5).
     pub samples_reused: AtomicU64,
-    /// Engine/backend failures observed by the stage handlers (the
-    /// affected requests' reply channels close; see
-    /// [`Self::last_engine_error`] for the root cause).
+    /// Engine/backend failures observed by the stage handlers (each
+    /// affected request receives a named error reply; see
+    /// [`Self::recent_errors`] for the root causes).
     pub engine_errors: AtomicU64,
-    /// Root cause of the most recent engine failure.
-    pub last_engine_error: std::sync::Mutex<Option<String>>,
+    /// Recent engine-failure root causes, oldest first (bounded).
+    pub recent: ErrorRing,
+    /// Faults the supervisor observed (injected or organic), mirrored
+    /// from [`crate::coordinator::supervisor::SupervisorStats`].
+    pub faults_seen: AtomicU64,
+    /// Supervised op retries (same op re-submitted after a transient
+    /// fault).
+    pub retries: AtomicU64,
+    /// Sessions rebuilt bit-identically from recorded provenance.
+    pub resurrections: AtomicU64,
+    /// Replies served degraded (retained stage-1 answer after recovery
+    /// was exhausted or the breaker was open).
+    pub degraded: AtomicU64,
+    /// Circuit-breaker transitions into `Open`.
+    pub breaker_trips: AtomicU64,
     /// Stage-1 sessions currently resident in the engine's pool (gauge,
     /// mirrored from [`crate::coordinator::engine::EngineStats`]).
     pub pool_sessions: AtomicU64,
@@ -111,10 +163,31 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Record an engine failure: bump the counter and keep the message.
+    /// Record an engine failure: bump the counter and ring the message.
     pub fn record_engine_error(&self, err: &anyhow::Error) {
         Self::inc(&self.engine_errors);
-        *crate::coordinator::lock_unpoisoned(&self.last_engine_error) = Some(format!("{err:#}"));
+        self.recent.push(format!("{err:#}"));
+    }
+
+    /// Root cause of the most recent engine failure.
+    pub fn last_engine_error(&self) -> Option<String> {
+        self.recent.last()
+    }
+
+    /// Recent engine-failure root causes, oldest first (bounded ring).
+    pub fn recent_errors(&self) -> Vec<String> {
+        self.recent.to_vec()
+    }
+
+    /// Mirror the supervisor's recovery counters into the serving
+    /// metrics.
+    pub fn sync_supervisor(&self, stats: &crate::coordinator::supervisor::SupervisorStats) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.faults_seen.store(stats.faults_seen.load(Relaxed), Relaxed);
+        self.retries.store(stats.retries.load(Relaxed), Relaxed);
+        self.resurrections.store(stats.resurrections.load(Relaxed), Relaxed);
+        self.degraded.store(stats.degraded.load(Relaxed), Relaxed);
+        self.breaker_trips.store(stats.breaker_trips.load(Relaxed), Relaxed);
     }
 
     /// Mirror the engine's live pool/merge counters into the serving
@@ -166,11 +239,13 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% \
              pool={}(peak {}, evicted {}) merges={} runs_saved={} \
              stream={} frames(rows_reused {}, mean_frac {:.3}) \
-             exec_adds={} backend_ms={:.1} p50={:?} p99={:?} mean={:?}",
+             exec_adds={} backend_ms={:.1} \
+             faults={} retries={} resurrections={} degraded={} breaker_trips={} errors={} \
+             p50={:?} p99={:?} mean={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             100.0 * self.escalation_rate(),
@@ -186,10 +261,21 @@ impl Metrics {
             self.stream_mean_frac(),
             self.executed_adds.load(Ordering::Relaxed),
             self.backend_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.faults_seen.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.resurrections.load(Ordering::Relaxed),
+            self.degraded.load(Ordering::Relaxed),
+            self.breaker_trips.load(Ordering::Relaxed),
+            self.engine_errors.load(Ordering::Relaxed),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
             self.latency.mean(),
-        )
+        );
+        let recent = self.recent.to_vec();
+        if !recent.is_empty() {
+            s.push_str(&format!(" recent_errors[{}]: {}", recent.len(), recent.join(" | ")));
+        }
+        s
     }
 }
 
@@ -250,6 +336,22 @@ mod tests {
         let a = build();
         assert_eq!(a, build());
         assert!(a.contains("requests=100"), "{a}");
+    }
+
+    #[test]
+    fn error_ring_is_bounded_and_ordered() {
+        let m = Metrics::default();
+        for i in 0..20 {
+            m.record_engine_error(&anyhow::anyhow!("boom {i}"));
+        }
+        let recent = m.recent_errors();
+        assert_eq!(recent.len(), ErrorRing::CAP, "ring holds the newest CAP messages");
+        assert_eq!(recent.first().map(String::as_str), Some("boom 4"), "oldest first");
+        assert_eq!(m.last_engine_error().as_deref(), Some("boom 19"));
+        assert_eq!(m.engine_errors.load(Ordering::Relaxed), 20, "counter outlives the ring");
+        assert_eq!(m.recent.total(), 20);
+        let s = m.summary();
+        assert!(s.contains("recent_errors[16]: boom 4 | "), "{s}");
     }
 
     #[test]

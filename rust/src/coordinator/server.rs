@@ -18,20 +18,32 @@
 //! through [`crate::backend::Backend::merge_sessions`], which keeps each
 //! group's capacitor state (and so its logits and billing) bit-identical
 //! to a serial dispatch while sharing one engine pass.
+//!
+//! Every engine interaction runs under the
+//! [`crate::coordinator::supervisor::Supervisor`]: deadline budgets,
+//! bounded deterministic retries, bit-identical session resurrection,
+//! and a circuit breaker over the escalation path.  The visible
+//! contract is **no dropped replies**: every submitted request receives
+//! either a bit-exact answer ([`ServedVia::Stage1`]/`Pooled`/`Merged`/
+//! `Stream`/`Recovered`) or an explicitly flagged degraded one
+//! ([`ServedVia::Degraded`], the retained stage-1 answer) or a named
+//! error — never a silently closed channel.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::backend::{int_kernel_factory, pjrt_factory, sim_factory};
+use crate::backend::{int_kernel_factory, pjrt_factory, sim_factory, BackendFactory};
 use crate::coordinator::batcher::{drain_ready, run_batcher, BatcherConfig, FormedBatch, Pending};
-use crate::coordinator::engine::{Engine, EngineConfig, EngineJob, EngineOutput, SessionId};
+use crate::coordinator::clock::Clock;
+use crate::coordinator::engine::{Engine, EngineConfig, SessionId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
 use crate::coordinator::stream::{StreamConfig, StreamId, StreamRegistry};
+use crate::coordinator::supervisor::{Supervisor, SupervisorConfig};
 use crate::precision::{PlanContext, PrecisionPlan, PrecisionPolicy};
 use crate::rng::RngKind;
 use crate::runtime::{ArtifactMeta, PsbBundle};
@@ -51,6 +63,13 @@ pub struct CoordinatorConfig {
     /// Streaming sessions with no frame for this long lose their pinned
     /// pool slot (see [`crate::coordinator::stream::StreamConfig`]).
     pub stream_idle_ttl: Duration,
+    /// Recovery policy: deadlines, retry bounds, breaker thresholds
+    /// (see [`crate::coordinator::supervisor::SupervisorConfig`]).
+    pub supervisor: SupervisorConfig,
+    /// Time source for linger/TTL/deadline policy and latency metrics.
+    /// [`Clock::virtual_clock`] makes all of it test-drivable; logits
+    /// and billing never read it either way.
+    pub clock: Clock,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,6 +81,8 @@ impl Default for CoordinatorConfig {
             seed: 7,
             pool_cap: 32,
             stream_idle_ttl: Duration::from_secs(30),
+            supervisor: SupervisorConfig::default(),
+            clock: Clock::real(),
         }
     }
 }
@@ -80,6 +101,16 @@ pub enum ServedVia {
     /// pinned pooled session onto the new frame (possibly followed by a
     /// fork-escalation; see [`crate::coordinator::stream::StreamRegistry`]).
     Stream,
+    /// Served after supervised recovery — a retried begin or a session
+    /// resurrected from provenance.  The answer is still **bit-exact**:
+    /// PSB sessions are pure functions of `(plan, seed, input)`, so the
+    /// replayed pass reproduces the never-faulted logits and billing
+    /// exactly (asserted in `rust/tests/chaos.rs`).
+    Recovered,
+    /// Escalation was impossible (retries exhausted, permanent fault, or
+    /// the circuit breaker open): the reply carries the retained
+    /// stage-1/rebased answer — degraded *precision*, full availability.
+    Degraded,
 }
 
 /// Final answer for one request.
@@ -99,13 +130,14 @@ pub struct ClassifyResponse {
     /// mean last-conv entropy observed at stage 1
     pub entropy: f32,
     /// Whether the answer came straight from stage 1, from this
-    /// request's own pooled session, or from a merged dispatch.
+    /// request's own pooled session, from a merged dispatch, or through
+    /// supervised recovery/degradation.
     pub served: ServedVia,
 }
 
 struct RequestCtx {
-    reply: SyncSender<ClassifyResponse>,
-    start: Instant,
+    reply: SyncSender<Result<ClassifyResponse>>,
+    start: Duration,
 }
 
 /// One escalating request: its reply handle, the stage-1 signal, and
@@ -137,6 +169,9 @@ pub struct Coordinator {
     /// Streaming frame traffic (pinned sessions + O(Δ) rebase); see
     /// [`Coordinator::submit_frame`].
     pub stream: Arc<StreamRegistry>,
+    /// The recovery layer (exposed for breaker/stats inspection).
+    pub supervisor: Arc<Supervisor>,
+    clock: Clock,
     pub image_len: usize,
     pub num_classes: usize,
     /// MACs per image (from the artifact layer geometry / network)
@@ -190,6 +225,22 @@ impl Coordinator {
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
+    /// Start over an arbitrary backend factory with caller-supplied
+    /// serving geometry.  This is the fault-injection entry point: wrap
+    /// any factory in [`crate::backend::chaos_factory`] and the whole
+    /// supervised serving path runs against the faulting backend (see
+    /// `rust/tests/chaos.rs`).
+    pub fn start_with_factory(
+        cfg: CoordinatorConfig,
+        factory: BackendFactory,
+        image_len: usize,
+        num_classes: usize,
+        macs_per_image: u64,
+    ) -> Result<Coordinator> {
+        let engine = Engine::spawn_with(factory, EngineConfig { pool_cap: cfg.pool_cap })?;
+        Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
+    }
+
     fn start_inner(
         cfg: CoordinatorConfig,
         engine: Engine,
@@ -200,8 +251,12 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let engine = Arc::new(engine);
         let metrics = Arc::new(Metrics::default());
+        let clock = cfg.clock.clone();
+        let supervisor =
+            Arc::new(Supervisor::new(engine.clone(), clock.clone(), cfg.supervisor, num_classes));
         let stream = Arc::new(StreamRegistry::new(
             engine.clone(),
+            supervisor.clone(),
             metrics.clone(),
             image_len,
             num_classes,
@@ -212,6 +267,7 @@ impl Coordinator {
                 // counter's (which starts at cfg.seed and increments)
                 seed: cfg.seed ^ (1 << 32),
             },
+            clock.clone(),
         ));
         let scheduler = Arc::new(Mutex::new(Scheduler::new(cfg.policy)));
         let seed_ctr = Arc::new(AtomicU64::new(cfg.seed));
@@ -230,6 +286,8 @@ impl Coordinator {
         {
             let ctx = StageCtx {
                 engine: engine.clone(),
+                supervisor: supervisor.clone(),
+                clock: clock.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr: seed_ctr.clone(),
@@ -253,6 +311,8 @@ impl Coordinator {
         {
             let ctx = StageCtx {
                 engine,
+                supervisor: supervisor.clone(),
+                clock: clock.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
                 seed_ctr,
@@ -264,9 +324,10 @@ impl Coordinator {
             };
             let scheduler = scheduler.clone();
             let bcfg = cfg.batcher;
+            let bclock = clock.clone();
             threads.push(
                 std::thread::Builder::new().name("psb-stage1".into()).spawn(move || {
-                    run_batcher(stage1_rx, bcfg, ctx.image_len, |batch| {
+                    run_batcher(stage1_rx, bcfg, ctx.image_len, bclock, |batch| {
                         handle_stage1(&ctx, &scheduler, &stage2_tx, batch);
                     });
                 })?,
@@ -278,6 +339,8 @@ impl Coordinator {
             metrics,
             scheduler,
             stream,
+            supervisor,
+            clock,
             image_len,
             num_classes,
             macs_per_image,
@@ -287,23 +350,21 @@ impl Coordinator {
 
     /// Submit one image and block until its classification arrives.
     pub fn classify(&self, image: Vec<f32>) -> Result<ClassifyResponse> {
-        self.submit(image)?.recv().map_err(|_| anyhow::anyhow!("request dropped"))
+        self.submit(image)?.recv().map_err(|_| anyhow::anyhow!("request dropped"))?
     }
 
     /// Submit one image; returns the channel the response will land on
-    /// (lets callers pipeline many in-flight requests).
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<ClassifyResponse>> {
+    /// (lets callers pipeline many in-flight requests).  The channel
+    /// always yields exactly one item: `Ok` with the classification, or
+    /// a named `Err` when even supervised recovery could not produce an
+    /// answer — replies are never silently dropped.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Result<ClassifyResponse>>> {
         anyhow::ensure!(image.len() == self.image_len, "image must be {} floats", self.image_len);
         Metrics::inc(&self.metrics.requests);
         let (reply, rx) = mpsc::sync_channel(1);
+        let now = self.clock.now();
         self.stage1_tx
-            .send(Pending {
-                // psb-lint: allow(determinism): submit-time latency clock — feeds the latency histograms only, never logits or billing
-                enqueued: Instant::now(),
-                // psb-lint: allow(determinism): submit-time latency clock — feeds the latency histograms only, never logits or billing
-                tag: RequestCtx { reply, start: Instant::now() },
-                image,
-            })
+            .send(Pending { enqueued: now, tag: RequestCtx { reply, start: now }, image })
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
         Ok(rx)
     }
@@ -387,6 +448,8 @@ fn macs_per_image(meta: &ArtifactMeta) -> u64 {
 /// Everything a stage handler needs (shared across batches).
 struct StageCtx {
     engine: Arc<Engine>,
+    supervisor: Arc<Supervisor>,
+    clock: Clock,
     metrics: Arc<Metrics>,
     policy: EscalationPolicy,
     seed_ctr: Arc<AtomicU64>,
@@ -407,6 +470,12 @@ struct StageCtx {
     /// weight draw from biasing the server for its whole lifetime (the
     /// failure mode a single fixed seed would have).
     stateless: bool,
+}
+
+impl StageCtx {
+    fn elapsed_since(&self, start: Duration) -> Duration {
+        self.clock.now().saturating_sub(start)
+    }
 }
 
 /// Stage-1 batches per shared-seed epoch on stateless backends.
@@ -439,12 +508,21 @@ fn handle_stage1(
     } else {
         (batch.x[..rows * ctx.image_len].to_vec(), rows)
     };
-    let out = match ctx.engine.begin_session(plan, x1, total_rows, seed) {
+    let (out, recovered) = match ctx.supervisor.begin_session(plan, x1, total_rows, seed) {
         Ok(o) => o,
         Err(err) => {
+            // Terminal stage-1 failure (retries/deadline exhausted or
+            // permanent): every request still gets a reply — a named
+            // error, never a silently closed channel.
             eprintln!("stage1 engine error: {err:#}");
             ctx.metrics.record_engine_error(&err);
-            return; // replies drop; callers observe closed channels
+            ctx.metrics.sync_supervisor(ctx.supervisor.stats());
+            let msg = format!("{err:#}");
+            for req in batch.tags {
+                Metrics::inc(&ctx.metrics.completed);
+                let _ = req.reply.send(Err(anyhow::anyhow!("stage-1 pass failed: {msg}")));
+            }
+            return;
         }
     };
     // cost/sample accounting only after the pass actually ran; the sim
@@ -459,6 +537,7 @@ fn handle_stage1(
     Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
     Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
     ctx.metrics.sync_engine(ctx.engine.stats());
+    ctx.metrics.sync_supervisor(ctx.supervisor.stats());
     let session = out.session;
     let exec = out.exec;
     let [_, fh, fw, fc] = exec.feat_shape;
@@ -484,14 +563,14 @@ fn handle_stage1(
             });
         if target.max_n() > ctx.policy.n_low {
             Metrics::inc(&ctx.metrics.escalated);
-            ctx.metrics.stage1_latency.record(req.start.elapsed());
+            ctx.metrics.stage1_latency.record(ctx.elapsed_since(req.start));
             group_rows.push(row);
             group_tags.push(EscTag { req, entropy, stage1_class: class, stage1_conf: conf });
         } else {
-            let latency = req.start.elapsed();
+            let latency = ctx.elapsed_since(req.start);
             ctx.metrics.latency.record(latency);
             Metrics::inc(&ctx.metrics.completed);
-            let _ = req.reply.send(ClassifyResponse {
+            let _ = req.reply.send(Ok(ClassifyResponse {
                 class,
                 confidence: conf,
                 escalated: false,
@@ -499,8 +578,8 @@ fn handle_stage1(
                 n_reused: 0,
                 latency,
                 entropy,
-                served: ServedVia::Stage1,
-            });
+                served: if recovered { ServedVia::Recovered } else { ServedVia::Stage1 },
+            }));
         }
     }
     match session {
@@ -510,13 +589,17 @@ fn handle_stage1(
             let _ = stage2.send(EscalationGroup { session: id, rows: group_rows, tags: group_tags });
         }
         Some(id) => {
-            let _ = ctx.engine.close_session(id);
+            let _ = ctx.supervisor.close_session(id);
         }
         None => {
             if !group_tags.is_empty() {
-                eprintln!("stage1: engine returned no session handle; dropping escalations");
-                ctx.metrics
-                    .record_engine_error(&anyhow::anyhow!("engine returned no session handle"));
+                eprintln!("stage1: engine returned no session handle; serving stage-1 answers");
+                let err = anyhow::anyhow!("engine returned no session handle");
+                fallback_to_stage1(
+                    ctx,
+                    EscalationGroup { session: 0, rows: group_rows, tags: group_tags },
+                    &err,
+                );
             }
         }
     }
@@ -527,39 +610,34 @@ fn handle_stage1(
 /// window sees them together and can merge compatible groups into one
 /// backend dispatch.  Each group still resolves against its own pooled
 /// stage-1 session — merging never mixes capacitor states.
+///
+/// Both phases run through the supervisor:
+/// [`Supervisor::submit_refine`] gates on the circuit breaker (open ⇒
+/// every tag serves its retained stage-1 answer as
+/// [`ServedVia::Degraded`]), and [`Supervisor::await_refine`] retries
+/// transient faults by **resurrecting** the consumed session from
+/// provenance — the recovered reply is bit-identical and marked
+/// [`ServedVia::Recovered`].
 fn handle_stage2(ctx: &StageCtx, groups: Vec<EscalationGroup>) {
     let n_low = ctx.policy.n_low;
     let n_high = ctx.policy.n_high;
     let plan = PrecisionPlan::uniform(n_high);
-    let mut inflight: Vec<(EscalationGroup, mpsc::Receiver<Result<EngineOutput>>)> =
+    let mut inflight: Vec<(EscalationGroup, crate::coordinator::supervisor::RefineTicket)> =
         Vec::with_capacity(groups.len());
     for group in groups {
         Metrics::inc(&ctx.metrics.batches);
         Metrics::add(&ctx.metrics.batched_rows, group.tags.len() as u64);
         Metrics::inc(&ctx.metrics.engine_calls);
-        let (reply, rx) = mpsc::sync_channel(1);
-        let job = EngineJob::Refine {
-            session: group.session,
-            rows: Some(group.rows.clone()),
-            plan: plan.clone(),
-            keep: false,
-            reply,
-        };
-        match ctx.engine.submit(job) {
-            Ok(()) => inflight.push((group, rx)),
+        match ctx.supervisor.submit_refine(group.session, group.rows.clone(), plan.clone()) {
+            Ok(ticket) => inflight.push((group, ticket)),
             Err(err) => fallback_to_stage1(ctx, group, &err),
         }
     }
-    for (group, rx) in inflight {
+    for (group, ticket) in inflight {
         let rows = group.tags.len();
-        let out = match rx.recv() {
-            Ok(Ok(o)) => o,
-            Ok(Err(err)) => {
-                fallback_to_stage1(ctx, group, &err);
-                continue;
-            }
-            Err(_) => {
-                let err = anyhow::anyhow!("engine dropped the escalation job");
+        let (out, resurrected) = match ctx.supervisor.await_refine(ticket) {
+            Ok(o) => o,
+            Err(err) => {
                 fallback_to_stage1(ctx, group, &err);
                 continue;
             }
@@ -580,15 +658,22 @@ fn handle_stage2(ctx: &StageCtx, groups: Vec<EscalationGroup>) {
         Metrics::add(&ctx.metrics.executed_adds, out.executed_adds);
         Metrics::add(&ctx.metrics.backend_ns, out.backend_ns);
         ctx.metrics.sync_engine(ctx.engine.stats());
-        let served = if out.merged { ServedVia::Merged } else { ServedVia::Pooled };
+        ctx.metrics.sync_supervisor(ctx.supervisor.stats());
+        let served = if resurrected {
+            ServedVia::Recovered
+        } else if out.merged {
+            ServedVia::Merged
+        } else {
+            ServedVia::Pooled
+        };
         let probs = softmax_rows(&out.exec.logits, ctx.nc);
         for (row, tag) in group.tags.into_iter().enumerate() {
             let p = &probs[row * ctx.nc..(row + 1) * ctx.nc];
             let (class, conf) = argmax_conf(p);
-            let latency = tag.req.start.elapsed();
+            let latency = ctx.elapsed_since(tag.req.start);
             ctx.metrics.latency.record(latency);
             Metrics::inc(&ctx.metrics.completed);
-            let _ = tag.req.reply.send(ClassifyResponse {
+            let _ = tag.req.reply.send(Ok(ClassifyResponse {
                 class,
                 confidence: conf,
                 escalated: true,
@@ -597,24 +682,27 @@ fn handle_stage2(ctx: &StageCtx, groups: Vec<EscalationGroup>) {
                 latency,
                 entropy: tag.entropy,
                 served,
-            });
+            }));
         }
     }
 }
 
 /// An escalation group whose engine pass could not run (pooled session
-/// evicted under burst, engine failure, shutdown) answers with its
-/// stage-1 result instead of dropping the replies: degraded precision,
-/// not degraded availability.  The failure is still counted and its
-/// root cause retained.
+/// evicted with no provenance, retries/deadline exhausted, permanent
+/// fault, breaker open, shutdown) answers with its stage-1 result
+/// instead of dropping the replies: degraded precision, not degraded
+/// availability.  The reply is explicitly flagged
+/// [`ServedVia::Degraded`], the failure counted, its root cause
+/// retained in the error ring.
 fn fallback_to_stage1(ctx: &StageCtx, group: EscalationGroup, err: &anyhow::Error) {
     eprintln!("stage2 engine error (serving stage-1 answers): {err:#}");
     ctx.metrics.record_engine_error(err);
     for tag in group.tags {
-        let latency = tag.req.start.elapsed();
+        ctx.supervisor.stats().degraded.fetch_add(1, Ordering::Relaxed);
+        let latency = ctx.elapsed_since(tag.req.start);
         ctx.metrics.latency.record(latency);
         Metrics::inc(&ctx.metrics.completed);
-        let _ = tag.req.reply.send(ClassifyResponse {
+        let _ = tag.req.reply.send(Ok(ClassifyResponse {
             class: tag.stage1_class,
             confidence: tag.stage1_conf,
             escalated: false,
@@ -622,9 +710,10 @@ fn fallback_to_stage1(ctx: &StageCtx, group: EscalationGroup, err: &anyhow::Erro
             n_reused: 0,
             latency,
             entropy: tag.entropy,
-            served: ServedVia::Stage1,
-        });
+            served: ServedVia::Degraded,
+        }));
     }
+    ctx.metrics.sync_supervisor(ctx.supervisor.stats());
 }
 
 fn argmax_conf(p: &[f32]) -> (usize, f32) {

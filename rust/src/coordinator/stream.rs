@@ -25,6 +25,17 @@
 //!   and a later frame on a reclaimed id answers a **named error**
 //!   carrying the reclaim reason — never a dropped reply.
 //!
+//! Frame traffic runs **supervised**
+//! ([`crate::coordinator::supervisor::Supervisor`]): a faulted rebase is
+//! retried and, failing that, *resurrected* through the rebase contract
+//! itself — a fresh pinned `begin` on the new frame under the stream's
+//! recorded `(plan, seed)`, bit-identical to the rebase that failed —
+//! and the reply is flagged [`ServedVia::Recovered`].  A frame whose
+//! escalation cannot run (breaker open, retries exhausted) serves its
+//! rebased `n_low` answer flagged [`ServedVia::Degraded`].  Idle-TTL
+//! bookkeeping reads the registry's [`Clock`], so reclamation is
+//! test-drivable on a virtual clock.
+//!
 //! Backends whose sessions cannot rebase (the stateless PJRT artifact
 //! runtime) fail the second frame with the backend's own message; the
 //! stream then retires with that reason, so callers learn the capability
@@ -33,14 +44,16 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::clock::Clock;
 use crate::coordinator::engine::{Engine, EngineOutput, SessionId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler};
 use crate::coordinator::server::{ClassifyResponse, ServedVia};
+use crate::coordinator::supervisor::Supervisor;
 use crate::precision::PrecisionPlan;
 use crate::sim::layers::softmax_rows;
 
@@ -82,7 +95,8 @@ struct StreamEntry {
     /// actually changed (the registry's reuse accounting; the backend
     /// diffs quantized values itself and may reuse even more).
     last_image: Vec<f32>,
-    last_seen: Instant,
+    /// When the last frame arrived, on the registry's [`Clock`].
+    last_seen: Duration,
     /// Frames served on this stream, the opening `begin` included.
     frames: u64,
 }
@@ -99,8 +113,10 @@ struct Inner {
 /// mutex across a frame's engine calls.
 pub struct StreamRegistry {
     engine: Arc<Engine>,
+    supervisor: Arc<Supervisor>,
     metrics: Arc<Metrics>,
     cfg: StreamConfig,
+    clock: Clock,
     image_len: usize,
     num_classes: usize,
     seed_ctr: AtomicU64,
@@ -110,16 +126,20 @@ pub struct StreamRegistry {
 impl StreamRegistry {
     pub fn new(
         engine: Arc<Engine>,
+        supervisor: Arc<Supervisor>,
         metrics: Arc<Metrics>,
         image_len: usize,
         num_classes: usize,
         cfg: StreamConfig,
+        clock: Clock,
     ) -> StreamRegistry {
         StreamRegistry {
             engine,
+            supervisor,
             metrics,
             seed_ctr: AtomicU64::new(cfg.seed),
             cfg,
+            clock,
             image_len,
             num_classes,
             inner: Mutex::new(Inner::default()),
@@ -130,7 +150,11 @@ impl StreamRegistry {
     ///
     /// The opening frame is a fresh `begin` (pinned into the pool);
     /// every later frame rebases the pinned session in O(changed rows +
-    /// halo) and answers with [`ServedVia::Stream`].  A frame on a
+    /// halo) and answers with [`ServedVia::Stream`] — or
+    /// [`ServedVia::Recovered`] when the supervisor had to retry or
+    /// resurrect the session (the answer is still bit-exact), or
+    /// [`ServedVia::Degraded`] when a wanted escalation could not run
+    /// (the rebased `n_low` answer serves instead).  A frame on a
     /// reclaimed or failed stream returns the retained reason.
     pub fn submit_frame(&self, stream: StreamId, image: Vec<f32>) -> Result<ClassifyResponse> {
         anyhow::ensure!(
@@ -139,39 +163,42 @@ impl StreamRegistry {
             self.image_len,
             image.len()
         );
-        // psb-lint: allow(determinism): frame latency clock — feeds the latency histograms only, never logits or billing
-        let start = Instant::now();
+        let start = self.clock.now();
         Metrics::inc(&self.metrics.requests);
         let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
         self.sweep_idle(&mut inner, Some(stream));
         if let Some(reason) = inner.retired.get(&stream) {
             return Err(anyhow!("{reason}"));
         }
-        let out = match inner.live.get_mut(&stream) {
+        let (out, recovered) = match inner.live.get_mut(&stream) {
             Some(entry) => {
                 let frac = changed_fraction(&entry.last_image, &image);
                 let reused = image.len() as u64 - (frac * image.len() as f64).round() as u64;
-                match self.engine.submit_frame(entry.session, image.clone()) {
-                    Ok(out) => {
+                match self.supervisor.submit_frame(entry.session, image.clone()) {
+                    Ok((out, recovered)) => {
                         use std::sync::atomic::Ordering::Relaxed;
                         let stats = self.engine.stats();
                         stats.stream_rows_reused.fetch_add(reused, Relaxed);
                         stats.stream_frac_milli.fetch_add((frac * 1000.0).round() as u64, Relaxed);
+                        // a resurrected session answers under a new id
+                        if let Some(id) = out.session {
+                            entry.session = id;
+                        }
                         entry.last_image = image;
-                        // psb-lint: allow(determinism): idle-TTL bookkeeping — feeds stream reclaim only, never logits or billing
-                        entry.last_seen = Instant::now();
+                        entry.last_seen = self.clock.now();
                         entry.frames += 1;
-                        out
+                        (out, recovered)
                     }
                     Err(err) => {
-                        // the engine already retired the session (a
-                        // failed rebase poisons it); retire the stream
-                        // with the root cause so later frames get it too
+                        // rebase, retries, and resurrection all failed:
+                        // retire the stream with the root cause so later
+                        // frames get it too
                         let reason =
                             format!("stream {stream} was dropped by a failed frame rebase: {err:#}");
                         inner.live.remove(&stream);
                         inner.retired.insert(stream, reason.clone());
                         self.metrics.record_engine_error(&err);
+                        self.metrics.sync_supervisor(self.supervisor.stats());
                         return Err(anyhow!("{reason}"));
                     }
                 }
@@ -179,7 +206,8 @@ impl StreamRegistry {
             None => {
                 let seed = self.seed_ctr.fetch_add(1, Ordering::Relaxed);
                 let plan = PrecisionPlan::uniform(self.cfg.policy.n_low);
-                let out = self.engine.begin_session(plan, image.clone(), 1, seed)?;
+                let (out, recovered) =
+                    self.supervisor.begin_session(plan, image.clone(), 1, seed)?;
                 let Some(session) = out.session else {
                     return Err(anyhow!("engine returned no session handle for stream {stream}"));
                 };
@@ -190,19 +218,18 @@ impl StreamRegistry {
                         session,
                         scheduler: Scheduler::new(self.cfg.policy),
                         last_image: image,
-                        // psb-lint: allow(determinism): idle-TTL bookkeeping — feeds stream reclaim only, never logits or billing
-                        last_seen: Instant::now(),
+                        last_seen: self.clock.now(),
                         frames: 1,
                     },
                 );
-                out
+                (out, recovered)
             }
         };
         self.record_pass(&out, self.cfg.policy.n_low as u64);
         // Stage-2 decision on the frame's entropy signal: escalate a
         // *fork* so the pinned session stays at n_low for the next
         // frame's rebase.  A failed escalation degrades to the rebased
-        // answer instead of dropping the frame.
+        // answer instead of dropping the frame — explicitly flagged.
         let [_, _, _, fc] = out.exec.feat_shape;
         let entropy = if fc > 0 && !out.exec.feat.is_empty() {
             Scheduler::request_entropy(&out.exec.feat, fc)
@@ -213,29 +240,35 @@ impl StreamRegistry {
         let escalate = policy.n_high > policy.n_low
             && inner.live.get_mut(&stream).is_some_and(|e| e.scheduler.decide(entropy));
         let session = inner.live.get(&stream).map(|e| e.session);
-        let (final_out, escalated) = if escalate {
+        let (final_out, escalated, degraded) = if escalate {
             let session = session.ok_or_else(|| anyhow!("stream {stream} vanished mid-frame"))?;
-            match self.engine.fork_escalate(session, None, PrecisionPlan::uniform(policy.n_high)) {
-                Ok(hi) => {
+            match self.supervisor.fork_escalate(
+                session,
+                None,
+                PrecisionPlan::uniform(policy.n_high),
+            ) {
+                Ok((hi, _retried)) => {
                     self.record_pass(&hi, (policy.n_high - policy.n_low) as u64);
                     Metrics::inc(&self.metrics.escalated);
                     Metrics::add(&self.metrics.samples_reused, policy.n_low as u64);
-                    (hi, true)
+                    (hi, true, false)
                 }
                 Err(err) => {
                     self.metrics.record_engine_error(&err);
-                    (out, false)
+                    self.supervisor.stats().degraded.fetch_add(1, Ordering::Relaxed);
+                    (out, false, true)
                 }
             }
         } else {
-            (out, false)
+            (out, false, false)
         };
         let probs = softmax_rows(&final_out.exec.logits, self.num_classes);
         let (class, confidence) = argmax_conf(&probs[..self.num_classes.min(probs.len())]);
-        let latency = start.elapsed();
+        let latency = self.clock.now().saturating_sub(start);
         self.metrics.latency.record(latency);
         Metrics::inc(&self.metrics.completed);
         self.metrics.sync_engine(self.engine.stats());
+        self.metrics.sync_supervisor(self.supervisor.stats());
         Ok(ClassifyResponse {
             class,
             confidence,
@@ -244,18 +277,25 @@ impl StreamRegistry {
             n_reused: if escalated { policy.n_low } else { 0 },
             latency,
             entropy,
-            served: ServedVia::Stream,
+            served: if degraded {
+                ServedVia::Degraded
+            } else if recovered {
+                ServedVia::Recovered
+            } else {
+                ServedVia::Stream
+            },
         })
     }
 
-    /// Close a stream: unpin + drop its session and forget any retained
-    /// retirement reason (the id becomes reusable).  Idempotent.
+    /// Close a stream: unpin + drop its session (and its provenance
+    /// record) and forget any retained retirement reason (the id becomes
+    /// reusable).  Idempotent.
     pub fn close(&self, stream: StreamId) -> Result<()> {
         let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
         inner.retired.remove(&stream);
         if let Some(entry) = inner.live.remove(&stream) {
             self.engine.pin_session(entry.session, false)?;
-            self.engine.close_session(entry.session)?;
+            self.supervisor.close_session(entry.session)?;
         }
         Ok(())
     }
@@ -275,16 +315,17 @@ impl StreamRegistry {
     /// being served right now).  Reclaimed ids keep a named reason.
     fn sweep_idle(&self, inner: &mut Inner, keep: Option<StreamId>) {
         let ttl = self.cfg.idle_ttl;
+        let now = self.clock.now();
         let idle: Vec<StreamId> = inner
             .live
             .iter()
-            .filter(|(id, e)| Some(**id) != keep && e.last_seen.elapsed() > ttl)
+            .filter(|(id, e)| Some(**id) != keep && now.saturating_sub(e.last_seen) > ttl)
             .map(|(id, _)| *id)
             .collect();
         for id in idle {
             if let Some(entry) = inner.live.remove(&id) {
                 let _ = self.engine.pin_session(entry.session, false);
-                let _ = self.engine.close_session(entry.session);
+                let _ = self.supervisor.close_session(entry.session);
                 inner.retired.insert(
                     id,
                     format!(

@@ -1,0 +1,614 @@
+//! The serving supervisor: deadlines, bounded retries, bit-identical
+//! session resurrection, and a per-engine circuit breaker.
+//!
+//! PSB sessions are a *pure function* of `(plan, seed, input)`: a
+//! `begin` replayed under the same triple reproduces the session's
+//! logits and exact per-row charges bit-identically, `narrow + refine`
+//! replayed on top reproduces the escalation, and
+//! `rebase_input(x)` ≡ a fresh `begin(x, seed)` at the current plan
+//! (the streaming contract).  That determinism is the whole recovery
+//! story — a killed, evicted, poisoned, or panicked session is not lost
+//! state, just lost *time*, and the supervisor rebuilds it from recorded
+//! provenance and replays the op:
+//!
+//! * **`Begin`** is stateless from the caller's view: transient faults
+//!   retry the job directly under a deadline budget with deterministic
+//!   exponential backoff.
+//! * **`Refine`** consumes its session on failure, so a transient fault
+//!   triggers **resurrection**: replay `begin(plan, x, batch, seed)`
+//!   from provenance, re-narrow to the same rows, re-refine to the same
+//!   target — the reply is bit-identical to the never-faulted pass
+//!   (asserted against an oracle in `rust/tests/chaos.rs`).
+//! * **`SubmitFrame`** resurrects through the rebase contract itself: a
+//!   fresh `begin` on the *new* frame under the stream's seed is
+//!   bit-identical (logits and billing) to the rebase that failed.
+//! * Errors marked `(permanent)` never burn retries; the caller
+//!   degrades (escalations fall back to their retained stage-1 answer)
+//!   or resurrects fresh (streams).
+//!
+//! The **circuit breaker** guards the escalation path: after
+//! [`SupervisorConfig::breaker_threshold`] consecutive supervised-op
+//! failures it opens, refusing `refine`/`fork_escalate` outright — the
+//! paper's progressive ladder means every request still holds a valid
+//! stage-1 answer, so an open breaker degrades precision, not
+//! availability.  After a cooldown it half-opens; the next escalation
+//! runs as a probe and its outcome closes or re-opens the breaker.
+//! Begins and frames are never gated — they *are* the probe traffic
+//! that restores service.
+//!
+//! All timing (deadlines, backoff, cooldown) goes through
+//! [`crate::coordinator::clock::Clock`], so chaos tests drive the whole
+//! recovery machinery on a virtual clock without real sleeps.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::clock::Clock;
+use crate::coordinator::engine::{Engine, EngineJob, EngineOutput, SessionId};
+use crate::coordinator::lock_unpoisoned;
+use crate::precision::PrecisionPlan;
+
+/// Recovery-policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorConfig {
+    /// Per-job wall budget: retries and resurrections stop when a job
+    /// has been in flight this long (measured on the supervisor clock).
+    pub deadline: Duration,
+    /// Most retries (re-submissions after the first attempt) per job.
+    pub max_retries: u32,
+    /// Backoff before retry `k` is `backoff_base · 2^(k−1)` —
+    /// deterministic, no jitter: reproducibility outranks thundering
+    /// herds on a single-process engine.
+    pub backoff_base: Duration,
+    /// Consecutive supervised-op failures that open the breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker refuses escalations before half-opening
+    /// for a probe.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            deadline: Duration::from_secs(2),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(5),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Circuit-breaker position (see module docs for the transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal service.
+    Closed,
+    /// Escalations refused; stage-1 answers serve degraded.
+    Open,
+    /// Cooldown elapsed: the next escalation runs as a probe.
+    HalfOpen,
+}
+
+/// Recovery counters (mirrored into `Metrics` by the stage handlers).
+#[derive(Debug, Default)]
+pub struct SupervisorStats {
+    /// Supervised-op failures observed (injected or organic), including
+    /// wrong-geometry replies.
+    pub faults_seen: AtomicU64,
+    /// Ops re-submitted after a transient fault.
+    pub retries: AtomicU64,
+    /// Sessions rebuilt bit-identically from provenance.
+    pub resurrections: AtomicU64,
+    /// Replies the caller served degraded (retained stage-1 answer);
+    /// bumped by the stage handlers, not the supervisor.
+    pub degraded: AtomicU64,
+    /// Breaker transitions into [`BreakerState::Open`].
+    pub breaker_trips: AtomicU64,
+}
+
+/// What it takes to rebuild a session bit-identically: the `begin`
+/// triple.  `narrow`/`refine` are replayed by the op that needs them
+/// (their arguments travel with the job), and a rebased stream session's
+/// identity is just this record with `x` advanced to the latest frame.
+#[derive(Clone)]
+struct Provenance {
+    plan: PrecisionPlan,
+    x: Vec<f32>,
+    batch: usize,
+    seed: u64,
+}
+
+/// Most begin records retained for resurrection; ids are monotonic, so
+/// overflow evicts the oldest sessions first.
+const PROVENANCE_CAP: usize = 256;
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive: u32,
+    opened_at: Duration,
+}
+
+/// An in-flight supervised refine: created by
+/// [`Supervisor::submit_refine`] (so a window of escalation groups hits
+/// the engine together and can merge), resolved by
+/// [`Supervisor::await_refine`] (which owns the retry/resurrection
+/// loop).
+pub struct RefineTicket {
+    session: SessionId,
+    rows: Vec<usize>,
+    plan: PrecisionPlan,
+    rx: Option<mpsc::Receiver<Result<EngineOutput>>>,
+    start: Duration,
+}
+
+/// Deadline/retry/resurrection/breaker supervision over one [`Engine`].
+pub struct Supervisor {
+    engine: Arc<Engine>,
+    clock: Clock,
+    cfg: SupervisorConfig,
+    /// Output classes — every supervised reply's logits must be
+    /// `expected_rows × num_classes` (wrong-geometry replies are faults).
+    num_classes: usize,
+    stats: Arc<SupervisorStats>,
+    provenance: Mutex<BTreeMap<SessionId, Provenance>>,
+    breaker: Mutex<BreakerInner>,
+}
+
+/// `true` when the failure is marked non-retryable by its producer.
+fn is_permanent(msg: &str) -> bool {
+    msg.contains("(permanent)")
+}
+
+impl Supervisor {
+    pub fn new(
+        engine: Arc<Engine>,
+        clock: Clock,
+        cfg: SupervisorConfig,
+        num_classes: usize,
+    ) -> Supervisor {
+        Supervisor {
+            engine,
+            clock,
+            cfg,
+            num_classes,
+            stats: Arc::new(SupervisorStats::default()),
+            provenance: Mutex::new(BTreeMap::new()),
+            breaker: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive: 0,
+                opened_at: Duration::ZERO,
+            }),
+        }
+    }
+
+    pub fn stats(&self) -> &SupervisorStats {
+        &self.stats
+    }
+
+    /// Current breaker position (resolves an elapsed cooldown to
+    /// `HalfOpen` without consuming the probe).
+    pub fn breaker_state(&self) -> BreakerState {
+        let b = lock_unpoisoned(&self.breaker);
+        match b.state {
+            BreakerState::Open
+                if self.clock.now().saturating_sub(b.opened_at) >= self.cfg.breaker_cooldown =>
+            {
+                BreakerState::HalfOpen
+            }
+            s => s,
+        }
+    }
+
+    /// May an escalation run right now?  Open → no (degrade); an elapsed
+    /// cooldown half-opens and admits this call as the probe.
+    fn breaker_allows(&self) -> bool {
+        let mut b = lock_unpoisoned(&self.breaker);
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if self.clock.now().saturating_sub(b.opened_at) >= self.cfg.breaker_cooldown {
+                    b.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    fn breaker_success(&self) {
+        let mut b = lock_unpoisoned(&self.breaker);
+        b.consecutive = 0;
+        b.state = BreakerState::Closed;
+    }
+
+    fn breaker_failure(&self) {
+        let mut b = lock_unpoisoned(&self.breaker);
+        b.consecutive += 1;
+        let trip = match b.state {
+            BreakerState::HalfOpen => true, // failed probe re-opens
+            BreakerState::Closed => b.consecutive >= self.cfg.breaker_threshold,
+            BreakerState::Open => false,
+        };
+        if trip {
+            b.state = BreakerState::Open;
+            b.opened_at = self.clock.now();
+            self.stats.breaker_trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a fault: counters + breaker.
+    fn note_fault(&self) {
+        self.stats.faults_seen.fetch_add(1, Ordering::Relaxed);
+        self.breaker_failure();
+    }
+
+    /// Deterministic exponential backoff before retry `attempt` (1-based).
+    fn backoff(&self, attempt: u32) {
+        let exp = attempt.saturating_sub(1).min(16);
+        self.clock.sleep(self.cfg.backoff_base.saturating_mul(1u32 << exp));
+    }
+
+    fn over_budget(&self, start: Duration) -> bool {
+        self.clock.now().saturating_sub(start) >= self.cfg.deadline
+    }
+
+    /// Logits of a supervised reply must cover `rows × num_classes`; a
+    /// backend that answers with the wrong geometry has faulted even
+    /// though it "succeeded".  `rows = None` checks divisibility only.
+    fn check_geometry(&self, out: &EngineOutput, rows: Option<usize>) -> Result<()> {
+        let nc = self.num_classes;
+        if nc == 0 {
+            return Ok(());
+        }
+        let n = out.exec.logits.len();
+        match rows {
+            Some(r) => anyhow::ensure!(
+                n == r * nc,
+                "wrong output geometry: {n} logits for {r} rows × {nc} classes (transient)"
+            ),
+            None => anyhow::ensure!(
+                n > 0 && n % nc == 0,
+                "wrong output geometry: {n} logits is not a row multiple of {nc} classes (transient)"
+            ),
+        }
+        Ok(())
+    }
+
+    fn remember(&self, id: SessionId, prov: Provenance) {
+        let mut map = lock_unpoisoned(&self.provenance);
+        map.insert(id, prov);
+        while map.len() > PROVENANCE_CAP {
+            let Some((&oldest, _)) = map.iter().next() else { break };
+            map.remove(&oldest);
+        }
+    }
+
+    fn recall(&self, id: SessionId) -> Option<Provenance> {
+        lock_unpoisoned(&self.provenance).get(&id).cloned()
+    }
+
+    fn forget(&self, id: SessionId) {
+        lock_unpoisoned(&self.provenance).remove(&id);
+    }
+
+    /// Close a supervised session and drop its provenance record.
+    pub fn close_session(&self, id: SessionId) -> Result<()> {
+        self.forget(id);
+        self.engine.close_session(id)
+    }
+
+    /// Supervised stage-1 pass: begin a kept session under a deadline
+    /// budget with bounded, backed-off retries (a begin is stateless
+    /// from the caller's view, so retry is plain re-submission).
+    /// Records the session's provenance for later resurrection.  Returns
+    /// the output and whether recovery was needed (`recovered == true` ⇒
+    /// at least one retry happened; the logits are still bit-identical
+    /// to a first-try pass, which the chaos suite asserts).
+    pub fn begin_session(
+        &self,
+        plan: PrecisionPlan,
+        x: Vec<f32>,
+        batch: usize,
+        seed: u64,
+    ) -> Result<(EngineOutput, bool)> {
+        let start = self.clock.now();
+        let mut attempt = 0u32;
+        loop {
+            let fault = match self.engine.begin_session(plan.clone(), x.clone(), batch, seed) {
+                Ok(out) => match self.check_geometry(&out, Some(batch)) {
+                    Ok(()) => {
+                        if let Some(id) = out.session {
+                            self.remember(
+                                id,
+                                Provenance { plan, x, batch, seed },
+                            );
+                        }
+                        self.breaker_success();
+                        return Ok((out, attempt > 0));
+                    }
+                    Err(geom) => {
+                        // the kept session may carry the same garbling —
+                        // drop it rather than let an escalation find it
+                        if let Some(id) = out.session {
+                            let _ = self.engine.close_session(id);
+                        }
+                        geom
+                    }
+                },
+                Err(e) => e,
+            };
+            self.note_fault();
+            let msg = format!("{fault:#}");
+            if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(start) {
+                return Err(anyhow!(
+                    "supervised begin failed after {} attempt(s): {msg}",
+                    attempt + 1
+                ));
+            }
+            attempt += 1;
+            self.stats.retries.fetch_add(1, Ordering::Relaxed);
+            self.backoff(attempt);
+        }
+    }
+
+    /// Phase 1 of a supervised escalation: breaker-check, then submit
+    /// the narrow+refine job *without waiting*.  Callers submit every
+    /// queued group before awaiting any (see `server::handle_stage2`),
+    /// which is what lets the engine's dispatch window merge compatible
+    /// groups — supervision must not cost that.
+    pub fn submit_refine(
+        &self,
+        session: SessionId,
+        rows: Vec<usize>,
+        plan: PrecisionPlan,
+    ) -> Result<RefineTicket> {
+        anyhow::ensure!(
+            self.breaker_allows(),
+            "circuit breaker open: escalation refused, serve the stage-1 answer"
+        );
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.engine.submit(EngineJob::Refine {
+            session,
+            rows: Some(rows.clone()),
+            plan: plan.clone(),
+            keep: false,
+            reply,
+        })?;
+        Ok(RefineTicket { session, rows, plan, rx: Some(rx), start: self.clock.now() })
+    }
+
+    /// Phase 2: wait for a ticket's reply; on transient failure (the
+    /// refine consumed its session) resurrect from provenance — replay
+    /// `begin`, re-narrow, re-refine — within the deadline budget.
+    /// Returns the output plus whether resurrection happened.
+    pub fn await_refine(&self, mut ticket: RefineTicket) -> Result<(EngineOutput, bool)> {
+        let mut attempt = 0u32;
+        let mut resurrected = false;
+        let mut session = ticket.session;
+        loop {
+            // ensure a refine is in flight (retries land here with none)
+            let rx = match ticket.rx.take() {
+                Some(rx) => rx,
+                None => {
+                    let (reply, rx) = mpsc::sync_channel(1);
+                    self.engine.submit(EngineJob::Refine {
+                        session,
+                        rows: Some(ticket.rows.clone()),
+                        plan: ticket.plan.clone(),
+                        keep: false,
+                        reply,
+                    })?;
+                    rx
+                }
+            };
+            let fault = match rx.recv() {
+                Ok(Ok(out)) => match self.check_geometry(&out, Some(ticket.rows.len())) {
+                    Ok(()) => {
+                        self.forget(session);
+                        self.breaker_success();
+                        return Ok((out, resurrected));
+                    }
+                    Err(geom) => geom,
+                },
+                Ok(Err(e)) => e,
+                Err(_) => anyhow!("engine dropped the escalation job"),
+            };
+            self.note_fault();
+            let msg = format!("{fault:#}");
+            if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(ticket.start)
+            {
+                return Err(anyhow!(
+                    "supervised refine failed after {} attempt(s): {msg}",
+                    attempt + 1
+                ));
+            }
+            attempt += 1;
+            self.stats.retries.fetch_add(1, Ordering::Relaxed);
+            self.backoff(attempt);
+            // the failed refine consumed the session: resurrect it from
+            // provenance under its original (plan, x, batch, seed) so the
+            // replayed narrow+refine is bit-identical to the lost pass
+            let Some(prov) = self.recall(session) else {
+                return Err(anyhow!(
+                    "supervised refine failed and session {session} has no provenance \
+                     to resurrect from: {msg}"
+                ));
+            };
+            match self.engine.begin_session(prov.plan.clone(), prov.x.clone(), prov.batch, prov.seed)
+            {
+                Ok(out) => {
+                    let Some(new_id) = out.session else {
+                        return Err(anyhow!("resurrection begin returned no session handle"));
+                    };
+                    self.forget(session);
+                    self.remember(new_id, prov);
+                    self.stats.resurrections.fetch_add(1, Ordering::Relaxed);
+                    resurrected = true;
+                    session = new_id;
+                    // loop resubmits the refine against the new session
+                }
+                Err(e) => {
+                    // the resurrection itself faulted; account it and let
+                    // the loop retry the whole recovery within budget
+                    self.note_fault();
+                    let _ = e;
+                }
+            }
+        }
+    }
+
+    /// Supervised streaming frame: rebase the pinned session; on
+    /// failure, resurrect through the rebase contract — a fresh kept
+    /// `begin` on the *new* frame under the stream's recorded
+    /// `(plan, seed)` is bit-identical (logits and billing) to the
+    /// rebase that failed.  The resurrected session is pinned in place
+    /// of the lost one and the reply carries its id.
+    pub fn submit_frame(&self, session: SessionId, x: Vec<f32>) -> Result<(EngineOutput, bool)> {
+        let start = self.clock.now();
+        let mut attempt = 0u32;
+        let mut recovered = false;
+        let mut session = session;
+        loop {
+            let prov_batch = self.recall(session).map(|p| p.batch);
+            let fault = match self.engine.submit_frame(session, x.clone()) {
+                Ok(out) => match self.check_geometry(&out, prov_batch) {
+                    Ok(()) => {
+                        // the session's identity advanced to this frame
+                        if let Some(mut prov) = self.recall(session) {
+                            prov.x = x;
+                            self.remember(session, prov);
+                        }
+                        self.breaker_success();
+                        return Ok((out, recovered));
+                    }
+                    Err(geom) => geom,
+                },
+                Err(e) => e,
+            };
+            self.note_fault();
+            let msg = format!("{fault:#}");
+            if attempt >= self.cfg.max_retries || self.over_budget(start) {
+                return Err(anyhow!(
+                    "supervised frame failed after {} attempt(s): {msg}",
+                    attempt + 1
+                ));
+            }
+            attempt += 1;
+            self.stats.retries.fetch_add(1, Ordering::Relaxed);
+            self.backoff(attempt);
+            // Resurrect (permanent faults included — a fresh session is a
+            // different op): begin on the new frame at the stream's
+            // recorded plan + seed, pin it, and retire the old id.
+            let Some(prov) = self.recall(session) else {
+                return Err(anyhow!(
+                    "supervised frame failed and session {session} has no provenance \
+                     to resurrect from: {msg}"
+                ));
+            };
+            match self.engine.begin_session(prov.plan.clone(), x.clone(), prov.batch, prov.seed) {
+                Ok(out) => match (out.session, self.check_geometry(&out, Some(prov.batch))) {
+                    (Some(new_id), Ok(())) => {
+                        let _ = self.engine.pin_session(new_id, true);
+                        let _ = self.engine.pin_session(session, false);
+                        let _ = self.engine.close_session(session);
+                        self.forget(session);
+                        self.remember(
+                            new_id,
+                            Provenance { x: x.clone(), ..prov },
+                        );
+                        self.stats.resurrections.fetch_add(1, Ordering::Relaxed);
+                        recovered = true;
+                        self.breaker_success();
+                        // the begin IS the frame's answer (rebase ≡ fresh
+                        // begin, bit-identically)
+                        return Ok((out, recovered));
+                    }
+                    (Some(new_id), Err(_geom)) => {
+                        // garbled resurrection output: the session state
+                        // is fine but the reply is not — drop it and let
+                        // the loop try again
+                        let _ = self.engine.close_session(new_id);
+                        self.note_fault();
+                    }
+                    (None, _) => {
+                        return Err(anyhow!("resurrection begin returned no session handle"));
+                    }
+                },
+                Err(_e) => {
+                    self.note_fault();
+                }
+            }
+        }
+    }
+
+    /// Supervised stream escalation: refine a *fork* of the pinned
+    /// session.  Breaker-gated like any escalation; retried directly
+    /// (the pinned session is untouched by a failed fork), never
+    /// resurrected — on exhaustion the caller serves the rebased
+    /// stage-1 answer as `Degraded`, and a poisoned pinned session gets
+    /// resurrected by the *next frame's* rebase path.
+    pub fn fork_escalate(
+        &self,
+        session: SessionId,
+        rows: Option<Vec<usize>>,
+        plan: PrecisionPlan,
+    ) -> Result<(EngineOutput, bool)> {
+        anyhow::ensure!(
+            self.breaker_allows(),
+            "circuit breaker open: stream escalation refused, serve the rebased answer"
+        );
+        let start = self.clock.now();
+        let mut attempt = 0u32;
+        let expected = rows.as_ref().map(|r| r.len()).or_else(|| {
+            self.recall(session).map(|p| p.batch)
+        });
+        loop {
+            let fault = match self.engine.fork_escalate(session, rows.clone(), plan.clone()) {
+                Ok(out) => match self.check_geometry(&out, expected) {
+                    Ok(()) => {
+                        self.breaker_success();
+                        return Ok((out, attempt > 0));
+                    }
+                    Err(geom) => geom,
+                },
+                Err(e) => e,
+            };
+            self.note_fault();
+            let msg = format!("{fault:#}");
+            if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(start) {
+                return Err(anyhow!(
+                    "supervised fork-escalate failed after {} attempt(s): {msg}",
+                    attempt + 1
+                ));
+            }
+            attempt += 1;
+            self.stats.retries.fetch_add(1, Ordering::Relaxed);
+            self.backoff(attempt);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permanence_marker_is_textual() {
+        assert!(is_permanent("chaos: injected fault #3 on refine (permanent)"));
+        assert!(!is_permanent("chaos: injected fault #3 on begin (transient)"));
+    }
+
+    #[test]
+    fn default_config_is_bounded() {
+        let cfg = SupervisorConfig::default();
+        assert!(cfg.max_retries >= 1 && cfg.max_retries <= 10);
+        assert!(cfg.deadline > cfg.backoff_base * (1 << cfg.max_retries));
+        assert!(cfg.breaker_threshold >= 2);
+    }
+}

@@ -222,7 +222,7 @@ fn serve(
     }
     let mut correct = 0usize;
     for (label, rx) in inflight {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??;
         correct += (resp.class == label) as usize;
     }
     let elapsed = start.elapsed();

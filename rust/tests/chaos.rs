@@ -1,0 +1,387 @@
+//! Chaos properties: the supervised serving stack under a seeded fault
+//! schedule (`backend::chaos`).  Three contracts, per docs/ROBUSTNESS.md:
+//!
+//! 1. **No dropped replies** — under any fault mix every submitted
+//!    request yields exactly one reply: an answer or a named error,
+//!    never a hung or silently closed channel.
+//! 2. **Recovery is bit-exact** — a retried begin, a resurrected
+//!    escalation, and a resurrected stream frame reproduce a
+//!    never-faulted oracle's logits *and* charged billing exactly
+//!    (PSB sessions are pure functions of `(plan, seed, input)`).
+//! 3. **Degradation is explicit** — when recovery is impossible the
+//!    reply says so (`ServedVia::Degraded` with `escalated == false`,
+//!    or a named error), and the fault counters account for it.
+//!
+//! The schedule seed comes from `PSB_CHAOS_SEED` (CI's `chaos-smoke`
+//! job sweeps several); every test appends its outcome tallies to
+//! `CHAOS_transcript.txt`, which CI uploads on failure.
+
+use std::sync::{Arc, Mutex, Once};
+use std::time::Duration;
+
+use psb::backend::{chaos_factory, sim_factory, ChaosConfig};
+use psb::coordinator::{
+    BatcherConfig, Clock, Coordinator, CoordinatorConfig, Engine, EscalationPolicy, ServedVia,
+    Supervisor, SupervisorConfig,
+};
+use psb::precision::PrecisionPlan;
+use psb::rng::{RngKind, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+
+const IMG: usize = 8 * 8 * 3;
+const NC: usize = 2;
+
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "chaos-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: NC }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
+
+/// Schedule seed under test — CI's chaos-smoke matrix sets this.
+fn chaos_seed() -> u64 {
+    std::env::var("PSB_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn image(tag: f32) -> Vec<f32> {
+    (0..IMG).map(|i| ((i as f32) * 0.013 + tag).sin() * 0.5).collect()
+}
+
+// ------------------------------------------------------------ transcript
+
+static TRANSCRIPT_LOCK: Mutex<()> = Mutex::new(());
+static TRANSCRIPT_INIT: Once = Once::new();
+
+/// Append a test's outcome tallies to `CHAOS_transcript.txt` (truncated
+/// once per run).  Written *before* the asserts, so a red run's artifact
+/// shows what the schedule actually did.
+fn transcript(section: &str, lines: &[String]) {
+    use std::io::Write as _;
+    let _g = TRANSCRIPT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/CHAOS_transcript.txt");
+    TRANSCRIPT_INIT.call_once(|| {
+        let _ = std::fs::remove_file(path);
+    });
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = writeln!(f, "== {section} (PSB_CHAOS_SEED={}) ==", chaos_seed());
+        for l in lines {
+            let _ = writeln!(f, "  {l}");
+        }
+    }
+}
+
+fn stat(v: &std::sync::atomic::AtomicU64) -> u64 {
+    v.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// A supervisor that never gives up early: huge deadline, generous
+/// retries, breaker effectively disabled, virtual clock (backoff and
+/// deadlines advance instantly).  The bit-exactness tests want recovery
+/// to *run*, not to be rationed.
+fn patient_supervisor(engine: &Arc<Engine>) -> Supervisor {
+    Supervisor::new(
+        engine.clone(),
+        Clock::virtual_clock(),
+        SupervisorConfig {
+            deadline: Duration::from_secs(3600),
+            max_retries: 12,
+            backoff_base: Duration::from_millis(5),
+            breaker_threshold: 1_000_000,
+            breaker_cooldown: Duration::ZERO,
+        },
+        NC,
+    )
+}
+
+// -------------------------------------------------- bit-exact recovery
+
+/// Escalations recovered by retry/resurrection answer bit-identically —
+/// logits AND charged billing — to a never-faulted oracle running the
+/// same `(plan, x, batch, seed)` begins and the same narrowed refines.
+#[test]
+fn resurrected_escalations_match_a_never_faulted_oracle() {
+    const TRIALS: u64 = 24;
+    const BATCH: usize = 3;
+    let plan_low = PrecisionPlan::uniform(4);
+    let plan_high = PrecisionPlan::uniform(16);
+    let rows = vec![0usize, 2];
+
+    // the oracle: same ops, no chaos decorator
+    let oracle = Engine::spawn(sim_factory(tiny_psbnet(), RngKind::Xorshift)).unwrap();
+    let mut expect = Vec::new();
+    for t in 0..TRIALS {
+        let x: Vec<f32> = (0..BATCH).flat_map(|r| image(t as f32 + r as f32 * 0.31)).collect();
+        let b = oracle.begin_session(plan_low.clone(), x, BATCH, t).unwrap();
+        let id = b.session.expect("oracle begin keeps a session");
+        let r = oracle.refine_session(id, Some(rows.clone()), plan_high.clone()).unwrap();
+        expect.push((b.exec.logits, b.gated_adds, r.exec.logits, r.gated_adds));
+    }
+
+    let cfg = ChaosConfig {
+        seed: chaos_seed(),
+        transient_permille: 250,
+        permanent_permille: 20,
+        slow_permille: 0,
+        poison_permille: 60,
+        geometry_permille: 40,
+        slow_op: Duration::ZERO,
+    };
+    let (factory, _stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    let engine = Arc::new(Engine::spawn(factory).unwrap());
+    let sup = patient_supervisor(&engine);
+
+    let mut begins_ok = 0u64;
+    let mut refines_ok = 0u64;
+    let mut refines_err = 0u64;
+    for t in 0..TRIALS {
+        let x: Vec<f32> = (0..BATCH).flat_map(|r| image(t as f32 + r as f32 * 0.31)).collect();
+        let (want_bl, want_bg, want_rl, want_rg) = &expect[t as usize];
+        let (out, _recovered) = sup
+            .begin_session(plan_low.clone(), x, BATCH, t)
+            .expect("a begin is stateless: bounded retry must absorb transient faults");
+        assert_eq!(&out.exec.logits, want_bl, "trial {t}: begin logits drifted under chaos");
+        assert_eq!(out.gated_adds, *want_bg, "trial {t}: begin billing drifted under chaos");
+        begins_ok += 1;
+        let id = out.session.expect("supervised begin keeps a session");
+        match sup.submit_refine(id, rows.clone(), plan_high.clone()).and_then(|tk| sup.await_refine(tk)) {
+            Ok((r, _resurrected)) => {
+                assert_eq!(&r.exec.logits, want_rl, "trial {t}: refine logits drifted under chaos");
+                assert_eq!(r.gated_adds, *want_rg, "trial {t}: refine billing drifted under chaos");
+                refines_ok += 1;
+            }
+            Err(e) => {
+                // only a (permanent)-marked fault may end an escalation
+                // under this patient config — and it must say so
+                let msg = format!("{e:#}");
+                assert!(msg.contains("supervised refine failed"), "unnamed failure: {msg}");
+                assert!(msg.contains("(permanent)"), "gave up on a retryable fault: {msg}");
+                refines_err += 1;
+            }
+        }
+    }
+    let st = sup.stats();
+    transcript(
+        "resurrected_escalations_match_a_never_faulted_oracle",
+        &[
+            format!("begins_ok={begins_ok} refines_ok={refines_ok} refines_err={refines_err}"),
+            format!(
+                "faults_seen={} retries={} resurrections={}",
+                stat(&st.faults_seen),
+                stat(&st.retries),
+                stat(&st.resurrections)
+            ),
+        ],
+    );
+    assert_eq!(begins_ok, TRIALS);
+    assert!(refines_ok >= TRIALS / 2, "most escalations must complete: {refines_ok}/{TRIALS}");
+    assert!(stat(&st.faults_seen) > 0, "a 37% fault mix must fault somewhere in {TRIALS} trials");
+    assert!(
+        stat(&st.resurrections) >= 1,
+        "some refine fault must have forced a resurrection (faults_seen={})",
+        stat(&st.faults_seen)
+    );
+}
+
+/// Stream frames recovered through the rebase contract — a resurrected
+/// session is a fresh `begin` on the new frame — are bit-identical in
+/// logits and charged billing to an oracle running a fresh pass per
+/// frame (which is exactly what `rebase_input` bills as).
+#[test]
+fn resurrected_stream_frames_match_the_oracle() {
+    const FRAMES: u64 = 32;
+    const SEED: u64 = 91;
+    let plan = PrecisionPlan::uniform(8);
+
+    let oracle = Engine::spawn(sim_factory(tiny_psbnet(), RngKind::Xorshift)).unwrap();
+    let mut expect = Vec::new();
+    for f in 0..FRAMES {
+        let out = oracle.run_once(plan.clone(), image(f as f32 * 0.1), 1, SEED).unwrap();
+        expect.push((out.exec.logits, out.gated_adds));
+    }
+
+    let cfg = ChaosConfig {
+        seed: chaos_seed().wrapping_add(1),
+        transient_permille: 200,
+        permanent_permille: 15,
+        slow_permille: 0,
+        poison_permille: 50,
+        geometry_permille: 35,
+        slow_op: Duration::ZERO,
+    };
+    let (factory, _stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    let engine = Arc::new(Engine::spawn(factory).unwrap());
+    let sup = patient_supervisor(&engine);
+
+    let (out, _) = sup
+        .begin_session(plan.clone(), image(0.0), 1, SEED)
+        .expect("opening the stream must survive transient faults");
+    assert_eq!(out.exec.logits, expect[0].0, "frame 0 logits");
+    assert_eq!(out.gated_adds, expect[0].1, "frame 0 billing");
+    let mut id = out.session.expect("stream begin keeps a session");
+    let _ = engine.pin_session(id, true);
+
+    let mut recovered_frames = 0u64;
+    for f in 1..FRAMES {
+        let (out, recovered) = sup
+            .submit_frame(id, image(f as f32 * 0.1))
+            .expect("frame recovery must absorb the schedule within its retry budget");
+        let (want_logits, want_adds) = &expect[f as usize];
+        assert_eq!(&out.exec.logits, want_logits, "frame {f}: logits drifted under chaos");
+        assert_eq!(out.gated_adds, *want_adds, "frame {f}: billing drifted under chaos");
+        recovered_frames += recovered as u64;
+        if let Some(new_id) = out.session {
+            id = new_id;
+        }
+    }
+    let st = sup.stats();
+    transcript(
+        "resurrected_stream_frames_match_the_oracle",
+        &[
+            format!("frames={FRAMES} recovered_frames={recovered_frames}"),
+            format!(
+                "faults_seen={} retries={} resurrections={}",
+                stat(&st.faults_seen),
+                stat(&st.retries),
+                stat(&st.resurrections)
+            ),
+        ],
+    );
+    assert!(stat(&st.faults_seen) > 0, "a 30% fault mix must fault somewhere in {FRAMES} frames");
+    assert!(
+        stat(&st.resurrections) >= 1 && recovered_frames >= 1,
+        "some frame must have been served by a resurrected session (faults_seen={})",
+        stat(&st.faults_seen)
+    );
+}
+
+// ----------------------------------------------------- no dropped replies
+
+/// The full coordinator under the complete fault table (slow ops and
+/// breaker trips included): every request gets exactly one reply — a
+/// bit-valid answer, an explicitly `Degraded` one, or a named error —
+/// and `Degraded` never claims it escalated.
+#[test]
+fn every_request_is_answered_under_chaos() {
+    const N: usize = 48;
+    let cfg = ChaosConfig {
+        seed: chaos_seed().wrapping_add(2),
+        transient_permille: 200,
+        permanent_permille: 10,
+        slow_permille: 20,
+        poison_permille: 30,
+        geometry_permille: 20,
+        slow_op: Duration::from_micros(500),
+    };
+    let (factory, stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    let coord = Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig { batch_size: 4, linger: Duration::from_millis(1) },
+            policy: EscalationPolicy { n_low: 4, n_high: 16, ..Default::default() },
+            seed: 5,
+            pool_cap: 8,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: SupervisorConfig {
+                deadline: Duration::from_secs(5),
+                max_retries: 6,
+                backoff_base: Duration::from_micros(200),
+                breaker_threshold: 4,
+                breaker_cooldown: Duration::from_millis(5),
+            },
+            clock: Clock::real(),
+        },
+        factory,
+        IMG,
+        NC,
+        1_000,
+    )
+    .unwrap();
+
+    let mut inflight = Vec::with_capacity(N);
+    for i in 0..N {
+        inflight.push(coord.submit(image(i as f32 * 0.05)).unwrap());
+    }
+    let mut answered = 0usize;
+    let mut degraded = 0usize;
+    let mut recovered = 0usize;
+    let mut named_errors = 0usize;
+    for (i, rx) in inflight.into_iter().enumerate() {
+        // recv_timeout: a hang IS the bug this test exists to catch
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("request {i} was dropped or hung under chaos"));
+        match reply {
+            Ok(resp) => {
+                answered += 1;
+                assert!(resp.class < NC, "request {i}: class out of range");
+                match resp.served {
+                    ServedVia::Degraded => {
+                        degraded += 1;
+                        assert!(!resp.escalated, "request {i}: Degraded must not claim escalation");
+                        assert_eq!(resp.n_used, 4, "request {i}: Degraded serves the stage-1 n");
+                    }
+                    ServedVia::Recovered => recovered += 1,
+                    _ => {}
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty() && msg.contains("failed"), "unnamed error: {msg}");
+                named_errors += 1;
+            }
+        }
+    }
+
+    // streams ride the same contract: a frame on a chaotic stream either
+    // answers or errs by name — it never wedges the registry
+    let mut frame_ok = 0usize;
+    let mut frame_err = 0usize;
+    for s in 0..3u64 {
+        for f in 0..5u64 {
+            match coord.submit_frame(s, image(s as f32 + f as f32 * 0.2)) {
+                Ok(resp) => {
+                    assert!(resp.class < NC);
+                    frame_ok += 1;
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(!msg.is_empty(), "stream errors must be named");
+                    frame_err += 1;
+                }
+            }
+        }
+    }
+
+    let st = coord.supervisor.stats();
+    transcript(
+        "every_request_is_answered_under_chaos",
+        &[
+            format!(
+                "answered={answered} degraded={degraded} recovered={recovered} \
+                 named_errors={named_errors}"
+            ),
+            format!("frame_ok={frame_ok} frame_err={frame_err}"),
+            format!(
+                "faults_seen={} retries={} resurrections={} breaker_trips={} injected={}",
+                stat(&st.faults_seen),
+                stat(&st.retries),
+                stat(&st.resurrections),
+                stat(&st.breaker_trips),
+                stats.total_faults()
+            ),
+            format!("metrics: {}", coord.metrics.summary()),
+        ],
+    );
+    assert_eq!(answered + named_errors, N, "every request must be replied to exactly once");
+    assert_eq!(frame_ok + frame_err, 15, "every frame call must resolve");
+    assert!(
+        stat(&st.faults_seen) > 0 && stats.total_faults() > 0,
+        "the schedule must actually have injected faults for this test to mean anything"
+    );
+}

@@ -47,6 +47,7 @@ fn config(disabled: bool) -> CoordinatorConfig {
         seed: 3,
         pool_cap: 32,
         stream_idle_ttl: std::time::Duration::from_secs(30),
+        ..Default::default()
     }
 }
 
@@ -62,7 +63,7 @@ fn every_request_is_answered_exactly_once() {
     }
     let mut answers = 0;
     for rx in inflight {
-        let resp = rx.recv().expect("reply must arrive");
+        let resp = rx.recv().expect("reply must arrive").expect("request must succeed");
         assert!(resp.class < 10);
         assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
         assert!(resp.n_used == 2 || resp.n_used == 4);
@@ -86,7 +87,7 @@ fn disabled_policy_never_escalates_and_costs_less() {
         }
         let mut escalated = 0u32;
         for rx in inflight {
-            escalated += rx.recv().unwrap().escalated as u32;
+            escalated += rx.recv().unwrap().unwrap().escalated as u32;
         }
         (escalated, coord.metrics.gated_adds.load(Ordering::Relaxed))
     };
@@ -107,7 +108,7 @@ fn batcher_reports_occupancy_and_latency() {
         inflight.push(coord.submit(x.data).unwrap());
     }
     for rx in inflight {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert!(resp.latency > std::time::Duration::ZERO);
     }
     let occ = coord.metrics.batch_occupancy();
@@ -151,7 +152,7 @@ fn sim_coordinator_answers_every_request_once() {
     }
     let mut answers = 0;
     for rx in inflight {
-        let resp = rx.recv().expect("reply must arrive");
+        let resp = rx.recv().expect("reply must arrive").expect("request must succeed");
         assert!(resp.class < 10);
         assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
         assert!(resp.n_used == 2 || resp.n_used == 4);
@@ -187,7 +188,7 @@ fn sim_escalations_reuse_progressive_state() {
     }
     let mut escalated = 0u32;
     for rx in inflight {
-        escalated += rx.recv().unwrap().escalated as u32;
+        escalated += rx.recv().unwrap().unwrap().escalated as u32;
     }
     assert!(escalated > 0, "adaptive mode should escalate something");
     let reuse = coord.metrics.reuse_ratio();
@@ -212,7 +213,7 @@ fn sim_flat_serving_never_escalates_and_costs_less() {
         }
         let mut escalated = 0u32;
         for rx in inflight {
-            escalated += rx.recv().unwrap().escalated as u32;
+            escalated += rx.recv().unwrap().unwrap().escalated as u32;
         }
         (escalated, coord.metrics.gated_adds.load(Ordering::Relaxed))
     };
@@ -293,7 +294,7 @@ fn int_coordinator_answers_every_request_once() {
     }
     let mut answers = 0;
     for rx in inflight {
-        let resp = rx.recv().expect("reply must arrive");
+        let resp = rx.recv().expect("reply must arrive").expect("request must succeed");
         assert!(resp.class < 10);
         assert!(resp.confidence > 0.0 && resp.confidence <= 1.0);
         assert!(resp.n_used == 2 || resp.n_used == 4);

@@ -627,7 +627,7 @@ fn submit_frame_failures_answer_named_errors_never_dropped_replies() {
 
 #[test]
 fn stream_registry_reclaims_idle_streams_with_a_named_reason() {
-    use psb::coordinator::{Metrics, StreamConfig, StreamRegistry};
+    use psb::coordinator::{Clock, Metrics, StreamConfig, StreamRegistry, Supervisor, SupervisorConfig};
     let psb = tiny_psbnet();
     let engine = Arc::new(
         Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap(),
@@ -635,12 +635,16 @@ fn stream_registry_reclaims_idle_streams_with_a_named_reason() {
     let (h, w, c) = psb.input_hwc;
     let img = h * w * c;
     let metrics = Arc::new(Metrics::default());
+    let supervisor =
+        Arc::new(Supervisor::new(engine.clone(), Clock::real(), SupervisorConfig::default(), 2));
     let registry = StreamRegistry::new(
         engine.clone(),
+        supervisor,
         metrics.clone(),
         img,
         2,
         StreamConfig { idle_ttl: std::time::Duration::ZERO, ..Default::default() },
+        Clock::real(),
     );
     let frame = |tag: f32| -> Vec<f32> { (0..img).map(|i| (tag + i as f32 * 0.31).abs() % 1.0).collect() };
     // stream 1 opens and serves; its second frame is a rebase (the
@@ -665,6 +669,194 @@ fn stream_registry_reclaims_idle_streams_with_a_named_reason() {
     assert_eq!(r.served, psb::coordinator::ServedVia::Stream);
     // reuse accounting flowed into the serving metrics
     assert!(metrics.stream_frames.load(Ordering::SeqCst) >= 1);
+}
+
+#[test]
+fn stream_registry_reclaims_on_virtual_clock_ttl() {
+    use psb::coordinator::{Clock, Metrics, StreamConfig, StreamRegistry, Supervisor, SupervisorConfig};
+    let psb = tiny_psbnet();
+    let engine = Arc::new(
+        Engine::spawn(psb::backend::sim_factory(psb.clone(), psb::rng::RngKind::Philox)).unwrap(),
+    );
+    let (h, w, c) = psb.input_hwc;
+    let img = h * w * c;
+    let clock = Clock::virtual_clock();
+    let metrics = Arc::new(Metrics::default());
+    let supervisor =
+        Arc::new(Supervisor::new(engine.clone(), clock.clone(), SupervisorConfig::default(), 2));
+    let ttl = std::time::Duration::from_secs(10);
+    let registry = StreamRegistry::new(
+        engine.clone(),
+        supervisor,
+        metrics.clone(),
+        img,
+        2,
+        StreamConfig { idle_ttl: ttl, ..Default::default() },
+        clock.clone(),
+    );
+    let frame = |tag: f32| -> Vec<f32> { (0..img).map(|i| (tag + i as f32 * 0.31).abs() % 1.0).collect() };
+    registry.submit_frame(1, frame(0.2)).unwrap();
+    registry.submit_frame(2, frame(0.3)).unwrap();
+    assert_eq!(registry.live_streams(), 2);
+    // virtual time is explicit: no amount of real waiting reclaims
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    registry.submit_frame(2, frame(0.4)).unwrap();
+    assert_eq!(registry.live_streams(), 2, "no virtual time passed — nothing is idle");
+    // advance past the TTL; the next submit's sweep reclaims stream 1
+    // (stream 2 is the one being served, so the sweep spares it)
+    clock.advance(ttl + std::time::Duration::from_secs(1));
+    registry.submit_frame(2, frame(0.5)).unwrap();
+    assert_eq!(registry.live_streams(), 1);
+    let msg = format!("{:#}", registry.submit_frame(1, frame(0.6)).unwrap_err());
+    assert!(
+        msg.contains("reclaimed") && msg.contains("idle"),
+        "virtual-clock TTL reclaim must carry the named reason: {msg}"
+    );
+}
+
+// ---- panic containment + supervised recovery under pooling --------------
+
+/// A backend whose `refine` panics outright — the harshest failure a
+/// backend thread can produce.  The engine must contain the unwind
+/// (`no_unwind`), name it, and keep serving.
+#[derive(Clone)]
+struct PanickyRefine;
+
+struct PanickySession {
+    plan: PrecisionPlan,
+    x: Vec<f32>,
+    rows: usize,
+    seed: u64,
+    logits: Tensor,
+    report: CostReport,
+}
+
+impl InferenceSession for PanickySession {
+    fn begin(&mut self, x: &Tensor, seed: u64) -> Result<StepReport> {
+        self.x = x.data.clone();
+        self.rows = x.shape[0];
+        self.seed = seed;
+        let n = self.plan.uniform_n().ok_or_else(|| anyhow!("uniform-only"))?;
+        let mut data = Vec::with_capacity(self.rows * NC);
+        for r in 0..self.rows {
+            data.extend_from_slice(&mock_logit(&self.x[r * IMG..(r + 1) * IMG], self.seed, n));
+        }
+        self.logits = Tensor::from_vec(data, &[self.rows, NC]);
+        Ok(StepReport::default())
+    }
+
+    fn refine(&mut self, _target: &PrecisionPlan) -> Result<StepReport> {
+        panic!("synthetic backend crash in refine");
+    }
+
+    fn narrow(&mut self, _rows: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    fn feat(&self) -> Option<&Tensor> {
+        None
+    }
+
+    fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl Backend for PanickyRefine {
+    fn name(&self) -> &'static str {
+        "panicky"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        (H, W, C)
+    }
+
+    fn open(&self, plan: &PrecisionPlan) -> Result<Box<dyn InferenceSession>> {
+        Ok(Box::new(PanickySession {
+            plan: plan.clone(),
+            x: Vec::new(),
+            rows: 0,
+            seed: 0,
+            logits: Tensor::zeros(&[0]),
+            report: CostReport::default(),
+        }))
+    }
+}
+
+#[test]
+fn panicking_backend_is_contained_named_and_the_pool_keeps_serving() {
+    let engine =
+        Engine::spawn(Box::new(|| Ok(Box::new(PanickyRefine) as Box<dyn Backend>))).unwrap();
+    let plan = PrecisionPlan::uniform(8);
+    let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap();
+    // the refine panics inside the backend; the engine thread must NOT
+    // die — the unwind is contained and converted to a named error
+    let err = engine
+        .refine_session(a.session.unwrap(), None, PrecisionPlan::uniform(16))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("panicked during") && msg.contains("synthetic backend crash"),
+        "the panic payload must surface in the named error: {msg}"
+    );
+    assert!(msg.contains("(transient)"), "contained panics are retryable faults: {msg}");
+    // the error ring kept it
+    let recent = engine.recent_errors();
+    assert!(
+        recent.iter().any(|e| e.contains("synthetic backend crash")),
+        "recent_errors must retain the panic: {recent:?}"
+    );
+    // and the engine thread survived: begins still serve
+    let again = engine.begin_session(plan, image(2.0, 2), 2, 2).unwrap();
+    assert_eq!(again.exec.logits.len(), 2 * NC, "engine must keep serving after a panic");
+}
+
+#[test]
+fn eviction_during_inflight_escalation_resurrects_bit_identically() {
+    use psb::coordinator::{Clock, Supervisor, SupervisorConfig};
+    // a cap-2 pool under pressure: session `a` is evicted between its
+    // stage-1 pass and its escalation.  Unsupervised, that escalation is
+    // a named failure (`evicted_sessions_name_the_eviction_in_last_error`
+    // above); supervised, the recorded (plan, x, batch, seed) provenance
+    // resurrects the session and the refine replays bit-identically.
+    let mock = mock_backend();
+    let engine = Arc::new(
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap(),
+    );
+    let clock = Clock::virtual_clock(); // backoff advances virtually: no real sleeps
+    let supervisor =
+        Arc::new(Supervisor::new(engine.clone(), clock, SupervisorConfig::default(), NC));
+    let plan8 = PrecisionPlan::uniform(8);
+    let xa = image(1.0, 4);
+    let (a, recovered) = supervisor.begin_session(plan8.clone(), xa.clone(), 4, 5).unwrap();
+    assert!(!recovered, "clean begin needs no recovery");
+    let a_id = a.session.unwrap();
+    // pool pressure evicts `a` while its escalation is still pending
+    engine.begin_session(plan8.clone(), image(2.0, 4), 4, 6).unwrap();
+    engine.begin_session(plan8, image(3.0, 4), 4, 7).unwrap();
+    let ticket = supervisor.submit_refine(a_id, vec![0, 2], PrecisionPlan::uniform(16)).unwrap();
+    let (out, resurrected) = supervisor.await_refine(ticket).unwrap();
+    assert!(resurrected, "the evicted session must have been resurrected");
+    assert_eq!(
+        out.exec.logits,
+        expect_logits(&xa, &[0, 2], 5, 16),
+        "the resurrected escalation must be bit-identical to the never-evicted pass"
+    );
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(supervisor.stats().resurrections.load(Relaxed) >= 1);
+    assert!(supervisor.stats().faults_seen.load(Relaxed) >= 1);
 }
 
 // ---- helpers ------------------------------------------------------------

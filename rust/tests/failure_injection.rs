@@ -63,6 +63,56 @@ fn engine_keeps_root_cause_of_backend_failures() {
 }
 
 #[test]
+fn chaos_faults_surface_as_named_errors_and_fill_the_ring() {
+    use psb::backend::{chaos_factory, ChaosConfig};
+    // heavy transient mix, no poison/geometry: every fault is a plain
+    // named error on the job that drew it
+    let cfg = ChaosConfig {
+        seed: 41,
+        transient_permille: 400,
+        permanent_permille: 50,
+        slow_permille: 0,
+        poison_permille: 0,
+        geometry_permille: 0,
+        ..ChaosConfig::seeded(41)
+    };
+    let (factory, stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    let engine = Engine::spawn(factory).unwrap();
+    let x: Vec<f32> = (0..8 * 8 * 3).map(|i| i as f32 * 0.01).collect();
+    let mut failed = 0u32;
+    let mut served = 0u32;
+    for seed in 0..32u64 {
+        match engine.run_once(PrecisionPlan::uniform(4), x.clone(), 1, seed) {
+            Ok(out) => {
+                assert_eq!(out.exec.logits.len(), 2);
+                served += 1;
+            }
+            Err(err) => {
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains("chaos: injected fault"),
+                    "chaos failures must be named, numbered faults: {msg}"
+                );
+                assert!(
+                    msg.contains("(transient)") || msg.contains("(permanent)"),
+                    "chaos failures must carry a retryability marker: {msg}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed > 0, "a 45% fault mix over 32 ops must fault at least once");
+    assert!(served > 0, "the engine must keep serving between faults");
+    assert!(stats.total_faults() >= failed as u64);
+    // the ring retained multiple distinct root causes, bounded at 16
+    let recent = engine.recent_errors();
+    assert!(!recent.is_empty() && recent.len() <= 16, "bounded ring: {}", recent.len());
+    assert!(recent.iter().all(|e| e.contains("chaos: injected fault")));
+    // the newest retained error is the ring's `last()` answer
+    assert_eq!(engine.last_error().as_deref(), recent.last().map(String::as_str));
+}
+
+#[test]
 fn meta_parse_rejects_garbage() {
     for (text, what) in [
         ("", "empty"),

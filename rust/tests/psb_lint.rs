@@ -169,6 +169,37 @@ fn no_panic_skips_test_code_and_non_calls() {
 }
 
 #[test]
+fn lock_hygiene_fires_on_raw_coordinator_locks() {
+    let src = "fn peek(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    // the raw lock AND the unwrap of its PoisonError both fire
+    assert_eq!(
+        rules_of(&f),
+        [(RuleId::NoPanic, 2), (RuleId::LockHygiene, 2)],
+        "{f:?}"
+    );
+    assert!(f[1].message.contains("lock_unpoisoned"), "{}", f[1].message);
+    // outside the coordinator the rule does not apply
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn lock_hygiene_skips_tests_waivers_and_non_calls() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t(m: &std::sync::Mutex<u32>) { let _ = m.lock(); }\n}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    // the one sanctioned raw lock (inside lock_unpoisoned itself) is waived
+    let src = "// psb-lint: allow(lock-hygiene): the sanctioned wrapper's own lock\nfn w(m: &std::sync::Mutex<u32>) { let _ = m.lock(); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    // `try_lock()` and a free `lock()` function are not this pattern
+    let src = "fn lock() {}\nfn t(m: &std::sync::Mutex<u32>) { lock(); let _ = m.try_lock(); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
 fn unsafe_is_banned_everywhere_even_in_tests() {
     let src = "#[cfg(test)]\nmod tests {\n    fn t() { let p = unsafe { 1 }; }\n}\n";
     let f = lint_source_complete("rust/src/sim/fake.rs", src);
