@@ -48,7 +48,7 @@ fn main() {
     ] {
         let cfg = CoordinatorConfig {
             artifact_dir: "artifacts".into(),
-            batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
+            batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1), shed_after: None },
             policy,
             seed: 3,
             ..Default::default()

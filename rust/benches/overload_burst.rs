@@ -1,0 +1,268 @@
+//! Overload burst bench: goodput / p99 / shed-rate at 1×, 4× and 16×
+//! offered load against a braked coordinator — emits machine-readable
+//! `BENCH_overload.json`.
+//!
+//! A deterministic *slow* backend (chaos slow-faults at 1000‰, nothing
+//! else — every answer is bit-exact, every pass pays a fixed real
+//! delay) stands in for a saturated accelerator.  The serial stage-1
+//! service rate is measured first; each load point then offers
+//! `multiplier ×` that rate for a fixed window through `submit()` and
+//! drains every accepted receiver.  Measured per point:
+//!
+//! * goodput (answered replies per second of wall time);
+//! * served p99 end-to-end latency (from the coordinator's histogram);
+//! * shed rate (named `(overloaded)` refusals / offered) and the
+//!   brownout ladder's step counters;
+//! * an always-on conservation gate: offered = answered + refused +
+//!   named-errors exactly, at every load point — no lost replies.
+//!
+//! Flags / env:
+//! * `--quick` or `PSB_BENCH_QUICK=1` — short windows (CI smoke mode);
+//! * `--check` — exit non-zero if any reply is lost at any load, or if
+//!   braked goodput at 16× falls below half the 1× baseline's stage-1
+//!   throughput (the 0.5 margin absorbs CI-runner noise; the brownout
+//!   claim is that goodput *holds* under a 16× flood, not that it
+//!   collapses).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use psb::backend::{chaos_factory, sim_factory, ChaosConfig};
+use psb::coordinator::{
+    is_overloaded, BatcherConfig, BrownoutConfig, Clock, Coordinator, CoordinatorConfig,
+    EscalationPolicy, ServedVia,
+};
+use psb::rng::{RngKind, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+
+const IMG: usize = 8 * 8 * 3;
+const NC: usize = 2;
+
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "overload-bench");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: NC }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
+
+fn image(tag: f32) -> Vec<f32> {
+    (0..IMG).map(|i| ((i as f32) * 0.013 + tag).sin() * 0.5).collect()
+}
+
+/// A fresh braked coordinator over the slow backend (one per load
+/// point, so histograms and the ladder start clean).
+fn coordinator() -> Coordinator {
+    let slow = ChaosConfig {
+        seed: 1,
+        transient_permille: 0,
+        permanent_permille: 0,
+        slow_permille: 1000,
+        poison_permille: 0,
+        geometry_permille: 0,
+        slow_op: Duration::from_micros(500),
+    };
+    let (factory, _stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), slow);
+    Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig {
+                batch_size: 8,
+                linger: Duration::from_micros(200),
+                shed_after: Some(Duration::from_secs(2)),
+            },
+            // stage-1 only: the load points compare pure serving
+            // throughput, not escalation policy
+            policy: EscalationPolicy { n_low: 4, n_high: 4, ..Default::default() },
+            seed: 5,
+            pool_cap: 8,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: Default::default(),
+            admission_cap: 32,
+            brownout: BrownoutConfig {
+                high_milli: 600,
+                low_milli: 250,
+                dwell_up: Duration::from_millis(1),
+                dwell_down: Duration::from_millis(10),
+                ..Default::default()
+            },
+            clock: Clock::real(),
+        },
+        factory,
+        IMG,
+        NC,
+        1_000,
+    )
+    .expect("bench coordinator starts")
+}
+
+struct LoadPoint {
+    multiplier: u32,
+    offered: usize,
+    refused: usize,
+    answered: usize,
+    degraded: usize,
+    errored: usize,
+    goodput_rps: f64,
+    p99: Duration,
+    steps_up: u64,
+    shed_total: u64,
+}
+
+/// Offer `rate_rps` for `window` against a fresh coordinator, drain
+/// every accepted receiver, and account for every reply exactly once.
+fn run_load(multiplier: u32, rate_rps: f64, window: Duration) -> LoadPoint {
+    let coord = coordinator();
+    let per_ms = (rate_rps / 1_000.0).max(1.0) as usize;
+    let mut inflight = Vec::new();
+    let mut refused = 0usize;
+    let mut offered = 0usize;
+    let t0 = Instant::now();
+    while t0.elapsed() < window {
+        for _ in 0..per_ms {
+            offered += 1;
+            match coord.submit(image(offered as f32 * 0.01)) {
+                Ok(rx) => inflight.push(rx),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(is_overloaded(&msg), "refusals must be overload-named: {msg}");
+                    refused += 1;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut answered = 0usize;
+    let mut degraded = 0usize;
+    let mut errored = 0usize;
+    for rx in inflight {
+        match rx.recv_timeout(Duration::from_secs(60)).expect("accepted reply lost") {
+            Ok(resp) => {
+                answered += 1;
+                if resp.served == ServedVia::Degraded {
+                    degraded += 1;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(is_overloaded(&msg), "queue failures must be overload-named: {msg}");
+                errored += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let point = LoadPoint {
+        multiplier,
+        offered,
+        refused,
+        answered,
+        degraded,
+        errored,
+        goodput_rps: answered as f64 / wall.as_secs_f64(),
+        p99: coord.metrics.latency.quantile(0.99),
+        steps_up: coord.overload.stats.steps_up.load(std::sync::atomic::Ordering::Relaxed),
+        shed_total: coord.metrics.shed.load(std::sync::atomic::Ordering::Relaxed),
+    };
+    println!(
+        "[overload] {}x: offered {} → answered {} (degraded {}), refused {}, errored {}, \
+         goodput {:.0} rps, p99 {:?}, ladder steps_up {}",
+        point.multiplier,
+        point.offered,
+        point.answered,
+        point.degraded,
+        point.refused,
+        point.errored,
+        point.goodput_rps,
+        point.p99,
+        point.steps_up
+    );
+    point
+}
+
+fn main() {
+    let quick =
+        std::env::var("PSB_BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
+    let check = std::env::args().any(|a| a == "--check");
+    let window = Duration::from_millis(if quick { 300 } else { 1_500 });
+
+    // stage-1 service-rate baseline: serial blocking classifies
+    let base = coordinator();
+    let n_base = if quick { 64 } else { 256 };
+    let t0 = Instant::now();
+    for i in 0..n_base {
+        let resp = base.classify(image(i as f32 * 0.01)).expect("baseline classify");
+        std::hint::black_box(resp.class);
+    }
+    let base_rps = n_base as f64 / t0.elapsed().as_secs_f64();
+    harness::report_rate("[overload] serial stage-1 baseline", n_base as f64, t0.elapsed());
+    drop(base);
+
+    let points: Vec<LoadPoint> =
+        [1u32, 4, 16].iter().map(|&m| run_load(m, base_rps * m as f64, window)).collect();
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"offered_x\": {}, \"offered\": {}, \"answered\": {}, \
+                 \"degraded\": {}, \"refused\": {}, \"errored\": {}, \
+                 \"goodput_rps\": {:.1}, \"p99_us\": {}, \"shed\": {}, \
+                 \"brownout_steps_up\": {}}}",
+                p.multiplier,
+                p.offered,
+                p.answered,
+                p.degraded,
+                p.refused,
+                p.errored,
+                p.goodput_rps,
+                p.p99.as_micros(),
+                p.shed_total,
+                p.steps_up
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"overload_burst\",\n  \"quick\": {quick},\n  \
+         \"window_ms\": {},\n  \"baseline_rps\": {base_rps:.1},\n  \"loads\": [\n{}\n  ]\n}}\n",
+        window.as_millis(),
+        rows.join(",\n")
+    );
+    // written before the gates: a red run's artifact still shows the data
+    std::fs::write("BENCH_overload.json", &json).expect("write BENCH_overload.json");
+    println!("wrote BENCH_overload.json");
+
+    // conservation is not a --check option, it is the contract
+    for p in &points {
+        assert_eq!(
+            p.refused + p.answered + p.errored,
+            p.offered,
+            "{}x: lost replies — offered {} vs accounted {}",
+            p.multiplier,
+            p.offered,
+            p.refused + p.answered + p.errored
+        );
+        assert!(p.answered > 0, "{}x: goodput collapsed to zero", p.multiplier);
+    }
+
+    if check {
+        let g1 = points[0].goodput_rps;
+        let g16 = points[2].goodput_rps;
+        assert!(
+            g16 >= 0.5 * g1,
+            "braked goodput at 16x ({g16:.0} rps) fell below half the 1x stage-1 \
+             baseline ({g1:.0} rps): the brownout failed to hold throughput"
+        );
+        println!(
+            "check OK: 16x goodput {g16:.0} rps holds against 1x {g1:.0} rps \
+             (shed rate {:.1}%, no reply lost)",
+            100.0 * points[2].refused as f64 / points[2].offered.max(1) as f64
+        );
+    }
+}

@@ -51,6 +51,10 @@ pub enum RuleId {
     Unsafe,
     /// `[[test]]`/`[[bench]]`/`[[example]]` entries vs files on disk.
     TargetManifest,
+    /// Raw unbounded `mpsc::channel()` in the coordinator (must route
+    /// through the `bounded_queue` admission wrapper so queue depth is
+    /// accounted and overload is shed, not buffered without bound).
+    BoundedChannels,
     /// Problems with the waivers themselves (not waivable).
     Waiver,
 }
@@ -64,6 +68,7 @@ impl RuleId {
             RuleId::LockHygiene => "lock-hygiene",
             RuleId::Unsafe => "unsafe",
             RuleId::TargetManifest => "target-manifest",
+            RuleId::BoundedChannels => "bounded-channels",
             RuleId::Waiver => "waiver",
         }
     }
@@ -77,6 +82,7 @@ impl RuleId {
             "lock-hygiene" => Some(RuleId::LockHygiene),
             "unsafe" => Some(RuleId::Unsafe),
             "target-manifest" => Some(RuleId::TargetManifest),
+            "bounded-channels" => Some(RuleId::BoundedChannels),
             _ => None,
         }
     }
@@ -211,7 +217,7 @@ fn parse_waiver_comment(text: &str) -> WaiverParse {
     let Some(rule) = RuleId::waivable(name) else {
         return WaiverParse::Err(format!(
             "unknown rule `{name}` in psb-lint waiver (known: float-purity, determinism, \
-             no-panic, lock-hygiene, unsafe, target-manifest)"
+             no-panic, lock-hygiene, unsafe, target-manifest, bounded-channels)"
         ));
     };
     let tail = rest[close + 1..].trim();

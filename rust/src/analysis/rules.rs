@@ -18,6 +18,11 @@
 //!   `.lock()` there turns one thread's panic into a cascade of
 //!   `PoisonError` failures on every peer.
 //! * **unsafe** — the repo is `unsafe`-free; keep it that way.
+//! * **bounded-channels** — coordinator queues must be admission-bounded:
+//!   a raw `mpsc::channel()` there buffers overload silently instead of
+//!   shedding it with a named `(overloaded)` refusal.  Route through
+//!   `coordinator::overload::bounded_queue` (rendezvous
+//!   `mpsc::sync_channel` reply slots are fine and unmatched).
 //!
 //! Rules are lexical on purpose: they catch the *tokens* that introduce
 //! the hazard (a float type ascription, an unordered map name, a
@@ -57,6 +62,12 @@ fn in_panic_scope(path: &str) -> bool {
 /// `coordinator::lock_unpoisoned` (raw `.lock()` would cascade a peer
 /// panic as `PoisonError` on every later taker).
 fn in_lock_scope(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator/")
+}
+
+/// Modules whose channels must be admission-bounded (see the
+/// `bounded-channels` rule above): the serving coordinator.
+fn in_channel_scope(path: &str) -> bool {
     path.starts_with("rust/src/coordinator/")
 }
 
@@ -159,6 +170,7 @@ pub fn scan_tokens(path: &str, lx: &Lexed) -> Vec<Finding> {
     let det_scope = in_determinism_scope(path);
     let panic_scope = in_panic_scope(path);
     let lock_scope = in_lock_scope(path);
+    let channel_scope = in_channel_scope(path);
     let mut out = Vec::new();
     let mut push = |rule: RuleId, line: u32, message: String| {
         out.push(Finding { rule, file: path.to_string(), line, message });
@@ -251,6 +263,27 @@ pub fn scan_tokens(path: &str, lx: &Lexed) -> Vec<Finding> {
                             format!("`{id}!` on the serving hot path (return an error instead)"),
                         );
                     }
+                }
+                if channel_scope
+                    && !in_test
+                    && id == "mpsc"
+                    && is_punct_at(toks, i + 1, ':')
+                    && is_punct_at(toks, i + 2, ':')
+                    && toks.get(i + 3).and_then(ident_str) == Some("channel")
+                    // a call, plain `channel(` or turbofish `channel::<T>(`
+                    && (is_punct_at(toks, i + 4, '(')
+                        || (is_punct_at(toks, i + 4, ':')
+                            && is_punct_at(toks, i + 5, ':')
+                            && is_punct_at(toks, i + 6, '<')))
+                {
+                    push(
+                        RuleId::BoundedChannels,
+                        t.line,
+                        "raw unbounded `mpsc::channel()` in the coordinator (route through \
+                         `overload::bounded_queue` so admission depth is accounted and \
+                         overload is shed, not buffered without bound)"
+                            .into(),
+                    );
                 }
                 if lock_scope
                     && !in_test

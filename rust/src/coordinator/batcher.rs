@@ -19,23 +19,25 @@
 //! on a virtual clock; in virtual mode the channel wait is polled in
 //! short real slices while the deadline is evaluated in virtual time.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::RecvTimeoutError;
 use std::time::Duration;
 
 use crate::coordinator::clock::Clock;
+use crate::coordinator::overload::{DrainSource, QueueRx};
 
 /// Drain whatever is already queued on `rx` behind a blocking first
 /// item into one dispatch batch, up to `max` items — the zero-latency
 /// batching shape the engine's job window and the stage-2 escalation
 /// worker share (nothing waits; only work that has *already* queued
-/// rides along).
-pub fn drain_ready<T>(rx: &Receiver<T>, first: T, max: usize) -> Vec<T> {
+/// rides along).  Generic over [`DrainSource`], so it works identically
+/// on a raw receiver and a depth-accounted bounded queue.
+pub fn drain_ready<T, S: DrainSource<T>>(rx: &S, first: T, max: usize) -> Vec<T> {
     let mut batch = Vec::with_capacity(max.min(16).max(1));
     batch.push(first);
     while batch.len() < max {
-        match rx.try_recv() {
-            Ok(v) => batch.push(v),
-            Err(_) => break,
+        match rx.try_next() {
+            Some(v) => batch.push(v),
+            None => break,
         }
     }
     batch
@@ -58,11 +60,17 @@ pub struct BatcherConfig {
     /// Maximum time the oldest request may wait before a partial batch
     /// departs.
     pub linger: Duration,
+    /// Deadline budget for load shedding: a request whose queue wait
+    /// already exceeds this when it would be *dequeued* is handed to
+    /// the shed callback instead of a batch — before any backend work,
+    /// billed zero.  `None` disables shedding (the raw-batcher
+    /// default; the serving coordinator opts in).
+    pub shed_after: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { batch_size: 8, linger: Duration::from_millis(2) }
+        BatcherConfig { batch_size: 8, linger: Duration::from_millis(2), shed_after: None }
     }
 }
 
@@ -71,8 +79,14 @@ pub struct FormedBatch<T> {
     /// `[batch_size, image_len]` row-major, zero-padded beyond `tags.len()`.
     pub x: Vec<f32>,
     pub tags: Vec<T>,
+    /// Queue wait of each live row (parallel to `tags`) when the batch
+    /// departed — the queue-age signal the brownout controller and the
+    /// queue-wait histogram read.
+    pub waits: Vec<Duration>,
     /// Age of the oldest member when the batch departed.
     pub oldest_wait: Duration,
+    /// Depth still queued behind this batch when it departed.
+    pub queue_depth: u64,
 }
 
 /// How long a virtual-clock batcher blocks on the real channel between
@@ -83,13 +97,21 @@ const VIRTUAL_POLL: Duration = Duration::from_micros(200);
 /// Pull requests off `rx` and form batches, invoking `dispatch` for each.
 /// Runs until the channel closes and all pending work is flushed.
 /// `dispatch` may block (e.g. waiting on the engine); requests keep
-/// queueing in the channel meanwhile.
+/// queueing in the channel meanwhile — the bounded queue, not this
+/// loop, is what puts a ceiling on that buildup.
+///
+/// Requests older than `cfg.shed_after` are removed at dequeue time and
+/// handed to `shed` with their queue wait instead of ever reaching a
+/// batch: their deadline budget is already spent, so running the
+/// backend for them would be pure waste under load.  `shed` must reply
+/// to the request by name — shedding is never a silent drop.
 pub fn run_batcher<T>(
-    rx: Receiver<Pending<T>>,
+    rx: QueueRx<Pending<T>>,
     cfg: BatcherConfig,
     image_len: usize,
     clock: Clock,
     mut dispatch: impl FnMut(FormedBatch<T>),
+    mut shed: impl FnMut(Pending<T>, Duration),
 ) {
     let mut hold: Vec<Pending<T>> = Vec::with_capacity(cfg.batch_size);
     loop {
@@ -98,33 +120,58 @@ pub fn run_batcher<T>(
                 Ok(p) => hold.push(p),
                 Err(_) => break, // closed and drained
             }
-        } else {
-            let deadline = hold[0].enqueued + cfg.linger;
-            let now = clock.now();
-            if hold.len() >= cfg.batch_size || now >= deadline {
-                dispatch(form(&mut hold, cfg.batch_size, image_len, now));
-                continue;
-            }
-            // On a virtual clock real recv_timeout durations are
-            // meaningless; poll in short real slices and re-check the
-            // virtual deadline each wakeup.
-            let wait =
-                if clock.is_virtual() { VIRTUAL_POLL } else { deadline.saturating_sub(now) };
-            match rx.recv_timeout(wait) {
-                Ok(p) => hold.push(p),
-                Err(RecvTimeoutError::Timeout) => {
-                    let now = clock.now();
-                    if now >= deadline || hold.len() >= cfg.batch_size {
-                        dispatch(form(&mut hold, cfg.batch_size, image_len, now));
-                    }
-                }
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+            continue;
+        }
+        shed_stale(&mut hold, &cfg, clock.now(), &mut shed);
+        if hold.is_empty() {
+            continue;
+        }
+        let deadline = hold[0].enqueued + cfg.linger;
+        let now = clock.now();
+        if hold.len() >= cfg.batch_size || now >= deadline {
+            dispatch(form(&mut hold, cfg.batch_size, image_len, now, rx.depth()));
+            continue;
+        }
+        // On a virtual clock real recv_timeout durations are
+        // meaningless; poll in short real slices and re-check the
+        // virtual deadline each wakeup.
+        let wait = if clock.is_virtual() { VIRTUAL_POLL } else { deadline.saturating_sub(now) };
+        match rx.recv_timeout(wait) {
+            Ok(p) => hold.push(p),
+            // timeout: loop back — the top of the loop re-checks the
+            // (virtual) deadline, sheds stale members, and dispatches
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     while !hold.is_empty() {
         let now = clock.now();
-        dispatch(form(&mut hold, cfg.batch_size, image_len, now));
+        shed_stale(&mut hold, &cfg, now, &mut shed);
+        if hold.is_empty() {
+            break;
+        }
+        dispatch(form(&mut hold, cfg.batch_size, image_len, now, rx.depth()));
+    }
+}
+
+/// Remove members whose queue wait exceeds the shed budget, handing
+/// each to the shed callback with the wait it accrued.
+fn shed_stale<T>(
+    hold: &mut Vec<Pending<T>>,
+    cfg: &BatcherConfig,
+    now: Duration,
+    shed: &mut impl FnMut(Pending<T>, Duration),
+) {
+    let Some(budget) = cfg.shed_after else { return };
+    let mut i = 0;
+    while i < hold.len() {
+        let wait = now.saturating_sub(hold[i].enqueued);
+        if wait > budget {
+            let p = hold.remove(i);
+            shed(p, wait);
+        } else {
+            i += 1;
+        }
     }
 }
 
@@ -133,11 +180,13 @@ fn form<T>(
     batch_size: usize,
     image_len: usize,
     now: Duration,
+    queue_depth: u64,
 ) -> FormedBatch<T> {
     let take = hold.len().min(batch_size);
     let drained: Vec<Pending<T>> = hold.drain(..take).collect();
-    let oldest_wait =
-        drained.iter().map(|p| now.saturating_sub(p.enqueued)).max().unwrap_or_default();
+    let waits: Vec<Duration> =
+        drained.iter().map(|p| now.saturating_sub(p.enqueued)).collect();
+    let oldest_wait = waits.iter().copied().max().unwrap_or_default();
     let mut x = vec![0.0f32; batch_size * image_len];
     let mut tags = Vec::with_capacity(take);
     for (i, p) in drained.into_iter().enumerate() {
@@ -145,32 +194,34 @@ fn form<T>(
         x[i * image_len..(i + 1) * image_len].copy_from_slice(&p.image);
         tags.push(p.tag);
     }
-    FormedBatch { x, tags, oldest_wait }
+    FormedBatch { x, tags, waits, oldest_wait, queue_depth }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::coordinator::overload::{bounded_queue, QueueTx};
 
     fn collect_batches<T: Send + 'static>(
         cfg: BatcherConfig,
         image_len: usize,
         clock: Clock,
-        feed: impl FnOnce(mpsc::Sender<Pending<T>>, Clock) + Send + 'static,
+        feed: impl FnOnce(QueueTx<Pending<T>>, Clock) + Send + 'static,
     ) -> Vec<FormedBatch<T>> {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = bounded_queue("test-batcher", 1024);
         let feed_clock = clock.clone();
         let feeder = std::thread::spawn(move || feed(tx, feed_clock));
         let mut batches = Vec::new();
-        run_batcher(rx, cfg, image_len, clock, |b| batches.push(b));
+        run_batcher(rx, cfg, image_len, clock, |b| batches.push(b), |_, _| {
+            panic!("no test through this helper expects shedding")
+        });
         assert!(feeder.join().is_ok(), "feeder thread panicked");
         batches
     }
 
     #[test]
     fn full_batches_depart_immediately() {
-        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10), shed_after: None };
         let batches = collect_batches(cfg, 2, Clock::real(), |tx, clock| {
             for i in 0..8usize {
                 let p = Pending { image: vec![i as f32; 2], enqueued: clock.now(), tag: i };
@@ -185,7 +236,7 @@ mod tests {
 
     #[test]
     fn linger_flushes_partial_batch_with_padding() {
-        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) };
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_millis(5), shed_after: None };
         let batches = collect_batches(cfg, 3, Clock::real(), |tx, clock| {
             let p = Pending { image: vec![1.0; 3], enqueued: clock.now(), tag: 7u8 };
             assert!(tx.send(p).is_ok(), "batcher hung up early");
@@ -201,7 +252,7 @@ mod tests {
     #[test]
     fn virtual_clock_linger_fires_only_when_advanced() {
         let clock = Clock::virtual_clock();
-        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(3) };
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(3), shed_after: None };
         let batches = collect_batches(cfg, 1, clock.clone(), move |tx, clock| {
             let p = Pending { image: vec![2.0], enqueued: clock.now(), tag: 1u8 };
             assert!(tx.send(p).is_ok(), "batcher hung up early");
@@ -224,7 +275,7 @@ mod tests {
 
     #[test]
     fn close_flushes_everything() {
-        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10) };
+        let cfg = BatcherConfig { batch_size: 4, linger: Duration::from_secs(10), shed_after: None };
         let batches = collect_batches(cfg, 1, Clock::real(), |tx, clock| {
             for i in 0..6u8 {
                 let p = Pending { image: vec![0.0], enqueued: clock.now(), tag: i };
@@ -233,5 +284,47 @@ mod tests {
         });
         let total: usize = batches.iter().map(|b| b.tags.len()).sum();
         assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn over_deadline_requests_are_shed_at_dequeue_on_the_virtual_clock() {
+        let clock = Clock::virtual_clock();
+        let cfg = BatcherConfig {
+            batch_size: 8,
+            linger: Duration::from_millis(5),
+            shed_after: Some(Duration::from_millis(20)),
+        };
+        let (tx, rx) = bounded_queue("test-batcher", 64);
+        let feed_clock = clock.clone();
+        let run_clock = clock.clone();
+        let feeder = std::thread::spawn(move || {
+            // two stale-to-be requests, then a fresh one after the jump
+            for tag in [1u8, 2] {
+                let p = Pending { image: vec![0.0], enqueued: feed_clock.now(), tag };
+                assert!(tx.send(p).is_ok(), "batcher hung up early");
+            }
+            // let the batcher pull both into its hold
+            std::thread::sleep(Duration::from_millis(30));
+            // jump virtual time past linger AND shed budget
+            feed_clock.advance(Duration::from_millis(40));
+            std::thread::sleep(Duration::from_millis(30));
+            let p = Pending { image: vec![9.0], enqueued: feed_clock.now(), tag: 3u8 };
+            assert!(tx.send(p).is_ok(), "batcher hung up early");
+        });
+        let mut batches = Vec::new();
+        let mut sheds: Vec<(u8, Duration)> = Vec::new();
+        run_batcher(rx, cfg, 1, run_clock, |b| batches.push(b), |p, wait| {
+            sheds.push((p.tag, wait));
+        });
+        assert!(feeder.join().is_ok(), "feeder thread panicked");
+        // the stale pair was shed before any dispatch — with their
+        // accrued waits — and only the fresh request formed a batch
+        assert_eq!(sheds.iter().map(|s| s.0).collect::<Vec<_>>(), vec![1, 2]);
+        for (tag, wait) in &sheds {
+            assert!(*wait >= Duration::from_millis(40), "tag {tag}: shed wait {wait:?}");
+        }
+        assert_eq!(batches.len(), 1, "an all-shed hold must not dispatch an empty batch");
+        assert_eq!(batches[0].tags, vec![3]);
+        assert_eq!(batches[0].waits.len(), 1, "waits stay parallel to tags");
     }
 }

@@ -36,6 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, BackendFactory, InferenceSession, MergeOutcome, StepReport};
 use crate::coordinator::metrics::ErrorRing;
+use crate::coordinator::overload::{bounded_queue, QueueSendError, QueueTx, OVERLOADED};
 use crate::precision::PrecisionPlan;
 use crate::runtime::Execution;
 use crate::sim::tensor::Tensor;
@@ -74,11 +75,16 @@ pub struct EngineConfig {
     /// recently used session is evicted (its id is retired with the
     /// eviction reason).
     pub pool_cap: usize,
+    /// Admission bound of the engine's job queue: work jobs beyond this
+    /// depth are refused with a named `(overloaded)` error at `submit`
+    /// (control jobs — `Close`, pin/unpin — always land, or a refused
+    /// cleanup would leak pool slots).
+    pub queue_cap: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { pool_cap: 32 }
+        EngineConfig { pool_cap: 32, queue_cap: 512 }
     }
 }
 
@@ -107,6 +113,9 @@ pub struct EngineStats {
     /// Σ per-frame changed fraction in milli-units (0–1000); the mean
     /// rebase fraction is `stream_frac_milli / stream_frames`.
     pub stream_frac_milli: AtomicU64,
+    /// New sessions bounced by a fully *pinned* pool — a capacity
+    /// refusal (named `(overloaded)`), distinct from LRU `evictions`.
+    pub pool_bounces: AtomicU64,
 }
 
 impl EngineStats {
@@ -164,9 +173,16 @@ pub enum EngineJob {
         reply: mpsc::SyncSender<Result<EngineOutput>>,
     },
     /// Pin (or release) a pooled session against LRU eviction — stream
-    /// sessions hold their slot while the stream is live.  Pinning an
-    /// unknown id is a no-op.  Fire-and-forget, like `Close`.
-    SetPinned { session: SessionId, pinned: bool },
+    /// sessions hold their slot while the stream is live.  With `reply:
+    /// None` this is fire-and-forget like `Close`; with a reply channel
+    /// the outcome is confirmed, and pinning a missing id reports *why*
+    /// it is missing (a fully-pinned pool's bounce is a named
+    /// `(overloaded)` error, not a silent no-op).
+    SetPinned {
+        session: SessionId,
+        pinned: bool,
+        reply: Option<mpsc::SyncSender<Result<()>>>,
+    },
     /// Drop a pooled session (e.g. nothing escalated).  Idempotent.
     Close { session: SessionId },
 }
@@ -262,14 +278,29 @@ impl SessionPool {
                 continue;
             }
             self.slots.remove(&old);
-            self.retire(
-                old,
-                format!(
-                    "session {old} was evicted from the pool (LRU, capacity {})",
-                    self.cap
-                ),
-            );
-            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            if self.pinned.len() >= self.cap {
+                // every capacity slot is pinned: the victim is the
+                // newcomer itself.  That is a capacity *bounce* — a
+                // named retryable overload, not an LRU eviction.
+                self.retire(
+                    old,
+                    format!(
+                        "session {old} was bounced: pool fully pinned at capacity {} \
+                         {OVERLOADED}: retry later",
+                        self.cap
+                    ),
+                );
+                self.stats.pool_bounces.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.retire(
+                    old,
+                    format!(
+                        "session {old} was evicted from the pool (LRU, capacity {})",
+                        self.cap
+                    ),
+                );
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
         while let Some(id) = kept.pop_back() {
             self.lru.push_front(id);
@@ -278,14 +309,25 @@ impl SessionPool {
 
     /// Mark a resident session exempt from (or again subject to) LRU
     /// eviction.  Unpinning re-applies the capacity bound immediately.
-    fn set_pinned(&mut self, id: SessionId, pinned: bool) {
+    /// Pinning a non-resident id is an error naming its retirement —
+    /// the caller may have raced an eviction or a fully-pinned bounce.
+    fn set_pinned(&mut self, id: SessionId, pinned: bool) -> Result<()> {
         if pinned {
             if self.slots.contains_key(&id) {
                 self.pinned.insert(id);
+                Ok(())
+            } else {
+                Err(match self.retired.get(&id) {
+                    Some(reason) => anyhow!("cannot pin: {reason}"),
+                    None => anyhow!("cannot pin unknown engine session {id}"),
+                })
             }
-        } else if self.pinned.remove(&id) {
-            self.evict_over_cap();
-            self.sync_gauges();
+        } else {
+            if self.pinned.remove(&id) {
+                self.evict_over_cap();
+                self.sync_gauges();
+            }
+            Ok(())
         }
     }
 
@@ -360,7 +402,7 @@ struct BeginReq {
 
 /// Handle to the engine thread.
 pub struct Engine {
-    tx: mpsc::Sender<EngineJob>,
+    tx: QueueTx<EngineJob>,
     handle: Option<JoinHandle<()>>,
     /// Recent backend/session failures, for post-mortem `submit`s and
     /// cascade diagnosis.
@@ -383,8 +425,8 @@ impl Engine {
         let stats = Arc::new(EngineStats::default());
         let fail_worker = fail.clone();
         let stats_worker = stats.clone();
-        let (tx, rx) = mpsc::channel::<EngineJob>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (tx, rx) = bounded_queue::<EngineJob>("engine admission", cfg.queue_cap);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let handle = std::thread::Builder::new()
             .name("psb-engine".into())
             .spawn(move || {
@@ -481,8 +523,14 @@ impl Engine {
                                         }
                                         let _ = reply.send(result);
                                     }
-                                    EngineJob::SetPinned { session, pinned } => {
-                                        pool.set_pinned(session, pinned)
+                                    EngineJob::SetPinned { session, pinned, reply } => {
+                                        let result = pool.set_pinned(session, pinned);
+                                        if let Err(e) = &result {
+                                            fail_worker.push(format!("{e:#}"));
+                                        }
+                                        if let Some(reply) = reply {
+                                            let _ = reply.send(result);
+                                        }
                                     }
                                     EngineJob::Close { session } => pool.close(session),
                                     EngineJob::Refine { .. } => unreachable!("matched above"),
@@ -512,15 +560,25 @@ impl Engine {
         Ok(Engine { tx, handle: Some(handle), fail, stats })
     }
 
-    /// Enqueue a job (non-blocking).  A send against a dead engine
-    /// reports the recorded root cause, not just "shut down".
+    /// Enqueue a job (non-blocking).  Work jobs are refused with a
+    /// named `(overloaded)` error once the bounded admission queue is
+    /// full; control jobs (`Close`, pin/unpin) always land — dropping a
+    /// cleanup job would leak a pool slot forever.  A send against a
+    /// dead engine reports the recorded root cause, not just "shut
+    /// down".
     pub fn submit(&self, job: EngineJob) -> Result<()> {
-        self.tx.send(job).map_err(|_| match self.last_error() {
-            Some(cause) => {
-                anyhow!("engine thread has shut down (last backend failure: {cause})")
-            }
-            None => anyhow!("engine thread has shut down"),
-        })
+        let control = matches!(job, EngineJob::SetPinned { .. } | EngineJob::Close { .. });
+        let sent = if control { self.tx.send_unbounded(job) } else { self.tx.send(job) };
+        match sent {
+            Ok(()) => Ok(()),
+            Err(QueueSendError::Full(_)) => Err(self.tx.full_error()),
+            Err(QueueSendError::Disconnected(_)) => Err(match self.last_error() {
+                Some(cause) => {
+                    anyhow!("engine thread has shut down (last backend failure: {cause})")
+                }
+                None => anyhow!("engine thread has shut down"),
+            }),
+        }
     }
 
     /// Most recent backend/session failure observed by the engine.
@@ -601,9 +659,23 @@ impl Engine {
         self.wait(rx)
     }
 
-    /// Pin or release a pooled session against LRU eviction.
+    /// Pin or release a pooled session against LRU eviction
+    /// (fire-and-forget).
     pub fn pin_session(&self, session: SessionId, pinned: bool) -> Result<()> {
-        self.submit(EngineJob::SetPinned { session, pinned })
+        self.submit(EngineJob::SetPinned { session, pinned, reply: None })
+    }
+
+    /// Pin a pooled session and *confirm* the pin took: a session that
+    /// was bounced by a fully-pinned pool answers with its named
+    /// `(overloaded)` bounce reason instead of silently staying
+    /// unpinned — the stream registry's admission check.
+    pub fn pin_session_checked(&self, session: SessionId, pinned: bool) -> Result<()> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.submit(EngineJob::SetPinned { session, pinned, reply: Some(reply) })?;
+        rx.recv().map_err(|_| match self.last_error() {
+            Some(cause) => anyhow!("engine dropped the job (last backend failure: {cause})"),
+            None => anyhow!("engine dropped the job"),
+        })?
     }
 
     /// Drop a pooled session.
@@ -1071,7 +1143,7 @@ fn output_of(sess: &dyn InferenceSession, step: &StepReport) -> EngineOutput {
 impl Drop for Engine {
     fn drop(&mut self) {
         // Closing the channel ends the engine loop.
-        let (tx, _) = mpsc::channel();
+        let (tx, _) = bounded_queue("engine shutdown", 0);
         drop(std::mem::replace(&mut self.tx, tx));
         if let Some(h) = self.handle.take() {
             let _ = h.join();

@@ -99,6 +99,10 @@ pub struct Metrics {
     pub engine_calls: AtomicU64,
     pub latency: Histogram,
     pub stage1_latency: Histogram,
+    /// Time each request spent in the admission queue before its batch
+    /// formed (recorded for served *and* shed requests — shed requests
+    /// are billed zero backend work but their wait is real).
+    pub queue_wait: Histogram,
     pub gated_adds: AtomicU64,
     /// Accumulator adds the backends actually *executed* (session caches
     /// and the IntKernel O(Δ) delta path shrink it below the charge) —
@@ -152,6 +156,24 @@ pub struct Metrics {
     /// Σ per-frame changed fraction in milli-units; the mean rebase
     /// fraction is `stream_frac_milli / stream_frames`.
     pub stream_frac_milli: AtomicU64,
+    /// Requests refused or dropped by the overload layer with a named
+    /// `(overloaded)` error: admission-queue-full refusals, brownout
+    /// shedding, and deadline sheds at dequeue.  Every shed request
+    /// still receives its error reply — shed ≠ lost.
+    pub shed: AtomicU64,
+    /// Queued stream frames dropped latest-frame-wins under brownout
+    /// (the superseded frame's caller gets a named error).
+    pub frames_coalesced: AtomicU64,
+    /// Current brownout ladder rung (gauge): 0 full, 1 cap-escalation,
+    /// 2 stage1-only, 3 shed.
+    pub brownout_level: AtomicU64,
+    /// New streams bounced off a fully-pinned session pool (mirrored
+    /// from [`crate::coordinator::engine::EngineStats`]).
+    pub pool_bounces: AtomicU64,
+    /// `(overloaded)` faults the supervisor saw — counted, retryable,
+    /// and never fed to the circuit breaker (mirrored from
+    /// [`crate::coordinator::supervisor::SupervisorStats`]).
+    pub overloaded: AtomicU64,
 }
 
 impl Metrics {
@@ -188,6 +210,7 @@ impl Metrics {
         self.resurrections.store(stats.resurrections.load(Relaxed), Relaxed);
         self.degraded.store(stats.degraded.load(Relaxed), Relaxed);
         self.breaker_trips.store(stats.breaker_trips.load(Relaxed), Relaxed);
+        self.overloaded.store(stats.overloaded.load(Relaxed), Relaxed);
     }
 
     /// Mirror the engine's live pool/merge counters into the serving
@@ -202,6 +225,7 @@ impl Metrics {
         self.stream_frames.store(stats.stream_frames.load(Relaxed), Relaxed);
         self.stream_rows_reused.store(stats.stream_rows_reused.load(Relaxed), Relaxed);
         self.stream_frac_milli.store(stats.stream_frac_milli.load(Relaxed), Relaxed);
+        self.pool_bounces.store(stats.pool_bounces.load(Relaxed), Relaxed);
     }
 
     /// Mean fraction of each served frame that actually changed (0..1);
@@ -245,7 +269,8 @@ impl Metrics {
              stream={} frames(rows_reused {}, mean_frac {:.3}) \
              exec_adds={} backend_ms={:.1} \
              faults={} retries={} resurrections={} degraded={} breaker_trips={} errors={} \
-             p50={:?} p99={:?} mean={:?}",
+             shed={} coalesced={} bounced={} overloaded={} brownout={} \
+             p50={:?} p99={:?} mean={:?} qwait_p50={:?} qwait_p99={:?}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             100.0 * self.escalation_rate(),
@@ -267,9 +292,19 @@ impl Metrics {
             self.degraded.load(Ordering::Relaxed),
             self.breaker_trips.load(Ordering::Relaxed),
             self.engine_errors.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.frames_coalesced.load(Ordering::Relaxed),
+            self.pool_bounces.load(Ordering::Relaxed),
+            self.overloaded.load(Ordering::Relaxed),
+            crate::coordinator::overload::BrownoutLevel::from_u8(
+                self.brownout_level.load(Ordering::Relaxed).min(3) as u8,
+            )
+            .as_str(),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
             self.latency.mean(),
+            self.queue_wait.quantile(0.5),
+            self.queue_wait.quantile(0.99),
         );
         let recent = self.recent.to_vec();
         if !recent.is_empty() {
@@ -352,6 +387,22 @@ mod tests {
         assert_eq!(m.recent.total(), 20);
         let s = m.summary();
         assert!(s.contains("recent_errors[16]: boom 4 | "), "{s}");
+    }
+
+    #[test]
+    fn summary_names_the_overload_fields() {
+        let m = Metrics::default();
+        Metrics::add(&m.shed, 3);
+        Metrics::add(&m.frames_coalesced, 2);
+        Metrics::add(&m.pool_bounces, 1);
+        Metrics::add(&m.brownout_level, 2);
+        m.queue_wait.record(Duration::from_micros(500));
+        let s = m.summary();
+        assert!(s.contains("shed=3"), "{s}");
+        assert!(s.contains("coalesced=2"), "{s}");
+        assert!(s.contains("bounced=1"), "{s}");
+        assert!(s.contains("brownout=stage1-only"), "{s}");
+        assert!(s.contains("qwait_p50="), "{s}");
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub mod batcher;
 pub mod clock;
 pub mod engine;
 pub mod metrics;
+pub mod overload;
 pub mod scheduler;
 pub mod server;
 pub mod stream;
@@ -58,6 +59,10 @@ pub use batcher::BatcherConfig;
 pub use clock::Clock;
 pub use engine::{Engine, EngineConfig, EngineJob, EngineOutput, EngineStats, SessionId};
 pub use metrics::Metrics;
+pub use overload::{
+    bounded_queue, is_overloaded, BrownoutConfig, BrownoutController, BrownoutLevel, LoadSample,
+    QueueRx, QueueSendError, QueueTx,
+};
 pub use scheduler::{EscalationPolicy, SchedulerStats};
 pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, ServedVia};
 pub use stream::{StreamConfig, StreamId, StreamRegistry};

@@ -1,0 +1,652 @@
+//! Overload control: bounded admission queues and the brownout
+//! precision controller.
+//!
+//! The paper's run-time knob — "adaptive control of the accuracy of
+//! each operation at run-time" — is exactly what a saturated server
+//! needs: under load, degrade *precision* before *availability*.  This
+//! module owns the two mechanisms (docs/ROBUSTNESS.md, "Overload and
+//! brownout"):
+//!
+//! * **Bounded admission** ([`bounded_queue`]): every coordinator work
+//!   queue is a depth-accounted wrapper over an std channel.  A full
+//!   queue refuses the send with a named retryable `(overloaded)`
+//!   error — never a silent drop, never unbounded memory.  Control
+//!   jobs whose loss would leak state (session `Close`/unpin) bypass
+//!   the bound via [`QueueTx::send_unbounded`] but are still counted.
+//!   psb-lint's `bounded-channels` rule points raw `mpsc::channel()`
+//!   calls in `coordinator/` at this wrapper.
+//! * **Brownout ladder** ([`BrownoutController`]): a saturation signal
+//!   (queue depth vs capacity, queue age vs a wait budget, mean
+//!   backend pass time vs a pass budget) steps a degradation ladder
+//!   with watermark + dwell hysteresis:
+//!   full service → pressure-scaled escalation threshold → stage-1-only
+//!   (`ServedVia::Degraded`) → shed new non-stream admissions.
+//!   All timing flows through [`Clock`], so every transition is
+//!   virtual-time-testable and deterministic.
+//!
+//! Retryability stays textual (see `supervisor::is_permanent`): the
+//! `(overloaded)` marker is *not* `(permanent)`, so every overload
+//! rejection is retryable by construction, and
+//! [`is_overloaded`] lets the supervisor keep capacity pushback out of
+//! the circuit breaker (the breaker models backend health; the
+//! brownout controller owns the load response).
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::clock::Clock;
+use crate::coordinator::lock_unpoisoned;
+
+/// The textual overload marker.  Like `(transient)`/`(permanent)` this
+/// is matched by substring; producers put it in every capacity-refusal
+/// message so clients and the supervisor can tell pushback from faults.
+pub const OVERLOADED: &str = "(overloaded)";
+
+/// Does this error message name an overload (capacity) condition?
+pub fn is_overloaded(msg: &str) -> bool {
+    msg.contains(OVERLOADED)
+}
+
+// ------------------------------------------------------------------
+// Bounded admission queue
+// ------------------------------------------------------------------
+
+/// Sender half of a bounded admission queue.  Cloneable; the depth
+/// gauge is shared with the receiver so the bound is enforced
+/// sender-side without any locking on the hot path.
+pub struct QueueTx<T> {
+    tx: Sender<T>,
+    depth: Arc<AtomicU64>,
+    cap: u64,
+    name: &'static str,
+}
+
+impl<T> Clone for QueueTx<T> {
+    fn clone(&self) -> Self {
+        QueueTx { tx: self.tx.clone(), depth: self.depth.clone(), cap: self.cap, name: self.name }
+    }
+}
+
+/// Why a bounded send was refused.  `Full` is the overload case (the
+/// value comes back so the caller can reply to it by name);
+/// `Disconnected` means the worker is gone (shutdown).
+pub enum QueueSendError<T> {
+    Full(T),
+    Disconnected(T),
+}
+
+/// Receiver half: decrements the shared depth gauge on every receive.
+pub struct QueueRx<T> {
+    rx: Receiver<T>,
+    depth: Arc<AtomicU64>,
+    cap: u64,
+}
+
+/// Build a bounded admission queue of capacity `cap` (work items; the
+/// control plane may exceed it).  `name` labels rejection messages.
+pub fn bounded_queue<T>(name: &'static str, cap: usize) -> (QueueTx<T>, QueueRx<T>) {
+    // The one raw channel every bounded coordinator queue is built on:
+    // the bound lives in the depth gauge, not the channel.
+    // psb-lint: allow(bounded-channels): this is the bounded admission wrapper itself
+    let (tx, rx) = mpsc::channel();
+    let depth = Arc::new(AtomicU64::new(0));
+    (
+        QueueTx { tx, depth: depth.clone(), cap: cap as u64, name },
+        QueueRx { rx, depth, cap: cap as u64 },
+    )
+}
+
+impl<T> QueueTx<T> {
+    /// Items currently queued (sent and not yet received).
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+
+    /// Bounded send: refused with [`QueueSendError::Full`] once `cap`
+    /// items are in flight.
+    pub fn send(&self, v: T) -> std::result::Result<(), QueueSendError<T>> {
+        if self.depth.load(Ordering::Relaxed) >= self.cap {
+            return Err(QueueSendError::Full(v));
+        }
+        self.send_unbounded(v)
+    }
+
+    /// Control-plane send: always admitted (still depth-accounted).
+    /// Reserved for jobs whose *loss* would leak state — dropping a
+    /// session `Close` because the queue is momentarily full would
+    /// strand a pool slot forever.
+    pub fn send_unbounded(&self, v: T) -> std::result::Result<(), QueueSendError<T>> {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(v) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(v)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(QueueSendError::Disconnected(v))
+            }
+        }
+    }
+
+    /// The named retryable error a full queue replies with.
+    pub fn full_error(&self) -> anyhow::Error {
+        anyhow!(
+            "{} queue full (depth {}, cap {}) {OVERLOADED}: retry later",
+            self.name,
+            self.depth(),
+            self.cap,
+        )
+    }
+
+    /// The named error for a torn-down worker.
+    pub fn disconnected_error(&self) -> anyhow::Error {
+        anyhow!("{} queue worker is gone: coordinator shut down", self.name)
+    }
+}
+
+impl<T> QueueRx<T> {
+    fn taken(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Items currently queued.
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+
+    pub fn recv(&self) -> std::result::Result<T, RecvError> {
+        let v = self.rx.recv()?;
+        self.taken();
+        Ok(v)
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<T, TryRecvError> {
+        let v = self.rx.try_recv()?;
+        self.taken();
+        Ok(v)
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> std::result::Result<T, RecvTimeoutError> {
+        let v = self.rx.recv_timeout(d)?;
+        self.taken();
+        Ok(v)
+    }
+}
+
+/// What `drain_ready` drains from: anything with a non-blocking
+/// `try_next`.  Lets the dispatch-window shape work identically over a
+/// raw receiver and a depth-accounted [`QueueRx`].
+pub trait DrainSource<T> {
+    fn try_next(&self) -> Option<T>;
+}
+
+impl<T> DrainSource<T> for Receiver<T> {
+    fn try_next(&self) -> Option<T> {
+        self.try_recv().ok()
+    }
+}
+
+impl<T> DrainSource<T> for QueueRx<T> {
+    fn try_next(&self) -> Option<T> {
+        self.try_recv().ok()
+    }
+}
+
+// ------------------------------------------------------------------
+// Brownout controller
+// ------------------------------------------------------------------
+
+/// The degradation ladder, cheapest service last.  Ordering is load
+/// order: `Full < CapEscalation < Stage1Only < Shed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutLevel {
+    /// Normal service: escalations run under the configured policy.
+    Full = 0,
+    /// Escalation threshold scaled up by `escalation_pressure`: only
+    /// the highest-entropy requests still buy stage-2 precision.
+    CapEscalation = 1,
+    /// No escalations at all: every would-escalate request is served
+    /// its retained stage-1 answer as `ServedVia::Degraded`.
+    Stage1Only = 2,
+    /// New non-stream admissions are shed with a named `(overloaded)`
+    /// error; queued work keeps draining at stage-1 precision.
+    Shed = 3,
+}
+
+impl BrownoutLevel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BrownoutLevel::Full => "full",
+            BrownoutLevel::CapEscalation => "cap-escalation",
+            BrownoutLevel::Stage1Only => "stage1-only",
+            BrownoutLevel::Shed => "shed",
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Self {
+        match v {
+            0 => BrownoutLevel::Full,
+            1 => BrownoutLevel::CapEscalation,
+            2 => BrownoutLevel::Stage1Only,
+            _ => BrownoutLevel::Shed,
+        }
+    }
+
+    fn up(self) -> Self {
+        Self::from_u8((self as u8 + 1).min(3))
+    }
+
+    fn down(self) -> Self {
+        Self::from_u8((self as u8).saturating_sub(1))
+    }
+}
+
+/// Watermarks and dwell times of the ladder.  Saturation is a permille
+/// (integer ‰, no floats in the signal path): the max of queue depth /
+/// capacity, oldest queue wait / `wait_budget`, and mean backend pass
+/// time / `pass_budget`.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownoutConfig {
+    /// Saturation (‰) at or above which the ladder steps one rung up.
+    pub high_milli: u64,
+    /// Saturation (‰) at or below which recovery credit accrues.
+    pub low_milli: u64,
+    /// Minimum time between consecutive up-steps (paces the ramp so one
+    /// burst observation cannot jump straight to `Shed`).
+    pub dwell_up: Duration,
+    /// Sustained low saturation required per down-step (hysteresis: a
+    /// brief lull must not flap the ladder).
+    pub dwell_down: Duration,
+    /// Queue age that counts as full (1000‰) saturation.
+    pub wait_budget: Duration,
+    /// Mean backend wall time per engine call that counts as full
+    /// saturation.
+    pub pass_budget: Duration,
+    /// Multiplier on the scheduler's escalation threshold at
+    /// `CapEscalation` and above.
+    pub escalation_pressure: f32,
+    /// Freeze the ladder at a fixed level (tests: pin `Stage1Only` to
+    /// prove degraded answers bit-identical to stage-1 service).
+    pub pin_level: Option<BrownoutLevel>,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig {
+            high_milli: 700,
+            low_milli: 250,
+            dwell_up: Duration::from_millis(1),
+            dwell_down: Duration::from_millis(25),
+            wait_budget: Duration::from_millis(50),
+            pass_budget: Duration::from_millis(20),
+            escalation_pressure: 4.0,
+            pin_level: None,
+        }
+    }
+}
+
+/// One saturation observation, taken per formed stage-1 batch.
+/// `backend_ns`/`engine_calls` are the *cumulative* metrics counters;
+/// the controller diffs them internally to a recent mean pass time.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSample {
+    pub queue_depth: u64,
+    pub queue_cap: u64,
+    pub oldest_wait: Duration,
+    pub backend_ns: u64,
+    pub engine_calls: u64,
+}
+
+/// Ladder transition and shed counters.
+#[derive(Default)]
+pub struct BrownoutStats {
+    pub steps_up: AtomicU64,
+    pub steps_down: AtomicU64,
+    /// Admissions refused at level `Shed`.
+    pub shed: AtomicU64,
+}
+
+struct Inner {
+    /// Clock time of the last level transition.
+    last_change: Duration,
+    /// Start of the current sustained-low-saturation run, if any.
+    low_since: Option<Duration>,
+    prev_backend_ns: u64,
+    prev_calls: u64,
+    last_sat_milli: u64,
+}
+
+/// Steps [`BrownoutLevel`] from a saturation signal with watermark +
+/// dwell hysteresis.  Deterministic: all timing is [`Clock`] time, the
+/// signal is integer permille, and transitions depend only on the
+/// observation sequence.
+pub struct BrownoutController {
+    cfg: BrownoutConfig,
+    clock: Clock,
+    level: AtomicU8,
+    inner: Mutex<Inner>,
+    pub stats: BrownoutStats,
+}
+
+fn ratio_milli(num: u128, den: u128) -> u64 {
+    if den == 0 {
+        return 0;
+    }
+    (num.saturating_mul(1000) / den).min(10_000) as u64
+}
+
+impl BrownoutController {
+    pub fn new(cfg: BrownoutConfig, clock: Clock) -> Self {
+        let level = cfg.pin_level.unwrap_or(BrownoutLevel::Full) as u8;
+        let now = clock.now();
+        BrownoutController {
+            cfg,
+            clock,
+            level: AtomicU8::new(level),
+            inner: Mutex::new(Inner {
+                last_change: now,
+                low_since: None,
+                prev_backend_ns: 0,
+                prev_calls: 0,
+                last_sat_milli: 0,
+            }),
+            stats: BrownoutStats::default(),
+        }
+    }
+
+    pub fn level(&self) -> BrownoutLevel {
+        BrownoutLevel::from_u8(self.level.load(Ordering::Relaxed))
+    }
+
+    /// The most recent saturation observation, in permille.
+    pub fn saturation_milli(&self) -> u64 {
+        lock_unpoisoned(&self.inner).last_sat_milli
+    }
+
+    /// Multiplier for the scheduler's escalation threshold at the
+    /// current level (1.0 at `Full`).
+    pub fn escalation_scale(&self) -> f32 {
+        match self.level() {
+            BrownoutLevel::Full => 1.0,
+            _ => self.cfg.escalation_pressure,
+        }
+    }
+
+    /// May requests still buy stage-2 precision?
+    pub fn escalations_allowed(&self) -> bool {
+        self.level() < BrownoutLevel::Stage1Only
+    }
+
+    /// Should streams drop stale queued frames (latest-frame-wins)?
+    pub fn coalesce_streams(&self) -> bool {
+        self.level() >= BrownoutLevel::CapEscalation
+    }
+
+    fn sat_of(&self, depth: u64, cap: u64, oldest_wait: Duration, pass_ns: u64) -> u64 {
+        let q = if cap > 0 { (depth.saturating_mul(1000) / cap).min(10_000) } else { 0 };
+        let w = ratio_milli(oldest_wait.as_nanos(), self.cfg.wait_budget.as_nanos());
+        let p = ratio_milli(pass_ns as u128, self.cfg.pass_budget.as_nanos());
+        q.max(w).max(p)
+    }
+
+    fn step_locked(&self, g: &mut Inner, sat: u64) -> BrownoutLevel {
+        g.last_sat_milli = sat;
+        let lvl = self.level();
+        if let Some(pinned) = self.cfg.pin_level {
+            return pinned;
+        }
+        let now = self.clock.now();
+        if sat >= self.cfg.high_milli {
+            g.low_since = None;
+            if lvl < BrownoutLevel::Shed
+                && now.saturating_sub(g.last_change) >= self.cfg.dwell_up
+            {
+                let next = lvl.up();
+                self.level.store(next as u8, Ordering::Relaxed);
+                g.last_change = now;
+                self.stats.steps_up.fetch_add(1, Ordering::Relaxed);
+                return next;
+            }
+        } else if sat <= self.cfg.low_milli {
+            let since = *g.low_since.get_or_insert(now);
+            if lvl > BrownoutLevel::Full && now.saturating_sub(since) >= self.cfg.dwell_down {
+                let next = lvl.down();
+                self.level.store(next as u8, Ordering::Relaxed);
+                g.last_change = now;
+                // each further rung down needs its own sustained dwell
+                g.low_since = Some(now);
+                self.stats.steps_down.fetch_add(1, Ordering::Relaxed);
+                return next;
+            }
+        } else {
+            // mid-band: neither escalate nor accrue recovery credit
+            g.low_since = None;
+        }
+        lvl
+    }
+
+    /// Full observation, taken once per formed stage-1 batch: all three
+    /// saturation terms, then one hysteresis step.  Returns the level
+    /// in force for this batch.
+    pub fn observe(&self, s: &LoadSample) -> BrownoutLevel {
+        let mut g = lock_unpoisoned(&self.inner);
+        let pass_ns = if s.engine_calls > g.prev_calls && s.backend_ns >= g.prev_backend_ns {
+            (s.backend_ns - g.prev_backend_ns) / (s.engine_calls - g.prev_calls)
+        } else {
+            0
+        };
+        g.prev_backend_ns = s.backend_ns;
+        g.prev_calls = s.engine_calls;
+        let sat = self.sat_of(s.queue_depth, s.queue_cap, s.oldest_wait, pass_ns);
+        self.step_locked(&mut g, sat)
+    }
+
+    /// Admission gate, run on every `submit`.  Also steps the ladder on
+    /// the queue-depth term alone, so the controller can *recover* even
+    /// while level `Shed` keeps work away from the batch path (an empty
+    /// queue reads as zero saturation and accrues recovery credit).
+    pub fn admit(&self, queue_depth: u64, queue_cap: u64) -> Result<()> {
+        let lvl = {
+            let mut g = lock_unpoisoned(&self.inner);
+            let sat = self.sat_of(queue_depth, queue_cap, Duration::ZERO, 0);
+            self.step_locked(&mut g, sat)
+        };
+        if lvl == BrownoutLevel::Shed {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "admission shed by brownout controller at level {} {OVERLOADED}: retry later",
+                lvl.as_str(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_queue_refuses_overflow_and_accounts_depth() {
+        let (tx, rx) = bounded_queue::<u32>("test", 2);
+        assert!(tx.send(1).is_ok());
+        assert!(tx.send(2).is_ok());
+        assert_eq!(tx.depth(), 2);
+        match tx.send(3) {
+            Err(QueueSendError::Full(v)) => assert_eq!(v, 3, "the value must come back"),
+            _ => panic!("third send must be refused as Full"),
+        }
+        let msg = format!("{:#}", tx.full_error());
+        assert!(is_overloaded(&msg), "rejection must be named (overloaded): {msg}");
+        assert!(msg.contains("cap 2"), "rejection names the capacity: {msg}");
+        assert!(rx.recv().is_ok());
+        assert_eq!(rx.depth(), 1, "recv must release a slot");
+        assert!(tx.send(4).is_ok(), "a freed slot re-admits");
+        assert_eq!(rx.try_recv().ok(), Some(2));
+        assert_eq!(rx.try_recv().ok(), Some(4));
+    }
+
+    #[test]
+    fn control_plane_sends_bypass_the_bound() {
+        let (tx, rx) = bounded_queue::<u32>("test", 1);
+        assert!(tx.send(1).is_ok());
+        assert!(matches!(tx.send(2), Err(QueueSendError::Full(2))));
+        assert!(tx.send_unbounded(3).is_ok(), "control jobs must never be refused for depth");
+        assert_eq!(tx.depth(), 2, "control jobs are still depth-accounted");
+        drop(rx);
+        assert!(
+            matches!(tx.send_unbounded(4), Err(QueueSendError::Disconnected(4))),
+            "a gone receiver is Disconnected, not Full"
+        );
+    }
+
+    #[test]
+    fn ladder_steps_up_under_saturation_and_recovers_with_hysteresis() {
+        let clock = Clock::virtual_clock();
+        let cfg = BrownoutConfig {
+            dwell_up: Duration::from_millis(1),
+            dwell_down: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let ctrl = BrownoutController::new(cfg, clock.clone());
+        assert_eq!(ctrl.level(), BrownoutLevel::Full);
+        let hot = LoadSample {
+            queue_depth: 10,
+            queue_cap: 10,
+            oldest_wait: Duration::ZERO,
+            backend_ns: 0,
+            engine_calls: 0,
+        };
+        // dwell_up paces the ramp: each rung needs 1ms of clock time
+        ctrl.observe(&hot);
+        assert_eq!(ctrl.level(), BrownoutLevel::Full, "no dwell elapsed, no rung");
+        clock.advance(Duration::from_millis(1));
+        ctrl.observe(&hot);
+        assert_eq!(ctrl.level(), BrownoutLevel::CapEscalation, "one dwell, one rung");
+        for _ in 0..3 {
+            clock.advance(Duration::from_millis(1));
+            ctrl.observe(&hot);
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::Shed, "ladder tops out at Shed");
+        assert!(!ctrl.escalations_allowed());
+        assert!(ctrl.coalesce_streams());
+        assert!((ctrl.escalation_scale() - 4.0).abs() < 1e-6);
+
+        // a brief lull is not enough: dwell_down gates each rung down
+        let idle = LoadSample { queue_depth: 0, ..hot };
+        ctrl.observe(&idle);
+        assert_eq!(ctrl.level(), BrownoutLevel::Shed, "no instant recovery");
+        // sustained low saturation walks the ladder back down rung by rung
+        for _ in 0..8 {
+            clock.advance(Duration::from_millis(10));
+            ctrl.observe(&idle);
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::Full, "ladder recovers to full service");
+        assert!((ctrl.escalation_scale() - 1.0).abs() < 1e-6);
+        assert_eq!(ctrl.stats.steps_up.load(Ordering::Relaxed), 3);
+        assert_eq!(ctrl.stats.steps_down.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn mid_band_saturation_resets_recovery_credit() {
+        let clock = Clock::virtual_clock();
+        let ctrl = BrownoutController::new(
+            BrownoutConfig { dwell_down: Duration::from_millis(10), ..Default::default() },
+            clock.clone(),
+        );
+        let hot = LoadSample {
+            queue_depth: 10,
+            queue_cap: 10,
+            oldest_wait: Duration::ZERO,
+            backend_ns: 0,
+            engine_calls: 0,
+        };
+        ctrl.observe(&hot);
+        clock.advance(Duration::from_millis(1));
+        ctrl.observe(&hot);
+        assert_eq!(ctrl.level(), BrownoutLevel::CapEscalation);
+        // alternate low / mid: the mid-band samples keep resetting the
+        // sustained-low run, so the ladder never steps down
+        for _ in 0..6 {
+            clock.advance(Duration::from_millis(6));
+            ctrl.observe(&LoadSample { queue_depth: 0, ..hot });
+            clock.advance(Duration::from_millis(6));
+            ctrl.observe(&LoadSample { queue_depth: 5, ..hot });
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::CapEscalation, "flapping load must not flap the ladder");
+    }
+
+    #[test]
+    fn admission_sheds_only_at_shed_and_can_recover_while_shedding() {
+        let clock = Clock::virtual_clock();
+        let cfg = BrownoutConfig {
+            dwell_up: Duration::ZERO,
+            dwell_down: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let ctrl = BrownoutController::new(cfg, clock.clone());
+        // a saturated admission queue drives the ladder up from the
+        // admission path alone
+        for _ in 0..3 {
+            clock.advance(Duration::from_micros(10));
+            let _ = ctrl.admit(8, 8);
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::Shed);
+        let err = match ctrl.admit(8, 8) {
+            Err(e) => format!("{e:#}"),
+            Ok(()) => panic!("level Shed must refuse admission"),
+        };
+        assert!(is_overloaded(&err), "shed must be named (overloaded): {err}");
+        // the ramp's own final admit was already refused, plus this one
+        assert_eq!(ctrl.stats.shed.load(Ordering::Relaxed), 2);
+        // while shedding, an emptied queue accrues recovery credit on
+        // the admission path itself — the ladder must not wedge at Shed
+        for _ in 0..20 {
+            clock.advance(Duration::from_millis(5));
+            let _ = ctrl.admit(0, 8);
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::Full, "recovery must work from the admit path");
+        assert!(ctrl.admit(0, 8).is_ok());
+    }
+
+    #[test]
+    fn pinned_ladder_never_moves() {
+        let clock = Clock::virtual_clock();
+        let ctrl = BrownoutController::new(
+            BrownoutConfig {
+                pin_level: Some(BrownoutLevel::Stage1Only),
+                dwell_up: Duration::ZERO,
+                dwell_down: Duration::ZERO,
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        assert_eq!(ctrl.level(), BrownoutLevel::Stage1Only);
+        let hot = LoadSample {
+            queue_depth: 10,
+            queue_cap: 10,
+            oldest_wait: Duration::from_secs(1),
+            backend_ns: 0,
+            engine_calls: 0,
+        };
+        for _ in 0..5 {
+            clock.advance(Duration::from_millis(10));
+            ctrl.observe(&hot);
+            let _ = ctrl.admit(0, 8);
+        }
+        assert_eq!(ctrl.level(), BrownoutLevel::Stage1Only, "a pinned ladder is frozen");
+        assert!(!ctrl.escalations_allowed());
+        assert!(ctrl.admit(10, 10).is_ok(), "pinned below Shed still admits");
+        assert_eq!(ctrl.stats.steps_up.load(Ordering::Relaxed), 0);
+    }
+}

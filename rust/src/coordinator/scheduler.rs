@@ -43,6 +43,10 @@ impl Default for EscalationPolicy {
 pub struct Scheduler {
     policy: EscalationPolicy,
     ewma: Option<f32>,
+    /// Brownout pressure: multiplies the escalation threshold (1.0 =
+    /// no pressure).  Set by the overload controller at `CapEscalation`
+    /// so only the highest-entropy requests still buy stage-2 work.
+    pressure_scale: f32,
     pub stats: SchedulerStats,
 }
 
@@ -60,11 +64,23 @@ impl SchedulerStats {
 
 impl Scheduler {
     pub fn new(policy: EscalationPolicy) -> Scheduler {
-        Scheduler { policy, ewma: None, stats: SchedulerStats::default() }
+        Scheduler { policy, ewma: None, pressure_scale: 1.0, stats: SchedulerStats::default() }
     }
 
     pub fn policy(&self) -> EscalationPolicy {
         self.policy
+    }
+
+    /// Set the brownout pressure multiplier on the escalation
+    /// threshold (1.0 = full service).  Negative or NaN input is
+    /// clamped to 1.0 — pressure only ever *raises* the bar.
+    pub fn set_pressure_scale(&mut self, scale: f32) {
+        self.pressure_scale = if scale.is_finite() && scale >= 1.0 { scale } else { 1.0 };
+    }
+
+    /// Current brownout pressure multiplier.
+    pub fn pressure_scale(&self) -> f32 {
+        self.pressure_scale
     }
 
     /// Mean channel entropy of one request's `[fh, fw, fc]` feature map.
@@ -103,16 +119,17 @@ impl Scheduler {
         if self.policy.disabled {
             return false;
         }
-        let escalate = entropy > ewma * self.policy.threshold_scale;
+        let escalate = entropy > ewma * self.policy.threshold_scale * self.pressure_scale;
         if escalate {
             self.stats.escalated += 1;
         }
         escalate
     }
 
-    /// Current adaptive threshold (diagnostics).
+    /// Current adaptive threshold (diagnostics), including brownout
+    /// pressure.
     pub fn threshold(&self) -> Option<f32> {
-        self.ewma.map(|e| e * self.policy.threshold_scale)
+        self.ewma.map(|e| e * self.policy.threshold_scale * self.pressure_scale)
     }
 }
 
@@ -166,6 +183,30 @@ mod tests {
         assert_eq!(low_escalations, 0);
         let rate = s.stats.escalation_rate();
         assert!(rate > 0.4 && rate < 0.6, "{rate}");
+    }
+
+    #[test]
+    fn pressure_scale_raises_the_escalation_bar() {
+        let mut s = Scheduler::new(EscalationPolicy {
+            threshold_scale: 1.0,
+            ewma_alpha: 0.05,
+            ..Default::default()
+        });
+        // warm the EWMA near 1.0, then probe with a 2x spike
+        for _ in 0..50 {
+            s.decide(1.0);
+        }
+        assert!(s.decide(2.0), "a 2x spike escalates at full service");
+        s.set_pressure_scale(4.0);
+        assert!(!s.decide(2.0), "under 4x pressure the same spike stays stage-1");
+        assert!(s.decide(9.0), "extreme entropy still buys precision under pressure");
+        s.set_pressure_scale(1.0);
+        assert!(s.decide(2.0), "releasing pressure restores the policy threshold");
+        s.set_pressure_scale(0.25);
+        assert!(
+            (s.pressure_scale() - 1.0).abs() < 1e-6,
+            "pressure below 1.0 is clamped: the brownout only raises the bar"
+        );
     }
 
     #[test]

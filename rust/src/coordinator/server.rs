@@ -30,7 +30,7 @@
 //! error — never a silently closed channel.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -41,6 +41,10 @@ use crate::coordinator::batcher::{drain_ready, run_batcher, BatcherConfig, Forme
 use crate::coordinator::clock::Clock;
 use crate::coordinator::engine::{Engine, EngineConfig, SessionId};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::overload::{
+    bounded_queue, BrownoutConfig, BrownoutController, LoadSample, QueueSendError, QueueTx,
+    OVERLOADED,
+};
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler, SchedulerStats};
 use crate::coordinator::stream::{StreamConfig, StreamId, StreamRegistry};
 use crate::coordinator::supervisor::{Supervisor, SupervisorConfig};
@@ -66,6 +70,15 @@ pub struct CoordinatorConfig {
     /// Recovery policy: deadlines, retry bounds, breaker thresholds
     /// (see [`crate::coordinator::supervisor::SupervisorConfig`]).
     pub supervisor: SupervisorConfig,
+    /// Most requests admitted into the stage-1 queue at once; a full
+    /// queue refuses `submit` with a named retryable `(overloaded)`
+    /// error instead of buffering without bound.  Also bounds the
+    /// stage-2 escalation queue (overflow there degrades to stage-1
+    /// answers, never drops replies).
+    pub admission_cap: usize,
+    /// Brownout ladder watermarks/dwells (see
+    /// [`crate::coordinator::overload::BrownoutController`]).
+    pub brownout: BrownoutConfig,
     /// Time source for linger/TTL/deadline policy and latency metrics.
     /// [`Clock::virtual_clock`] makes all of it test-drivable; logits
     /// and billing never read it either way.
@@ -76,12 +89,16 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             artifact_dir: "artifacts".into(),
-            batcher: BatcherConfig::default(),
+            // the serving coordinator opts into deadline shedding (the
+            // raw batcher default leaves it off)
+            batcher: BatcherConfig { shed_after: Some(Duration::from_secs(2)), ..Default::default() },
             policy: EscalationPolicy::default(),
             seed: 7,
             pool_cap: 32,
             stream_idle_ttl: Duration::from_secs(30),
             supervisor: SupervisorConfig::default(),
+            admission_cap: 256,
+            brownout: BrownoutConfig::default(),
             clock: Clock::real(),
         }
     }
@@ -163,7 +180,7 @@ struct EscalationGroup {
 /// Handle to a running coordinator.  Threads shut down when the handle
 /// drops (channels close, batchers flush, engine drains).
 pub struct Coordinator {
-    stage1_tx: Sender<Pending<RequestCtx>>,
+    stage1_tx: QueueTx<Pending<RequestCtx>>,
     pub metrics: Arc<Metrics>,
     scheduler: Arc<Mutex<Scheduler>>,
     /// Streaming frame traffic (pinned sessions + O(Δ) rebase); see
@@ -171,6 +188,9 @@ pub struct Coordinator {
     pub stream: Arc<StreamRegistry>,
     /// The recovery layer (exposed for breaker/stats inspection).
     pub supervisor: Arc<Supervisor>,
+    /// The overload layer: brownout ladder + admission gate (exposed
+    /// for level/stats inspection).
+    pub overload: Arc<BrownoutController>,
     clock: Clock,
     pub image_len: usize,
     pub num_classes: usize,
@@ -192,7 +212,7 @@ impl Coordinator {
         let warm = vec![(cfg.policy.n_low, batch), (cfg.policy.n_high, batch)];
         let engine = Engine::spawn_with(
             pjrt_factory(cfg.artifact_dir.clone(), psb, batch, warm),
-            EngineConfig { pool_cap: cfg.pool_cap },
+            EngineConfig { pool_cap: cfg.pool_cap, ..Default::default() },
         )?;
         Self::start_inner(cfg, engine, image_len, meta.num_classes, macs_per_image, true)
     }
@@ -205,7 +225,7 @@ impl Coordinator {
         let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
         let engine = Engine::spawn_with(
             sim_factory(net, RngKind::Philox),
-            EngineConfig { pool_cap: cfg.pool_cap },
+            EngineConfig { pool_cap: cfg.pool_cap, ..Default::default() },
         )?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
@@ -220,7 +240,7 @@ impl Coordinator {
         let (image_len, num_classes, macs_per_image) = net_geometry(&net)?;
         let engine = Engine::spawn_with(
             int_kernel_factory(net, RngKind::Philox),
-            EngineConfig { pool_cap: cfg.pool_cap },
+            EngineConfig { pool_cap: cfg.pool_cap, ..Default::default() },
         )?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
@@ -237,7 +257,7 @@ impl Coordinator {
         num_classes: usize,
         macs_per_image: u64,
     ) -> Result<Coordinator> {
-        let engine = Engine::spawn_with(factory, EngineConfig { pool_cap: cfg.pool_cap })?;
+        let engine = Engine::spawn_with(factory, EngineConfig { pool_cap: cfg.pool_cap, ..Default::default() })?;
         Self::start_inner(cfg, engine, image_len, num_classes, macs_per_image, false)
     }
 
@@ -254,6 +274,7 @@ impl Coordinator {
         let clock = cfg.clock.clone();
         let supervisor =
             Arc::new(Supervisor::new(engine.clone(), clock.clone(), cfg.supervisor, num_classes));
+        let overload = Arc::new(BrownoutController::new(cfg.brownout, clock.clone()));
         let stream = Arc::new(StreamRegistry::new(
             engine.clone(),
             supervisor.clone(),
@@ -268,12 +289,15 @@ impl Coordinator {
                 seed: cfg.seed ^ (1 << 32),
             },
             clock.clone(),
+            overload.clone(),
         ));
         let scheduler = Arc::new(Mutex::new(Scheduler::new(cfg.policy)));
         let seed_ctr = Arc::new(AtomicU64::new(cfg.seed));
 
-        let (stage1_tx, stage1_rx) = mpsc::channel::<Pending<RequestCtx>>();
-        let (stage2_tx, stage2_rx) = mpsc::channel::<EscalationGroup>();
+        let (stage1_tx, stage1_rx) =
+            bounded_queue::<Pending<RequestCtx>>("stage-1 admission", cfg.admission_cap);
+        let (stage2_tx, stage2_rx) =
+            bounded_queue::<EscalationGroup>("stage-2 escalation", cfg.admission_cap);
 
         let mut threads = Vec::new();
 
@@ -287,6 +311,7 @@ impl Coordinator {
             let ctx = StageCtx {
                 engine: engine.clone(),
                 supervisor: supervisor.clone(),
+                overload: overload.clone(),
                 clock: clock.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
@@ -295,6 +320,7 @@ impl Coordinator {
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
+                queue_cap: cfg.admission_cap as u64,
                 stateless,
             };
             threads.push(
@@ -312,6 +338,7 @@ impl Coordinator {
             let ctx = StageCtx {
                 engine,
                 supervisor: supervisor.clone(),
+                overload: overload.clone(),
                 clock: clock.clone(),
                 metrics: metrics.clone(),
                 policy: cfg.policy,
@@ -320,16 +347,37 @@ impl Coordinator {
                 nc: num_classes,
                 macs: macs_per_image,
                 image_len,
+                queue_cap: cfg.admission_cap as u64,
                 stateless,
             };
             let scheduler = scheduler.clone();
             let bcfg = cfg.batcher;
             let bclock = clock.clone();
+            let shed_metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new().name("psb-stage1".into()).spawn(move || {
-                    run_batcher(stage1_rx, bcfg, ctx.image_len, bclock, |batch| {
-                        handle_stage1(&ctx, &scheduler, &stage2_tx, batch);
-                    });
+                    run_batcher(
+                        stage1_rx,
+                        bcfg,
+                        ctx.image_len,
+                        bclock,
+                        |batch| {
+                            handle_stage1(&ctx, &scheduler, &stage2_tx, batch);
+                        },
+                        // Deadline shed at dequeue: the request's queue
+                        // wait already exceeded its budget, so no backend
+                        // work runs for it (billed zero) — but it still
+                        // gets its reply, by name.
+                        |p: Pending<RequestCtx>, wait| {
+                            Metrics::inc(&shed_metrics.shed);
+                            shed_metrics.queue_wait.record(wait);
+                            Metrics::inc(&shed_metrics.completed);
+                            let _ = p.tag.reply.send(Err(anyhow::anyhow!(
+                                "request shed at dequeue: queue wait {wait:?} exceeded the \
+                                 deadline budget {OVERLOADED}: retry with backoff"
+                            )));
+                        },
+                    );
                 })?,
             );
         }
@@ -340,6 +388,7 @@ impl Coordinator {
             scheduler,
             stream,
             supervisor,
+            overload,
             clock,
             image_len,
             num_classes,
@@ -358,15 +407,31 @@ impl Coordinator {
     /// always yields exactly one item: `Ok` with the classification, or
     /// a named `Err` when even supervised recovery could not produce an
     /// answer — replies are never silently dropped.
+    ///
+    /// Under overload this refuses *synchronously* with a named
+    /// retryable `(overloaded)` error — either from the brownout
+    /// controller at level `Shed`, or from a stage-1 admission queue
+    /// already at [`CoordinatorConfig::admission_cap`].  A refused
+    /// submit queued nothing and cost no backend work.
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Result<ClassifyResponse>>> {
         anyhow::ensure!(image.len() == self.image_len, "image must be {} floats", self.image_len);
         Metrics::inc(&self.metrics.requests);
+        if let Err(e) = self.overload.admit(self.stage1_tx.depth(), self.stage1_tx.cap()) {
+            Metrics::inc(&self.metrics.shed);
+            self.metrics.brownout_level.store(self.overload.level() as u64, Ordering::Relaxed);
+            return Err(e);
+        }
         let (reply, rx) = mpsc::sync_channel(1);
         let now = self.clock.now();
-        self.stage1_tx
-            .send(Pending { enqueued: now, tag: RequestCtx { reply, start: now }, image })
-            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
-        Ok(rx)
+        match self.stage1_tx.send(Pending { enqueued: now, tag: RequestCtx { reply, start: now }, image })
+        {
+            Ok(()) => Ok(rx),
+            Err(QueueSendError::Full(_)) => {
+                Metrics::inc(&self.metrics.shed);
+                Err(self.stage1_tx.full_error())
+            }
+            Err(QueueSendError::Disconnected(_)) => Err(anyhow::anyhow!("coordinator shut down")),
+        }
     }
 
     /// Serve one frame of a temporal stream and block for its answer.
@@ -396,7 +461,7 @@ impl Drop for Coordinator {
         // Close stage-1; its thread flushes remaining escalations into
         // stage-2 and exits, dropping the stage-2 sender, which unwinds
         // the stage-2 worker in turn.
-        let (tx, _) = mpsc::channel();
+        let (tx, _) = bounded_queue("coordinator shutdown", 0);
         drop(std::mem::replace(&mut self.stage1_tx, tx));
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -449,6 +514,9 @@ fn macs_per_image(meta: &ArtifactMeta) -> u64 {
 struct StageCtx {
     engine: Arc<Engine>,
     supervisor: Arc<Supervisor>,
+    /// Brownout ladder: fed one saturation sample per formed batch and
+    /// consulted before any stage-2 work is bought.
+    overload: Arc<BrownoutController>,
     clock: Clock,
     metrics: Arc<Metrics>,
     policy: EscalationPolicy,
@@ -459,6 +527,9 @@ struct StageCtx {
     nc: usize,
     macs: u64,
     image_len: usize,
+    /// Stage-1 admission queue capacity (the brownout queue-depth
+    /// saturation term's denominator).
+    queue_cap: u64,
     /// The backend is stateless (PJRT artifacts): batches are submitted
     /// padded to the compiled batch size (the simulator runs — and
     /// bills — live rows only), and stage-1 batches share one seed per
@@ -484,12 +555,29 @@ const SEED_EPOCH_BATCHES: u64 = 16;
 fn handle_stage1(
     ctx: &StageCtx,
     scheduler: &Mutex<Scheduler>,
-    stage2: &Sender<EscalationGroup>,
+    stage2: &QueueTx<EscalationGroup>,
     batch: FormedBatch<RequestCtx>,
 ) {
     let rows = batch.tags.len();
     Metrics::inc(&ctx.metrics.batches);
     Metrics::add(&ctx.metrics.batched_rows, rows as u64);
+    // Overload accounting: every member's queue wait lands in the
+    // distribution, and the batch is one saturation observation for the
+    // brownout ladder.  The resulting level sets the scheduler's
+    // escalation pressure *before* this batch's rows are decided.
+    for w in &batch.waits {
+        ctx.metrics.queue_wait.record(*w);
+    }
+    ctx.overload.observe(&LoadSample {
+        queue_depth: batch.queue_depth,
+        queue_cap: ctx.queue_cap,
+        oldest_wait: batch.oldest_wait,
+        backend_ns: ctx.metrics.backend_ns.load(Ordering::Relaxed),
+        engine_calls: ctx.metrics.engine_calls.load(Ordering::Relaxed),
+    });
+    ctx.metrics.brownout_level.store(ctx.overload.level() as u64, Ordering::Relaxed);
+    crate::coordinator::lock_unpoisoned(scheduler)
+        .set_pressure_scale(ctx.overload.escalation_scale());
     Metrics::inc(&ctx.metrics.engine_calls);
     // stateful backends draw a fresh filter-sample stream per batch;
     // stateless backends share one per epoch so concurrent escalation
@@ -561,7 +649,26 @@ fn handle_stage1(
                 ctx.metrics.record_engine_error(&anyhow::Error::new(e));
                 PrecisionPlan::uniform(ctx.policy.n_low)
             });
-        if target.max_n() > ctx.policy.n_low {
+        if target.max_n() > ctx.policy.n_low && !ctx.overload.escalations_allowed() {
+            // Brownout `Stage1Only` (or deeper): the wanted escalation
+            // is skipped outright and the stage-1 answer serves,
+            // explicitly flagged — degraded precision, not a dropped
+            // reply, and zero stage-2 backend work bought.
+            ctx.supervisor.stats().degraded.fetch_add(1, Ordering::Relaxed);
+            let latency = ctx.elapsed_since(req.start);
+            ctx.metrics.latency.record(latency);
+            Metrics::inc(&ctx.metrics.completed);
+            let _ = req.reply.send(Ok(ClassifyResponse {
+                class,
+                confidence: conf,
+                escalated: false,
+                n_used: ctx.policy.n_low,
+                n_reused: 0,
+                latency,
+                entropy,
+                served: ServedVia::Degraded,
+            }));
+        } else if target.max_n() > ctx.policy.n_low {
             Metrics::inc(&ctx.metrics.escalated);
             ctx.metrics.stage1_latency.record(ctx.elapsed_since(req.start));
             group_rows.push(row);
@@ -582,11 +689,23 @@ fn handle_stage1(
             }));
         }
     }
+    // mirror the degraded/sched counters the loop above may have bumped
+    ctx.metrics.sync_supervisor(ctx.supervisor.stats());
     match session {
         Some(id) if !group_tags.is_empty() => {
             // escalations of this batch share the stage-1 session (one
-            // filter draw per batch): narrow it to them and refine
-            let _ = stage2.send(EscalationGroup { session: id, rows: group_rows, tags: group_tags });
+            // filter draw per batch): narrow it to them and refine.  A
+            // full stage-2 queue degrades the whole group to its
+            // stage-1 answers — bounded queues never buffer silently.
+            let group = EscalationGroup { session: id, rows: group_rows, tags: group_tags };
+            if let Err(send_err) = stage2.send(group) {
+                let (group, err) = match send_err {
+                    QueueSendError::Full(g) => (g, stage2.full_error()),
+                    QueueSendError::Disconnected(g) => (g, stage2.disconnected_error()),
+                };
+                let _ = ctx.supervisor.close_session(group.session);
+                fallback_to_stage1(ctx, group, &err);
+            }
         }
         Some(id) => {
             let _ = ctx.supervisor.close_session(id);

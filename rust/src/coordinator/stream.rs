@@ -51,6 +51,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::clock::Clock;
 use crate::coordinator::engine::{Engine, EngineOutput, SessionId};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::overload::BrownoutController;
 use crate::coordinator::scheduler::{EscalationPolicy, Scheduler};
 use crate::coordinator::server::{ClassifyResponse, ServedVia};
 use crate::coordinator::supervisor::Supervisor;
@@ -108,6 +109,17 @@ struct Inner {
     retired: BTreeMap<StreamId, String>,
 }
 
+/// Frame arrival order, per stream.  Each submitted frame takes a
+/// global sequence number *before* queueing on the registry mutex, so
+/// under brownout a frame that finds a newer arrival recorded for its
+/// stream knows it is stale — latest frame wins, deterministically,
+/// regardless of mutex wake order.
+#[derive(Default)]
+struct Arrivals {
+    ctr: u64,
+    latest: BTreeMap<StreamId, u64>,
+}
+
 /// Registry of live streams over one engine.  All engine traffic is
 /// serialized by the engine thread anyway, so the registry holds one
 /// mutex across a frame's engine calls.
@@ -120,6 +132,8 @@ pub struct StreamRegistry {
     image_len: usize,
     num_classes: usize,
     seed_ctr: AtomicU64,
+    overload: Arc<BrownoutController>,
+    arrivals: Mutex<Arrivals>,
     inner: Mutex<Inner>,
 }
 
@@ -132,6 +146,7 @@ impl StreamRegistry {
         num_classes: usize,
         cfg: StreamConfig,
         clock: Clock,
+        overload: Arc<BrownoutController>,
     ) -> StreamRegistry {
         StreamRegistry {
             engine,
@@ -142,6 +157,8 @@ impl StreamRegistry {
             clock,
             image_len,
             num_classes,
+            overload,
+            arrivals: Mutex::new(Arrivals::default()),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -165,10 +182,37 @@ impl StreamRegistry {
         );
         let start = self.clock.now();
         Metrics::inc(&self.metrics.requests);
+        // Take an arrival sequence number BEFORE queueing on the
+        // registry mutex: whichever frame arrived last owns the stream's
+        // `latest` slot, independent of which thread wins the lock.
+        let my_seq = {
+            let mut a = crate::coordinator::lock_unpoisoned(&self.arrivals);
+            a.ctr += 1;
+            let seq = a.ctr;
+            a.latest.insert(stream, seq);
+            seq
+        };
         let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
         self.sweep_idle(&mut inner, Some(stream));
         if let Some(reason) = inner.retired.get(&stream) {
             return Err(anyhow!("{reason}"));
+        }
+        // Under brownout, stale queued frames are coalesced away: if a
+        // newer frame for this stream registered while we waited for the
+        // lock, this one is already obsolete — drop it with a named
+        // retryable reason and let the newest frame pay the rebase.
+        if self.overload.coalesce_streams() {
+            let stale = crate::coordinator::lock_unpoisoned(&self.arrivals)
+                .latest
+                .get(&stream)
+                .is_some_and(|&l| l > my_seq);
+            if stale {
+                Metrics::inc(&self.metrics.frames_coalesced);
+                return Err(anyhow!(
+                    "stream {stream} frame superseded by a newer queued frame under brownout \
+                     (overloaded): latest frame wins"
+                ));
+            }
         }
         let (out, recovered) = match inner.live.get_mut(&stream) {
             Some(entry) => {
@@ -211,7 +255,16 @@ impl StreamRegistry {
                 let Some(session) = out.session else {
                     return Err(anyhow!("engine returned no session handle for stream {stream}"));
                 };
-                self.engine.pin_session(session, true)?;
+                // A fully-pinned pool at capacity bounces the newcomer
+                // (retired with a named `(overloaded)` reason) rather
+                // than evicting a live stream; surface that refusal to
+                // the caller instead of serving an unpinned stream that
+                // the next LRU pass would silently kill.
+                if let Err(err) = self.engine.pin_session_checked(session, true) {
+                    let _ = self.supervisor.close_session(session);
+                    self.metrics.sync_engine(self.engine.stats());
+                    return Err(anyhow!("stream {stream} could not open: {err:#}"));
+                }
                 inner.live.insert(
                     stream,
                     StreamEntry {
@@ -293,6 +346,7 @@ impl StreamRegistry {
     pub fn close(&self, stream: StreamId) -> Result<()> {
         let mut inner = crate::coordinator::lock_unpoisoned(&self.inner);
         inner.retired.remove(&stream);
+        crate::coordinator::lock_unpoisoned(&self.arrivals).latest.remove(&stream);
         if let Some(entry) = inner.live.remove(&stream) {
             self.engine.pin_session(entry.session, false)?;
             self.supervisor.close_session(entry.session)?;

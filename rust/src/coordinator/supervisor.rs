@@ -50,6 +50,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::clock::Clock;
 use crate::coordinator::engine::{Engine, EngineJob, EngineOutput, SessionId};
 use crate::coordinator::lock_unpoisoned;
+use crate::coordinator::overload::is_overloaded;
 use crate::precision::PrecisionPlan;
 
 /// Recovery-policy knobs.
@@ -109,6 +110,10 @@ pub struct SupervisorStats {
     pub degraded: AtomicU64,
     /// Breaker transitions into [`BreakerState::Open`].
     pub breaker_trips: AtomicU64,
+    /// Faults named `(overloaded)` — capacity refusals.  Counted here
+    /// but never fed to the breaker: load is the brownout controller's
+    /// problem, not a backend-health signal.
+    pub overloaded: AtomicU64,
 }
 
 /// What it takes to rebuild a session bit-identically: the `begin`
@@ -242,9 +247,17 @@ impl Supervisor {
         }
     }
 
-    /// Record a fault: counters + breaker.
-    fn note_fault(&self) {
+    /// Record a fault: counters + breaker.  Faults named `(overloaded)`
+    /// are load, not ill health — they bump their own counter and skip
+    /// the breaker, so a saturated admission queue cannot trip the
+    /// escalation path open (the brownout ladder owns the load
+    /// response; the breaker models backend health).
+    fn note_fault(&self, msg: &str) {
         self.stats.faults_seen.fetch_add(1, Ordering::Relaxed);
+        if is_overloaded(msg) {
+            self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         self.breaker_failure();
     }
 
@@ -343,8 +356,8 @@ impl Supervisor {
                 },
                 Err(e) => e,
             };
-            self.note_fault();
             let msg = format!("{fault:#}");
+            self.note_fault(&msg);
             if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(start) {
                 return Err(anyhow!(
                     "supervised begin failed after {} attempt(s): {msg}",
@@ -419,8 +432,8 @@ impl Supervisor {
                 Ok(Err(e)) => e,
                 Err(_) => anyhow!("engine dropped the escalation job"),
             };
-            self.note_fault();
             let msg = format!("{fault:#}");
+            self.note_fault(&msg);
             if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(ticket.start)
             {
                 return Err(anyhow!(
@@ -456,8 +469,7 @@ impl Supervisor {
                 Err(e) => {
                     // the resurrection itself faulted; account it and let
                     // the loop retry the whole recovery within budget
-                    self.note_fault();
-                    let _ = e;
+                    self.note_fault(&format!("{e:#}"));
                 }
             }
         }
@@ -491,8 +503,8 @@ impl Supervisor {
                 },
                 Err(e) => e,
             };
-            self.note_fault();
             let msg = format!("{fault:#}");
+            self.note_fault(&msg);
             if attempt >= self.cfg.max_retries || self.over_budget(start) {
                 return Err(anyhow!(
                     "supervised frame failed after {} attempt(s): {msg}",
@@ -529,19 +541,19 @@ impl Supervisor {
                         // begin, bit-identically)
                         return Ok((out, recovered));
                     }
-                    (Some(new_id), Err(_geom)) => {
+                    (Some(new_id), Err(geom)) => {
                         // garbled resurrection output: the session state
                         // is fine but the reply is not — drop it and let
                         // the loop try again
                         let _ = self.engine.close_session(new_id);
-                        self.note_fault();
+                        self.note_fault(&format!("{geom:#}"));
                     }
                     (None, _) => {
                         return Err(anyhow!("resurrection begin returned no session handle"));
                     }
                 },
-                Err(_e) => {
-                    self.note_fault();
+                Err(e) => {
+                    self.note_fault(&format!("{e:#}"));
                 }
             }
         }
@@ -579,8 +591,8 @@ impl Supervisor {
                 },
                 Err(e) => e,
             };
-            self.note_fault();
             let msg = format!("{fault:#}");
+            self.note_fault(&msg);
             if is_permanent(&msg) || attempt >= self.cfg.max_retries || self.over_budget(start) {
                 return Err(anyhow!(
                     "supervised fork-escalate failed after {} attempt(s): {msg}",
@@ -602,6 +614,13 @@ mod tests {
     fn permanence_marker_is_textual() {
         assert!(is_permanent("chaos: injected fault #3 on refine (permanent)"));
         assert!(!is_permanent("chaos: injected fault #3 on begin (transient)"));
+    }
+
+    #[test]
+    fn overload_marker_is_retryable_by_construction() {
+        let msg = "engine admission queue full (depth 512, cap 512) (overloaded): retry later";
+        assert!(is_overloaded(msg), "capacity refusals carry the overload marker");
+        assert!(!is_permanent(msg), "an overloaded refusal must stay retryable");
     }
 
     #[test]

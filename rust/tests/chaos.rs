@@ -21,8 +21,8 @@ use std::time::Duration;
 
 use psb::backend::{chaos_factory, sim_factory, ChaosConfig};
 use psb::coordinator::{
-    BatcherConfig, Clock, Coordinator, CoordinatorConfig, Engine, EscalationPolicy, ServedVia,
-    Supervisor, SupervisorConfig,
+    is_overloaded, BatcherConfig, BrownoutConfig, Clock, Coordinator, CoordinatorConfig, Engine,
+    EscalationPolicy, ServedVia, Supervisor, SupervisorConfig,
 };
 use psb::precision::PrecisionPlan;
 use psb::rng::{RngKind, Xorshift128Plus};
@@ -282,7 +282,7 @@ fn every_request_is_answered_under_chaos() {
     let coord = Coordinator::start_with_factory(
         CoordinatorConfig {
             artifact_dir: "artifacts".into(),
-            batcher: BatcherConfig { batch_size: 4, linger: Duration::from_millis(1) },
+            batcher: BatcherConfig { batch_size: 4, linger: Duration::from_millis(1), shed_after: None },
             policy: EscalationPolicy { n_low: 4, n_high: 16, ..Default::default() },
             seed: 5,
             pool_cap: 8,
@@ -294,6 +294,8 @@ fn every_request_is_answered_under_chaos() {
                 breaker_threshold: 4,
                 breaker_cooldown: Duration::from_millis(5),
             },
+            admission_cap: 256,
+            brownout: BrownoutConfig::default(),
             clock: Clock::real(),
         },
         factory,
@@ -383,5 +385,135 @@ fn every_request_is_answered_under_chaos() {
     assert!(
         stat(&st.faults_seen) > 0 && stats.total_faults() > 0,
         "the schedule must actually have injected faults for this test to mean anything"
+    );
+}
+
+/// Overload *during* faults: a burst far past the admission cap rides
+/// the same seeded fault schedule, with the circuit breaker and the
+/// brownout ladder active simultaneously.  Reply conservation must hold
+/// exactly: every submit either is refused synchronously with a named
+/// `(overloaded)` error, or yields exactly one reply — an answer
+/// (possibly `Degraded`) or a named error.  Nothing hangs, nothing is
+/// double-counted.
+#[test]
+fn overload_burst_during_faults_conserves_replies() {
+    const N: usize = 96;
+    let cfg = ChaosConfig {
+        seed: chaos_seed().wrapping_add(3),
+        transient_permille: 150,
+        permanent_permille: 5,
+        slow_permille: 50,
+        poison_permille: 20,
+        geometry_permille: 15,
+        slow_op: Duration::from_micros(500),
+    };
+    let (factory, stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    let coord = Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig { batch_size: 4, linger: Duration::from_millis(1), shed_after: None },
+            policy: EscalationPolicy { n_low: 4, n_high: 16, ..Default::default() },
+            seed: 5,
+            pool_cap: 8,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: SupervisorConfig {
+                deadline: Duration::from_secs(5),
+                max_retries: 6,
+                backoff_base: Duration::from_micros(200),
+                breaker_threshold: 3,
+                breaker_cooldown: Duration::from_millis(5),
+            },
+            // a cap far below the burst size forces queue-full refusals,
+            // and an eager ladder makes the brownout react inside the
+            // burst window
+            admission_cap: 8,
+            brownout: BrownoutConfig {
+                high_milli: 500,
+                low_milli: 250,
+                dwell_up: Duration::ZERO,
+                dwell_down: Duration::from_millis(5),
+                ..Default::default()
+            },
+            clock: Clock::real(),
+        },
+        factory,
+        IMG,
+        NC,
+        1_000,
+    )
+    .unwrap();
+
+    let mut refused = 0usize;
+    let mut inflight = Vec::with_capacity(N);
+    for i in 0..N {
+        match coord.submit(image(i as f32 * 0.07)) {
+            Ok(rx) => inflight.push(rx),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    is_overloaded(&msg),
+                    "a refused submit must carry the (overloaded) marker: {msg}"
+                );
+                refused += 1;
+            }
+        }
+    }
+    let accepted = inflight.len();
+    let mut answered = 0usize;
+    let mut degraded = 0usize;
+    let mut named_errors = 0usize;
+    for (i, rx) in inflight.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("accepted request {i} was dropped or hung under overload"));
+        match reply {
+            Ok(resp) => {
+                answered += 1;
+                assert!(resp.class < NC, "request {i}: class out of range");
+                if resp.served == ServedVia::Degraded {
+                    degraded += 1;
+                    assert!(!resp.escalated, "request {i}: Degraded must not claim escalation");
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty(), "request {i}: errors must be named");
+                named_errors += 1;
+            }
+        }
+    }
+
+    let st = coord.supervisor.stats();
+    let steps_up = stat(&coord.overload.stats.steps_up);
+    transcript(
+        "overload_burst_during_faults_conserves_replies",
+        &[
+            format!(
+                "submitted={N} refused={refused} accepted={accepted} answered={answered} \
+                 degraded={degraded} named_errors={named_errors}"
+            ),
+            format!(
+                "brownout_level={:?} steps_up={steps_up} admission_shed={} faults_seen={} \
+                 breaker_trips={} injected={}",
+                coord.overload.level(),
+                stat(&coord.overload.stats.shed),
+                stat(&st.faults_seen),
+                stat(&st.breaker_trips),
+                stats.total_faults()
+            ),
+            format!("metrics: {}", coord.metrics.summary()),
+        ],
+    );
+    // exact conservation: every submit is accounted for exactly once
+    assert_eq!(refused + accepted, N);
+    assert_eq!(answered + named_errors, accepted, "every accepted request replies exactly once");
+    assert!(answered > 0, "goodput must never reach zero while the engine is healthy");
+    assert!(
+        refused > 0 || steps_up > 0,
+        "a {N}-deep burst into an 8-slot queue must visibly engage the overload layer"
+    );
+    assert!(
+        stat(&st.faults_seen) > 0 && stats.total_faults() > 0,
+        "the fault schedule must be active during the burst for this test to mean anything"
     );
 }

@@ -42,7 +42,7 @@ fn setup() -> Option<(PsbBundle, Dataset)> {
 fn config(disabled: bool) -> CoordinatorConfig {
     CoordinatorConfig {
         artifact_dir: "artifacts".into(),
-        batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1) },
+        batcher: BatcherConfig { batch_size: 8, linger: std::time::Duration::from_millis(1), shed_after: None },
         policy: EscalationPolicy { n_low: 2, n_high: 4, disabled, ..Default::default() },
         seed: 3,
         pool_cap: 32,

@@ -434,7 +434,7 @@ fn closed_session_ids_are_retired_never_reused() {
 fn evicted_sessions_name_the_eviction_in_last_error() {
     let mock = mock_backend();
     let engine =
-        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2, ..Default::default() }).unwrap();
     let plan = PrecisionPlan::uniform(8);
     let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap();
     let b = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap();
@@ -491,7 +491,7 @@ fn close_while_queued_does_not_wedge_the_job_loop() {
 fn pinned_sessions_survive_pool_pressure() {
     let mock = mock_backend();
     let engine =
-        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2, ..Default::default() }).unwrap();
     let plan = PrecisionPlan::uniform(8);
     let xa = image(1.0, 2);
     let a = engine.begin_session(plan.clone(), xa.clone(), 2, 1).unwrap().session.unwrap();
@@ -517,7 +517,7 @@ fn pinned_sessions_survive_pool_pressure() {
 fn unpinning_restores_lru_discipline() {
     let mock = mock_backend();
     let engine =
-        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2, ..Default::default() }).unwrap();
     let plan = PrecisionPlan::uniform(8);
     let a = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap().session.unwrap();
     engine.pin_session(a, true).unwrap();
@@ -534,11 +534,12 @@ fn unpinning_restores_lru_discipline() {
 #[test]
 fn fully_pinned_pool_evicts_newcomers_by_name() {
     // the registry's admission problem: when every slot is pinned, a new
-    // keep-session cannot be admitted — it is evicted immediately (and a
-    // later use names that), rather than growing the pool unboundedly
+    // keep-session cannot be admitted — it is bounced immediately with a
+    // named retryable `(overloaded)` refusal (and a later use names
+    // that), rather than growing the pool unboundedly
     let mock = mock_backend();
     let engine =
-        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap();
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2, ..Default::default() }).unwrap();
     let plan = PrecisionPlan::uniform(8);
     let g = engine.begin_session(plan.clone(), image(1.0, 2), 2, 1).unwrap().session.unwrap();
     let h = engine.begin_session(plan.clone(), image(2.0, 2), 2, 2).unwrap().session.unwrap();
@@ -546,11 +547,25 @@ fn fully_pinned_pool_evicts_newcomers_by_name() {
     engine.pin_session(h, true).unwrap();
     let i = engine.begin_session(plan, image(3.0, 2), 2, 3).unwrap().session.unwrap();
     assert_eq!(engine.stats().sessions_open(), 2, "pinned slots hold, newcomer bounced");
+    assert_eq!(
+        engine.stats().pool_bounces.load(Ordering::SeqCst),
+        1,
+        "the bounce is counted apart from LRU evictions"
+    );
     let msg = format!(
         "{:#}",
         engine.refine_session(i, None, PrecisionPlan::uniform(16)).unwrap_err()
     );
-    assert!(msg.contains("evicted"), "the bounced newcomer must be named: {msg}");
+    assert!(
+        msg.contains("bounced") && msg.contains("(overloaded)"),
+        "the bounced newcomer must carry the retryable overload marker: {msg}"
+    );
+    // pinning the bounced newcomer fails loudly with the same reason
+    let msg = format!("{:#}", engine.pin_session_checked(i, true).unwrap_err());
+    assert!(
+        msg.contains("cannot pin") && msg.contains("(overloaded)"),
+        "a checked pin on a bounced session must surface the refusal: {msg}"
+    );
     // both pinned sessions still serve
     assert!(engine.refine_session(g, None, PrecisionPlan::uniform(16)).is_ok());
     assert!(engine.refine_session(h, None, PrecisionPlan::uniform(16)).is_ok());
@@ -645,6 +660,10 @@ fn stream_registry_reclaims_idle_streams_with_a_named_reason() {
         2,
         StreamConfig { idle_ttl: std::time::Duration::ZERO, ..Default::default() },
         Clock::real(),
+        Arc::new(psb::coordinator::BrownoutController::new(
+            psb::coordinator::BrownoutConfig::default(),
+            Clock::real(),
+        )),
     );
     let frame = |tag: f32| -> Vec<f32> { (0..img).map(|i| (tag + i as f32 * 0.31).abs() % 1.0).collect() };
     // stream 1 opens and serves; its second frame is a rebase (the
@@ -693,6 +712,10 @@ fn stream_registry_reclaims_on_virtual_clock_ttl() {
         2,
         StreamConfig { idle_ttl: ttl, ..Default::default() },
         clock.clone(),
+        Arc::new(psb::coordinator::BrownoutController::new(
+            psb::coordinator::BrownoutConfig::default(),
+            clock.clone(),
+        )),
     );
     let frame = |tag: f32| -> Vec<f32> { (0..img).map(|i| (tag + i as f32 * 0.31).abs() % 1.0).collect() };
     registry.submit_frame(1, frame(0.2)).unwrap();
@@ -833,7 +856,7 @@ fn eviction_during_inflight_escalation_resurrects_bit_identically() {
     // resurrects the session and the refine replays bit-identically.
     let mock = mock_backend();
     let engine = Arc::new(
-        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2 }).unwrap(),
+        Engine::spawn_with(mock_factory(&mock), EngineConfig { pool_cap: 2, ..Default::default() }).unwrap(),
     );
     let clock = Clock::virtual_clock(); // backoff advances virtually: no real sleeps
     let supervisor =

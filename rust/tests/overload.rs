@@ -1,0 +1,494 @@
+//! Overload properties: graceful degradation under synthetic bursts,
+//! per docs/ROBUSTNESS.md ("Overload and brownout").  The contracts:
+//!
+//! 1. **Reply conservation** — every submit is accounted for exactly
+//!    once: refused synchronously with a named `(overloaded)` error, or
+//!    answered, or shed with a named error.  Nothing hangs, nothing is
+//!    silently dropped, and goodput never reaches zero while the engine
+//!    is healthy.
+//! 2. **Deadline shedding bills zero** — a request whose queue wait
+//!    exceeds its budget is removed at dequeue, before any backend
+//!    work, on the virtual clock.
+//! 3. **Brownout degradation is bit-exact** — a `Stage1Only` brownout
+//!    serves the same bits a stage-1-only (escalation-disabled) server
+//!    would, flagged `ServedVia::Degraded`.
+//! 4. **Streams coalesce under brownout** — stale queued frames lose to
+//!    the newest arrival with a named, counted reason.
+//! 5. **A fully pinned pool refuses new streams by name** — a retryable
+//!    `(overloaded)` bounce, never an unbounded pool or a dropped reply.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use psb::backend::{chaos_factory, sim_factory, ChaosConfig};
+use psb::coordinator::{
+    is_overloaded, BatcherConfig, BrownoutConfig, BrownoutLevel, Clock, Coordinator,
+    CoordinatorConfig, EscalationPolicy, ServedVia,
+};
+use psb::rng::{RngKind, Xorshift128Plus};
+use psb::sim::network::{Network, Op};
+use psb::sim::psbnet::{PsbNetwork, PsbOptions};
+
+const IMG: usize = 8 * 8 * 3;
+const NC: usize = 2;
+
+fn tiny_psbnet() -> PsbNetwork {
+    let mut net = Network::new((8, 8, 3), "overload-test");
+    let c1 = net.add(Op::Conv { k: 3, stride: 2, cin: 3, cout: 4 }, vec![0], "c1");
+    let r1 = net.add(Op::ReLU, vec![c1], "r1");
+    net.feat_node = Some(r1);
+    let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+    net.add(Op::Dense { cin: 4, cout: NC }, vec![g], "fc");
+    let mut rng = Xorshift128Plus::seed_from(3);
+    net.init(&mut rng);
+    PsbNetwork::prepare(&net, PsbOptions::default())
+}
+
+fn image(tag: f32) -> Vec<f32> {
+    (0..IMG).map(|i| ((i as f32) * 0.013 + tag).sin() * 0.5).collect()
+}
+
+fn stat(v: &std::sync::atomic::AtomicU64) -> u64 {
+    v.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// A deterministic *slow* backend: every op succeeds bit-exactly but
+/// sleeps `op` of real time first — load without faults, so every
+/// divergence from clean serving is the overload layer's doing.
+fn slow_factory(op: Duration) -> psb::backend::BackendFactory {
+    let cfg = ChaosConfig {
+        seed: 1,
+        transient_permille: 0,
+        permanent_permille: 0,
+        slow_permille: 1000,
+        poison_permille: 0,
+        geometry_permille: 0,
+        slow_op: op,
+    };
+    let (factory, _stats) = chaos_factory(sim_factory(tiny_psbnet(), RngKind::Xorshift), cfg);
+    factory
+}
+
+// ------------------------------------------------- reply conservation
+
+/// A burst far past the admission cap into a slow (but healthy, fault
+/// free) engine: submits are conserved exactly across
+/// answered/refused/errored, the brownout ladder visibly engages, the
+/// breaker stays closed (overload is not a fault), and after the burst
+/// the ladder walks back down to full service on the virtual clock.
+#[test]
+fn burst_conserves_replies_and_the_ladder_recovers() {
+    const N: usize = 128;
+    let clock = Clock::virtual_clock();
+    let coord = Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            // linger ZERO: partial batches depart immediately, so the
+            // virtual clock needs no advancing for the burst to drain
+            batcher: BatcherConfig {
+                batch_size: 4,
+                linger: Duration::ZERO,
+                shed_after: None,
+            },
+            // n_high == n_low: no stage-2 traffic, the burst exercises
+            // admission + ladder alone
+            policy: EscalationPolicy { n_low: 4, n_high: 4, ..Default::default() },
+            seed: 5,
+            pool_cap: 8,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: Default::default(),
+            admission_cap: 8,
+            brownout: BrownoutConfig {
+                high_milli: 500,
+                low_milli: 250,
+                dwell_up: Duration::ZERO,
+                dwell_down: Duration::from_millis(5),
+                ..Default::default()
+            },
+            clock: clock.clone(),
+        },
+        slow_factory(Duration::from_millis(2)),
+        IMG,
+        NC,
+        1_000,
+    )
+    .unwrap();
+
+    // -- burst: N submits far faster than the 2ms-per-pass engine drains
+    let mut refused = 0usize;
+    let mut inflight = Vec::with_capacity(N);
+    for i in 0..N {
+        match coord.submit(image(i as f32 * 0.05)) {
+            Ok(rx) => inflight.push(rx),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(is_overloaded(&msg), "refusals must carry (overloaded): {msg}");
+                refused += 1;
+            }
+        }
+    }
+    let accepted = inflight.len();
+    let mut answered = 0usize;
+    let mut named_errors = 0usize;
+    for (i, rx) in inflight.into_iter().enumerate() {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("accepted request {i} was dropped or hung"))
+        {
+            Ok(resp) => {
+                assert!(resp.class < NC);
+                answered += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(is_overloaded(&msg), "in-queue failures must be overload-named: {msg}");
+                named_errors += 1;
+            }
+        }
+    }
+    // exact conservation: nothing dropped, nothing double-counted
+    assert_eq!(refused + answered + named_errors, N);
+    assert!(answered > 0, "goodput must never reach zero while the engine is healthy");
+    assert!(refused > 0, "a {N}-burst into an 8-slot queue must refuse some admissions");
+    assert!(
+        stat(&coord.overload.stats.steps_up) >= 1,
+        "the ladder must visibly engage under the burst"
+    );
+    let st = coord.supervisor.stats();
+    assert_eq!(
+        stat(&st.breaker_trips),
+        0,
+        "overload pushback must never trip the circuit breaker"
+    );
+    assert_eq!(
+        stat(&coord.metrics.shed),
+        refused as u64,
+        "every synchronous refusal is counted as shed"
+    );
+    assert_eq!(stat(&coord.metrics.completed), answered as u64 + named_errors as u64);
+    assert_eq!(
+        coord.metrics.queue_wait.count(),
+        answered as u64 + named_errors as u64,
+        "every dequeued request lands in the queue-wait distribution"
+    );
+
+    // -- recovery: a post-burst trickle with advancing virtual time
+    // walks the ladder back to Full (dwell_down hysteresis per rung)
+    let mut trickle = Vec::new();
+    for _ in 0..400 {
+        if coord.overload.level() == BrownoutLevel::Full {
+            break;
+        }
+        clock.advance(Duration::from_millis(2));
+        std::thread::sleep(Duration::from_millis(1));
+        if let Ok(rx) = coord.submit(image(0.5)) {
+            trickle.push(rx);
+        }
+    }
+    assert_eq!(
+        coord.overload.level(),
+        BrownoutLevel::Full,
+        "the ladder must recover to full service after the burst (steps_down={})",
+        stat(&coord.overload.stats.steps_down)
+    );
+    assert!(stat(&coord.overload.stats.steps_down) >= 1);
+    for (i, rx) in trickle.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("trickle request {i} was dropped or hung"));
+        assert!(resp.is_ok(), "post-burst trickle must serve cleanly: {resp:?}");
+    }
+    let summary = coord.metrics.summary();
+    assert!(summary.contains("brownout="), "summary must surface the ladder: {summary}");
+    assert!(summary.contains("qwait_p50="), "summary must surface queue waits: {summary}");
+}
+
+// ------------------------------------------- deadline shed at dequeue
+
+/// Requests whose queue wait exceeds the deadline budget are shed at
+/// dequeue — zero backend work, named `(overloaded)` replies — and the
+/// whole scenario runs on the virtual clock with no real sleeps.
+#[test]
+fn deadline_shed_at_dequeue_bills_zero_backend_work() {
+    let clock = Clock::virtual_clock();
+    let coord = Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig {
+                batch_size: 8,
+                linger: Duration::from_millis(50),
+                shed_after: Some(Duration::from_millis(100)),
+            },
+            policy: EscalationPolicy { n_low: 4, n_high: 4, ..Default::default() },
+            seed: 5,
+            pool_cap: 8,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: Default::default(),
+            admission_cap: 64,
+            brownout: BrownoutConfig::default(),
+            clock: clock.clone(),
+        },
+        sim_factory(tiny_psbnet(), RngKind::Xorshift),
+        IMG,
+        NC,
+        1_000,
+    )
+    .unwrap();
+
+    // three requests enqueue at t=0; virtual time then jumps past the
+    // linger AND the shed budget before any batch can form
+    let stale: Vec<_> = (0..3).map(|i| coord.submit(image(i as f32)).unwrap()).collect();
+    clock.advance(Duration::from_millis(200));
+    for (i, rx) in stale.into_iter().enumerate() {
+        let err = match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Err(e)) => format!("{e:#}"),
+            Ok(Ok(resp)) => panic!("stale request {i} must be shed, got answer {resp:?}"),
+            Err(_) => panic!("stale request {i} was dropped or hung"),
+        };
+        assert!(is_overloaded(&err), "shed replies carry (overloaded): {err}");
+        assert!(err.contains("shed at dequeue"), "shed replies name the mechanism: {err}");
+    }
+    // shed before any backend work: billed zero, engine never called
+    assert_eq!(stat(&coord.metrics.engine_calls), 0, "shed requests must not reach the engine");
+    assert_eq!(stat(&coord.metrics.gated_adds), 0, "shed requests are billed zero");
+    assert_eq!(stat(&coord.metrics.samples_paid), 0);
+    assert_eq!(stat(&coord.metrics.shed), 3);
+    assert_eq!(stat(&coord.metrics.completed), 3, "a shed reply still completes the request");
+    assert_eq!(coord.metrics.queue_wait.count(), 3, "shed waits land in the distribution");
+    assert_eq!(coord.metrics.latency.count(), 0, "no served latency was recorded");
+
+    // a fresh request after the jump is inside its budget: the linger
+    // flush serves it normally
+    let rx = coord.submit(image(9.0)).unwrap();
+    clock.advance(Duration::from_millis(60));
+    let resp = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("fresh request was dropped or hung")
+        .expect("fresh request must serve after the stale ones shed");
+    assert!(resp.class < NC);
+    assert!(stat(&coord.metrics.engine_calls) >= 1, "the fresh request did reach the engine");
+}
+
+// ------------------------------------- bit-exact brownout degradation
+
+/// A server browned out to `Stage1Only` answers bit-identically —
+/// class and confidence bits — to a server with escalation disabled
+/// outright: degraded *precision* is exactly stage-1 service, only
+/// flagged.  (PSB answers are pure functions of `(plan, seed, input)`.)
+#[test]
+fn stage1_only_brownout_is_bit_identical_to_stage1_service() {
+    const N: usize = 16;
+    let mk = |pin: Option<BrownoutLevel>, disabled: bool| {
+        Coordinator::start_with_factory(
+            CoordinatorConfig {
+                artifact_dir: "artifacts".into(),
+                // batch_size 1 + serial submits: identical batch
+                // composition and seed sequence across both servers
+                batcher: BatcherConfig {
+                    batch_size: 1,
+                    linger: Duration::ZERO,
+                    shed_after: None,
+                },
+                // threshold_scale 0: every request *wants* escalation,
+                // so the brownout (or the disabled policy) must refuse
+                // every one of them the same way
+                policy: EscalationPolicy {
+                    n_low: 4,
+                    n_high: 16,
+                    threshold_scale: 0.0,
+                    disabled,
+                    ..Default::default()
+                },
+                seed: 5,
+                pool_cap: 8,
+                stream_idle_ttl: Duration::from_secs(30),
+                supervisor: Default::default(),
+                admission_cap: 64,
+                brownout: BrownoutConfig { pin_level: pin, ..Default::default() },
+                clock: Clock::real(),
+            },
+            sim_factory(tiny_psbnet(), RngKind::Xorshift),
+            IMG,
+            NC,
+            1_000,
+        )
+        .unwrap()
+    };
+    let browned = mk(Some(BrownoutLevel::Stage1Only), false);
+    let oracle = mk(None, true);
+
+    let mut degraded = 0usize;
+    for i in 0..N {
+        let x = image(i as f32 * 0.11);
+        let a = browned.classify(x.clone()).unwrap();
+        let b = oracle.classify(x).unwrap();
+        assert_eq!(a.class, b.class, "request {i}: brownout changed the class");
+        assert_eq!(
+            a.confidence.to_bits(),
+            b.confidence.to_bits(),
+            "request {i}: brownout answer must be bit-identical to stage-1 service"
+        );
+        assert_eq!(a.n_used, 4, "request {i}: brownout serves the stage-1 n");
+        assert!(!a.escalated, "request {i}: a brownout answer must not claim escalation");
+        assert_eq!(b.served, ServedVia::Stage1);
+        if a.served == ServedVia::Degraded {
+            degraded += 1;
+        } else {
+            assert_eq!(a.served, ServedVia::Stage1, "request {i}: unexpected path {:?}", a.served);
+        }
+    }
+    assert!(
+        degraded > 0,
+        "with a zero escalation threshold the brownout must have blocked escalations"
+    );
+    assert_eq!(
+        stat(&browned.metrics.escalated),
+        0,
+        "no stage-2 work may be bought at Stage1Only"
+    );
+    assert_eq!(stat(&browned.supervisor.stats().degraded), degraded as u64);
+}
+
+// ------------------------------------------- stream frame coalescing
+
+/// Under brownout, queued stream frames coalesce: when a newer frame
+/// for the same stream has already arrived, the older queued one is
+/// dropped with a named, counted `(overloaded)` reason — the newest
+/// frame pays the rebase.
+#[test]
+fn brownout_coalesces_queued_stream_frames_latest_wins() {
+    let coord = Arc::new(
+        Coordinator::start_with_factory(
+            CoordinatorConfig {
+                artifact_dir: "artifacts".into(),
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    linger: Duration::from_millis(1),
+                    shed_after: None,
+                },
+                // n_high == n_low: frames never fork-escalate, each
+                // frame is exactly one slow engine pass
+                policy: EscalationPolicy { n_low: 4, n_high: 4, ..Default::default() },
+                seed: 5,
+                pool_cap: 8,
+                stream_idle_ttl: Duration::from_secs(30),
+                supervisor: Default::default(),
+                admission_cap: 64,
+                // pinned at CapEscalation: coalescing is on, nothing
+                // else about the ladder moves during the test
+                brownout: BrownoutConfig {
+                    pin_level: Some(BrownoutLevel::CapEscalation),
+                    ..Default::default()
+                },
+                clock: Clock::real(),
+            },
+            slow_factory(Duration::from_millis(300)),
+            IMG,
+            NC,
+            1_000,
+        )
+        .unwrap(),
+    );
+
+    // frame 1 opens the stream (slow, ~300ms, but serial)
+    let r1 = coord.submit_frame(7, image(0.1)).unwrap();
+    assert_eq!(r1.served, ServedVia::Stream);
+
+    // three frames race: A starts rebasing (holds the registry for
+    // ~300ms), B and the main thread queue behind it in arrival order
+    let ca = coord.clone();
+    let a = std::thread::spawn(move || ca.submit_frame(7, image(0.2)));
+    std::thread::sleep(Duration::from_millis(100));
+    let cb = coord.clone();
+    let b = std::thread::spawn(move || cb.submit_frame(7, image(0.3)));
+    std::thread::sleep(Duration::from_millis(100));
+    let main_res = coord.submit_frame(7, image(0.4));
+
+    let results = [a.join().unwrap(), b.join().unwrap(), main_res];
+    let mut ok = 0usize;
+    let mut coalesced = 0usize;
+    for r in &results {
+        match r {
+            Ok(resp) => {
+                assert!(resp.class < NC);
+                ok += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(is_overloaded(&msg), "a coalesced frame is overload-named: {msg}");
+                assert!(msg.contains("latest frame wins"), "the reason names the policy: {msg}");
+                coalesced += 1;
+            }
+        }
+    }
+    assert_eq!(ok + coalesced, 3, "every frame call resolves exactly once");
+    assert!(ok >= 1, "the newest queued frame must be served");
+    assert!(coalesced >= 1, "an overtaken queued frame must be coalesced away");
+    assert_eq!(
+        stat(&coord.metrics.frames_coalesced),
+        coalesced as u64,
+        "every coalesced frame is counted, nothing else is"
+    );
+    // the stream survives coalescing: the next frame serves normally
+    let r = coord.submit_frame(7, image(0.5)).unwrap();
+    assert_eq!(r.served, ServedVia::Stream);
+}
+
+// ------------------------------------------- fully pinned pool bounce
+
+/// With every pool slot pinned by a live stream, opening another stream
+/// answers a named retryable `(overloaded)` refusal — the pool never
+/// grows past its bound and the refusal is counted — while the live
+/// stream keeps serving.
+#[test]
+fn fully_pinned_pool_refuses_new_streams_by_name() {
+    let coord = Coordinator::start_with_factory(
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            batcher: BatcherConfig {
+                batch_size: 4,
+                linger: Duration::from_millis(1),
+                shed_after: None,
+            },
+            policy: EscalationPolicy { n_low: 4, n_high: 4, ..Default::default() },
+            seed: 5,
+            // one slot: the first stream pins it, the second must bounce
+            pool_cap: 1,
+            stream_idle_ttl: Duration::from_secs(30),
+            supervisor: Default::default(),
+            admission_cap: 64,
+            brownout: BrownoutConfig::default(),
+            clock: Clock::real(),
+        },
+        sim_factory(tiny_psbnet(), RngKind::Xorshift),
+        IMG,
+        NC,
+        1_000,
+    )
+    .unwrap();
+
+    let r = coord.submit_frame(0, image(0.1)).unwrap();
+    assert_eq!(r.served, ServedVia::Stream);
+
+    let err = match coord.submit_frame(1, image(0.2)) {
+        Err(e) => format!("{e:#}"),
+        Ok(resp) => panic!("a fully pinned pool must refuse the new stream, got {resp:?}"),
+    };
+    assert!(is_overloaded(&err), "the bounce must be retryable by name: {err}");
+    assert!(err.contains("could not open"), "the refusal names the stream open: {err}");
+    assert_eq!(
+        stat(&coord.metrics.pool_bounces),
+        1,
+        "the capacity refusal is counted apart from LRU evictions"
+    );
+
+    // the pinned stream is untouched and keeps serving frames
+    let r = coord.submit_frame(0, image(0.3)).unwrap();
+    assert_eq!(r.served, ServedVia::Stream);
+    assert_eq!(coord.stream.live_streams(), 1);
+
+    // …and once the first stream closes, the slot frees up for a retry
+    coord.close_stream(0).unwrap();
+    let r = coord.submit_frame(1, image(0.4)).unwrap();
+    assert_eq!(r.served, ServedVia::Stream);
+}

@@ -206,6 +206,37 @@ fn unsafe_is_banned_everywhere_even_in_tests() {
     assert_eq!(rules_of(&f), [(RuleId::Unsafe, 3)], "{f:?}");
 }
 
+#[test]
+fn bounded_channels_fires_on_raw_coordinator_channels() {
+    let src = "use std::sync::mpsc;\nfn q() {\n    let (tx, rx) = mpsc::channel::<u32>();\n    let _ = (tx, rx);\n}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::BoundedChannels, 3)], "{f:?}");
+    assert!(f[0].message.contains("bounded_queue"), "{}", f[0].message);
+    // fully-qualified paths still end in `mpsc::channel(` and fire too
+    let src = "fn q() { let (tx, rx) = std::sync::mpsc::channel::<u32>(); let _ = (tx, rx); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), [(RuleId::BoundedChannels, 1)], "{f:?}");
+    // outside the coordinator the rule does not apply
+    let f = lint_source_complete("rust/src/sim/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn bounded_channels_spares_rendezvous_slots_tests_and_waivers() {
+    // sync_channel(1) reply slots are the sanctioned rendezvous idiom
+    let src = "use std::sync::mpsc;\nfn q() { let (tx, rx) = mpsc::sync_channel::<u32>(1); let _ = (tx, rx); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    // test code is exempt
+    let src = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = std::sync::mpsc::channel::<u32>(); }\n}\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+    // the admission wrapper itself carries the one sanctioned waiver
+    let src = "// psb-lint: allow(bounded-channels): the bounded wrapper's own raw channel\nfn w() { let _ = std::sync::mpsc::channel::<u32>(); }\n";
+    let f = lint_source_complete("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
 // ---------------------------------------------------------------- waivers
 
 #[test]
