@@ -55,5 +55,40 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\naccuracy converges to the float line as n grows — paper Fig. 3.");
+
+    // --- 4. (optional) the integer kernel's direct-conv strategy --------------
+    // PSB_DIRECT_CONV=1 runs one batch through the IntKernel twice — the
+    // im2col-free direct convolution walk forced on, then off — and checks
+    // logits and executed adds are identical: the walk is an execution-
+    // order strategy, never a numerics change.
+    if std::env::var("PSB_DIRECT_CONV").is_ok() {
+        use psb::backend::intkernel::{DirectConv, IntKernelConfig};
+        use psb::backend::{Backend, InferenceSession as _, IntKernel};
+        use psb::rng::Rng as _;
+        use psb::sim::tensor::Tensor;
+        let psbnet = PsbNetwork::prepare(&net, PsbOptions::default());
+        let mut rng = Xorshift128Plus::seed_from(3);
+        let x = Tensor::from_vec(
+            (0..2 * 32 * 32 * 3).map(|_| rng.uniform()).collect(),
+            &[2, 32, 32, 3],
+        );
+        let run = |dc: DirectConv| -> anyhow::Result<(Vec<f32>, u64, &'static str)> {
+            let kernel = IntKernel::new(psbnet.clone())?
+                .with_config(IntKernelConfig { direct_conv: dc, ..Default::default() });
+            let mut sess = kernel.open(&PrecisionPlan::uniform(8))?;
+            let step = sess.begin(&x, 11)?;
+            Ok((sess.logits().data.clone(), step.executed_adds, step.kernel_path.as_str()))
+        };
+        let (direct, direct_adds, direct_path) = run(DirectConv::Always)?;
+        let (cached, cached_adds, cached_path) = run(DirectConv::Never)?;
+        anyhow::ensure!(
+            direct == cached && direct_adds == cached_adds,
+            "direct-conv walk must be bit-identical to the cached lowering"
+        );
+        println!(
+            "\ndirect-conv check: {direct_path} pass ≡ {cached_path} pass \
+             ({direct_adds} executed adds) — bit-identical"
+        );
+    }
     Ok(())
 }

@@ -5,8 +5,10 @@
 //! Measures, on a conv pyramid (resnet_mini) and a depthwise-separable
 //! graph:
 //! * ns/image of a full integer pass under the scalar datapath, the
-//!   packed datapath pinned to one thread (pure layout/packing win) and
-//!   the packed datapath at full parallelism;
+//!   packed datapath pinned to one thread (pure layout/packing win),
+//!   the packed datapath at full parallelism, the multi-word *blocked*
+//!   datapath, and the blocked datapath with the im2col-free direct
+//!   convolution walk forced on (`DirectConv::Always`);
 //! * executed accumulator adds of refine steps at growing Δn against
 //!   the executed adds of a fresh full-precision pass (refine execution
 //!   must track Δ, not total n);
@@ -23,7 +25,8 @@
 //! * `--quick` or `PSB_BENCH_QUICK=1` — small batch + short budget (CI
 //!   smoke mode);
 //! * `--check` — exit non-zero unless the packed datapath is at least
-//!   as fast as the scalar baseline AND the masked-0.35 refine is
+//!   as fast as the scalar baseline, the blocked datapath is at least
+//!   as fast as packed on the conv net, AND the masked-0.35 refine is
 //!   faster than the full-plan refine (the CI gates).
 
 #[path = "harness.rs"]
@@ -31,7 +34,8 @@ mod harness;
 
 use std::time::Duration;
 
-use psb::backend::intkernel::Contraction;
+use psb::backend::intkernel::contract::{HW_POPCNT, WORD_BLOCK};
+use psb::backend::intkernel::{Contraction, DirectConv, IntKernelConfig};
 use psb::backend::{Backend, InferenceSession as _, IntKernel};
 use psb::precision::PrecisionPlan;
 use psb::rng::{Rng, Xorshift128Plus};
@@ -62,28 +66,57 @@ struct Timing {
     scalar_ns: f64,
     packed_1t_ns: f64,
     packed_ns: f64,
+    blocked_ns: f64,
+    direct_ns: f64,
+    /// Executed adds of one seed-1 begin — equal across the packed,
+    /// blocked and direct datapaths (asserted before timing), so one
+    /// number describes the work all three timings performed.
+    executed_adds: u64,
 }
 
 /// Time one full `begin` pass per datapath (ns/image) after asserting
-/// the three produce bit-identical logits.
+/// all five produce bit-identical logits — and that the packed-layout
+/// variants executed *exactly* the same number of accumulator adds
+/// (blocking and the direct walk reorder work, they never change it).
 fn time_backends(tag: &str, psb: &PsbNetwork, x: &Tensor, budget: Duration) -> Timing {
     let b = x.shape[0];
+    // pin the packed/blocked rows to the cached-lowering path: the bench
+    // geometry is large enough to trip `DirectConv::Auto`, which would
+    // silently turn the packed-vs-blocked comparison into direct-vs-direct
+    let no_direct = IntKernelConfig { direct_conv: DirectConv::Never, ..Default::default() };
     let scalar = IntKernel::new(psb.clone())
         .expect("bench net is integer-expressible")
         .with_contraction(Contraction::Scalar);
-    let packed_1t = IntKernel::new(psb.clone()).unwrap().with_threads(1);
-    let packed = IntKernel::new(psb.clone()).unwrap();
+    let packed_1t = IntKernel::new(psb.clone()).unwrap().with_config(no_direct).with_threads(1);
+    let packed = IntKernel::new(psb.clone()).unwrap().with_config(no_direct);
+    let blocked = IntKernel::new(psb.clone())
+        .unwrap()
+        .with_contraction(Contraction::Blocked)
+        .with_config(no_direct);
+    let direct = IntKernel::new(psb.clone())
+        .unwrap()
+        .with_contraction(Contraction::Blocked)
+        .with_config(IntKernelConfig { direct_conv: DirectConv::Always, ..Default::default() });
     let plan = PrecisionPlan::uniform(16);
 
     // parity gate before timing anything
-    let logits_of = |backend: &dyn Backend| {
+    let run_of = |backend: &dyn Backend| {
         let mut sess = backend.open(&plan).unwrap();
-        sess.begin(x, 1).unwrap();
-        sess.logits().data.clone()
+        let step = sess.begin(x, 1).unwrap();
+        (sess.logits().data.clone(), step.executed_adds)
     };
-    let want = logits_of(&scalar);
-    assert_eq!(logits_of(&packed_1t), want, "[{tag}] packed(1t) diverged from scalar");
-    assert_eq!(logits_of(&packed), want, "[{tag}] packed diverged from scalar");
+    let (want, _) = run_of(&scalar);
+    let (packed_logits, adds) = run_of(&packed);
+    assert_eq!(packed_logits, want, "[{tag}] packed diverged from scalar");
+    for (name, backend) in [
+        ("packed(1t)", &packed_1t),
+        ("blocked", &blocked),
+        ("direct-conv", &direct),
+    ] {
+        let (logits, a) = run_of(backend);
+        assert_eq!(logits, want, "[{tag}] {name} diverged from scalar");
+        assert_eq!(a, adds, "[{tag}] {name} executed a different add count than packed");
+    }
 
     let time_one = |name: &str, backend: &dyn Backend| {
         let mut seed = 100u64;
@@ -97,7 +130,9 @@ fn time_backends(tag: &str, psb: &PsbNetwork, x: &Tensor, budget: Duration) -> T
     let scalar_ns = time_one("scalar", &scalar);
     let packed_1t_ns = time_one("packed 1-thread", &packed_1t);
     let packed_ns = time_one("packed", &packed);
-    Timing { scalar_ns, packed_1t_ns, packed_ns }
+    let blocked_ns = time_one("blocked", &blocked);
+    let direct_ns = time_one("direct-conv", &direct);
+    Timing { scalar_ns, packed_1t_ns, packed_ns, blocked_ns, direct_ns, executed_adds: adds }
 }
 
 fn main() {
@@ -207,15 +242,27 @@ fn main() {
 
     let speedup = conv.scalar_ns / conv.packed_ns.max(1.0);
     let speedup_1t = conv.scalar_ns / conv.packed_1t_ns.max(1.0);
+    let blocked_speedup = conv.packed_ns / conv.blocked_ns.max(1.0);
+    let direct_speedup = conv.packed_ns / conv.direct_ns.max(1.0);
     let dw_speedup = dw.scalar_ns / dw.packed_ns.max(1.0);
+    let dw_blocked_speedup = dw.packed_ns / dw.blocked_ns.max(1.0);
+    let dw_direct_speedup = dw.packed_ns / dw.direct_ns.max(1.0);
     println!(
         "[conv] scalar {:.0} ns/img | packed(1t) {:.0} ns/img ({speedup_1t:.2}x) | \
          packed({threads}t) {:.0} ns/img ({speedup:.2}x)",
         conv.scalar_ns, conv.packed_1t_ns, conv.packed_ns
     );
     println!(
-        "[depthwise] scalar {:.0} ns/img | packed {:.0} ns/img ({dw_speedup:.2}x)",
-        dw.scalar_ns, dw.packed_ns
+        "[conv] blocked {:.0} ns/img ({blocked_speedup:.2}x vs packed) | \
+         direct-conv {:.0} ns/img ({direct_speedup:.2}x vs packed) | \
+         hw_popcnt={HW_POPCNT} word_block={WORD_BLOCK}",
+        conv.blocked_ns, conv.direct_ns
+    );
+    println!(
+        "[depthwise] scalar {:.0} ns/img | packed {:.0} ns/img ({dw_speedup:.2}x) | \
+         blocked {:.0} ns/img ({dw_blocked_speedup:.2}x vs packed) | \
+         direct-conv {:.0} ns/img ({dw_direct_speedup:.2}x vs packed)",
+        dw.scalar_ns, dw.packed_ns, dw.blocked_ns, dw.direct_ns
     );
 
     let masked_speedup = full_refine_ns / masked_035_ns.max(1.0);
@@ -225,12 +272,22 @@ fn main() {
     );
     let json = format!(
         "{{\n  \"bench\": \"intkernel_contract\",\n  \"quick\": {quick},\n  \
-         \"threads\": {threads},\n  \"packing_width\": 64,\n  \"batch\": {batch},\n  \
+         \"threads\": {threads},\n  \"packing_width\": 64,\n  \
+         \"word_block\": {WORD_BLOCK},\n  \"hw_popcnt\": {HW_POPCNT},\n  \
+         \"batch\": {batch},\n  \
          \"image\": {image},\n  \"conv\": {{\"scalar_ns_per_image\": {:.1}, \
          \"packed_1t_ns_per_image\": {:.1}, \"packed_ns_per_image\": {:.1}, \
-         \"speedup_vs_scalar\": {speedup:.3}, \"speedup_1t_vs_scalar\": {speedup_1t:.3}}},\n  \
+         \"blocked_ns_per_image\": {:.1}, \"direct_ns_per_image\": {:.1}, \
+         \"speedup_vs_scalar\": {speedup:.3}, \"speedup_1t_vs_scalar\": {speedup_1t:.3}, \
+         \"speedup_blocked_vs_packed\": {blocked_speedup:.3}, \
+         \"speedup_direct_vs_packed\": {direct_speedup:.3}, \
+         \"executed_adds\": {}}},\n  \
          \"depthwise\": {{\"scalar_ns_per_image\": {:.1}, \"packed_ns_per_image\": {:.1}, \
-         \"speedup_vs_scalar\": {dw_speedup:.3}}},\n  \
+         \"blocked_ns_per_image\": {:.1}, \"direct_ns_per_image\": {:.1}, \
+         \"speedup_vs_scalar\": {dw_speedup:.3}, \
+         \"speedup_blocked_vs_packed\": {dw_blocked_speedup:.3}, \
+         \"speedup_direct_vs_packed\": {dw_direct_speedup:.3}, \
+         \"executed_adds\": {}}},\n  \
          \"fresh_n64_executed_adds\": {},\n  \"refine\": [\n{}\n  ],\n  \
          \"masked\": {{\"full_refine_ns_per_image\": {full_refine_ns:.1}, \
          \"full_refine_executed_adds\": {full_refine_adds}, \
@@ -239,8 +296,14 @@ fn main() {
         conv.scalar_ns,
         conv.packed_1t_ns,
         conv.packed_ns,
+        conv.blocked_ns,
+        conv.direct_ns,
+        conv.executed_adds,
         dw.scalar_ns,
         dw.packed_ns,
+        dw.blocked_ns,
+        dw.direct_ns,
+        dw.executed_adds,
         fresh_step.executed_adds,
         refine_rows.join(",\n"),
         masked_rows.join(",\n")
@@ -255,6 +318,13 @@ fn main() {
              conv {speedup:.2}x, depthwise {dw_speedup:.2}x"
         );
         assert!(
+            blocked_speedup >= 1.0,
+            "blocked datapath regressed below packed on the conv net: \
+             {blocked_speedup:.2}x ({:.0} vs {:.0} ns/img)",
+            conv.blocked_ns,
+            conv.packed_ns
+        );
+        assert!(
             masked_035_ns < full_refine_ns,
             "masked-0.35 refine must beat the full-plan refine: \
              {masked_035_ns:.0} vs {full_refine_ns:.0} ns/img"
@@ -266,6 +336,7 @@ fn main() {
         );
         println!(
             "check OK: packed ≥ scalar (conv {speedup:.2}x, depthwise {dw_speedup:.2}x); \
+             blocked ≥ packed (conv {blocked_speedup:.2}x); \
              masked-0.35 {masked_speedup:.2}x vs full-plan refine"
         );
     }

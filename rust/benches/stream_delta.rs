@@ -14,6 +14,12 @@
 //! * a bit-identity + billing gate before timing (rebase logits and
 //!   charge must equal the fresh begin's).
 //!
+//! A final section streams the 5%-changed band through a session in the
+//! multi-word *blocked* contraction mode: the masked rebase drivers
+//! dispatch on the session's contraction, so the blocked rebase must be
+//! bit-identical to the packed one (asserted) — its ns/frame is
+//! reported alongside.
+//!
 //! Flags / env:
 //! * `--quick` or `PSB_BENCH_QUICK=1` — small batch + short budget (CI
 //!   smoke mode);
@@ -25,6 +31,7 @@ mod harness;
 
 use std::time::Duration;
 
+use psb::backend::intkernel::Contraction;
 use psb::backend::{Backend, InferenceSession as _, IntKernel};
 use psb::precision::PrecisionPlan;
 use psb::rng::{Rng, Xorshift128Plus};
@@ -50,7 +57,7 @@ fn main() {
         net.forward::<Xorshift128Plus>(&x0, true, None);
     }
     let psb_net = PsbNetwork::prepare(&net, PsbOptions::default());
-    let kernel = IntKernel::new(psb_net).expect("bench net is integer-expressible");
+    let kernel = IntKernel::new(psb_net.clone()).expect("bench net is integer-expressible");
     let plan = PrecisionPlan::uniform(16);
 
     // a frame whose top `rows_changed` pixel rows drifted by `delta`
@@ -136,6 +143,49 @@ fn main() {
         ));
     }
 
+    // blocked-mode streaming: same 5%-changed band through a session in
+    // Contraction::Blocked — bit-identity asserted, ns/frame reported
+    let (blocked_ns, blocked_adds) = {
+        let rows_changed = ((image as f64 * 0.05).round() as usize).clamp(1, image);
+        let xa = drift(rows_changed, 0.31);
+        let xb = drift(rows_changed, 0.62);
+        let blocked_kernel = IntKernel::new(psb_net)
+            .expect("bench net is integer-expressible")
+            .with_contraction(Contraction::Blocked);
+        let mut bsess = blocked_kernel.open(&plan).unwrap();
+        bsess.begin(&x0, 7).unwrap();
+        {
+            let mut psess = kernel.open(&plan).unwrap();
+            psess.begin(&x0, 7).unwrap();
+            let bstep = bsess.rebase_input(&xa).unwrap();
+            let pstep = psess.rebase_input(&xa).unwrap();
+            assert_eq!(
+                bsess.logits().data,
+                psess.logits().data,
+                "[stream] blocked rebase diverged from the packed rebase"
+            );
+            assert_eq!(
+                bstep.executed_adds, pstep.executed_adds,
+                "[stream] blocked rebase executed a different add count than packed"
+            );
+        }
+        let mut flip = false;
+        let mut exec = 0u64;
+        let mean =
+            harness::bench(&format!("[stream] blocked rebase frac 0.05 b{batch}"), budget, || {
+                flip = !flip;
+                let frame = if flip { &xb } else { &xa };
+                let step = bsess.rebase_input(frame).unwrap();
+                exec = step.executed_adds;
+                std::hint::black_box(step.executed_adds);
+            });
+        (mean.as_nanos() as f64 / batch as f64, exec)
+    };
+    println!(
+        "[stream] blocked rebase frac 0.05: {blocked_ns:.0} ns/frame, \
+         executed {blocked_adds} adds (packed rebase: {rebase_005_ns:.0} ns/frame)"
+    );
+
     let speedup = fresh_ns / rebase_005_ns.max(1.0);
     let adds_ratio = rebase_005_adds as f64 / fresh_exec.max(1) as f64;
     println!(
@@ -148,7 +198,9 @@ fn main() {
          \"image\": {image},\n  \"plan_n\": 16,\n  \
          \"fresh\": {{\"ns_per_frame\": {fresh_ns:.1}, \"executed_adds\": {fresh_exec}}},\n  \
          \"speedup_005_vs_fresh\": {speedup:.3},\n  \
-         \"adds_ratio_005_vs_fresh\": {adds_ratio:.4},\n  \"rebase\": [\n{}\n  ]\n}}\n",
+         \"adds_ratio_005_vs_fresh\": {adds_ratio:.4},\n  \
+         \"rebase_blocked_005\": {{\"ns_per_frame\": {blocked_ns:.1}, \
+         \"executed_adds\": {blocked_adds}}},\n  \"rebase\": [\n{}\n  ]\n}}\n",
         rows_json.join(",\n")
     );
     std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");

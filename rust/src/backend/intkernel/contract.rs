@@ -1,7 +1,8 @@
 //! The conv/dense capacitor contraction datapaths: the bit-packed,
-//! row-parallel kernel and the original scalar reference.
+//! row-parallel kernel, its multi-word **blocked** variant with
+//! cache-blocked row×channel tiling, and the original scalar reference.
 //!
-//! Both compute the same raw charge
+//! All of them compute the same raw charge
 //!
 //! ```text
 //! A[r, j] = Σ_i s_ij · ( k_ij·H_i + (n − k_ij)·L_i )    H = x≪(e+1), L = x≪e
@@ -22,7 +23,10 @@
 //! legacy `rows × live-weights` convention.  Delta steps report
 //! identically on both paths.
 
-use super::pack::{count_coeffs, delta_coeffs, delta_coeffs_signed, PackedPlanes};
+use super::pack::{
+    count_coeffs, delta_coeffs, delta_coeffs_signed, gather_window_row, pack_row_words,
+    PackedPlanes, SameWindows,
+};
 use super::CapCache;
 use crate::num::fixed::{MAX_RAW, MIN_RAW};
 use crate::num::PsbPlanes;
@@ -41,6 +45,9 @@ pub(crate) struct MaskedCtx<'a> {
     pub bias_raw: &'a [i16],
     pub threads: usize,
     pub row_hi: &'a [bool],
+    /// Cache tiles of the blocked datapath (resolved per node; unused
+    /// by the packed/scalar paths except for tile-aligned chunking).
+    pub tiles: Tiles,
 }
 
 impl MaskedCtx<'_> {
@@ -161,8 +168,170 @@ pub enum Contraction {
     /// Bit-packed word-blocked accumulation, parallel over row chunks.
     #[default]
     Packed,
+    /// The packed walk with [`WORD_BLOCK`]-word unrolled mask
+    /// consumption and cache-blocked row×channel tiling (see
+    /// [`tiles_for`]).  Bit-identical to `Packed` — integer sums
+    /// re-associate exactly — with the same executed-adds tally.
+    Blocked,
     /// The original scalar i32 loop (reference / bench baseline).
     Scalar,
+}
+
+/// Whether the build target guarantees a hardware popcount behind
+/// `u64::count_ones`.  The repo forbids `unsafe`, so `std::arch`
+/// intrinsics are off the table; instead this compile-time `cfg!` probe
+/// reports what the intrinsic will lower to — a native `popcnt`-class
+/// instruction on targets that carry one, the portable SWAR sequence
+/// otherwise.  Either lowering is bit-exact; only throughput differs.
+/// Surfaced in `BENCH_intkernel.json` so perf points are comparable
+/// across build targets.
+pub const HW_POPCNT: bool = cfg!(any(
+    target_feature = "popcnt",
+    target_arch = "aarch64",
+    target_arch = "powerpc64"
+));
+
+/// Mask words consumed per unrolled iteration of the blocked walk.
+pub const WORD_BLOCK: usize = 4;
+
+/// When the im2col-free direct conv walk runs on the `begin` path.
+/// The direct walk is a begin-time *strategy*, not a datapath: the
+/// caches it fills are bit-identical to the two-pass
+/// lower-then-contract path, so O(Δ) refine and rebase run against
+/// them unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DirectConv {
+    /// Geometry-selected: direct when the lowering is large enough
+    /// that fusing it into the contraction pays
+    /// (`m·kdim ≥ DIRECT_MIN_CELLS`, non-scalar modes only).
+    #[default]
+    Auto,
+    /// Every uniform fresh conv rebuild takes the direct walk.
+    Always,
+    /// Always materialize through the two-pass cached-lowering path.
+    Never,
+}
+
+/// Tuning knobs of the integer kernel: tile-size overrides for the
+/// blocked contraction (None ⇒ the compile-time [`tiles_for`] table)
+/// and the direct-conv begin strategy.  The defaults are what
+/// production serving runs; the contraction bench sweeps overrides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IntKernelConfig {
+    /// Rows per cache tile (None ⇒ table value for the node's mask
+    /// width).
+    pub row_tile: Option<usize>,
+    /// Output channels per cache tile (None ⇒ table value).
+    pub col_tile: Option<usize>,
+    /// Direct im2col-free conv walk selection on `begin`.
+    pub direct_conv: DirectConv,
+}
+
+/// Resolved cache-tile extents of one node's blocked contraction.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Tiles {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Compile-time tile table, keyed by the node's mask words per channel
+/// (`kdim.div_ceil(64)`): `(max_words, row_tile, col_tile)`.  Wider
+/// masks mean bigger per-channel coefficient strips, so the channel
+/// tile shrinks to keep the tile's `a_hi`/`a_lo`/`exp`/`sign` strips
+/// (~11 bytes per weight × col_tile × kdim) L1-resident while a row
+/// tile re-uses them.
+const TILE_TABLE: [(usize, usize, usize); 4] = [
+    (1, 64, 16),
+    (4, 32, 16),
+    (16, 16, 8),
+    (usize::MAX, 8, 8),
+];
+
+/// Pick the cache tiles for a node: the compile-time table row for its
+/// mask width, with per-field [`IntKernelConfig`] overrides.
+pub(crate) fn tiles_for(words: usize, cfg: &IntKernelConfig) -> Tiles {
+    let (mut rows, mut cols) = (8, 8);
+    for &(max_w, r, c) in TILE_TABLE.iter() {
+        if words <= max_w {
+            rows = r;
+            cols = c;
+            break;
+        }
+    }
+    Tiles {
+        rows: cfg.row_tile.unwrap_or(rows).max(1),
+        cols: cfg.col_tile.unwrap_or(cols).max(1),
+    }
+}
+
+/// Walk the set bits of `a & b`, [`WORD_BLOCK`] words per iteration:
+/// the block's ANDs and popcounts issue back-to-back (independent ops
+/// the CPU overlaps) before any bit is consumed, and the batched
+/// popcount sum is the executed-adds tally.  Bits are visited in the
+/// same ascending order as the word-at-a-time loop, so callers stay
+/// bit-identical; the tail loop handles word counts that do not fill a
+/// whole block.
+#[inline]
+pub(crate) fn and_walk_blocked(a: &[u64], b: &[u64], mut visit: impl FnMut(usize)) -> u64 {
+    let words = a.len().min(b.len());
+    let mut adds = 0u64;
+    let mut w = 0usize;
+    while w + WORD_BLOCK <= words {
+        let m0 = a[w] & b[w];
+        let m1 = a[w + 1] & b[w + 1];
+        let m2 = a[w + 2] & b[w + 2];
+        let m3 = a[w + 3] & b[w + 3];
+        adds += (m0.count_ones() + m1.count_ones() + m2.count_ones() + m3.count_ones()) as u64;
+        for (k, mut bits) in [m0, m1, m2, m3].into_iter().enumerate() {
+            let base = (w + k) * 64;
+            while bits != 0 {
+                visit(base + bits.trailing_zeros() as usize);
+                bits &= bits - 1;
+            }
+        }
+        w += WORD_BLOCK;
+    }
+    while w < words {
+        let mut bits = a[w] & b[w];
+        adds += bits.count_ones() as u64;
+        let base = w * 64;
+        while bits != 0 {
+            visit(base + bits.trailing_zeros() as usize);
+            bits &= bits - 1;
+        }
+        w += 1;
+    }
+    adds
+}
+
+/// The live-mask variant of [`and_walk_blocked`] for walks with no
+/// activation-side mask (depthwise): same [`WORD_BLOCK`] unrolling and
+/// visit order, but callers tally their own adds (a depthwise add only
+/// executes when the tap's activation is non-zero).
+#[inline]
+pub(crate) fn walk_bits_blocked(ws: &[u64], mut visit: impl FnMut(usize)) {
+    let words = ws.len();
+    let mut w = 0usize;
+    while w + WORD_BLOCK <= words {
+        let (m0, m1, m2, m3) = (ws[w], ws[w + 1], ws[w + 2], ws[w + 3]);
+        for (k, mut bits) in [m0, m1, m2, m3].into_iter().enumerate() {
+            let base = (w + k) * 64;
+            while bits != 0 {
+                visit(base + bits.trailing_zeros() as usize);
+                bits &= bits - 1;
+            }
+        }
+        w += WORD_BLOCK;
+    }
+    while w < words {
+        let mut bits = ws[w];
+        let base = w * 64;
+        while bits != 0 {
+            visit(base + bits.trailing_zeros() as usize);
+            bits &= bits - 1;
+        }
+        w += 1;
+    }
 }
 
 /// The barrel shifter: `v·2^shift` with floor on negative shifts —
@@ -196,6 +365,9 @@ pub(crate) struct CapCtx<'a> {
     pub log2n: u32,
     pub bias_raw: &'a [i16],
     pub threads: usize,
+    /// Cache tiles of the blocked datapath (resolved per node; unused
+    /// by the packed/scalar paths except for tile-aligned chunking).
+    pub tiles: Tiles,
 }
 
 /// Below this many row×weight visits the thread-spawn overhead exceeds
@@ -209,12 +381,18 @@ pub(crate) fn plan_threads(threads: usize, m: usize, work: u64) -> usize {
     threads.clamp(1, m.max(1))
 }
 
-/// Per-thread row blocks for `m` rows of `stride` elements under
-/// `threads` workers — never zero (an empty buffer yields no chunks,
-/// making the packed paths a no-op on an empty batch, like the scalar
-/// loops).
-pub(crate) fn rows_per_chunk(m: usize, threads: usize) -> usize {
-    m.div_ceil(threads).max(1)
+/// Per-thread row blocks for `m` rows under `threads` workers, rounded
+/// *up* to a multiple of `row_tile` so a parallel partition never
+/// splits a cache tile across chunks — every chunk boundary is a tile
+/// boundary, and the last chunk absorbs the remainder.  Never zero (an
+/// empty buffer yields no chunks, making the packed paths a no-op on
+/// an empty batch, like the scalar loops).  Determinism is unchanged:
+/// the chunk size is a pure function of `(m, threads, row_tile)` and
+/// every output element still belongs to exactly one chunk.
+pub(crate) fn rows_per_chunk(m: usize, threads: usize, row_tile: usize) -> usize {
+    let per = m.div_ceil(threads).max(1);
+    let t = row_tile.max(1);
+    per.div_ceil(t) * t
 }
 
 /// Shared row-parallel scaffold: run `f(chunk_index, chunk)` over
@@ -261,6 +439,7 @@ pub(crate) fn full_contract(
 ) -> u64 {
     match mode {
         Contraction::Packed => full_packed(ctx, cache, out),
+        Contraction::Blocked => full_blocked(ctx, cache, out),
         Contraction::Scalar => full_scalar(ctx, cache, out),
     }
 }
@@ -280,6 +459,7 @@ pub(crate) fn delta_contract(
 ) -> u64 {
     match mode {
         Contraction::Packed => delta_packed(ctx, prev, dn, cache, out),
+        Contraction::Blocked => delta_blocked(ctx, prev, dn, cache, out),
         Contraction::Scalar => delta_scalar(ctx, prev, dn, cache, out),
     }
 }
@@ -339,7 +519,7 @@ fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let nz = &cache.nz;
     let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
     let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
-    let rows_per = rows_per_chunk(m, threads);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
     let chunks = cache
         .acc
         .chunks_mut(rows_per * n_out)
@@ -380,7 +560,7 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
     let base = &cache.base;
     let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
     let threads = plan_threads(ctx.threads, m, m as u64 * n_out as u64);
-    let rows_per = rows_per_chunk(m, threads);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
     let chunks = cache.acc.chunks_mut(rows_per * n_out).zip(out.chunks_mut(rows_per * n_out));
     par_sum(chunks, |ti, (acc_c, out_c)| {
         let r0 = ti * rows_per;
@@ -418,6 +598,277 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
             for (j, o) in out_c[ri * n_out..(ri + 1) * n_out].iter_mut().enumerate() {
                 *o = finish(arow[j], log2n, bias_raw[j]);
             }
+        }
+        adds
+    })
+}
+
+/// One (row, channel) cell of the blocked contraction — the same ops
+/// in the same per-bit order as [`packed_row`]'s inner loop, consumed
+/// through the [`WORD_BLOCK`]-unrolled walk.  Factored per cell so the
+/// tiled sweeps (uniform full pass, direct conv walk) and the per-row
+/// masked rebuild share one definition.
+#[inline]
+fn blocked_cell(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    nzrow: &[u64],
+    j: usize,
+) -> (i64, i64, u64) {
+    let (kdim, words) = (pp.kdim, pp.words);
+    let coff = j * kdim;
+    let livej = &pp.live[j * words..(j + 1) * words];
+    let (mut a, mut d) = (0i64, 0i64);
+    let adds = and_walk_blocked(livej, nzrow, |i| {
+        let v = xrow[i];
+        let e = pp.exp[coff + i] as i32;
+        let hi = shifted(v, e + 1);
+        let lo = shifted(v, e);
+        a += a_hi[coff + i] as i64 * hi + a_lo[coff + i] as i64 * lo;
+        d += pp.sign[coff + i] as i64 * lo;
+    });
+    (a, d, adds)
+}
+
+/// Rebuild one row's charge/base/output through the blocked cells —
+/// the per-row kernel of the masked blocked rebuild (the driver hands
+/// out single rows, so cross-row tiling does not apply; the row still
+/// gets the multi-word unrolled walk).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn blocked_row(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    nzrow: &[u64],
+    log2n: u32,
+    bias_raw: &[i16],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) -> u64 {
+    let mut adds = 0u64;
+    for j in 0..pp.n_out {
+        let (a, d, ad) = blocked_cell(pp, a_hi, a_lo, xrow, nzrow, j);
+        acc_row[j] = a;
+        base_row[j] = d;
+        out_row[j] = finish(a, log2n, bias_raw[j]);
+        adds += ad;
+    }
+    adds
+}
+
+/// Contract `rows` rows of one chunk with the cache-blocked
+/// row×channel tile sweep: within a row tile, one channel tile's
+/// coefficient strips (`a_hi`/`a_lo`/`exp`/`sign` slices, ~11 bytes per
+/// weight) are re-used across every row of the tile before the sweep
+/// moves on, instead of the whole coefficient matrix being re-streamed
+/// once per row.  `cols_c`/`nz_c` and the output slices are
+/// chunk-relative (row 0 of the slice = the chunk's first row).
+/// Outputs are identical to [`packed_row`] over the same rows — every
+/// cell is written exactly once and integer sums re-associate exactly.
+#[allow(clippy::too_many_arguments)]
+fn blocked_tile_sweep(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    cols_c: &[i32],
+    nz_c: &[u64],
+    rows: usize,
+    tiles: Tiles,
+    log2n: u32,
+    bias_raw: &[i16],
+    acc_c: &mut [i64],
+    base_c: &mut [i64],
+    out_c: &mut [i32],
+) -> u64 {
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let mut adds = 0u64;
+    let mut rt = 0usize;
+    while rt < rows {
+        let re = (rt + tiles.rows).min(rows);
+        let mut jt = 0usize;
+        while jt < n_out {
+            let je = (jt + tiles.cols).min(n_out);
+            for ri in rt..re {
+                let xrow = &cols_c[ri * kdim..(ri + 1) * kdim];
+                let nzrow = &nz_c[ri * words..(ri + 1) * words];
+                let o = ri * n_out;
+                for j in jt..je {
+                    let (a, d, ad) = blocked_cell(pp, a_hi, a_lo, xrow, nzrow, j);
+                    acc_c[o + j] = a;
+                    base_c[o + j] = d;
+                    out_c[o + j] = finish(a, log2n, bias_raw[j]);
+                    adds += ad;
+                }
+            }
+            jt = je;
+        }
+        rt = re;
+    }
+    adds
+}
+
+fn full_blocked(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
+    let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    let tiles = ctx.tiles;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
+    let rows_per = rows_per_chunk(m, threads, tiles.rows);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * n_out)
+        .zip(cache.base.chunks_mut(rows_per * n_out))
+        .zip(out.chunks_mut(rows_per * n_out));
+    par_sum(chunks, |ti, ((acc_c, base_c), out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        blocked_tile_sweep(
+            pp,
+            a_hi,
+            a_lo,
+            &cols[r0 * kdim..(r0 + rows) * kdim],
+            &nz[r0 * words..(r0 + rows) * words],
+            rows,
+            tiles,
+            log2n,
+            bias_raw,
+            acc_c,
+            base_c,
+            out_c,
+        )
+    })
+}
+
+/// [`delta_packed`] with the changed-weight walk consumed through the
+/// [`WORD_BLOCK`]-unrolled blocked walk — same visits in the same
+/// order, so charges and the executed-adds tally are identical.
+fn delta_blocked(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (dc_v, ch_v, changed) = delta_coeffs(pp, prev, ctx.counts);
+    let (dc, ch) = (&dc_v, &ch_v);
+    let dnl = dn as i64;
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    let base = &cache.base;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * n_out as u64);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
+    let chunks = cache.acc.chunks_mut(rows_per * n_out).zip(out.chunks_mut(rows_per * n_out));
+    par_sum(chunks, |ti, (acc_c, out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let arow = &mut acc_c[ri * n_out..(ri + 1) * n_out];
+            let brow = &base[r * n_out..(r + 1) * n_out];
+            for (a, &d) in arow.iter_mut().zip(brow) {
+                *a += dnl * d;
+            }
+            adds += n_out as u64;
+            if changed {
+                let xrow = &cols[r * kdim..(r + 1) * kdim];
+                let nzrow = &nz[r * words..(r + 1) * words];
+                for (j, a) in arow.iter_mut().enumerate() {
+                    let coff = j * kdim;
+                    let chj = &ch[j * words..(j + 1) * words];
+                    let mut da = 0i64;
+                    adds += and_walk_blocked(chj, nzrow, |i| {
+                        let v = xrow[i];
+                        let e = pp.exp[coff + i] as i32;
+                        da += dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                    });
+                    *a += da;
+                }
+            }
+            for (j, o) in out_c[ri * n_out..(ri + 1) * n_out].iter_mut().enumerate() {
+                *o = finish(arow[j], log2n, bias_raw[j]);
+            }
+        }
+        adds
+    })
+}
+
+/// Below this many lowered cells (`m × kdim`) the two-pass lowering
+/// fits comfortably in cache and fusing it into the contraction buys
+/// nothing — [`DirectConv::Auto`]'s geometry gate.
+pub(crate) const DIRECT_MIN_CELLS: usize = 1 << 17;
+
+/// The im2col-free direct conv walk — the `begin`-path strategy for
+/// large images.  Each chunk gathers one row tile's windows straight
+/// from the activation tensor (the same [`SameWindows`] iterator and
+/// Q16 clamp [`super::pack::im2col_i32`] uses), packs their non-zero
+/// words, and contracts the tile immediately through the blocked cells
+/// while the gathered rows are still cache-hot — the lowering is
+/// written once and never re-streamed from memory during the begin.
+/// The caches it fills (`cols`, `nz`, `acc`, `base`) are bit-identical
+/// to the two-pass lower-then-contract path, so O(Δ) refine and rebase
+/// run against them unchanged; executed adds are the same popcount
+/// tally the packed/blocked paths report.
+pub(crate) fn full_direct_conv(
+    ctx: &CapCtx,
+    win: &SameWindows,
+    c_in: usize,
+    x: &[i32],
+    cache: &mut CapCache,
+    out: &mut [i32],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, n_out, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    debug_assert_eq!(m, win.rows());
+    let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
+    let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
+    let tiles = ctx.tiles;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
+    let rows_per = rows_per_chunk(m, threads, tiles.rows);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * n_out)
+        .zip(cache.base.chunks_mut(rows_per * n_out))
+        .zip(out.chunks_mut(rows_per * n_out))
+        .zip(cache.cols.chunks_mut(rows_per * kdim))
+        .zip(cache.nz.chunks_mut(rows_per * words));
+    par_sum(chunks, |ti, ((((acc_c, base_c), out_c), cols_c), nz_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / n_out;
+        let mut adds = 0u64;
+        let mut rt = 0usize;
+        while rt < rows {
+            let re = (rt + tiles.rows).min(rows);
+            for ri in rt..re {
+                let crow = &mut cols_c[ri * kdim..(ri + 1) * kdim];
+                gather_window_row(win, c_in, x, r0 + ri, crow);
+                pack_row_words(crow, &mut nz_c[ri * words..(ri + 1) * words]);
+            }
+            adds += blocked_tile_sweep(
+                pp,
+                a_hi,
+                a_lo,
+                &cols_c[rt * kdim..re * kdim],
+                &nz_c[rt * words..re * words],
+                re - rt,
+                tiles,
+                log2n,
+                bias_raw,
+                &mut acc_c[rt * n_out..re * n_out],
+                &mut base_c[rt * n_out..re * n_out],
+                &mut out_c[rt * n_out..re * n_out],
+            );
+            rt = re;
         }
         adds
     })
@@ -507,6 +958,7 @@ pub(crate) fn masked_step(
 ) -> u64 {
     match mode {
         Contraction::Packed => masked_packed(ctx, prev, rebuild, cache, out, touched),
+        Contraction::Blocked => masked_blocked(ctx, prev, rebuild, cache, out, touched),
         Contraction::Scalar => masked_scalar(ctx, prev, rebuild, cache, out, touched),
     }
 }
@@ -570,7 +1022,7 @@ where
     };
     let bias_raw = ctx.bias_raw;
     let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(n_out as u64));
-    let rows_per = rows_per_chunk(m, threads);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
     let chunks = acc
         .chunks_mut(rows_per * n_out)
         .zip(base.chunks_mut(rows_per * n_out))
@@ -723,6 +1175,67 @@ fn masked_packed(
     )
 }
 
+/// Blocked instantiation of [`masked_step_driver`]: the rebuild rows
+/// run [`blocked_row`] and the combo delta walk is consumed through
+/// [`and_walk_blocked`] — same visits in the same order as
+/// [`masked_packed`], so masked refine chains through the blocked
+/// driver stay bit-identical with identical executed-adds tallies.
+fn masked_blocked(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kdim, words) = (pp.kdim, pp.words);
+    let m = cache.m;
+    let cols = &cache.cols;
+    let nz = &cache.nz;
+    masked_step_driver(
+        ctx,
+        prev,
+        rebuild,
+        m,
+        &mut cache.acc,
+        &mut cache.base,
+        out,
+        touched,
+        |r, (a_hi, a_lo), log2n, acc_row, base_row, out_row| {
+            blocked_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kdim..(r + 1) * kdim],
+                &nz[r * words..(r + 1) * words],
+                log2n,
+                ctx.bias_raw,
+                acc_row,
+                base_row,
+                out_row,
+            )
+        },
+        |r, cb, arow| {
+            let xrow = &cols[r * kdim..(r + 1) * kdim];
+            let nzrow = &nz[r * words..(r + 1) * words];
+            let mut adds = 0u64;
+            for (j, a) in arow.iter_mut().enumerate() {
+                let coff = j * kdim;
+                let chj = &cb.mask[j * words..(j + 1) * words];
+                let mut da = 0i64;
+                adds += and_walk_blocked(chj, nzrow, |i| {
+                    let v = xrow[i];
+                    let e = pp.exp[coff + i] as i32;
+                    da += cb.dc[coff + i] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                });
+                *a += da;
+            }
+            adds
+        },
+    )
+}
+
 /// Scalar reference for the masked step: every touched row (rebuild or
 /// non-no-op combo) is rebuilt from the current counts at its region's
 /// level — bit-identical to the packed delta because integer charge is
@@ -794,4 +1307,98 @@ fn delta_scalar(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
         }
     }
     adds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic 64-bit mixer for synthetic masks (splitmix64).
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// The blocked walk visits exactly the bits of `a & b`, in the same
+    /// ascending order as the word-at-a-time loop, with the popcount
+    /// tally equal to the visit count — across word counts on both
+    /// sides of the [`WORD_BLOCK`] boundary (the tail loop included).
+    #[test]
+    fn blocked_walk_matches_the_word_at_a_time_walk() {
+        for words in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 13] {
+            let a: Vec<u64> = (0..words as u64).map(|w| mix(w * 2 + 1)).collect();
+            let b: Vec<u64> = (0..words as u64).map(|w| mix(w * 2 + 2)).collect();
+            let mut want = Vec::new();
+            for w in 0..words {
+                let mut bits = a[w] & b[w];
+                while bits != 0 {
+                    want.push(w * 64 + bits.trailing_zeros() as usize);
+                    bits &= bits - 1;
+                }
+            }
+            let mut got = Vec::new();
+            let adds = and_walk_blocked(&a, &b, |i| got.push(i));
+            assert_eq!(got, want, "words={words}");
+            assert_eq!(adds as usize, want.len(), "words={words}");
+            let mut live_got = Vec::new();
+            walk_bits_blocked(&a, |i| live_got.push(i));
+            let live_want: Vec<usize> = (0..words * 64).filter(|&i| a[i / 64] >> (i % 64) & 1 == 1).collect();
+            assert_eq!(live_got, live_want, "words={words}");
+        }
+    }
+
+    /// Tile-aware chunking: chunk sizes are tile multiples (so parallel
+    /// partitioning never splits a cache tile), the partition covers
+    /// every row exactly once, and the chunk count never exceeds the
+    /// thread count — across awkward `m × threads × tile` combos.
+    #[test]
+    fn rows_per_chunk_is_tile_aligned_and_covers_every_row() {
+        for m in [0usize, 1, 2, 3, 7, 15, 16, 17, 63, 64, 65, 100, 257, 1024, 1031] {
+            for threads in [1usize, 2, 3, 4, 7, 13, 16] {
+                for tile in [1usize, 3, 8, 16, 32, 64] {
+                    let per = rows_per_chunk(m, threads, tile);
+                    assert!(per >= 1, "m={m} t={threads} tile={tile}");
+                    assert_eq!(per % tile, 0, "chunk splits a tile: m={m} t={threads} tile={tile}");
+                    let chunks = m.div_ceil(per);
+                    assert!(
+                        chunks <= threads,
+                        "more chunks than workers: m={m} t={threads} tile={tile} per={per}"
+                    );
+                    // coverage: chunking a buffer of m rows by `per`
+                    // yields disjoint blocks whose lengths sum to m
+                    let mut covered = 0usize;
+                    let mut start = 0usize;
+                    while start < m {
+                        let len = per.min(m - start);
+                        // every interior boundary lands on a tile boundary
+                        assert_eq!(start % tile, 0, "m={m} t={threads} tile={tile}");
+                        covered += len;
+                        start += len;
+                    }
+                    assert_eq!(covered, m);
+                }
+            }
+        }
+    }
+
+    /// The tile table resolves for every mask width and honors
+    /// per-field overrides.
+    #[test]
+    fn tile_table_resolves_and_overrides_apply() {
+        let dflt = IntKernelConfig::default();
+        for words in [0usize, 1, 2, 4, 5, 16, 17, 1000] {
+            let t = tiles_for(words, &dflt);
+            assert!(t.rows >= 1 && t.cols >= 1, "words={words}");
+        }
+        let t = tiles_for(3, &IntKernelConfig { row_tile: Some(5), col_tile: None, ..dflt });
+        assert_eq!(t.rows, 5);
+        assert_eq!(t.cols, tiles_for(3, &dflt).cols);
+        let t = tiles_for(3, &IntKernelConfig { row_tile: None, col_tile: Some(7), ..dflt });
+        assert_eq!(t.cols, 7);
+        // a zero override clamps to 1 instead of dividing by zero
+        let t = tiles_for(3, &IntKernelConfig { row_tile: Some(0), col_tile: Some(0), ..dflt });
+        assert_eq!((t.rows, t.cols), (1, 1));
+    }
 }

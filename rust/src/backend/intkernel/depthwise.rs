@@ -19,7 +19,7 @@
 
 use super::contract::{
     finish, masked_scalar_driver, masked_step_driver, par_sum, plan_threads, rows_per_chunk,
-    shifted, CapCtx, Contraction, MaskedCtx, StepPrev,
+    shifted, walk_bits_blocked, CapCtx, Contraction, MaskedCtx, StepPrev,
 };
 use super::pack::{count_coeffs, delta_coeffs, PackedPlanes};
 use super::CapCache;
@@ -35,6 +35,7 @@ pub(crate) fn full_depthwise(
 ) -> u64 {
     match mode {
         Contraction::Packed => full_packed(ctx, cache, out),
+        Contraction::Blocked => full_blocked(ctx, cache, out),
         Contraction::Scalar => full_scalar(ctx, cache, out),
     }
 }
@@ -51,6 +52,7 @@ pub(crate) fn delta_depthwise(
 ) -> u64 {
     match mode {
         Contraction::Packed => delta_packed(ctx, prev, dn, cache, out),
+        Contraction::Blocked => delta_blocked(ctx, prev, dn, cache, out),
         Contraction::Scalar => delta_scalar(ctx, prev, dn, cache, out),
     }
 }
@@ -109,7 +111,7 @@ fn full_packed(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
     let cols = &cache.cols;
     let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
     let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(c as u64));
-    let rows_per = rows_per_chunk(m, threads);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
     let chunks = cache
         .acc
         .chunks_mut(rows_per * c)
@@ -148,7 +150,7 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
     let base = &cache.base;
     let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
     let threads = plan_threads(ctx.threads, m, m as u64 * c as u64);
-    let rows_per = rows_per_chunk(m, threads);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
     let chunks = cache.acc.chunks_mut(rows_per * c).zip(out.chunks_mut(rows_per * c));
     par_sum(chunks, |ti, (acc_c, out_c)| {
         let r0 = ti * rows_per;
@@ -181,6 +183,171 @@ fn delta_packed(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: 
                             da += dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
                         }
                     }
+                    *a += da;
+                }
+            }
+            for (ci, o) in out_c[ri * c..(ri + 1) * c].iter_mut().enumerate() {
+                *o = finish(arow[ci], log2n, bias_raw[ci]);
+            }
+        }
+        adds
+    })
+}
+
+/// Per-channel blocked rebuild cell: channel `ci`'s live-tap words are
+/// consumed [`super::contract::WORD_BLOCK`] at a time through
+/// [`walk_bits_blocked`], which visits the same taps in the same
+/// ascending order as [`dw_packed_row`]'s word-at-a-time loop — the
+/// integer sums are identical term-for-term, so the cell is
+/// bit-identical to the packed path by construction.
+#[inline]
+fn dw_blocked_cell(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    ci: usize,
+) -> (i64, i64, u64) {
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let coff = ci * kk;
+    let (mut a, mut d) = (0i64, 0i64);
+    let mut adds = 0u64;
+    walk_bits_blocked(&pp.live[ci * words..(ci + 1) * words], |tap| {
+        let v = xrow[tap * c + ci];
+        if v == 0 {
+            return;
+        }
+        adds += 1;
+        let e = pp.exp[coff + tap] as i32;
+        let hi = shifted(v, e + 1);
+        let lo = shifted(v, e);
+        a += a_hi[coff + tap] as i64 * hi + a_lo[coff + tap] as i64 * lo;
+        d += pp.sign[coff + tap] as i64 * lo;
+    });
+    (a, d, adds)
+}
+
+/// Blocked analogue of [`dw_packed_row`] — one pixel row, all channels,
+/// through the blocked cell.  Used by the masked driver's rebuild
+/// kernel, where rows arrive one at a time.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dw_blocked_row(
+    pp: &PackedPlanes,
+    a_hi: &[i32],
+    a_lo: &[i32],
+    xrow: &[i32],
+    log2n: u32,
+    bias_raw: &[i16],
+    acc_row: &mut [i64],
+    base_row: &mut [i64],
+    out_row: &mut [i32],
+) -> u64 {
+    let c = pp.n_out;
+    let mut adds = 0u64;
+    for ci in 0..c {
+        let (a, d, cell) = dw_blocked_cell(pp, a_hi, a_lo, xrow, ci);
+        adds += cell;
+        acc_row[ci] = a;
+        base_row[ci] = d;
+        out_row[ci] = finish(a, log2n, bias_raw[ci]);
+    }
+    adds
+}
+
+/// Blocked full rebuild: [`full_packed`] with a row×channel tile sweep
+/// per chunk, so one row tile's lowered activations and one channel
+/// tile's planes stay cache-resident across the sweep.  Cell values and
+/// the adds tally are untouched by the reordering (each `(r, ci)` cell
+/// is an independent exact-integer sum), so outputs and billing are
+/// bit-identical to the packed path.
+fn full_blocked(ctx: &CapCtx, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c) = (pp.kdim, pp.n_out);
+    let m = cache.m;
+    let (a_hi_v, a_lo_v) = count_coeffs(pp, ctx.counts, ctx.n);
+    let (a_hi, a_lo) = (&a_hi_v, &a_lo_v);
+    let cols = &cache.cols;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let tiles = ctx.tiles;
+    let threads = plan_threads(ctx.threads, m, m as u64 * pp.nnz.max(c as u64));
+    let rows_per = rows_per_chunk(m, threads, tiles.rows);
+    let chunks = cache
+        .acc
+        .chunks_mut(rows_per * c)
+        .zip(cache.base.chunks_mut(rows_per * c))
+        .zip(out.chunks_mut(rows_per * c));
+    par_sum(chunks, |ti, ((acc_c, base_c), out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / c;
+        let mut adds = 0u64;
+        let mut rt = 0;
+        while rt < rows {
+            let re = (rt + tiles.rows).min(rows);
+            let mut ct = 0;
+            while ct < c {
+                let ce = (ct + tiles.cols).min(c);
+                for ri in rt..re {
+                    let r = r0 + ri;
+                    let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+                    for ci in ct..ce {
+                        let (a, d, cell) = dw_blocked_cell(pp, a_hi, a_lo, xrow, ci);
+                        adds += cell;
+                        acc_c[ri * c + ci] = a;
+                        base_c[ri * c + ci] = d;
+                        out_c[ri * c + ci] = finish(a, log2n, bias_raw[ci]);
+                    }
+                }
+                ct = ce;
+            }
+            rt = re;
+        }
+        adds
+    })
+}
+
+/// Blocked O(Δ) refine: [`delta_packed`] with the changed-tap walk
+/// consumed through [`walk_bits_blocked`] — same taps, same order, same
+/// exact-integer deltas.
+fn delta_blocked(ctx: &CapCtx, prev: &[u32], dn: u32, cache: &mut CapCache, out: &mut [i32]) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let (dc_v, ch_v, changed) = delta_coeffs(pp, prev, ctx.counts);
+    let (dc, ch) = (&dc_v, &ch_v);
+    let dnl = dn as i64;
+    let cols = &cache.cols;
+    let base = &cache.base;
+    let (log2n, bias_raw) = (ctx.log2n, ctx.bias_raw);
+    let threads = plan_threads(ctx.threads, m, m as u64 * c as u64);
+    let rows_per = rows_per_chunk(m, threads, ctx.tiles.rows);
+    let chunks = cache.acc.chunks_mut(rows_per * c).zip(out.chunks_mut(rows_per * c));
+    par_sum(chunks, |ti, (acc_c, out_c)| {
+        let r0 = ti * rows_per;
+        let rows = acc_c.len() / c;
+        let mut adds = 0u64;
+        for ri in 0..rows {
+            let r = r0 + ri;
+            let arow = &mut acc_c[ri * c..(ri + 1) * c];
+            let brow = &base[r * c..(r + 1) * c];
+            for (a, &d) in arow.iter_mut().zip(brow) {
+                *a += dnl * d;
+            }
+            adds += c as u64;
+            if changed {
+                let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+                for (ci, a) in arow.iter_mut().enumerate() {
+                    let coff = ci * kk;
+                    let mut da = 0i64;
+                    walk_bits_blocked(&ch[ci * words..(ci + 1) * words], |tap| {
+                        let v = xrow[tap * c + ci];
+                        if v == 0 {
+                            return;
+                        }
+                        adds += 1;
+                        let e = pp.exp[coff + tap] as i32;
+                        da += dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                    });
                     *a += da;
                 }
             }
@@ -307,6 +474,7 @@ pub(crate) fn masked_step_depthwise(
 ) -> u64 {
     match mode {
         Contraction::Packed => masked_packed(ctx, prev, rebuild, cache, out, touched),
+        Contraction::Blocked => masked_blocked(ctx, prev, rebuild, cache, out, touched),
         Contraction::Scalar => masked_scalar(ctx, prev, rebuild, cache, out, touched),
     }
 }
@@ -369,6 +537,65 @@ fn masked_packed(
                         da += cb.dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
                     }
                 }
+                *a += da;
+            }
+            adds
+        },
+    )
+}
+
+/// Blocked instantiation of [`masked_step_driver`]: identical skeleton
+/// to [`masked_packed`], with the per-row rebuild and changed-tap delta
+/// kernels consuming mask words through the blocked walk.
+fn masked_blocked(
+    ctx: &MaskedCtx,
+    prev: Option<&StepPrev>,
+    rebuild: Option<&[bool]>,
+    cache: &mut CapCache,
+    out: &mut [i32],
+    touched: &mut [bool],
+) -> u64 {
+    let pp = ctx.packed;
+    let (kk, c, words) = (pp.kdim, pp.n_out, pp.words);
+    let m = cache.m;
+    let cols = &cache.cols;
+    masked_step_driver(
+        ctx,
+        prev,
+        rebuild,
+        m,
+        &mut cache.acc,
+        &mut cache.base,
+        out,
+        touched,
+        |r, (a_hi, a_lo), log2n, acc_row, base_row, out_row| {
+            dw_blocked_row(
+                pp,
+                a_hi,
+                a_lo,
+                &cols[r * kk * c..(r + 1) * kk * c],
+                log2n,
+                ctx.bias_raw,
+                acc_row,
+                base_row,
+                out_row,
+            )
+        },
+        |r, cb, arow| {
+            let xrow = &cols[r * kk * c..(r + 1) * kk * c];
+            let mut adds = 0u64;
+            for (ci, a) in arow.iter_mut().enumerate() {
+                let coff = ci * kk;
+                let mut da = 0i64;
+                walk_bits_blocked(&cb.mask[ci * words..(ci + 1) * words], |tap| {
+                    let v = xrow[tap * c + ci];
+                    if v == 0 {
+                        return;
+                    }
+                    adds += 1;
+                    let e = pp.exp[coff + tap] as i32;
+                    da += cb.dc[coff + tap] as i64 * (shifted(v, e + 1) - shifted(v, e));
+                });
                 *a += da;
             }
             adds

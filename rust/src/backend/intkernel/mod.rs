@@ -67,7 +67,14 @@
 //! produced by exactly one thread in a fixed per-element order and
 //! integer addition is exact, logits are bit-identical to the
 //! single-threaded scalar reference ([`Contraction::Scalar`]) regardless
-//! of thread count or schedule.  See `contract.rs` / `depthwise.rs`.
+//! of thread count or schedule.  [`Contraction::Blocked`] keeps the same
+//! walk but consumes mask words [`contract::WORD_BLOCK`] at a time with
+//! a batched popcount reduction and sweeps rows×channels in cache tiles
+//! ([`IntKernelConfig`]); on large uniform conv begins an im2col-free
+//! direct window walk ([`DirectConv`]) fuses lowering and contraction
+//! per row tile.  All of them are bit-identical — integer sums are
+//! order-independent — so the choice is pure wall-time tuning.  See
+//! `contract.rs` / `depthwise.rs`.
 //!
 //! ## Scope
 //!
@@ -99,11 +106,11 @@ use crate::rng::RngKind;
 use crate::sim::psbnet::{collapse_mask_rows, or_masks, pool_mask, PsbNetwork, PsbOp};
 use crate::sim::tensor::Tensor;
 
-use super::{Backend, CostReport, InferenceSession, MergeOutcome, StepReport};
+use super::{Backend, CostReport, InferenceSession, KernelPath, MergeOutcome, StepReport};
 
 use stream::InputMode;
 
-pub use contract::Contraction;
+pub use contract::{Contraction, DirectConv, IntKernelConfig};
 pub use pack::PackedPlanes;
 
 /// Integer shift-add backend over a prepared [`PsbNetwork`].
@@ -116,6 +123,7 @@ pub struct IntKernel {
     kind: RngKind,
     mode: Contraction,
     threads: usize,
+    cfg: IntKernelConfig,
 }
 
 impl IntKernel {
@@ -148,6 +156,7 @@ impl IntKernel {
             kind: RngKind::Philox,
             mode: Contraction::Packed,
             threads: default_threads(),
+            cfg: IntKernelConfig::default(),
         })
     }
 
@@ -161,6 +170,15 @@ impl IntKernel {
     /// parity tests and as the bench baseline.
     pub fn with_contraction(mut self, mode: Contraction) -> IntKernel {
         self.mode = mode;
+        self
+    }
+
+    /// Override the contraction tuning knobs — cache-tile sizes of the
+    /// blocked datapath and the direct-conv strategy (see
+    /// [`IntKernelConfig`]).  Every setting is bit-identity-neutral:
+    /// logits and billing never depend on it, only wall time does.
+    pub fn with_config(mut self, cfg: IntKernelConfig) -> IntKernel {
+        self.cfg = cfg;
         self
     }
 
@@ -222,6 +240,7 @@ impl Backend for IntKernel {
             kind: self.kind,
             mode: self.mode,
             threads: self.threads,
+            cfg: self.cfg,
             plan: plan.clone(),
             state: None,
             batch: 0,
@@ -282,6 +301,7 @@ struct IntSession {
     kind: RngKind,
     mode: Contraction,
     threads: usize,
+    cfg: IntKernelConfig,
     plan: PrecisionPlan,
     state: Option<ProgressiveState>,
     batch: usize,
@@ -379,7 +399,7 @@ impl IntSession {
         check_plan(&self.net, target)?;
         let net = self.net.clone();
         let packed_all = self.packed.clone();
-        let (mode, threads) = (self.mode, self.threads);
+        let (mode, threads, cfg) = (self.mode, self.threads, self.cfg);
         // A rebased frame is billed as a fresh begin: every row pays from
         // zero up to its region's n, regardless of what the previous
         // frame's charge already held (see `stream`).
@@ -398,6 +418,13 @@ impl IntSession {
         let (kind, seed) = (state.kind, state.seed);
         let mut step = StepReport {
             layer_adds: vec![0; net.num_capacitors],
+            // attribution tag; a direct-conv begin upgrades it below
+            // (Direct > Blocked > Packed > Scalar, see `aggregate`)
+            kernel_path: match mode {
+                Contraction::Scalar => KernelPath::Scalar,
+                Contraction::Packed => KernelPath::Packed,
+                Contraction::Blocked => KernelPath::Blocked,
+            },
             ..Default::default()
         };
         let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(net.nodes.len());
@@ -505,6 +532,7 @@ impl IntSession {
                         state,
                         (unit, layer, kind, seed),
                         (mode, threads, bill_fresh),
+                        cfg,
                         &mut step,
                     )?;
                     (out_shape, is_dirty, ch, out_mask)
@@ -551,6 +579,7 @@ impl IntSession {
                         state,
                         (unit, layer, kind, seed),
                         (mode, threads, bill_fresh),
+                        cfg,
                         &mut step,
                     )?;
                     (vec![bb, ho, wo, *c], is_dirty, ch, out_mask)
@@ -668,10 +697,12 @@ fn cap_node_pass(
     state: &mut ProgressiveState,
     (unit, layer, kind, seed): (usize, usize, RngKind, u64),
     (mode, threads, bill_fresh): (Contraction, usize, bool),
+    cfg: IntKernelConfig,
     step: &mut StepReport,
 ) -> Result<(bool, Option<Vec<bool>>)> {
     let kk = planes.shape[0];
     let live = pp.nnz;
+    let tiles = contract::tiles_for(pp.words, &cfg);
     let bias_raw: Vec<i16> = bias.iter().map(|&v| Q16::from_f32(v).raw()).collect();
     // Incremental execution needs a geometry-matched cache and an input
     // that is clean or changed in a known row subset.
@@ -732,6 +763,7 @@ fn cap_node_pass(
             log2n: n_lo.trailing_zeros(),
             bias_raw: &bias_raw,
             threads,
+            tiles,
         };
         let mut out = vec![0i32; m * n_out];
         let adds = match geom {
@@ -777,6 +809,7 @@ fn cap_node_pass(
             n_hi,
             bias_raw: &bias_raw,
             threads,
+            tiles,
             row_hi: row_hi_new,
         };
         let sprev = contract::StepPrev {
@@ -825,87 +858,137 @@ fn cap_node_pass(
         // or first pass over this node)
         step.nodes_recomputed += 1;
         let x = &outs[in_idx];
-        let (cols, nz): (Vec<i32>, Vec<u64>) = match geom {
-            CapGeom::Conv { k, stride, dims } => {
-                let cols = pack::im2col_i32(x, *dims, *k, *stride).0;
-                let nz = pack::pack_nonzero(&cols, m, kk);
-                (cols, nz)
+        // Im2col-free begin path: on a uniform conv rebuild over a large
+        // image, fuse lowering and contraction per row tile — the
+        // lowering buffer is written once while cache-hot and never
+        // re-streamed.  The caches it populates (`cols`/`nz`) are
+        // bit-identical to the materialized im2col, so O(Δ)
+        // refine/rebase continue on the cached-lowering path unchanged.
+        let direct_win = match geom {
+            CapGeom::Conv { k, stride, dims } if row_hi_new.is_empty() => {
+                let pick = match cfg.direct_conv {
+                    DirectConv::Always => true,
+                    DirectConv::Never => false,
+                    DirectConv::Auto => {
+                        mode != Contraction::Scalar && m * kk >= contract::DIRECT_MIN_CELLS
+                    }
+                };
+                pick.then(|| (pack::SameWindows::new(*dims, *k, *stride), dims.3))
             }
-            CapGeom::Dense => {
-                let cols: Vec<i32> = x.iter().map(|&v| clamp_q16(v)).collect();
-                let nz = pack::pack_nonzero(&cols, m, kk);
-                (cols, nz)
-            }
-            CapGeom::Depthwise { k, stride, dims } => {
-                (pack::lower_depthwise(x, *dims, *k, *stride).0, Vec::new())
-            }
+            _ => None,
         };
-        let mut cache = CapCache {
-            cols,
-            nz,
-            m,
-            acc: vec![0i64; m * n_out],
-            base: vec![0i64; m * n_out],
-            row_hi: row_hi_new.to_vec(),
-        };
-        let counts_lo = state.units[unit].counts_lo();
-        let counts_hi = state.units[unit].counts_hi();
-        let mut out = vec![0i32; m * n_out];
-        let adds = if row_hi_new.is_empty() {
+        if let Some((win, c_in)) = direct_win {
+            let mut cache = CapCache {
+                cols: vec![0i32; m * kk],
+                nz: vec![0u64; m * pp.words],
+                m,
+                acc: vec![0i64; m * n_out],
+                base: vec![0i64; m * n_out],
+                row_hi: Vec::new(),
+            };
             let ctx = contract::CapCtx {
                 planes,
                 packed: pp,
-                counts: counts_lo,
+                counts: state.units[unit].counts_lo(),
                 n: n_lo,
                 log2n: n_lo.trailing_zeros(),
                 bias_raw: &bias_raw,
                 threads,
+                tiles,
             };
-            match geom {
-                CapGeom::Depthwise { .. } => {
-                    depthwise::full_depthwise(&ctx, &mut cache, &mut out, mode)
-                }
-                _ => contract::full_contract(&ctx, &mut cache, &mut out, mode),
-            }
+            let mut out = vec![0i32; m * n_out];
+            let adds = contract::full_direct_conv(&ctx, &win, c_in, x, &mut cache, &mut out);
+            step.executed_adds += adds;
+            step.layer_adds[layer] += adds;
+            step.kernel_path = KernelPath::Direct;
+            caps.insert(idx, cache);
+            outs[idx] = out;
+            (true, None)
         } else {
-            let mctx = contract::MaskedCtx {
-                planes,
-                packed: pp,
-                counts_lo,
-                counts_hi,
-                n_lo,
-                n_hi,
-                bias_raw: &bias_raw,
-                threads,
-                row_hi: row_hi_new,
+            let (cols, nz): (Vec<i32>, Vec<u64>) = match geom {
+                CapGeom::Conv { k, stride, dims } => {
+                    let cols = pack::im2col_i32(x, *dims, *k, *stride).0;
+                    let nz = pack::pack_nonzero(&cols, m, kk);
+                    (cols, nz)
+                }
+                CapGeom::Dense => {
+                    let cols: Vec<i32> = x.iter().map(|&v| clamp_q16(v)).collect();
+                    let nz = pack::pack_nonzero(&cols, m, kk);
+                    (cols, nz)
+                }
+                CapGeom::Depthwise { k, stride, dims } => {
+                    (pack::lower_depthwise(x, *dims, *k, *stride).0, Vec::new())
+                }
             };
-            let mut touched = vec![false; m];
-            match geom {
-                CapGeom::Depthwise { .. } => depthwise::masked_step_depthwise(
-                    &mctx,
-                    None,
-                    None,
-                    &mut cache,
-                    &mut out,
-                    &mut touched,
-                    mode,
-                ),
-                _ => contract::masked_step(
-                    &mctx,
-                    None,
-                    None,
-                    &mut cache,
-                    &mut out,
-                    &mut touched,
-                    mode,
-                ),
-            }
-        };
-        step.executed_adds += adds;
-        step.layer_adds[layer] += adds;
-        caps.insert(idx, cache);
-        outs[idx] = out;
-        (true, None)
+            let mut cache = CapCache {
+                cols,
+                nz,
+                m,
+                acc: vec![0i64; m * n_out],
+                base: vec![0i64; m * n_out],
+                row_hi: row_hi_new.to_vec(),
+            };
+            let counts_lo = state.units[unit].counts_lo();
+            let counts_hi = state.units[unit].counts_hi();
+            let mut out = vec![0i32; m * n_out];
+            let adds = if row_hi_new.is_empty() {
+                let ctx = contract::CapCtx {
+                    planes,
+                    packed: pp,
+                    counts: counts_lo,
+                    n: n_lo,
+                    log2n: n_lo.trailing_zeros(),
+                    bias_raw: &bias_raw,
+                    threads,
+                    tiles,
+                };
+                match geom {
+                    CapGeom::Depthwise { .. } => {
+                        depthwise::full_depthwise(&ctx, &mut cache, &mut out, mode)
+                    }
+                    _ => contract::full_contract(&ctx, &mut cache, &mut out, mode),
+                }
+            } else {
+                let mctx = contract::MaskedCtx {
+                    planes,
+                    packed: pp,
+                    counts_lo,
+                    counts_hi,
+                    n_lo,
+                    n_hi,
+                    bias_raw: &bias_raw,
+                    threads,
+                    tiles,
+                    row_hi: row_hi_new,
+                };
+                let mut touched = vec![false; m];
+                match geom {
+                    CapGeom::Depthwise { .. } => depthwise::masked_step_depthwise(
+                        &mctx,
+                        None,
+                        None,
+                        &mut cache,
+                        &mut out,
+                        &mut touched,
+                        mode,
+                    ),
+                    _ => contract::masked_step(
+                        &mctx,
+                        None,
+                        None,
+                        &mut cache,
+                        &mut out,
+                        &mut touched,
+                        mode,
+                    ),
+                }
+            };
+            step.executed_adds += adds;
+            step.layer_adds[layer] += adds;
+            caps.insert(idx, cache);
+            outs[idx] = out;
+            (true, None)
+        }
     };
     // exact per-row hardware charge: each row pays live × (n_new − n_prev)
     // for its own (previous, new) region — identical to the simulator's

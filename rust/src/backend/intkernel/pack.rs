@@ -275,12 +275,41 @@ pub(crate) fn dilate_to_rows(
 #[inline]
 pub(crate) fn repack_row(cols: &[i32], r: usize, kdim: usize, nz: &mut [u64]) {
     let words = kdim.div_ceil(64).max(1);
-    let row = &cols[r * kdim..(r + 1) * kdim];
-    let dst = &mut nz[r * words..(r + 1) * words];
+    pack_row_words(&cols[r * kdim..(r + 1) * kdim], &mut nz[r * words..(r + 1) * words]);
+}
+
+/// Pack one lowered row's non-zero structure into its word block:
+/// bit `i%64` of `dst[i/64]` set iff `row[i] ≠ 0`.  The primitive under
+/// [`repack_row`]/[`pack_nonzero`], exposed separately so the direct
+/// conv walk can pack a freshly gathered row while it is still
+/// cache-hot.
+#[inline]
+pub(crate) fn pack_row_words(row: &[i32], dst: &mut [u64]) {
     dst.fill(0);
     for (i, &v) in row.iter().enumerate() {
         if v != 0 {
             dst[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+}
+
+/// Gather ONE output row of the SAME-padded conv lowering straight from
+/// the activation tensor — the im2col-free begin path's per-row
+/// primitive.  `row` must be `ksize²·c` long; padding taps stay zero.
+/// Bit-identical per row to [`im2col_i32`] by construction: both walk
+/// [`SameWindows::taps`] with the same `(di, dj, c)` patch order and the
+/// same [`clamp_q16`] saturation (regression-tested in this module).
+pub(crate) fn gather_window_row(win: &SameWindows, c: usize, x: &[i32], r: usize, row: &mut [i32]) {
+    let bi = r / (win.ho * win.wo);
+    let rem = r % (win.ho * win.wo);
+    let oy = rem / win.wo;
+    let ox = rem % win.wo;
+    row.fill(0);
+    for (tap, iy, ix) in win.taps(oy, ox) {
+        let src = ((bi * win.h + iy) * win.w + ix) * c;
+        let dst = tap * c;
+        for ci in 0..c {
+            row[dst + ci] = clamp_q16(x[src + ci]);
         }
     }
 }
@@ -453,6 +482,37 @@ mod tests {
                 reference_visits(dims, ksize, stride),
                 "dims={dims:?} k={ksize} stride={stride}"
             );
+        }
+    }
+
+    /// The direct walk's per-row gather reproduces the materialized
+    /// lowering bit-for-bit on every row (including the packed non-zero
+    /// words), over odd shapes, kernels and strides — the bit-identity
+    /// contract that lets the begin path skip im2col entirely.
+    #[test]
+    fn gather_window_row_matches_im2col_every_row() {
+        for (dims, ksize, stride) in odd_cases() {
+            let (b, h, w, c) = dims;
+            let n = b * h * w * c;
+            let x: Vec<i32> = (0..n as i32).map(|v| (v * 53) % 3000 - 1500).collect();
+            let (full, ho, wo) = im2col_i32(&x, dims, ksize, stride);
+            let kdim = ksize * ksize * c;
+            let words = kdim.div_ceil(64).max(1);
+            let m = b * ho * wo;
+            let full_nz = pack_nonzero(&full, m, kdim);
+            let win = SameWindows::new(dims, ksize, stride);
+            let mut row = vec![i32::MIN; kdim];
+            let mut nzrow = vec![u64::MAX; words];
+            for r in 0..m {
+                gather_window_row(&win, c, &x, r, &mut row);
+                assert_eq!(
+                    row,
+                    full[r * kdim..(r + 1) * kdim],
+                    "dims={dims:?} k={ksize} stride={stride} r={r}"
+                );
+                pack_row_words(&row, &mut nzrow);
+                assert_eq!(nzrow, full_nz[r * words..(r + 1) * words]);
+            }
         }
     }
 

@@ -24,6 +24,10 @@
 //! 3. re-lowers and rebuilds *just those rows* via the `masked_step`
 //!    drivers at the session's current per-row `(counts, n)` — every
 //!    other row finishes early with zero work and keeps its accumulator.
+//!    The drivers dispatch on the session's [`super::Contraction`], so a
+//!    blocked-mode session rebases through the blocked inner loop (and a
+//!    direct-conv begin leaves bit-identical `cols`/`nz` caches, so the
+//!    rebase diff works unchanged on top of it).
 //!
 //! Because the filter draws are batch-shared and row-independent, and
 //! the rebuilt rows use the same counts a fresh session would reach, the

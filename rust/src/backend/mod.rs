@@ -58,6 +58,40 @@ pub use merged::MergedSession;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
+/// Which inner contraction datapath executed a step — the IntKernel's
+/// attribution tag, so serving metrics and benches can tell *which*
+/// kernel produced a number.  Ordered by specialization: `aggregate`
+/// keeps the most specialized path any constituent step took (`Direct >
+/// Blocked > Packed > Scalar`), and backends without an attributable
+/// kernel (sim, PJRT) stay at `Other`.  The tag is pure telemetry:
+/// every path is bit-identical in logits and charge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum KernelPath {
+    /// No IntKernel contraction ran (sim / PJRT / merged-foreign).
+    #[default]
+    Other,
+    /// Scalar reference walk over raw planes.
+    Scalar,
+    /// Word-at-a-time packed popcount walk.
+    Packed,
+    /// Multi-word blocked walk with cache tiling.
+    Blocked,
+    /// Im2col-free direct window walk (begin path, large conv images).
+    Direct,
+}
+
+impl KernelPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Other => "other",
+            KernelPath::Scalar => "scalar",
+            KernelPath::Packed => "packed",
+            KernelPath::Blocked => "blocked",
+            KernelPath::Direct => "direct",
+        }
+    }
+}
+
 /// What one `begin` or `refine` step did.
 ///
 /// `costs` is the hardware-model charge of the step (the paper's
@@ -92,6 +126,9 @@ pub struct StepReport {
     /// Capacitor nodes updated via the O(Δ) integer delta path
     /// (`IntKernel` only: `ΔA = Δn·D + Σ Δk·(H−L)`).
     pub delta_updated: usize,
+    /// Which contraction datapath served the step (IntKernel only;
+    /// other backends report [`KernelPath::Other`]).
+    pub kernel_path: KernelPath,
 }
 
 impl StepReport {
@@ -114,6 +151,7 @@ impl StepReport {
             total.nodes_reused += s.nodes_reused;
             total.cols_reused += s.cols_reused;
             total.delta_updated += s.delta_updated;
+            total.kernel_path = total.kernel_path.max(s.kernel_path);
         }
         total
     }

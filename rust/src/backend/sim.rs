@@ -129,6 +129,7 @@ impl SimSession {
             nodes_reused: stats.nodes_reused,
             cols_reused: stats.cols_reused,
             delta_updated: 0,
+            ..Default::default()
         };
         self.report.record(step.clone());
         Ok(step)
@@ -193,6 +194,7 @@ impl InferenceSession for SimSession {
                     nodes_reused: stats.nodes_reused,
                     cols_reused: stats.cols_reused,
                     delta_updated: 0,
+                    ..Default::default()
                 };
                 self.report.record(step.clone());
                 Ok(step)

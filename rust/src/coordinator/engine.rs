@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, BackendFactory, InferenceSession, MergeOutcome, StepReport};
+use crate::backend::{Backend, BackendFactory, InferenceSession, KernelPath, MergeOutcome, StepReport};
 use crate::coordinator::metrics::ErrorRing;
 use crate::coordinator::overload::{bounded_queue, QueueSendError, QueueTx, OVERLOADED};
 use crate::precision::PrecisionPlan;
@@ -116,11 +116,34 @@ pub struct EngineStats {
     /// New sessions bounced by a fully *pinned* pool — a capacity
     /// refusal (named `(overloaded)`), distinct from LRU `evictions`.
     pub pool_bounces: AtomicU64,
+    /// Outputs served through the IntKernel's scalar contraction.
+    pub kernel_scalar: AtomicU64,
+    /// Outputs served through the word-at-a-time packed contraction.
+    pub kernel_packed: AtomicU64,
+    /// Outputs served through the multi-word blocked contraction.
+    pub kernel_blocked: AtomicU64,
+    /// Outputs whose pass took the im2col-free direct convolution walk
+    /// for at least one layer.
+    pub kernel_direct: AtomicU64,
 }
 
 impl EngineStats {
     pub fn sessions_open(&self) -> u64 {
         self.sessions_open.load(Ordering::Relaxed)
+    }
+
+    /// Record which contraction path served one output.  Backends that
+    /// do not tag their passes (`KernelPath::Other`: the exact sim, the
+    /// PJRT artifacts) are the untagged remainder of `completed`.
+    fn note_kernel_path(&self, path: KernelPath) {
+        let counter = match path {
+            KernelPath::Other => return,
+            KernelPath::Scalar => &self.kernel_scalar,
+            KernelPath::Packed => &self.kernel_packed,
+            KernelPath::Blocked => &self.kernel_blocked,
+            KernelPath::Direct => &self.kernel_direct,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -206,6 +229,9 @@ pub struct EngineOutput {
     /// This output came out of a merged dispatch (several refine jobs
     /// coalesced into one backend call).
     pub merged: bool,
+    /// Which contraction inner loop the backend reported for the pass
+    /// ([`KernelPath::Other`] for backends that do not tag theirs).
+    pub kernel_path: KernelPath,
 }
 
 /// Bounded LRU slab of open sessions.  Ids are monotonic and never
@@ -486,6 +512,7 @@ impl Engine {
                                         let result = match result {
                                             Ok((sess, mut out)) => {
                                                 out.session = Some(pool.insert(sess));
+                                                stats_worker.note_kernel_path(out.kernel_path);
                                                 Ok(out)
                                             }
                                             Err(e) => {
@@ -504,10 +531,11 @@ impl Engine {
                                             x,
                                         );
                                         match &result {
-                                            Ok(_) => {
+                                            Ok(out) => {
                                                 stats_worker
                                                     .stream_frames
                                                     .fetch_add(1, Ordering::Relaxed);
+                                                stats_worker.note_kernel_path(out.kernel_path);
                                             }
                                             Err(e) => {
                                                 fail_worker.push(format!("{e:#}"));
@@ -518,8 +546,11 @@ impl Engine {
                                     EngineJob::ForkEscalate { session, rows, plan, reply } => {
                                         let result =
                                             fork_escalate_job(&pool, session, rows, &plan);
-                                        if let Err(e) = &result {
-                                            fail_worker.push(format!("{e:#}"));
+                                        match &result {
+                                            Ok(out) => {
+                                                stats_worker.note_kernel_path(out.kernel_path);
+                                            }
+                                            Err(e) => fail_worker.push(format!("{e:#}")),
                                         }
                                         let _ = reply.send(result);
                                     }
@@ -737,7 +768,7 @@ fn dispatch_refines(
         }
         if ready.len() < 2 {
             for (req, sess) in ready {
-                refine_in_hand(pool, req, sess, fail);
+                refine_in_hand(pool, req, sess, stats, fail);
             }
             continue;
         }
@@ -753,6 +784,7 @@ fn dispatch_refines(
                         let outs = split_merged_outputs(merged.as_ref());
                         debug_assert_eq!(outs.len(), reqs.len());
                         for (req, out) in reqs.into_iter().zip(outs) {
+                            stats.note_kernel_path(out.kernel_path);
                             pool.retire(
                                 req.session,
                                 format!(
@@ -781,7 +813,7 @@ fn dispatch_refines(
             }
             Ok(MergeOutcome::Unsupported(parts)) => {
                 for (req, sess) in reqs.into_iter().zip(parts) {
-                    refine_in_hand(pool, req, sess, fail);
+                    refine_in_hand(pool, req, sess, stats, fail);
                 }
             }
             Err(e) => {
@@ -795,7 +827,7 @@ fn dispatch_refines(
     }
     for req in singles {
         match take_and_narrow(pool, &req) {
-            Ok(sess) => refine_in_hand(pool, req, sess, fail),
+            Ok(sess) => refine_in_hand(pool, req, sess, stats, fail),
             Err(e) => {
                 fail.push(format!("{e:#}"));
                 let _ = req.reply.send(Err(e));
@@ -834,7 +866,7 @@ fn dispatch_begins(
     for (plan, seed, group) in groups {
         if group.len() < 2 {
             for req in group {
-                serve_begin(backend, hwc, req, fail);
+                serve_begin(backend, hwc, req, stats, fail);
             }
             continue;
         }
@@ -856,7 +888,7 @@ fn dispatch_begins(
         }
         if ready.len() < 2 {
             for req in ready {
-                serve_begin(backend, hwc, req, fail);
+                serve_begin(backend, hwc, req, stats, fail);
             }
             continue;
         }
@@ -874,6 +906,7 @@ fn dispatch_begins(
                 let outs = split_begun_outputs(sess.as_ref(), &step, &parts);
                 debug_assert_eq!(outs.len(), ready.len());
                 for (req, out) in ready.into_iter().zip(outs) {
+                    stats.note_kernel_path(out.kernel_path);
                     let _ = req.reply.send(Ok(out));
                 }
             }
@@ -895,10 +928,14 @@ fn serve_begin(
     backend: &dyn Backend,
     hwc: (usize, usize, usize),
     req: BeginReq,
+    stats: &EngineStats,
     fail: &ErrorRing,
 ) {
     let result = match begin_job(backend, hwc, req.plan, req.x, req.batch, req.seed) {
-        Ok((_sess, out)) => Ok(out),
+        Ok((_sess, out)) => {
+            stats.note_kernel_path(out.kernel_path);
+            Ok(out)
+        }
         Err(e) => {
             fail.push(format!("{e:#}"));
             Err(e)
@@ -943,6 +980,7 @@ fn split_begun_outputs(
             executed_adds: share(step.executed_adds),
             backend_ns: share(step.elapsed_ns),
             merged: true,
+            kernel_path: step.kernel_path,
         });
         off += rows;
     }
@@ -1033,11 +1071,13 @@ fn refine_in_hand(
     pool: &mut SessionPool,
     req: RefineReq,
     mut sess: Box<dyn InferenceSession>,
+    stats: &EngineStats,
     fail: &ErrorRing,
 ) {
     let result = match no_unwind("refine", || sess.refine(&req.plan)) {
         Ok(step) => {
             let mut out = output_of(sess.as_ref(), &step);
+            stats.note_kernel_path(out.kernel_path);
             if req.keep {
                 pool.put_back(req.session, sess);
                 out.session = Some(req.session);
@@ -1091,6 +1131,7 @@ fn split_merged_outputs(merged: &dyn InferenceSession) -> Vec<EngineOutput> {
             executed_adds: step.executed_adds,
             backend_ns: step.elapsed_ns,
             merged: true,
+            kernel_path: step.kernel_path,
         });
         off += rows;
     }
@@ -1137,6 +1178,7 @@ fn output_of(sess: &dyn InferenceSession, step: &StepReport) -> EngineOutput {
         executed_adds: step.executed_adds,
         backend_ns: step.elapsed_ns,
         merged: false,
+        kernel_path: step.kernel_path,
     }
 }
 

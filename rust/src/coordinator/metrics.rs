@@ -174,6 +174,18 @@ pub struct Metrics {
     /// and never fed to the circuit breaker (mirrored from
     /// [`crate::coordinator::supervisor::SupervisorStats`]).
     pub overloaded: AtomicU64,
+    /// Outputs served through the IntKernel's scalar contraction
+    /// (mirrored from [`crate::coordinator::engine::EngineStats`]).
+    pub kernel_scalar: AtomicU64,
+    /// Outputs served through the word-at-a-time packed contraction.
+    pub kernel_packed: AtomicU64,
+    /// Outputs served through the multi-word blocked contraction.
+    pub kernel_blocked: AtomicU64,
+    /// Outputs whose pass took the im2col-free direct convolution walk
+    /// for at least one layer.  Backends that do not tag their passes
+    /// (the exact sim, PJRT artifacts) are the remainder of `completed`
+    /// outside these four counters.
+    pub kernel_direct: AtomicU64,
 }
 
 impl Metrics {
@@ -226,6 +238,10 @@ impl Metrics {
         self.stream_rows_reused.store(stats.stream_rows_reused.load(Relaxed), Relaxed);
         self.stream_frac_milli.store(stats.stream_frac_milli.load(Relaxed), Relaxed);
         self.pool_bounces.store(stats.pool_bounces.load(Relaxed), Relaxed);
+        self.kernel_scalar.store(stats.kernel_scalar.load(Relaxed), Relaxed);
+        self.kernel_packed.store(stats.kernel_packed.load(Relaxed), Relaxed);
+        self.kernel_blocked.store(stats.kernel_blocked.load(Relaxed), Relaxed);
+        self.kernel_direct.store(stats.kernel_direct.load(Relaxed), Relaxed);
     }
 
     /// Mean fraction of each served frame that actually changed (0..1);
@@ -266,6 +282,7 @@ impl Metrics {
         let mut s = format!(
             "requests={} completed={} escalated={:.1}% occupancy={:.2} reuse={:.1}% \
              pool={}(peak {}, evicted {}) merges={} runs_saved={} \
+             kernel=scalar:{},packed:{},blocked:{},direct:{} \
              stream={} frames(rows_reused {}, mean_frac {:.3}) \
              exec_adds={} backend_ms={:.1} \
              faults={} retries={} resurrections={} degraded={} breaker_trips={} errors={} \
@@ -281,6 +298,10 @@ impl Metrics {
             self.pool_evictions.load(Ordering::Relaxed),
             self.merges.load(Ordering::Relaxed),
             self.runs_saved.load(Ordering::Relaxed),
+            self.kernel_scalar.load(Ordering::Relaxed),
+            self.kernel_packed.load(Ordering::Relaxed),
+            self.kernel_blocked.load(Ordering::Relaxed),
+            self.kernel_direct.load(Ordering::Relaxed),
             self.stream_frames.load(Ordering::Relaxed),
             self.stream_rows_reused.load(Ordering::Relaxed),
             self.stream_mean_frac(),
@@ -364,6 +385,9 @@ mod tests {
             Metrics::add(&m.pool_sessions, 3);
             Metrics::add(&m.pool_peak, 7);
             Metrics::add(&m.merges, 4);
+            Metrics::add(&m.kernel_packed, 60);
+            Metrics::add(&m.kernel_blocked, 30);
+            Metrics::add(&m.kernel_direct, 10);
             m.latency.record(Duration::from_micros(300));
             m.latency.record(Duration::from_micros(900));
             m.summary()
@@ -371,6 +395,7 @@ mod tests {
         let a = build();
         assert_eq!(a, build());
         assert!(a.contains("requests=100"), "{a}");
+        assert!(a.contains("kernel=scalar:0,packed:60,blocked:30,direct:10"), "{a}");
     }
 
     #[test]
@@ -403,6 +428,7 @@ mod tests {
         assert!(s.contains("bounced=1"), "{s}");
         assert!(s.contains("brownout=stage1-only"), "{s}");
         assert!(s.contains("qwait_p50="), "{s}");
+        assert!(s.contains("kernel=scalar:0,packed:0,blocked:0,direct:0"), "{s}");
     }
 
     #[test]

@@ -15,8 +15,8 @@
 //!   (filter draws are shared across the batch);
 //! * `IntKernel` rejects what the integer datapath cannot express.
 
-use psb::backend::intkernel::Contraction;
-use psb::backend::{Backend, InferenceSession, IntKernel, SimBackend};
+use psb::backend::intkernel::{Contraction, DirectConv, IntKernelConfig};
+use psb::backend::{Backend, InferenceSession, IntKernel, KernelPath, SimBackend};
 use psb::precision::PrecisionPlan;
 use psb::rng::{Rng, Xorshift128Plus};
 use psb::sim::network::{Network, Op};
@@ -349,6 +349,260 @@ fn prop_packed_contraction_matches_scalar_bit_identically() {
                 "packed[{pi}] narrowed refine chain diverged (seed {seed})"
             );
             assert!(step.delta_updated >= 1, "packed delta path must engage: {step:?}");
+        }
+    }
+}
+
+/// The multi-word *blocked* contraction is bit-identical to the packed
+/// word-at-a-time walk, the scalar reference and the exact sim — one-
+/// shot across plans, and through narrowed refine chains, at thread
+/// counts 0 (auto), 1 and 3.  The parity net spans kdim 8 (dense,
+/// sub-word), 27 (stem) and 72 (conv, multi-word), so the 4-word inner
+/// block runs its tail handling on every pass.
+#[test]
+fn prop_blocked_contraction_matches_all_datapaths_bit_identically() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let scalar = IntKernel::new(net.clone())
+        .unwrap()
+        .with_contraction(Contraction::Scalar);
+    let packed = IntKernel::new(net.clone()).unwrap();
+    let blocked: Vec<IntKernel> = [0usize, 1, 3]
+        .iter()
+        .map(|&t| {
+            IntKernel::new(net.clone())
+                .unwrap()
+                .with_contraction(Contraction::Blocked)
+                .with_threads(t)
+        })
+        .collect();
+    let x = batch(53, 4);
+    let plans = [
+        PrecisionPlan::uniform(4),
+        PrecisionPlan::uniform(16),
+        PrecisionPlan::per_layer(&[4, 8, 16]).unwrap(),
+    ];
+    for seed in 0..3u64 {
+        for plan in &plans {
+            let want = one_shot(&sim, &x, plan, seed);
+            assert_eq!(
+                one_shot(&scalar, &x, plan, seed),
+                want,
+                "scalar diverged from exact sim: seed={seed} plan={plan:?}"
+            );
+            assert_eq!(
+                one_shot(&packed, &x, plan, seed),
+                want,
+                "packed diverged from exact sim: seed={seed} plan={plan:?}"
+            );
+            for (bi, b) in blocked.iter().enumerate() {
+                assert_eq!(
+                    one_shot(b, &x, plan, seed),
+                    want,
+                    "blocked[{bi}] diverged from exact sim: seed={seed} plan={plan:?}"
+                );
+            }
+        }
+        // narrowed refine chain, against the scalar session doing the
+        // same — the blocked masked-step and delta drivers both engage
+        let mut sref = scalar.open(&PrecisionPlan::uniform(4)).unwrap();
+        sref.begin(&x, seed).unwrap();
+        sref.narrow(&[0, 2]).unwrap();
+        sref.refine(&PrecisionPlan::uniform(8)).unwrap();
+        sref.refine(&PrecisionPlan::uniform(32)).unwrap();
+        for (bi, b) in blocked.iter().enumerate() {
+            let mut sess = b.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&x, seed).unwrap();
+            sess.narrow(&[0, 2]).unwrap();
+            sess.refine(&PrecisionPlan::uniform(8)).unwrap();
+            let step = sess.refine(&PrecisionPlan::uniform(32)).unwrap();
+            assert_eq!(
+                sess.logits().data,
+                sref.logits().data,
+                "blocked[{bi}] narrowed refine chain diverged (seed {seed})"
+            );
+            assert!(step.delta_updated >= 1, "blocked delta path must engage: {step:?}");
+            assert_eq!(step.kernel_path, KernelPath::Blocked, "step must carry its datapath tag");
+        }
+    }
+}
+
+/// Masked (spatial) execution through the blocked driver: one-shot
+/// spatial plans and attend→refine chains on `Contraction::Blocked` are
+/// bit-identical to the exact sim at thread counts 0/1/3, with the same
+/// per-row billing.
+#[test]
+fn prop_masked_blocked_matches_masked_exact_sim() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let blocked: Vec<IntKernel> = [0usize, 1, 3]
+        .iter()
+        .map(|&t| {
+            IntKernel::new(net.clone())
+                .unwrap()
+                .with_contraction(Contraction::Blocked)
+                .with_threads(t)
+        })
+        .collect();
+    let x = batch(37, 4);
+    let mask = top_rows_mask(4, 8, 8, 0.5);
+    let plans = [
+        PrecisionPlan::spatial(mask.clone(), 4, 16),
+        PrecisionPlan::per_layer(&[4, 8, 16]).unwrap().with_mask(mask.clone()),
+    ];
+    for seed in 0..3u64 {
+        for plan in &plans {
+            let want = one_shot(&sim, &x, plan, seed);
+            for (bi, b) in blocked.iter().enumerate() {
+                assert_eq!(
+                    one_shot(b, &x, plan, seed),
+                    want,
+                    "blocked[{bi}] masked vs exact sim: seed={seed}"
+                );
+            }
+        }
+        let s2 = PrecisionPlan::spatial(mask.clone(), 4, 8);
+        let s3 = PrecisionPlan::spatial(mask.clone(), 8, 32);
+        let chain = |backend: &dyn Backend| {
+            let mut sess = backend.open(&PrecisionPlan::uniform(4)).unwrap();
+            sess.begin(&x, seed).unwrap();
+            sess.refine(&s2).unwrap();
+            sess.refine(&s3).unwrap();
+            (sess.logits().data.clone(), sess.cost_report().total.gated_adds)
+        };
+        let (want, want_adds) = chain(&sim);
+        for (bi, b) in blocked.iter().enumerate() {
+            let (got, got_adds) = chain(b);
+            assert_eq!(got, want, "blocked[{bi}] masked chain diverged (seed {seed})");
+            assert_eq!(got_adds, want_adds, "blocked[{bi}] billing diverged (seed {seed})");
+        }
+    }
+}
+
+/// The im2col-free direct convolution walk (`DirectConv::Always`) is a
+/// pure execution-order change: begins produce bit-identical logits,
+/// *identical executed adds* and identical charges to the cached-
+/// lowering path — and the caches a direct begin leaves behind carry
+/// O(Δ) refines and frame rebases bit-identically, on both packed-
+/// layout contraction modes.
+#[test]
+fn prop_direct_conv_begin_composes_with_refine_and_rebase() {
+    let net = prepared(PsbOptions { exact_integer: true, ..Default::default() });
+    let sim = SimBackend::new(net.clone());
+    let x0 = batch(91, 3);
+    // image 0's top pixel rows drift, the rest of the batch is clean
+    let mut x1 = x0.clone();
+    for v in x1.data[..2 * 8 * 3].iter_mut() {
+        *v += 0.25;
+    }
+    for mode in [Contraction::Packed, Contraction::Blocked] {
+        let of = |dc: DirectConv| {
+            IntKernel::new(net.clone())
+                .unwrap()
+                .with_contraction(mode)
+                .with_config(IntKernelConfig { direct_conv: dc, ..Default::default() })
+        };
+        let always = of(DirectConv::Always);
+        let never = of(DirectConv::Never);
+        for seed in 0..3u64 {
+            let mut sa = always.open(&PrecisionPlan::uniform(8)).unwrap();
+            let ba = sa.begin(&x0, seed).unwrap();
+            let mut sn = never.open(&PrecisionPlan::uniform(8)).unwrap();
+            let bn = sn.begin(&x0, seed).unwrap();
+            assert_eq!(
+                sa.logits().data,
+                sn.logits().data,
+                "[{mode:?}] direct begin diverged from cached lowering (seed {seed})"
+            );
+            assert_eq!(
+                sa.logits().data,
+                one_shot(&sim, &x0, &PrecisionPlan::uniform(8), seed),
+                "[{mode:?}] direct begin diverged from exact sim (seed {seed})"
+            );
+            assert_eq!(
+                ba.executed_adds, bn.executed_adds,
+                "[{mode:?}] the direct walk reorders work, it must never change it"
+            );
+            assert_eq!(ba.costs, bn.costs, "[{mode:?}] direct begin charge");
+            assert_eq!(ba.kernel_path, KernelPath::Direct, "forced direct begin must tag Direct");
+            // O(Δ) refine on top of the direct begin's caches
+            let ra = sa.refine(&PrecisionPlan::uniform(32)).unwrap();
+            let rn = sn.refine(&PrecisionPlan::uniform(32)).unwrap();
+            assert_eq!(
+                sa.logits().data,
+                sn.logits().data,
+                "[{mode:?}] refine after direct begin diverged (seed {seed})"
+            );
+            assert_eq!(ra.executed_adds, rn.executed_adds, "[{mode:?}] refine adds");
+            assert!(ra.delta_updated >= 1, "[{mode:?}] delta path must engage: {ra:?}");
+            // frame rebase on top of the refined state
+            let za = sa.rebase_input(&x1).unwrap();
+            let zn = sn.rebase_input(&x1).unwrap();
+            assert_eq!(
+                sa.logits().data,
+                sn.logits().data,
+                "[{mode:?}] rebase after direct begin diverged (seed {seed})"
+            );
+            assert_eq!(za.executed_adds, zn.executed_adds, "[{mode:?}] rebase adds");
+            assert_eq!(za.costs, zn.costs, "[{mode:?}] rebase charge");
+        }
+    }
+}
+
+/// Reduction lengths whose last mask word is nearly empty: conv over
+/// `cin ∈ {7, 8, 15, 29}` on 6×6 images gives kdim 63/72/135/261 —
+/// tail words of 63, 8, 7 and 5 live bits across three tile-table rows.
+/// Blocked (default tiles, weird odd tile overrides, and the forced
+/// direct walk) must match the scalar reference bit-for-bit on each.
+#[test]
+fn blocked_handles_odd_tail_words_and_tile_overrides() {
+    for cin in [7usize, 8, 15, 29] {
+        let mut net = Network::new((6, 6, cin), "tail-words");
+        let c1 = net.add(Op::Conv { k: 3, stride: 1, cin, cout: 8 }, vec![0], "c1");
+        let r1 = net.add(Op::ReLU, vec![c1], "r1");
+        let g = net.add(Op::GlobalAvgPool, vec![r1], "gap");
+        net.add(Op::Dense { cin: 8, cout: 4 }, vec![g], "fc");
+        let mut rng = Xorshift128Plus::seed_from(cin as u64);
+        net.init(&mut rng);
+        let mk_batch = |seed: u64, b: usize| {
+            let mut rng = Xorshift128Plus::seed_from(seed);
+            Tensor::from_vec(
+                (0..b * 6 * 6 * cin).map(|_| rng.uniform()).collect(),
+                &[b, 6, 6, cin],
+            )
+        };
+        for s in 0..4 {
+            let x = mk_batch(s, 3);
+            net.forward::<Xorshift128Plus>(&x, true, None);
+        }
+        let psb =
+            PsbNetwork::prepare(&net, PsbOptions { exact_integer: true, ..Default::default() });
+        let scalar = IntKernel::new(psb.clone())
+            .unwrap()
+            .with_contraction(Contraction::Scalar);
+        let weird = IntKernelConfig { row_tile: Some(3), col_tile: Some(5), ..Default::default() };
+        let kernels = [
+            IntKernel::new(psb.clone()).unwrap().with_contraction(Contraction::Blocked),
+            IntKernel::new(psb.clone())
+                .unwrap()
+                .with_contraction(Contraction::Blocked)
+                .with_config(weird)
+                .with_threads(3),
+            IntKernel::new(psb.clone())
+                .unwrap()
+                .with_contraction(Contraction::Blocked)
+                .with_config(IntKernelConfig { direct_conv: DirectConv::Always, ..weird }),
+        ];
+        let x = mk_batch(90 + cin as u64, 3);
+        for plan in [PrecisionPlan::uniform(8), PrecisionPlan::uniform(16)] {
+            let want = one_shot(&scalar, &x, &plan, 5);
+            for (ki, k) in kernels.iter().enumerate() {
+                assert_eq!(
+                    one_shot(k, &x, &plan, 5),
+                    want,
+                    "cin={cin} kernel[{ki}] diverged from scalar"
+                );
+            }
         }
     }
 }
